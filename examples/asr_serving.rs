@@ -1,0 +1,113 @@
+//! ASR serving scenario: the paper's motivating workload (§I, Table III).
+//!
+//! Audio requests arrive with wildly varying lengths (LibriSpeech-like
+//! log-normal).  A fixed stationary scheme is tuned for one length and
+//! wrong for the rest; TAS adapts per batch bucket.  This example runs
+//! the *accelerator-side* analysis for a simulated request stream and —
+//! when artifacts are built — serves the same stream through the real
+//! PJRT coordinator.
+//!
+//! Run: `make artifacts && cargo run --release --example asr_serving`
+
+use std::time::Duration;
+use tas::coordinator::{Coordinator, CoordinatorOptions};
+use tas::dataflow::{ema, Scheme};
+use tas::gemm::Tiling;
+use tas::models::{zoo, LengthDist};
+use tas::util::prng::Rng;
+use tas::util::table::{pct, sci, Table};
+
+fn main() -> anyhow::Result<()> {
+    let tiling = Tiling::square(16);
+    let model = zoo::wav2vec2_large();
+    let dist = LengthDist::librispeech();
+    let mut rng = Rng::new(2024);
+    let n_requests = 200;
+    let lengths = dist.sample_n(&mut rng, n_requests);
+
+    // ---- accelerator-side: fixed schemes vs TAS over the real stream ----
+    let mut totals: Vec<(Scheme, u64)> = [Scheme::Is, Scheme::Ws, Scheme::OsRow, Scheme::IsOs, Scheme::WsOs, Scheme::Tas]
+        .iter()
+        .map(|s| (*s, 0u64))
+        .collect();
+    let mut naive_total = 0u64;
+    for &len in &lengths {
+        for g in model.linear_gemms(len) {
+            naive_total += g.count * ema(Scheme::Naive, &g.shape, &tiling).total();
+            for (s, acc) in totals.iter_mut() {
+                *acc += g.count * ema(*s, &g.shape, &tiling).total();
+            }
+        }
+    }
+    let mut t = Table::new(
+        &format!(
+            "Wav2Vec2.0-Large, {n_requests} LibriSpeech-like requests \
+             (lengths {}..{} tokens): total EMA",
+            lengths.iter().min().unwrap(),
+            lengths.iter().max().unwrap()
+        ),
+        &["scheme", "EMA words", "reduction vs naive"],
+    );
+    t.row(vec!["naive".into(), sci(naive_total as f64), pct(0.0)]);
+    for (s, words) in &totals {
+        t.row(vec![
+            s.name().to_string(),
+            sci(*words as f64),
+            pct(1.0 - *words as f64 / naive_total as f64),
+        ]);
+    }
+    println!("{}", t.to_text());
+    let tas_words = totals.iter().find(|(s, _)| *s == Scheme::Tas).unwrap().1;
+    let best_fixed = totals
+        .iter()
+        .filter(|(s, _)| *s != Scheme::Tas)
+        .map(|(_, w)| *w)
+        .min()
+        .unwrap();
+    println!(
+        "TAS vs best fixed scheme over the mixed-length stream: saves {}\n",
+        pct(1.0 - tas_words as f64 / best_fixed as f64)
+    );
+
+    // ---- real serving through the PJRT coordinator ----------------------
+    let dir = tas::runtime::default_artifacts_dir();
+    if !tas::runtime::artifacts_available(&dir) {
+        println!(
+            "(artifacts not built — run `make artifacts` to also serve the \
+             stream through the PJRT coordinator)"
+        );
+        return Ok(());
+    }
+    let coordinator = Coordinator::start(CoordinatorOptions {
+        artifacts_dir: dir,
+        linger: Duration::from_millis(2),
+        ..Default::default()
+    })?;
+    let vocab = *coordinator.model.get("vocab").unwrap_or(&1024);
+    let max_len = coordinator.max_len();
+    // tiny-BERT buckets are shorter than wav2vec2's 1565 tokens: rescale
+    // the stream into the compiled range (same distribution shape).
+    let scale = max_len as f64 / 1565.0;
+    let requests: Vec<Vec<i32>> = lengths
+        .iter()
+        .take(64)
+        .map(|&l| {
+            let len = ((l as f64 * scale).round() as usize).clamp(1, max_len as usize);
+            (0..len).map(|_| rng.gen_range(vocab) as i32).collect()
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let responses = coordinator.run_closed_loop(requests)?;
+    let wall = t0.elapsed();
+    let snap = coordinator.metrics().snapshot();
+    println!("served {} requests in {:.0} ms through PJRT:", responses.len(), wall.as_secs_f64() * 1e3);
+    println!(
+        "  p50 {:.1} ms  p99 {:.1} ms  padding {:.1}%  EMA reduction vs naive {}",
+        snap.latency_p50_ms,
+        snap.latency_p99_ms,
+        snap.padding_fraction() * 100.0,
+        pct(snap.ema_reduction_vs_naive())
+    );
+    coordinator.shutdown();
+    Ok(())
+}

@@ -1,0 +1,145 @@
+//! End-to-end driver: proves all three layers compose.
+//!
+//!   L1  Pallas tile-dataflow kernels (IS-OS / WS-OS grid orders)
+//!   L2  tiny-BERT JAX model, AOT-lowered to HLO text + weights.bin
+//!   L3  this binary: rust coordinator loads the artifacts via PJRT,
+//!       batches variable-length requests, applies the TAS rule per
+//!       bucket, executes, and reports latency/throughput + the paper's
+//!       headline EMA metric.
+//!
+//! The run (1) golden-validates every artifact against the pure-jnp
+//! oracle, (2) cross-checks the compile-time TAS decisions against the
+//! rust rule, (3) serves a LibriSpeech-shaped request stream and checks
+//! the responses are the logits the oracle predicts.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_inference`
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use std::time::{Duration, Instant};
+use tas::coordinator::{decisions, Coordinator, CoordinatorOptions};
+use tas::models::LengthDist;
+use tas::runtime::Engine;
+use tas::util::bytes;
+use tas::util::prng::Rng;
+use tas::util::table::pct;
+
+fn main() -> anyhow::Result<()> {
+    let dir = tas::runtime::default_artifacts_dir();
+    anyhow::ensure!(
+        tas::runtime::artifacts_available(&dir),
+        "artifacts missing at {} — run `make artifacts` first",
+        dir.display()
+    );
+
+    // ---- stage 1: artifact validation (L1+L2 vs oracle, through PJRT) ----
+    println!("[1/3] golden validation");
+    let mut engine = Engine::load(&dir)?;
+    decisions::verify_against_manifest(engine.manifest())?;
+    println!("  TAS decisions: python compile path == rust rule ✓");
+    let mut worst = 0f32;
+    for name in engine.artifact_names() {
+        let err = engine.validate_golden(&name)?;
+        worst = worst.max(err);
+        println!("  {name:<26} max|err| {err:.2e}");
+    }
+    anyhow::ensure!(worst < 1e-3, "golden validation failed: {worst}");
+
+    // Keep one golden pair around to double-check the serving path later.
+    let probe = engine
+        .manifest()
+        .artifact("bert_b1_s64")
+        .or_else(|_| {
+            engine
+                .manifest()
+                .artifacts
+                .iter()
+                .find(|a| a.kind == "bert")
+                .ok_or_else(|| anyhow::anyhow!("no bert artifact"))
+        })?
+        .clone();
+    let golden = probe.golden.clone().expect("bert artifacts carry goldens");
+    let probe_ids = bytes::read_i32_file(&dir.join(&golden.input))?;
+    let probe_want = bytes::read_f32_file(&dir.join(&golden.output))?;
+    let probe_seq = probe.seq.unwrap() as usize;
+    let vocab_dim = probe.outputs[0].shape[2];
+    drop(engine); // the coordinator's device thread owns its own engine
+
+    // ---- stage 2: serve a variable-length stream through the coordinator -
+    println!("\n[2/3] batched serving");
+    let coordinator = Coordinator::start(CoordinatorOptions {
+        artifacts_dir: dir.clone(),
+        linger: Duration::from_millis(2),
+        ..Default::default()
+    })?;
+    let vocab = *coordinator.model.get("vocab").unwrap_or(&1024);
+    let max_len = coordinator.max_len();
+    let dist = LengthDist::lognormal((max_len / 3).max(8), 0.55, 4, max_len);
+    let mut rng = Rng::new(1234);
+    let n_requests = 96;
+    let requests: Vec<Vec<i32>> = (0..n_requests)
+        .map(|_| {
+            let len = dist.sample(&mut rng) as usize;
+            (0..len).map(|_| rng.gen_range(vocab) as i32).collect()
+        })
+        .collect();
+    let total_tokens: usize = requests.iter().map(|r| r.len()).sum();
+
+    let t0 = Instant::now();
+    let responses = coordinator.run_closed_loop(requests)?;
+    let wall = t0.elapsed();
+    anyhow::ensure!(responses.len() == n_requests);
+    for r in &responses {
+        anyhow::ensure!(!r.logits.is_empty() && r.logits.iter().all(|x| x.is_finite()));
+    }
+    let snap = coordinator.metrics().snapshot();
+    println!("  requests    {n_requests} ({total_tokens} tokens)");
+    println!(
+        "  wall        {:.0} ms  ->  {:.1} req/s, {:.0} tok/s",
+        wall.as_secs_f64() * 1e3,
+        n_requests as f64 / wall.as_secs_f64(),
+        total_tokens as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "  latency     p50 {:.1} ms  p99 {:.1} ms  (batch exec mean {:.1} ms)",
+        snap.latency_p50_ms, snap.latency_p99_ms, snap.batch_exec_mean_ms
+    );
+    println!(
+        "  batches     {}  padding {:.1}%",
+        snap.batches,
+        snap.padding_fraction() * 100.0
+    );
+    println!(
+        "  EMA         naive {:.3e}  ayaka {:.3e}  tas {:.3e} words",
+        snap.ema_naive_words as f64, snap.ema_ayaka_words as f64, snap.ema_tas_words as f64
+    );
+    println!(
+        "  headline    EMA reduction vs naive {}  |  vs Ayaka [9] {}",
+        pct(snap.ema_reduction_vs_naive()),
+        pct(snap.ema_reduction_vs_ayaka())
+    );
+
+    // ---- stage 3: numerics through the serving path ----------------------
+    // Submit the golden input as a regular request; the response logits
+    // must equal the oracle output (same bucket -> same artifact).
+    println!("\n[3/3] serving-path numerics");
+    let resp = coordinator
+        .run_closed_loop(vec![probe_ids[..probe_seq].to_vec()])?
+        .remove(0);
+    anyhow::ensure!(resp.vocab == vocab_dim, "vocab mismatch");
+    let got = &resp.logits[..probe_seq * vocab_dim];
+    let want = &probe_want[..probe_seq * vocab_dim]; // batch row 0
+    let max_err = got
+        .iter()
+        .zip(want)
+        .map(|(g, w)| (g - w).abs())
+        .fold(0f32, f32::max);
+    println!(
+        "  served-golden max|err| = {max_err:.2e} via artifact {}",
+        resp.artifact
+    );
+    anyhow::ensure!(max_err < 1e-3, "serving-path numerics diverged");
+
+    coordinator.shutdown();
+    println!("\nE2E OK — three layers compose: Pallas dataflow kernels → AOT HLO → rust TAS coordinator");
+    Ok(())
+}

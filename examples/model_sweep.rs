@@ -1,0 +1,81 @@
+//! Model sweep: the Table I scenario — how much external memory traffic
+//! do the large models cost, and what does TAS save at their pre-defined
+//! token lengths?  Also sweeps sequence length per model to expose the
+//! IS↔WS crossover the adaptive rule exploits (the §I motivation).
+//!
+//! Run: `cargo run --release --example model_sweep`
+
+use tas::dataflow::{ema, Scheme};
+use tas::energy::{ayaka::ayaka_workload_read_ema, workload_read_ema};
+use tas::gemm::Tiling;
+use tas::models::zoo;
+use tas::util::table::{pct, sci, Table};
+
+fn main() {
+    let tiling = Tiling::square(16);
+
+    // ---- Table I replica + TAS column ------------------------------------
+    let mut t1 = Table::new(
+        "Large-model EMA at pre-defined token length (read EMA, words)",
+        &["model", "hidden", "tokens", "params(B)", "naive", "ayaka [9]", "tas", "tas saves"],
+    );
+    for m in zoo::all_models() {
+        let gemms = m.linear_gemms(m.default_seq);
+        let naive = workload_read_ema(Scheme::Naive, &gemms, &tiling);
+        let ayaka = ayaka_workload_read_ema(&gemms);
+        let tas = workload_read_ema(Scheme::Tas, &gemms, &tiling);
+        t1.row(vec![
+            m.name.to_string(),
+            m.hidden.to_string(),
+            m.default_seq.to_string(),
+            format!("{:.1}", m.params_b),
+            sci(naive as f64),
+            sci(ayaka as f64),
+            sci(tas as f64),
+            pct(1.0 - tas as f64 / naive as f64),
+        ]);
+    }
+    println!("{}", t1.to_text());
+
+    // ---- crossover sweep ---------------------------------------------------
+    // For each model: where does the optimal scheme flip from IS to WS?
+    // The paper's rule says exactly at M = K (per projection).
+    let mut t2 = Table::new(
+        "Sequence-length crossover per model (qkv projection, K = hidden)",
+        &["model", "seq=64", "seq=512", "seq=4096", "rule flips at"],
+    );
+    for m in zoo::all_models() {
+        let verdict = |seq: u64| {
+            let shape = tas::gemm::GemmShape::new(seq, m.hidden, m.hidden);
+            Scheme::Tas.resolve(&shape).name().to_string()
+        };
+        t2.row(vec![
+            m.name.to_string(),
+            verdict(64),
+            verdict(512),
+            verdict(4096),
+            format!("M = {}", m.hidden),
+        ]);
+    }
+    println!("{}", t2.to_text());
+
+    // ---- where the savings come from --------------------------------------
+    let m = zoo::gpt3();
+    let gemms = m.linear_gemms(m.default_seq);
+    println!("GPT-3 per-projection EMA under TAS (tokens = {}):", m.default_seq);
+    for g in &gemms {
+        let e = ema(Scheme::Tas, &g.shape, &tiling);
+        let n = ema(Scheme::Naive, &g.shape, &tiling);
+        println!(
+            "  {:<9} M={:<5} N={:<6} K={:<6} ×{:<3} {} -> {}  ({})",
+            g.name,
+            g.shape.m,
+            g.shape.n,
+            g.shape.k,
+            g.count,
+            sci(n.total() as f64),
+            sci(e.total() as f64),
+            Scheme::Tas.resolve(&g.shape).name()
+        );
+    }
+}

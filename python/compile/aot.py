@@ -1,0 +1,275 @@
+"""AOT compile path: lower the L2 model (with its L1 Pallas kernels) to HLO
+*text* artifacts the rust runtime loads via PJRT.
+
+Emits, under ``--out`` (default ``../artifacts``):
+
+  manifest.json          — artifact index: arg shapes/dtypes, weight offsets,
+                           scheme plan, golden-vector paths
+  weights.bin            — little-endian raw tensor data (shared checkpoint)
+  golden/<name>.{in,out}.bin — sample input and oracle output per artifact
+  <name>.hlo.txt         — one HLO module per (batch, seq) bucket + kernels
+
+HLO **text** (never ``.serialize()``): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``); never on the request path.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+from .kernels import tiled_matmul as tm
+
+#: (batch, seq) buckets the coordinator routes requests into.  M = B*S spans
+#: 32..512 so TAS picks different schemes across buckets (vocab=1024 head is
+#: is_os everywhere; qkv/ffn2 against K=256 flip at M=256).  Every seq class
+#: carries multiple batch sizes — the §Perf pass showed that a seq bucket
+#: with only batch=1 compiled degenerates the coordinator to unbatched
+#: serving (EXPERIMENTS.md §Perf, iteration 1).
+DEFAULT_BUCKETS = (
+    (1, 32), (4, 32), (8, 32),
+    (1, 64), (2, 64), (4, 64), (8, 64),
+    (1, 128), (2, 128), (4, 128),
+)
+
+DTYPE_NAMES = {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32"}
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class WeightsBin:
+    """Append-only little-endian tensor store shared by all artifacts."""
+
+    def __init__(self):
+        self.chunks = []
+        self.nbytes = 0
+        self._memo = {}  # id(array) -> offset
+        self._refs = []  # keep arrays alive so ids are never recycled
+
+    def add(self, arr):
+        key = id(arr)
+        if key in self._memo:
+            return self._memo[key]
+        self._refs.append(arr)
+        data = np.ascontiguousarray(np.asarray(arr))
+        if data.dtype == np.float64:
+            data = data.astype(np.float32)
+        off = self.nbytes
+        self.chunks.append(data.tobytes())
+        self.nbytes += data.nbytes
+        self._memo[key] = off
+        return off
+
+    def write(self, path):
+        with open(path, "wb") as f:
+            for c in self.chunks:
+                f.write(c)
+
+
+def _arg_entry(name, arr, kind, offset=None):
+    a = np.asarray(arr)
+    e = {
+        "name": name,
+        "kind": kind,
+        "dtype": DTYPE_NAMES[a.dtype],
+        "shape": list(a.shape),
+    }
+    if offset is not None:
+        e["offset"] = offset
+        e["nbytes"] = a.nbytes
+    return e
+
+
+def _flatten_params(params):
+    """Deterministic (path-name, leaf) list via jax tree flattening."""
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        out.append((name, leaf))
+    return out
+
+
+def _write_bin(path, arr):
+    np.ascontiguousarray(np.asarray(arr)).tofile(path)
+
+
+def lower_artifact(fn, example_args, name, out_dir):
+    """jit-lower fn at the example shapes and write <name>.hlo.txt."""
+    specs = [jax.ShapeDtypeStruct(np.asarray(a).shape, np.asarray(a).dtype)
+             for a in example_args]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return path, len(text)
+
+
+def build_linear_artifacts(wb, out_dir, rng):
+    """Standalone TAS-linear artifacts (runtime micro-bench + validation)."""
+    arts = []
+    shapes = [
+        (64, 256, 1024, "is_os"),    # M < K  -> input stationary
+        (512, 256, 128, "ws_os"),    # M >= K -> weight stationary
+    ]
+    for M, N, K, expect in shapes:
+        scheme = tm.choose_scheme(M, K)
+        assert scheme == expect, (M, K, scheme, expect)
+        x = rng.standard_normal((M, N), dtype=np.float32)
+        w = rng.standard_normal((N, K), dtype=np.float32) * (N ** -0.5)
+        b = rng.standard_normal((K,), dtype=np.float32) * 0.1
+        name = f"linear_{scheme}_{M}x{N}x{K}"
+
+        def fn(xx, ww, bb):
+            # explicit paper-faithful tiling: these two artifacts are the
+            # dataflow showcase (the serving berts use coarse blocks for
+            # CPU throughput — §Perf iterations 2-4)
+            return (tm.linear(xx, ww, bb, act="gelu", bm=64, bn=64, bk=64),)
+
+        lower_artifact(fn, (x, w, b), name, out_dir)
+        gold = np.asarray(ref.linear(jnp.asarray(x), jnp.asarray(w),
+                                     jnp.asarray(b), act="gelu"))
+        gin = os.path.join("golden", f"{name}.in.bin")
+        gout = os.path.join("golden", f"{name}.out.bin")
+        _write_bin(os.path.join(out_dir, gin), x)
+        _write_bin(os.path.join(out_dir, gout), gold)
+        arts.append({
+            "name": name,
+            "hlo": f"{name}.hlo.txt",
+            "kind": "linear",
+            "scheme": scheme,
+            "args": [
+                _arg_entry("x", x, "input"),
+                _arg_entry("w", w, "weight", wb.add(w)),
+                _arg_entry("b", b, "weight", wb.add(b)),
+            ],
+            "outputs": [{"dtype": "f32", "shape": [M, K]}],
+            "flops": 2 * M * N * K,
+            "golden": {"input": gin, "output": gout},
+        })
+    return arts
+
+
+def build_bert_artifacts(cfg, params, wb, out_dir, rng, buckets):
+    """One HLO module per (batch, seq) bucket over the shared checkpoint."""
+    flat = _flatten_params(params)
+    weight_args = [_arg_entry(n, a, "weight", wb.add(a)) for n, a in flat]
+    leaves = [a for _, a in flat]
+    treedef = jax.tree_util.tree_structure(params)
+
+    arts = []
+    for B, S in buckets:
+        name = f"bert_b{B}_s{S}"
+        ids = rng.integers(0, cfg.vocab, (B, S), dtype=np.int32)
+
+        def fn(*args):
+            *ws, ii = args
+            p = jax.tree_util.tree_unflatten(treedef, ws)
+            return (model.tiny_bert(p, ii, cfg.n_heads),)
+
+        lower_artifact(fn, (*leaves, ids), name, out_dir)
+        gold = np.asarray(model.ref_tiny_bert(params, jnp.asarray(ids),
+                                              cfg.n_heads))
+        gin = os.path.join("golden", f"{name}.in.bin")
+        gout = os.path.join("golden", f"{name}.out.bin")
+        _write_bin(os.path.join(out_dir, gin), ids)
+        _write_bin(os.path.join(out_dir, gout), gold)
+        n_tokens = B * S
+        flops = model_flops(cfg, B, S)
+        arts.append({
+            "name": name,
+            "hlo": f"{name}.hlo.txt",
+            "kind": "bert",
+            "batch": B,
+            "seq": S,
+            "args": weight_args + [_arg_entry("ids", ids, "input")],
+            "outputs": [{"dtype": "f32", "shape": [B, S, cfg.vocab]}],
+            "schemes": model.scheme_plan(cfg, n_tokens),
+            "flops": flops,
+            "golden": {"input": gin, "output": gout},
+        })
+    return arts
+
+
+def model_flops(cfg, B, S):
+    """2*M*N*K over every projection (linear projections only, like EMA)."""
+    M = B * S
+    h, f, v = cfg.hidden, cfg.ffn, cfg.vocab
+    per_layer = 2 * M * h * h * 4 + 2 * M * h * f + 2 * M * f * h
+    attn = 2 * B * cfg.n_heads * S * S * (h // cfg.n_heads) * 2
+    return cfg.n_layers * (per_layer + attn) + 2 * M * h * v
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--buckets", default=None,
+                    help="comma list like 1x32,2x64 (default: built-in set)")
+    ap.add_argument("--vocab", type=int, default=1024)
+    ap.add_argument("--hidden", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--heads", type=int, default=4)
+    ap.add_argument("--ffn", type=int, default=1024)
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(os.path.join(out_dir, "golden"), exist_ok=True)
+
+    buckets = DEFAULT_BUCKETS
+    if args.buckets:
+        buckets = tuple(tuple(map(int, b.split("x")))
+                        for b in args.buckets.split(","))
+
+    cfg = model.TinyBertConfig(vocab=args.vocab, hidden=args.hidden,
+                               n_layers=args.layers, n_heads=args.heads,
+                               ffn=args.ffn)
+    params = model.init_params(cfg, seed=args.seed)
+    rng = np.random.default_rng(args.seed + 1)
+    wb = WeightsBin()
+
+    artifacts = []
+    artifacts += build_linear_artifacts(wb, out_dir, rng)
+    artifacts += build_bert_artifacts(cfg, params, wb, out_dir, rng, buckets)
+
+    wb.write(os.path.join(out_dir, "weights.bin"))
+    manifest = {
+        "version": 1,
+        "weights_bin": "weights.bin",
+        "model": {
+            "vocab": cfg.vocab, "hidden": cfg.hidden,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "ffn": cfg.ffn, "max_len": cfg.max_len,
+        },
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    total = sum(os.path.getsize(os.path.join(out_dir, a["hlo"]))
+                for a in artifacts)
+    print(f"wrote {len(artifacts)} artifacts ({total/1e6:.1f} MB HLO), "
+          f"weights.bin {wb.nbytes/1e6:.1f} MB -> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""L1 extension: a tiled (flash-style) attention Pallas kernel.
+
+The paper's §I/§V position TAS as *complementary* to attention
+optimisations — TAS handles the linear projections, a tiled attention
+kernel handles the S×S score matrix.  This kernel demonstrates the
+composition: Q/K/V arrive from TAS-scheduled projections, and attention
+itself runs as an online-softmax tile sweep so the score matrix never
+materialises in (simulated) HBM — the attention analogue of the paper's
+psum-window idea: a stationary Q block sweeps K/V tiles while the
+reduction state (running max m, normaliser l, accumulator) stays
+resident, exactly like TAS keeps psums in registers.
+
+State is carried across the KV grid axis in auxiliary *outputs* whose
+index_map ignores the KV index — the same revisited-block accumulation
+the matmul kernels use (persistent in interpret mode).
+
+Single-head, 2D (seq, d) per call; vmap over (batch, head) at L2.
+interpret=True — see tiled_matmul.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale, n_kv_steps):
+    """One (q-block, kv-block) step of online-softmax attention."""
+    kv_idx = pl.program_id(1)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    correction = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * correction + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * correction[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kv_idx == n_kv_steps - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+def attention(q, k, v, *, bq=None, bk=None):
+    """Tiled softmax(q·kᵀ/√d)·v.  q,k,v: [S, d] (S divisible by blocks)."""
+    S, d = q.shape
+    assert k.shape == (S, d) and v.shape == (S, d), (q.shape, k.shape, v.shape)
+    bq = bq or min(S, 64)
+    bk = bk or min(S, 64)
+    if S % bq or S % bk:
+        raise ValueError(f"block sizes must divide S: {S} % ({bq},{bk})")
+    n_kv = S // bk
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(_attn_kernel, scale=scale, n_kv_steps=n_kv)
+    q_block = pl.BlockSpec((bq, d), lambda i, j: (i, 0))  # stationary over j
+    out, _m, _l, _acc = pl.pallas_call(
+        kernel,
+        grid=(S // bq, n_kv),
+        in_specs=[
+            q_block,
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            q_block,                                   # o
+            pl.BlockSpec((bq,), lambda i, j: (i,)),    # running max m
+            pl.BlockSpec((bq,), lambda i, j: (i,)),    # normaliser l
+            q_block,                                   # accumulator
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, d), q.dtype),
+            jax.ShapeDtypeStruct((S,), jnp.float32),
+            jax.ShapeDtypeStruct((S,), jnp.float32),
+            jax.ShapeDtypeStruct((S, d), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return out
+
+
+def mha_attention(q, k, v):
+    """Multi-head wrapper: q,k,v [B, H, S, d] -> [B, H, S, d]."""
+    return jax.vmap(jax.vmap(attention))(q, k, v)

@@ -1,0 +1,91 @@
+"""Pure-jnp reference oracle for every kernel and for the L2 model.
+
+This module is the single source of numerical truth: the Pallas kernels in
+``tiled_matmul.py`` and the model in ``model.py`` are tested against these
+functions (pytest + hypothesis).  Nothing here may import pallas.
+"""
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# primitive ops
+# ---------------------------------------------------------------------------
+
+def matmul(x, w):
+    """out[M,K] = x[M,N] @ w[N,K] — paper notation: N is the contraction dim."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def gelu(x):
+    """tanh-approximation GELU (BERT's variant)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def linear(x, w, b=None, act=None):
+    """Dense layer: matmul + optional bias + optional activation."""
+    y = matmul(x, w)
+    if b is not None:
+        y = y + b
+    if act == "gelu":
+        y = gelu(y)
+    elif act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act is not None:
+        raise ValueError(f"unknown activation {act!r}")
+    return y
+
+
+def layer_norm(x, gamma, beta, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def softmax(x, axis=-1):
+    x = x - jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# transformer reference (mirrors model.py exactly, pure jnp)
+# ---------------------------------------------------------------------------
+
+def mha(p, x, n_heads):
+    """Multi-head self-attention. x: [B, S, H]."""
+    B, S, H = x.shape
+    d = H // n_heads
+    x2 = x.reshape(B * S, H)
+    q = (x2 @ p["wq"] + p["bq"]).reshape(B, S, n_heads, d).transpose(0, 2, 1, 3)
+    k = (x2 @ p["wk"] + p["bk"]).reshape(B, S, n_heads, d).transpose(0, 2, 1, 3)
+    v = (x2 @ p["wv"] + p["bv"]).reshape(B, S, n_heads, d).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) / jnp.sqrt(d).astype(x.dtype)
+    probs = softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,bhtd->bhsd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(B * S, H)
+    return (ctx @ p["wo"] + p["bo"]).reshape(B, S, H)
+
+
+def encoder_layer(p, x, n_heads):
+    """Post-LN transformer encoder layer (BERT style). x: [B, S, H]."""
+    h = x + mha(p["attn"], x, n_heads)
+    h = layer_norm(h, p["ln1_g"], p["ln1_b"])
+    B, S, H = h.shape
+    h2 = h.reshape(B * S, H)
+    ff = gelu(h2 @ p["ffn_w1"] + p["ffn_b1"])
+    ff = ff @ p["ffn_w2"] + p["ffn_b2"]
+    h = h + ff.reshape(B, S, H)
+    return layer_norm(h, p["ln2_g"], p["ln2_b"])
+
+
+def tiny_bert(p, ids, n_heads):
+    """Tiny BERT-like encoder: ids [B, S] int32 -> logits [B, S, vocab]."""
+    x = p["emb"][ids] + p["pos"][: ids.shape[1]][None, :, :]
+    for lp in p["layers"]:
+        x = encoder_layer(lp, x, n_heads)
+    x = layer_norm(x, p["lnf_g"], p["lnf_b"])
+    B, S, H = x.shape
+    logits = x.reshape(B * S, H) @ p["emb"].T
+    return logits.reshape(B, S, -1)

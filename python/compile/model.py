@@ -1,0 +1,135 @@
+"""L2: tiny BERT-like encoder whose every linear projection goes through the
+L1 Pallas TAS kernel (``kernels.tiled_matmul.linear``).
+
+The stationary scheme of each projection is selected at trace time by the
+paper's rule ``choose_scheme(M, K)`` with M = B*S (token count) and K = the
+projection's output width — exactly the decision the rust coordinator makes
+per request bucket.  ``scheme_plan`` exposes that choice so the AOT manifest
+can record which dataflow each artifact embeds.
+
+Build-time only: this module is lowered once by ``aot.py`` and never
+imported on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels import tiled_matmul as tm
+
+
+class TinyBertConfig:
+    """Model hyper-parameters. All dims divide the Pallas block shapes."""
+
+    def __init__(self, vocab=1024, hidden=256, n_layers=4, n_heads=4,
+                 ffn=1024, max_len=512):
+        assert hidden % n_heads == 0
+        self.vocab = vocab
+        self.hidden = hidden
+        self.n_layers = n_layers
+        self.n_heads = n_heads
+        self.ffn = ffn
+        self.max_len = max_len
+
+    def __repr__(self):
+        return (f"TinyBertConfig(vocab={self.vocab}, hidden={self.hidden}, "
+                f"n_layers={self.n_layers}, n_heads={self.n_heads}, "
+                f"ffn={self.ffn}, max_len={self.max_len})")
+
+
+def init_params(cfg, seed=0):
+    """Deterministic random init (numpy, so the checkpoint is reproducible)."""
+    rng = np.random.default_rng(seed)
+
+    def mat(*shape, scale=None):
+        scale = scale if scale is not None else (shape[0] ** -0.5)
+        return jnp.asarray(
+            rng.standard_normal(shape, dtype=np.float32) * scale)
+
+    def layer():
+        h, f = cfg.hidden, cfg.ffn
+        return {
+            "attn": {
+                "wq": mat(h, h), "bq": jnp.zeros((h,), jnp.float32),
+                "wk": mat(h, h), "bk": jnp.zeros((h,), jnp.float32),
+                "wv": mat(h, h), "bv": jnp.zeros((h,), jnp.float32),
+                "wo": mat(h, h), "bo": jnp.zeros((h,), jnp.float32),
+            },
+            "ffn_w1": mat(h, f), "ffn_b1": jnp.zeros((f,), jnp.float32),
+            "ffn_w2": mat(f, h), "ffn_b2": jnp.zeros((h,), jnp.float32),
+            "ln1_g": jnp.ones((h,), jnp.float32),
+            "ln1_b": jnp.zeros((h,), jnp.float32),
+            "ln2_g": jnp.ones((h,), jnp.float32),
+            "ln2_b": jnp.zeros((h,), jnp.float32),
+        }
+
+    return {
+        "emb": mat(cfg.vocab, cfg.hidden, scale=0.02),
+        "pos": mat(cfg.max_len, cfg.hidden, scale=0.02),
+        "layers": [layer() for _ in range(cfg.n_layers)],
+        "lnf_g": jnp.ones((cfg.hidden,), jnp.float32),
+        "lnf_b": jnp.zeros((cfg.hidden,), jnp.float32),
+    }
+
+
+def scheme_plan(cfg, n_tokens):
+    """Which stationary scheme TAS picks for each projection at M=n_tokens."""
+    h, f, v = cfg.hidden, cfg.ffn, cfg.vocab
+    return {
+        "qkv": tm.choose_scheme(n_tokens, h),
+        "attn_out": tm.choose_scheme(n_tokens, h),
+        "ffn1": tm.choose_scheme(n_tokens, f),
+        "ffn2": tm.choose_scheme(n_tokens, h),
+        "lm_head": tm.choose_scheme(n_tokens, v),
+    }
+
+
+def _linear(x2, w, b, act=None):
+    """All projections funnel through the L1 TAS kernel."""
+    return tm.linear(x2, w, b, act=act)
+
+
+def mha(p, x, n_heads):
+    """Multi-head self-attention; projections via the Pallas TAS kernel."""
+    B, S, H = x.shape
+    d = H // n_heads
+    x2 = x.reshape(B * S, H)
+    q = _linear(x2, p["wq"], p["bq"]).reshape(B, S, n_heads, d).transpose(0, 2, 1, 3)
+    k = _linear(x2, p["wk"], p["bk"]).reshape(B, S, n_heads, d).transpose(0, 2, 1, 3)
+    v = _linear(x2, p["wv"], p["bv"]).reshape(B, S, n_heads, d).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) / jnp.sqrt(d).astype(x.dtype)
+    probs = ref.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,bhtd->bhsd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(B * S, H)
+    return _linear(ctx, p["wo"], p["bo"]).reshape(B, S, H)
+
+
+def encoder_layer(p, x, n_heads):
+    """Post-LN encoder layer; FFN matmuls via the Pallas TAS kernel."""
+    h = x + mha(p["attn"], x, n_heads)
+    h = ref.layer_norm(h, p["ln1_g"], p["ln1_b"])
+    B, S, H = h.shape
+    h2 = h.reshape(B * S, H)
+    ff = _linear(h2, p["ffn_w1"], p["ffn_b1"], act="gelu")
+    ff = _linear(ff, p["ffn_w2"], p["ffn_b2"])
+    h = h + ff.reshape(B, S, H)
+    return ref.layer_norm(h, p["ln2_g"], p["ln2_b"])
+
+
+def tiny_bert(p, ids, n_heads):
+    """ids [B, S] int32 -> logits [B, S, vocab]; lm head via TAS kernel."""
+    x = p["emb"][ids] + p["pos"][: ids.shape[1]][None, :, :]
+    for lp in p["layers"]:
+        x = encoder_layer(lp, x, n_heads)
+    x = ref.layer_norm(x, p["lnf_g"], p["lnf_b"])
+    B, S, H = x.shape
+    wv = p["emb"].T  # tied embedding lm head: [H, vocab]
+    logits = tm.matmul(x.reshape(B * S, H), wv,
+                       scheme=tm.choose_scheme(B * S, wv.shape[1]))
+    return logits.reshape(B, S, -1)
+
+
+def ref_tiny_bert(p, ids, n_heads):
+    """Pure-jnp twin of tiny_bert (oracle for tests and golden vectors)."""
+    return ref.tiny_bert(p, ids, n_heads)

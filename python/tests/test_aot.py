@@ -1,0 +1,105 @@
+"""AOT pipeline tests: manifest structure, weight offsets, golden vectors,
+and HLO-text sanity — everything the rust runtime relies on."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+OUT = "/tmp/tas_aot_test"
+
+
+@pytest.fixture(scope="module")
+def built():
+    """Build a miniature artifact set once for the whole module."""
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", OUT,
+         "--buckets", "1x32,2x32", "--vocab", "512", "--hidden", "128",
+         "--layers", "2", "--heads", "4", "--ffn", "256"],
+        check=True, cwd=os.path.dirname(os.path.dirname(__file__)), env=env,
+    )
+    with open(os.path.join(OUT, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_shape(built):
+    assert built["version"] == 1
+    names = [a["name"] for a in built["artifacts"]]
+    assert "bert_b1_s32" in names and "bert_b2_s32" in names
+    assert any(n.startswith("linear_is_os") for n in names)
+    assert any(n.startswith("linear_ws_os") for n in names)
+
+
+def test_hlo_text_parseable(built):
+    for a in built["artifacts"]:
+        path = os.path.join(OUT, a["hlo"])
+        head = open(path).read(200)
+        assert head.startswith("HloModule"), f"{a['name']}: {head[:40]!r}"
+        # return_tuple=True: the root computation must return a tuple
+        text = open(path).read()
+        assert "tuple(" in text or "ROOT" in text
+
+
+def test_weight_offsets_consistent(built):
+    """Offsets+nbytes tile weights.bin without overlap past the end."""
+    size = os.path.getsize(os.path.join(OUT, built["weights_bin"]))
+    spans = set()
+    for a in built["artifacts"]:
+        for arg in a["args"]:
+            if arg["kind"] == "weight":
+                off, nb = arg["offset"], arg["nbytes"]
+                assert off + nb <= size
+                spans.add((off, nb))
+                want = int(np.prod(arg["shape"])) * 4
+                assert nb == want, (arg["name"], nb, want)
+    # shared checkpoint: bert buckets must reference identical offsets
+    berts = [a for a in built["artifacts"] if a["kind"] == "bert"]
+    w0 = [(g["name"], g["offset"]) for g in berts[0]["args"]
+          if g["kind"] == "weight"]
+    w1 = [(g["name"], g["offset"]) for g in berts[1]["args"]
+          if g["kind"] == "weight"]
+    assert w0 == w1
+
+
+def test_golden_vectors_match_oracle(built):
+    """Re-run the oracle on the stored golden input; must equal the file."""
+    cfg = model.TinyBertConfig(vocab=512, hidden=128, n_layers=2, n_heads=4,
+                               ffn=256)
+    params = model.init_params(cfg, seed=0)
+    art = next(a for a in built["artifacts"] if a["name"] == "bert_b1_s32")
+    ids = np.fromfile(os.path.join(OUT, art["golden"]["input"]),
+                      dtype=np.int32).reshape(1, 32)
+    want = np.fromfile(os.path.join(OUT, art["golden"]["output"]),
+                       dtype=np.float32).reshape(art["outputs"][0]["shape"])
+    import jax.numpy as jnp
+    got = np.asarray(model.ref_tiny_bert(params, jnp.asarray(ids),
+                                         cfg.n_heads))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_weights_bin_roundtrip(built):
+    """Reading emb back from weights.bin reproduces init_params."""
+    cfg = model.TinyBertConfig(vocab=512, hidden=128, n_layers=2, n_heads=4,
+                               ffn=256)
+    params = model.init_params(cfg, seed=0)
+    art = next(a for a in built["artifacts"] if a["kind"] == "bert")
+    emb_arg = next(g for g in art["args"] if g["name"] == "emb")
+    with open(os.path.join(OUT, built["weights_bin"]), "rb") as f:
+        f.seek(emb_arg["offset"])
+        raw = np.frombuffer(f.read(emb_arg["nbytes"]), dtype=np.float32)
+    np.testing.assert_array_equal(
+        raw.reshape(emb_arg["shape"]), np.asarray(params["emb"]))
+
+
+def test_flops_positive_and_monotonic(built):
+    berts = sorted((a for a in built["artifacts"] if a["kind"] == "bert"),
+                   key=lambda a: a["batch"] * a["seq"])
+    flops = [a["flops"] for a in berts]
+    assert all(f > 0 for f in flops)
+    assert flops == sorted(flops)

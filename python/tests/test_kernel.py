@@ -1,0 +1,101 @@
+"""L1 correctness: every Pallas stationary scheme vs the pure-jnp oracle.
+
+hypothesis sweeps shapes, block sizes and dtypes; each scheme must produce
+bit-close results — the dataflow changes the *schedule*, never the math.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import tiled_matmul as tm
+
+RNG = np.random.default_rng(1234)
+
+
+def _rand(shape, dtype=np.float32):
+    a = RNG.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(a, dtype=dtype)
+
+
+def _tol(dtype):
+    # bf16 psums accumulate in bf16 across grid revisits (one rounding per
+    # contraction step), so the tolerance is wider than a single-cast ref.
+    return dict(rtol=1e-1, atol=1e-1) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+# a grid-dim strategy: (blocks, block_size) so divisibility always holds
+dims = st.tuples(st.integers(1, 4), st.sampled_from([8, 16, 32]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=dims, n=dims, k=dims, scheme=st.sampled_from(tm.SCHEMES))
+def test_matmul_matches_ref(m, n, k, scheme):
+    (gm, bm), (gn, bn), (gk, bk) = m, n, k
+    M, N, K = gm * bm, gn * bn, gk * bk
+    x, w = _rand((M, N)), _rand((N, K))
+    got = tm.matmul(x, w, scheme=scheme, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.matmul(x, w)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims, n=dims, k=dims, scheme=st.sampled_from(tm.SCHEMES),
+       act=st.sampled_from([None, "gelu", "relu"]))
+def test_linear_matches_ref(m, n, k, scheme, act):
+    (gm, bm), (gn, bn), (gk, bk) = m, n, k
+    M, N, K = gm * bm, gn * bn, gk * bk
+    x, w, b = _rand((M, N)), _rand((N, K)), _rand((K,))
+    got = tm.linear(x, w, b, scheme=scheme, act=act, bm=bm, bn=bn, bk=bk)
+    want = ref.linear(x, w, b, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("scheme", tm.SCHEMES)
+def test_dtypes(scheme, dtype):
+    x, w = _rand((32, 64), dtype), _rand((64, 32), dtype)
+    got = tm.matmul(x, w, scheme=scheme, bm=16, bn=16, bk=16)
+    want = ref.matmul(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("scheme", tm.SCHEMES)
+def test_single_block_grid(scheme):
+    """Degenerate 1x1x1 grid: the psum-init branch runs exactly once."""
+    x, w = _rand((16, 16)), _rand((16, 16))
+    got = tm.matmul(x, w, scheme=scheme, bm=16, bn=16, bk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.matmul(x, w)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_indivisible_tiling_rejected():
+    x, w = _rand((30, 32)), _rand((32, 32))
+    with pytest.raises(ValueError, match="tile sizes must divide"):
+        tm.matmul(x, w, scheme="is_os", bm=16, bn=16, bk=16)
+
+
+@settings(max_examples=50, deadline=None)
+@given(M=st.integers(1, 100_000), K=st.integers(1, 100_000),
+       N=st.integers(1, 10_000))
+def test_choose_scheme_is_ema_argmin(M, K, N):
+    """The rule sign(N*(M-K)) must pick the smaller stationary matrix."""
+    scheme = tm.choose_scheme(M, K)
+    input_ema, weight_ema = M * N, N * K  # stationary-matrix EMA (Table II)
+    if scheme == "is_os":
+        assert input_ema < weight_ema
+    else:
+        assert weight_ema <= input_ema
+
+
+def test_default_blocks_divide():
+    for d in (1, 7, 32, 100, 128, 250, 384, 1024):
+        M, N, K = d, d * 2, max(1, d // 2)
+        bm, bn, bk = tm.default_blocks(M, N, K)
+        assert M % bm == 0 and N % bn == 0 and K % bk == 0
+        assert bm <= 512 and bn <= 1024 and bk <= 1024

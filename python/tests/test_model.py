@@ -1,0 +1,81 @@
+"""L2 correctness: the Pallas-backed model equals its pure-jnp twin, and the
+trace-time TAS scheme plan obeys the paper's decision rule."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels import tiled_matmul as tm
+
+CFG = model.TinyBertConfig(vocab=512, hidden=128, n_layers=2, n_heads=4,
+                           ffn=256, max_len=128)
+PARAMS = model.init_params(CFG, seed=7)
+RNG = np.random.default_rng(7)
+
+
+def _x(B, S):
+    return jnp.asarray(RNG.standard_normal((B, S, CFG.hidden),
+                                           ).astype(np.float32))
+
+
+def _ids(B, S):
+    return jnp.asarray(RNG.integers(0, CFG.vocab, (B, S), dtype=np.int32))
+
+
+@pytest.mark.parametrize("B,S", [(1, 32), (2, 32), (1, 64)])
+def test_mha_matches_ref(B, S):
+    x = _x(B, S)
+    got = model.mha(PARAMS["layers"][0]["attn"], x, CFG.n_heads)
+    want = ref.mha(PARAMS["layers"][0]["attn"], x, CFG.n_heads)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,S", [(1, 32), (2, 64)])
+def test_encoder_layer_matches_ref(B, S):
+    x = _x(B, S)
+    got = model.encoder_layer(PARAMS["layers"][0], x, CFG.n_heads)
+    want = ref.encoder_layer(PARAMS["layers"][0], x, CFG.n_heads)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,S", [(1, 32), (2, 32), (1, 128)])
+def test_tiny_bert_matches_ref(B, S):
+    ids = _ids(B, S)
+    got = model.tiny_bert(PARAMS, ids, CFG.n_heads)
+    want = model.ref_tiny_bert(PARAMS, ids, CFG.n_heads)
+    assert got.shape == (B, S, CFG.vocab)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_scheme_plan_rule():
+    # M=64 tokens < every K -> all input-stationary
+    assert set(model.scheme_plan(CFG, 64).values()) == {"is_os"}
+    # M=512 >= hidden(128)/ffn(256)/vocab(512) -> all weight-stationary
+    assert set(model.scheme_plan(CFG, 512).values()) == {"ws_os"}
+    # mixed regime: M=256 >= hidden(128) and >= ffn(256), < vocab(512)
+    plan = model.scheme_plan(CFG, 256)
+    assert plan["qkv"] == "ws_os"
+    assert plan["ffn1"] == "ws_os"
+    assert plan["lm_head"] == "is_os"
+
+
+def test_scheme_plan_consistent_with_kernel_rule():
+    for m in (1, 64, 128, 256, 512, 4096):
+        plan = model.scheme_plan(CFG, m)
+        assert plan["qkv"] == tm.choose_scheme(m, CFG.hidden)
+        assert plan["ffn1"] == tm.choose_scheme(m, CFG.ffn)
+        assert plan["lm_head"] == tm.choose_scheme(m, CFG.vocab)
+
+
+def test_init_params_deterministic():
+    p1 = model.init_params(CFG, seed=3)
+    p2 = model.init_params(CFG, seed=3)
+    np.testing.assert_array_equal(np.asarray(p1["emb"]),
+                                  np.asarray(p2["emb"]))
+    p3 = model.init_params(CFG, seed=4)
+    assert not np.array_equal(np.asarray(p1["emb"]), np.asarray(p3["emb"]))

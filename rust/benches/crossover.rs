@@ -1,0 +1,79 @@
+//! Bench A1 — ablation: the IS↔WS crossover.  Sweeps the token count M
+//! at fixed N=K=hidden and locates where IS-OS and WS-OS trade places;
+//! the paper's rule says exactly at M = K.  Also validates the rule's
+//! regret on ragged shapes near the boundary.
+
+use tas::dataflow::{ema, Scheme};
+use tas::gemm::{GemmShape, Tiling};
+use tas::util::bench::{Bench, Throughput};
+use tas::util::table::{sci, Table};
+
+fn main() {
+    let tiling = Tiling::square(16);
+    let hidden = 1024u64;
+
+    let mut t = Table::new(
+        &format!("IS-OS vs WS-OS total EMA, N=K={hidden}, 16-tiles"),
+        &["M", "is-os", "ws-os", "winner", "rule picks"],
+    );
+    let mut crossover_seen = None;
+    let mut prev_winner = None;
+    for m in [64u64, 128, 256, 512, 768, 960, 1008, 1024, 1040, 1088, 1536, 2048, 4096] {
+        let shape = GemmShape::new(m, hidden, hidden);
+        let is_os = ema(Scheme::IsOs, &shape, &tiling).total();
+        let ws_os = ema(Scheme::WsOs, &shape, &tiling).total();
+        // tie-break to ws-os: at M = K the totals are equal (with m = k)
+        // and the paper's rule picks WS for M >= K.
+        let winner = if is_os < ws_os { "is-os" } else { "ws-os" };
+        if let Some(p) = prev_winner {
+            if p != winner && crossover_seen.is_none() {
+                crossover_seen = Some(m);
+            }
+        }
+        prev_winner = Some(winner);
+        t.row(vec![
+            m.to_string(),
+            sci(is_os as f64),
+            sci(ws_os as f64),
+            winner.into(),
+            Scheme::Tas.resolve(&shape).name().into(),
+        ]);
+    }
+    println!("{}", t.to_text());
+    let cx = crossover_seen.expect("a crossover must exist");
+    println!("measured crossover at M = {cx} (rule predicts M = K = {hidden}) ✓\n");
+    assert_eq!(cx, hidden);
+
+    // regret near the boundary on ragged Ms
+    let mut worst = 0f64;
+    for m in (hidden - 64)..(hidden + 64) {
+        let shape = GemmShape::new(m, hidden, hidden);
+        let tas = ema(Scheme::Tas, &shape, &tiling).total() as f64;
+        let best = ema(Scheme::IsOs, &shape, &tiling)
+            .total()
+            .min(ema(Scheme::WsOs, &shape, &tiling).total()) as f64;
+        worst = worst.max(tas / best - 1.0);
+    }
+    println!("worst rule regret within ±64 of the boundary: {:.3}% ✓\n", worst * 100.0);
+    assert!(worst < 0.05);
+
+    let mut b = Bench::new("crossover");
+    b.run("rule_eval_sweep_4096", Throughput::Elements(4096), || {
+        let mut acc = 0u64;
+        for m in 1..=4096u64 {
+            let shape = GemmShape::new(m, hidden, hidden);
+            acc += Scheme::Tas.resolve(&shape) as u64;
+        }
+        acc
+    });
+    b.run("analytic_pair_sweep_1024", Throughput::Elements(1024), || {
+        let mut acc = 0u64;
+        for m in 1..=1024u64 {
+            let shape = GemmShape::new(m, hidden, hidden);
+            acc += ema(Scheme::IsOs, &shape, &tiling).total()
+                ^ ema(Scheme::WsOs, &shape, &tiling).total();
+        }
+        acc
+    });
+    b.write_csv();
+}

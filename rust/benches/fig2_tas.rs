@@ -1,0 +1,62 @@
+//! Bench E6 — Fig. 2's proposed hybrids (IS-OS / WS-OS with k'/m' psum
+//! windows) and the TAS selector: EMA, *zero* psum DRAM traffic, an
+//! order-of-magnitude fewer read↔write turnarounds than the spilling
+//! parents, and the adaptive pick across the M↔K regimes.
+
+use tas::arch::Dram;
+use tas::dataflow::{step_count, Scheme};
+use tas::gemm::{GemmShape, Tiling};
+use tas::sim::{measure_occupancy, simulate_ema};
+use tas::util::bench::{Bench, Throughput};
+use tas::util::table::{pct, sci, Table};
+
+fn main() {
+    let tiling = Tiling::square(16).with_kp(256).with_mp(256);
+
+    // the two regimes of Fig. 2: M < K (a) and M >= K (b)
+    for (label, shape) in [
+        ("Fig. 2a regime: M=128 < K=1024", GemmShape::new(128, 768, 1024)),
+        ("Fig. 2b regime: M=2048 >= K=768", GemmShape::new(2048, 768, 768)),
+    ] {
+        let mut t = Table::new(
+            &format!("{label} (k'=m'=256)"),
+            &["scheme", "total EMA", "vs naive", "psum DRAM", "dir switches", "peak psum"],
+        );
+        let mut naive_d = Dram::new(16, 12);
+        let naive = simulate_ema(Scheme::Naive, &shape, &tiling, &mut naive_d).total_words();
+        for scheme in [Scheme::Is, Scheme::Ws, Scheme::IsOs, Scheme::WsOs, Scheme::Tas] {
+            let mut d = Dram::new(16, 12);
+            let sim = simulate_ema(scheme, &shape, &tiling, &mut d);
+            let occ = measure_occupancy(scheme, &shape, &tiling);
+            t.row(vec![
+                scheme.name().into(),
+                sci(sim.total_words() as f64),
+                pct(1.0 - sim.total_words() as f64 / naive as f64),
+                sci((sim.stats.psum_write_words + sim.stats.psum_read_words) as f64),
+                sim.stats.direction_switches.to_string(),
+                occ.peak_psum_words.to_string(),
+            ]);
+        }
+        println!("{}", t.to_text());
+
+        // invariants the figure encodes
+        let resolved = Scheme::Tas.resolve(&shape);
+        let expect = if shape.m < shape.k { Scheme::IsOs } else { Scheme::WsOs };
+        assert_eq!(resolved, expect);
+        let mut d = Dram::new(16, 12);
+        let hybrid = simulate_ema(resolved, &shape, &tiling, &mut d);
+        assert_eq!(hybrid.psum_readback_words(), 0);
+        println!("TAS resolved to {} — matches the figure's regime ✓\n", resolved.name());
+    }
+
+    let shape = GemmShape::new(512, 512, 512);
+    let steps = step_count(&shape, &tiling);
+    let mut b = Bench::new("fig2");
+    for scheme in [Scheme::IsOs, Scheme::WsOs, Scheme::Tas] {
+        b.run(&format!("replay/{}", scheme.name()), Throughput::Elements(steps), || {
+            let mut d = Dram::new(16, 12);
+            simulate_ema(scheme, &shape, &tiling, &mut d).total_words()
+        });
+    }
+    b.write_csv();
+}

@@ -1,0 +1,78 @@
+//! Bench A3 — hot-path microbenchmarks for the §Perf pass.
+//!
+//! The simulator's schedule replay is the instrument every paper-table
+//! bench runs through; DESIGN.md §8 targets ≥50 M tile-events/s single
+//! core.  Also times the batcher and the functional executor.
+
+use std::time::Instant;
+use tas::arch::Dram;
+use tas::coordinator::batcher::Batcher;
+use tas::coordinator::request::Request;
+use tas::dataflow::{for_each_step, step_count, Scheme};
+use tas::gemm::{GemmShape, Tiling};
+use tas::sim::functional::{execute_schedule, Mat};
+use tas::sim::simulate_ema;
+use tas::util::bench::{Bench, Throughput};
+use tas::util::prng::Rng;
+
+fn main() {
+    let mut b = Bench::new("perf");
+
+    // ---- schedule generation alone (no accounting) -----------------------
+    let shape = GemmShape::new(1024, 1024, 1024);
+    let tiling = Tiling::square(16);
+    let steps = step_count(&shape, &tiling); // 262,144 steps
+    for scheme in [Scheme::IsOs, Scheme::WsOs, Scheme::OsRow, Scheme::Naive] {
+        b.run(&format!("steps/{}", scheme.name()), Throughput::Elements(steps), || {
+            let mut acc = 0u64;
+            for_each_step(scheme, &shape, &tiling, |s| acc = acc.wrapping_add(s.i ^ s.r ^ s.j));
+            acc
+        });
+    }
+
+    // ---- full EMA replay ---------------------------------------------------
+    for scheme in [Scheme::IsOs, Scheme::Naive] {
+        b.run(&format!("ema_replay/{}", scheme.name()), Throughput::Elements(steps), || {
+            let mut d = Dram::new(16, 12);
+            simulate_ema(scheme, &shape, &tiling, &mut d).total_words()
+        });
+    }
+
+    // ---- functional executor ----------------------------------------------
+    let mut rng = Rng::new(0);
+    let fshape = GemmShape::new(128, 128, 128);
+    let a = Mat::from_fn(128, 128, |_, _| rng.gen_f32_signed());
+    let w = Mat::from_fn(128, 128, |_, _| rng.gen_f32_signed());
+    b.run("functional_gemm_128", Throughput::Elements(fshape.macs()), || {
+        execute_schedule(Scheme::Tas, &fshape, &tiling, &a, &w).data[0]
+    });
+
+    // ---- batcher throughput -------------------------------------------------
+    let buckets: Vec<(u64, u64, String)> = vec![
+        (1, 32, "b1_s32".into()),
+        (4, 64, "b4_s64".into()),
+        (8, 64, "b8_s64".into()),
+        (1, 128, "b1_s128".into()),
+    ];
+    b.run("batcher_push_pop_1k", Throughput::Elements(1000), || {
+        let mut batcher = Batcher::new(&buckets, std::time::Duration::ZERO).unwrap();
+        let mut rng = Rng::new(7);
+        let mut popped = 0usize;
+        for i in 0..1000u64 {
+            let len = rng.gen_in(1, 128) as usize;
+            batcher.push(Request::new(i, vec![0; len])).unwrap();
+            if let Some(batch) = batcher.pop_ready(Instant::now()) {
+                popped += batch.requests.len();
+            }
+        }
+        popped + batcher.drain().len()
+    });
+
+    b.write_csv();
+
+    // report the DESIGN.md §8 target
+    if let Some(r) = b.results.iter().find(|r| r.id.contains("ema_replay/is-os")) {
+        let eps = r.per_sec.unwrap_or(0.0) / 1e6;
+        println!("\nEMA replay rate: {eps:.1} M tile-events/s (target ≥ 50 M/s)");
+    }
+}

@@ -1,0 +1,84 @@
+//! Bench E2E-perf — PJRT runtime latency per artifact and coordinator
+//! overhead.  Requires `make artifacts`; prints a skip notice otherwise.
+//!
+//! The §Perf target (DESIGN.md §8): coordinator overhead (batching,
+//! routing, accounting) ≪ PJRT execute time — measured here as the gap
+//! between raw engine execute and closed-loop single-request latency.
+
+use std::time::{Duration, Instant};
+use tas::coordinator::{Coordinator, CoordinatorOptions};
+use tas::runtime::{artifacts_available, Engine, HostTensor};
+use tas::util::bench::{Bench, Throughput};
+use tas::util::prng::Rng;
+
+fn main() {
+    let dir = tas::runtime::default_artifacts_dir();
+    if !artifacts_available(&dir) {
+        println!("runtime_latency: no artifacts at {} — run `make artifacts`; skipping", dir.display());
+        return;
+    }
+    let mut b = Bench::new("runtime");
+
+    // ---- raw engine execute per artifact ---------------------------------
+    let mut engine = Engine::load(&dir).expect("engine");
+    engine.preload_all().expect("preload");
+    let arts: Vec<_> = engine.manifest().artifacts.clone();
+    let mut rng = Rng::new(3);
+    for art in &arts {
+        let (_, meta) = art.input_args()[0];
+        let n: usize = meta.shape.iter().product();
+        let input = match meta.dtype {
+            tas::runtime::DType::I32 => HostTensor::I32(
+                (0..n).map(|_| rng.gen_range(256) as i32).collect(),
+                meta.shape.clone(),
+            ),
+            tas::runtime::DType::F32 => HostTensor::F32(
+                (0..n).map(|_| rng.gen_f32_signed()).collect(),
+                meta.shape.clone(),
+            ),
+        };
+        let flops = art.flops.max(1);
+        b.run(&format!("execute/{}", art.name), Throughput::Elements(flops), || {
+            engine.execute(&art.name, &[input.clone()]).unwrap().len()
+        });
+    }
+
+    // ---- coordinator overhead ---------------------------------------------
+    let c = Coordinator::start(CoordinatorOptions {
+        artifacts_dir: dir,
+        linger: Duration::from_millis(0),
+        ..Default::default()
+    })
+    .expect("coordinator");
+    let vocab = *c.model.get("vocab").unwrap_or(&1024);
+    // single request, closed loop: measures queue+batch+execute+reply
+    let tokens: Vec<i32> = (0..32).map(|i| (i as u64 % vocab) as i32).collect();
+    b.run("closed_loop_single_s32", Throughput::Elements(1), || {
+        c.run_closed_loop(vec![tokens.clone()]).unwrap().len()
+    });
+    // batched: 8 same-length requests in one wave
+    let wave: Vec<Vec<i32>> = (0..8).map(|_| tokens.clone()).collect();
+    b.run("closed_loop_wave8_s32", Throughput::Elements(8), || {
+        c.run_closed_loop(wave.clone()).unwrap().len()
+    });
+    b.write_csv();
+
+    // overhead summary for EXPERIMENTS.md §Perf
+    let t0 = Instant::now();
+    let _ = c.run_closed_loop(vec![tokens.clone()]).unwrap();
+    let e2e = t0.elapsed().as_secs_f64() * 1e3;
+    let raw = b
+        .results
+        .iter()
+        .find(|r| r.id.contains("execute/bert_b1_s32"))
+        .map(|r| r.mean_ns / 1e6)
+        .unwrap_or(0.0);
+    if raw > 0.0 {
+        println!(
+            "\ncoordinator overhead on s32 single request: e2e {e2e:.2} ms vs raw execute \
+             {raw:.2} ms -> overhead {:.1}%",
+            (e2e - raw) / e2e * 100.0
+        );
+    }
+    c.shutdown();
+}

@@ -1,0 +1,38 @@
+//! Bench E1 — regenerates paper Table I (representative large models:
+//! hidden dim, token length, parameter size, total EMA) and times the
+//! analytic pipeline at GPT-3 scale.
+//!
+//! Expected shape (paper): GPT-3's total EMA (11,132.6 G) dwarfs
+//! ViT-G/14 (312.9 G) and Wav2Vec2-XLS-R (353.9 G).  Our EMA accounting
+//! is defined in DESIGN.md §5 (naive read EMA in words); absolute scale
+//! differs, the ordering and ~30× gap must hold.
+
+use tas::dataflow::Scheme;
+use tas::energy::workload_read_ema;
+use tas::gemm::Tiling;
+use tas::models::zoo;
+use tas::report;
+use tas::util::bench::{Bench, Throughput};
+
+fn main() {
+    let tiling = Tiling::square(16);
+    println!("{}", report::table1(&tiling).to_text());
+
+    // sanity: the paper's ordering
+    let t = report::table1(&tiling);
+    let ema: Vec<f64> = t.rows.iter().map(|r| r[4].parse().unwrap()).collect();
+    assert!(ema[2] > 20.0 * ema[0] && ema[2] > 20.0 * ema[1]);
+    println!("shape check: GPT-3 EMA >> ViT-G/14, XLS-R ✓\n");
+
+    let mut b = Bench::new("table1");
+    for m in [zoo::vit_g14(), zoo::xlsr_2b(), zoo::gpt3()] {
+        let gemms = m.linear_gemms(m.default_seq);
+        b.run(&format!("analytic_ema/{}", m.name), Throughput::Elements(gemms.len() as u64), || {
+            let naive = workload_read_ema(Scheme::Naive, &gemms, &tiling);
+            let tas = workload_read_ema(Scheme::Tas, &gemms, &tiling);
+            (naive, tas)
+        });
+    }
+    b.run("table1_full_render", Throughput::None, || report::table1(&tiling).to_text().len());
+    b.write_csv();
+}

@@ -1,0 +1,50 @@
+//! Bench E2 — regenerates paper Table II (EMA closed forms per scheme)
+//! and validates the simulator against the formulas on randomized shapes
+//! before timing both paths.
+//!
+//! Expected shape (paper): naive = 3·MNK; IS/WS cut the stationary
+//! matrix to one read; OS removes psum spill; the hybrids combine both.
+
+use tas::arch::Dram;
+use tas::dataflow::{ema, Scheme};
+use tas::gemm::{GemmShape, Tiling};
+use tas::report;
+use tas::sim::simulate_ema;
+use tas::util::bench::{Bench, Throughput};
+use tas::util::prng::Rng;
+
+fn main() {
+    let tiling = Tiling::square(16);
+    let shape = GemmShape::new(384, 768, 768); // BERT-Base qkv @ mean length
+    println!("{}", report::table2(&shape, &tiling).to_text());
+
+    // cross-validation sweep: closed forms == replayed counts
+    let mut rng = Rng::new(2);
+    let mut checked = 0;
+    for _ in 0..200 {
+        let s = GemmShape::new(rng.gen_in(1, 300), rng.gen_in(1, 300), rng.gen_in(1, 300));
+        for scheme in Scheme::FIXED {
+            let a = ema(scheme, &s, &tiling);
+            let mut d = Dram::new(16, 12);
+            let sim = simulate_ema(scheme, &s, &tiling, &mut d);
+            assert_eq!(sim.table2(), (a.input, a.weight, a.output), "{scheme:?} {s:?}");
+            checked += 1;
+        }
+    }
+    println!("cross-validated {checked} (scheme × shape) cases: sim == analytic ✓\n");
+
+    let mut b = Bench::new("table2");
+    b.run("analytic_all_schemes", Throughput::Elements(7), || {
+        Scheme::FIXED.map(|s| ema(s, &shape, &tiling).total())
+    });
+    let steps = tas::dataflow::step_count(&shape, &tiling);
+    b.run("sim_replay_is_os", Throughput::Elements(steps), || {
+        let mut d = Dram::new(16, 12);
+        simulate_ema(Scheme::IsOs, &shape, &tiling, &mut d).total_words()
+    });
+    b.run("sim_replay_naive", Throughput::Elements(steps), || {
+        let mut d = Dram::new(16, 12);
+        simulate_ema(Scheme::Naive, &shape, &tiling, &mut d).total_words()
+    });
+    b.write_csv();
+}

@@ -1,0 +1,40 @@
+//! Bench E3 — regenerates paper Table III: EMA of the reused matrix for
+//! Wav2Vec2.0-Large at LibriSpeech sequence lengths {115, 384, 1565,
+//! 15000}, plus the IS−WS decision column and the optimal scheme.
+//!
+//! Expected values (paper): IS column 1.18e5 / 3.93e5 / 1.60e6 / 1.54e7,
+//! WS ≈ 1.05e6 throughout, optimal flips IS→WS between 384 and 1565.
+//! Ours reproduce the IS column exactly; the paper's difference column
+//! has small arithmetic drift (−9.22e5 vs the exact −9.31e5).
+
+use tas::dataflow::{analytic, Scheme};
+use tas::gemm::GemmShape;
+use tas::models::lengths;
+use tas::report;
+use tas::util::bench::{Bench, Throughput};
+
+fn main() {
+    let table = report::table3();
+    println!("{}", table.to_text());
+
+    // assert the paper's qualitative result: the flip point
+    assert_eq!(table.rows[1][4], "IS");
+    assert_eq!(table.rows[2][4], "WS");
+    println!("shape check: optimal scheme flips between 384 and 1565 tokens ✓\n");
+
+    let mut b = Bench::new("table3");
+    let seqs = [
+        lengths::LIBRISPEECH_MIN,
+        lengths::LIBRISPEECH_MEAN,
+        lengths::LIBRISPEECH_MAX,
+        lengths::LONG_SPEECH,
+    ];
+    b.run("decision_rule_4_lengths", Throughput::Elements(4), || {
+        seqs.map(|s| {
+            let shape = GemmShape::new(s, 1024, 1024);
+            (analytic::is_ws_difference(&shape), Scheme::Tas.resolve(&shape))
+        })
+    });
+    b.run("table3_full_render", Throughput::None, || report::table3().to_text().len());
+    b.write_csv();
+}

@@ -1,0 +1,38 @@
+//! Bench E4 — regenerates paper Table IV: BERT-Base per-layer energy
+//! under naive (A), Ayaka's fixed dataflow [9] (B) and TAS (C), with the
+//! (A−B)/A and (A−C)/A reduction columns.
+//!
+//! Expected shape (paper): B ≈ 48% reduction on average, C ≈ 97%, i.e.
+//! TAS doubles the fixed scheme's energy efficiency; rows spread ±2%.
+
+use tas::gemm::Tiling;
+use tas::report;
+use tas::util::bench::{Bench, Throughput};
+
+fn main() {
+    let tiling = Tiling::square(16);
+    let table = report::table4(&tiling, 0xBEEF);
+    println!("{}", table.to_text());
+
+    let rows = report::table4_rows(&tiling, 0xBEEF);
+    let mean_b: f64 = rows.iter().map(|r| r.red_ayaka).sum::<f64>() / rows.len() as f64;
+    let mean_c: f64 = rows.iter().map(|r| r.red_ours).sum::<f64>() / rows.len() as f64;
+    println!(
+        "shape check: mean (A-B)/A = {:.1}% (paper ≈48%), mean (A-C)/A = {:.1}% \
+         (paper ≈97%), ratio {:.2}× (paper: \"double\") ✓\n",
+        mean_b * 100.0,
+        mean_c * 100.0,
+        mean_c / mean_b
+    );
+    assert!((0.44..0.53).contains(&mean_b));
+    assert!(mean_c > 0.95);
+
+    let mut b = Bench::new("table4");
+    b.run("per_layer_rows_13", Throughput::Elements(13), || {
+        report::table4_rows(&tiling, 0xBEEF).len()
+    });
+    b.run("table4_full_render", Throughput::None, || {
+        report::table4(&tiling, 0xBEEF).to_text().len()
+    });
+    b.write_csv();
+}

@@ -1,0 +1,78 @@
+//! Bench A2 — ablation: tile size and psum-window capacity.
+//!
+//! (a) PE-array edge sweep: EMA reduction vs naive grows with tile size
+//!     (reload factors are 1/m, 1/k — §II Table II).
+//! (b) k' window sweep (IS-OS): halving the window halves the register
+//!     demand and doubles the stationary-matrix reload — the §III-B
+//!     trade-off that motivates sizing k' to the register file.
+
+use tas::dataflow::{ema, Scheme};
+use tas::gemm::{GemmShape, Tiling};
+use tas::sim::measure_occupancy;
+use tas::util::bench::{Bench, Throughput};
+use tas::util::table::{pct, sci, Table};
+
+fn main() {
+    let shape = GemmShape::new(512, 768, 3072); // BERT-Base ffn1 @ 512 tokens
+
+    // ---- (a) tile-size sweep ------------------------------------------------
+    let mut ta = Table::new(
+        "PE tile edge sweep (TAS), M=512 N=768 K=3072",
+        &["tile", "EMA words", "vs naive", "peak psum (k'=K)", "SRAM tiles (words)"],
+    );
+    for t in [4u64, 8, 16, 32, 64] {
+        let tiling = Tiling::square(t);
+        let e = ema(Scheme::Tas, &shape, &tiling).total();
+        let naive = ema(Scheme::Naive, &shape, &tiling).total();
+        let occ = measure_occupancy(Scheme::Tas, &shape, &tiling);
+        ta.row(vec![
+            format!("{t}×{t}"),
+            sci(e as f64),
+            pct(1.0 - e as f64 / naive as f64),
+            occ.peak_psum_words.to_string(),
+            occ.peak_sram_words.to_string(),
+        ]);
+    }
+    println!("{}", ta.to_text());
+
+    // ---- (b) psum-window sweep ----------------------------------------------
+    let mut tb = Table::new(
+        "IS-OS k' window sweep (tile 16), M=512 N=768 K=3072",
+        &["k'", "input EMA", "total EMA", "peak psum words", "psum DRAM traffic"],
+    );
+    for kp in [16u64, 32, 64, 128, 256, 512, 1024, 3072] {
+        let tiling = Tiling::square(16).with_kp(kp);
+        let e = ema(Scheme::IsOs, &shape, &tiling);
+        let occ = measure_occupancy(Scheme::IsOs, &shape, &tiling);
+        tb.row(vec![
+            kp.to_string(),
+            sci(e.input as f64),
+            sci(e.total() as f64),
+            occ.peak_psum_words.to_string(),
+            "0".into(), // hybrids never spill psums — the design point
+        ]);
+    }
+    println!("{}", tb.to_text());
+
+    // invariants: monotone trade-off
+    let wide = Tiling::square(16).with_kp(512);
+    let narrow = Tiling::square(16).with_kp(256);
+    assert_eq!(
+        ema(Scheme::IsOs, &shape, &narrow).input,
+        2 * ema(Scheme::IsOs, &shape, &wide).input
+    );
+    assert_eq!(
+        measure_occupancy(Scheme::IsOs, &shape, &narrow).peak_psum_words * 2,
+        measure_occupancy(Scheme::IsOs, &shape, &wide).peak_psum_words
+    );
+    println!("trade-off check: k'/2 -> 2× input reloads, ½ register demand ✓\n");
+
+    let mut b = Bench::new("tile_ablation");
+    b.run("occupancy_measure_16", Throughput::Elements(tas::dataflow::step_count(&shape, &Tiling::square(16))), || {
+        measure_occupancy(Scheme::Tas, &shape, &Tiling::square(16)).peak_psum_words
+    });
+    b.run("analytic_5_tiles", Throughput::Elements(5), || {
+        [4u64, 8, 16, 32, 64].map(|t| ema(Scheme::Tas, &shape, &Tiling::square(t)).total())
+    });
+    b.write_csv();
+}

@@ -1,0 +1,186 @@
+//! External-memory (DRAM) model.
+//!
+//! Two properties matter to the paper (§II-d):
+//!   1. every off-chip word movement costs energy 10–100× a MAC, and
+//!   2. DRAM cannot read and write simultaneously — each read↔write
+//!      direction switch stalls the bus (tWTR/tRTW turnaround).
+//!
+//! The model counts words moved per logical stream (input/weight/psum/
+//! output) and direction switches; the cycle model charges
+//! `words / bandwidth + switches * turnaround`.
+
+/// Transfer direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DramDir {
+    Read,
+    Write,
+}
+
+/// Which logical stream a transfer belongs to (for Table II accounting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stream {
+    Input,
+    Weight,
+    /// Partial sums spilled and re-fetched (non-hybrid schemes).
+    Psum,
+    Output,
+}
+
+/// Accumulated DRAM statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DramStats {
+    pub input_read_words: u64,
+    pub weight_read_words: u64,
+    pub psum_read_words: u64,
+    pub psum_write_words: u64,
+    pub output_write_words: u64,
+    /// Read↔write direction switches (each costs `turnaround` cycles).
+    pub direction_switches: u64,
+}
+
+impl DramStats {
+    /// Total words moved in either direction.
+    pub fn total_words(&self) -> u64 {
+        self.read_words() + self.write_words()
+    }
+
+    pub fn read_words(&self) -> u64 {
+        self.input_read_words + self.weight_read_words + self.psum_read_words
+    }
+
+    pub fn write_words(&self) -> u64 {
+        self.psum_write_words + self.output_write_words
+    }
+
+    /// Table II-style accounting: the paper counts each matrix's traffic
+    /// once per access (reads for input/weight, writes for output+psum).
+    pub fn table2_words(&self) -> (u64, u64, u64) {
+        (
+            self.input_read_words,
+            self.weight_read_words,
+            self.psum_write_words + self.output_write_words,
+        )
+    }
+}
+
+/// The DRAM device: bandwidth, turnaround penalty, running stats.
+#[derive(Clone, Debug)]
+pub struct Dram {
+    /// Words transferred per cycle when streaming.
+    pub bandwidth_words_per_cycle: u64,
+    /// Cycles lost on each read↔write direction switch.
+    pub turnaround_cycles: u64,
+    stats: DramStats,
+    last_dir: Option<DramDir>,
+}
+
+impl Dram {
+    pub fn new(bandwidth_words_per_cycle: u64, turnaround_cycles: u64) -> Self {
+        assert!(bandwidth_words_per_cycle > 0);
+        Dram {
+            bandwidth_words_per_cycle,
+            turnaround_cycles,
+            stats: DramStats::default(),
+            last_dir: None,
+        }
+    }
+
+    /// Record a transfer of `words` on `stream`.
+    pub fn transfer(&mut self, stream: Stream, words: u64) {
+        if words == 0 {
+            return;
+        }
+        let dir = match stream {
+            Stream::Input | Stream::Weight => DramDir::Read,
+            Stream::Output => DramDir::Write,
+            Stream::Psum => unreachable!("use psum_read/psum_write"),
+        };
+        self.record(dir, stream, words);
+    }
+
+    /// Psum spill to DRAM (write direction).
+    pub fn psum_write(&mut self, words: u64) {
+        if words > 0 {
+            self.record(DramDir::Write, Stream::Psum, words);
+        }
+    }
+
+    /// Psum re-fetch from DRAM (read direction).
+    pub fn psum_read(&mut self, words: u64) {
+        if words > 0 {
+            self.record(DramDir::Read, Stream::Psum, words);
+        }
+    }
+
+    fn record(&mut self, dir: DramDir, stream: Stream, words: u64) {
+        if let Some(last) = self.last_dir {
+            if last != dir {
+                self.stats.direction_switches += 1;
+            }
+        }
+        self.last_dir = Some(dir);
+        match (stream, dir) {
+            (Stream::Input, _) => self.stats.input_read_words += words,
+            (Stream::Weight, _) => self.stats.weight_read_words += words,
+            (Stream::Output, _) => self.stats.output_write_words += words,
+            (Stream::Psum, DramDir::Read) => self.stats.psum_read_words += words,
+            (Stream::Psum, DramDir::Write) => self.stats.psum_write_words += words,
+        }
+    }
+
+    pub fn stats(&self) -> DramStats {
+        self.stats
+    }
+
+    /// Cycles the bus is busy: streaming time + turnaround stalls.
+    pub fn bus_cycles(&self) -> u64 {
+        self.stats.total_words().div_ceil(self.bandwidth_words_per_cycle)
+            + self.stats.direction_switches * self.turnaround_cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_streams_separately() {
+        let mut d = Dram::new(16, 10);
+        d.transfer(Stream::Input, 100);
+        d.transfer(Stream::Weight, 200);
+        d.transfer(Stream::Output, 50);
+        let s = d.stats();
+        assert_eq!(s.input_read_words, 100);
+        assert_eq!(s.weight_read_words, 200);
+        assert_eq!(s.output_write_words, 50);
+        assert_eq!(s.total_words(), 350);
+    }
+
+    #[test]
+    fn direction_switches_counted() {
+        let mut d = Dram::new(16, 10);
+        d.transfer(Stream::Input, 1); // read
+        d.transfer(Stream::Weight, 1); // read: no switch
+        d.psum_write(1); // switch 1
+        d.psum_read(1); // switch 2
+        d.transfer(Stream::Output, 1); // switch 3
+        assert_eq!(d.stats().direction_switches, 3);
+    }
+
+    #[test]
+    fn bus_cycles_charge_turnaround() {
+        let mut d = Dram::new(10, 100);
+        d.transfer(Stream::Input, 100); // 10 cycles
+        d.transfer(Stream::Output, 100); // 10 cycles + 1 switch
+        assert_eq!(d.bus_cycles(), 20 + 100);
+    }
+
+    #[test]
+    fn zero_word_transfers_ignored() {
+        let mut d = Dram::new(16, 10);
+        d.transfer(Stream::Input, 0);
+        d.psum_write(0);
+        assert_eq!(d.stats(), DramStats::default());
+        assert_eq!(d.stats().direction_switches, 0);
+    }
+}

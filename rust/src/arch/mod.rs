@@ -1,0 +1,15 @@
+//! Hardware model of the accelerator the paper assumes (§II–III): a square
+//! PE array fed by an internal SRAM, a partial-sum register file, and an
+//! external DRAM that cannot read and write simultaneously.
+//!
+//! These types carry *capacities and costs*; the dynamic behaviour (what is
+//! resident when) lives in the schedule replay inside [`crate::sim`].
+
+pub mod dram;
+pub mod dram_timing;
+pub mod pe;
+pub mod sram;
+
+pub use dram::{Dram, DramDir, DramStats};
+pub use pe::PeArray;
+pub use sram::{RegFile, Sram};

@@ -1,0 +1,78 @@
+//! Processing-element array model.
+//!
+//! The paper assumes a square array (8×8 or 16×16, §III-A) that consumes an
+//! (m × n) input tile and an (n × k) weight tile per pass.  We model
+//! throughput as one MAC per PE per cycle with a fixed pipeline fill
+//! latency — enough fidelity for cycle *estimates*; EMA (the paper's
+//! metric) does not depend on it.
+
+/// Square systolic PE array.
+#[derive(Clone, Copy, Debug)]
+pub struct PeArray {
+    pub rows: u64,
+    pub cols: u64,
+    /// Pipeline fill/drain latency per tile pass, in cycles.
+    pub fill_latency: u64,
+}
+
+impl PeArray {
+    pub fn square(dim: u64) -> Self {
+        assert!(dim > 0);
+        PeArray { rows: dim, cols: dim, fill_latency: 2 * dim }
+    }
+
+    pub fn new(rows: u64, cols: u64) -> Self {
+        assert!(rows > 0 && cols > 0);
+        PeArray { rows, cols, fill_latency: rows + cols }
+    }
+
+    /// MACs retired per cycle at full utilisation.
+    pub fn macs_per_cycle(&self) -> u64 {
+        self.rows * self.cols
+    }
+
+    /// Cycles to compute an (m·n·k)-MAC tile pass, including fill.
+    pub fn tile_cycles(&self, macs: u64) -> u64 {
+        self.fill_latency + macs.div_ceil(self.macs_per_cycle())
+    }
+
+    /// Natural square tile edge for this array (the paper maps m≈n≈k to
+    /// the PE dimensions, §III-A).
+    pub fn natural_tile(&self) -> u64 {
+        self.rows.min(self.cols)
+    }
+
+    /// Utilisation of one tile pass: useful MACs / (cycles · peak).
+    pub fn utilization(&self, macs: u64) -> f64 {
+        let cycles = self.tile_cycles(macs);
+        macs as f64 / (cycles * self.macs_per_cycle()) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_array() {
+        let pe = PeArray::square(16);
+        assert_eq!(pe.macs_per_cycle(), 256);
+        assert_eq!(pe.natural_tile(), 16);
+    }
+
+    #[test]
+    fn tile_cycles_include_fill() {
+        let pe = PeArray::square(8);
+        // 8x8x8 tile = 512 MACs on 64 PEs = 8 cycles + 16 fill.
+        assert_eq!(pe.tile_cycles(512), 24);
+    }
+
+    #[test]
+    fn utilization_improves_with_bigger_tiles() {
+        let pe = PeArray::square(8);
+        let small = pe.utilization(8 * 8 * 8);
+        let big = pe.utilization(64 * 64 * 64);
+        assert!(big > small);
+        assert!(big <= 1.0);
+    }
+}

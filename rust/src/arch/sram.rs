@@ -1,0 +1,145 @@
+//! Internal-memory models: the tile SRAM and the partial-sum register file.
+//!
+//! §III-B motivates the hybrid schemes with internal capacity: plain IS/WS
+//! keep up to K (resp. M) partial sums alive, while the OS hybrids cap the
+//! live set at the window k'·m (resp. m'·k).  The simulator uses these
+//! types to *verify* that cap (peak tracking + hard capacity errors).
+
+use anyhow::{bail, Result};
+
+/// Internal SRAM for stationary tiles, tracked in words.
+#[derive(Clone, Debug)]
+pub struct Sram {
+    pub capacity_words: u64,
+    used_words: u64,
+    peak_words: u64,
+}
+
+impl Sram {
+    pub fn new(capacity_words: u64) -> Self {
+        Sram { capacity_words, used_words: 0, peak_words: 0 }
+    }
+
+    pub fn alloc(&mut self, words: u64) -> Result<()> {
+        if self.used_words + words > self.capacity_words {
+            bail!(
+                "SRAM overflow: {} + {} > {} words",
+                self.used_words,
+                words,
+                self.capacity_words
+            );
+        }
+        self.used_words += words;
+        self.peak_words = self.peak_words.max(self.used_words);
+        Ok(())
+    }
+
+    pub fn free(&mut self, words: u64) {
+        assert!(words <= self.used_words, "SRAM double-free");
+        self.used_words -= words;
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used_words
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak_words
+    }
+}
+
+/// Partial-sum register file (one word per live partial sum).
+#[derive(Clone, Debug)]
+pub struct RegFile {
+    pub capacity: u64,
+    live: u64,
+    peak: u64,
+}
+
+impl RegFile {
+    pub fn new(capacity: u64) -> Self {
+        RegFile { capacity, live: 0, peak: 0 }
+    }
+
+    /// Unbounded tracker (capacity checks off, peak still recorded) — used
+    /// to *measure* how many psums a non-hybrid scheme would need.
+    pub fn unbounded() -> Self {
+        RegFile { capacity: u64::MAX, live: 0, peak: 0 }
+    }
+
+    pub fn acquire(&mut self, n: u64) -> Result<()> {
+        if self.live + n > self.capacity {
+            bail!(
+                "psum regfile overflow: {} + {} > {}",
+                self.live,
+                n,
+                self.capacity
+            );
+        }
+        self.live += n;
+        self.peak = self.peak.max(self.live);
+        Ok(())
+    }
+
+    pub fn release(&mut self, n: u64) {
+        assert!(n <= self.live, "psum regfile double-release");
+        self.live -= n;
+    }
+
+    pub fn live(&self) -> u64 {
+        self.live
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sram_tracks_peak() {
+        let mut s = Sram::new(100);
+        s.alloc(60).unwrap();
+        s.alloc(30).unwrap();
+        s.free(50);
+        s.alloc(10).unwrap();
+        assert_eq!(s.used(), 50);
+        assert_eq!(s.peak(), 90);
+    }
+
+    #[test]
+    fn sram_overflow_errors() {
+        let mut s = Sram::new(10);
+        assert!(s.alloc(11).is_err());
+        s.alloc(10).unwrap();
+        assert!(s.alloc(1).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "double-free")]
+    fn sram_double_free_panics() {
+        let mut s = Sram::new(10);
+        s.free(1);
+    }
+
+    #[test]
+    fn regfile_caps_and_peaks() {
+        let mut r = RegFile::new(4);
+        r.acquire(3).unwrap();
+        assert!(r.acquire(2).is_err());
+        r.release(1);
+        r.acquire(2).unwrap();
+        assert_eq!(r.live(), 4);
+        assert_eq!(r.peak(), 4);
+    }
+
+    #[test]
+    fn unbounded_regfile_measures() {
+        let mut r = RegFile::unbounded();
+        r.acquire(1_000_000).unwrap();
+        assert_eq!(r.peak(), 1_000_000);
+    }
+}

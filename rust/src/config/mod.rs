@@ -1,0 +1,256 @@
+//! Typed configuration for the accelerator, energy model and simulator,
+//! loadable from TOML files (see `configs/`) or built from presets.
+//!
+//! Defaults model the paper's assumed hardware: a 16×16 PE array, 16-bit
+//! words, an internal SRAM of a few hundred KiB, and Ayaka-calibrated
+//! energy ratios (external transfer 10–100× internal compute, §IV).
+
+use crate::arch::{Dram, PeArray, RegFile, Sram};
+use crate::gemm::Tiling;
+use crate::util::toml::TomlDoc;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Accelerator hardware parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AcceleratorConfig {
+    /// PE array edge (square, §III-A).
+    pub pe_dim: u64,
+    /// Tile sizes; usually `pe_dim` each.
+    pub tile_m: u64,
+    pub tile_n: u64,
+    pub tile_k: u64,
+    /// Partial-sum register capacity in words (bounds k'·m / m'·k).
+    pub psum_regs: u64,
+    /// Internal SRAM capacity in words.
+    pub sram_words: u64,
+    /// DRAM bandwidth in words/cycle.
+    pub dram_bandwidth: u64,
+    /// DRAM read↔write turnaround penalty in cycles.
+    pub dram_turnaround: u64,
+    /// Word width in bytes (paper uses 16-bit fixed point).
+    pub word_bytes: u64,
+}
+
+impl Default for AcceleratorConfig {
+    fn default() -> Self {
+        AcceleratorConfig {
+            pe_dim: 16,
+            tile_m: 16,
+            tile_n: 16,
+            tile_k: 16,
+            // 16 KiW psum regs: a 16-wide row of 64 psum tiles (k' = 1024).
+            psum_regs: 16 * 1024,
+            // 256 KiW (~512 KB at 16-bit) internal SRAM.
+            sram_words: 256 * 1024,
+            dram_bandwidth: 16,
+            dram_turnaround: 12,
+            word_bytes: 2,
+        }
+    }
+}
+
+impl AcceleratorConfig {
+    /// The 8×8 variant the paper also cites.
+    pub fn small() -> Self {
+        AcceleratorConfig {
+            pe_dim: 8,
+            tile_m: 8,
+            tile_n: 8,
+            tile_k: 8,
+            psum_regs: 4 * 1024,
+            sram_words: 64 * 1024,
+            ..Default::default()
+        }
+    }
+
+    pub fn pe_array(&self) -> PeArray {
+        PeArray::square(self.pe_dim)
+    }
+
+    pub fn dram(&self) -> Dram {
+        Dram::new(self.dram_bandwidth, self.dram_turnaround)
+    }
+
+    pub fn sram(&self) -> Sram {
+        Sram::new(self.sram_words)
+    }
+
+    pub fn regfile(&self) -> RegFile {
+        RegFile::new(self.psum_regs)
+    }
+
+    /// Tiling with psum windows sized to the register capacity:
+    /// k' = floor(P / m)·k-aligned, m' likewise (Fig. 2's k', m').
+    pub fn tiling(&self) -> Tiling {
+        let t = Tiling::new(self.tile_m, self.tile_n, self.tile_k);
+        let kp = (self.psum_regs / self.tile_m / self.tile_k).max(1) * self.tile_k;
+        let mp = (self.psum_regs / self.tile_k / self.tile_m).max(1) * self.tile_m;
+        t.with_kp(kp).with_mp(mp)
+    }
+
+    pub fn from_toml(doc: &TomlDoc) -> Self {
+        let d = AcceleratorConfig::default();
+        AcceleratorConfig {
+            pe_dim: doc.get_u64("accelerator.pe_dim", d.pe_dim),
+            tile_m: doc.get_u64("accelerator.tile_m", d.tile_m),
+            tile_n: doc.get_u64("accelerator.tile_n", d.tile_n),
+            tile_k: doc.get_u64("accelerator.tile_k", d.tile_k),
+            psum_regs: doc.get_u64("accelerator.psum_regs", d.psum_regs),
+            sram_words: doc.get_u64("accelerator.sram_words", d.sram_words),
+            dram_bandwidth: doc.get_u64("accelerator.dram_bandwidth", d.dram_bandwidth),
+            dram_turnaround: doc.get_u64("accelerator.dram_turnaround", d.dram_turnaround),
+            word_bytes: doc.get_u64("accelerator.word_bytes", d.word_bytes),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.pe_dim > 0, "pe_dim must be positive");
+        anyhow::ensure!(
+            self.tile_m > 0 && self.tile_n > 0 && self.tile_k > 0,
+            "tile sizes must be positive"
+        );
+        anyhow::ensure!(
+            self.psum_regs >= self.tile_m * self.tile_k,
+            "psum regs must hold at least one output tile ({} < {})",
+            self.psum_regs,
+            self.tile_m * self.tile_k
+        );
+        anyhow::ensure!(
+            self.sram_words >= self.tile_m * self.tile_n + self.tile_n * self.tile_k,
+            "SRAM must hold one input + one weight tile"
+        );
+        anyhow::ensure!(self.dram_bandwidth > 0, "dram_bandwidth must be positive");
+        Ok(())
+    }
+}
+
+/// Energy cost table (per word / per MAC), Ayaka-calibrated ratios.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EnergyConfig {
+    /// Energy per DRAM word access (pJ).
+    pub dram_pj: f64,
+    /// Energy per SRAM word access (pJ).
+    pub sram_pj: f64,
+    /// Energy per psum register access (pJ).
+    pub reg_pj: f64,
+    /// Energy per MAC (pJ).
+    pub mac_pj: f64,
+}
+
+impl Default for EnergyConfig {
+    fn default() -> Self {
+        // Eyeriss/Ayaka-style ratios: DRAM ≈ 200×, SRAM ≈ 6×, reg ≈ 1× MAC.
+        EnergyConfig { dram_pj: 200.0, sram_pj: 6.0, reg_pj: 1.0, mac_pj: 1.0 }
+    }
+}
+
+impl EnergyConfig {
+    pub fn from_toml(doc: &TomlDoc) -> Self {
+        let d = EnergyConfig::default();
+        EnergyConfig {
+            dram_pj: doc.get_f64("energy.dram_pj", d.dram_pj),
+            sram_pj: doc.get_f64("energy.sram_pj", d.sram_pj),
+            reg_pj: doc.get_f64("energy.reg_pj", d.reg_pj),
+            mac_pj: doc.get_f64("energy.mac_pj", d.mac_pj),
+        }
+    }
+}
+
+/// Top-level config bundle.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    pub accelerator: AcceleratorConfig,
+    pub energy: EnergyConfig,
+}
+
+impl Config {
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let doc = TomlDoc::parse(&text)?;
+        let cfg = Config {
+            accelerator: AcceleratorConfig::from_toml(&doc),
+            energy: EnergyConfig::from_toml(&doc),
+        };
+        cfg.accelerator.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        AcceleratorConfig::default().validate().unwrap();
+        AcceleratorConfig::small().validate().unwrap();
+    }
+
+    #[test]
+    fn tiling_windows_fit_regfile() {
+        let c = AcceleratorConfig::default();
+        let t = c.tiling();
+        // k'·m and m'·k must fit in the register file.
+        assert!(t.kp.unwrap() * c.tile_m <= c.psum_regs);
+        assert!(t.mp.unwrap() * c.tile_k <= c.psum_regs);
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let doc = TomlDoc::parse(
+            "[accelerator]\npe_dim = 8\ntile_m = 8\ntile_n = 8\ntile_k = 8\n\
+             [energy]\ndram_pj = 160.0",
+        )
+        .unwrap();
+        let a = AcceleratorConfig::from_toml(&doc);
+        assert_eq!(a.pe_dim, 8);
+        assert_eq!(a.tile_m, 8);
+        // untouched fields keep defaults
+        assert_eq!(a.sram_words, AcceleratorConfig::default().sram_words);
+        let e = EnergyConfig::from_toml(&doc);
+        assert_eq!(e.dram_pj, 160.0);
+        assert_eq!(e.mac_pj, 1.0);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = AcceleratorConfig::default();
+        c.psum_regs = 1;
+        assert!(c.validate().is_err());
+        let mut c2 = AcceleratorConfig::default();
+        c2.sram_words = 1;
+        assert!(c2.validate().is_err());
+    }
+}
+
+#[cfg(test)]
+mod file_tests {
+    use super::*;
+
+    #[test]
+    fn ships_loadable_config_files() {
+        // the configs/ directory must stay in sync with the parser
+        for name in ["configs/default.toml", "configs/small8x8.toml"] {
+            let path = Path::new(name);
+            if !path.exists() {
+                // tests may run from another cwd; resolve via manifest dir
+                let alt = Path::new(env!("CARGO_MANIFEST_DIR")).join(name);
+                let cfg = Config::load(&alt).unwrap();
+                cfg.accelerator.validate().unwrap();
+                continue;
+            }
+            let cfg = Config::load(path).unwrap();
+            cfg.accelerator.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn default_toml_matches_builtin_defaults() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/default.toml");
+        let cfg = Config::load(&path).unwrap();
+        assert_eq!(cfg.accelerator, AcceleratorConfig::default());
+        assert_eq!(cfg.energy, EnergyConfig::default());
+    }
+}

@@ -1,0 +1,241 @@
+//! Length-aware request batcher.
+//!
+//! The AOT step compiles one executable per (batch, seq) bucket; the
+//! batcher routes each request to the bucket with the smallest `seq ≥
+//! len` (minimising padding — padding wastes exactly the EMA the paper
+//! fights), accumulates per-seq queues, and flushes a batch when the
+//! largest compiled batch size for that seq fills up or the oldest
+//! request exceeds the linger deadline.
+
+use super::request::Request;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// One compiled (batch, seq) bucket and its artifact name.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bucket {
+    pub batch: u64,
+    pub seq: u64,
+    pub artifact: String,
+}
+
+/// A flushed batch: requests padded/stacked to a concrete bucket.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub bucket: Bucket,
+    pub requests: Vec<Request>,
+    pub formed: Instant,
+}
+
+impl Batch {
+    /// Flattened `[batch, seq]` token-id tensor, zero-padded.
+    pub fn padded_ids(&self) -> Vec<i32> {
+        let (b, s) = (self.bucket.batch as usize, self.bucket.seq as usize);
+        let mut ids = vec![0i32; b * s];
+        for (row, req) in self.requests.iter().enumerate() {
+            ids[row * s..row * s + req.len()].copy_from_slice(&req.tokens);
+        }
+        ids
+    }
+
+    /// Padding overhead: padded tokens / bucket capacity.
+    pub fn padding_fraction(&self) -> f64 {
+        let cap = (self.bucket.batch * self.bucket.seq) as f64;
+        let used: usize = self.requests.iter().map(|r| r.len()).sum();
+        1.0 - used as f64 / cap
+    }
+}
+
+/// The batcher: per-seq pending queues over a fixed bucket set.
+#[derive(Debug)]
+pub struct Batcher {
+    /// seq -> batch sizes available (ascending), artifact per (b, s).
+    by_seq: BTreeMap<u64, Vec<(u64, String)>>,
+    pending: BTreeMap<u64, Vec<Request>>,
+    /// Flush a non-full batch once its oldest request waited this long.
+    pub linger: Duration,
+}
+
+impl Batcher {
+    /// Build from manifest buckets `(batch, seq, artifact)`.
+    pub fn new(buckets: &[(u64, u64, String)], linger: Duration) -> anyhow::Result<Self> {
+        anyhow::ensure!(!buckets.is_empty(), "no buckets");
+        let mut by_seq: BTreeMap<u64, Vec<(u64, String)>> = BTreeMap::new();
+        for (b, s, name) in buckets {
+            by_seq.entry(*s).or_default().push((*b, name.clone()));
+        }
+        for v in by_seq.values_mut() {
+            v.sort_by_key(|(b, _)| *b);
+        }
+        Ok(Batcher { by_seq, pending: BTreeMap::new(), linger })
+    }
+
+    /// Largest request length any bucket can serve.
+    pub fn max_len(&self) -> u64 {
+        *self.by_seq.keys().last().unwrap()
+    }
+
+    /// The seq bucket a request of `len` tokens routes to.
+    pub fn route(&self, len: usize) -> anyhow::Result<u64> {
+        self.by_seq
+            .range(len as u64..)
+            .next()
+            .map(|(s, _)| *s)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "request of {len} tokens exceeds the largest bucket ({}); \
+                     chunk it upstream",
+                    self.max_len()
+                )
+            })
+    }
+
+    /// Enqueue a request; returns its seq bucket.
+    pub fn push(&mut self, req: Request) -> anyhow::Result<u64> {
+        let seq = self.route(req.len())?;
+        self.pending.entry(seq).or_default().push(req);
+        Ok(seq)
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.values().map(|v| v.len()).sum()
+    }
+
+    /// Pop at most one ready batch.  A seq queue is ready when it can
+    /// fill its largest batch bucket, or its oldest request has lingered
+    /// past the deadline (then the smallest sufficient bucket is used).
+    pub fn pop_ready(&mut self, now: Instant) -> Option<Batch> {
+        let linger = self.linger;
+        let mut choice: Option<(u64, usize)> = None; // (seq, take)
+        for (&seq, queue) in &self.pending {
+            if queue.is_empty() {
+                continue;
+            }
+            let sizes = &self.by_seq[&seq];
+            let max_b = sizes.last().unwrap().0 as usize;
+            if queue.len() >= max_b {
+                choice = Some((seq, max_b));
+                break;
+            }
+            let oldest = queue.first().unwrap().arrived;
+            if now.duration_since(oldest) >= linger {
+                choice = Some((seq, queue.len()));
+                break;
+            }
+        }
+        let (seq, take) = choice?;
+        let queue = self.pending.get_mut(&seq).unwrap();
+        let take = take.min(queue.len());
+        let reqs: Vec<Request> = queue.drain(..take).collect();
+        // smallest compiled batch size that fits `take` requests
+        let (batch, artifact) = self.by_seq[&seq]
+            .iter()
+            .find(|(b, _)| *b as usize >= take)
+            .cloned()
+            .unwrap_or_else(|| self.by_seq[&seq].last().cloned().unwrap());
+        Some(Batch {
+            bucket: Bucket { batch, seq, artifact },
+            requests: reqs,
+            formed: now,
+        })
+    }
+
+    /// Flush everything regardless of deadlines (shutdown / draining).
+    pub fn drain(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let far_future = Instant::now() + Duration::from_secs(3600);
+        // force deadline expiry by zeroing linger temporarily
+        let saved = self.linger;
+        self.linger = Duration::ZERO;
+        while let Some(b) = self.pop_ready(far_future) {
+            out.push(b);
+        }
+        self.linger = saved;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buckets() -> Vec<(u64, u64, String)> {
+        vec![
+            (1, 32, "b1_s32".into()),
+            (1, 64, "b1_s64".into()),
+            (4, 64, "b4_s64".into()),
+            (8, 64, "b8_s64".into()),
+            (1, 128, "b1_s128".into()),
+        ]
+    }
+
+    fn batcher() -> Batcher {
+        Batcher::new(&buckets(), Duration::from_millis(5)).unwrap()
+    }
+
+    fn req(id: u64, len: usize) -> Request {
+        Request::new(id, vec![1; len])
+    }
+
+    #[test]
+    fn routes_to_smallest_sufficient_seq() {
+        let b = batcher();
+        assert_eq!(b.route(10).unwrap(), 32);
+        assert_eq!(b.route(32).unwrap(), 32);
+        assert_eq!(b.route(33).unwrap(), 64);
+        assert_eq!(b.route(128).unwrap(), 128);
+        assert!(b.route(129).is_err());
+    }
+
+    #[test]
+    fn fills_largest_batch_when_demand_high() {
+        let mut b = batcher();
+        for i in 0..9 {
+            b.push(req(i, 50)).unwrap();
+        }
+        let batch = b.pop_ready(Instant::now()).unwrap();
+        assert_eq!(batch.bucket.batch, 8);
+        assert_eq!(batch.bucket.artifact, "b8_s64");
+        assert_eq!(batch.requests.len(), 8);
+        assert_eq!(b.pending_count(), 1);
+    }
+
+    #[test]
+    fn linger_flushes_partial_batch_into_smallest_fit() {
+        let mut b = batcher();
+        b.push(req(1, 50)).unwrap();
+        b.push(req(2, 40)).unwrap();
+        // before the deadline: nothing
+        assert!(b.pop_ready(Instant::now()).is_none());
+        // after the deadline: both flushed into the 4-batch (smallest >= 2)
+        let later = Instant::now() + Duration::from_millis(10);
+        let batch = b.pop_ready(later).unwrap();
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.bucket.batch, 4);
+    }
+
+    #[test]
+    fn padded_ids_layout() {
+        let bucket = Bucket { batch: 2, seq: 4, artifact: "x".into() };
+        let batch = Batch {
+            bucket,
+            requests: vec![Request::new(1, vec![7, 8, 9]), Request::new(2, vec![5])],
+            formed: Instant::now(),
+        };
+        assert_eq!(batch.padded_ids(), vec![7, 8, 9, 0, 5, 0, 0, 0]);
+        assert!((batch.padding_fraction() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drain_empties_all_queues() {
+        let mut b = batcher();
+        for i in 0..3 {
+            b.push(req(i, 20)).unwrap();
+        }
+        b.push(req(9, 100)).unwrap();
+        let batches = b.drain();
+        assert_eq!(b.pending_count(), 0);
+        let total: usize = batches.iter().map(|x| x.requests.len()).sum();
+        assert_eq!(total, 4);
+    }
+}

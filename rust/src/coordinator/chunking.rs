@@ -1,0 +1,160 @@
+//! Long-sequence chunking — the paper's Table III footnote made real:
+//! *"For sequences exceeding the maximum length, they are usually
+//! segmented into chunks for inference."*
+//!
+//! A request longer than the largest compiled bucket is split into
+//! overlapping chunks; each chunk is served independently (the EMA
+//! analysis is per-chunk GEMM — more rows in the input matrix, same
+//! computation flow) and the logits are stitched back, preferring the
+//! deeper-context half of each overlap.
+
+use super::request::Response;
+use super::server::Coordinator;
+use anyhow::Result;
+
+/// Chunking policy.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkPolicy {
+    /// Chunk length in tokens (≤ the coordinator's max bucket).
+    pub chunk_len: usize,
+    /// Tokens of context overlap between consecutive chunks.
+    pub overlap: usize,
+}
+
+impl ChunkPolicy {
+    pub fn new(chunk_len: usize, overlap: usize) -> Result<Self> {
+        anyhow::ensure!(chunk_len > 0, "chunk_len must be positive");
+        anyhow::ensure!(overlap < chunk_len, "overlap {overlap} >= chunk_len {chunk_len}");
+        Ok(ChunkPolicy { chunk_len, overlap })
+    }
+
+    /// Split `tokens` into chunk ranges `(start, end)` with overlap.
+    pub fn split(&self, len: usize) -> Vec<(usize, usize)> {
+        assert!(len > 0);
+        if len <= self.chunk_len {
+            return vec![(0, len)];
+        }
+        let stride = self.chunk_len - self.overlap;
+        let mut out = Vec::new();
+        let mut start = 0;
+        loop {
+            let end = (start + self.chunk_len).min(len);
+            out.push((start, end));
+            if end == len {
+                return out;
+            }
+            start += stride;
+        }
+    }
+
+    /// For chunk `idx` of `n` spanning `(start, end)`, the sub-range of
+    /// positions whose logits this chunk *owns* after stitching: overlap
+    /// halves go to the chunk with deeper left context.
+    pub fn owned_range(&self, idx: usize, n: usize, start: usize, end: usize) -> (usize, usize) {
+        let half = self.overlap / 2;
+        let lo = if idx == 0 { start } else { start + self.overlap - half };
+        let hi = if idx + 1 == n { end } else { end - half };
+        (lo, hi)
+    }
+}
+
+/// Serve one over-length request by chunking; returns stitched logits
+/// (`len × vocab`) plus the per-chunk artifacts used.
+pub fn serve_chunked(
+    coordinator: &Coordinator,
+    tokens: &[i32],
+    policy: ChunkPolicy,
+) -> Result<(Vec<f32>, Vec<String>)> {
+    anyhow::ensure!(!tokens.is_empty(), "empty request");
+    anyhow::ensure!(
+        policy.chunk_len as u64 <= coordinator.max_len(),
+        "chunk_len {} exceeds max bucket {}",
+        policy.chunk_len,
+        coordinator.max_len()
+    );
+    let ranges = policy.split(tokens.len());
+    let requests: Vec<Vec<i32>> = ranges
+        .iter()
+        .map(|&(s, e)| tokens[s..e].to_vec())
+        .collect();
+    let responses: Vec<Response> = coordinator.run_closed_loop(requests)?;
+    let vocab = responses[0].vocab;
+    let mut logits = vec![0f32; tokens.len() * vocab];
+    let mut artifacts = Vec::with_capacity(responses.len());
+    let n = ranges.len();
+    for (idx, (resp, &(start, end))) in responses.iter().zip(&ranges).enumerate() {
+        anyhow::ensure!(resp.vocab == vocab, "vocab drift across chunks");
+        let (lo, hi) = policy.owned_range(idx, n, start, end);
+        for pos in lo..hi {
+            let src = (pos - start) * vocab;
+            let dst = pos * vocab;
+            logits[dst..dst + vocab].copy_from_slice(&resp.logits[src..src + vocab]);
+        }
+        artifacts.push(resp.artifact.clone());
+    }
+    Ok((logits, artifacts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_request_is_one_chunk() {
+        let p = ChunkPolicy::new(64, 16).unwrap();
+        assert_eq!(p.split(40), vec![(0, 40)]);
+        assert_eq!(p.split(64), vec![(0, 64)]);
+    }
+
+    #[test]
+    fn chunks_cover_with_overlap() {
+        let p = ChunkPolicy::new(64, 16).unwrap();
+        let ranges = p.split(200);
+        assert_eq!(ranges.first().unwrap().0, 0);
+        assert_eq!(ranges.last().unwrap().1, 200);
+        for w in ranges.windows(2) {
+            assert_eq!(w[0].1 - w[1].0, 16, "overlap preserved");
+        }
+        // stride = 48: starts at 0, 48, 96, 144 (end 200 <= 144+64)
+        assert_eq!(ranges, vec![(0, 64), (48, 112), (96, 160), (144, 200)]);
+    }
+
+    #[test]
+    fn owned_ranges_partition_the_sequence() {
+        let p = ChunkPolicy::new(64, 16).unwrap();
+        for len in [65usize, 100, 200, 513, 1000] {
+            let ranges = p.split(len);
+            let n = ranges.len();
+            let mut covered = vec![0u8; len];
+            for (idx, &(s, e)) in ranges.iter().enumerate() {
+                let (lo, hi) = p.owned_range(idx, n, s, e);
+                assert!(s <= lo && hi <= e);
+                for c in &mut covered[lo..hi] {
+                    *c += 1;
+                }
+            }
+            assert!(
+                covered.iter().all(|&c| c == 1),
+                "len {len}: positions covered {:?} times",
+                covered.iter().filter(|&&c| c != 1).count()
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_bad_policies() {
+        assert!(ChunkPolicy::new(0, 0).is_err());
+        assert!(ChunkPolicy::new(16, 16).is_err());
+        assert!(ChunkPolicy::new(16, 32).is_err());
+    }
+
+    #[test]
+    fn zero_overlap_tiles_exactly() {
+        let p = ChunkPolicy::new(50, 0).unwrap();
+        let ranges = p.split(120);
+        assert_eq!(ranges, vec![(0, 50), (50, 100), (100, 120)]);
+        for (idx, &(s, e)) in ranges.iter().enumerate() {
+            assert_eq!(p.owned_range(idx, 3, s, e), (s, e));
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! The TAS decision engine — the paper's §III-A rule applied per request
+//! bucket, at the coordinator level.
+//!
+//! For a bucket of `M = batch × seq` tokens and a projection with output
+//! width `K`, choose input-stationary iff `M < K` (`N(M−K) < 0`).  The
+//! compile path (`python/compile/model.py::scheme_plan`) made the same
+//! decision when lowering each artifact; [`verify_against_manifest`]
+//! asserts the two implementations agree — a cross-language contract
+//! test run at coordinator startup.
+
+use crate::dataflow::Scheme;
+use crate::runtime::Manifest;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Scheme choice per linear projection of the served model.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SchemePlan {
+    pub tokens: u64,
+    /// projection name -> resolved scheme.
+    pub choices: BTreeMap<&'static str, Scheme>,
+}
+
+/// Apply the TAS rule to every projection of a model with the given dims.
+pub fn scheme_plan(tokens: u64, hidden: u64, ffn: u64, vocab: u64) -> SchemePlan {
+    let pick = |k: u64| {
+        if tokens < k {
+            Scheme::IsOs
+        } else {
+            Scheme::WsOs
+        }
+    };
+    let mut choices = BTreeMap::new();
+    choices.insert("qkv", pick(hidden));
+    choices.insert("attn_out", pick(hidden));
+    choices.insert("ffn1", pick(ffn));
+    choices.insert("ffn2", pick(hidden));
+    choices.insert("lm_head", pick(vocab));
+    SchemePlan { tokens, choices }
+}
+
+fn scheme_to_manifest_name(s: Scheme) -> &'static str {
+    match s {
+        Scheme::IsOs => "is_os",
+        Scheme::WsOs => "ws_os",
+        _ => unreachable!("TAS only resolves to the hybrids"),
+    }
+}
+
+/// Assert that the rust rule reproduces the schemes the python compile
+/// path recorded for every bert artifact in the manifest.
+pub fn verify_against_manifest(manifest: &Manifest) -> Result<()> {
+    let hidden = *manifest.model.get("hidden").unwrap_or(&0);
+    let ffn = *manifest.model.get("ffn").unwrap_or(&0);
+    let vocab = *manifest.model.get("vocab").unwrap_or(&0);
+    anyhow::ensure!(
+        hidden > 0 && ffn > 0 && vocab > 0,
+        "manifest model dims missing"
+    );
+    for art in manifest.artifacts.iter().filter(|a| a.kind == "bert") {
+        let tokens = art
+            .tokens()
+            .ok_or_else(|| anyhow::anyhow!("{}: no batch/seq", art.name))?;
+        let plan = scheme_plan(tokens, hidden, ffn, vocab);
+        for (proj, want) in &art.schemes {
+            let got = plan
+                .choices
+                .get(proj.as_str())
+                .ok_or_else(|| anyhow::anyhow!("{}: unknown projection '{proj}'", art.name))?;
+            let got_name = scheme_to_manifest_name(*got);
+            anyhow::ensure!(
+                got_name == want,
+                "{}: projection '{proj}': compile path chose {want}, \
+                 coordinator rule chose {got_name} (M={tokens})",
+                art.name
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_flips_per_projection() {
+        // M=256 vs hidden=128 (WS), ffn=256 (WS: M >= K), vocab=512 (IS)
+        let p = scheme_plan(256, 128, 256, 512);
+        assert_eq!(p.choices["qkv"], Scheme::WsOs);
+        assert_eq!(p.choices["ffn1"], Scheme::WsOs);
+        assert_eq!(p.choices["lm_head"], Scheme::IsOs);
+    }
+
+    #[test]
+    fn small_batches_prefer_input_stationary() {
+        let p = scheme_plan(32, 256, 1024, 1024);
+        assert!(p.choices.values().all(|s| *s == Scheme::IsOs));
+    }
+
+    #[test]
+    fn verify_catches_mismatch() {
+        use crate::util::json::Json;
+        // Manifest whose recorded scheme contradicts the rule (M=64 <
+        // hidden=128 should be is_os, manifest says ws_os).
+        let j = Json::parse(
+            r#"{"version":1,"weights_bin":"w.bin",
+                "model":{"hidden":128,"ffn":256,"vocab":512},
+                "artifacts":[{"name":"bert_b2_s32","hlo":"x.hlo.txt",
+                  "kind":"bert","batch":2,"seq":32,
+                  "args":[],"outputs":[],
+                  "schemes":{"qkv":"ws_os"},"flops":1}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::from_json(&j).unwrap();
+        let err = verify_against_manifest(&m).unwrap_err().to_string();
+        assert!(err.contains("qkv"), "{err}");
+    }
+
+    #[test]
+    fn verify_accepts_consistent_manifest() {
+        use crate::util::json::Json;
+        let j = Json::parse(
+            r#"{"version":1,"weights_bin":"w.bin",
+                "model":{"hidden":128,"ffn":256,"vocab":512},
+                "artifacts":[{"name":"bert_b2_s32","hlo":"x.hlo.txt",
+                  "kind":"bert","batch":2,"seq":32,
+                  "args":[],"outputs":[],
+                  "schemes":{"qkv":"is_os","ffn1":"is_os","lm_head":"is_os"},
+                  "flops":1}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::from_json(&j).unwrap();
+        verify_against_manifest(&m).unwrap();
+    }
+}

@@ -1,0 +1,175 @@
+//! Serving + accelerator-side metrics.
+//!
+//! Besides the usual latency/throughput, the coordinator accounts the
+//! *dataflow* quantities the paper cares about for every batch it
+//! dispatches: EMA words under TAS vs the fixed baselines, computed from
+//! the analytic model on the served bucket's GEMMs.
+
+use crate::dataflow::Scheme;
+use crate::energy::workload_read_ema;
+use crate::gemm::Tiling;
+use crate::models::GemmWorkload;
+use crate::util::stats::Summary;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Aggregated over one coordinator lifetime. Thread-safe.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    batches: u64,
+    tokens: u64,
+    padded_tokens: u64,
+    latency: Summary,
+    batch_exec: Summary,
+    ema_naive_words: u64,
+    ema_ayaka_words: u64,
+    ema_tas_words: u64,
+    flops: u64,
+}
+
+/// Point-in-time snapshot for reporting.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub tokens: u64,
+    pub padded_tokens: u64,
+    pub latency_p50_ms: f64,
+    pub latency_p99_ms: f64,
+    pub latency_mean_ms: f64,
+    pub batch_exec_mean_ms: f64,
+    pub ema_naive_words: u64,
+    pub ema_ayaka_words: u64,
+    pub ema_tas_words: u64,
+    pub flops: u64,
+}
+
+impl MetricsSnapshot {
+    /// (A−C)/A — the Table IV headline, live.
+    pub fn ema_reduction_vs_naive(&self) -> f64 {
+        if self.ema_naive_words == 0 {
+            0.0
+        } else {
+            1.0 - self.ema_tas_words as f64 / self.ema_naive_words as f64
+        }
+    }
+
+    pub fn ema_reduction_vs_ayaka(&self) -> f64 {
+        if self.ema_ayaka_words == 0 {
+            0.0
+        } else {
+            1.0 - self.ema_tas_words as f64 / self.ema_ayaka_words as f64
+        }
+    }
+
+    pub fn padding_fraction(&self) -> f64 {
+        let total = self.tokens + self.padded_tokens;
+        if total == 0 {
+            0.0
+        } else {
+            self.padded_tokens as f64 / total as f64
+        }
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    /// Record one dispatched batch with its accelerator-side accounting.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_batch(
+        &self,
+        n_requests: usize,
+        real_tokens: u64,
+        padded_tokens: u64,
+        exec: Duration,
+        gemms: &[GemmWorkload],
+        tiling: &Tiling,
+        flops: u64,
+    ) {
+        let naive = workload_read_ema(Scheme::Naive, gemms, tiling);
+        let ayaka = crate::energy::ayaka::ayaka_workload_read_ema(gemms);
+        let tas = workload_read_ema(Scheme::Tas, gemms, tiling);
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.requests += n_requests as u64;
+        g.tokens += real_tokens;
+        g.padded_tokens += padded_tokens;
+        g.batch_exec.push(exec.as_secs_f64() * 1e3);
+        g.ema_naive_words += naive;
+        g.ema_ayaka_words += ayaka;
+        g.ema_tas_words += tas;
+        g.flops += flops;
+    }
+
+    /// Record one completed request's end-to-end latency.
+    pub fn record_latency(&self, latency: Duration) {
+        self.inner.lock().unwrap().latency.push(latency.as_secs_f64() * 1e3);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            requests: g.requests,
+            batches: g.batches,
+            tokens: g.tokens,
+            padded_tokens: g.padded_tokens,
+            latency_p50_ms: g.latency.p50(),
+            latency_p99_ms: g.latency.p99(),
+            latency_mean_ms: g.latency.mean(),
+            batch_exec_mean_ms: g.batch_exec.mean(),
+            ema_naive_words: g.ema_naive_words,
+            ema_ayaka_words: g.ema_ayaka_words,
+            ema_tas_words: g.ema_tas_words,
+            flops: g.flops,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::GemmShape;
+
+    fn gemms() -> Vec<GemmWorkload> {
+        vec![GemmWorkload {
+            name: "qkv",
+            shape: GemmShape::new(64, 128, 128),
+            count: 2,
+        }]
+    }
+
+    #[test]
+    fn batch_accounting_accumulates() {
+        let m = Metrics::new();
+        m.record_batch(2, 100, 28, Duration::from_millis(3), &gemms(),
+                       &Tiling::square(16), 1000);
+        m.record_batch(1, 60, 4, Duration::from_millis(5), &gemms(),
+                       &Tiling::square(16), 500);
+        m.record_latency(Duration::from_millis(4));
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.tokens, 160);
+        assert_eq!(s.flops, 1500);
+        assert!(s.ema_reduction_vs_naive() > 0.9);
+        assert!(s.ema_reduction_vs_ayaka() > 0.5);
+        assert!((s.padding_fraction() - 32.0 / 192.0).abs() < 1e-9);
+        assert!(s.latency_p50_ms > 0.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_sane() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.ema_reduction_vs_naive(), 0.0);
+        assert_eq!(s.padding_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,26 @@
+//! L3 serving coordinator — the system around the paper's contribution.
+//!
+//! Requests (token sequences of *varying length*, the paper's motivating
+//! regime) enter a queue; the [`batcher`] routes each to a (batch, seq)
+//! bucket compiled at AOT time; the [`decisions`] engine applies the TAS
+//! rule per linear projection for that bucket (the same choice the
+//! compile path baked into the artifact — cross-checked at startup); a
+//! dedicated device thread executes the artifact through the PJRT
+//! [`crate::runtime::Engine`]; [`metrics`] aggregates latency and the
+//! accelerator-side EMA/energy savings.
+//!
+//! Python never runs here: the binary serves entirely from `artifacts/`.
+
+pub mod batcher;
+pub mod chunking;
+pub mod decisions;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use batcher::{Batch, Batcher, Bucket};
+pub use chunking::{serve_chunked, ChunkPolicy};
+pub use decisions::{scheme_plan, SchemePlan};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{Request, RequestId, Response};
+pub use server::{Coordinator, CoordinatorOptions};

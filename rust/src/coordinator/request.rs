@@ -1,0 +1,84 @@
+//! Request/response types crossing the coordinator boundary.
+
+use std::time::{Duration, Instant};
+
+/// Monotonic request identifier.
+pub type RequestId = u64;
+
+/// An inference request: a token-id sequence (already tokenised).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub tokens: Vec<i32>,
+    pub arrived: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, tokens: Vec<i32>) -> Self {
+        assert!(!tokens.is_empty(), "empty request");
+        Request { id, tokens, arrived: Instant::now() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// A completed inference.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: RequestId,
+    /// Logits for the request's own (unpadded) tokens: `[len, vocab]`.
+    pub logits: Vec<f32>,
+    pub vocab: usize,
+    /// Queue + batch + execute time.
+    pub latency: Duration,
+    /// Which artifact served it, e.g. "bert_b4_s64".
+    pub artifact: String,
+    /// Tokens of padding added to fit the bucket.
+    pub padded_tokens: usize,
+}
+
+impl Response {
+    /// Argmax token id per position — a smoke-usable prediction.
+    pub fn argmax_ids(&self) -> Vec<i32> {
+        self.logits
+            .chunks_exact(self.vocab)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_per_position() {
+        let r = Response {
+            id: 1,
+            logits: vec![0.1, 0.9, 0.0, /* pos0 -> 1 */ 5.0, -1.0, 2.0 /* pos1 -> 0 */],
+            vocab: 3,
+            latency: Duration::from_millis(1),
+            artifact: "a".into(),
+            padded_tokens: 0,
+        };
+        assert_eq!(r.argmax_ids(), vec![1, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty request")]
+    fn empty_request_rejected() {
+        Request::new(1, vec![]);
+    }
+}

@@ -1,0 +1,393 @@
+//! The coordinator runtime: queue thread + device thread wiring.
+//!
+//! Thread topology (std threads — the offline environment vendors no
+//! tokio; a two-thread pipeline is exactly what a single-accelerator
+//! serving node needs):
+//!
+//! ```text
+//!  submit()        ┌──────────────┐  Batch   ┌──────────────────┐
+//!  ───────────────▶│ batcher loop │─────────▶│ device loop      │
+//!   (mpsc)         │ route+linger │  (mpsc)  │ PJRT Engine      │
+//!                  └──────────────┘          │ execute_b, split │
+//!                                            └───────┬──────────┘
+//!                       Response ◀───── per-request channel ◀──┘
+//! ```
+//!
+//! The PJRT [`Engine`] is constructed *inside* the device thread (its
+//! handles are not `Send`); startup errors propagate through a oneshot.
+
+use super::batcher::{Batch, Batcher};
+use super::decisions;
+use super::metrics::Metrics;
+use super::request::{Request, RequestId, Response};
+use crate::gemm::Tiling;
+use crate::models::GemmWorkload;
+use crate::runtime::{Engine, HostTensor};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Tuning knobs.
+#[derive(Clone, Debug)]
+pub struct CoordinatorOptions {
+    /// Artifacts directory (manifest + HLO + weights).
+    pub artifacts_dir: PathBuf,
+    /// Batch linger deadline.
+    pub linger: Duration,
+    /// Compile every artifact at startup (vs lazily on first use).
+    pub preload_all: bool,
+    /// Tile config used for the accelerator-side EMA accounting.
+    pub tiling: Tiling,
+}
+
+impl Default for CoordinatorOptions {
+    fn default() -> Self {
+        CoordinatorOptions {
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            linger: Duration::from_millis(2),
+            preload_all: true,
+            tiling: Tiling::square(16),
+        }
+    }
+}
+
+enum ToBatcher {
+    Submit(Request, Sender<Response>),
+    Shutdown,
+}
+
+struct DeviceJob {
+    batch: Batch,
+    replies: Vec<Sender<Response>>,
+}
+
+enum ToDevice {
+    Run(DeviceJob),
+    Shutdown,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    to_batcher: Sender<ToBatcher>,
+    batcher_handle: Option<std::thread::JoinHandle<()>>,
+    device_handle: Option<std::thread::JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    /// Model dims from the manifest (vocab/hidden/...).
+    pub model: BTreeMap<String, u64>,
+    max_len: u64,
+}
+
+impl Coordinator {
+    /// Start the coordinator: loads the manifest, verifies the compile
+    /// path's TAS decisions against the rust rule, spawns both loops.
+    pub fn start(opts: CoordinatorOptions) -> Result<Coordinator> {
+        let metrics = Arc::new(Metrics::new());
+
+        // Device thread owns the engine; report startup result back.
+        let (boot_tx, boot_rx) = channel();
+        let (dev_tx, dev_rx) = channel::<ToDevice>();
+        let dev_metrics = metrics.clone();
+        let dev_opts = opts.clone();
+        let device_handle = std::thread::Builder::new()
+            .name("tas-device".into())
+            .spawn(move || device_loop(dev_opts, dev_rx, boot_tx, dev_metrics))
+            .context("spawning device thread")?;
+
+        // Wait for engine boot; receive manifest-derived routing info.
+        let boot: Result<BootInfo> = boot_rx
+            .recv()
+            .context("device thread died before boot")?;
+        let info = boot?;
+
+        let (bat_tx, bat_rx) = channel::<ToBatcher>();
+        let batcher = Batcher::new(&info.buckets, opts.linger)?;
+        let max_len = batcher.max_len();
+        let batcher_handle = std::thread::Builder::new()
+            .name("tas-batcher".into())
+            .spawn(move || batcher_loop(batcher, bat_rx, dev_tx))
+            .context("spawning batcher thread")?;
+
+        Ok(Coordinator {
+            to_batcher: bat_tx,
+            batcher_handle: Some(batcher_handle),
+            device_handle: Some(device_handle),
+            metrics,
+            next_id: AtomicU64::new(1),
+            model: info.model,
+            max_len,
+        })
+    }
+
+    /// Longest request (tokens) the bucket set can serve.
+    pub fn max_len(&self) -> u64 {
+        self.max_len
+    }
+
+    /// Submit a request; returns the receiver for its response.
+    pub fn submit(&self, tokens: Vec<i32>) -> Result<Receiver<Response>> {
+        anyhow::ensure!(!tokens.is_empty(), "empty request");
+        anyhow::ensure!(
+            tokens.len() as u64 <= self.max_len,
+            "request of {} tokens exceeds max bucket {}",
+            tokens.len(),
+            self.max_len
+        );
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        self.to_batcher
+            .send(ToBatcher::Submit(Request::new(id, tokens), tx))
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+        Ok(rx)
+    }
+
+    /// Convenience: submit many requests, wait for all, return responses
+    /// ordered by request id.
+    pub fn run_closed_loop(&self, requests: Vec<Vec<i32>>) -> Result<Vec<Response>> {
+        let rxs: Vec<Receiver<Response>> = requests
+            .into_iter()
+            .map(|t| self.submit(t))
+            .collect::<Result<_>>()?;
+        let mut out = Vec::with_capacity(rxs.len());
+        for rx in rxs {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(120))
+                .context("timed out waiting for response")?;
+            self.metrics.record_latency(resp.latency);
+            out.push(resp);
+        }
+        out.sort_by_key(|r| r.id);
+        Ok(out)
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Graceful shutdown: drain queues, stop threads.
+    pub fn shutdown(mut self) {
+        let _ = self.to_batcher.send(ToBatcher::Shutdown);
+        if let Some(h) = self.batcher_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.device_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.to_batcher.send(ToBatcher::Shutdown);
+        if let Some(h) = self.batcher_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.device_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct BootInfo {
+    buckets: Vec<(u64, u64, String)>,
+    model: BTreeMap<String, u64>,
+}
+
+fn batcher_loop(
+    mut batcher: Batcher,
+    rx: Receiver<ToBatcher>,
+    dev_tx: Sender<ToDevice>,
+) {
+    // request id -> reply channel, carried next to the pending queues
+    let mut replies: BTreeMap<RequestId, Sender<Response>> = BTreeMap::new();
+    let flush = |batcher: &mut Batcher,
+                     replies: &mut BTreeMap<RequestId, Sender<Response>>| {
+        while let Some(batch) = batcher.pop_ready(Instant::now()) {
+            let rs = batch
+                .requests
+                .iter()
+                .filter_map(|r| replies.remove(&r.id))
+                .collect();
+            if dev_tx.send(ToDevice::Run(DeviceJob { batch, replies: rs })).is_err() {
+                return;
+            }
+        }
+    };
+    loop {
+        // Poll with a short timeout so linger deadlines fire.
+        match rx.recv_timeout(Duration::from_millis(1)) {
+            Ok(ToBatcher::Submit(req, tx)) => {
+                replies.insert(req.id, tx);
+                if batcher.push(req).is_err() {
+                    // Unroutable request: reply channel just drops; the
+                    // submitter's recv errors out. (submit() pre-checks
+                    // max_len, so this is defensive.)
+                }
+                flush(&mut batcher, &mut replies);
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                flush(&mut batcher, &mut replies);
+            }
+            Ok(ToBatcher::Shutdown) | Err(_) => {
+                for batch in batcher.drain() {
+                    let rs = batch
+                        .requests
+                        .iter()
+                        .filter_map(|r| replies.remove(&r.id))
+                        .collect();
+                    let _ = dev_tx.send(ToDevice::Run(DeviceJob { batch, replies: rs }));
+                }
+                let _ = dev_tx.send(ToDevice::Shutdown);
+                return;
+            }
+        }
+    }
+}
+
+fn device_loop(
+    opts: CoordinatorOptions,
+    rx: Receiver<ToDevice>,
+    boot_tx: Sender<Result<BootInfo>>,
+    metrics: Arc<Metrics>,
+) {
+    // Boot: engine + contract check. Engine must be built in-thread.
+    let mut engine = match boot_engine(&opts) {
+        Ok(e) => {
+            let info = BootInfo {
+                buckets: e.manifest().bert_buckets(),
+                model: e
+                    .manifest()
+                    .model
+                    .iter()
+                    .map(|(k, v)| (k.clone(), *v))
+                    .collect(),
+            };
+            let _ = boot_tx.send(Ok(info));
+            e
+        }
+        Err(err) => {
+            let _ = boot_tx.send(Err(err));
+            return;
+        }
+    };
+
+    let hidden = *engine.manifest().model.get("hidden").unwrap_or(&0);
+    let ffn = *engine.manifest().model.get("ffn").unwrap_or(&0);
+    let vocab = *engine.manifest().model.get("vocab").unwrap_or(&0) as usize;
+    let n_layers = *engine.manifest().model.get("n_layers").unwrap_or(&1);
+
+    while let Ok(msg) = rx.recv() {
+        let job = match msg {
+            ToDevice::Run(job) => job,
+            ToDevice::Shutdown => return,
+        };
+        let batch = &job.batch;
+        let ids = batch.padded_ids();
+        let (b, s) = (batch.bucket.batch as usize, batch.bucket.seq as usize);
+        let t0 = Instant::now();
+        let result = engine.execute(
+            &batch.bucket.artifact,
+            &[HostTensor::I32(ids, vec![b, s])],
+        );
+        let exec = t0.elapsed();
+
+        // Accelerator-side accounting for this batch.
+        let tokens = (b * s) as u64;
+        let gemms = bucket_gemms(tokens, hidden, ffn, vocab as u64, n_layers);
+        let flops = engine
+            .manifest()
+            .artifact(&batch.bucket.artifact)
+            .map(|a| a.flops)
+            .unwrap_or(0);
+        let real_tokens: u64 = batch.requests.iter().map(|r| r.len() as u64).sum();
+        metrics.record_batch(
+            batch.requests.len(),
+            real_tokens,
+            tokens - real_tokens,
+            exec,
+            &gemms,
+            &opts.tiling,
+            flops,
+        );
+
+        match result {
+            Ok(outputs) => {
+                let logits = match outputs[0].as_f32() {
+                    Ok(l) => l,
+                    Err(_) => continue,
+                };
+                // logits: [b, s, vocab] — slice each request's rows.
+                for (row, (req, reply)) in
+                    batch.requests.iter().zip(&job.replies).enumerate()
+                {
+                    let start = row * s * vocab;
+                    let end = start + req.len() * vocab;
+                    let resp = Response {
+                        id: req.id,
+                        logits: logits[start..end].to_vec(),
+                        vocab,
+                        latency: req.arrived.elapsed(),
+                        artifact: batch.bucket.artifact.clone(),
+                        padded_tokens: s - req.len(),
+                    };
+                    let _ = reply.send(resp);
+                }
+            }
+            Err(err) => {
+                eprintln!("device: executing {}: {err:#}", batch.bucket.artifact);
+                // replies drop -> submitters observe disconnection
+            }
+        }
+    }
+}
+
+fn boot_engine(opts: &CoordinatorOptions) -> Result<Engine> {
+    let mut engine = Engine::load(&opts.artifacts_dir)?;
+    // Cross-language contract: the compile path's TAS choices must match
+    // the rust rule before we serve anything.
+    decisions::verify_against_manifest(engine.manifest())?;
+    if opts.preload_all {
+        engine.preload_all()?;
+    }
+    Ok(engine)
+}
+
+/// The linear-projection GEMMs a bucket of `tokens` induces (per forward
+/// pass), for metrics accounting.
+fn bucket_gemms(tokens: u64, hidden: u64, ffn: u64, vocab: u64, n_layers: u64) -> Vec<GemmWorkload> {
+    use crate::gemm::GemmShape;
+    vec![
+        GemmWorkload {
+            name: "qkv",
+            shape: GemmShape::new(tokens, hidden, hidden),
+            count: 3 * n_layers,
+        },
+        GemmWorkload {
+            name: "attn_out",
+            shape: GemmShape::new(tokens, hidden, hidden),
+            count: n_layers,
+        },
+        GemmWorkload {
+            name: "ffn1",
+            shape: GemmShape::new(tokens, hidden, ffn),
+            count: n_layers,
+        },
+        GemmWorkload {
+            name: "ffn2",
+            shape: GemmShape::new(tokens, ffn, hidden),
+            count: n_layers,
+        },
+        GemmWorkload {
+            name: "lm_head",
+            shape: GemmShape::new(tokens, hidden, vocab),
+            count: 1,
+        },
+    ]
+}
+
+// Full-stack coordinator tests require artifacts; they live in
+// rust/tests/coordinator_integration.rs and skip when absent.

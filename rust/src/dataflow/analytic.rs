@@ -1,0 +1,213 @@
+//! Closed-form EMA model — Table II of the paper, generalised to the
+//! psum windows k'/m' of Fig. 2.
+//!
+//! All counts are in **words** and exact (the tile-count multipliers are
+//! ceilings times whole-matrix word counts, so they hold for ragged shapes
+//! too — the schedule replay in [`crate::sim`] is property-tested to match
+//! these formulas bit-exactly).
+
+use super::Scheme;
+use crate::gemm::{GemmShape, Tiling};
+use crate::util::ceil_div;
+
+/// Per-matrix external memory access, in words.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EmaBreakdown {
+    /// Input-matrix reads.
+    pub input: u64,
+    /// Weight-matrix reads.
+    pub weight: u64,
+    /// Output/psum writes (Table II counts the write direction).
+    pub output: u64,
+}
+
+impl EmaBreakdown {
+    pub fn total(&self) -> u64 {
+        self.input + self.weight + self.output
+    }
+}
+
+/// Table II (+ Fig. 2 windows): EMA of `scheme` on `shape` under `tiling`.
+pub fn ema(scheme: Scheme, shape: &GemmShape, tiling: &Tiling) -> EmaBreakdown {
+    let GemmShape { m, n, k } = *shape;
+    let (mn, nk, mk) = (m * n, n * k, m * k);
+    let tiles_m = ceil_div(m, tiling.tm);
+    let tiles_n = ceil_div(n, tiling.tn);
+    let tiles_k = ceil_div(k, tiling.tk);
+    // Window counts in *tiles* — the same definition the schedule uses.
+    let windows_kp = ceil_div(tiles_k, tiling.window_tiles_k(shape));
+    let windows_mp = ceil_div(tiles_m, tiling.window_tiles_m(shape));
+
+    match scheme.resolve(shape) {
+        // Every MAC fetches both operands and writes its psum: 3·MNK.
+        Scheme::Naive => EmaBreakdown { input: k * mn, weight: m * nk, output: n * mk },
+        // IS: input once; weights re-read per input row-block; psums spill
+        // once per contraction tile.
+        Scheme::Is => EmaBreakdown {
+            input: mn,
+            weight: tiles_m * nk,
+            output: tiles_n * mk,
+        },
+        // WS: weights once; input re-read per weight column-block.
+        Scheme::Ws => EmaBreakdown {
+            input: tiles_k * mn,
+            weight: nk,
+            output: tiles_n * mk,
+        },
+        // OS: psums stay on chip; both operands re-read.
+        Scheme::OsRow | Scheme::OsCol => EmaBreakdown {
+            input: tiles_k * mn,
+            weight: tiles_m * nk,
+            output: mk,
+        },
+        // IS-OS (Fig. 2a): input re-read once per k'-column window
+        // (Table II's row is the k' = K ideal -> input = MN).
+        Scheme::IsOs => EmaBreakdown {
+            input: windows_kp * mn,
+            weight: tiles_m * nk,
+            output: mk,
+        },
+        // WS-OS (Fig. 2b): weights re-read once per m'-row window
+        // (Table II's row is the m' = M ideal -> weight = NK).
+        Scheme::WsOs => EmaBreakdown {
+            input: tiles_k * mn,
+            weight: windows_mp * nk,
+            output: mk,
+        },
+        Scheme::Tas => unreachable!("resolve() eliminated Tas"),
+    }
+}
+
+/// The decision quantity of §III-A: `MN − NK = N(M−K)` in words.
+/// Negative ⇒ IS preferred; zero/positive ⇒ WS preferred.
+pub fn is_ws_difference(shape: &GemmShape) -> i128 {
+    (shape.m as i128 - shape.k as i128) * shape.n as i128
+}
+
+/// EMA of the *stationary matrix only* — the quantity Table III tabulates
+/// (`IS` column = input matrix under IS = MN; `WS` column = NK).
+pub fn stationary_matrix_words(scheme: Scheme, shape: &GemmShape) -> u64 {
+    match scheme {
+        Scheme::Is | Scheme::IsOs => shape.input_words(),
+        Scheme::Ws | Scheme::WsOs => shape.weight_words(),
+        _ => panic!("stationary_matrix_words: {scheme:?} has no single stationary matrix"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+    use crate::util::prng::Rng;
+
+    fn shape() -> GemmShape {
+        GemmShape::new(384, 1024, 1024) // wav2vec2-large Q projection, mean len
+    }
+
+    #[test]
+    fn naive_is_three_mnk() {
+        let s = shape();
+        let e = ema(Scheme::Naive, &s, &Tiling::square(16));
+        assert_eq!(e.total(), 3 * s.macs());
+    }
+
+    #[test]
+    fn table2_formulas_divisible() {
+        // M=64, N=32, K=128 with 16-tiles: tiles = (4, 2, 8).
+        let s = GemmShape::new(64, 32, 128);
+        let t = Tiling::square(16);
+        let (mn, nk, mk) = (s.m * s.n, s.n * s.k, s.m * s.k);
+        assert_eq!(ema(Scheme::Is, &s, &t), EmaBreakdown { input: mn, weight: 4 * nk, output: 2 * mk });
+        assert_eq!(ema(Scheme::Ws, &s, &t), EmaBreakdown { input: 8 * mn, weight: nk, output: 2 * mk });
+        assert_eq!(ema(Scheme::OsRow, &s, &t), EmaBreakdown { input: 8 * mn, weight: 4 * nk, output: mk });
+        assert_eq!(ema(Scheme::IsOs, &s, &t), EmaBreakdown { input: mn, weight: 4 * nk, output: mk });
+        assert_eq!(ema(Scheme::WsOs, &s, &t), EmaBreakdown { input: 8 * mn, weight: nk, output: mk });
+    }
+
+    #[test]
+    fn psum_windows_scale_reloads() {
+        let s = GemmShape::new(64, 32, 128);
+        let t = Tiling::square(16).with_kp(32); // 4 windows over K=128
+        assert_eq!(ema(Scheme::IsOs, &s, &t).input, 4 * s.m * s.n);
+        let t2 = Tiling::square(16).with_mp(16); // 4 windows over M=64
+        assert_eq!(ema(Scheme::WsOs, &s, &t2).weight, 4 * s.n * s.k);
+    }
+
+    #[test]
+    fn tas_is_min_of_hybrids_on_divisible_shapes() {
+        // §III-A: with square tiles (m = n = k) and tile-divisible shapes
+        // the sign of N(M−K) picks the EMA argmin *exactly*.
+        property("tas = min(is-os, ws-os)", 500, |rng: &mut Rng| {
+            let t_edge = *rng.choose(&[8u64, 16, 32]);
+            let s = GemmShape::new(
+                rng.gen_in(1, 128) * t_edge,
+                rng.gen_in(1, 128) * t_edge,
+                rng.gen_in(1, 128) * t_edge,
+            );
+            let t = Tiling::square(t_edge);
+            let tas = ema(Scheme::Tas, &s, &t).total();
+            let is_os = ema(Scheme::IsOs, &s, &t).total();
+            let ws_os = ema(Scheme::WsOs, &s, &t).total();
+            assert_eq!(
+                tas,
+                is_os.min(ws_os),
+                "shape {s:?}: tas {tas}, is-os {is_os}, ws-os {ws_os}"
+            );
+        });
+    }
+
+    #[test]
+    fn tas_near_optimal_on_ragged_shapes() {
+        // On non-divisible shapes the ceilings make the cheap sign rule
+        // off-by-a-whisker in rare cases; bound the regret at 10%.
+        property("tas <= 1.1 min (ragged)", 500, |rng: &mut Rng| {
+            let s = GemmShape::new(
+                rng.gen_in(1, 4096),
+                rng.gen_in(1, 4096),
+                rng.gen_in(1, 4096),
+            );
+            let t = Tiling::square(*rng.choose(&[8, 16, 32]));
+            let tas = ema(Scheme::Tas, &s, &t).total();
+            let best = ema(Scheme::IsOs, &s, &t)
+                .total()
+                .min(ema(Scheme::WsOs, &s, &t).total());
+            assert!(
+                tas as f64 <= best as f64 * 1.1,
+                "shape {s:?}: tas {tas} vs best {best}"
+            );
+        });
+    }
+
+    #[test]
+    fn decision_rule_sign() {
+        assert!(is_ws_difference(&GemmShape::new(115, 1024, 1024)) < 0);
+        assert!(is_ws_difference(&GemmShape::new(1565, 1024, 1024)) > 0);
+        assert_eq!(is_ws_difference(&GemmShape::new(1024, 77, 1024)), 0);
+    }
+
+    #[test]
+    fn hybrids_never_worse_than_parents() {
+        property("is-os <= is, ws-os <= ws", 300, |rng: &mut Rng| {
+            let s = GemmShape::new(
+                rng.gen_in(1, 2048),
+                rng.gen_in(1, 2048),
+                rng.gen_in(1, 2048),
+            );
+            let t = Tiling::square(16);
+            assert!(ema(Scheme::IsOs, &s, &t).total() <= ema(Scheme::Is, &s, &t).total());
+            assert!(ema(Scheme::WsOs, &s, &t).total() <= ema(Scheme::Ws, &s, &t).total());
+            // and everything beats naive
+            for sch in Scheme::FIXED {
+                assert!(ema(sch, &s, &t).total() <= ema(Scheme::Naive, &s, &t).total());
+            }
+        });
+    }
+
+    #[test]
+    fn stationary_matrix_table3_semantics() {
+        // Wav2Vec2-Large Q proj: N = K = 1024 (Table III).
+        let s = GemmShape::new(115, 1024, 1024);
+        assert_eq!(stationary_matrix_words(Scheme::Is, &s), 115 * 1024);
+        assert_eq!(stationary_matrix_words(Scheme::Ws, &s), 1024 * 1024);
+    }
+}

@@ -1,0 +1,122 @@
+//! Dataflow schedules for tiled matrix–matrix multiplication — the paper's
+//! subject matter.
+//!
+//! * [`Scheme`] — every stationary scheme from Fig. 1 (fixed) and Fig. 2
+//!   (proposed hybrids), plus the adaptive TAS selector.
+//! * [`schedule`] — exact tile-step generators (loop nests + DRAM flags).
+//! * [`analytic`] — closed-form EMA model (Table II, generalised to the
+//!   k'/m' psum windows of Fig. 2).
+//!
+//! The generators and the closed forms are developed independently and
+//! cross-checked by property tests: for every shape (ragged included) the
+//! replayed word counts equal the formulas exactly.
+
+pub mod analytic;
+pub mod schedule;
+
+pub use analytic::{ema, EmaBreakdown};
+pub use schedule::{for_each_step, step_count, Step};
+
+/// A stationary scheme. `Tas` resolves to `IsOs` or `WsOs` per shape via
+/// the paper's rule (§III-A): input-stationary iff `M < K`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// No data reuse: every MAC fetches operands and writes its psum.
+    Naive,
+    /// Input stationary (Fig. 1b): input tiles loaded once; psums spill.
+    Is,
+    /// Weight stationary (Fig. 1c): weight tiles loaded once; psums spill.
+    Ws,
+    /// Row-oriented output stationary (Fig. 1d).
+    OsRow,
+    /// Column-oriented output stationary (Fig. 1e).
+    OsCol,
+    /// Proposed hybrid: input stationary + k'-window psum reuse (Fig. 2a).
+    IsOs,
+    /// Proposed hybrid: weight stationary + m'-window psum reuse (Fig. 2b).
+    WsOs,
+    /// Tile-based Adaptive Stationary: pick IsOs/WsOs by `M < K`.
+    Tas,
+}
+
+impl Scheme {
+    /// All concrete (non-adaptive) schemes.
+    pub const FIXED: [Scheme; 7] = [
+        Scheme::Naive,
+        Scheme::Is,
+        Scheme::Ws,
+        Scheme::OsRow,
+        Scheme::OsCol,
+        Scheme::IsOs,
+        Scheme::WsOs,
+    ];
+
+    /// Resolve `Tas` for a given shape; other schemes return themselves.
+    pub fn resolve(self, shape: &crate::gemm::GemmShape) -> Scheme {
+        match self {
+            Scheme::Tas => {
+                // MN - NK = N(M-K): negative -> input matrix smaller -> IS.
+                if shape.m < shape.k {
+                    Scheme::IsOs
+                } else {
+                    Scheme::WsOs
+                }
+            }
+            s => s,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Naive => "naive",
+            Scheme::Is => "is",
+            Scheme::Ws => "ws",
+            Scheme::OsRow => "os-row",
+            Scheme::OsCol => "os-col",
+            Scheme::IsOs => "is-os",
+            Scheme::WsOs => "ws-os",
+            Scheme::Tas => "tas",
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<Scheme> {
+        Ok(match name {
+            "naive" => Scheme::Naive,
+            "is" => Scheme::Is,
+            "ws" => Scheme::Ws,
+            "os-row" | "os_row" | "os" => Scheme::OsRow,
+            "os-col" | "os_col" => Scheme::OsCol,
+            "is-os" | "is_os" => Scheme::IsOs,
+            "ws-os" | "ws_os" => Scheme::WsOs,
+            "tas" => Scheme::Tas,
+            _ => anyhow::bail!("unknown scheme '{name}'"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::GemmShape;
+
+    #[test]
+    fn tas_resolution_follows_rule() {
+        let small_m = GemmShape::new(64, 256, 1024);
+        let big_m = GemmShape::new(4096, 256, 1024);
+        let equal = GemmShape::new(1024, 256, 1024);
+        assert_eq!(Scheme::Tas.resolve(&small_m), Scheme::IsOs);
+        assert_eq!(Scheme::Tas.resolve(&big_m), Scheme::WsOs);
+        // paper: "zero or positive (M >= K) -> WS preferred"
+        assert_eq!(Scheme::Tas.resolve(&equal), Scheme::WsOs);
+        // non-adaptive schemes are fixed points
+        assert_eq!(Scheme::Is.resolve(&small_m), Scheme::Is);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for s in Scheme::FIXED.iter().chain([Scheme::Tas].iter()) {
+            assert_eq!(Scheme::from_name(s.name()).unwrap(), *s);
+        }
+        assert!(Scheme::from_name("bogus").is_err());
+    }
+}

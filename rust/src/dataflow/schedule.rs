@@ -1,0 +1,389 @@
+//! Exact tile-step generators for every stationary scheme.
+//!
+//! Each scheme is a loop nest over tile indices `(i over M, r over N, j
+//! over K)` in its characteristic order (Fig. 1/2 circled arrows), emitting
+//! one [`Step`] per tile MAC pass with flags that say which DRAM traffic
+//! the step incurs.  The simulator replays steps; the analytic model
+//! (Table II) must agree word-for-word — that equivalence is the central
+//! property test of the repo.
+//!
+//! Generators use a visitor (`FnMut(Step)`) instead of an Iterator: the
+//! loop nests stay readable, the compiler inlines the callback, and the
+//! hot path allocates nothing.
+
+use super::Scheme;
+use crate::gemm::{GemmShape, Tiling};
+use crate::util::ceil_div;
+
+/// One tile MAC pass: `out[i,j] += in[i,r] · w[r,j]` plus its DRAM flags.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Step {
+    /// Tile row index (along M).
+    pub i: u64,
+    /// Contraction tile index (along N).
+    pub r: u64,
+    /// Tile column index (along K).
+    pub j: u64,
+    /// Input tile fetched from DRAM at this step.
+    pub load_input: bool,
+    /// Weight tile fetched from DRAM at this step.
+    pub load_weight: bool,
+    /// Partial-sum tile re-fetched from DRAM (spilling schemes, r > 0).
+    pub psum_fetch: bool,
+    /// Partial-sum tile written to DRAM after this step (not final).
+    pub psum_spill: bool,
+    /// Final output tile written after this step.
+    pub store_out: bool,
+    /// Naive mode: operand traffic is per-MAC (tile words × tile depth).
+    pub scalar_traffic: bool,
+}
+
+impl Step {
+    fn new(i: u64, r: u64, j: u64) -> Step {
+        Step {
+            i,
+            r,
+            j,
+            load_input: false,
+            load_weight: false,
+            psum_fetch: false,
+            psum_spill: false,
+            store_out: false,
+            scalar_traffic: false,
+        }
+    }
+}
+
+/// Total steps of any schedule: every (i, r, j) tile triple exactly once.
+pub fn step_count(shape: &GemmShape, tiling: &Tiling) -> u64 {
+    let (gm, gn, gk) = tiling.grid(shape);
+    gm * gn * gk
+}
+
+/// Drive `visit` over every step of `scheme` in schedule order.
+/// `Tas` is resolved by shape first (§III-A decision rule).
+pub fn for_each_step<F: FnMut(Step)>(
+    scheme: Scheme,
+    shape: &GemmShape,
+    tiling: &Tiling,
+    mut visit: F,
+) {
+    let (gm, gn, gk) = tiling.grid(shape);
+    match scheme.resolve(shape) {
+        Scheme::Naive => naive(gm, gn, gk, &mut visit),
+        Scheme::Is => is(gm, gn, gk, &mut visit),
+        Scheme::Ws => ws(gm, gn, gk, &mut visit),
+        Scheme::OsRow => os_row(gm, gn, gk, &mut visit),
+        Scheme::OsCol => os_col(gm, gn, gk, &mut visit),
+        Scheme::IsOs => is_os(gm, gn, gk, tiling.window_tiles_k(shape), &mut visit),
+        Scheme::WsOs => ws_os(gm, gn, gk, tiling.window_tiles_m(shape), &mut visit),
+        Scheme::Tas => unreachable!("resolve() eliminated Tas"),
+    }
+}
+
+/// Naive (no reuse): order is irrelevant to its EMA; row-major for
+/// determinism.  Every step fetches operands per-MAC and spills per-MAC.
+fn naive<F: FnMut(Step)>(gm: u64, gn: u64, gk: u64, visit: &mut F) {
+    for i in 0..gm {
+        for j in 0..gk {
+            for r in 0..gn {
+                let mut s = Step::new(i, r, j);
+                s.load_input = true;
+                s.load_weight = true;
+                s.psum_spill = r + 1 < gn;
+                s.store_out = r + 1 == gn;
+                s.scalar_traffic = true;
+                visit(s);
+            }
+        }
+    }
+}
+
+/// Input stationary (Fig. 1b): nest (i, r, j).  The input tile (i, r)
+/// stays while the weight tile walks the row dimension K; psums for the
+/// whole output row spill to DRAM every contraction step.
+fn is<F: FnMut(Step)>(gm: u64, gn: u64, gk: u64, visit: &mut F) {
+    for i in 0..gm {
+        for r in 0..gn {
+            for j in 0..gk {
+                let mut s = Step::new(i, r, j);
+                s.load_input = j == 0;
+                s.load_weight = true;
+                s.psum_fetch = r > 0;
+                s.psum_spill = r + 1 < gn;
+                s.store_out = r + 1 == gn;
+                visit(s);
+            }
+        }
+    }
+}
+
+/// Weight stationary (Fig. 1c): nest (j, r, i).  The weight tile (r, j)
+/// stays while input tiles stream down M; psums spill per step.
+fn ws<F: FnMut(Step)>(gm: u64, gn: u64, gk: u64, visit: &mut F) {
+    for j in 0..gk {
+        for r in 0..gn {
+            for i in 0..gm {
+                let mut s = Step::new(i, r, j);
+                s.load_input = true;
+                s.load_weight = i == 0;
+                s.psum_fetch = r > 0;
+                s.psum_spill = r + 1 < gn;
+                s.store_out = r + 1 == gn;
+                visit(s);
+            }
+        }
+    }
+}
+
+/// Row-oriented output stationary (Fig. 1d): nest (i, j, r).  The psum
+/// tile (i, j) lives on chip across the whole contraction; both operands
+/// stream.
+fn os_row<F: FnMut(Step)>(gm: u64, gn: u64, gk: u64, visit: &mut F) {
+    for i in 0..gm {
+        for j in 0..gk {
+            for r in 0..gn {
+                let mut s = Step::new(i, r, j);
+                s.load_input = true;
+                s.load_weight = true;
+                s.store_out = r + 1 == gn;
+                visit(s);
+            }
+        }
+    }
+}
+
+/// Column-oriented output stationary (Fig. 1e): nest (j, i, r).
+fn os_col<F: FnMut(Step)>(gm: u64, gn: u64, gk: u64, visit: &mut F) {
+    for j in 0..gk {
+        for i in 0..gm {
+            for r in 0..gn {
+                let mut s = Step::new(i, r, j);
+                s.load_input = true;
+                s.load_weight = true;
+                s.store_out = r + 1 == gn;
+                visit(s);
+            }
+        }
+    }
+}
+
+/// IS-OS hybrid (Fig. 2a): nest (i, window over K, r, j-in-window).
+/// The input tile (i, r) is temporally reused across the k'-wide window
+/// (flag ① in the figure); the window's psums stay in registers across
+/// the whole contraction (spatial OS reuse, flag ②); outputs store once
+/// when r completes; the input column re-streams per window (flag ③).
+fn is_os<F: FnMut(Step)>(gm: u64, gn: u64, gk: u64, wk: u64, visit: &mut F) {
+    let windows = ceil_div(gk, wk);
+    for i in 0..gm {
+        for w in 0..windows {
+            let j0 = w * wk;
+            let j1 = (j0 + wk).min(gk);
+            for r in 0..gn {
+                for j in j0..j1 {
+                    let mut s = Step::new(i, r, j);
+                    s.load_input = j == j0;
+                    s.load_weight = true;
+                    s.store_out = r + 1 == gn;
+                    visit(s);
+                }
+            }
+        }
+    }
+}
+
+/// WS-OS hybrid (Fig. 2b): nest (j, window over M, r, i-in-window).
+/// The weight tile (r, j) is temporally reused across the m'-tall window;
+/// the window's psums stay in registers across the contraction; the
+/// weight column re-streams per window.
+fn ws_os<F: FnMut(Step)>(gm: u64, gn: u64, gk: u64, wm: u64, visit: &mut F) {
+    let windows = ceil_div(gm, wm);
+    for j in 0..gk {
+        for w in 0..windows {
+            let i0 = w * wm;
+            let i1 = (i0 + wm).min(gm);
+            for r in 0..gn {
+                for i in i0..i1 {
+                    let mut s = Step::new(i, r, j);
+                    s.load_input = true;
+                    s.load_weight = i == i0;
+                    s.store_out = r + 1 == gn;
+                    visit(s);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+    use crate::util::prng::Rng;
+    use std::collections::HashSet;
+
+    fn collect(scheme: Scheme, shape: &GemmShape, tiling: &Tiling) -> Vec<Step> {
+        let mut v = Vec::new();
+        for_each_step(scheme, shape, tiling, |s| v.push(s));
+        v
+    }
+
+    #[test]
+    fn every_scheme_covers_each_tile_triple_once() {
+        property("schedule coverage", 120, |rng: &mut Rng| {
+            let shape = GemmShape::new(
+                rng.gen_in(1, 200),
+                rng.gen_in(1, 200),
+                rng.gen_in(1, 200),
+            );
+            let t = Tiling::new(
+                rng.gen_in(1, 32),
+                rng.gen_in(1, 32),
+                rng.gen_in(1, 32),
+            );
+            let (gm, gn, gk) = t.grid(&shape);
+            for scheme in Scheme::FIXED {
+                let steps = collect(scheme, &shape, &t);
+                assert_eq!(steps.len() as u64, gm * gn * gk, "{scheme:?}");
+                let uniq: HashSet<(u64, u64, u64)> =
+                    steps.iter().map(|s| (s.i, s.r, s.j)).collect();
+                assert_eq!(uniq.len(), steps.len(), "{scheme:?} repeats a tile");
+            }
+        });
+    }
+
+    #[test]
+    fn every_output_tile_stored_exactly_once() {
+        property("store-once", 120, |rng: &mut Rng| {
+            let shape = GemmShape::new(
+                rng.gen_in(1, 150),
+                rng.gen_in(1, 150),
+                rng.gen_in(1, 150),
+            );
+            let t = Tiling::square(*rng.choose(&[4, 8, 16]));
+            let (gm, _, gk) = t.grid(&shape);
+            for scheme in Scheme::FIXED {
+                let stores: Vec<(u64, u64)> = collect(scheme, &shape, &t)
+                    .into_iter()
+                    .filter(|s| s.store_out)
+                    .map(|s| (s.i, s.j))
+                    .collect();
+                assert_eq!(stores.len() as u64, gm * gk, "{scheme:?}");
+                let uniq: HashSet<_> = stores.iter().collect();
+                assert_eq!(uniq.len() as u64, gm * gk, "{scheme:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn is_keeps_input_tile_stationary() {
+        let shape = GemmShape::new(64, 64, 64);
+        let t = Tiling::square(16);
+        let steps = collect(Scheme::Is, &shape, &t);
+        // input loads only at j == 0: one load per (i, r)
+        let loads = steps.iter().filter(|s| s.load_input).count() as u64;
+        assert_eq!(loads, 4 * 4);
+        // between loads, (i, r) never changes
+        for w in steps.windows(2) {
+            if !w[1].load_input {
+                assert_eq!((w[0].i, w[0].r), (w[1].i, w[1].r));
+            }
+        }
+    }
+
+    #[test]
+    fn ws_keeps_weight_tile_stationary() {
+        let shape = GemmShape::new(64, 64, 64);
+        let t = Tiling::square(16);
+        let steps = collect(Scheme::Ws, &shape, &t);
+        let loads = steps.iter().filter(|s| s.load_weight).count() as u64;
+        assert_eq!(loads, 4 * 4); // one per (j, r)
+        for w in steps.windows(2) {
+            if !w[1].load_weight {
+                assert_eq!((w[0].r, w[0].j), (w[1].r, w[1].j));
+            }
+        }
+    }
+
+    #[test]
+    fn os_schemes_never_touch_psum_dram() {
+        let shape = GemmShape::new(48, 80, 64);
+        let t = Tiling::square(16);
+        for scheme in [Scheme::OsRow, Scheme::OsCol, Scheme::IsOs, Scheme::WsOs] {
+            for s in collect(scheme, &shape, &t) {
+                assert!(!s.psum_fetch && !s.psum_spill, "{scheme:?} spilled");
+            }
+        }
+    }
+
+    #[test]
+    fn is_os_window_bounds_psum_live_set() {
+        // k' = 32 (2 tiles): within one (i, window), j spans <= 2 columns
+        // between output stores.
+        let shape = GemmShape::new(32, 64, 128);
+        let t = Tiling::square(16).with_kp(32);
+        let steps = collect(Scheme::IsOs, &shape, &t);
+        let mut live: HashSet<(u64, u64)> = HashSet::new();
+        let mut peak = 0;
+        for s in &steps {
+            live.insert((s.i, s.j));
+            peak = peak.max(live.len());
+            if s.store_out {
+                live.remove(&(s.i, s.j));
+            }
+        }
+        assert!(peak <= 2, "psum window exceeded: {peak}");
+        assert!(live.is_empty(), "psums left unstored");
+    }
+
+    #[test]
+    fn ws_os_window_bounds_psum_live_set() {
+        let shape = GemmShape::new(128, 64, 32);
+        let t = Tiling::square(16).with_mp(32); // m' = 32 -> 2 tile rows
+        let steps = collect(Scheme::WsOs, &shape, &t);
+        let mut live: HashSet<(u64, u64)> = HashSet::new();
+        let mut peak = 0;
+        for s in &steps {
+            live.insert((s.i, s.j));
+            peak = peak.max(live.len());
+            if s.store_out {
+                live.remove(&(s.i, s.j));
+            }
+        }
+        assert!(peak <= 2, "psum window exceeded: {peak}");
+        assert!(live.is_empty());
+    }
+
+    #[test]
+    fn plain_is_needs_full_output_row_of_psums() {
+        // §III-B: plain IS keeps up to K/k psum tiles alive — the
+        // motivation for the hybrid.  Measure it.
+        let shape = GemmShape::new(32, 64, 256);
+        let t = Tiling::square(16);
+        let steps = collect(Scheme::Is, &shape, &t);
+        let mut live: HashSet<(u64, u64)> = HashSet::new();
+        let mut peak = 0;
+        for s in &steps {
+            live.insert((s.i, s.j));
+            peak = peak.max(live.len());
+            if s.store_out {
+                live.remove(&(s.i, s.j));
+            }
+        }
+        assert_eq!(peak, 16); // K/k = 256/16 tiles live at once
+    }
+
+    #[test]
+    fn ragged_shapes_still_cover() {
+        let shape = GemmShape::new(33, 17, 65);
+        let t = Tiling::square(16);
+        let (gm, gn, gk) = t.grid(&shape);
+        assert_eq!((gm, gn, gk), (3, 2, 5));
+        for scheme in Scheme::FIXED {
+            assert_eq!(
+                collect(scheme, &shape, &t).len() as u64,
+                gm * gn * gk
+            );
+        }
+    }
+}

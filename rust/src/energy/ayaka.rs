@@ -1,0 +1,113 @@
+//! Reimplementation of the Ayaka [9] fixed-dataflow baseline for Table IV.
+//!
+//! Ayaka (Qin et al., JSSC 2024) is a versatile transformer accelerator
+//! with a *fixed* heterogeneous dataflow: each operator class is assigned
+//! one stationary scheme at design time, tuned for a nominal model, and
+//! the linear projections run weight-stationary — the weight matrix is
+//! resident while input activations stream per output element.  Because
+//! the choice is input-length independent (§I), the streaming operand is
+//! re-fetched at element granularity:
+//!
+//! * weights: read once (`N·K` words — the WS win),
+//! * inputs: re-read once per output column (`K · M·N` words),
+//!
+//! i.e. read-EMA ≈ `MNK + NK` vs naive's `2MNK` — about half, matching
+//! the ≈48% average energy reduction the paper attributes to [9] in
+//! Table IV.  (Substitution note: we cannot run Ayaka's silicon; this
+//! closed form reproduces its published *behaviour class* — fixed WS,
+//! length-independent — which is all Table IV's comparison needs.  See
+//! DESIGN.md §4.)
+//!
+//! Its second published weakness (§I): the fixed dataflow forces psum
+//! spill traffic, so reads and writes interleave at DRAM — modelled by
+//! [`ayaka_turnaround_class`].
+
+use crate::gemm::GemmShape;
+use crate::models::GemmWorkload;
+
+/// Read-direction EMA (words) of one GEMM under Ayaka's fixed dataflow.
+pub fn ayaka_fixed_read_ema(shape: &GemmShape) -> u64 {
+    shape.macs() + shape.weight_words()
+}
+
+/// Read-EMA over a workload.
+pub fn ayaka_workload_read_ema(gemms: &[GemmWorkload]) -> u64 {
+    gemms
+        .iter()
+        .map(|g| g.count * ayaka_fixed_read_ema(&g.shape))
+        .sum()
+}
+
+/// Concurrent-R/W behaviour class: Ayaka's spilling dataflow switches
+/// DRAM direction once per output row of psums; the proposed hybrids
+/// only at psum-window completion.  Returns the switch-count ratio
+/// (Ayaka / TAS) for a GEMM — used by the communication-efficiency bench
+/// ("nearly twice the efficiency", §I).
+pub fn ayaka_turnaround_class(shape: &GemmShape, tile: u64, kp: u64) -> f64 {
+    // Ayaka: one write burst per (row-block, contraction-step): (M/m)(N/n)
+    let spills = (shape.m.div_ceil(tile)) * (shape.n.div_ceil(tile));
+    // Hybrid: one write burst per psum window: (M/m)(K/k')
+    let windows = (shape.m.div_ceil(tile)) * (shape.k.div_ceil(kp.max(1)));
+    spills as f64 / windows.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::Scheme;
+    use crate::energy::{read_ema_words, workload_read_ema};
+    use crate::gemm::Tiling;
+    use crate::models::bert_base;
+
+    #[test]
+    fn ayaka_is_roughly_half_of_naive() {
+        // Table IV column B: ≈48% reduction vs naive, per layer.
+        let gemms = bert_base().linear_gemms(384);
+        let naive = workload_read_ema(Scheme::Naive, &gemms, &Tiling::square(16));
+        let ayaka = ayaka_workload_read_ema(&gemms);
+        let reduction = 1.0 - ayaka as f64 / naive as f64;
+        assert!(
+            (0.44..0.52).contains(&reduction),
+            "Ayaka reduction {reduction}"
+        );
+    }
+
+    #[test]
+    fn tas_doubles_ayaka_efficiency() {
+        // §IV: "double the energy efficiency compared to [9]" — the
+        // reduction ratio goes 48% -> 97%.
+        let gemms = bert_base().linear_gemms(384);
+        let t = Tiling::square(16);
+        let naive = workload_read_ema(Scheme::Naive, &gemms, &t) as f64;
+        let ayaka = ayaka_workload_read_ema(&gemms) as f64;
+        let tas = workload_read_ema(Scheme::Tas, &gemms, &t) as f64;
+        let red_ayaka = 1.0 - ayaka / naive;
+        let red_tas = 1.0 - tas / naive;
+        assert!(red_tas / red_ayaka > 1.8, "{red_tas} vs {red_ayaka}");
+        assert!(red_tas > 0.95);
+    }
+
+    #[test]
+    fn ayaka_read_ema_closed_form() {
+        let s = GemmShape::new(10, 20, 30);
+        assert_eq!(ayaka_fixed_read_ema(&s), 10 * 20 * 30 + 20 * 30);
+    }
+
+    #[test]
+    fn turnaround_class_favors_hybrid() {
+        let s = GemmShape::new(384, 768, 768);
+        let ratio = ayaka_turnaround_class(&s, 16, 256);
+        assert!(ratio > 4.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn ayaka_beats_naive_but_loses_to_tiled_ws() {
+        // sanity ordering: naive > ayaka(element WS) > tiled WS reads
+        let s = GemmShape::new(512, 1024, 1024);
+        let t = Tiling::square(16);
+        let naive = read_ema_words(Scheme::Naive, &s, &t);
+        let ayaka = ayaka_fixed_read_ema(&s);
+        let ws = read_ema_words(Scheme::Ws, &s, &t);
+        assert!(naive > ayaka && ayaka > ws);
+    }
+}

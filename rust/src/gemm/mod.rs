@@ -1,0 +1,230 @@
+//! GEMM shape/tiling algebra shared by the analytic model, the schedule
+//! generators and the simulator.
+//!
+//! Paper notation (§II, Fig. 1a): `out[M,K] = in[M,N] · w[N,K]` — **N is the
+//! contraction dimension** (input columns == weight rows), M the input rows
+//! (tokens), K the weight columns (output features).  Tile sizes are
+//! `(m, n, k)`; the hybrid schemes add the psum window sizes `k'` (IS-OS)
+//! and `m'` (WS-OS) from Fig. 2.
+
+use crate::util::ceil_div;
+
+/// Problem shape of one linear-projection GEMM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GemmShape {
+    /// Input rows = tokens (sequence length × batch).
+    pub m: u64,
+    /// Contraction dim = input columns = weight rows.
+    pub n: u64,
+    /// Weight columns = output features.
+    pub k: u64,
+}
+
+impl GemmShape {
+    pub fn new(m: u64, n: u64, k: u64) -> Self {
+        assert!(m > 0 && n > 0 && k > 0, "degenerate gemm {m}x{n}x{k}");
+        GemmShape { m, n, k }
+    }
+
+    /// Multiply-accumulate count.
+    pub fn macs(&self) -> u64 {
+        self.m * self.n * self.k
+    }
+
+    /// 2·MNK floating-point ops.
+    pub fn flops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    pub fn input_words(&self) -> u64 {
+        self.m * self.n
+    }
+
+    pub fn weight_words(&self) -> u64 {
+        self.n * self.k
+    }
+
+    pub fn output_words(&self) -> u64 {
+        self.m * self.k
+    }
+}
+
+/// Tile configuration: PE-array tile `(m, n, k)` plus the psum windows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tiling {
+    /// Tile rows (input rows per tile).
+    pub tm: u64,
+    /// Tile contraction depth.
+    pub tn: u64,
+    /// Tile columns (output features per tile).
+    pub tk: u64,
+    /// IS-OS psum window: output columns whose psums stay on chip
+    /// (Fig. 2a's k'). `None` = unbounded (Table II's ideal: k' = K).
+    pub kp: Option<u64>,
+    /// WS-OS psum window: output rows kept on chip (Fig. 2b's m').
+    pub mp: Option<u64>,
+}
+
+impl Tiling {
+    /// Square PE-array tiling, the common accelerator case (§III-A):
+    /// m = n = k = `t`, unbounded psum windows.
+    pub fn square(t: u64) -> Self {
+        assert!(t > 0);
+        Tiling { tm: t, tn: t, tk: t, kp: None, mp: None }
+    }
+
+    pub fn new(tm: u64, tn: u64, tk: u64) -> Self {
+        assert!(tm > 0 && tn > 0 && tk > 0);
+        Tiling { tm, tn, tk, kp: None, mp: None }
+    }
+
+    /// Set the IS-OS psum window k' (must be a multiple of tk).
+    pub fn with_kp(mut self, kp: u64) -> Self {
+        assert!(kp >= self.tk && kp % self.tk == 0, "k'={kp} vs k={}", self.tk);
+        self.kp = Some(kp);
+        self
+    }
+
+    /// Set the WS-OS psum window m' (must be a multiple of tm).
+    pub fn with_mp(mut self, mp: u64) -> Self {
+        assert!(mp >= self.tm && mp % self.tm == 0, "m'={mp} vs m={}", self.tm);
+        self.mp = Some(mp);
+        self
+    }
+
+    /// Effective k' clamped to the problem (defaults to K).
+    pub fn kp_eff(&self, shape: &GemmShape) -> u64 {
+        self.kp.unwrap_or(shape.k).min(shape.k)
+    }
+
+    /// Effective m' clamped to the problem (defaults to M).
+    pub fn mp_eff(&self, shape: &GemmShape) -> u64 {
+        self.mp.unwrap_or(shape.m).min(shape.m)
+    }
+
+    /// IS-OS psum window width **in tiles** along K.  `kp = None` (or
+    /// `kp >= K`) means the whole output row fits: one window.  This is
+    /// the single definition both the analytic model and the schedule
+    /// generator use — they must never disagree.
+    pub fn window_tiles_k(&self, shape: &GemmShape) -> u64 {
+        let gk = ceil_div(shape.k, self.tk);
+        match self.kp {
+            Some(kp) if kp < shape.k => (kp / self.tk).max(1),
+            _ => gk,
+        }
+    }
+
+    /// WS-OS psum window height **in tiles** along M.
+    pub fn window_tiles_m(&self, shape: &GemmShape) -> u64 {
+        let gm = ceil_div(shape.m, self.tm);
+        match self.mp {
+            Some(mp) if mp < shape.m => (mp / self.tm).max(1),
+            _ => gm,
+        }
+    }
+
+    /// Grid extents (tiles along M, N, K) — ceiling division.
+    pub fn grid(&self, shape: &GemmShape) -> (u64, u64, u64) {
+        (
+            ceil_div(shape.m, self.tm),
+            ceil_div(shape.n, self.tn),
+            ceil_div(shape.k, self.tk),
+        )
+    }
+
+    /// Words in one input tile / weight tile / output tile (full tiles).
+    pub fn input_tile_words(&self) -> u64 {
+        self.tm * self.tn
+    }
+
+    pub fn weight_tile_words(&self) -> u64 {
+        self.tn * self.tk
+    }
+
+    pub fn output_tile_words(&self) -> u64 {
+        self.tm * self.tk
+    }
+
+    /// True iff the shape divides evenly (no ragged edge tiles).
+    pub fn divides(&self, shape: &GemmShape) -> bool {
+        shape.m % self.tm == 0 && shape.n % self.tn == 0 && shape.k % self.tk == 0
+    }
+}
+
+/// Actual (possibly ragged) extent of tile index `idx` along a dimension.
+pub fn tile_extent(dim: u64, tile: u64, idx: u64) -> u64 {
+    let start = idx * tile;
+    debug_assert!(start < dim, "tile {idx} out of range");
+    tile.min(dim - start)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn shape_counts() {
+        let s = GemmShape::new(4, 6, 8);
+        assert_eq!(s.macs(), 192);
+        assert_eq!(s.flops(), 384);
+        assert_eq!(s.input_words(), 24);
+        assert_eq!(s.weight_words(), 48);
+        assert_eq!(s.output_words(), 32);
+    }
+
+    #[test]
+    fn grid_ceiling() {
+        let s = GemmShape::new(100, 64, 33);
+        let t = Tiling::new(16, 16, 16);
+        assert_eq!(t.grid(&s), (7, 4, 3));
+        assert!(!t.divides(&s));
+        assert!(Tiling::new(10, 16, 11).divides(&GemmShape::new(20, 32, 33)));
+    }
+
+    #[test]
+    fn psum_windows_validated() {
+        let t = Tiling::square(16).with_kp(64).with_mp(32);
+        assert_eq!(t.kp, Some(64));
+        assert_eq!(t.mp, Some(32));
+        let s = GemmShape::new(24, 32, 40);
+        assert_eq!(t.kp_eff(&s), 40); // clamped to K
+        assert_eq!(t.mp_eff(&s), 24); // clamped to M
+    }
+
+    #[test]
+    #[should_panic(expected = "k'=10")]
+    fn kp_must_be_tile_multiple() {
+        Tiling::square(16).with_kp(10);
+    }
+
+    #[test]
+    fn tile_extent_ragged_edge() {
+        assert_eq!(tile_extent(100, 16, 0), 16);
+        assert_eq!(tile_extent(100, 16, 6), 4);
+        assert_eq!(tile_extent(96, 16, 5), 16);
+    }
+
+    #[test]
+    fn prop_grid_covers_shape() {
+        property("grid covers", 300, |rng: &mut Rng| {
+            let s = GemmShape::new(
+                rng.gen_in(1, 500),
+                rng.gen_in(1, 500),
+                rng.gen_in(1, 500),
+            );
+            let t = Tiling::new(
+                rng.gen_in(1, 64),
+                rng.gen_in(1, 64),
+                rng.gen_in(1, 64),
+            );
+            let (gm, gn, gk) = t.grid(&s);
+            // Sum of tile extents reconstructs each dimension exactly.
+            let m: u64 = (0..gm).map(|i| tile_extent(s.m, t.tm, i)).sum();
+            let n: u64 = (0..gn).map(|i| tile_extent(s.n, t.tn, i)).sum();
+            let k: u64 = (0..gk).map(|i| tile_extent(s.k, t.tk, i)).sum();
+            assert_eq!((m, n, k), (s.m, s.n, s.k));
+        });
+    }
+}

@@ -1,0 +1,30 @@
+//! # TAS — Tile-based Adaptive Stationary for Transformer Accelerators
+//!
+//! Reproduction of Li & Chang, *"An Efficient Data Reuse with Tile-Based
+//! Adaptive Stationary for Transformer Accelerators"* (2025) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the accelerator-side system: dataflow schedule
+//!   generators for every stationary scheme (Fig. 1/2), the analytic EMA
+//!   model (Table II), a trace-driven accelerator simulator, the
+//!   transformer workload zoo, the Ayaka-style energy model, and a
+//!   serving coordinator that applies the TAS decision rule per request
+//!   bucket and executes real numerics through PJRT.
+//! * **L2/L1 (python/, build-time only)** — a tiny-BERT JAX model whose
+//!   linear projections run through Pallas kernels implementing the very
+//!   same tile dataflows, AOT-lowered to `artifacts/*.hlo.txt`.
+//!
+//! See DESIGN.md for the system inventory and experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured numbers.
+
+pub mod arch;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod sim;
+pub mod energy;
+pub mod gemm;
+pub mod models;
+pub mod report;
+pub mod runtime;
+pub mod util;

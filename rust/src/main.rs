@@ -1,0 +1,344 @@
+//! `tas` — CLI for the TAS reproduction.
+//!
+//! Subcommands:
+//!   tables    regenerate the paper's Tables I–IV
+//!   simulate  EMA / energy / cycle report for one GEMM or model
+//!   sweep     sequence-length sweep (crossover analysis)
+//!   trace     dump a tile-step trace (Fig. 1/2 evidence)
+//!   validate  run every artifact against its golden vectors (PJRT)
+//!   serve     closed-loop serving demo over the artifacts
+
+use anyhow::Result;
+use std::time::Duration;
+use tas::config::AcceleratorConfig;
+use tas::coordinator::{Coordinator, CoordinatorOptions};
+use tas::dataflow::{ema, for_each_step, Scheme};
+use tas::gemm::{GemmShape, Tiling};
+use tas::models::{zoo, LengthDist};
+use tas::report;
+use tas::sim::{estimate_cycles, measure_occupancy};
+use tas::util::cli::Args;
+use tas::util::prng::Rng;
+use tas::util::table::{pct, sci, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("tables") => cmd_tables(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("trace") => cmd_trace(args),
+        Some("figs") => cmd_figs(args),
+        Some("validate") => cmd_validate(args),
+        Some("serve") => cmd_serve(args),
+        Some(other) => Err(anyhow::anyhow!("unknown subcommand '{other}'\n{USAGE}")),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "\
+tas — Tile-based Adaptive Stationary for transformer accelerators
+
+USAGE: tas <subcommand> [options]
+
+  tables    [--table 1|2|3|4] [--csv] [--tile N] [--seed N]
+  simulate  --model NAME --seq N [--tile N] | --m M --n N --k K
+  sweep     --model NAME [--tile N] [--seqs a,b,c]
+  trace     --scheme NAME --m M --n N --k K [--tile N] [--limit N]
+  figs      [--m M] [--n N] [--k K] [--tile N]   (Fig. 1/2 tile maps)
+  validate  [--artifacts DIR]
+  serve     [--artifacts DIR] [--requests N] [--dist librispeech|fixed]
+            [--seed N] [--linger-ms N]
+
+Models: vit-g14, wav2vec2-xls-r-2b, gpt-3, bert-base, bert-large,
+        wav2vec2-large";
+
+fn tiling_from(args: &mut Args) -> Result<Tiling> {
+    let t = args.opt_u64("tile", 16)?;
+    Ok(Tiling::square(t))
+}
+
+fn cmd_tables(mut args: Args) -> Result<()> {
+    let which = args.opt_u64("table", 0)?;
+    let csv = args.flag("csv");
+    let tiling = tiling_from(&mut args)?;
+    let seed = args.opt_u64("seed", 0xBEEF)?;
+    args.finish()?;
+    let emit = |t: &Table| {
+        if csv {
+            print!("{}", t.to_csv());
+        } else {
+            println!("{}", t.to_text());
+        }
+    };
+    let shape = GemmShape::new(384, 768, 768);
+    match which {
+        1 => emit(&report::table1(&tiling)),
+        2 => emit(&report::table2(&shape, &tiling)),
+        3 => emit(&report::table3()),
+        4 => emit(&report::table4(&tiling, seed)),
+        0 => {
+            emit(&report::table1(&tiling));
+            emit(&report::table2(&shape, &tiling));
+            emit(&report::table3());
+            emit(&report::table4(&tiling, seed));
+        }
+        n => anyhow::bail!("no table {n} in the paper"),
+    }
+    Ok(())
+}
+
+fn cmd_simulate(mut args: Args) -> Result<()> {
+    let tiling = tiling_from(&mut args)?;
+    let cfg = AcceleratorConfig::default();
+    let model = args.opt("model");
+    let shapes: Vec<(String, GemmShape, u64)> = if let Some(name) = model {
+        let m = zoo::by_name(&name)?;
+        let seq = args.opt_u64("seq", m.default_seq)?;
+        m.linear_gemms(seq)
+            .into_iter()
+            .map(|g| (format!("{}[seq={}]", g.name, seq), g.shape, g.count))
+            .collect()
+    } else {
+        let m = args.opt_u64("m", 384)?;
+        let n = args.opt_u64("n", 768)?;
+        let k = args.opt_u64("k", 768)?;
+        vec![("gemm".into(), GemmShape::new(m, n, k), 1)]
+    };
+    args.finish()?;
+
+    for (name, shape, count) in shapes {
+        let mut t = Table::new(
+            &format!("{name}: M={} N={} K={} ×{count}", shape.m, shape.n, shape.k),
+            &["scheme", "EMA words", "vs naive", "cycles", "stall%", "peak psums"],
+        );
+        let naive_total = ema(Scheme::Naive, &shape, &tiling).total();
+        for s in Scheme::FIXED.iter().chain([Scheme::Tas].iter()) {
+            let e = ema(*s, &shape, &tiling);
+            let c = estimate_cycles(*s, &shape, &cfg);
+            let occ = measure_occupancy(*s, &shape, &tiling);
+            t.row(vec![
+                s.name().to_string(),
+                sci(e.total() as f64),
+                pct(1.0 - e.total() as f64 / naive_total as f64),
+                format!("{}", c.total_cycles),
+                format!("{:.1}%", c.stall_fraction() * 100.0),
+                format!("{}", occ.peak_psum_words),
+            ]);
+        }
+        println!("{}", t.to_text());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(mut args: Args) -> Result<()> {
+    let name = args.opt_or("model", "wav2vec2-large");
+    let tiling = tiling_from(&mut args)?;
+    let seqs: Vec<u64> = match args.opt("seqs") {
+        Some(s) => s
+            .split(',')
+            .map(|x| x.trim().parse().map_err(|_| anyhow::anyhow!("bad seq '{x}'")))
+            .collect::<Result<_>>()?,
+        None => vec![32, 64, 115, 128, 256, 384, 512, 1024, 1565, 4096, 15000],
+    };
+    args.finish()?;
+    let model = zoo::by_name(&name)?;
+    let mut t = Table::new(
+        &format!("{name}: EMA (words) per forward pass vs sequence length"),
+        &["seq", "is-os", "ws-os", "tas", "tas picks", "reduction vs naive"],
+    );
+    for seq in seqs {
+        let gemms = model.linear_gemms(seq);
+        let total = |scheme: Scheme| -> u64 {
+            gemms
+                .iter()
+                .map(|g| g.count * ema(scheme, &g.shape, &tiling).total())
+                .sum()
+        };
+        let (is_os, ws_os, tas, naive) = (
+            total(Scheme::IsOs),
+            total(Scheme::WsOs),
+            total(Scheme::Tas),
+            total(Scheme::Naive),
+        );
+        // which way did the rule go for the hidden-sized projections?
+        let pick = if seq < model.hidden { "IS-OS" } else { "WS-OS" };
+        t.row(vec![
+            seq.to_string(),
+            sci(is_os as f64),
+            sci(ws_os as f64),
+            sci(tas as f64),
+            pick.into(),
+            pct(1.0 - tas as f64 / naive as f64),
+        ]);
+    }
+    println!("{}", t.to_text());
+    Ok(())
+}
+
+fn cmd_trace(mut args: Args) -> Result<()> {
+    let scheme = Scheme::from_name(&args.opt_or("scheme", "tas"))?;
+    let m = args.opt_u64("m", 64)?;
+    let n = args.opt_u64("n", 64)?;
+    let k = args.opt_u64("k", 64)?;
+    let tiling = tiling_from(&mut args)?;
+    let limit = args.opt_u64("limit", 64)?;
+    args.finish()?;
+    let shape = GemmShape::new(m, n, k);
+    println!(
+        "# {} on M={m} N={n} K={k}, tiles ({},{},{}) — first {limit} steps",
+        scheme.resolve(&shape).name(),
+        tiling.tm,
+        tiling.tn,
+        tiling.tk
+    );
+    println!("# step  (i,r,j)   loads            psum        out");
+    let mut count = 0u64;
+    for_each_step(scheme, &shape, &tiling, |s| {
+        if count < limit {
+            println!(
+                "{:>6}  ({},{},{})   in:{} w:{}     fetch:{} spill:{}  store:{}",
+                count,
+                s.i,
+                s.r,
+                s.j,
+                s.load_input as u8,
+                s.load_weight as u8,
+                s.psum_fetch as u8,
+                s.psum_spill as u8,
+                s.store_out as u8
+            );
+        }
+        count += 1;
+    });
+    println!("# total steps: {count}");
+    Ok(())
+}
+
+fn cmd_validate(mut args: Args) -> Result<()> {
+    let default_dir = tas::runtime::default_artifacts_dir();
+    let dir = std::path::PathBuf::from(
+        args.opt_or("artifacts", default_dir.to_str().unwrap()),
+    );
+    args.finish()?;
+    anyhow::ensure!(
+        tas::runtime::artifacts_available(&dir),
+        "no artifacts at {} — run `make artifacts` first",
+        dir.display()
+    );
+    let mut engine = tas::runtime::Engine::load(&dir)?;
+    tas::coordinator::decisions::verify_against_manifest(engine.manifest())?;
+    println!("manifest OK; TAS decisions match the compile path");
+    let names = engine.artifact_names();
+    let mut worst = 0f32;
+    for name in &names {
+        let err = engine.validate_golden(name)?;
+        worst = worst.max(err);
+        println!("{name:<28} max|err| = {err:.3e}  OK");
+    }
+    println!("validated {} artifacts, worst error {worst:.3e}", names.len());
+    Ok(())
+}
+
+fn cmd_serve(mut args: Args) -> Result<()> {
+    let default_dir = tas::runtime::default_artifacts_dir();
+    let dir = std::path::PathBuf::from(
+        args.opt_or("artifacts", default_dir.to_str().unwrap()),
+    );
+    let n_requests = args.opt_u64("requests", 64)? as usize;
+    let dist_name = args.opt_or("dist", "librispeech");
+    let seed = args.opt_u64("seed", 42)?;
+    let linger = Duration::from_millis(args.opt_u64("linger-ms", 2)?);
+    args.finish()?;
+    anyhow::ensure!(
+        tas::runtime::artifacts_available(&dir),
+        "no artifacts at {} — run `make artifacts` first",
+        dir.display()
+    );
+
+    let coordinator = Coordinator::start(CoordinatorOptions {
+        artifacts_dir: dir,
+        linger,
+        ..Default::default()
+    })?;
+    let vocab = *coordinator.model.get("vocab").unwrap_or(&1024);
+    let max_len = coordinator.max_len();
+
+    let dist = match dist_name.as_str() {
+        // LibriSpeech-shaped, rescaled into the compiled bucket range.
+        "librispeech" => LengthDist::lognormal((max_len / 3).max(8), 0.55, 4, max_len),
+        "fixed" => LengthDist::fixed(max_len.min(64)),
+        other => anyhow::bail!("unknown dist '{other}'"),
+    };
+    let mut rng = Rng::new(seed);
+    let requests: Vec<Vec<i32>> = (0..n_requests)
+        .map(|_| {
+            let len = dist.sample(&mut rng) as usize;
+            (0..len).map(|_| rng.gen_range(vocab) as i32).collect()
+        })
+        .collect();
+
+    println!("serving {n_requests} requests (dist={dist_name}, seed={seed}) ...");
+    let t0 = std::time::Instant::now();
+    let responses = coordinator.run_closed_loop(requests)?;
+    let wall = t0.elapsed();
+
+    let snap = coordinator.metrics().snapshot();
+    let total_tokens: usize = responses.iter().map(|r| r.logits.len() / r.vocab).sum();
+    println!("\n== serving report ==");
+    println!("requests        {}", snap.requests);
+    println!("batches         {}", snap.batches);
+    println!("wall time       {:.1} ms", wall.as_secs_f64() * 1e3);
+    println!(
+        "throughput      {:.1} req/s, {:.0} tokens/s",
+        snap.requests as f64 / wall.as_secs_f64(),
+        total_tokens as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency         p50 {:.1} ms  p99 {:.1} ms  mean {:.1} ms",
+        snap.latency_p50_ms, snap.latency_p99_ms, snap.latency_mean_ms
+    );
+    println!("batch exec mean {:.1} ms", snap.batch_exec_mean_ms);
+    println!("padding         {:.1}%", snap.padding_fraction() * 100.0);
+    println!(
+        "EMA (accel-side): naive {}  ayaka {}  tas {}",
+        sci(snap.ema_naive_words as f64),
+        sci(snap.ema_ayaka_words as f64),
+        sci(snap.ema_tas_words as f64)
+    );
+    println!(
+        "EMA reduction   vs naive {}   vs ayaka [9] {}",
+        pct(snap.ema_reduction_vs_naive()),
+        pct(snap.ema_reduction_vs_ayaka())
+    );
+    coordinator.shutdown();
+    Ok(())
+}
+
+fn cmd_figs(mut args: Args) -> Result<()> {
+    let m = args.opt_u64("m", 64)?;
+    let n = args.opt_u64("n", 48)?;
+    let k = args.opt_u64("k", 80)?;
+    let tiling = tiling_from(&mut args)?;
+    args.finish()?;
+    let shape = GemmShape::new(m, n, k);
+    println!(
+        "Fig. 1 (fixed) and Fig. 2 (proposed) dataflows on M={m} N={n} K={k}, \
+         {}x{} tiles\n",
+        tiling.tm, tiling.tk
+    );
+    for scheme in Scheme::FIXED.iter().chain([Scheme::Tas].iter()) {
+        let viz = tas::report::figviz::trace_fig(*scheme, &shape, &tiling);
+        println!("{}", viz.render());
+        let (mi, mw) = viz.max_loads();
+        println!("max input-tile loads: {mi}, max weight-tile loads: {mw}\n");
+    }
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! Sequence-length distributions — the input-length variability that
+//! motivates the adaptive scheme (§I, Table III).
+//!
+//! LibriSpeech (the paper's ASR dataset) is not shipped here; Table III
+//! only depends on its token-length anchors, which the paper states:
+//! shortest 2.3 s = 115 tokens, mean 7.6 s = 384, longest 31.3 s = 1565
+//! (wav2vec2 emits ≈50 tokens/s).  For serving experiments we model the
+//! length distribution as a clipped log-normal through those anchors
+//! (speech-corpus durations are classically log-normal).
+
+use crate::util::prng::Rng;
+
+/// Wav2vec2 frame rate: one token per 20 ms of audio.
+pub const TOKENS_PER_SECOND: u64 = 50;
+
+/// Table III's anchor lengths, in tokens.
+pub const LIBRISPEECH_MIN: u64 = 115;
+pub const LIBRISPEECH_MEAN: u64 = 384;
+pub const LIBRISPEECH_MAX: u64 = 1565;
+/// The paper's long-speech extrapolation row.
+pub const LONG_SPEECH: u64 = 15_000;
+
+/// Token count for an audio clip length in seconds.
+pub fn tokens_for_seconds(seconds: f64) -> u64 {
+    (seconds * TOKENS_PER_SECOND as f64).round().max(1.0) as u64
+}
+
+/// A clipped log-normal token-length distribution.
+#[derive(Clone, Debug)]
+pub struct LengthDist {
+    mu: f64,
+    sigma: f64,
+    min: u64,
+    max: u64,
+}
+
+impl LengthDist {
+    /// LibriSpeech-like: log-normal with mean ≈ 384 tokens, clipped to the
+    /// dataset's observed [115, 1565] token range.
+    pub fn librispeech() -> Self {
+        let sigma: f64 = 0.55;
+        // mean of lognormal = exp(mu + sigma²/2) -> mu = ln(mean) − σ²/2
+        let mu = (LIBRISPEECH_MEAN as f64).ln() - sigma * sigma / 2.0;
+        LengthDist { mu, sigma, min: LIBRISPEECH_MIN, max: LIBRISPEECH_MAX }
+    }
+
+    /// Fixed-length "distribution" (NLP benchmarks with padded batches).
+    pub fn fixed(tokens: u64) -> Self {
+        LengthDist { mu: (tokens as f64).ln(), sigma: 0.0, min: tokens, max: tokens }
+    }
+
+    /// General clipped log-normal around `mean_tokens`.
+    pub fn lognormal(mean_tokens: u64, sigma: f64, min: u64, max: u64) -> Self {
+        assert!(min <= max && mean_tokens > 0);
+        let mu = (mean_tokens as f64).ln() - sigma * sigma / 2.0;
+        LengthDist { mu, sigma, min, max }
+    }
+
+    /// Draw one token length.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        if self.sigma == 0.0 {
+            return self.min;
+        }
+        let x = rng.gen_lognormal(self.mu, self.sigma);
+        (x.round() as u64).clamp(self.min, self.max)
+    }
+
+    /// Draw `n` lengths.
+    pub fn sample_n(&self, rng: &mut Rng, n: usize) -> Vec<u64> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+
+    pub fn bounds(&self) -> (u64, u64) {
+        (self.min, self.max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_conversion_matches_paper_anchors() {
+        assert_eq!(tokens_for_seconds(2.3), LIBRISPEECH_MIN);
+        assert_eq!(tokens_for_seconds(7.6), 380); // paper rounds to 384
+        assert_eq!(tokens_for_seconds(31.3), LIBRISPEECH_MAX);
+    }
+
+    #[test]
+    fn librispeech_samples_in_range_with_plausible_mean() {
+        let dist = LengthDist::librispeech();
+        let mut rng = Rng::new(42);
+        let xs = dist.sample_n(&mut rng, 20_000);
+        assert!(xs.iter().all(|&x| (115..=1565).contains(&x)));
+        let mean = xs.iter().sum::<u64>() as f64 / xs.len() as f64;
+        // clipping pulls the mean slightly below the unclipped 384
+        assert!((300.0..450.0).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn fixed_dist_is_constant() {
+        let dist = LengthDist::fixed(512);
+        let mut rng = Rng::new(1);
+        assert!(dist.sample_n(&mut rng, 100).iter().all(|&x| x == 512));
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let dist = LengthDist::librispeech();
+        let a = dist.sample_n(&mut Rng::new(7), 50);
+        let b = dist.sample_n(&mut Rng::new(7), 50);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn lognormal_rejects_inverted_bounds() {
+        LengthDist::lognormal(100, 0.5, 200, 100);
+    }
+}

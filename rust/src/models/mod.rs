@@ -1,0 +1,168 @@
+//! Transformer workload zoo: the models the paper evaluates (Tables I, III,
+//! IV) expressed as per-layer GEMM workloads for the dataflow analysis.
+//!
+//! A [`ModelSpec`] carries architecture hyper-parameters; [`ModelSpec::
+//! linear_gemms`] expands one forward pass at a given token count into the
+//! linear-projection GEMMs the paper optimises (QKV, attention output,
+//! FFN up/down, and optionally the LM head).  Attention score/context
+//! matmuls are exposed separately ([`ModelSpec::attention_gemms`]) — the
+//! paper's scheme targets linear projections and composes with separate
+//! attention optimisations (§I, §V).
+
+pub mod lengths;
+pub mod zoo;
+
+pub use lengths::LengthDist;
+pub use zoo::{bert_base, bert_large, gpt3, vit_g14, wav2vec2_large, xlsr_2b, all_models};
+
+use crate::gemm::GemmShape;
+
+/// One GEMM in a forward pass, with a human-readable role and multiplicity.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GemmWorkload {
+    /// Role, e.g. "qkv", "attn_out", "ffn1".
+    pub name: &'static str,
+    pub shape: GemmShape,
+    /// How many identical instances per forward pass (e.g. layer count).
+    pub count: u64,
+}
+
+impl GemmWorkload {
+    pub fn total_macs(&self) -> u64 {
+        self.count * self.shape.macs()
+    }
+}
+
+/// Transformer architecture description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    /// Embedding width H.
+    pub hidden: u64,
+    /// FFN inner width.
+    pub ffn: u64,
+    /// Encoder/decoder layer count.
+    pub layers: u64,
+    pub heads: u64,
+    /// Output vocabulary (LM head); `None` for pure encoders w/o head.
+    pub vocab: Option<u64>,
+    /// The paper's "pre-defined token length" (Table I).
+    pub default_seq: u64,
+    /// Parameter count in billions (Table I reporting).
+    pub params_b: f64,
+}
+
+impl ModelSpec {
+    /// Linear-projection GEMMs of one forward pass at `tokens` tokens.
+    /// Shapes follow the paper's convention: `out[M,K] = in[M,N]·w[N,K]`
+    /// with M = tokens.
+    pub fn linear_gemms(&self, tokens: u64) -> Vec<GemmWorkload> {
+        assert!(tokens > 0);
+        let h = self.hidden;
+        let f = self.ffn;
+        let mut v = vec![
+            // Q, K, V projections: three H×H GEMMs per layer.
+            GemmWorkload {
+                name: "qkv",
+                shape: GemmShape::new(tokens, h, h),
+                count: 3 * self.layers,
+            },
+            GemmWorkload {
+                name: "attn_out",
+                shape: GemmShape::new(tokens, h, h),
+                count: self.layers,
+            },
+            GemmWorkload {
+                name: "ffn1",
+                shape: GemmShape::new(tokens, h, f),
+                count: self.layers,
+            },
+            GemmWorkload {
+                name: "ffn2",
+                shape: GemmShape::new(tokens, f, h),
+                count: self.layers,
+            },
+        ];
+        if let Some(vocab) = self.vocab {
+            v.push(GemmWorkload {
+                name: "lm_head",
+                shape: GemmShape::new(tokens, h, vocab),
+                count: 1,
+            });
+        }
+        v
+    }
+
+    /// Attention score (Q·Kᵀ) and context (P·V) matmuls — per head.
+    pub fn attention_gemms(&self, tokens: u64) -> Vec<GemmWorkload> {
+        let d = self.hidden / self.heads;
+        vec![
+            GemmWorkload {
+                name: "qk_t",
+                shape: GemmShape::new(tokens, d, tokens),
+                count: self.layers * self.heads,
+            },
+            GemmWorkload {
+                name: "attn_v",
+                shape: GemmShape::new(tokens, tokens, d),
+                count: self.layers * self.heads,
+            },
+        ]
+    }
+
+    /// Total linear-projection MACs of one forward pass.
+    pub fn total_linear_macs(&self, tokens: u64) -> u64 {
+        self.linear_gemms(tokens).iter().map(|g| g.total_macs()).sum()
+    }
+
+    /// Approximate parameter count implied by the spec's linear layers
+    /// (sanity check against `params_b`).
+    pub fn linear_param_count(&self) -> u64 {
+        let h = self.hidden;
+        let per_layer = 4 * h * h + 2 * h * self.ffn;
+        self.layers * per_layer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_base_gemm_inventory() {
+        let m = bert_base();
+        let gemms = m.linear_gemms(384);
+        assert_eq!(gemms.len(), 4); // no LM head configured by default zoo
+        let qkv = &gemms[0];
+        assert_eq!(qkv.shape, GemmShape::new(384, 768, 768));
+        assert_eq!(qkv.count, 36); // 3 × 12 layers
+        let ffn1 = gemms.iter().find(|g| g.name == "ffn1").unwrap();
+        assert_eq!(ffn1.shape, GemmShape::new(384, 768, 3072));
+    }
+
+    #[test]
+    fn linear_params_match_published_order() {
+        // BERT-Base linear params ≈ 85M of the 110M total.
+        let p = bert_base().linear_param_count();
+        assert!((80_000_000..90_000_000).contains(&p), "{p}");
+        // GPT-3 ≈ 174B of 175B.
+        let g = gpt3().linear_param_count();
+        assert!((150_000_000_000..200_000_000_000).contains(&g), "{g}");
+    }
+
+    #[test]
+    fn attention_gemms_scale_with_seq() {
+        let m = bert_base();
+        let short = &m.attention_gemms(128)[0];
+        let long = &m.attention_gemms(512)[0];
+        assert_eq!(short.shape.k, 128);
+        assert_eq!(long.shape.k, 512);
+        assert_eq!(long.count, 12 * 12);
+    }
+
+    #[test]
+    fn macs_scale_linearly_with_tokens() {
+        let m = wav2vec2_large();
+        assert_eq!(m.total_linear_macs(200), 2 * m.total_linear_macs(100));
+    }
+}

@@ -1,0 +1,157 @@
+//! The concrete models the paper references (Table I & §IV), with
+//! hyper-parameters from their original publications.
+
+use super::ModelSpec;
+
+/// BERT-Base (Devlin et al., 2018): 12 layers, H=768, FFN=3072.
+/// Table IV's workload.
+pub fn bert_base() -> ModelSpec {
+    ModelSpec {
+        name: "bert-base",
+        hidden: 768,
+        ffn: 3072,
+        layers: 12,
+        heads: 12,
+        vocab: None,
+        default_seq: 512,
+        params_b: 0.110,
+    }
+}
+
+/// BERT-Large: 24 layers, H=1024 (the §I "length 3072" motivating example).
+pub fn bert_large() -> ModelSpec {
+    ModelSpec {
+        name: "bert-large",
+        hidden: 1024,
+        ffn: 4096,
+        layers: 24,
+        heads: 16,
+        vocab: None,
+        default_seq: 512,
+        params_b: 0.340,
+    }
+}
+
+/// Wav2Vec2.0-Large (Baevski et al., 2020): 24 layers, H=1024 — Table III's
+/// workload, evaluated on LibriSpeech lengths.
+pub fn wav2vec2_large() -> ModelSpec {
+    ModelSpec {
+        name: "wav2vec2-large",
+        hidden: 1024,
+        ffn: 4096,
+        layers: 24,
+        heads: 16,
+        vocab: None,
+        default_seq: 384, // LibriSpeech mean (7.6 s ≈ 384 tokens)
+        params_b: 0.317,
+    }
+}
+
+/// ViT-G/14 (Zhai et al., 2022) as cited in Table I: hidden 4096*, token
+/// length 518 (14×14 patches of 518² crops + cls), 1.8 B parameters.
+/// *The paper's Table I lists hidden = 4096; we follow the paper.
+pub fn vit_g14() -> ModelSpec {
+    ModelSpec {
+        name: "vit-g14",
+        hidden: 4096,
+        ffn: 4 * 4096,
+        layers: 48,
+        heads: 16,
+        vocab: None,
+        default_seq: 518,
+        params_b: 1.8,
+    }
+}
+
+/// Wav2Vec2-XLS-R-2B (Babu et al., 2021) as in Table I: hidden 2560,
+/// token length 1536, 2 B parameters.
+pub fn xlsr_2b() -> ModelSpec {
+    ModelSpec {
+        name: "wav2vec2-xls-r-2b",
+        hidden: 2560,
+        ffn: 4 * 2560,
+        layers: 48,
+        heads: 32,
+        vocab: None,
+        default_seq: 1536,
+        params_b: 2.0,
+    }
+}
+
+/// GPT-3 175B (Brown et al., 2020) as in Table I: hidden 12288, context
+/// 2048.
+pub fn gpt3() -> ModelSpec {
+    ModelSpec {
+        name: "gpt-3",
+        hidden: 12288,
+        ffn: 4 * 12288,
+        layers: 96,
+        heads: 96,
+        vocab: Some(50257),
+        default_seq: 2048,
+        params_b: 175.0,
+    }
+}
+
+/// Every model in the zoo (Table I order first, then the §IV workloads).
+pub fn all_models() -> Vec<ModelSpec> {
+    vec![
+        vit_g14(),
+        xlsr_2b(),
+        gpt3(),
+        bert_base(),
+        bert_large(),
+        wav2vec2_large(),
+    ]
+}
+
+/// Look a model up by CLI name.
+pub fn by_name(name: &str) -> anyhow::Result<ModelSpec> {
+    all_models()
+        .into_iter()
+        .find(|m| m.name == name)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown model '{name}' (known: {})",
+                all_models()
+                    .iter()
+                    .map(|m| m.name)
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_names_unique_and_resolvable() {
+        let models = all_models();
+        for m in &models {
+            assert_eq!(by_name(m.name).unwrap(), *m);
+        }
+        let mut names: Vec<_> = models.iter().map(|m| m.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), models.len());
+    }
+
+    #[test]
+    fn unknown_model_errors_with_list() {
+        let err = by_name("nope").unwrap_err().to_string();
+        assert!(err.contains("bert-base"));
+    }
+
+    #[test]
+    fn table1_attributes() {
+        // Table I row values the benches print.
+        assert_eq!(vit_g14().hidden, 4096);
+        assert_eq!(vit_g14().default_seq, 518);
+        assert_eq!(xlsr_2b().hidden, 2560);
+        assert_eq!(xlsr_2b().default_seq, 1536);
+        assert_eq!(gpt3().hidden, 12288);
+        assert_eq!(gpt3().default_seq, 2048);
+    }
+}

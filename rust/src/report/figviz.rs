@@ -1,0 +1,189 @@
+//! Fig. 1 / Fig. 2 regeneration: renders a schedule's tile movement as
+//! ASCII matrix maps — the executable version of the paper's arrow
+//! diagrams.  Each matrix cell shows the *order* in which its tile is
+//! first touched (base-36), so the circled-number sequences in the
+//! figures can be read directly off the output; stationary phases show
+//! up as repeated visits (the `visits` map).
+
+use crate::dataflow::{for_each_step, Scheme};
+use crate::gemm::{GemmShape, Tiling};
+
+/// Rendered dataflow maps for one schedule.
+#[derive(Clone, Debug)]
+pub struct FigViz {
+    pub scheme: Scheme,
+    /// First-touch order per input tile (gm × gn).
+    pub input_order: Vec<Vec<u64>>,
+    /// First-touch order per weight tile (gn × gk).
+    pub weight_order: Vec<Vec<u64>>,
+    /// Completion (store) order per output tile (gm × gk).
+    pub output_order: Vec<Vec<u64>>,
+    /// DRAM loads per input tile (reuse = 1 ⇒ stationary win).
+    pub input_loads: Vec<Vec<u64>>,
+    pub weight_loads: Vec<Vec<u64>>,
+}
+
+/// Trace `scheme` and collect the figure maps.
+pub fn trace_fig(scheme: Scheme, shape: &GemmShape, tiling: &Tiling) -> FigViz {
+    let (gm, gn, gk) = tiling.grid(shape);
+    let mut viz = FigViz {
+        scheme: scheme.resolve(shape),
+        input_order: vec![vec![u64::MAX; gn as usize]; gm as usize],
+        weight_order: vec![vec![u64::MAX; gk as usize]; gn as usize],
+        output_order: vec![vec![u64::MAX; gk as usize]; gm as usize],
+        input_loads: vec![vec![0; gn as usize]; gm as usize],
+        weight_loads: vec![vec![0; gk as usize]; gn as usize],
+    };
+    let mut touch = 0u64;
+    let mut stores = 0u64;
+    for_each_step(scheme, shape, tiling, |s| {
+        let (i, r, j) = (s.i as usize, s.r as usize, s.j as usize);
+        if viz.input_order[i][r] == u64::MAX {
+            viz.input_order[i][r] = touch;
+        }
+        if viz.weight_order[r][j] == u64::MAX {
+            viz.weight_order[r][j] = touch;
+        }
+        if s.load_input || s.scalar_traffic {
+            viz.input_loads[i][r] += 1;
+        }
+        if s.load_weight || s.scalar_traffic {
+            viz.weight_loads[r][j] += 1;
+        }
+        if s.store_out && viz.output_order[i][j] == u64::MAX {
+            viz.output_order[i][j] = stores;
+            stores += 1;
+        }
+        touch += 1;
+    });
+    viz
+}
+
+fn digit36(x: u64) -> char {
+    match x {
+        0..=9 => (b'0' + x as u8) as char,
+        10..=35 => (b'a' + (x - 10) as u8) as char,
+        _ => '*',
+    }
+}
+
+fn render_grid(title: &str, grid: &[Vec<u64>], rank: bool) -> String {
+    // rank mode: compress values to their order statistics so maps stay
+    // single-character even for long schedules.
+    let mut vals: Vec<u64> = grid.iter().flatten().copied().collect();
+    vals.sort_unstable();
+    vals.dedup();
+    let mut out = format!("{title}\n");
+    for row in grid {
+        out.push_str("  ");
+        for &v in row {
+            if v == u64::MAX {
+                out.push('.');
+            } else if rank {
+                let r = vals.binary_search(&v).unwrap() as u64;
+                out.push(digit36(r));
+            } else {
+                out.push(digit36(v));
+            }
+            out.push(' ');
+        }
+        out.push('\n');
+    }
+    out
+}
+
+impl FigViz {
+    /// Full figure text: touch-order maps + load counts.
+    pub fn render(&self) -> String {
+        let mut out = format!("== {} dataflow ==\n", self.scheme.name());
+        out += &render_grid("input matrix (first-touch order, M×N tiles):", &self.input_order, true);
+        out += &render_grid("weight matrix (first-touch order, N×K tiles):", &self.weight_order, true);
+        out += &render_grid("output matrix (completion order, M×K tiles):", &self.output_order, true);
+        out += &render_grid("input tile DRAM loads:", &self.input_loads, false);
+        out += &render_grid("weight tile DRAM loads:", &self.weight_loads, false);
+        out
+    }
+
+    /// Max loads of any input / weight tile — the figure's reuse story.
+    pub fn max_loads(&self) -> (u64, u64) {
+        let maxi = self.input_loads.iter().flatten().copied().max().unwrap_or(0);
+        let maxw = self.weight_loads.iter().flatten().copied().max().unwrap_or(0);
+        (maxi, maxw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> (GemmShape, Tiling) {
+        (GemmShape::new(64, 48, 80), Tiling::square(16))
+    }
+
+    #[test]
+    fn is_loads_input_once() {
+        let (shape, t) = small();
+        let viz = trace_fig(Scheme::Is, &shape, &t);
+        let (maxi, maxw) = viz.max_loads();
+        assert_eq!(maxi, 1); // Fig. 1b: input tiles enter once
+        assert_eq!(maxw as u64, shape.m / t.tm); // weights re-read per row block
+    }
+
+    #[test]
+    fn ws_loads_weight_once() {
+        let (shape, t) = small();
+        let viz = trace_fig(Scheme::Ws, &shape, &t);
+        let (maxi, maxw) = viz.max_loads();
+        assert_eq!(maxw, 1); // Fig. 1c
+        assert_eq!(maxi as u64, shape.k / t.tk);
+    }
+
+    #[test]
+    fn tas_resolves_before_rendering() {
+        let (shape, t) = small(); // M=64 < K=80 -> IS-OS
+        let viz = trace_fig(Scheme::Tas, &shape, &t);
+        assert_eq!(viz.scheme, Scheme::IsOs);
+        assert_eq!(viz.max_loads().0, 1);
+    }
+
+    #[test]
+    fn every_output_tile_completes() {
+        let (shape, t) = small();
+        for scheme in Scheme::FIXED {
+            let viz = trace_fig(scheme, &shape, &t);
+            assert!(
+                viz.output_order.iter().flatten().all(|&v| v != u64::MAX),
+                "{scheme:?} left output tiles incomplete"
+            );
+        }
+    }
+
+    #[test]
+    fn os_row_completes_row_major_os_col_column_major() {
+        let (shape, t) = small();
+        let row = trace_fig(Scheme::OsRow, &shape, &t).output_order;
+        // row-major: order increases along each row
+        for r in &row {
+            for w in r.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+        let col = trace_fig(Scheme::OsCol, &shape, &t).output_order;
+        for c in 0..col[0].len() {
+            for i in 1..col.len() {
+                assert!(col[i - 1][c] < col[i][c]);
+            }
+        }
+    }
+
+    #[test]
+    fn render_is_readable() {
+        let (shape, t) = small();
+        let txt = trace_fig(Scheme::IsOs, &shape, &t).render();
+        assert!(txt.contains("is-os dataflow"));
+        assert!(txt.contains("input matrix"));
+        // grid is gm rows of gn cells
+        let lines: Vec<&str> = txt.lines().collect();
+        assert!(lines.len() > 15);
+    }
+}

@@ -1,0 +1,339 @@
+//! Artifact execution engine: compile-once, weights-resident PJRT wrapper.
+//!
+//! On [`Engine::preload`] the HLO text is parsed and compiled and the
+//! artifact's weight slices are uploaded to device buffers **once**; per
+//! request only the (tiny) input tensor crosses the host/device boundary
+//! and `execute_b` runs with the resident weights — the hot path does no
+//! recompilation, no weight re-upload and no Python.
+
+use super::manifest::{ArgKind, DType, Manifest};
+use crate::util::bytes;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A host-side tensor crossing the engine boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(..) => DType::F32,
+            HostTensor::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            HostTensor::F32(v, _) => v.len(),
+            HostTensor::I32(v, _) => v.len(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v, _) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+}
+
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+    /// Pre-uploaded device buffers for weight args; `None` at input slots.
+    weight_bufs: Vec<Option<xla::PjRtBuffer>>,
+}
+
+/// The runtime engine. NOT `Send` (PJRT handles are thread-affine here);
+/// the coordinator owns one per device thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    weights: Vec<u8>,
+    loaded: BTreeMap<String, Loaded>,
+}
+
+impl Engine {
+    /// Open an artifact directory: parse manifest, map the checkpoint,
+    /// create the PJRT CPU client.  Compilation happens per artifact in
+    /// [`Engine::preload`] (or lazily on first execute).
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let weights_path = dir.join(&manifest.weights_bin);
+        let weights = std::fs::read(&weights_path)
+            .with_context(|| format!("reading {}", weights_path.display()))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Engine {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            weights,
+            loaded: BTreeMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.artifacts.iter().map(|a| a.name.clone()).collect()
+    }
+
+    /// Compile `name` and upload its weights; idempotent.
+    pub fn preload(&mut self, name: &str) -> Result<()> {
+        if self.loaded.contains_key(name) {
+            return Ok(());
+        }
+        let art = self.manifest.artifact(name)?.clone();
+        let hlo_path = self.dir.join(&art.hlo);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+
+        let mut weight_bufs = Vec::with_capacity(art.args.len());
+        for arg in &art.args {
+            match arg.kind {
+                ArgKind::Weight { offset, nbytes } => {
+                    let lo = offset as usize;
+                    let hi = lo + nbytes as usize;
+                    anyhow::ensure!(
+                        hi <= self.weights.len(),
+                        "weight '{}' [{lo}..{hi}) outside checkpoint ({} bytes)",
+                        arg.name,
+                        self.weights.len()
+                    );
+                    // NOTE: not `buffer_from_host_raw_bytes` — xla 0.1.6
+                    // passes `ElementType as i32` where the C API expects
+                    // `PrimitiveType`, so F32 is misread as F16 and the
+                    // buffer arrives half-sized.  The typed upload path
+                    // passes the correct primitive type.
+                    let slice = &self.weights[lo..hi];
+                    let buf = match arg.dtype {
+                        DType::F32 => self.client.buffer_from_host_buffer(
+                            &bytes::f32_from_le(slice)?,
+                            &arg.shape,
+                            None,
+                        ),
+                        DType::I32 => {
+                            let vals: Vec<i32> = slice
+                                .chunks_exact(4)
+                                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                                .collect();
+                            self.client.buffer_from_host_buffer(&vals, &arg.shape, None)
+                        }
+                    }
+                    .map_err(|e| {
+                        anyhow::anyhow!("uploading weight '{}': {e}", arg.name)
+                    })?;
+                    weight_bufs.push(Some(buf));
+                }
+                ArgKind::Input => weight_bufs.push(None),
+            }
+        }
+        self.loaded.insert(name.to_string(), Loaded { exe, weight_bufs });
+        Ok(())
+    }
+
+    /// Compile + upload every artifact in the manifest.
+    pub fn preload_all(&mut self) -> Result<()> {
+        for name in self.artifact_names() {
+            self.preload(&name)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `name` with per-request `inputs` (in manifest arg order,
+    /// weights skipped).  Returns the output tensors.
+    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.preload(name)?;
+        let art = self.manifest.artifact(name)?.clone();
+        let loaded = self.loaded.get(name).expect("preloaded");
+
+        let expected: Vec<&super::manifest::ArgMeta> =
+            art.input_args().into_iter().map(|(_, a)| a).collect();
+        anyhow::ensure!(
+            expected.len() == inputs.len(),
+            "{name}: expected {} inputs, got {}",
+            expected.len(),
+            inputs.len()
+        );
+        for (meta, t) in expected.iter().zip(inputs) {
+            anyhow::ensure!(
+                meta.dtype == t.dtype() && meta.shape == t.shape(),
+                "{name}: input '{}' expects {:?}{:?}, got {:?}{:?}",
+                meta.name,
+                meta.dtype,
+                meta.shape,
+                t.dtype(),
+                t.shape()
+            );
+        }
+
+        // Upload the per-request inputs, then assemble the arg list from
+        // resident weight buffers + the fresh input buffers.
+        let mut fresh: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let buf = match t {
+                HostTensor::F32(v, s) => self.client.buffer_from_host_buffer(v, s, None),
+                HostTensor::I32(v, s) => self.client.buffer_from_host_buffer(v, s, None),
+            }
+            .map_err(|e| anyhow::anyhow!("uploading input for {name}: {e}"))?;
+            fresh.push(buf);
+        }
+        let mut next_input = 0usize;
+        let mut arg_bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(art.args.len());
+        for slot in &loaded.weight_bufs {
+            match slot {
+                Some(buf) => arg_bufs.push(buf),
+                None => {
+                    arg_bufs.push(&fresh[next_input]);
+                    next_input += 1;
+                }
+            }
+        }
+
+        let result = loaded
+            .exe
+            .execute_b(&arg_bufs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {name}: {e}"))?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let elems = literal
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling result of {name}: {e}"))?;
+        anyhow::ensure!(
+            elems.len() == art.outputs.len(),
+            "{name}: manifest lists {} outputs, module returned {}",
+            art.outputs.len(),
+            elems.len()
+        );
+        let mut out = Vec::with_capacity(elems.len());
+        for (lit, meta) in elems.into_iter().zip(&art.outputs) {
+            let t = match meta.dtype {
+                DType::F32 => HostTensor::F32(
+                    lit.to_vec::<f32>()
+                        .map_err(|e| anyhow::anyhow!("reading output: {e}"))?,
+                    meta.shape.clone(),
+                ),
+                DType::I32 => HostTensor::I32(
+                    lit.to_vec::<i32>()
+                        .map_err(|e| anyhow::anyhow!("reading output: {e}"))?,
+                    meta.shape.clone(),
+                ),
+            };
+            anyhow::ensure!(
+                t.element_count() == meta.element_count(),
+                "{name}: output has {} elements, manifest says {}",
+                t.element_count(),
+                meta.element_count()
+            );
+            out.push(t);
+        }
+        Ok(out)
+    }
+
+    /// Run the stored golden input through the artifact and compare with
+    /// the stored oracle output. Returns the max abs error.
+    pub fn validate_golden(&mut self, name: &str) -> Result<f32> {
+        let art = self.manifest.artifact(name)?.clone();
+        let golden = art
+            .golden
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("{name} has no golden vectors"))?
+            .clone();
+        let input_meta = art
+            .input_args()
+            .first()
+            .map(|(_, a)| (*a).clone())
+            .ok_or_else(|| anyhow::anyhow!("{name} has no input args"))?;
+
+        let input = match input_meta.dtype {
+            DType::I32 => HostTensor::I32(
+                bytes::read_i32_file(&self.dir.join(&golden.input))?,
+                input_meta.shape.clone(),
+            ),
+            DType::F32 => HostTensor::F32(
+                bytes::read_f32_file(&self.dir.join(&golden.input))?,
+                input_meta.shape.clone(),
+            ),
+        };
+        anyhow::ensure!(
+            input.element_count() == input_meta.element_count(),
+            "{name}: golden input size mismatch"
+        );
+        let want = bytes::read_f32_file(&self.dir.join(&golden.output))?;
+        let got = self.execute(name, &[input])?;
+        let got = got[0].as_f32()?;
+        anyhow::ensure!(
+            got.len() == want.len(),
+            "{name}: golden output length {} vs {}",
+            want.len(),
+            got.len()
+        );
+        let mut max_err = 0f32;
+        for (g, w) in got.iter().zip(&want) {
+            max_err = max_err.max((g - w).abs());
+        }
+        Ok(max_err)
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.loaded.len()
+    }
+}
+
+// Engine unit tests that need real artifacts live in rust/tests/ (they
+// skip when `make artifacts` has not run); pure-logic tests are here.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_accessors() {
+        let t = HostTensor::F32(vec![1.0, 2.0], vec![2]);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.element_count(), 2);
+        assert!(t.as_i32().is_err());
+        let i = HostTensor::I32(vec![1, 2, 3], vec![3]);
+        assert_eq!(i.as_i32().unwrap(), &[1, 2, 3]);
+        assert_eq!(i.shape(), &[3]);
+    }
+
+    #[test]
+    fn engine_load_fails_cleanly_without_artifacts() {
+        let err = Engine::load(Path::new("/nonexistent/artifacts"))
+            .err()
+            .expect("must fail");
+        assert!(err.to_string().contains("manifest.json"));
+    }
+}

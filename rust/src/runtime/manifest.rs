@@ -1,0 +1,301 @@
+//! Typed view of `artifacts/manifest.json` (written by `aot.py`).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor element type used in artifacts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unsupported dtype '{s}'"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// Where an argument's data comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArgKind {
+    /// Slice of `weights.bin` at `offset`, `nbytes` long.
+    Weight { offset: u64, nbytes: u64 },
+    /// Provided per request.
+    Input,
+}
+
+/// One executable argument.
+#[derive(Clone, Debug)]
+pub struct ArgMeta {
+    pub name: String,
+    pub kind: ArgKind,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl ArgMeta {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Output tensor description.
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorMeta {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Golden input/output vector paths (relative to the artifacts dir).
+#[derive(Clone, Debug)]
+pub struct GoldenMeta {
+    pub input: PathBuf,
+    pub output: PathBuf,
+}
+
+/// One AOT-compiled artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub hlo: PathBuf,
+    /// "bert" or "linear".
+    pub kind: String,
+    pub batch: Option<u64>,
+    pub seq: Option<u64>,
+    pub args: Vec<ArgMeta>,
+    pub outputs: Vec<TensorMeta>,
+    /// TAS scheme the compile path chose per projection (bert artifacts).
+    pub schemes: BTreeMap<String, String>,
+    pub flops: u64,
+    pub golden: Option<GoldenMeta>,
+}
+
+impl ArtifactMeta {
+    /// Indices of the per-request (non-weight) args.
+    pub fn input_args(&self) -> Vec<(usize, &ArgMeta)> {
+        self.args
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| matches!(a.kind, ArgKind::Input))
+            .collect()
+    }
+
+    /// Token count M of a bert artifact (batch × seq).
+    pub fn tokens(&self) -> Option<u64> {
+        Some(self.batch? * self.seq?)
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub weights_bin: PathBuf,
+    /// Model hyper-parameters (vocab/hidden/...).
+    pub model: BTreeMap<String, u64>,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(&json)
+    }
+
+    pub fn from_json(json: &Json) -> Result<Manifest> {
+        let version = json.req("version")?.as_u64().context("version")?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let model = json
+            .req("model")?
+            .as_obj()
+            .context("model")?
+            .iter()
+            .filter_map(|(k, v)| v.as_u64().map(|n| (k.clone(), n)))
+            .collect();
+        let mut artifacts = Vec::new();
+        for a in json.req("artifacts")?.as_arr().context("artifacts")? {
+            artifacts.push(parse_artifact(a)?);
+        }
+        anyhow::ensure!(!artifacts.is_empty(), "manifest lists no artifacts");
+        Ok(Manifest {
+            weights_bin: PathBuf::from(
+                json.req("weights_bin")?.as_str().context("weights_bin")?,
+            ),
+            model,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "artifact '{name}' not in manifest (have: {})",
+                    self.artifacts
+                        .iter()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// (batch, seq) buckets of all bert artifacts, ascending by tokens.
+    pub fn bert_buckets(&self) -> Vec<(u64, u64, String)> {
+        let mut v: Vec<(u64, u64, String)> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "bert")
+            .filter_map(|a| Some((a.batch?, a.seq?, a.name.clone())))
+            .collect();
+        v.sort_by_key(|(b, s, _)| (b * s, *s));
+        v
+    }
+}
+
+fn parse_artifact(a: &Json) -> Result<ArtifactMeta> {
+    let name = a.req("name")?.as_str().context("name")?.to_string();
+    let ctx = |what: &str| format!("artifact '{name}': {what}");
+    let mut args = Vec::new();
+    for arg in a.req("args")?.as_arr().with_context(|| ctx("args"))? {
+        let aname = arg.req("name")?.as_str().context("arg name")?.to_string();
+        let kind = match arg.req("kind")?.as_str().context("arg kind")? {
+            "weight" => ArgKind::Weight {
+                offset: arg.req("offset")?.as_u64().context("offset")?,
+                nbytes: arg.req("nbytes")?.as_u64().context("nbytes")?,
+            },
+            "input" => ArgKind::Input,
+            other => bail!("{}: unknown arg kind '{other}'", ctx(&aname)),
+        };
+        args.push(ArgMeta {
+            name: aname,
+            kind,
+            dtype: DType::parse(arg.req("dtype")?.as_str().context("dtype")?)?,
+            shape: parse_shape(arg.req("shape")?)?,
+        });
+    }
+    let mut outputs = Vec::new();
+    for o in a.req("outputs")?.as_arr().with_context(|| ctx("outputs"))? {
+        outputs.push(TensorMeta {
+            dtype: DType::parse(o.req("dtype")?.as_str().context("dtype")?)?,
+            shape: parse_shape(o.req("shape")?)?,
+        });
+    }
+    let schemes = a
+        .get("schemes")
+        .and_then(|s| s.as_obj())
+        .map(|m| {
+            m.iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                .collect()
+        })
+        .unwrap_or_default();
+    let golden = a.get("golden").and_then(|g| {
+        Some(GoldenMeta {
+            input: PathBuf::from(g.get("input")?.as_str()?),
+            output: PathBuf::from(g.get("output")?.as_str()?),
+        })
+    });
+    Ok(ArtifactMeta {
+        hlo: PathBuf::from(a.req("hlo")?.as_str().context("hlo")?),
+        kind: a.req("kind")?.as_str().context("kind")?.to_string(),
+        batch: a.get("batch").and_then(|v| v.as_u64()),
+        seq: a.get("seq").and_then(|v| v.as_u64()),
+        args,
+        outputs,
+        schemes,
+        flops: a.get("flops").and_then(|v| v.as_u64()).unwrap_or(0),
+        golden,
+        name,
+    })
+}
+
+fn parse_shape(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .context("shape not an array")?
+        .iter()
+        .map(|d| d.as_u64().map(|x| x as usize).context("bad dim"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "weights_bin": "weights.bin",
+      "model": {"vocab": 512, "hidden": 128},
+      "artifacts": [
+        {"name": "bert_b1_s32", "hlo": "bert_b1_s32.hlo.txt", "kind": "bert",
+         "batch": 1, "seq": 32,
+         "args": [
+           {"name": "emb", "kind": "weight", "dtype": "f32",
+            "shape": [512, 128], "offset": 0, "nbytes": 262144},
+           {"name": "ids", "kind": "input", "dtype": "i32", "shape": [1, 32]}
+         ],
+         "outputs": [{"dtype": "f32", "shape": [1, 32, 512]}],
+         "schemes": {"qkv": "is_os"},
+         "flops": 1000,
+         "golden": {"input": "golden/in.bin", "output": "golden/out.bin"}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.artifact("bert_b1_s32").unwrap();
+        assert_eq!(a.tokens(), Some(32));
+        assert_eq!(a.args.len(), 2);
+        assert_eq!(
+            a.args[0].kind,
+            ArgKind::Weight { offset: 0, nbytes: 262144 }
+        );
+        assert_eq!(a.args[0].element_count(), 512 * 128);
+        assert_eq!(a.input_args().len(), 1);
+        assert_eq!(a.schemes["qkv"], "is_os");
+        assert_eq!(a.outputs[0].element_count(), 32 * 512);
+        assert_eq!(m.bert_buckets(), vec![(1, 32, "bert_b1_s32".into())]);
+    }
+
+    #[test]
+    fn missing_artifact_error_lists_known() {
+        let m = Manifest::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        let err = m.artifact("nope").unwrap_err().to_string();
+        assert!(err.contains("bert_b1_s32"));
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let j = Json::parse(&SAMPLE.replace("\"version\": 1", "\"version\": 9")).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        let j = Json::parse(&SAMPLE.replace("\"i32\"", "\"f64\"")).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO text + weights checkpoint + manifest) and executes them on the CPU
+//! PJRT client.  This is the only place Python output crosses into the
+//! request path — as compiled artifacts, never as an interpreter.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serialises `HloModuleProto` with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, HostTensor};
+pub use manifest::{ArgKind, ArgMeta, ArtifactMeta, DType, Manifest};
+
+use std::path::{Path, PathBuf};
+
+/// Default artifacts directory: `$TAS_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("TAS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// True if a built artifact set exists at `dir` (manifest present).
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("manifest.json").is_file()
+}

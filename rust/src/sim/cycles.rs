@@ -1,0 +1,137 @@
+//! First-order latency model: compute and DRAM streaming overlap (double
+//! buffering), but read↔write turnaround stalls serialise — that is the
+//! §II-d penalty the hybrids remove.
+//!
+//! EMA (the paper's headline metric) needs no timing; this model exists to
+//! show the *communication-efficiency* claim (§I: "nearly twice the
+//! efficiency compared to the previous fixed stationary method") as a
+//! cycle count, and to let the coordinator estimate request latency.
+
+use crate::arch::PeArray;
+use crate::config::AcceleratorConfig;
+use crate::dataflow::Scheme;
+use crate::gemm::{GemmShape, Tiling};
+use crate::sim::ema::simulate_ema;
+
+/// Cycle estimate for one GEMM under one scheme.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CycleEstimate {
+    /// PE-array busy cycles (incl. pipeline fill per tile pass).
+    pub compute_cycles: u64,
+    /// DRAM streaming cycles (words / bandwidth).
+    pub dram_stream_cycles: u64,
+    /// Turnaround stall cycles (direction switches × penalty).
+    pub turnaround_cycles: u64,
+    /// Total latency: max(compute, stream) + stalls.
+    pub total_cycles: u64,
+}
+
+impl CycleEstimate {
+    /// Fraction of total time lost to read/write turnaround.
+    pub fn stall_fraction(&self) -> f64 {
+        if self.total_cycles == 0 {
+            0.0
+        } else {
+            self.turnaround_cycles as f64 / self.total_cycles as f64
+        }
+    }
+
+    /// Effective MAC utilisation vs the PE array peak.
+    pub fn utilization(&self, shape: &GemmShape, pe: &PeArray) -> f64 {
+        if self.total_cycles == 0 {
+            return 0.0;
+        }
+        shape.macs() as f64 / (self.total_cycles * pe.macs_per_cycle()) as f64
+    }
+}
+
+/// Estimate cycles for `scheme` on `shape` under `cfg`.
+pub fn estimate_cycles(scheme: Scheme, shape: &GemmShape, cfg: &AcceleratorConfig) -> CycleEstimate {
+    let tiling = cfg.tiling();
+    estimate_cycles_tiled(scheme, shape, &tiling, cfg)
+}
+
+/// Same, with an explicit tiling (ablation sweeps).
+pub fn estimate_cycles_tiled(
+    scheme: Scheme,
+    shape: &GemmShape,
+    tiling: &Tiling,
+    cfg: &AcceleratorConfig,
+) -> CycleEstimate {
+    let pe = cfg.pe_array();
+    let mut dram = cfg.dram();
+    let sim = simulate_ema(scheme, shape, tiling, &mut dram);
+
+    // Compute: each of the `steps` tile passes is a tile MAC burst; model
+    // the whole GEMM as total MACs at array throughput + per-pass fill.
+    let fill = pe.fill_latency * sim.steps;
+    let mac_cycles = shape.macs().div_ceil(pe.macs_per_cycle());
+    let compute_cycles = mac_cycles + fill;
+
+    let dram_stream_cycles = dram
+        .stats()
+        .total_words()
+        .div_ceil(cfg.dram_bandwidth);
+    let turnaround_cycles = dram.stats().direction_switches * cfg.dram_turnaround;
+
+    CycleEstimate {
+        compute_cycles,
+        dram_stream_cycles,
+        turnaround_cycles,
+        total_cycles: compute_cycles.max(dram_stream_cycles) + turnaround_cycles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AcceleratorConfig {
+        AcceleratorConfig::default()
+    }
+
+    #[test]
+    fn hybrid_faster_than_spilling_parent() {
+        // Spilling schemes move more words AND switch direction per step.
+        let shape = GemmShape::new(512, 1024, 1024);
+        let is = estimate_cycles(Scheme::Is, &shape, &cfg());
+        let is_os = estimate_cycles(Scheme::IsOs, &shape, &cfg());
+        assert!(is_os.total_cycles < is.total_cycles);
+        assert!(is_os.turnaround_cycles < is.turnaround_cycles);
+    }
+
+    #[test]
+    fn naive_is_worst() {
+        let shape = GemmShape::new(256, 512, 512);
+        let naive = estimate_cycles(Scheme::Naive, &shape, &cfg());
+        for s in [Scheme::Is, Scheme::Ws, Scheme::OsRow, Scheme::Tas] {
+            assert!(
+                estimate_cycles(s, &shape, &cfg()).total_cycles <= naive.total_cycles,
+                "{s:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn stall_fraction_bounded() {
+        let shape = GemmShape::new(128, 256, 256);
+        for s in Scheme::FIXED {
+            let e = estimate_cycles(s, &shape, &cfg());
+            let f = e.stall_fraction();
+            assert!((0.0..=1.0).contains(&f), "{s:?}: {f}");
+            assert_eq!(
+                e.total_cycles,
+                e.compute_cycles.max(e.dram_stream_cycles) + e.turnaround_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn utilization_in_unit_range() {
+        let shape = GemmShape::new(512, 512, 512);
+        let pe = cfg().pe_array();
+        let e = estimate_cycles(Scheme::Tas, &shape, &cfg());
+        let u = e.utilization(&shape, &pe);
+        assert!(u > 0.0 && u <= 1.0, "{u}");
+    }
+}

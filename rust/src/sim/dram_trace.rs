@@ -1,0 +1,150 @@
+//! Transaction-level DRAM replay: runs a schedule against the bank/row
+//! timing model with real matrix addresses, quantifying §II-d's stall
+//! argument — the spilling schemes don't just move more words, they
+//! interleave directions and trash row-buffer locality.
+
+use crate::arch::dram::DramDir;
+use crate::arch::dram_timing::{DramTiming, DramTimingConfig, DramTimingStats, MatrixLayout};
+use crate::dataflow::{for_each_step, Scheme};
+use crate::gemm::{tile_extent, GemmShape, Tiling};
+
+/// Replay `scheme` at transaction granularity (one transaction per tile
+/// row — the unit a DMA engine would issue) and return timing stats.
+pub fn simulate_dram_timing(
+    scheme: Scheme,
+    shape: &GemmShape,
+    tiling: &Tiling,
+    cfg: DramTimingConfig,
+) -> DramTimingStats {
+    let layout = MatrixLayout::for_gemm(shape, &cfg);
+    let mut dram = DramTiming::new(cfg);
+
+    for_each_step(scheme, shape, tiling, |s| {
+        let mi = tile_extent(shape.m, tiling.tm, s.i);
+        let nr = tile_extent(shape.n, tiling.tn, s.r);
+        let kj = tile_extent(shape.k, tiling.tk, s.j);
+        let (i0, r0, j0) = (s.i * tiling.tm, s.r * tiling.tn, s.j * tiling.tk);
+
+        if s.scalar_traffic {
+            // naive: stream each operand tile once per scalar pass — model
+            // as kj repetitions of the input tile rows & mi of the weight.
+            for rep in 0..kj.min(4) {
+                // cap reps: timing shape, not words (words counted in ema)
+                let _ = rep;
+                for di in 0..mi {
+                    dram.access(DramDir::Read, layout.input_base + (i0 + di) * layout.input_ld + r0, nr);
+                }
+            }
+            for di in 0..mi.min(4) {
+                let _ = di;
+                for dr in 0..nr {
+                    dram.access(DramDir::Read, layout.weight_base + (r0 + dr) * layout.weight_ld + j0, kj);
+                }
+            }
+            for di in 0..mi {
+                dram.access(DramDir::Write, layout.output_base + (i0 + di) * layout.output_ld + j0, kj);
+            }
+            return;
+        }
+        if s.load_input {
+            for di in 0..mi {
+                dram.access(
+                    DramDir::Read,
+                    layout.input_base + (i0 + di) * layout.input_ld + r0,
+                    nr,
+                );
+            }
+        }
+        if s.load_weight {
+            for dr in 0..nr {
+                dram.access(
+                    DramDir::Read,
+                    layout.weight_base + (r0 + dr) * layout.weight_ld + j0,
+                    kj,
+                );
+            }
+        }
+        if s.psum_fetch {
+            for di in 0..mi {
+                dram.access(
+                    DramDir::Read,
+                    layout.output_base + (i0 + di) * layout.output_ld + j0,
+                    kj,
+                );
+            }
+        }
+        if s.psum_spill || s.store_out {
+            for di in 0..mi {
+                dram.access(
+                    DramDir::Write,
+                    layout.output_base + (i0 + di) * layout.output_ld + j0,
+                    kj,
+                );
+            }
+        }
+    });
+    dram.stats()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(scheme: Scheme, shape: &GemmShape) -> DramTimingStats {
+        simulate_dram_timing(scheme, shape, &Tiling::square(16), DramTimingConfig::default())
+    }
+
+    #[test]
+    fn hybrids_switch_direction_less_and_run_faster() {
+        let shape = GemmShape::new(256, 256, 512);
+        let is = stats(Scheme::Is, &shape);
+        let is_os = stats(Scheme::IsOs, &shape);
+        assert!(is_os.dir_switches * 4 < is.dir_switches,
+                "{} vs {}", is_os.dir_switches, is.dir_switches);
+        assert!(is_os.cycles < is.cycles);
+        let ws = stats(Scheme::Ws, &shape);
+        let ws_os = stats(Scheme::WsOs, &shape);
+        assert!(ws_os.cycles < ws.cycles);
+    }
+
+    #[test]
+    fn hybrid_moves_fewer_words_in_fewer_cycles() {
+        // The spilling scheme's psum round-trips keep the bus streaming
+        // (high raw bandwidth!) — the win is *useful* traffic: the hybrid
+        // transfers a fraction of the words and finishes earlier.
+        let shape = GemmShape::new(512, 512, 512);
+        let spill = stats(Scheme::Ws, &shape);
+        let hybrid = stats(Scheme::WsOs, &shape);
+        assert!(hybrid.words * 2 < spill.words);
+        assert!(hybrid.cycles < spill.cycles);
+        // sequential tile streams keep row locality reasonable
+        assert!(hybrid.row_hit_rate() >= 0.4, "{}", hybrid.row_hit_rate());
+    }
+
+    #[test]
+    fn word_counts_match_flat_model_for_tiled_schemes() {
+        // the timing replay must move exactly the words the EMA model
+        // counts (spilling and hybrid schemes; naive uses capped reps).
+        use crate::arch::Dram;
+        use crate::sim::simulate_ema;
+        let shape = GemmShape::new(96, 128, 160);
+        let tiling = Tiling::square(16);
+        for scheme in [Scheme::Is, Scheme::Ws, Scheme::OsRow, Scheme::IsOs, Scheme::WsOs] {
+            let timing = simulate_dram_timing(scheme, &shape, &tiling, DramTimingConfig::default());
+            let mut d = Dram::new(16, 12);
+            let ema = simulate_ema(scheme, &shape, &tiling, &mut d);
+            let expected = ema.total_words() + ema.psum_readback_words();
+            assert_eq!(timing.words, expected, "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn row_hit_rate_in_unit_range() {
+        let shape = GemmShape::new(128, 128, 128);
+        for scheme in [Scheme::Is, Scheme::IsOs, Scheme::OsRow] {
+            let s = stats(scheme, &shape);
+            let r = s.row_hit_rate();
+            assert!((0.0..=1.0).contains(&r), "{scheme:?}: {r}");
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! External-memory-access replay: the simulator counterpart of Table II.
+//!
+//! Walks every schedule step, charging the DRAM model with the exact word
+//! counts of each transfer (ragged edge tiles use their true extents).
+//! Within a step the access order is: operand reads, psum fetch (read),
+//! then psum spill / output store (writes) — direction switches are
+//! counted by [`crate::arch::Dram`], reproducing §II-d's concurrent
+//! read/write problem for the spilling schemes.
+
+use crate::arch::dram::{Dram, DramStats, Stream};
+use crate::dataflow::{for_each_step, Scheme};
+use crate::gemm::{tile_extent, GemmShape, Tiling};
+
+/// Simulated EMA result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SimEma {
+    pub stats: DramStats,
+    /// Schedule steps replayed.
+    pub steps: u64,
+}
+
+impl SimEma {
+    /// Table II accounting: (input reads, weight reads, output writes).
+    pub fn table2(&self) -> (u64, u64, u64) {
+        self.stats.table2_words()
+    }
+
+    pub fn total_words(&self) -> u64 {
+        let (i, w, o) = self.table2();
+        i + w + o
+    }
+
+    /// Extended accounting: psum re-fetch traffic the paper folds away.
+    pub fn psum_readback_words(&self) -> u64 {
+        self.stats.psum_read_words
+    }
+}
+
+/// Replay `scheme` on `shape`/`tiling` over a fresh DRAM and count EMA.
+pub fn simulate_ema(scheme: Scheme, shape: &GemmShape, tiling: &Tiling, dram: &mut Dram) -> SimEma {
+    let mut steps = 0u64;
+    for_each_step(scheme, shape, tiling, |s| {
+        steps += 1;
+        let mi = tile_extent(shape.m, tiling.tm, s.i);
+        let nr = tile_extent(shape.n, tiling.tn, s.r);
+        let kj = tile_extent(shape.k, tiling.tk, s.j);
+        if s.scalar_traffic {
+            // Naive: per-MAC operand fetches and psum writes (3·MNK).
+            let macs = mi * nr * kj;
+            dram.transfer(Stream::Input, macs);
+            dram.transfer(Stream::Weight, macs);
+            if s.store_out {
+                // Final contraction step: its per-MAC writes complete the
+                // output; account the last tile-depth as Output stream.
+                dram.psum_write(macs.saturating_sub(mi * kj));
+                dram.transfer(Stream::Output, mi * kj);
+            } else {
+                dram.psum_write(macs);
+            }
+            return;
+        }
+        if s.load_input {
+            dram.transfer(Stream::Input, mi * nr);
+        }
+        if s.load_weight {
+            dram.transfer(Stream::Weight, nr * kj);
+        }
+        if s.psum_fetch {
+            dram.psum_read(mi * kj);
+        }
+        if s.psum_spill {
+            dram.psum_write(mi * kj);
+        }
+        if s.store_out {
+            dram.transfer(Stream::Output, mi * kj);
+        }
+    });
+    SimEma { stats: dram.stats(), steps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{analytic, ema as analytic_ema};
+    use crate::util::check::property;
+    use crate::util::prng::Rng;
+
+    fn run(scheme: Scheme, shape: &GemmShape, tiling: &Tiling) -> SimEma {
+        let mut dram = Dram::new(16, 12);
+        simulate_ema(scheme, shape, tiling, &mut dram)
+    }
+
+    /// THE central invariant: replayed counts == Table II closed forms,
+    /// for every scheme, exact even on ragged shapes.
+    #[test]
+    fn sim_matches_analytic_exactly() {
+        property("sim == analytic", 150, |rng: &mut Rng| {
+            let shape = GemmShape::new(
+                rng.gen_in(1, 300),
+                rng.gen_in(1, 300),
+                rng.gen_in(1, 300),
+            );
+            let t = Tiling::square(*rng.choose(&[4, 8, 16, 32]));
+            for scheme in Scheme::FIXED {
+                let sim = run(scheme, &shape, &t);
+                let ana = analytic_ema(scheme, &shape, &t);
+                assert_eq!(
+                    sim.table2(),
+                    (ana.input, ana.weight, ana.output),
+                    "{scheme:?} on {shape:?}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn sim_matches_analytic_with_psum_windows() {
+        property("sim == analytic (windows)", 100, |rng: &mut Rng| {
+            let shape = GemmShape::new(
+                rng.gen_in(1, 300),
+                rng.gen_in(1, 300),
+                rng.gen_in(1, 300),
+            );
+            let t0 = Tiling::square(16);
+            let kp = rng.gen_in(1, 8) * 16;
+            let mp = rng.gen_in(1, 8) * 16;
+            let t = Tiling { kp: Some(kp), mp: Some(mp), ..t0 };
+            for scheme in [Scheme::IsOs, Scheme::WsOs, Scheme::Tas] {
+                let sim = run(scheme, &shape, &t);
+                let ana = analytic_ema(scheme, &shape, &t);
+                assert_eq!(
+                    sim.table2(),
+                    (ana.input, ana.weight, ana.output),
+                    "{scheme:?} on {shape:?} kp={kp} mp={mp}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn naive_total_is_3mnk() {
+        let shape = GemmShape::new(48, 32, 80);
+        let sim = run(Scheme::Naive, &shape, &Tiling::square(16));
+        assert_eq!(sim.total_words(), 3 * shape.macs());
+    }
+
+    /// §II-d: spilling schemes (IS/WS) interleave psum writes with operand
+    /// reads — direction switches scale with step count.  The proposed
+    /// hybrids only write when a psum window completes.
+    #[test]
+    fn hybrids_slash_direction_switches() {
+        let shape = GemmShape::new(256, 256, 256);
+        let t = Tiling::square(16);
+        let is = run(Scheme::Is, &shape, &t).stats.direction_switches;
+        let is_os = run(Scheme::IsOs, &shape, &t).stats.direction_switches;
+        let ws = run(Scheme::Ws, &shape, &t).stats.direction_switches;
+        let ws_os = run(Scheme::WsOs, &shape, &t).stats.direction_switches;
+        assert!(is_os * 4 < is, "is {is} vs is-os {is_os}");
+        assert!(ws_os * 4 < ws, "ws {ws} vs ws-os {ws_os}");
+    }
+
+    #[test]
+    fn hybrids_have_zero_psum_readback() {
+        let shape = GemmShape::new(128, 96, 160);
+        let t = Tiling::square(16);
+        for scheme in [Scheme::OsRow, Scheme::OsCol, Scheme::IsOs, Scheme::WsOs] {
+            assert_eq!(run(scheme, &shape, &t).psum_readback_words(), 0);
+        }
+        assert!(run(Scheme::Is, &shape, &t).psum_readback_words() > 0);
+        assert!(run(Scheme::Ws, &shape, &t).psum_readback_words() > 0);
+    }
+
+    #[test]
+    fn tas_picks_smaller_total() {
+        property("tas optimal in sim", 80, |rng: &mut Rng| {
+            // divisible shapes: the sign rule is exactly the argmin
+            let shape = GemmShape::new(
+                rng.gen_in(1, 25) * 16,
+                rng.gen_in(1, 25) * 16,
+                rng.gen_in(1, 25) * 16,
+            );
+            let t = Tiling::square(16);
+            let tas = run(Scheme::Tas, &shape, &t).total_words();
+            let is_os = run(Scheme::IsOs, &shape, &t).total_words();
+            let ws_os = run(Scheme::WsOs, &shape, &t).total_words();
+            assert_eq!(tas, is_os.min(ws_os));
+        });
+    }
+
+    #[test]
+    fn decision_quantity_matches_table3_column() {
+        // Table III's IS-WS column = MN - NK.
+        let shape = GemmShape::new(115, 1024, 1024);
+        let d = analytic::is_ws_difference(&shape);
+        assert_eq!(d, 115 * 1024 - 1024 * 1024);
+    }
+}

@@ -1,0 +1,29 @@
+//! Trace-driven accelerator simulator.
+//!
+//! Replays a dataflow schedule ([`crate::dataflow::schedule`]) against the
+//! hardware model ([`crate::arch`]) and reports:
+//!
+//! * [`ema`] — exact per-stream DRAM word counts + read↔write turnaround
+//!   switches (the measurement instrument behind Tables II–IV),
+//! * [`occupancy`] — peak psum-register and SRAM usage (verifies §III-B's
+//!   capacity argument),
+//! * [`functional`] — numeric execution of the schedule on real f32 data
+//!   (proves every schedule computes the same GEMM),
+//! * [`cycles`] — a first-order latency model (compute/DRAM overlap with
+//!   turnaround stalls).
+
+pub mod cycles;
+pub mod dram_trace;
+pub mod ema;
+pub mod functional;
+pub mod occupancy;
+pub mod pipeline;
+pub mod roofline;
+
+pub use cycles::{estimate_cycles, CycleEstimate};
+pub use dram_trace::simulate_dram_timing;
+pub use ema::{simulate_ema, SimEma};
+pub use roofline::{ridge_intensity, roofline, RooflinePoint};
+pub use functional::execute_schedule;
+pub use occupancy::{measure_occupancy, Occupancy};
+pub use pipeline::{simulate_pipeline, PipelineStats};

@@ -1,0 +1,105 @@
+//! Internal-capacity measurement: peak live partial sums and SRAM tile
+//! residency per schedule — the quantitative form of §III-B's argument
+//! that plain IS/WS need up to K (resp. M) psums while the hybrids cap
+//! the live set at the k'/m' window.
+
+use crate::dataflow::{for_each_step, Scheme};
+use crate::gemm::{tile_extent, GemmShape, Tiling};
+use std::collections::HashSet;
+
+/// Peak internal-resource usage of one schedule replay.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Occupancy {
+    /// Peak live partial-sum words (register-file demand).
+    pub peak_psum_words: u64,
+    /// Peak resident operand-tile words (SRAM demand: one stationary tile
+    /// + one streaming tile double-buffered).
+    pub peak_sram_words: u64,
+}
+
+/// Replay and measure internal occupancy (no capacity enforcement; use
+/// the result to check a [`crate::config::AcceleratorConfig`]).
+pub fn measure_occupancy(scheme: Scheme, shape: &GemmShape, tiling: &Tiling) -> Occupancy {
+    let mut live: HashSet<(u64, u64)> = HashSet::new();
+    let mut live_words = 0u64;
+    let mut occ = Occupancy::default();
+    for_each_step(scheme, shape, tiling, |s| {
+        let mi = tile_extent(shape.m, tiling.tm, s.i);
+        let nr = tile_extent(shape.n, tiling.tn, s.r);
+        let kj = tile_extent(shape.k, tiling.tk, s.j);
+        // Psum tile (i, j) becomes live on first touch.
+        if live.insert((s.i, s.j)) {
+            live_words += mi * kj;
+        }
+        occ.peak_psum_words = occ.peak_psum_words.max(live_words);
+        // Spill or final store retires the live tile.
+        if s.psum_spill || s.store_out {
+            if live.remove(&(s.i, s.j)) {
+                live_words -= mi * kj;
+            }
+        }
+        // SRAM: one input tile + one weight tile, double-buffered so the
+        // next fetch overlaps compute.
+        let sram = 2 * (mi * nr + nr * kj);
+        occ.peak_sram_words = occ.peak_sram_words.max(sram);
+    });
+    occ
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwindowed_is_reuse_needs_full_output_row() {
+        // §III-B: exploiting IS reuse *without spilling* keeps a whole
+        // output row of psums (m × K words) — that is IS-OS with k' = K.
+        // It grows with K, which is why the k' window exists.
+        let t = Tiling::square(16); // kp = None -> k' = K
+        let small = measure_occupancy(Scheme::IsOs, &GemmShape::new(32, 64, 64), &t);
+        let big = measure_occupancy(Scheme::IsOs, &GemmShape::new(32, 64, 1024), &t);
+        assert_eq!(small.peak_psum_words, 16 * 64);
+        assert_eq!(big.peak_psum_words, 16 * 1024);
+    }
+
+    #[test]
+    fn unwindowed_ws_reuse_needs_full_output_col() {
+        let t = Tiling::square(16); // mp = None -> m' = M
+        let big = measure_occupancy(Scheme::WsOs, &GemmShape::new(2048, 64, 32), &t);
+        assert_eq!(big.peak_psum_words, 2048 * 16);
+    }
+
+    #[test]
+    fn spilling_is_holds_one_tile_but_pays_dram() {
+        // Plain IS avoids the register blow-up by spilling psums to DRAM
+        // every contraction step — the §II-d concurrent read/write cost.
+        let t = Tiling::square(16);
+        let occ = measure_occupancy(Scheme::Is, &GemmShape::new(32, 64, 1024), &t);
+        assert_eq!(occ.peak_psum_words, 16 * 16);
+    }
+
+    #[test]
+    fn hybrid_windows_cap_psum_demand() {
+        let t = Tiling::square(16).with_kp(64).with_mp(64);
+        let shape = GemmShape::new(1024, 64, 1024);
+        let is_os = measure_occupancy(Scheme::IsOs, &shape, &t);
+        let ws_os = measure_occupancy(Scheme::WsOs, &shape, &t);
+        // k'·m = 64·16, m'·k = 64·16 — independent of M, N, K.
+        assert_eq!(is_os.peak_psum_words, 64 * 16);
+        assert_eq!(ws_os.peak_psum_words, 64 * 16);
+    }
+
+    #[test]
+    fn os_keeps_exactly_one_tile() {
+        let t = Tiling::square(16);
+        let occ = measure_occupancy(Scheme::OsRow, &GemmShape::new(256, 256, 256), &t);
+        assert_eq!(occ.peak_psum_words, 16 * 16);
+    }
+
+    #[test]
+    fn naive_holds_at_most_one_tile() {
+        let t = Tiling::square(8);
+        let occ = measure_occupancy(Scheme::Naive, &GemmShape::new(64, 64, 64), &t);
+        assert_eq!(occ.peak_psum_words, 8 * 8);
+    }
+}

@@ -1,0 +1,116 @@
+//! Roofline analysis: where each stationary scheme sits relative to the
+//! accelerator's compute and memory roofs.
+//!
+//! The paper's claim in roofline terms: a linear projection's MAC count
+//! is fixed, so the *only* lever is EMA — the scheme moves arithmetic
+//! intensity (MACs / DRAM word).  TAS pushes every projection to the
+//! compute-bound side of the ridge when any fixed scheme would leave
+//! short-or-long sequences memory-bound.
+
+use crate::config::AcceleratorConfig;
+use crate::dataflow::{ema, Scheme};
+use crate::gemm::{GemmShape, Tiling};
+
+/// One scheme's roofline position for one GEMM.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RooflinePoint {
+    /// MACs per DRAM word moved.
+    pub arithmetic_intensity: f64,
+    /// Attainable MACs/cycle = min(peak, AI × bandwidth).
+    pub attainable_macs_per_cycle: f64,
+    /// Fraction of the PE array's peak.
+    pub efficiency: f64,
+    /// True when AI clears the ridge point (compute-bound).
+    pub compute_bound: bool,
+}
+
+/// Ridge point of the machine: peak MACs/cycle ÷ words/cycle.
+pub fn ridge_intensity(cfg: &AcceleratorConfig) -> f64 {
+    let peak = (cfg.pe_dim * cfg.pe_dim) as f64;
+    peak / cfg.dram_bandwidth as f64
+}
+
+/// Roofline position of `scheme` on `shape`.
+pub fn roofline(scheme: Scheme, shape: &GemmShape, tiling: &Tiling, cfg: &AcceleratorConfig) -> RooflinePoint {
+    let words = ema(scheme, shape, tiling).total().max(1) as f64;
+    let ai = shape.macs() as f64 / words;
+    let peak = (cfg.pe_dim * cfg.pe_dim) as f64;
+    let attainable = peak.min(ai * cfg.dram_bandwidth as f64);
+    RooflinePoint {
+        arithmetic_intensity: ai,
+        attainable_macs_per_cycle: attainable,
+        efficiency: attainable / peak,
+        compute_bound: ai >= ridge_intensity(cfg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AcceleratorConfig {
+        // 16×16 PEs with an HBM-ish 32 words/cycle: ridge = 8 MACs/word.
+        // (The hybrids' AI ≈ tile edge = 16, so a balanced design wants
+        // the ridge below that — exactly the co-design argument.)
+        AcceleratorConfig { dram_bandwidth: 32, ..AcceleratorConfig::default() }
+    }
+
+    #[test]
+    fn ridge_point_value() {
+        assert_eq!(ridge_intensity(&cfg()), 256.0 / 32.0);
+        assert_eq!(ridge_intensity(&AcceleratorConfig::default()), 16.0);
+    }
+
+    #[test]
+    fn hybrid_intensity_approaches_tile_edge() {
+        // AI(IS-OS) ≈ m: the weight stream dominates at MNK/((M/m)·NK).
+        let shape = GemmShape::new(384, 768, 768);
+        let p = roofline(Scheme::Tas, &shape, &Tiling::square(16), &cfg());
+        assert!((15.0..=16.0).contains(&p.arithmetic_intensity), "{}", p.arithmetic_intensity);
+    }
+
+    #[test]
+    fn naive_is_always_memory_bound() {
+        // AI(naive) = MNK / 3MNK = 1/3 << ridge
+        let shape = GemmShape::new(512, 768, 768);
+        let p = roofline(Scheme::Naive, &shape, &Tiling::square(16), &cfg());
+        assert!((p.arithmetic_intensity - 1.0 / 3.0).abs() < 1e-9);
+        assert!(!p.compute_bound);
+        assert!(p.efficiency < 0.05);
+    }
+
+    #[test]
+    fn tas_reaches_compute_bound_on_paper_workloads() {
+        // BERT-Base qkv at mean length: TAS must clear the ridge.
+        let shape = GemmShape::new(384, 768, 768);
+        let p = roofline(Scheme::Tas, &shape, &Tiling::square(16), &cfg());
+        assert!(p.compute_bound, "AI = {}", p.arithmetic_intensity);
+        assert_eq!(p.efficiency, 1.0);
+    }
+
+    #[test]
+    fn wrong_fixed_scheme_stays_memory_bound_where_tas_escapes() {
+        // Long sequence, IS is the wrong choice (M >= K): its weight
+        // re-reads push AI below the ridge while TAS (-> WS-OS) clears it.
+        let shape = GemmShape::new(15000, 1024, 1024);
+        let t = Tiling::square(16);
+        let is = roofline(Scheme::Is, &shape, &t, &cfg());
+        let tas = roofline(Scheme::Tas, &shape, &t, &cfg());
+        // IS's psum spills halve its intensity (below the ridge = 8);
+        // TAS (-> WS-OS) nearly doubles it and clears the ridge.
+        assert!(tas.arithmetic_intensity > 1.5 * is.arithmetic_intensity);
+        assert!(tas.compute_bound && !is.compute_bound);
+    }
+
+    #[test]
+    fn efficiency_monotone_in_intensity() {
+        let shape = GemmShape::new(384, 768, 3072);
+        let t = Tiling::square(16);
+        let order = [Scheme::Naive, Scheme::Ws, Scheme::Tas];
+        let effs: Vec<f64> = order
+            .iter()
+            .map(|s| roofline(*s, &shape, &t, &cfg()).efficiency)
+            .collect();
+        assert!(effs[0] <= effs[1] && effs[1] <= effs[2], "{effs:?}");
+    }
+}

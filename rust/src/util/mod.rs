@@ -1,0 +1,40 @@
+//! Infrastructure substrates built in-repo (the offline environment vendors
+//! only the `xla` crate closure + `anyhow`): PRNG, property-test harness,
+//! JSON and TOML parsing, CLI, stats, bench harness, table rendering and
+//! binary I/O.  See DESIGN.md §1 (S1–S5).
+
+pub mod bench;
+pub mod bytes;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod table;
+pub mod toml;
+
+/// `ceil(a / b)` for tile counts; the paper's `M/m` etc. are all ceilings
+/// once shapes stop being tile-divisible.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    assert!(b > 0, "ceil_div by zero");
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(10, 5), 2);
+        assert_eq!(ceil_div(11, 5), 3);
+        assert_eq!(ceil_div(0, 5), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "ceil_div by zero")]
+    fn ceil_div_zero_division_panics() {
+        ceil_div(1, 0);
+    }
+}

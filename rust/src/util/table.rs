@@ -1,0 +1,194 @@
+//! Text/markdown/CSV table rendering for the paper-table benches.
+//!
+//! The benches print tables shaped like the paper's (rows = layers or
+//! sequence lengths, columns = schemes), so reviewers can diff ours
+//! against the published ones by eye.
+
+/// A simple column-aligned table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width != header width"
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> =
+            self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn to_text(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let line = |cells: &[String], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(c);
+                for _ in c.chars().count()..w[i] {
+                    out.push(' ');
+                }
+            }
+            out.push('\n');
+        };
+        line(&self.headers, &mut out);
+        let total: usize = w.iter().sum::<usize>() + 2 * (w.len() - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            line(row, &mut out);
+        }
+        out
+    }
+
+    /// Render as GitHub-flavored markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n\n", self.title));
+        }
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            self.headers.iter().map(|_| "---|").collect::<String>()
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+
+    /// Render as CSV (RFC-4180 quoting where needed).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .headers
+                .iter()
+                .map(|h| esc(h))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(
+                &row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","),
+            );
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a count in the paper's scientific style: `1.18 x 10^5`.
+pub fn sci(v: f64) -> String {
+    if v == 0.0 {
+        return "0".into();
+    }
+    let sign = if v < 0.0 { "-" } else { "" };
+    let a = v.abs();
+    let exp = a.log10().floor() as i32;
+    let mant = a / 10f64.powi(exp);
+    format!("{sign}{mant:.2}e{exp}")
+}
+
+/// Format a big integer with thousands separators: `11,132.6 G` style
+/// helper — returns e.g. `312.9 G` for 312.9e9.
+pub fn giga(v: f64) -> String {
+    format!("{:.1}", v / 1e9)
+}
+
+/// Percentage with two decimals: `97.17%`.
+pub fn pct(fraction: f64) -> String {
+    format!("{:.2}%", fraction * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["333".into(), "4".into()]);
+        t
+    }
+
+    #[test]
+    fn text_aligns_columns() {
+        let txt = sample().to_text();
+        let lines: Vec<&str> = txt.lines().collect();
+        assert_eq!(lines[1], "a    bb");
+        assert_eq!(lines[3], "1    2 ");
+        assert_eq!(lines[4], "333  4 ");
+    }
+
+    #[test]
+    fn markdown_and_csv_shapes() {
+        let t = sample();
+        assert!(t.to_markdown().contains("| a | bb |"));
+        assert_eq!(t.to_csv(), "a,bb\n1,2\n333,4\n");
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("", &["x"]);
+        t.row(vec!["a,b".into()]);
+        assert_eq!(t.to_csv(), "x\n\"a,b\"\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        Table::new("", &["a"]).row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn sci_matches_paper_style() {
+        assert_eq!(sci(1.18e5), "1.18e5");
+        assert_eq!(sci(-9.22e5), "-9.22e5");
+        assert_eq!(sci(0.0), "0");
+    }
+
+    #[test]
+    fn pct_two_decimals() {
+        assert_eq!(pct(0.9717), "97.17%");
+    }
+}

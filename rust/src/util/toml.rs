@@ -1,0 +1,227 @@
+//! Minimal TOML-subset parser for config files (no `toml` crate offline).
+//!
+//! Supported grammar — everything the `configs/*.toml` files need:
+//! `[section]` and `[section.sub]` headers, `key = value` with integers,
+//! floats, booleans, strings and homogeneous inline arrays, `#` comments.
+//! Keys flatten to dotted paths: `[sim]\nbw = 16` -> `"sim.bw"`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted-path -> value.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> anyhow::Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated section"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err(lineno, "empty section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| err(lineno, "expected 'key = value'"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|m| err(lineno, &m))?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if doc.entries.insert(path.clone(), value).is_some() {
+                return Err(err(lineno, &format!("duplicate key '{path}'")));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    pub fn get_u64(&self, path: &str, default: u64) -> u64 {
+        self.get(path).and_then(|v| v.as_u64()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> anyhow::Error {
+    anyhow::anyhow!("toml line {}: {}", lineno + 1, msg)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"")));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        return inner
+            .split(',')
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<Vec<_>, _>>()
+            .map(TomlValue::Arr);
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+            name = "tas"        # a comment
+            [sim]
+            bandwidth = 16
+            turnaround = 7.5
+            enabled = true
+            tiles = [16, 16, 16]
+            [sim.deep]
+            x = 1_000_000
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name", ""), "tas");
+        assert_eq!(doc.get_u64("sim.bandwidth", 0), 16);
+        assert_eq!(doc.get_f64("sim.turnaround", 0.0), 7.5);
+        assert!(doc.get_bool("sim.enabled", false));
+        assert_eq!(doc.get_u64("sim.deep.x", 0), 1_000_000);
+        assert_eq!(
+            doc.get("sim.tiles").unwrap(),
+            &TomlValue::Arr(vec![
+                TomlValue::Int(16),
+                TomlValue::Int(16),
+                TomlValue::Int(16)
+            ])
+        );
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = TomlDoc::parse(r##"k = "a#b""##).unwrap();
+        assert_eq!(doc.get_str("k", ""), "a#b");
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(TomlDoc::parse("a = 1\na = 2").is_err());
+        assert!(TomlDoc::parse("a 1").is_err());
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("a = ").is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.get_u64("missing", 42), 42);
+    }
+}

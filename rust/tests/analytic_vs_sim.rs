@@ -1,0 +1,118 @@
+//! Integration: the closed-form Table II model and the trace-driven
+//! simulator are independent implementations of the same dataflows —
+//! they must agree word-for-word on every shape, tiling and window.
+
+use tas::arch::Dram;
+use tas::dataflow::{ema, Scheme};
+use tas::gemm::{GemmShape, Tiling};
+use tas::sim::simulate_ema;
+use tas::util::check::property;
+use tas::util::prng::Rng;
+
+fn sim(scheme: Scheme, shape: &GemmShape, tiling: &Tiling) -> (u64, u64, u64) {
+    let mut dram = Dram::new(16, 12);
+    simulate_ema(scheme, shape, tiling, &mut dram).table2()
+}
+
+#[test]
+fn agreement_over_rectangular_tilings() {
+    property("analytic == sim (rect tiles)", 200, |rng: &mut Rng| {
+        let shape = GemmShape::new(
+            rng.gen_in(1, 400),
+            rng.gen_in(1, 400),
+            rng.gen_in(1, 400),
+        );
+        let tiling = Tiling::new(
+            rng.gen_in(1, 48),
+            rng.gen_in(1, 48),
+            rng.gen_in(1, 48),
+        );
+        for scheme in Scheme::FIXED {
+            let a = ema(scheme, &shape, &tiling);
+            assert_eq!(
+                sim(scheme, &shape, &tiling),
+                (a.input, a.weight, a.output),
+                "{scheme:?} {shape:?} {tiling:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn agreement_over_psum_windows() {
+    property("analytic == sim (windows)", 150, |rng: &mut Rng| {
+        let t = rng.gen_in(1, 24);
+        let shape = GemmShape::new(
+            rng.gen_in(1, 500),
+            rng.gen_in(1, 500),
+            rng.gen_in(1, 500),
+        );
+        let tiling = Tiling {
+            kp: Some(rng.gen_in(1, 10) * t),
+            mp: Some(rng.gen_in(1, 10) * t),
+            ..Tiling::new(t, t, t)
+        };
+        for scheme in [Scheme::IsOs, Scheme::WsOs, Scheme::Tas] {
+            let a = ema(scheme, &shape, &tiling);
+            assert_eq!(
+                sim(scheme, &shape, &tiling),
+                (a.input, a.weight, a.output),
+                "{scheme:?} {shape:?} kp={:?} mp={:?}",
+                tiling.kp,
+                tiling.mp
+            );
+        }
+    });
+}
+
+#[test]
+fn table2_symbolic_identities_hold() {
+    // On divisible shapes, verify the *literal* Table II expressions.
+    property("table2 identities", 150, |rng: &mut Rng| {
+        let t = *rng.choose(&[8u64, 16, 32]);
+        let (gm, gn, gk) = (rng.gen_in(1, 20), rng.gen_in(1, 20), rng.gen_in(1, 20));
+        let shape = GemmShape::new(gm * t, gn * t, gk * t);
+        let tiling = Tiling::square(t);
+        let (m, n, k) = (shape.m, shape.n, shape.k);
+        let (mn, nk, mk) = (m * n, n * k, m * k);
+
+        let is = ema(Scheme::Is, &shape, &tiling);
+        assert_eq!((is.input, is.weight, is.output), (mn, (m / t) * nk, (n / t) * mk));
+
+        let ws = ema(Scheme::Ws, &shape, &tiling);
+        assert_eq!((ws.input, ws.weight, ws.output), ((k / t) * mn, nk, (n / t) * mk));
+
+        let os = ema(Scheme::OsRow, &shape, &tiling);
+        assert_eq!((os.input, os.weight, os.output), ((k / t) * mn, (m / t) * nk, mk));
+
+        let isos = ema(Scheme::IsOs, &shape, &tiling);
+        assert_eq!((isos.input, isos.weight, isos.output), (mn, (m / t) * nk, mk));
+
+        let wsos = ema(Scheme::WsOs, &shape, &tiling);
+        assert_eq!((wsos.input, wsos.weight, wsos.output), ((k / t) * mn, nk, mk));
+
+        let naive = ema(Scheme::Naive, &shape, &tiling);
+        assert_eq!(naive.total(), 3 * m * n * k);
+    });
+}
+
+#[test]
+fn direction_switch_ordering_is_structural() {
+    // For any mid-sized shape: spilling schemes switch direction at least
+    // an order of magnitude more often than their OS hybrids.
+    property("turnaround ordering", 40, |rng: &mut Rng| {
+        let shape = GemmShape::new(
+            rng.gen_in(8, 40) * 16,
+            rng.gen_in(8, 40) * 16,
+            rng.gen_in(8, 40) * 16,
+        );
+        let tiling = Tiling::square(16);
+        let switches = |s: Scheme| {
+            let mut dram = Dram::new(16, 12);
+            simulate_ema(s, &shape, &tiling, &mut dram);
+            dram.stats().direction_switches
+        };
+        assert!(switches(Scheme::Is) > 8 * switches(Scheme::IsOs));
+        assert!(switches(Scheme::Ws) > 8 * switches(Scheme::WsOs));
+    });
+}

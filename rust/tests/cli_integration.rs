@@ -1,0 +1,118 @@
+//! CLI integration: drives the `tas` binary end-to-end via std::process.
+
+use std::process::Command;
+
+fn tas(args: &[&str]) -> (bool, String, String) {
+    let bin = env!("CARGO_BIN_EXE_tas");
+    let out = Command::new(bin).args(args).output().expect("spawn tas");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (ok, stdout, _) = tas(&[]);
+    assert!(ok);
+    assert!(stdout.contains("USAGE"));
+    assert!(stdout.contains("tables"));
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let (ok, _, stderr) = tas(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown subcommand"));
+}
+
+#[test]
+fn tables_render_all_four() {
+    let (ok, stdout, stderr) = tas(&["tables"]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("Table I "));
+    assert!(stdout.contains("Table II "));
+    assert!(stdout.contains("Table III "));
+    assert!(stdout.contains("Table IV "));
+    // Table III paper values
+    assert!(stdout.contains("1.18e5"));
+    assert!(stdout.contains("1.54e7"));
+}
+
+#[test]
+fn tables_csv_mode() {
+    let (ok, stdout, _) = tas(&["tables", "--table", "3", "--csv"]);
+    assert!(ok);
+    assert!(stdout.starts_with("seq_len,"));
+    assert!(stdout.lines().count() >= 5);
+}
+
+#[test]
+fn simulate_gemm_reports_all_schemes() {
+    let (ok, stdout, _) = tas(&["simulate", "--m", "128", "--n", "256", "--k", "512"]);
+    assert!(ok);
+    for s in ["naive", "is-os", "ws-os", "tas"] {
+        assert!(stdout.contains(s), "missing {s}");
+    }
+}
+
+#[test]
+fn simulate_model_by_name() {
+    let (ok, stdout, _) = tas(&["simulate", "--model", "bert-base", "--seq", "384"]);
+    assert!(ok);
+    assert!(stdout.contains("qkv[seq=384]"));
+    assert!(stdout.contains("ffn1"));
+}
+
+#[test]
+fn unknown_model_lists_zoo() {
+    let (ok, _, stderr) = tas(&["simulate", "--model", "nope"]);
+    assert!(!ok);
+    assert!(stderr.contains("bert-base"));
+}
+
+#[test]
+fn sweep_shows_crossover() {
+    let (ok, stdout, _) = tas(&["sweep", "--model", "wav2vec2-large", "--seqs", "115,384,1565,15000"]);
+    assert!(ok);
+    assert!(stdout.contains("IS-OS"));
+    assert!(stdout.contains("WS-OS"));
+}
+
+#[test]
+fn trace_respects_limit() {
+    let (ok, stdout, _) = tas(&["trace", "--scheme", "is-os", "--m", "64", "--n", "64", "--k", "64", "--limit", "5"]);
+    assert!(ok);
+    let steps = stdout.lines().filter(|l| l.starts_with(|c: char| c.is_whitespace()) || l.trim_start().starts_with(char::is_numeric)).count();
+    assert!(stdout.contains("# total steps: 64"));
+    assert!(steps >= 5);
+}
+
+#[test]
+fn figs_render_dataflow_maps() {
+    let (ok, stdout, _) = tas(&["figs", "--m", "48", "--n", "32", "--k", "64"]);
+    assert!(ok);
+    assert!(stdout.contains("is-os dataflow"));
+    assert!(stdout.contains("max input-tile loads: 1"));
+}
+
+#[test]
+fn unknown_flag_rejected() {
+    let (ok, _, stderr) = tas(&["tables", "--bogus", "1"]);
+    assert!(!ok);
+    assert!(stderr.contains("--bogus"));
+}
+
+#[test]
+fn validate_runs_when_artifacts_exist() {
+    let dir = tas::runtime::default_artifacts_dir();
+    if !tas::runtime::artifacts_available(&dir) {
+        eprintln!("skipping validate CLI test: no artifacts");
+        return;
+    }
+    let (ok, stdout, stderr) = tas(&["validate"]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("TAS decisions match"));
+    assert!(stdout.contains("validated"));
+}

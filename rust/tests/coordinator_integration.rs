@@ -1,0 +1,146 @@
+//! Integration over the full serving stack (batcher + device thread +
+//! PJRT engine) — requires `make artifacts`; skips otherwise.
+
+use std::time::Duration;
+use tas::coordinator::{Coordinator, CoordinatorOptions};
+use tas::runtime::artifacts_available;
+use tas::util::prng::Rng;
+
+fn start() -> Option<Coordinator> {
+    let dir = tas::runtime::default_artifacts_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(
+        Coordinator::start(CoordinatorOptions {
+            artifacts_dir: dir,
+            linger: Duration::from_millis(1),
+            preload_all: true,
+            ..Default::default()
+        })
+        .expect("coordinator boots"),
+    )
+}
+
+#[test]
+fn serves_variable_length_stream() {
+    let Some(c) = start() else { return };
+    let vocab = *c.model.get("vocab").unwrap() as usize;
+    let max_len = c.max_len() as usize;
+    let mut rng = Rng::new(11);
+    let requests: Vec<Vec<i32>> = (0..24)
+        .map(|_| {
+            let len = rng.gen_in(1, max_len as u64) as usize;
+            (0..len).map(|_| rng.gen_range(vocab as u64) as i32).collect()
+        })
+        .collect();
+    let lens: Vec<usize> = requests.iter().map(|r| r.len()).collect();
+    let responses = c.run_closed_loop(requests).unwrap();
+    assert_eq!(responses.len(), 24);
+    for (resp, len) in responses.iter().zip(&lens) {
+        // responses ordered by id == submission order
+        assert_eq!(resp.logits.len(), len * vocab, "req len {len}");
+        assert!(resp.logits.iter().all(|x| x.is_finite()));
+        assert_eq!(resp.argmax_ids().len(), *len);
+    }
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.requests, 24);
+    assert!(snap.batches >= 1);
+    assert!(snap.ema_reduction_vs_naive() > 0.9);
+    c.shutdown();
+}
+
+#[test]
+fn identical_requests_get_identical_logits() {
+    let Some(c) = start() else { return };
+    let tokens: Vec<i32> = (0..40).map(|i| (i * 7) % 100).collect();
+    let a = c.run_closed_loop(vec![tokens.clone()]).unwrap().remove(0);
+    let b = c.run_closed_loop(vec![tokens]).unwrap().remove(0);
+    assert_eq!(a.logits, b.logits);
+    c.shutdown();
+}
+
+#[test]
+fn batching_is_transparent_to_results() {
+    // One request served alone must equal the same request served inside
+    // a bigger batch (padding rows must not leak across rows).
+    let Some(c) = start() else { return };
+    let vocab = *c.model.get("vocab").unwrap() as usize;
+    let probe: Vec<i32> = (0..50).map(|i| (i * 13) % vocab as i32).collect();
+    let solo = c.run_closed_loop(vec![probe.clone()]).unwrap().remove(0);
+    // submit the probe among 7 other requests of the same length bucket
+    let mut rng = Rng::new(3);
+    let mut batchful = vec![probe.clone()];
+    for _ in 0..7 {
+        batchful.push((0..50).map(|_| rng.gen_range(vocab as u64) as i32).collect());
+    }
+    let responses = c.run_closed_loop(batchful).unwrap();
+    let in_batch = &responses[0];
+    let max_err = solo
+        .logits
+        .iter()
+        .zip(&in_batch.logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-4, "batched vs solo diverged: {max_err}");
+    c.shutdown();
+}
+
+#[test]
+fn oversized_request_rejected_at_submit() {
+    let Some(c) = start() else { return };
+    let too_long = vec![1i32; c.max_len() as usize + 1];
+    assert!(c.submit(too_long).is_err());
+    assert!(c.submit(vec![]).is_err());
+    c.shutdown();
+}
+
+#[test]
+fn metrics_accumulate_across_waves() {
+    let Some(c) = start() else { return };
+    let vocab = *c.model.get("vocab").unwrap() as usize;
+    let mk = |n: usize, len: usize, seed: u64| -> Vec<Vec<i32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..len).map(|_| rng.gen_range(vocab as u64) as i32).collect())
+            .collect()
+    };
+    c.run_closed_loop(mk(8, 30, 1)).unwrap();
+    let after_one = c.metrics().snapshot();
+    c.run_closed_loop(mk(8, 30, 2)).unwrap();
+    let after_two = c.metrics().snapshot();
+    assert_eq!(after_two.requests, after_one.requests + 8);
+    assert!(after_two.ema_naive_words > after_one.ema_naive_words);
+    assert!(after_two.flops > after_one.flops);
+    c.shutdown();
+}
+
+#[test]
+fn chunked_long_request_served_and_stitched() {
+    use tas::coordinator::{serve_chunked, ChunkPolicy};
+    let Some(c) = start() else { return };
+    let vocab = *c.model.get("vocab").unwrap() as usize;
+    let max_len = c.max_len() as usize;
+    // a request 3.5× longer than any compiled bucket (Table III's
+    // long-speech scenario, scaled to the tiny model)
+    let long_len = max_len * 7 / 2;
+    let mut rng = Rng::new(21);
+    let tokens: Vec<i32> = (0..long_len)
+        .map(|_| rng.gen_range(vocab as u64) as i32)
+        .collect();
+    // plain submit refuses it ...
+    assert!(c.submit(tokens.clone()).is_err());
+    // ... chunked serving handles it
+    let policy = ChunkPolicy::new(max_len, max_len / 4).unwrap();
+    let (logits, artifacts) = serve_chunked(&c, &tokens, policy).unwrap();
+    assert_eq!(logits.len(), long_len * vocab);
+    assert!(logits.iter().all(|x| x.is_finite()));
+    assert!(artifacts.len() >= 4, "expected several chunks, got {artifacts:?}");
+    // every stitched position carries a real distribution (non-zero row)
+    for pos in [0usize, long_len / 2, long_len - 1] {
+        let row = &logits[pos * vocab..(pos + 1) * vocab];
+        assert!(row.iter().any(|&x| x != 0.0), "empty logits at {pos}");
+    }
+    c.shutdown();
+}

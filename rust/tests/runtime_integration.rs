@@ -1,0 +1,120 @@
+//! Integration over the PJRT runtime — requires `make artifacts`.
+//! Every test skips (with a notice) when the artifact set is absent so
+//! `cargo test` stays green on a fresh checkout.
+
+use tas::runtime::{artifacts_available, Engine, HostTensor};
+use tas::util::bytes;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = tas::runtime::default_artifacts_dir();
+    if artifacts_available(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+#[test]
+fn manifest_parses_and_buckets_sorted() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let m = engine.manifest();
+    assert!(m.artifacts.len() >= 3);
+    let buckets = m.bert_buckets();
+    assert!(!buckets.is_empty());
+    let tokens: Vec<u64> = buckets.iter().map(|(b, s, _)| b * s).collect();
+    let mut sorted = tokens.clone();
+    sorted.sort_unstable();
+    assert_eq!(tokens, sorted);
+}
+
+#[test]
+fn golden_validation_all_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(&dir).unwrap();
+    for name in engine.artifact_names() {
+        let err = engine.validate_golden(&name).unwrap();
+        assert!(err < 1e-3, "{name}: max err {err}");
+    }
+}
+
+#[test]
+fn execute_rejects_wrong_shapes_and_dtypes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(&dir).unwrap();
+    let bert = engine
+        .manifest()
+        .artifacts
+        .iter()
+        .find(|a| a.kind == "bert")
+        .unwrap()
+        .clone();
+    let name = bert.name.clone();
+    // wrong arity
+    assert!(engine.execute(&name, &[]).is_err());
+    // wrong shape
+    let bad = HostTensor::I32(vec![0; 7], vec![7]);
+    let err = engine.execute(&name, &[bad]).unwrap_err().to_string();
+    assert!(err.contains("expects"), "{err}");
+    // wrong dtype
+    let (_, meta) = bert.input_args()[0];
+    let n: usize = meta.shape.iter().product();
+    let bad = HostTensor::F32(vec![0.0; n], meta.shape.clone());
+    assert!(engine.execute(&name, &[bad]).is_err());
+}
+
+#[test]
+fn repeated_execution_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(&dir).unwrap();
+    let bert = engine
+        .manifest()
+        .artifacts
+        .iter()
+        .find(|a| a.kind == "bert")
+        .unwrap()
+        .clone();
+    let golden = bert.golden.clone().unwrap();
+    let ids = bytes::read_i32_file(&dir.join(&golden.input)).unwrap();
+    let (_, meta) = bert.input_args()[0];
+    let input = HostTensor::I32(ids, meta.shape.clone());
+    let a = engine.execute(&bert.name, &[input.clone()]).unwrap();
+    let b = engine.execute(&bert.name, &[input]).unwrap();
+    assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+}
+
+#[test]
+fn linear_artifacts_match_goldens_through_pjrt() {
+    // The standalone TAS-linear kernels: IS-OS and WS-OS variants both
+    // compiled from Pallas grid orders — numerics must hold through the
+    // full AOT + PJRT path.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(&dir).unwrap();
+    let linears: Vec<String> = engine
+        .artifact_names()
+        .into_iter()
+        .filter(|n| n.starts_with("linear_"))
+        .collect();
+    assert!(linears.len() >= 2, "expected both linear variants");
+    assert!(linears.iter().any(|n| n.contains("is_os")));
+    assert!(linears.iter().any(|n| n.contains("ws_os")));
+    for name in linears {
+        let err = engine.validate_golden(&name).unwrap();
+        assert!(err < 1e-4, "{name}: {err}");
+    }
+}
+
+#[test]
+fn flops_metadata_consistent_with_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    for a in &engine.manifest().artifacts {
+        assert!(a.flops > 0, "{}", a.name);
+        if a.kind == "bert" {
+            // flops scale with tokens across buckets
+            let tokens = a.tokens().unwrap();
+            assert!(a.flops >= tokens, "{}", a.name);
+        }
+    }
+}

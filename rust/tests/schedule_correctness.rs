@@ -1,0 +1,104 @@
+//! Integration: every schedule computes the correct GEMM and covers every
+//! tile exactly once — heavier randomized sweeps than the unit tests.
+
+use tas::dataflow::{for_each_step, step_count, Scheme};
+use tas::gemm::{GemmShape, Tiling};
+use tas::sim::functional::{execute_schedule, reference_matmul, Mat};
+use tas::util::check::{assert_allclose, property};
+use tas::util::prng::Rng;
+
+fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| rng.gen_f32_signed())
+}
+
+#[test]
+fn functional_equivalence_wide_sweep() {
+    property("functional wide", 60, |rng: &mut Rng| {
+        let shape = GemmShape::new(
+            rng.gen_in(1, 150),
+            rng.gen_in(1, 150),
+            rng.gen_in(1, 150),
+        );
+        let tiling = Tiling::new(
+            rng.gen_in(1, 40),
+            rng.gen_in(1, 40),
+            rng.gen_in(1, 40),
+        );
+        let a = rand_mat(rng, shape.m as usize, shape.n as usize);
+        let b = rand_mat(rng, shape.n as usize, shape.k as usize);
+        let want = reference_matmul(&a, &b);
+        for scheme in Scheme::FIXED.iter().chain([Scheme::Tas].iter()) {
+            let got = execute_schedule(*scheme, &shape, &tiling, &a, &b);
+            assert_allclose(&got.data, &want.data, 1e-4, 1e-4);
+        }
+    });
+}
+
+#[test]
+fn functional_equivalence_with_windows() {
+    property("functional windows", 60, |rng: &mut Rng| {
+        let t = rng.gen_in(2, 16);
+        let shape = GemmShape::new(
+            rng.gen_in(1, 120),
+            rng.gen_in(1, 120),
+            rng.gen_in(1, 120),
+        );
+        let tiling = Tiling::new(t, t, t);
+        let tiling = Tiling {
+            kp: Some(rng.gen_in(1, 6) * t),
+            mp: Some(rng.gen_in(1, 6) * t),
+            ..tiling
+        };
+        let a = rand_mat(rng, shape.m as usize, shape.n as usize);
+        let b = rand_mat(rng, shape.n as usize, shape.k as usize);
+        let want = reference_matmul(&a, &b);
+        for scheme in [Scheme::IsOs, Scheme::WsOs, Scheme::Tas] {
+            let got = execute_schedule(scheme, &shape, &tiling, &a, &b);
+            assert_allclose(&got.data, &want.data, 1e-4, 1e-4);
+        }
+    });
+}
+
+#[test]
+fn step_counts_are_scheme_independent() {
+    property("step counts", 200, |rng: &mut Rng| {
+        let shape = GemmShape::new(
+            rng.gen_in(1, 1000),
+            rng.gen_in(1, 1000),
+            rng.gen_in(1, 1000),
+        );
+        let tiling = Tiling::square(*rng.choose(&[4, 8, 16, 32, 64]));
+        let expect = step_count(&shape, &tiling);
+        for scheme in Scheme::FIXED {
+            let mut n = 0u64;
+            for_each_step(scheme, &shape, &tiling, |_| n += 1);
+            assert_eq!(n, expect, "{scheme:?}");
+        }
+    });
+}
+
+#[test]
+fn degenerate_single_tile_gemm() {
+    // M=N=K=1 with any tiling: one step, one store, correct value.
+    let shape = GemmShape::new(1, 1, 1);
+    let tiling = Tiling::square(16);
+    let a = Mat::from_fn(1, 1, |_, _| 3.0);
+    let b = Mat::from_fn(1, 1, |_, _| -2.0);
+    for scheme in Scheme::FIXED.iter().chain([Scheme::Tas].iter()) {
+        let got = execute_schedule(*scheme, &shape, &tiling, &a, &b);
+        assert_eq!(got.data, vec![-6.0], "{scheme:?}");
+    }
+}
+
+#[test]
+fn tall_skinny_and_short_fat_extremes() {
+    // The regimes that flip the TAS rule hardest.
+    let mut rng = Rng::new(99);
+    for shape in [GemmShape::new(2048, 16, 8), GemmShape::new(8, 16, 2048)] {
+        let a = rand_mat(&mut rng, shape.m as usize, shape.n as usize);
+        let b = rand_mat(&mut rng, shape.n as usize, shape.k as usize);
+        let want = reference_matmul(&a, &b);
+        let got = execute_schedule(Scheme::Tas, &shape, &Tiling::square(16), &a, &b);
+        assert_allclose(&got.data, &want.data, 1e-4, 1e-4);
+    }
+}

@@ -1,0 +1,140 @@
+//! Integration: properties of the TAS decision rule and the psum-window
+//! machinery — the paper's §III claims as invariants.
+
+use tas::config::AcceleratorConfig;
+use tas::dataflow::{analytic, ema, Scheme};
+use tas::gemm::{GemmShape, Tiling};
+use tas::sim::measure_occupancy;
+use tas::util::check::property;
+use tas::util::prng::Rng;
+
+#[test]
+fn rule_is_exact_argmin_on_divisible_shapes() {
+    property("rule == argmin", 400, |rng: &mut Rng| {
+        let t = *rng.choose(&[8u64, 16, 32]);
+        let shape = GemmShape::new(
+            rng.gen_in(1, 200) * t,
+            rng.gen_in(1, 200) * t,
+            rng.gen_in(1, 200) * t,
+        );
+        let tiling = Tiling::square(t);
+        let tas = ema(Scheme::Tas, &shape, &tiling).total();
+        let best = ema(Scheme::IsOs, &shape, &tiling)
+            .total()
+            .min(ema(Scheme::WsOs, &shape, &tiling).total());
+        assert_eq!(tas, best, "{shape:?}");
+    });
+}
+
+#[test]
+fn rule_matches_sign_of_decision_quantity() {
+    property("sign rule", 500, |rng: &mut Rng| {
+        let shape = GemmShape::new(
+            rng.gen_in(1, 100_000),
+            rng.gen_in(1, 100_000),
+            rng.gen_in(1, 100_000),
+        );
+        let d = analytic::is_ws_difference(&shape);
+        let resolved = Scheme::Tas.resolve(&shape);
+        if d < 0 {
+            assert_eq!(resolved, Scheme::IsOs);
+        } else {
+            assert_eq!(resolved, Scheme::WsOs);
+        }
+    });
+}
+
+#[test]
+fn tas_beats_every_fixed_scheme_on_mixed_length_streams() {
+    // The paper's §I claim: over a stream of varying lengths, no fixed
+    // scheme can match the adaptive one (TAS <= each fixed, summed).
+    property("stream dominance", 30, |rng: &mut Rng| {
+        let t = Tiling::square(16);
+        let hidden = *rng.choose(&[512u64, 768, 1024]);
+        let lengths: Vec<u64> = (0..20)
+            .map(|_| rng.gen_in(1, 200) * 16) // divisible lengths
+            .collect();
+        let stream_total = |scheme: Scheme| -> u64 {
+            lengths
+                .iter()
+                .map(|&m| ema(scheme, &GemmShape::new(m, hidden, hidden), &t).total())
+                .sum()
+        };
+        let tas = stream_total(Scheme::Tas);
+        for fixed in Scheme::FIXED {
+            assert!(
+                tas <= stream_total(fixed),
+                "tas {tas} beaten by {fixed:?} on lengths {lengths:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn psum_window_trades_input_reloads_for_registers() {
+    // Halving k' doubles the IS-OS input reload factor but halves the
+    // register demand — the §III-B trade-off, measured.
+    let shape = GemmShape::new(256, 512, 1024);
+    let base = Tiling::square(16);
+    let wide = Tiling { kp: Some(512), ..base };
+    let narrow = Tiling { kp: Some(256), ..base };
+
+    let e_wide = ema(Scheme::IsOs, &shape, &wide);
+    let e_narrow = ema(Scheme::IsOs, &shape, &narrow);
+    assert_eq!(e_narrow.input, 2 * e_wide.input);
+    assert_eq!(e_narrow.weight, e_wide.weight);
+
+    let o_wide = measure_occupancy(Scheme::IsOs, &shape, &wide);
+    let o_narrow = measure_occupancy(Scheme::IsOs, &shape, &narrow);
+    assert_eq!(o_wide.peak_psum_words, 512 * 16);
+    assert_eq!(o_narrow.peak_psum_words, 256 * 16);
+}
+
+#[test]
+fn config_tiling_respects_register_capacity() {
+    property("config windows fit", 100, |rng: &mut Rng| {
+        let mut cfg = AcceleratorConfig::default();
+        cfg.pe_dim = *rng.choose(&[8u64, 16, 32]);
+        cfg.tile_m = cfg.pe_dim;
+        cfg.tile_n = cfg.pe_dim;
+        cfg.tile_k = cfg.pe_dim;
+        cfg.psum_regs = rng.gen_in(1, 64) * cfg.tile_m * cfg.tile_k;
+        cfg.validate().unwrap();
+        let t = cfg.tiling();
+        // the configured windows can never exceed the register file
+        assert!(t.kp.unwrap() * cfg.tile_m <= cfg.psum_regs);
+        assert!(t.mp.unwrap() * cfg.tile_k <= cfg.psum_regs);
+        // and the occupancy measurement agrees on a random shape
+        let shape = GemmShape::new(
+            rng.gen_in(1, 40) * cfg.tile_m,
+            rng.gen_in(1, 40) * cfg.tile_n,
+            rng.gen_in(1, 40) * cfg.tile_k,
+        );
+        for scheme in [Scheme::IsOs, Scheme::WsOs] {
+            let occ = measure_occupancy(scheme, &shape, &t);
+            assert!(
+                occ.peak_psum_words <= cfg.psum_regs,
+                "{scheme:?}: {} > {}",
+                occ.peak_psum_words,
+                cfg.psum_regs
+            );
+        }
+    });
+}
+
+#[test]
+fn reduction_grows_with_tile_size() {
+    // Bigger tiles amortise reloads: TAS's reduction vs naive must be
+    // monotone in tile edge (divisible shapes).
+    let shape = GemmShape::new(512, 768, 3072);
+    let mut last = 0.0;
+    for t in [4u64, 8, 16, 32, 64] {
+        let tiling = Tiling::square(t);
+        let naive = ema(Scheme::Naive, &shape, &tiling).total() as f64;
+        let tas = ema(Scheme::Tas, &shape, &tiling).total() as f64;
+        let red = 1.0 - tas / naive;
+        assert!(red > last, "tile {t}: {red} <= {last}");
+        last = red;
+    }
+    assert!(last > 0.97, "64-tile reduction {last}");
+}
