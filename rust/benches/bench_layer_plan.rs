@@ -1,0 +1,64 @@
+//! Bench E7 — layer-level planning vs per-GEMM TAS.
+//!
+//! For every zoo model at sequence lengths {64, 512, 4096}: total forward
+//! pass EMA under (a) the paper's per-GEMM TAS rule and (b) the layer plan
+//! (per-tile TAS + SRAM residency across the block's chained GEMMs), plus
+//! the planning throughput itself (the coordinator plans per batch, so
+//! planning must be microseconds, not milliseconds).
+//!
+//! Invariant asserted here and in tests/plan_equivalence.rs: the layer
+//! plan never loses to per-GEMM TAS — residency only removes DRAM words.
+
+use tas::config::AcceleratorConfig;
+use tas::dataflow::LayerPlan;
+use tas::gemm::Tiling;
+use tas::models::zoo;
+use tas::util::bench::{Bench, Throughput};
+use tas::util::table::{pct, sci, Table};
+
+fn main() {
+    let cfg = AcceleratorConfig::default();
+    let tiling = Tiling::square(16);
+    let seqs = [64u64, 512, 4096];
+
+    let mut t = Table::new(
+        "Layer-level planning vs per-GEMM TAS (total EMA words / forward pass, 16-tiles, 256 KiW SRAM)",
+        &["model", "seq", "per-GEMM TAS", "layer plan", "saving", "resident edges"],
+    );
+    for model in zoo::all_models() {
+        for seq in seqs {
+            let plan = LayerPlan::plan(model.block_stages(seq), seq, &tiling, cfg.sram_words);
+            let per_gemm = plan.per_gemm_tas_total();
+            let layer = plan.total_ema();
+            assert!(
+                layer <= per_gemm,
+                "{} @ {seq}: layer plan must never lose",
+                model.name
+            );
+            t.row(vec![
+                model.name.to_string(),
+                seq.to_string(),
+                sci(per_gemm as f64),
+                sci(layer as f64),
+                pct(1.0 - layer as f64 / per_gemm as f64),
+                plan.resident_edges().to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.to_text());
+
+    // Planning throughput: one full block plan per iteration.
+    let mut b = Bench::new("layer_plan");
+    for seq in seqs {
+        let model = zoo::bert_base();
+        let stages = model.block_stages(seq);
+        b.run(
+            &format!("plan/bert-base/seq{seq}"),
+            Throughput::Elements(stages.len() as u64),
+            || {
+                LayerPlan::plan(stages.clone(), seq, &tiling, cfg.sram_words).total_ema()
+            },
+        );
+    }
+    b.write_csv();
+}

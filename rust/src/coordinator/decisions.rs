@@ -7,8 +7,16 @@
 //! decision when lowering each artifact; [`verify_against_manifest`]
 //! asserts the two implementations agree — a cross-language contract
 //! test run at coordinator startup.
+//!
+//! On top of the per-projection rule, [`layer_plan_for_bucket`] builds the
+//! layer-level plan ([`crate::dataflow::LayerPlan`]) for a bucket: the
+//! block's GEMM chain with SRAM residency and per-tile stationary
+//! decisions.  The coordinator accounts every dispatched batch against
+//! both (the per-GEMM rule is the compile-path contract; the layer plan is
+//! what the accelerator-side accounting reports as achievable EMA).
 
-use crate::dataflow::Scheme;
+use crate::dataflow::{LayerPlan, Scheme, StageSpec};
+use crate::gemm::{GemmShape, Tiling};
 use crate::runtime::Manifest;
 use anyhow::Result;
 use std::collections::BTreeMap;
@@ -37,6 +45,55 @@ pub fn scheme_plan(tokens: u64, hidden: u64, ffn: u64, vocab: u64) -> SchemePlan
     choices.insert("ffn2", pick(hidden));
     choices.insert("lm_head", pick(vocab));
     SchemePlan { tokens, choices }
+}
+
+/// The chained stage list of one served block, from raw manifest dims —
+/// the coordinator-side twin of [`crate::models::ModelSpec::block_stages`].
+pub fn bucket_stages(
+    tokens: u64,
+    hidden: u64,
+    ffn: u64,
+    vocab: u64,
+    n_layers: u64,
+) -> Vec<StageSpec> {
+    let stage = |name, shape, count, consumes, shares| StageSpec {
+        name,
+        shape,
+        count,
+        consumes_previous: consumes,
+        shares_input_with_previous: shares,
+    };
+    let mut v = vec![
+        stage("q", GemmShape::new(tokens, hidden, hidden), n_layers, false, false),
+        stage("k", GemmShape::new(tokens, hidden, hidden), n_layers, false, true),
+        stage("v", GemmShape::new(tokens, hidden, hidden), n_layers, false, true),
+        stage("attn_out", GemmShape::new(tokens, hidden, hidden), n_layers, false, false),
+        stage("ffn1", GemmShape::new(tokens, hidden, ffn), n_layers, true, false),
+        stage("ffn2", GemmShape::new(tokens, ffn, hidden), n_layers, true, false),
+    ];
+    if vocab > 0 {
+        v.push(stage("lm_head", GemmShape::new(tokens, hidden, vocab), 1, false, false));
+    }
+    v
+}
+
+/// Layer-level plan for one (batch × seq) bucket: per-tile TAS with SRAM
+/// residency across the block's chained GEMMs.
+pub fn layer_plan_for_bucket(
+    tokens: u64,
+    hidden: u64,
+    ffn: u64,
+    vocab: u64,
+    n_layers: u64,
+    tiling: &Tiling,
+    sram_words: u64,
+) -> LayerPlan {
+    LayerPlan::plan(
+        bucket_stages(tokens, hidden, ffn, vocab, n_layers),
+        tokens,
+        tiling,
+        sram_words,
+    )
 }
 
 fn scheme_to_manifest_name(s: Scheme) -> &'static str {
@@ -96,6 +153,51 @@ mod tests {
     fn small_batches_prefer_input_stationary() {
         let p = scheme_plan(32, 256, 1024, 1024);
         assert!(p.choices.values().all(|s| *s == Scheme::IsOs));
+    }
+
+    #[test]
+    fn bucket_layer_plan_never_loses_to_per_gemm_rule() {
+        for tokens in [32u64, 256, 2048] {
+            let plan = layer_plan_for_bucket(
+                tokens,
+                128,
+                512,
+                1024,
+                4,
+                &Tiling::square(16),
+                256 * 1024,
+            );
+            assert!(plan.total_ema() <= plan.per_gemm_tas_total(), "M={tokens}");
+        }
+    }
+
+    /// Cross-implementation contract (like `verify_against_manifest` for
+    /// the per-GEMM rule): the coordinator's stage list from raw manifest
+    /// dims must equal the model zoo's chained stage list, or the served
+    /// `ema_plan_words` silently diverges from `tas plan`.
+    #[test]
+    fn bucket_stages_match_model_block_stages() {
+        for m in crate::models::zoo::all_models() {
+            for tokens in [64u64, 384] {
+                let from_dims = bucket_stages(
+                    tokens,
+                    m.hidden,
+                    m.ffn,
+                    m.vocab.unwrap_or(0),
+                    m.layers,
+                );
+                assert_eq!(from_dims, m.block_stages(tokens), "{}", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_stages_skip_head_without_vocab() {
+        let with = bucket_stages(64, 128, 256, 512, 2);
+        let without = bucket_stages(64, 128, 256, 0, 2);
+        assert_eq!(with.len(), 7);
+        assert_eq!(without.len(), 6);
+        assert!(with.iter().any(|s| s.name == "lm_head"));
     }
 
     #[test]

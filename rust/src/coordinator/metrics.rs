@@ -30,6 +30,8 @@ struct Inner {
     ema_naive_words: u64,
     ema_ayaka_words: u64,
     ema_tas_words: u64,
+    ema_plan_words: u64,
+    ema_plan_baseline_words: u64,
     flops: u64,
 }
 
@@ -47,6 +49,11 @@ pub struct MetricsSnapshot {
     pub ema_naive_words: u64,
     pub ema_ayaka_words: u64,
     pub ema_tas_words: u64,
+    /// Layer-level plan (per-tile TAS + SRAM residency) — total EMA, not
+    /// just the read direction, hence comparable to `ema_plan_baseline`.
+    pub ema_plan_words: u64,
+    /// Per-GEMM TAS total EMA for the same batches (the plan's baseline).
+    pub ema_plan_baseline_words: u64,
     pub flops: u64,
 }
 
@@ -68,6 +75,16 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Saving of layer-level planning over per-GEMM TAS on the batches
+    /// actually served (total EMA words, both sides).
+    pub fn ema_reduction_vs_per_gemm(&self) -> f64 {
+        if self.ema_plan_baseline_words == 0 {
+            0.0
+        } else {
+            1.0 - self.ema_plan_words as f64 / self.ema_plan_baseline_words as f64
+        }
+    }
+
     pub fn padding_fraction(&self) -> f64 {
         let total = self.tokens + self.padded_tokens;
         if total == 0 {
@@ -84,6 +101,9 @@ impl Metrics {
     }
 
     /// Record one dispatched batch with its accelerator-side accounting.
+    /// `layer_plan` is the bucket's layer-level plan (per-tile TAS + SRAM
+    /// residency); its total EMA and per-GEMM TAS baseline are accumulated
+    /// alongside the paper's read-EMA columns.
     #[allow(clippy::too_many_arguments)]
     pub fn record_batch(
         &self,
@@ -93,11 +113,14 @@ impl Metrics {
         exec: Duration,
         gemms: &[GemmWorkload],
         tiling: &Tiling,
+        layer_plan: &crate::dataflow::LayerPlan,
         flops: u64,
     ) {
         let naive = workload_read_ema(Scheme::Naive, gemms, tiling);
         let ayaka = crate::energy::ayaka::ayaka_workload_read_ema(gemms);
         let tas = workload_read_ema(Scheme::Tas, gemms, tiling);
+        let plan_words = layer_plan.total_ema();
+        let plan_baseline = layer_plan.per_gemm_tas_total();
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
         g.requests += n_requests as u64;
@@ -107,6 +130,8 @@ impl Metrics {
         g.ema_naive_words += naive;
         g.ema_ayaka_words += ayaka;
         g.ema_tas_words += tas;
+        g.ema_plan_words += plan_words;
+        g.ema_plan_baseline_words += plan_baseline;
         g.flops += flops;
     }
 
@@ -129,6 +154,8 @@ impl Metrics {
             ema_naive_words: g.ema_naive_words,
             ema_ayaka_words: g.ema_ayaka_words,
             ema_tas_words: g.ema_tas_words,
+            ema_plan_words: g.ema_plan_words,
+            ema_plan_baseline_words: g.ema_plan_baseline_words,
             flops: g.flops,
         }
     }
@@ -137,6 +164,8 @@ impl Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::decisions::layer_plan_for_bucket;
+    use crate::dataflow::LayerPlan;
     use crate::gemm::GemmShape;
 
     fn gemms() -> Vec<GemmWorkload> {
@@ -147,13 +176,17 @@ mod tests {
         }]
     }
 
+    fn plan() -> LayerPlan {
+        layer_plan_for_bucket(64, 128, 256, 512, 1, &Tiling::square(16), 256 * 1024)
+    }
+
     #[test]
     fn batch_accounting_accumulates() {
         let m = Metrics::new();
         m.record_batch(2, 100, 28, Duration::from_millis(3), &gemms(),
-                       &Tiling::square(16), 1000);
+                       &Tiling::square(16), &plan(), 1000);
         m.record_batch(1, 60, 4, Duration::from_millis(5), &gemms(),
-                       &Tiling::square(16), 500);
+                       &Tiling::square(16), &plan(), 500);
         m.record_latency(Duration::from_millis(4));
         let s = m.snapshot();
         assert_eq!(s.requests, 3);
@@ -162,6 +195,9 @@ mod tests {
         assert_eq!(s.flops, 1500);
         assert!(s.ema_reduction_vs_naive() > 0.9);
         assert!(s.ema_reduction_vs_ayaka() > 0.5);
+        assert_eq!(s.ema_plan_words, 2 * plan().total_ema());
+        assert!(s.ema_plan_words <= s.ema_plan_baseline_words);
+        assert!((0.0..=1.0).contains(&s.ema_reduction_vs_per_gemm()));
         assert!((s.padding_fraction() - 32.0 / 192.0).abs() < 1e-9);
         assert!(s.latency_p50_ms > 0.0);
     }
@@ -170,6 +206,7 @@ mod tests {
     fn empty_snapshot_is_sane() {
         let s = Metrics::new().snapshot();
         assert_eq!(s.ema_reduction_vs_naive(), 0.0);
+        assert_eq!(s.ema_reduction_vs_per_gemm(), 0.0);
         assert_eq!(s.padding_fraction(), 0.0);
     }
 }

@@ -42,6 +42,9 @@ pub struct CoordinatorOptions {
     pub preload_all: bool,
     /// Tile config used for the accelerator-side EMA accounting.
     pub tiling: Tiling,
+    /// Accelerator SRAM capacity in words — the residency budget the
+    /// layer-level planner may park intermediate activations in.
+    pub sram_words: u64,
 }
 
 impl Default for CoordinatorOptions {
@@ -51,6 +54,7 @@ impl Default for CoordinatorOptions {
             linger: Duration::from_millis(2),
             preload_all: true,
             tiling: Tiling::square(16),
+            sram_words: crate::config::AcceleratorConfig::default().sram_words,
         }
     }
 }
@@ -279,6 +283,9 @@ fn device_loop(
     let ffn = *engine.manifest().model.get("ffn").unwrap_or(&0);
     let vocab = *engine.manifest().model.get("vocab").unwrap_or(&0) as usize;
     let n_layers = *engine.manifest().model.get("n_layers").unwrap_or(&1);
+    // Layer plans are pure functions of the bucket token count; memoise
+    // so the per-batch accounting never re-runs the planner.
+    let mut plan_cache: BTreeMap<u64, crate::dataflow::LayerPlan> = BTreeMap::new();
 
     while let Ok(msg) = rx.recv() {
         let job = match msg {
@@ -295,9 +302,22 @@ fn device_loop(
         );
         let exec = t0.elapsed();
 
-        // Accelerator-side accounting for this batch.
+        // Accelerator-side accounting for this batch: the paper's
+        // per-GEMM read-EMA columns plus the layer-level plan (per-tile
+        // TAS with SRAM residency across the block's chained GEMMs).
         let tokens = (b * s) as u64;
         let gemms = bucket_gemms(tokens, hidden, ffn, vocab as u64, n_layers);
+        let layer_plan = plan_cache.entry(tokens).or_insert_with(|| {
+            decisions::layer_plan_for_bucket(
+                tokens,
+                hidden,
+                ffn,
+                vocab as u64,
+                n_layers,
+                &opts.tiling,
+                opts.sram_words,
+            )
+        });
         let flops = engine
             .manifest()
             .artifact(&batch.bucket.artifact)
@@ -311,6 +331,7 @@ fn device_loop(
             exec,
             &gemms,
             &opts.tiling,
+            layer_plan,
             flops,
         );
 

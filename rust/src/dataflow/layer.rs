@@ -1,0 +1,260 @@
+//! Layer-level planning: chain the GEMMs of one transformer block and let
+//! TAS decide stationary **per tile, given what is already SRAM-resident**.
+//!
+//! The paper optimises each linear projection in isolation.  A transformer
+//! block, though, is a *chain* — QKV → attention → output projection →
+//! FFN up → FFN down — and the tensor flowing along the chain is exactly
+//! the operand TAS keeps stationary on the input side.  In the spirit of
+//! cross-operator data-movement optimisation ("Data Movement Is All You
+//! Need", Ivanov et al.; multi-core data arrangement, Amirshahi et al.),
+//! [`LayerPlan`] models SRAM residency of the intermediate activations:
+//!
+//! * stages that **share an input** (Q, K, V all read the block input)
+//!   load it from DRAM once and reuse it from SRAM when it fits;
+//! * stages that **consume the previous stage's output** (FFN up consumes
+//!   the attention projection, FFN down consumes FFN up) skip both the
+//!   producer's DRAM store and their own DRAM load when the intermediate
+//!   fits — elementwise ops between them (LayerNorm, GeLU) operate on the
+//!   resident tensor in place and move no DRAM words either way.
+//!
+//! Each stage then gets a per-tile TAS [`Plan`] built with those residency
+//! flags ([`Plan::tas_with_residency`]), so a free input flips the
+//! stationary choice toward re-reading it — the decision the per-GEMM sign
+//! rule cannot see.  By construction every stage plan is no worse than the
+//! per-GEMM TAS hybrid, and residency only removes words, so a layer plan
+//! never loses to per-GEMM TAS (property-tested over the model zoo).
+//!
+//! Weights are never considered resident: one block touches every weight
+//! word at most once per forward pass, so parking them in SRAM cannot pay.
+
+use super::analytic;
+use super::plan::Plan;
+use super::Scheme;
+use crate::gemm::{GemmShape, Tiling};
+
+/// One GEMM stage of a transformer block, with its chaining relations.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageSpec {
+    /// Role, e.g. "q", "ffn1".
+    pub name: &'static str,
+    pub shape: GemmShape,
+    /// Instances per forward pass (usually the layer count).
+    pub count: u64,
+    /// This stage's input is the previous stage's output tensor.
+    pub consumes_previous: bool,
+    /// This stage reads the same input tensor as the previous stage.
+    pub shares_input_with_previous: bool,
+}
+
+/// A planned stage: the per-tile plan plus its residency decisions.
+#[derive(Clone, Debug)]
+pub struct StagePlan {
+    pub spec: StageSpec,
+    pub plan: Plan,
+    /// Input served from SRAM (chained or shared) — no DRAM reads.
+    pub input_resident: bool,
+    /// Output handed to the next stage in SRAM — no DRAM writes.
+    pub output_resident: bool,
+    /// DRAM words per stage instance under this plan.
+    pub ema_words: u64,
+    /// DRAM words per instance under per-GEMM TAS (the paper's baseline).
+    pub per_gemm_tas_words: u64,
+}
+
+/// A planned transformer block (× count per stage = one forward pass).
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    pub tokens: u64,
+    pub tiling: Tiling,
+    /// SRAM words available for parking intermediate activations.
+    pub sram_budget: u64,
+    pub stages: Vec<StagePlan>,
+}
+
+impl LayerPlan {
+    /// Plan a chain of stages.  `sram_words` is the total internal SRAM;
+    /// a working margin for double-buffered operand tiles is reserved
+    /// before any activation may claim residency.
+    pub fn plan(stages: Vec<StageSpec>, tokens: u64, tiling: &Tiling, sram_words: u64) -> LayerPlan {
+        // Reserve space for two double-buffered operand tile pairs.
+        let margin = 4 * (tiling.tm * tiling.tn + tiling.tn * tiling.tk);
+        let budget = sram_words.saturating_sub(margin);
+        let fits = |words: u64| words > 0 && words <= budget;
+
+        let mut planned: Vec<StagePlan> = Vec::with_capacity(stages.len());
+        for (idx, spec) in stages.iter().enumerate() {
+            let input_resident = if spec.shares_input_with_previous && idx > 0 {
+                // The previous stage already streamed this tensor; keep it
+                // if it fits.  (The first stage of the sharing group pays
+                // the DRAM read.)
+                fits(spec.shape.input_words())
+            } else if spec.consumes_previous && idx > 0 {
+                // Only resident if the producer could keep its output.
+                planned[idx - 1].output_resident
+            } else {
+                false
+            };
+            // The budget is cumulative over what the stage holds at once:
+            // a resident output coexists with this stage's resident input
+            // (if any) while the stage runs.
+            let held_with_output = spec.shape.output_words()
+                + if input_resident { spec.shape.input_words() } else { 0 };
+            let output_resident = stages
+                .get(idx + 1)
+                .map(|next| {
+                    next.consumes_previous
+                        && next.count == spec.count
+                        && fits(held_with_output)
+                })
+                .unwrap_or(false);
+            let plan = Plan::tas_with_residency(
+                &spec.shape,
+                tiling,
+                input_resident,
+                output_resident,
+            );
+            let ema_words = plan.ema().total();
+            let per_gemm_tas_words =
+                analytic::ema(Scheme::Tas, &spec.shape, tiling).total();
+            planned.push(StagePlan {
+                spec: spec.clone(),
+                plan,
+                input_resident,
+                output_resident,
+                ema_words,
+                per_gemm_tas_words,
+            });
+        }
+        LayerPlan { tokens, tiling: *tiling, sram_budget: budget, stages: planned }
+    }
+
+    /// Total DRAM words of one forward pass under the layer plan.
+    pub fn total_ema(&self) -> u64 {
+        self.stages.iter().map(|s| s.spec.count * s.ema_words).sum()
+    }
+
+    /// Total DRAM words under per-GEMM TAS — the baseline the layer plan
+    /// must never exceed.
+    pub fn per_gemm_tas_total(&self) -> u64 {
+        self.stages
+            .iter()
+            .map(|s| s.spec.count * s.per_gemm_tas_words)
+            .sum()
+    }
+
+    /// Fractional saving of layer planning over per-GEMM TAS.
+    pub fn reduction_vs_per_gemm(&self) -> f64 {
+        let base = self.per_gemm_tas_total();
+        if base == 0 {
+            0.0
+        } else {
+            1.0 - self.total_ema() as f64 / base as f64
+        }
+    }
+
+    /// Stages whose intermediate stayed in SRAM (either direction).
+    pub fn resident_edges(&self) -> u64 {
+        self.stages
+            .iter()
+            .map(|s| s.input_resident as u64 + s.output_resident as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::GemmShape;
+
+    fn bert_block(tokens: u64) -> Vec<StageSpec> {
+        // BERT-Base dims, one layer (count = 1 keeps the numbers small).
+        let h = 768;
+        let f = 3072;
+        let stage = |name, shape, consumes, shares| StageSpec {
+            name,
+            shape,
+            count: 1,
+            consumes_previous: consumes,
+            shares_input_with_previous: shares,
+        };
+        vec![
+            stage("q", GemmShape::new(tokens, h, h), false, false),
+            stage("k", GemmShape::new(tokens, h, h), false, true),
+            stage("v", GemmShape::new(tokens, h, h), false, true),
+            stage("attn_out", GemmShape::new(tokens, h, h), false, false),
+            stage("ffn1", GemmShape::new(tokens, h, f), true, false),
+            stage("ffn2", GemmShape::new(tokens, f, h), true, false),
+        ]
+    }
+
+    fn plan(tokens: u64, sram: u64) -> LayerPlan {
+        LayerPlan::plan(bert_block(tokens), tokens, &Tiling::square(16), sram)
+    }
+
+    #[test]
+    fn short_sequences_chain_through_sram() {
+        // 64×768 activations = 49k words — fits the default 256k SRAM.
+        let p = plan(64, 256 * 1024);
+        assert!(p.resident_edges() > 0);
+        // k and v reuse the block input q already streamed
+        assert!(p.stages[1].input_resident && p.stages[2].input_resident);
+        assert!(!p.stages[0].input_resident);
+        // attn_out -> ffn1 chains; ffn1 output (64×3072 = 196k) fits too
+        assert!(p.stages[4].input_resident);
+        assert!(p.total_ema() < p.per_gemm_tas_total());
+    }
+
+    #[test]
+    fn long_sequences_stop_fitting_and_degrade_gracefully() {
+        // 4096×3072 = 12.6M words: the ffn1 output cannot stay resident.
+        let p = plan(4096, 256 * 1024);
+        let ffn2 = p.stages.iter().find(|s| s.spec.name == "ffn2").unwrap();
+        assert!(!ffn2.input_resident);
+        // but the plan still never loses to per-GEMM TAS
+        assert!(p.total_ema() <= p.per_gemm_tas_total());
+    }
+
+    #[test]
+    fn zero_sram_reduces_to_per_gemm_tas_or_better() {
+        let p = plan(384, 0);
+        assert_eq!(p.resident_edges(), 0);
+        assert!(p.total_ema() <= p.per_gemm_tas_total());
+    }
+
+    #[test]
+    fn residency_only_ever_removes_words() {
+        for tokens in [64, 384, 512, 4096] {
+            let with = plan(tokens, 256 * 1024);
+            let without = plan(tokens, 0);
+            assert!(with.total_ema() <= without.total_ema(), "tokens {tokens}");
+        }
+    }
+
+    #[test]
+    fn residency_budget_is_cumulative_per_stage() {
+        // seq 80, BERT-Base dims, 256 KiW SRAM (budget ≈ 260k words):
+        // ffn1's input (80×768 ≈ 61k) and output (80×3072 ≈ 246k) each
+        // fit alone but not together — output residency must be denied.
+        let p = plan(80, 256 * 1024);
+        let ffn1 = p.stages.iter().find(|s| s.spec.name == "ffn1").unwrap();
+        assert!(ffn1.input_resident);
+        assert!(!ffn1.output_resident);
+        // at seq 64 the sum (49k + 197k) fits, so the chain holds
+        let p64 = plan(64, 256 * 1024);
+        let ffn1_64 = p64.stages.iter().find(|s| s.spec.name == "ffn1").unwrap();
+        assert!(ffn1_64.input_resident && ffn1_64.output_resident);
+    }
+
+    #[test]
+    fn chain_breaks_when_producer_cannot_keep_output() {
+        // consumes_previous only grants residency if the producer's
+        // output_resident was set — mismatched counts must not chain.
+        let mut stages = bert_block(128);
+        stages[5].count = 2; // ffn2 runs twice per ffn1: cannot chain
+        let p = LayerPlan::plan(stages, 128, &Tiling::square(16), 256 * 1024);
+        let ffn1 = p.stages.iter().find(|s| s.spec.name == "ffn1").unwrap();
+        let ffn2 = p.stages.iter().find(|s| s.spec.name == "ffn2").unwrap();
+        assert!(!ffn1.output_resident);
+        assert!(!ffn2.input_resident);
+    }
+}

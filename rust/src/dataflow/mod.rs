@@ -6,15 +6,24 @@
 //! * [`schedule`] — exact tile-step generators (loop nests + DRAM flags).
 //! * [`analytic`] — closed-form EMA model (Table II, generalised to the
 //!   k'/m' psum windows of Fig. 2).
+//! * [`plan`] — the schedule IR: a [`Plan`] owns a resolved tile-step
+//!   stream with **per-tile** stationary decisions and is what every cost
+//!   backend replays (see [`crate::sim::replay`]).
+//! * [`layer`] — layer-level planning: [`LayerPlan`] chains the GEMMs of
+//!   one transformer block and models SRAM residency of intermediates.
 //!
 //! The generators and the closed forms are developed independently and
 //! cross-checked by property tests: for every shape (ragged included) the
 //! replayed word counts equal the formulas exactly.
 
 pub mod analytic;
+pub mod layer;
+pub mod plan;
 pub mod schedule;
 
 pub use analytic::{ema, EmaBreakdown};
+pub use layer::{LayerPlan, StagePlan, StageSpec};
+pub use plan::{Plan, PlanBody, Strip, StripKind};
 pub use schedule::{for_each_step, step_count, Step};
 
 /// A stationary scheme. `Tas` resolves to `IsOs` or `WsOs` per shape via

@@ -1,0 +1,665 @@
+//! First-class schedule IR: a [`Plan`] owns the resolved tile-step stream
+//! of one GEMM — including **per-tile** stationary decisions — and is the
+//! single object every cost backend replays (see [`crate::sim::replay`]).
+//!
+//! The seed code resolved `Scheme::Tas` once per GEMM shape; the paper's
+//! claim, though, is that the stationary choice is a *tile*-granularity
+//! decision.  The IR makes that honest:
+//!
+//! * a plan for a fixed scheme ([`Plan::from_scheme`]) wraps the exact
+//!   loop-nest generator from [`super::schedule`], so every existing
+//!   analytic/simulator equivalence keeps holding bit-for-bit;
+//! * a per-tile TAS plan ([`Plan::tas_per_tile`]) covers the output tile
+//!   grid with output-stationary **strips**, each strip choosing input- or
+//!   weight-stationary independently.  A strip is the psum-window unit of
+//!   Fig. 2: an IS strip is one tile row × ≤k'/k tile columns (the input
+//!   tile stays, psums of the window live on chip); a WS strip is one tile
+//!   column × ≤m'/m tile rows.  Pure IS-OS and pure WS-OS are the two
+//!   degenerate covers, so the planner can never lose to either.
+//!
+//! The planner searches the guillotine families (a leading or trailing
+//! block of columns or rows weight-stationary, the complement
+//! input-stationary) in O(grid) with prefix sums, then falls back to the
+//! best fixed scheme if one beats the strip cover (possible for spilling
+//! schemes on extreme aspect ratios).
+//! On ragged shapes a *mixed* cover can strictly beat both pure hybrids —
+//! the per-tile decision is not just a per-GEMM argmin in disguise.
+//!
+//! Plans also carry SRAM **residency** flags used by layer-level planning
+//! ([`super::layer`]): an input already resident in SRAM costs no DRAM
+//! reads; an output consumed on-chip by the next stage costs no DRAM
+//! writes.  Step flags keep their schedule semantics (`load_input` means
+//! "tile enters the PE array"); residency is a plan-level property the
+//! cost backends consult when charging DRAM.
+
+use super::analytic::{self, EmaBreakdown};
+use super::schedule::{self, Step};
+use super::Scheme;
+use crate::gemm::{tile_extent, GemmShape, Tiling};
+use crate::util::ceil_div;
+
+/// Stationary orientation of one output strip.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StripKind {
+    /// Input tile stays; one tile row, psums for the column window on chip.
+    InputStationary,
+    /// Weight tile stays; one tile column, psums for the row window on chip.
+    WeightStationary,
+}
+
+/// A rectangular strip of output tiles `[i0, i1) × [j0, j1)` processed
+/// output-stationary: every tile in the strip accumulates over the full
+/// contraction and stores exactly once.  IS strips have `i1 == i0 + 1`,
+/// WS strips have `j1 == j0 + 1`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Strip {
+    pub kind: StripKind,
+    pub i0: u64,
+    pub i1: u64,
+    pub j0: u64,
+    pub j1: u64,
+}
+
+impl Strip {
+    /// Output tiles covered.
+    pub fn tiles(&self) -> u64 {
+        (self.i1 - self.i0) * (self.j1 - self.j0)
+    }
+}
+
+/// How a plan's step stream is produced.
+#[derive(Clone, Debug)]
+pub enum PlanBody {
+    /// A fixed-scheme loop nest over the whole grid (already resolved —
+    /// never `Scheme::Tas`).
+    Fixed(Scheme),
+    /// An output-grid cover by stationary strips.
+    Strips(Vec<Strip>),
+}
+
+/// The schedule IR: shape + tiling + resolved step stream + residency.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub shape: GemmShape,
+    pub tiling: Tiling,
+    pub body: PlanBody,
+    /// Input matrix is already SRAM-resident: operand reads cost no DRAM.
+    pub input_resident: bool,
+    /// Output is consumed on-chip by the next stage: no DRAM writes.
+    pub output_resident: bool,
+}
+
+impl Plan {
+    /// Wrap a fixed scheme's generator.  `Tas` resolves per-GEMM with the
+    /// paper's §III-A sign rule — the seed behaviour, kept for all
+    /// existing call sites; use [`Plan::tas_per_tile`] for the
+    /// tile-granular planner.
+    pub fn from_scheme(scheme: Scheme, shape: &GemmShape, tiling: &Tiling) -> Plan {
+        Plan {
+            shape: *shape,
+            tiling: *tiling,
+            body: PlanBody::Fixed(scheme.resolve(shape)),
+            input_resident: false,
+            output_resident: false,
+        }
+    }
+
+    /// Tile-granular TAS for a standalone GEMM (nothing resident).
+    pub fn tas_per_tile(shape: &GemmShape, tiling: &Tiling) -> Plan {
+        Plan::tas_with_residency(shape, tiling, false, false)
+    }
+
+    /// Tile-granular TAS given SRAM residency of the input/output tensors
+    /// (layer-level planning feeds these flags per chained stage).
+    pub fn tas_with_residency(
+        shape: &GemmShape,
+        tiling: &Tiling,
+        input_resident: bool,
+        output_resident: bool,
+    ) -> Plan {
+        let (gm, _gn, gk) = tiling.grid(shape);
+        let wk = tiling.window_tiles_k(shape);
+        let wm = tiling.window_tiles_m(shape);
+        let n = shape.n;
+
+        // Exact per-row / per-column operand word counts (ragged-aware):
+        // a tile row i costs mi·N input words over a full contraction; a
+        // tile column j costs N·kj weight words.
+        let mut in_pre = vec![0u64; gm as usize + 1];
+        for i in 0..gm {
+            in_pre[i as usize + 1] =
+                in_pre[i as usize] + tile_extent(shape.m, tiling.tm, i) * n;
+        }
+        let mut w_pre = vec![0u64; gk as usize + 1];
+        for j in 0..gk {
+            w_pre[j as usize + 1] =
+                w_pre[j as usize] + n * tile_extent(shape.k, tiling.tk, j);
+        }
+        let in_total = in_pre[gm as usize]; // M·N
+        let w_total = w_pre[gk as usize]; // N·K
+        let nwin_m = ceil_div(gm, wm);
+        let nwin_k = ceil_div(gk, wk);
+        let in_cost = |w: u64| if input_resident { 0 } else { w };
+
+        // Guillotine families: one contiguous block of columns (or rows)
+        // goes weight-stationary, the complement input-stationary.  Both
+        // leading- and trailing-block variants are searched — a ragged
+        // last column under WS next to aligned IS windows (or vice versa)
+        // is exactly where a mixed cover strictly beats both pure hybrids.
+        // Endpoints reproduce pure IS-OS / WS-OS covers.
+        let mut best_cost = u64::MAX;
+        let mut best_split = SplitChoice { col_split: true, ws_block_first: true, at: 0 };
+        let mut consider = |cost: u64, split: SplitChoice| {
+            if cost < best_cost {
+                best_cost = cost;
+                best_split = split;
+            }
+        };
+        for c in 0..=gk {
+            let w_lo = w_pre[c as usize];
+            let w_hi = w_total - w_lo;
+            // WS cols [0, c), IS cols [c, gk):
+            consider(
+                nwin_m * w_lo                                // WS stationary weights
+                    + in_cost(c * in_total)                  // WS streamed inputs
+                    + in_cost(ceil_div(gk - c, wk) * in_total) // IS stationary inputs
+                    + gm * w_hi,                             // IS streamed weights
+                SplitChoice { col_split: true, ws_block_first: true, at: c },
+            );
+            // IS cols [0, c), WS cols [c, gk):
+            consider(
+                in_cost(ceil_div(c, wk) * in_total)
+                    + gm * w_lo
+                    + nwin_m * w_hi
+                    + in_cost((gk - c) * in_total),
+                SplitChoice { col_split: true, ws_block_first: false, at: c },
+            );
+        }
+        for r in 0..=gm {
+            let in_lo = in_pre[r as usize];
+            let in_hi = in_total - in_lo;
+            // IS rows [0, r), WS rows [r, gm):
+            consider(
+                in_cost(nwin_k * in_lo)
+                    + r * w_total
+                    + ceil_div(gm - r, wm) * w_total
+                    + in_cost(gk * in_hi),
+                SplitChoice { col_split: false, ws_block_first: false, at: r },
+            );
+            // WS rows [0, r), IS rows [r, gm):
+            consider(
+                ceil_div(r, wm) * w_total
+                    + in_cost(gk * in_lo)
+                    + in_cost(nwin_k * in_hi)
+                    + (gm - r) * w_total,
+                SplitChoice { col_split: false, ws_block_first: true, at: r },
+            );
+        }
+
+        // Fixed-scheme fallback: without residency, a spilling scheme can
+        // still beat the OS strip covers on extreme aspect ratios (e.g. a
+        // single contraction tile makes plain IS's spill column free).
+        if !input_resident && !output_resident {
+            let strip_total = best_cost + shape.output_words();
+            let mut best_fixed: Option<(u64, Scheme)> = None;
+            for s in Scheme::FIXED {
+                let total = analytic::ema(s, shape, tiling).total();
+                if best_fixed.map(|(t, _)| total < t).unwrap_or(true) {
+                    best_fixed = Some((total, s));
+                }
+            }
+            if let Some((total, s)) = best_fixed {
+                if total < strip_total {
+                    return Plan {
+                        shape: *shape,
+                        tiling: *tiling,
+                        body: PlanBody::Fixed(s),
+                        input_resident,
+                        output_resident,
+                    };
+                }
+            }
+        }
+
+        let strips = build_strips(best_split, gm, gk, wm, wk);
+        debug_assert_eq!(
+            strips.iter().map(Strip::tiles).sum::<u64>(),
+            gm * gk,
+            "strip cover must tile the output grid exactly"
+        );
+        Plan {
+            shape: *shape,
+            tiling: *tiling,
+            body: PlanBody::Strips(strips),
+            input_resident,
+            output_resident,
+        }
+    }
+
+    /// Drive `visit` over every step of the plan in schedule order.
+    pub fn for_each_step<F: FnMut(Step)>(&self, mut visit: F) {
+        match &self.body {
+            PlanBody::Fixed(s) => {
+                schedule::for_each_step(*s, &self.shape, &self.tiling, visit)
+            }
+            PlanBody::Strips(strips) => {
+                let (_, gn, _) = self.tiling.grid(&self.shape);
+                for strip in strips {
+                    match strip.kind {
+                        StripKind::InputStationary => {
+                            let i = strip.i0;
+                            for r in 0..gn {
+                                for j in strip.j0..strip.j1 {
+                                    let mut s = Step::new(i, r, j);
+                                    s.load_input = j == strip.j0;
+                                    s.load_weight = true;
+                                    s.store_out = r + 1 == gn;
+                                    visit(s);
+                                }
+                            }
+                        }
+                        StripKind::WeightStationary => {
+                            let j = strip.j0;
+                            for r in 0..gn {
+                                for i in strip.i0..strip.i1 {
+                                    let mut s = Step::new(i, r, j);
+                                    s.load_input = true;
+                                    s.load_weight = i == strip.i0;
+                                    s.store_out = r + 1 == gn;
+                                    visit(s);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Total steps: every (i, r, j) tile triple exactly once.
+    pub fn step_count(&self) -> u64 {
+        schedule::step_count(&self.shape, &self.tiling)
+    }
+
+    /// Closed-form EMA of the plan in words (DRAM traffic only: resident
+    /// operands cost nothing).  For fixed bodies this is Table II; for
+    /// strip bodies it is the per-strip cost model, which the replay
+    /// property tests pin to the step stream word-for-word.
+    pub fn ema(&self) -> EmaBreakdown {
+        match &self.body {
+            PlanBody::Fixed(s) => {
+                debug_assert!(
+                    !self.input_resident && !self.output_resident,
+                    "residency is only planned onto strip bodies"
+                );
+                analytic::ema(*s, &self.shape, &self.tiling)
+            }
+            PlanBody::Strips(strips) => {
+                let mut input = 0u64;
+                let mut weight = 0u64;
+                let n = self.shape.n;
+                for strip in strips {
+                    match strip.kind {
+                        StripKind::InputStationary => {
+                            let mi = tile_extent(self.shape.m, self.tiling.tm, strip.i0);
+                            let kw: u64 = (strip.j0..strip.j1)
+                                .map(|j| tile_extent(self.shape.k, self.tiling.tk, j))
+                                .sum();
+                            input += mi * n;
+                            weight += n * kw;
+                        }
+                        StripKind::WeightStationary => {
+                            let kj = tile_extent(self.shape.k, self.tiling.tk, strip.j0);
+                            let mw: u64 = (strip.i0..strip.i1)
+                                .map(|i| tile_extent(self.shape.m, self.tiling.tm, i))
+                                .sum();
+                            weight += n * kj;
+                            input += mw * n;
+                        }
+                    }
+                }
+                EmaBreakdown {
+                    input: if self.input_resident { 0 } else { input },
+                    weight,
+                    output: if self.output_resident {
+                        0
+                    } else {
+                        self.shape.output_words()
+                    },
+                }
+            }
+        }
+    }
+
+    /// Output tiles under each orientation: `(input_stationary,
+    /// weight_stationary, other)`.  Fixed OS/naive bodies count as other.
+    pub fn tile_mix(&self) -> (u64, u64, u64) {
+        let (gm, _, gk) = self.tiling.grid(&self.shape);
+        let total = gm * gk;
+        match &self.body {
+            PlanBody::Fixed(Scheme::Is) | PlanBody::Fixed(Scheme::IsOs) => (total, 0, 0),
+            PlanBody::Fixed(Scheme::Ws) | PlanBody::Fixed(Scheme::WsOs) => (0, total, 0),
+            PlanBody::Fixed(_) => (0, 0, total),
+            PlanBody::Strips(strips) => {
+                let is: u64 = strips
+                    .iter()
+                    .filter(|s| s.kind == StripKind::InputStationary)
+                    .map(Strip::tiles)
+                    .sum();
+                let ws: u64 = strips
+                    .iter()
+                    .filter(|s| s.kind == StripKind::WeightStationary)
+                    .map(Strip::tiles)
+                    .sum();
+                (is, ws, total - is - ws)
+            }
+        }
+    }
+
+    /// Human-readable decision summary for reports: `"is-os"`, `"ws-os"`,
+    /// a fixed-scheme name, or `"mixed(41% is)"`.
+    pub fn describe(&self) -> String {
+        match &self.body {
+            PlanBody::Fixed(s) => s.name().to_string(),
+            PlanBody::Strips(_) => {
+                let (is, ws, _) = self.tile_mix();
+                if ws == 0 {
+                    "is-os".to_string()
+                } else if is == 0 {
+                    "ws-os".to_string()
+                } else {
+                    format!("mixed({}% is)", 100 * is / (is + ws))
+                }
+            }
+        }
+    }
+}
+
+/// One guillotine partition of the output grid: a contiguous block of
+/// columns (or rows) starting at index 0 or ending at the grid edge goes
+/// weight-stationary, the complement input-stationary.
+#[derive(Clone, Copy, Debug)]
+struct SplitChoice {
+    /// Split along columns (else along rows).
+    col_split: bool,
+    /// The WS block is the leading one.
+    ws_block_first: bool,
+    /// Split index in tiles.
+    at: u64,
+}
+
+fn build_strips(split: SplitChoice, gm: u64, gk: u64, wm: u64, wk: u64) -> Vec<Strip> {
+    let mut strips = Vec::new();
+    // (ws_cols, is_cols) or (ws_rows, is_rows) as half-open ranges.
+    let (ws_range, is_range) = {
+        let extent = if split.col_split { gk } else { gm };
+        if split.ws_block_first {
+            ((0, split.at), (split.at, extent))
+        } else {
+            ((split.at, extent), (0, split.at))
+        }
+    };
+    let mut push_ws_col = |j: u64| {
+        let mut i0 = 0;
+        while i0 < gm {
+            let i1 = (i0 + wm).min(gm);
+            strips.push(Strip { kind: StripKind::WeightStationary, i0, i1, j0: j, j1: j + 1 });
+            i0 = i1;
+        }
+    };
+    if split.col_split {
+        for j in ws_range.0..ws_range.1 {
+            push_ws_col(j);
+        }
+        for i in 0..gm {
+            let mut j0 = is_range.0;
+            while j0 < is_range.1 {
+                let j1 = (j0 + wk).min(is_range.1);
+                strips.push(Strip { kind: StripKind::InputStationary, i0: i, i1: i + 1, j0, j1 });
+                j0 = j1;
+            }
+        }
+    } else {
+        for i in is_range.0..is_range.1 {
+            let mut j0 = 0;
+            while j0 < gk {
+                let j1 = (j0 + wk).min(gk);
+                strips.push(Strip { kind: StripKind::InputStationary, i0: i, i1: i + 1, j0, j1 });
+                j0 = j1;
+            }
+        }
+        for j in 0..gk {
+            let mut i0 = ws_range.0;
+            while i0 < ws_range.1 {
+                let i1 = (i0 + wm).min(ws_range.1);
+                strips.push(Strip { kind: StripKind::WeightStationary, i0, i1, j0: j, j1: j + 1 });
+                i0 = i1;
+            }
+        }
+    }
+    strips
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+    use crate::util::prng::Rng;
+    use std::collections::HashSet;
+
+    fn replayed_ema(plan: &Plan) -> EmaBreakdown {
+        // Independent word count straight off the step stream.
+        let mut e = EmaBreakdown::default();
+        let (shape, t) = (plan.shape, plan.tiling);
+        plan.for_each_step(|s| {
+            let mi = tile_extent(shape.m, t.tm, s.i);
+            let nr = tile_extent(shape.n, t.tn, s.r);
+            let kj = tile_extent(shape.k, t.tk, s.j);
+            if s.load_input && !plan.input_resident {
+                e.input += mi * nr;
+            }
+            if s.load_weight {
+                e.weight += nr * kj;
+            }
+            if s.psum_spill {
+                e.output += mi * kj;
+            }
+            if s.store_out && !plan.output_resident {
+                e.output += mi * kj;
+            }
+        });
+        e
+    }
+
+    fn rand_tiling(rng: &mut Rng) -> Tiling {
+        let t = *rng.choose(&[4u64, 8, 16]);
+        let mut tiling = Tiling::square(t);
+        if rng.gen_range(2) == 0 {
+            tiling = tiling.with_kp(rng.gen_in(1, 6) * t);
+        }
+        if rng.gen_range(2) == 0 {
+            tiling = tiling.with_mp(rng.gen_in(1, 6) * t);
+        }
+        tiling
+    }
+
+    #[test]
+    fn per_tile_plan_covers_each_tile_triple_once() {
+        property("plan coverage", 80, |rng: &mut Rng| {
+            let shape = GemmShape::new(
+                rng.gen_in(1, 150),
+                rng.gen_in(1, 150),
+                rng.gen_in(1, 150),
+            );
+            let tiling = rand_tiling(rng);
+            let plan = Plan::tas_per_tile(&shape, &tiling);
+            let mut seen: HashSet<(u64, u64, u64)> = HashSet::new();
+            let mut n = 0u64;
+            plan.for_each_step(|s| {
+                n += 1;
+                assert!(seen.insert((s.i, s.r, s.j)), "repeated tile");
+            });
+            assert_eq!(n, plan.step_count());
+        });
+    }
+
+    #[test]
+    fn per_tile_plan_stores_each_output_tile_once() {
+        property("plan store-once", 80, |rng: &mut Rng| {
+            let shape = GemmShape::new(
+                rng.gen_in(1, 120),
+                rng.gen_in(1, 120),
+                rng.gen_in(1, 120),
+            );
+            let tiling = rand_tiling(rng);
+            let plan = Plan::tas_per_tile(&shape, &tiling);
+            let (gm, _, gk) = tiling.grid(&shape);
+            let mut stores: HashSet<(u64, u64)> = HashSet::new();
+            plan.for_each_step(|s| {
+                if s.store_out {
+                    assert!(stores.insert((s.i, s.j)), "double store");
+                }
+            });
+            assert_eq!(stores.len() as u64, gm * gk);
+        });
+    }
+
+    #[test]
+    fn closed_form_ema_matches_step_stream() {
+        property("plan ema == replay", 100, |rng: &mut Rng| {
+            let shape = GemmShape::new(
+                rng.gen_in(1, 120),
+                rng.gen_in(1, 120),
+                rng.gen_in(1, 120),
+            );
+            let tiling = rand_tiling(rng);
+            let plan = Plan::tas_per_tile(&shape, &tiling);
+            let closed = plan.ema();
+            let replay = replayed_ema(&plan);
+            // Fixed fallbacks may spill psums (extra output words counted
+            // identically by both sides via analytic::ema).
+            match &plan.body {
+                PlanBody::Strips(_) => assert_eq!(closed, replay, "{shape:?}"),
+                PlanBody::Fixed(s) => {
+                    assert_eq!(closed, analytic::ema(*s, &shape, &tiling))
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn per_tile_never_worse_than_any_fixed_scheme() {
+        property("per-tile <= best fixed", 150, |rng: &mut Rng| {
+            let shape = GemmShape::new(
+                rng.gen_in(1, 2000),
+                rng.gen_in(1, 2000),
+                rng.gen_in(1, 2000),
+            );
+            let tiling = rand_tiling(rng);
+            let plan = Plan::tas_per_tile(&shape, &tiling);
+            let mine = plan.ema().total();
+            for s in Scheme::FIXED.iter().chain([Scheme::Tas].iter()) {
+                let fixed = analytic::ema(*s, &shape, &tiling).total();
+                assert!(
+                    mine <= fixed,
+                    "{shape:?} {tiling:?}: plan {mine} > {s:?} {fixed}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn mixed_cover_beats_pure_hybrids_on_ragged_windows() {
+        // K = 65 with a 4-tile psum window: pure IS-OS needs 2 windows
+        // just for the 1-wide ragged column, re-reading the whole input.
+        // Handing that column to WS strips leaves one aligned window for
+        // the rest — a strict win over both pure hybrids, i.e. the
+        // per-tile decision is not a per-GEMM argmin in disguise.
+        let tiling = Tiling::square(16).with_kp(64).with_mp(32);
+        let shape = GemmShape::new(2048, 64, 65);
+        let plan = Plan::tas_per_tile(&shape, &tiling);
+        let mine = plan.ema().total();
+        let is_os = analytic::ema(Scheme::IsOs, &shape, &tiling).total();
+        let ws_os = analytic::ema(Scheme::WsOs, &shape, &tiling).total();
+        assert!(
+            mine < is_os.min(ws_os),
+            "mixed {mine} vs is-os {is_os} / ws-os {ws_os}"
+        );
+        let (is, ws, other) = plan.tile_mix();
+        assert_eq!(other, 0);
+        assert!(is > 0 && ws > 0, "expected a mixed cover: is {is} ws {ws}");
+    }
+
+    #[test]
+    fn residency_zeroes_the_resident_streams() {
+        let shape = GemmShape::new(384, 768, 768);
+        let tiling = Tiling::square(16);
+        let base = Plan::tas_per_tile(&shape, &tiling).ema();
+        let in_res = Plan::tas_with_residency(&shape, &tiling, true, false).ema();
+        let out_res = Plan::tas_with_residency(&shape, &tiling, false, true).ema();
+        assert_eq!(in_res.input, 0);
+        assert_eq!(out_res.output, 0);
+        assert!(in_res.total() < base.total());
+        assert!(out_res.total() < base.total());
+        // weight traffic is never resident
+        assert!(in_res.weight > 0 && out_res.weight > 0);
+    }
+
+    #[test]
+    fn resident_input_reduces_cost_to_single_weight_read() {
+        // With the input free, the only remaining traffic is weights; the
+        // planner must find a cover that reads each weight word once.
+        let shape = GemmShape::new(4096, 768, 768);
+        let tiling = Tiling::square(16);
+        let plan = Plan::tas_with_residency(&shape, &tiling, true, false);
+        let e = plan.ema();
+        assert_eq!(e.input, 0);
+        assert_eq!(e.weight, shape.weight_words());
+    }
+
+    #[test]
+    fn fixed_bodies_reproduce_schedule_generators() {
+        let shape = GemmShape::new(96, 80, 112);
+        let tiling = Tiling::square(16);
+        for scheme in Scheme::FIXED.iter().chain([Scheme::Tas].iter()) {
+            let plan = Plan::from_scheme(*scheme, &shape, &tiling);
+            let mut plan_steps = Vec::new();
+            plan.for_each_step(|s| plan_steps.push(s));
+            let mut gen_steps = Vec::new();
+            schedule::for_each_step(*scheme, &shape, &tiling, |s| gen_steps.push(s));
+            assert_eq!(plan_steps, gen_steps, "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn psum_live_set_respects_windows() {
+        property("plan psum windows", 60, |rng: &mut Rng| {
+            let t = 8u64;
+            let tiling = Tiling::square(t)
+                .with_kp(rng.gen_in(1, 4) * t)
+                .with_mp(rng.gen_in(1, 4) * t);
+            let shape = GemmShape::new(
+                rng.gen_in(1, 200),
+                rng.gen_in(1, 200),
+                rng.gen_in(1, 200),
+            );
+            let plan = Plan::tas_per_tile(&shape, &tiling);
+            if let PlanBody::Strips(_) = plan.body {
+                let wk = tiling.window_tiles_k(&shape);
+                let wm = tiling.window_tiles_m(&shape);
+                let cap = wk.max(wm);
+                let mut live: HashSet<(u64, u64)> = HashSet::new();
+                let mut peak = 0;
+                plan.for_each_step(|s| {
+                    live.insert((s.i, s.j));
+                    peak = peak.max(live.len() as u64);
+                    if s.store_out {
+                        live.remove(&(s.i, s.j));
+                    }
+                });
+                assert!(peak <= cap, "peak {peak} > window cap {cap}");
+                assert!(live.is_empty());
+            }
+        });
+    }
+}

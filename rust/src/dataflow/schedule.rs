@@ -39,7 +39,9 @@ pub struct Step {
 }
 
 impl Step {
-    fn new(i: u64, r: u64, j: u64) -> Step {
+    /// Blank step at tile triple `(i, r, j)`; generators (including the
+    /// [`crate::dataflow::plan`] IR) set the DRAM flags they need.
+    pub(crate) fn new(i: u64, r: u64, j: u64) -> Step {
         Step {
             i,
             r,

@@ -17,7 +17,7 @@ pub mod ayaka;
 pub use ayaka::ayaka_fixed_read_ema;
 
 use crate::config::EnergyConfig;
-use crate::dataflow::{ema, Scheme};
+use crate::dataflow::{ema, Plan, Scheme};
 use crate::gemm::{GemmShape, Tiling};
 use crate::models::GemmWorkload;
 
@@ -76,6 +76,20 @@ impl EnergyModel {
         let macs = shape.macs() as f64;
         EnergyCost {
             dram_pj: self.cfg.dram_pj * e.total() as f64,
+            sram_pj: self.cfg.sram_pj * 2.0 * macs + self.cfg.reg_pj * macs,
+            mac_pj: self.cfg.mac_pj * macs,
+        }
+    }
+
+    /// Energy of one GEMM under a schedule [`Plan`] — the per-tile TAS
+    /// counterpart of [`EnergyModel::gemm_energy`].  `dram_words` is the
+    /// plan's replayed (or closed-form) Table II word count; internal
+    /// SRAM/MAC terms depend only on the MAC count, exactly as in the
+    /// fixed-scheme path.
+    pub fn plan_energy(&self, plan: &Plan, dram_words: u64) -> EnergyCost {
+        let macs = plan.shape.macs() as f64;
+        EnergyCost {
+            dram_pj: self.cfg.dram_pj * dram_words as f64,
             sram_pj: self.cfg.sram_pj * 2.0 * macs + self.cfg.reg_pj * macs,
             mac_pj: self.cfg.mac_pj * macs,
         }

@@ -3,21 +3,24 @@
 //! Subcommands:
 //!   tables    regenerate the paper's Tables I–IV
 //!   simulate  EMA / energy / cycle report for one GEMM or model
+//!   plan      layer-level plan: per-tile TAS + SRAM residency per block
 //!   sweep     sequence-length sweep (crossover analysis)
 //!   trace     dump a tile-step trace (Fig. 1/2 evidence)
 //!   validate  run every artifact against its golden vectors (PJRT)
 //!   serve     closed-loop serving demo over the artifacts
 
 use anyhow::Result;
+use std::collections::BTreeMap;
 use std::time::Duration;
 use tas::config::AcceleratorConfig;
 use tas::coordinator::{Coordinator, CoordinatorOptions};
-use tas::dataflow::{ema, for_each_step, Scheme};
+use tas::dataflow::{ema, for_each_step, LayerPlan, Scheme};
 use tas::gemm::{GemmShape, Tiling};
 use tas::models::{zoo, LengthDist};
 use tas::report;
 use tas::sim::{estimate_cycles, measure_occupancy};
 use tas::util::cli::Args;
+use tas::util::json::Json;
 use tas::util::prng::Rng;
 use tas::util::table::{pct, sci, Table};
 
@@ -26,6 +29,7 @@ fn main() {
     let result = match args.subcommand.as_deref() {
         Some("tables") => cmd_tables(args),
         Some("simulate") => cmd_simulate(args),
+        Some("plan") => cmd_plan(args),
         Some("sweep") => cmd_sweep(args),
         Some("trace") => cmd_trace(args),
         Some("figs") => cmd_figs(args),
@@ -49,8 +53,9 @@ tas — Tile-based Adaptive Stationary for transformer accelerators
 USAGE: tas <subcommand> [options]
 
   tables    [--table 1|2|3|4] [--csv] [--tile N] [--seed N]
-  simulate  --model NAME --seq N [--tile N] | --m M --n N --k K
-  sweep     --model NAME [--tile N] [--seqs a,b,c]
+  simulate  --model NAME --seq N [--tile N] [--json] | --m M --n N --k K
+  plan      --model NAME [--seq N] [--tile N] [--sram WORDS] [--json]
+  sweep     --model NAME [--tile N] [--seqs a,b,c] [--json]
   trace     --scheme NAME --m M --n N --k K [--tile N] [--limit N]
   figs      [--m M] [--n N] [--k K] [--tile N]   (Fig. 1/2 tile maps)
   validate  [--artifacts DIR]
@@ -95,9 +100,28 @@ fn cmd_tables(mut args: Args) -> Result<()> {
     Ok(())
 }
 
+/// `Json::Num` from a count (exact below 2^53 — every EMA figure here is).
+fn jnum(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn jstr(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn jobj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<String, Json>>(),
+    )
+}
+
 fn cmd_simulate(mut args: Args) -> Result<()> {
     let tiling = tiling_from(&mut args)?;
     let cfg = AcceleratorConfig::default();
+    let json = args.flag("json");
     let model = args.opt("model");
     let shapes: Vec<(String, GemmShape, u64)> = if let Some(name) = model {
         let m = zoo::by_name(&name)?;
@@ -114,33 +138,146 @@ fn cmd_simulate(mut args: Args) -> Result<()> {
     };
     args.finish()?;
 
+    let mut out = Vec::new();
     for (name, shape, count) in shapes {
         let mut t = Table::new(
             &format!("{name}: M={} N={} K={} ×{count}", shape.m, shape.n, shape.k),
             &["scheme", "EMA words", "vs naive", "cycles", "stall%", "peak psums"],
         );
         let naive_total = ema(Scheme::Naive, &shape, &tiling).total();
+        let mut schemes = Vec::new();
         for s in Scheme::FIXED.iter().chain([Scheme::Tas].iter()) {
             let e = ema(*s, &shape, &tiling);
             let c = estimate_cycles(*s, &shape, &cfg);
             let occ = measure_occupancy(*s, &shape, &tiling);
-            t.row(vec![
-                s.name().to_string(),
-                sci(e.total() as f64),
-                pct(1.0 - e.total() as f64 / naive_total as f64),
-                format!("{}", c.total_cycles),
-                format!("{:.1}%", c.stall_fraction() * 100.0),
-                format!("{}", occ.peak_psum_words),
-            ]);
+            if json {
+                schemes.push(jobj(vec![
+                    ("scheme", jstr(s.name())),
+                    ("ema_words", jnum(e.total())),
+                    ("input_words", jnum(e.input)),
+                    ("weight_words", jnum(e.weight)),
+                    ("output_words", jnum(e.output)),
+                    ("cycles", jnum(c.total_cycles)),
+                    ("peak_psum_words", jnum(occ.peak_psum_words)),
+                ]));
+            } else {
+                t.row(vec![
+                    s.name().to_string(),
+                    sci(e.total() as f64),
+                    pct(1.0 - e.total() as f64 / naive_total as f64),
+                    format!("{}", c.total_cycles),
+                    format!("{:.1}%", c.stall_fraction() * 100.0),
+                    format!("{}", occ.peak_psum_words),
+                ]);
+            }
         }
-        println!("{}", t.to_text());
+        if json {
+            out.push(jobj(vec![
+                ("gemm", jstr(&name)),
+                ("m", jnum(shape.m)),
+                ("n", jnum(shape.n)),
+                ("k", jnum(shape.k)),
+                ("count", jnum(count)),
+                ("schemes", Json::Arr(schemes)),
+            ]));
+        } else {
+            println!("{}", t.to_text());
+        }
     }
+    if json {
+        println!("{}", Json::Arr(out).to_string_compact());
+    }
+    Ok(())
+}
+
+fn cmd_plan(mut args: Args) -> Result<()> {
+    let name = args.opt_or("model", "bert-base");
+    let tiling = tiling_from(&mut args)?;
+    let cfg = AcceleratorConfig::default();
+    let sram = args.opt_u64("sram", cfg.sram_words)?;
+    let json = args.flag("json");
+    let model = zoo::by_name(&name)?;
+    let seq = args.opt_u64("seq", model.default_seq)?;
+    args.finish()?;
+
+    let plan = LayerPlan::plan(model.block_stages(seq), seq, &tiling, sram);
+    let naive: u64 = plan
+        .stages
+        .iter()
+        .map(|s| s.spec.count * ema(Scheme::Naive, &s.spec.shape, &tiling).total())
+        .sum();
+
+    if json {
+        let stages: Vec<Json> = plan
+            .stages
+            .iter()
+            .map(|s| {
+                jobj(vec![
+                    ("stage", jstr(s.spec.name)),
+                    ("m", jnum(s.spec.shape.m)),
+                    ("n", jnum(s.spec.shape.n)),
+                    ("k", jnum(s.spec.shape.k)),
+                    ("count", jnum(s.spec.count)),
+                    ("decision", jstr(&s.plan.describe())),
+                    ("input_resident", Json::Bool(s.input_resident)),
+                    ("output_resident", Json::Bool(s.output_resident)),
+                    ("ema_words", jnum(s.ema_words)),
+                    ("per_gemm_tas_words", jnum(s.per_gemm_tas_words)),
+                ])
+            })
+            .collect();
+        let doc = jobj(vec![
+            ("model", jstr(model.name)),
+            ("seq", jnum(seq)),
+            ("sram_words", jnum(sram)),
+            ("stages", Json::Arr(stages)),
+            ("total_ema_words", jnum(plan.total_ema())),
+            ("per_gemm_tas_words", jnum(plan.per_gemm_tas_total())),
+            ("naive_words", jnum(naive)),
+        ]);
+        println!("{}", doc.to_string_compact());
+        return Ok(());
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "{} layer plan @ seq {} (tile {}, SRAM {} words)",
+            model.name, seq, tiling.tm, sram
+        ),
+        &["stage", "M,N,K", "×", "decision", "in SRAM", "out SRAM", "EMA words", "vs per-GEMM TAS"],
+    );
+    for s in &plan.stages {
+        t.row(vec![
+            s.spec.name.to_string(),
+            format!("{},{},{}", s.spec.shape.m, s.spec.shape.n, s.spec.shape.k),
+            s.spec.count.to_string(),
+            s.plan.describe(),
+            if s.input_resident { "yes" } else { "-" }.into(),
+            if s.output_resident { "yes" } else { "-" }.into(),
+            sci(s.ema_words as f64),
+            pct(1.0 - s.ema_words as f64 / s.per_gemm_tas_words.max(1) as f64),
+        ]);
+    }
+    println!("{}", t.to_text());
+    println!(
+        "forward pass:  layer plan {}   per-GEMM TAS {}   naive {}",
+        sci(plan.total_ema() as f64),
+        sci(plan.per_gemm_tas_total() as f64),
+        sci(naive as f64)
+    );
+    println!(
+        "layer planning saves {} vs per-GEMM TAS; {} vs naive ({} resident edges)",
+        pct(plan.reduction_vs_per_gemm()),
+        pct(1.0 - plan.total_ema() as f64 / naive as f64),
+        plan.resident_edges()
+    );
     Ok(())
 }
 
 fn cmd_sweep(mut args: Args) -> Result<()> {
     let name = args.opt_or("model", "wav2vec2-large");
     let tiling = tiling_from(&mut args)?;
+    let json = args.flag("json");
     let seqs: Vec<u64> = match args.opt("seqs") {
         Some(s) => s
             .split(',')
@@ -154,6 +291,7 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
         &format!("{name}: EMA (words) per forward pass vs sequence length"),
         &["seq", "is-os", "ws-os", "tas", "tas picks", "reduction vs naive"],
     );
+    let mut rows = Vec::new();
     for seq in seqs {
         let gemms = model.linear_gemms(seq);
         let total = |scheme: Scheme| -> u64 {
@@ -170,16 +308,35 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
         );
         // which way did the rule go for the hidden-sized projections?
         let pick = if seq < model.hidden { "IS-OS" } else { "WS-OS" };
-        t.row(vec![
-            seq.to_string(),
-            sci(is_os as f64),
-            sci(ws_os as f64),
-            sci(tas as f64),
-            pick.into(),
-            pct(1.0 - tas as f64 / naive as f64),
-        ]);
+        if json {
+            rows.push(jobj(vec![
+                ("seq", jnum(seq)),
+                ("is_os_words", jnum(is_os)),
+                ("ws_os_words", jnum(ws_os)),
+                ("tas_words", jnum(tas)),
+                ("naive_words", jnum(naive)),
+                ("tas_picks", jstr(pick)),
+            ]));
+        } else {
+            t.row(vec![
+                seq.to_string(),
+                sci(is_os as f64),
+                sci(ws_os as f64),
+                sci(tas as f64),
+                pick.into(),
+                pct(1.0 - tas as f64 / naive as f64),
+            ]);
+        }
     }
-    println!("{}", t.to_text());
+    if json {
+        let doc = jobj(vec![
+            ("model", jstr(model.name)),
+            ("rows", Json::Arr(rows)),
+        ]);
+        println!("{}", doc.to_string_compact());
+    } else {
+        println!("{}", t.to_text());
+    }
     Ok(())
 }
 
@@ -317,6 +474,11 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         "EMA reduction   vs naive {}   vs ayaka [9] {}",
         pct(snap.ema_reduction_vs_naive()),
         pct(snap.ema_reduction_vs_ayaka())
+    );
+    println!(
+        "layer planning  {} words ({} below per-GEMM TAS via SRAM residency)",
+        sci(snap.ema_plan_words as f64),
+        pct(snap.ema_reduction_vs_per_gemm())
     );
     coordinator.shutdown();
     Ok(())

@@ -93,6 +93,42 @@ impl ModelSpec {
         v
     }
 
+    /// The same linear projections as [`ModelSpec::linear_gemms`], but as
+    /// a *chained* stage list for layer-level planning
+    /// ([`crate::dataflow::LayerPlan`]): Q/K/V share the block input;
+    /// FFN up consumes the attention projection's output and FFN down
+    /// consumes FFN up's (with elementwise LayerNorm/GeLU in between,
+    /// which move no DRAM words when the tensor is SRAM-resident).  The
+    /// attention-context input of `attn_out` and the cross-layer edge are
+    /// conservatively treated as DRAM round-trips.  Stage shapes × counts
+    /// sum to exactly the `linear_gemms` inventory.
+    pub fn block_stages(&self, tokens: u64) -> Vec<crate::dataflow::StageSpec> {
+        use crate::dataflow::StageSpec;
+        assert!(tokens > 0);
+        let h = self.hidden;
+        let f = self.ffn;
+        let l = self.layers;
+        let stage = |name, shape, count, consumes, shares| StageSpec {
+            name,
+            shape,
+            count,
+            consumes_previous: consumes,
+            shares_input_with_previous: shares,
+        };
+        let mut v = vec![
+            stage("q", GemmShape::new(tokens, h, h), l, false, false),
+            stage("k", GemmShape::new(tokens, h, h), l, false, true),
+            stage("v", GemmShape::new(tokens, h, h), l, false, true),
+            stage("attn_out", GemmShape::new(tokens, h, h), l, false, false),
+            stage("ffn1", GemmShape::new(tokens, h, f), l, true, false),
+            stage("ffn2", GemmShape::new(tokens, f, h), l, true, false),
+        ];
+        if let Some(vocab) = self.vocab {
+            v.push(stage("lm_head", GemmShape::new(tokens, h, vocab), 1, false, false));
+        }
+        v
+    }
+
     /// Attention score (Q·Kᵀ) and context (P·V) matmuls — per head.
     pub fn attention_gemms(&self, tokens: u64) -> Vec<GemmWorkload> {
         let d = self.hidden / self.heads;
@@ -158,6 +194,21 @@ mod tests {
         assert_eq!(short.shape.k, 128);
         assert_eq!(long.shape.k, 512);
         assert_eq!(long.count, 12 * 12);
+    }
+
+    #[test]
+    fn block_stages_match_linear_gemm_inventory() {
+        // Same GEMMs, different bookkeeping: total MACs must agree.
+        for m in zoo::all_models() {
+            for tokens in [64, 384] {
+                let stage_macs: u64 = m
+                    .block_stages(tokens)
+                    .iter()
+                    .map(|s| s.count * s.shape.macs())
+                    .sum();
+                assert_eq!(stage_macs, m.total_linear_macs(tokens), "{}", m.name);
+            }
+        }
     }
 
     #[test]

@@ -9,9 +9,9 @@
 
 use crate::arch::PeArray;
 use crate::config::AcceleratorConfig;
-use crate::dataflow::Scheme;
+use crate::dataflow::{Plan, Scheme};
 use crate::gemm::{GemmShape, Tiling};
-use crate::sim::ema::simulate_ema;
+use crate::sim::ema::{simulate_ema_plan, SimEma};
 
 /// Cycle estimate for one GEMM under one scheme.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -58,21 +58,30 @@ pub fn estimate_cycles_tiled(
     tiling: &Tiling,
     cfg: &AcceleratorConfig,
 ) -> CycleEstimate {
-    let pe = cfg.pe_array();
-    let mut dram = cfg.dram();
-    let sim = simulate_ema(scheme, shape, tiling, &mut dram);
+    estimate_cycles_plan(&Plan::from_scheme(scheme, shape, tiling), cfg)
+}
 
+/// Cycle estimate for any [`Plan`] (fixed scheme or per-tile TAS).
+pub fn estimate_cycles_plan(plan: &Plan, cfg: &AcceleratorConfig) -> CycleEstimate {
+    let mut dram = cfg.dram();
+    let sim = simulate_ema_plan(plan, &mut dram);
+    cycles_from_replay(&sim, &plan.shape, cfg)
+}
+
+/// Derive the cycle estimate from an already-replayed EMA result — the
+/// closed-form half of the model, shared with the fused single-pass
+/// replay ([`crate::sim::replay::fused_cost`]) so both paths are one
+/// formula by construction.
+pub fn cycles_from_replay(sim: &SimEma, shape: &GemmShape, cfg: &AcceleratorConfig) -> CycleEstimate {
+    let pe = cfg.pe_array();
     // Compute: each of the `steps` tile passes is a tile MAC burst; model
     // the whole GEMM as total MACs at array throughput + per-pass fill.
     let fill = pe.fill_latency * sim.steps;
     let mac_cycles = shape.macs().div_ceil(pe.macs_per_cycle());
     let compute_cycles = mac_cycles + fill;
 
-    let dram_stream_cycles = dram
-        .stats()
-        .total_words()
-        .div_ceil(cfg.dram_bandwidth);
-    let turnaround_cycles = dram.stats().direction_switches * cfg.dram_turnaround;
+    let dram_stream_cycles = sim.stats.total_words().div_ceil(cfg.dram_bandwidth);
+    let turnaround_cycles = sim.stats.direction_switches * cfg.dram_turnaround;
 
     CycleEstimate {
         compute_cycles,

@@ -5,7 +5,7 @@
 
 use crate::arch::dram::DramDir;
 use crate::arch::dram_timing::{DramTiming, DramTimingConfig, DramTimingStats, MatrixLayout};
-use crate::dataflow::{for_each_step, Scheme};
+use crate::dataflow::{Plan, Scheme, Step};
 use crate::gemm::{tile_extent, GemmShape, Tiling};
 
 /// Replay `scheme` at transaction granularity (one transaction per tile
@@ -16,74 +16,106 @@ pub fn simulate_dram_timing(
     tiling: &Tiling,
     cfg: DramTimingConfig,
 ) -> DramTimingStats {
-    let layout = MatrixLayout::for_gemm(shape, &cfg);
-    let mut dram = DramTiming::new(cfg);
+    simulate_dram_timing_plan(&Plan::from_scheme(scheme, shape, tiling), cfg)
+}
 
-    for_each_step(scheme, shape, tiling, |s| {
+/// Transaction-level replay of any [`Plan`].
+pub fn simulate_dram_timing_plan(plan: &Plan, cfg: DramTimingConfig) -> DramTimingStats {
+    let layout = MatrixLayout::for_gemm(&plan.shape, &cfg);
+    let mut dram = DramTiming::new(cfg);
+    let (shape, tiling) = (plan.shape, plan.tiling);
+    plan.for_each_step(|s| {
         let mi = tile_extent(shape.m, tiling.tm, s.i);
         let nr = tile_extent(shape.n, tiling.tn, s.r);
         let kj = tile_extent(shape.k, tiling.tk, s.j);
-        let (i0, r0, j0) = (s.i * tiling.tm, s.r * tiling.tn, s.j * tiling.tk);
-
-        if s.scalar_traffic {
-            // naive: stream each operand tile once per scalar pass — model
-            // as kj repetitions of the input tile rows & mi of the weight.
-            for rep in 0..kj.min(4) {
-                // cap reps: timing shape, not words (words counted in ema)
-                let _ = rep;
-                for di in 0..mi {
-                    dram.access(DramDir::Read, layout.input_base + (i0 + di) * layout.input_ld + r0, nr);
-                }
-            }
-            for di in 0..mi.min(4) {
-                let _ = di;
-                for dr in 0..nr {
-                    dram.access(DramDir::Read, layout.weight_base + (r0 + dr) * layout.weight_ld + j0, kj);
-                }
-            }
-            for di in 0..mi {
-                dram.access(DramDir::Write, layout.output_base + (i0 + di) * layout.output_ld + j0, kj);
-            }
-            return;
-        }
-        if s.load_input {
-            for di in 0..mi {
-                dram.access(
-                    DramDir::Read,
-                    layout.input_base + (i0 + di) * layout.input_ld + r0,
-                    nr,
-                );
-            }
-        }
-        if s.load_weight {
-            for dr in 0..nr {
-                dram.access(
-                    DramDir::Read,
-                    layout.weight_base + (r0 + dr) * layout.weight_ld + j0,
-                    kj,
-                );
-            }
-        }
-        if s.psum_fetch {
-            for di in 0..mi {
-                dram.access(
-                    DramDir::Read,
-                    layout.output_base + (i0 + di) * layout.output_ld + j0,
-                    kj,
-                );
-            }
-        }
-        if s.psum_spill || s.store_out {
-            for di in 0..mi {
-                dram.access(
-                    DramDir::Write,
-                    layout.output_base + (i0 + di) * layout.output_ld + j0,
-                    kj,
-                );
-            }
-        }
+        charge_timing_step(
+            &mut dram,
+            &layout,
+            &tiling,
+            &s,
+            mi,
+            nr,
+            kj,
+            plan.input_resident,
+            plan.output_resident,
+        );
     });
     dram.stats()
+}
+
+/// Issue one schedule step's DRAM transactions.  Shared by the standalone
+/// timing replay above and the fused pass in [`crate::sim::replay`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn charge_timing_step(
+    dram: &mut DramTiming,
+    layout: &MatrixLayout,
+    tiling: &Tiling,
+    s: &Step,
+    mi: u64,
+    nr: u64,
+    kj: u64,
+    input_resident: bool,
+    output_resident: bool,
+) {
+    let (i0, r0, j0) = (s.i * tiling.tm, s.r * tiling.tn, s.j * tiling.tk);
+
+    if s.scalar_traffic {
+        // naive: stream each operand tile once per scalar pass — model
+        // as kj repetitions of the input tile rows & mi of the weight.
+        for rep in 0..kj.min(4) {
+            // cap reps: timing shape, not words (words counted in ema)
+            let _ = rep;
+            for di in 0..mi {
+                dram.access(DramDir::Read, layout.input_base + (i0 + di) * layout.input_ld + r0, nr);
+            }
+        }
+        for di in 0..mi.min(4) {
+            let _ = di;
+            for dr in 0..nr {
+                dram.access(DramDir::Read, layout.weight_base + (r0 + dr) * layout.weight_ld + j0, kj);
+            }
+        }
+        for di in 0..mi {
+            dram.access(DramDir::Write, layout.output_base + (i0 + di) * layout.output_ld + j0, kj);
+        }
+        return;
+    }
+    if s.load_input && !input_resident {
+        for di in 0..mi {
+            dram.access(
+                DramDir::Read,
+                layout.input_base + (i0 + di) * layout.input_ld + r0,
+                nr,
+            );
+        }
+    }
+    if s.load_weight {
+        for dr in 0..nr {
+            dram.access(
+                DramDir::Read,
+                layout.weight_base + (r0 + dr) * layout.weight_ld + j0,
+                kj,
+            );
+        }
+    }
+    if s.psum_fetch {
+        for di in 0..mi {
+            dram.access(
+                DramDir::Read,
+                layout.output_base + (i0 + di) * layout.output_ld + j0,
+                kj,
+            );
+        }
+    }
+    if s.psum_spill || (s.store_out && !output_resident) {
+        for di in 0..mi {
+            dram.access(
+                DramDir::Write,
+                layout.output_base + (i0 + di) * layout.output_ld + j0,
+                kj,
+            );
+        }
+    }
 }
 
 #[cfg(test)]

@@ -8,7 +8,7 @@
 //! read/write problem for the spilling schemes.
 
 use crate::arch::dram::{Dram, DramStats, Stream};
-use crate::dataflow::{for_each_step, Scheme};
+use crate::dataflow::{Plan, Scheme, Step};
 use crate::gemm::{tile_extent, GemmShape, Tiling};
 
 /// Simulated EMA result.
@@ -36,44 +36,68 @@ impl SimEma {
     }
 }
 
+/// Charge one schedule step's DRAM traffic.  Shared by [`simulate_ema`],
+/// the fused replay ([`crate::sim::replay`]) and anything else that walks
+/// a [`Plan`]: one accounting rule, every consumer.
+///
+/// `input_resident` / `output_resident` suppress the corresponding DRAM
+/// streams (the tensor lives in SRAM — see [`crate::dataflow::layer`]).
+pub(crate) fn charge_step(
+    dram: &mut Dram,
+    s: &Step,
+    mi: u64,
+    nr: u64,
+    kj: u64,
+    input_resident: bool,
+    output_resident: bool,
+) {
+    if s.scalar_traffic {
+        // Naive: per-MAC operand fetches and psum writes (3·MNK).
+        let macs = mi * nr * kj;
+        dram.transfer(Stream::Input, macs);
+        dram.transfer(Stream::Weight, macs);
+        if s.store_out {
+            // Final contraction step: its per-MAC writes complete the
+            // output; account the last tile-depth as Output stream.
+            dram.psum_write(macs.saturating_sub(mi * kj));
+            dram.transfer(Stream::Output, mi * kj);
+        } else {
+            dram.psum_write(macs);
+        }
+        return;
+    }
+    if s.load_input && !input_resident {
+        dram.transfer(Stream::Input, mi * nr);
+    }
+    if s.load_weight {
+        dram.transfer(Stream::Weight, nr * kj);
+    }
+    if s.psum_fetch {
+        dram.psum_read(mi * kj);
+    }
+    if s.psum_spill {
+        dram.psum_write(mi * kj);
+    }
+    if s.store_out && !output_resident {
+        dram.transfer(Stream::Output, mi * kj);
+    }
+}
+
 /// Replay `scheme` on `shape`/`tiling` over a fresh DRAM and count EMA.
 pub fn simulate_ema(scheme: Scheme, shape: &GemmShape, tiling: &Tiling, dram: &mut Dram) -> SimEma {
+    simulate_ema_plan(&Plan::from_scheme(scheme, shape, tiling), dram)
+}
+
+/// Replay any [`Plan`] (fixed scheme or per-tile TAS) and count EMA.
+pub fn simulate_ema_plan(plan: &Plan, dram: &mut Dram) -> SimEma {
+    let (shape, tiling) = (plan.shape, plan.tiling);
     let mut steps = 0u64;
-    for_each_step(scheme, shape, tiling, |s| {
+    plan.for_each_step(|s| {
         steps += 1;
         let mi = tile_extent(shape.m, tiling.tm, s.i);
         let nr = tile_extent(shape.n, tiling.tn, s.r);
         let kj = tile_extent(shape.k, tiling.tk, s.j);
-        if s.scalar_traffic {
-            // Naive: per-MAC operand fetches and psum writes (3·MNK).
-            let macs = mi * nr * kj;
-            dram.transfer(Stream::Input, macs);
-            dram.transfer(Stream::Weight, macs);
-            if s.store_out {
-                // Final contraction step: its per-MAC writes complete the
-                // output; account the last tile-depth as Output stream.
-                dram.psum_write(macs.saturating_sub(mi * kj));
-                dram.transfer(Stream::Output, mi * kj);
-            } else {
-                dram.psum_write(macs);
-            }
-            return;
-        }
-        if s.load_input {
-            dram.transfer(Stream::Input, mi * nr);
-        }
-        if s.load_weight {
-            dram.transfer(Stream::Weight, nr * kj);
-        }
-        if s.psum_fetch {
-            dram.psum_read(mi * kj);
-        }
-        if s.psum_spill {
-            dram.psum_write(mi * kj);
-        }
-        if s.store_out {
-            dram.transfer(Stream::Output, mi * kj);
-        }
+        charge_step(dram, &s, mi, nr, kj, plan.input_resident, plan.output_resident);
     });
     SimEma { stats: dram.stats(), steps }
 }
@@ -134,6 +158,30 @@ mod tests {
                     "{scheme:?} on {shape:?} kp={kp} mp={mp}"
                 );
             }
+        });
+    }
+
+    /// The plan IR's closed-form EMA and the DRAM-charged replay are two
+    /// independent accountings of the same step stream — they must agree
+    /// for per-tile plans just as analytic/sim do for fixed schemes.
+    #[test]
+    fn plan_replay_matches_plan_closed_form() {
+        use crate::dataflow::Plan;
+        property("plan replay == closed form", 120, |rng: &mut Rng| {
+            let shape = GemmShape::new(
+                rng.gen_in(1, 250),
+                rng.gen_in(1, 250),
+                rng.gen_in(1, 250),
+            );
+            let t = *rng.choose(&[8u64, 16]);
+            let tiling = Tiling::square(t)
+                .with_kp(rng.gen_in(1, 5) * t)
+                .with_mp(rng.gen_in(1, 5) * t);
+            let plan = Plan::tas_per_tile(&shape, &tiling);
+            let mut dram = Dram::new(16, 12);
+            let sim = simulate_ema_plan(&plan, &mut dram);
+            let e = plan.ema();
+            assert_eq!(sim.table2(), (e.input, e.weight, e.output), "{shape:?}");
         });
     }
 

@@ -5,7 +5,7 @@
 //! with [`reference_matmul`] proves schedule correctness for *every*
 //! scheme, mirroring what `python/tests` prove for the Pallas kernels.
 
-use crate::dataflow::{for_each_step, Scheme};
+use crate::dataflow::{Plan, Scheme};
 use crate::gemm::{tile_extent, GemmShape, Tiling};
 
 /// Row-major dense matrix.
@@ -69,10 +69,17 @@ pub fn execute_schedule(
     input: &Mat,
     weight: &Mat,
 ) -> Mat {
+    execute_plan(&Plan::from_scheme(scheme, shape, tiling), input, weight)
+}
+
+/// Execute any [`Plan`]'s step stream numerically — per-tile TAS covers
+/// must compute the same GEMM as every fixed schedule.
+pub fn execute_plan(plan: &Plan, input: &Mat, weight: &Mat) -> Mat {
+    let (shape, tiling) = (plan.shape, plan.tiling);
     assert_eq!((input.rows as u64, input.cols as u64), (shape.m, shape.n));
     assert_eq!((weight.rows as u64, weight.cols as u64), (shape.n, shape.k));
     let mut out = Mat::zeros(shape.m as usize, shape.k as usize);
-    for_each_step(scheme, shape, tiling, |s| {
+    plan.for_each_step(|s| {
         let mi = tile_extent(shape.m, tiling.tm, s.i) as usize;
         let nr = tile_extent(shape.n, tiling.tn, s.r) as usize;
         let kj = tile_extent(shape.k, tiling.tk, s.j) as usize;
@@ -156,6 +163,27 @@ mod tests {
                 let got = execute_schedule(scheme, &shape, &t, &a, &b);
                 assert_allclose(&got.data, &want.data, 1e-5, 1e-5);
             }
+        });
+    }
+
+    #[test]
+    fn per_tile_plans_compute_the_same_gemm() {
+        property("plan functional", 30, |rng: &mut Rng| {
+            let shape = GemmShape::new(
+                rng.gen_in(1, 80),
+                rng.gen_in(1, 80),
+                rng.gen_in(1, 80),
+            );
+            let t = 8;
+            let tiling = Tiling::square(t)
+                .with_kp(rng.gen_in(1, 4) * t)
+                .with_mp(rng.gen_in(1, 4) * t);
+            let a = rand_mat(rng, shape.m as usize, shape.n as usize);
+            let b = rand_mat(rng, shape.n as usize, shape.k as usize);
+            let want = reference_matmul(&a, &b);
+            let plan = Plan::tas_per_tile(&shape, &tiling);
+            let got = execute_plan(&plan, &a, &b);
+            assert_allclose(&got.data, &want.data, 1e-5, 1e-5);
         });
     }
 

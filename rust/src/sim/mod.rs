@@ -5,12 +5,17 @@
 //!
 //! * [`ema`] — exact per-stream DRAM word counts + read↔write turnaround
 //!   switches (the measurement instrument behind Tables II–IV),
+//! * [`replay`] — the fused single-pass replay: every cost backend
+//!   ([`replay::CostSink`]) observes one walk of a schedule [`Plan`]
+//!   instead of each consumer re-running the loop nest,
 //! * [`occupancy`] — peak psum-register and SRAM usage (verifies §III-B's
 //!   capacity argument),
 //! * [`functional`] — numeric execution of the schedule on real f32 data
 //!   (proves every schedule computes the same GEMM),
 //! * [`cycles`] — a first-order latency model (compute/DRAM overlap with
 //!   turnaround stalls).
+//!
+//! [`Plan`]: crate::dataflow::Plan
 
 pub mod cycles;
 pub mod dram_trace;
@@ -18,12 +23,14 @@ pub mod ema;
 pub mod functional;
 pub mod occupancy;
 pub mod pipeline;
+pub mod replay;
 pub mod roofline;
 
-pub use cycles::{estimate_cycles, CycleEstimate};
-pub use dram_trace::simulate_dram_timing;
-pub use ema::{simulate_ema, SimEma};
+pub use cycles::{estimate_cycles, estimate_cycles_plan, CycleEstimate};
+pub use dram_trace::{simulate_dram_timing, simulate_dram_timing_plan};
+pub use ema::{simulate_ema, simulate_ema_plan, SimEma};
+pub use replay::{fused_cost, CostSink, EmaSink, FusedCost, StepCtx, TimingSink};
 pub use roofline::{ridge_intensity, roofline, RooflinePoint};
-pub use functional::execute_schedule;
-pub use occupancy::{measure_occupancy, Occupancy};
+pub use functional::{execute_plan, execute_schedule};
+pub use occupancy::{measure_occupancy, measure_occupancy_plan, Occupancy};
 pub use pipeline::{simulate_pipeline, PipelineStats};

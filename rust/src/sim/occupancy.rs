@@ -3,7 +3,7 @@
 //! that plain IS/WS need up to K (resp. M) psums while the hybrids cap
 //! the live set at the k'/m' window.
 
-use crate::dataflow::{for_each_step, Scheme};
+use crate::dataflow::{Plan, Scheme};
 use crate::gemm::{tile_extent, GemmShape, Tiling};
 use std::collections::HashSet;
 
@@ -20,10 +20,17 @@ pub struct Occupancy {
 /// Replay and measure internal occupancy (no capacity enforcement; use
 /// the result to check a [`crate::config::AcceleratorConfig`]).
 pub fn measure_occupancy(scheme: Scheme, shape: &GemmShape, tiling: &Tiling) -> Occupancy {
+    measure_occupancy_plan(&Plan::from_scheme(scheme, shape, tiling))
+}
+
+/// Occupancy of any [`Plan`] — per-tile TAS strip covers must respect the
+/// same k'/m' psum-register caps as the fixed hybrids.
+pub fn measure_occupancy_plan(plan: &Plan) -> Occupancy {
+    let (shape, tiling) = (plan.shape, plan.tiling);
     let mut live: HashSet<(u64, u64)> = HashSet::new();
     let mut live_words = 0u64;
     let mut occ = Occupancy::default();
-    for_each_step(scheme, shape, tiling, |s| {
+    plan.for_each_step(|s| {
         let mi = tile_extent(shape.m, tiling.tm, s.i);
         let nr = tile_extent(shape.n, tiling.tn, s.r);
         let kj = tile_extent(shape.k, tiling.tk, s.j);

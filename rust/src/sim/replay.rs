@@ -1,0 +1,207 @@
+//! Fused single-pass cost replay over the schedule IR.
+//!
+//! The seed replayed every schedule four times — once each for EMA,
+//! cycles, energy and the DRAM timing trace.  With the [`Plan`] IR the
+//! step stream is walked **once** and every cost backend observes the same
+//! steps through the [`CostSink`] trait:
+//!
+//! * [`EmaSink`] — per-stream DRAM word counts + direction switches (the
+//!   Table II instrument), via the exact same charging rule the standalone
+//!   [`super::ema::simulate_ema`] uses;
+//! * [`TimingSink`] — transaction-level bank/row DRAM timing, sharing the
+//!   per-step logic of [`super::dram_trace`];
+//! * cycles and energy are closed forms over the EMA result, derived at
+//!   [`FusedCost`] assembly (`cycles_from_replay`, `plan_energy`) — no
+//!   second walk.
+//!
+//! The equivalence between this fused pass and the per-consumer replays is
+//! a property test (`rust/tests/plan_equivalence.rs`): bit-identical EMA
+//! and cycle totals for every scheme over a grid of shapes.
+
+use crate::arch::dram_timing::{DramTiming, DramTimingConfig, DramTimingStats, MatrixLayout};
+use crate::arch::Dram;
+use crate::config::AcceleratorConfig;
+use crate::dataflow::{Plan, Step};
+use crate::energy::{EnergyCost, EnergyModel};
+use crate::gemm::tile_extent;
+use crate::sim::cycles::{cycles_from_replay, CycleEstimate};
+use crate::sim::dram_trace::charge_timing_step;
+use crate::sim::ema::{charge_step, SimEma};
+
+/// One schedule step with its resolved tile extents, as seen by sinks.
+pub struct StepCtx<'a> {
+    pub plan: &'a Plan,
+    pub step: Step,
+    /// True extents of the (i, r, j) tile (ragged edges resolved).
+    pub mi: u64,
+    pub nr: u64,
+    pub kj: u64,
+}
+
+/// A pluggable cost backend fed by the fused replay.
+pub trait CostSink {
+    fn on_step(&mut self, ctx: &StepCtx);
+}
+
+/// Drive every sink over the plan's step stream in one pass.
+pub fn replay(plan: &Plan, sinks: &mut [&mut dyn CostSink]) {
+    let (shape, tiling) = (plan.shape, plan.tiling);
+    plan.for_each_step(|step| {
+        let ctx = StepCtx {
+            plan,
+            step,
+            mi: tile_extent(shape.m, tiling.tm, step.i),
+            nr: tile_extent(shape.n, tiling.tn, step.r),
+            kj: tile_extent(shape.k, tiling.tk, step.j),
+        };
+        for sink in sinks.iter_mut() {
+            sink.on_step(&ctx);
+        }
+    });
+}
+
+/// EMA backend: flat DRAM word/switch counting.
+pub struct EmaSink {
+    dram: Dram,
+    steps: u64,
+}
+
+impl EmaSink {
+    pub fn new(dram: Dram) -> EmaSink {
+        EmaSink { dram, steps: 0 }
+    }
+
+    pub fn finish(self) -> SimEma {
+        SimEma { stats: self.dram.stats(), steps: self.steps }
+    }
+}
+
+impl CostSink for EmaSink {
+    fn on_step(&mut self, ctx: &StepCtx) {
+        self.steps += 1;
+        charge_step(
+            &mut self.dram,
+            &ctx.step,
+            ctx.mi,
+            ctx.nr,
+            ctx.kj,
+            ctx.plan.input_resident,
+            ctx.plan.output_resident,
+        );
+    }
+}
+
+/// Transaction-level DRAM timing backend.
+pub struct TimingSink {
+    dram: DramTiming,
+    layout: MatrixLayout,
+}
+
+impl TimingSink {
+    pub fn new(plan: &Plan, cfg: DramTimingConfig) -> TimingSink {
+        let layout = MatrixLayout::for_gemm(&plan.shape, &cfg);
+        TimingSink { dram: DramTiming::new(cfg), layout }
+    }
+
+    pub fn finish(self) -> DramTimingStats {
+        self.dram.stats()
+    }
+}
+
+impl CostSink for TimingSink {
+    fn on_step(&mut self, ctx: &StepCtx) {
+        charge_timing_step(
+            &mut self.dram,
+            &self.layout,
+            &ctx.plan.tiling,
+            &ctx.step,
+            ctx.mi,
+            ctx.nr,
+            ctx.kj,
+            ctx.plan.input_resident,
+            ctx.plan.output_resident,
+        );
+    }
+}
+
+/// Every cost model's verdict on one plan, from one walk of the schedule.
+#[derive(Clone, Debug)]
+pub struct FusedCost {
+    pub ema: SimEma,
+    pub cycles: CycleEstimate,
+    pub energy: EnergyCost,
+    pub timing: DramTimingStats,
+}
+
+/// Replay `plan` once and report EMA, cycles, energy and DRAM timing.
+pub fn fused_cost(
+    plan: &Plan,
+    cfg: &AcceleratorConfig,
+    energy: &EnergyModel,
+    timing_cfg: DramTimingConfig,
+) -> FusedCost {
+    let mut ema_sink = EmaSink::new(cfg.dram());
+    let mut timing_sink = TimingSink::new(plan, timing_cfg);
+    {
+        let sinks: &mut [&mut dyn CostSink] = &mut [&mut ema_sink, &mut timing_sink];
+        replay(plan, sinks);
+    }
+    let ema = ema_sink.finish();
+    let cycles = cycles_from_replay(&ema, &plan.shape, cfg);
+    let (i, w, o) = ema.table2();
+    let energy = energy.plan_energy(plan, i + w + o);
+    FusedCost { ema, cycles, energy, timing: timing_sink.finish() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnergyConfig;
+    use crate::dataflow::Scheme;
+    use crate::gemm::{GemmShape, Tiling};
+    use crate::sim::cycles::estimate_cycles_tiled;
+    use crate::sim::{simulate_dram_timing, simulate_ema};
+
+    #[test]
+    fn fused_pass_equals_separate_replays() {
+        let shape = GemmShape::new(96, 128, 160);
+        let tiling = Tiling::square(16);
+        let cfg = AcceleratorConfig::default();
+        let em = EnergyModel::new(EnergyConfig::default());
+        for scheme in Scheme::FIXED.iter().chain([Scheme::Tas].iter()) {
+            let plan = Plan::from_scheme(*scheme, &shape, &tiling);
+            let fused = fused_cost(&plan, &cfg, &em, DramTimingConfig::default());
+
+            let mut dram = cfg.dram();
+            let sim = simulate_ema(*scheme, &shape, &tiling, &mut dram);
+            assert_eq!(fused.ema, sim, "{scheme:?} ema");
+
+            let cycles = estimate_cycles_tiled(*scheme, &shape, &tiling, &cfg);
+            assert_eq!(fused.cycles, cycles, "{scheme:?} cycles");
+
+            let timing =
+                simulate_dram_timing(*scheme, &shape, &tiling, DramTimingConfig::default());
+            assert_eq!(fused.timing, timing, "{scheme:?} timing");
+
+            let energy = em.gemm_energy(*scheme, &shape, &tiling);
+            assert!((fused.energy.total_pj() - energy.total_pj()).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fused_pass_covers_per_tile_plans() {
+        let shape = GemmShape::new(130, 70, 90);
+        let tiling = Tiling::square(16).with_kp(32).with_mp(32);
+        let plan = Plan::tas_per_tile(&shape, &tiling);
+        let fused = fused_cost(
+            &plan,
+            &AcceleratorConfig::default(),
+            &EnergyModel::default(),
+            DramTimingConfig::default(),
+        );
+        let e = plan.ema();
+        assert_eq!(fused.ema.table2(), (e.input, e.weight, e.output));
+        assert!(fused.cycles.total_cycles > 0);
+        assert!(fused.timing.words > 0);
+    }
+}

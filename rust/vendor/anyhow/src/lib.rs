@@ -1,0 +1,207 @@
+//! Minimal, API-compatible reimplementation of the parts of `anyhow` this
+//! workspace uses: [`Error`], [`Result`], the [`Context`] extension trait,
+//! and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! The offline build environment has no crates.io access, so the real
+//! `anyhow` cannot be fetched; this crate keeps the exact call-site syntax
+//! so the sources stay drop-in compatible with the upstream crate.
+//!
+//! Semantics mirrored from upstream:
+//! * `Error` is an opaque chain of context messages; `{}` displays the
+//!   outermost message, `{:#}` joins the whole chain with `": "`.
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` into
+//!   `Error` (and `Error` deliberately does NOT implement
+//!   `std::error::Error`, which is what makes that blanket `From` legal).
+//! * `.context(..)` / `.with_context(..)` wrap `Result<_, E: StdError>`
+//!   and `Option<_>`.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the same default-parameter shape as
+/// upstream (`anyhow::Result<T, E>` is occasionally spelled out).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error chain: `chain[0]` is the outermost (most recent) context.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message (what `anyhow!` produces).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Push a new outermost context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The source messages, outermost first (upstream exposes an iterator
+    /// of `dyn Error`; the message chain is all this workspace needs).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// Root (innermost) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, upstream's "context: cause" form.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Mirror upstream: message, then the causes.
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?` on any std error. Legal precisely because `Error` itself does not
+// implement `std::error::Error` (no overlap with `impl From<T> for T`).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E>
+    for std::result::Result<T, E>
+{
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("format", args..)` — build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!(..)` — early-return `Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `ensure!(cond, ..)` — `bail!` unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_outer_only_alternate_full_chain() {
+        let e: Error = Error::from(io_err()).context("reading manifest.json");
+        assert_eq!(format!("{e}"), "reading manifest.json");
+        assert_eq!(format!("{e:#}"), "reading manifest.json: missing thing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("missing thing"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("no value").unwrap_err();
+        assert_eq!(e.to_string(), "no value");
+        assert_eq!(Some(3u32).context("no value").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x > 1, "x too small: {x}");
+            if x > 10 {
+                bail!("x too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(0).unwrap_err().to_string().contains("too small: 0"));
+        assert!(f(11).unwrap_err().to_string().contains("too big: 11"));
+        let e = anyhow!("plain {} message", 7);
+        assert_eq!(e.to_string(), "plain 7 message");
+    }
+}
