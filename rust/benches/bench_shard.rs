@@ -1,0 +1,101 @@
+//! Bench E8 — multi-accelerator sharding across the model zoo.
+//!
+//! For bert-base and wav2vec2-large at sequence lengths {64, 512, 4096},
+//! shard every linear-projection GEMM across 1/2/4/8 devices (auto axis:
+//! IS-dominated covers split by output rows, WS by columns) and report,
+//! per forward pass: total DRAM EMA (conserved by construction — asserted
+//! here), inter-chip words, the busiest device's EMA share, and the
+//! layer-pipeline activation handoff.  Closed forms only, so the sweep is
+//! instant; the replayed equivalence is property-tested in
+//! `tests/shard_conservation.rs`.
+
+use tas::dataflow::shard::{shard_gemm, ShardAxis, ShardSpec};
+use tas::dataflow::{place_stages, LayerPlan, Plan};
+use tas::gemm::Tiling;
+use tas::models::zoo;
+use tas::util::bench::{Bench, Throughput};
+use tas::util::table::{pct, sci, Table};
+
+fn main() {
+    let tiling = Tiling::square(16);
+    let cfg = tas::config::AcceleratorConfig::default();
+    let models = [zoo::bert_base(), zoo::wav2vec2_large()];
+    let seqs = [64u64, 512, 4096];
+    let device_counts = [1u64, 2, 4, 8];
+
+    let mut t = Table::new(
+        "Sharded TAS (auto axis, 16-tiles): EMA + inter-chip words per forward pass",
+        &["model", "seq", "devices", "dram EMA", "inter-chip", "max device", "handoff"],
+    );
+    for model in &models {
+        for seq in seqs {
+            for devices in device_counts {
+                let mut dram = 0u64;
+                let mut link = 0u64;
+                let mut per_dev = vec![0u64; devices as usize];
+                for g in model.linear_gemms(seq) {
+                    let sp = shard_gemm(
+                        &g.shape,
+                        &tiling,
+                        ShardSpec::new(devices, ShardAxis::Auto),
+                        0.0,
+                    );
+                    let emas = sp.device_emas();
+                    let total: u64 = emas.iter().map(|e| e.total()).sum();
+                    let unsharded = Plan::tas_per_tile(&g.shape, &tiling).ema().total();
+                    assert_eq!(
+                        total, unsharded,
+                        "{} {}: EMA must be conserved",
+                        model.name, g.name
+                    );
+                    dram += g.count * total;
+                    link += g.count * sp.link_traffic().total();
+                    for (dev, e) in emas.iter().enumerate() {
+                        per_dev[dev] += g.count * e.total();
+                    }
+                }
+                let stages = model.block_stages(seq);
+                let placement = place_stages(&stages, devices);
+                let lp = LayerPlan::plan_placed(stages, seq, &tiling, cfg.sram_words, placement);
+                let max_dev = *per_dev.iter().max().unwrap();
+                t.row(vec![
+                    model.name.to_string(),
+                    seq.to_string(),
+                    devices.to_string(),
+                    sci(dram as f64),
+                    sci(link as f64),
+                    pct(max_dev as f64 / dram.max(1) as f64),
+                    sci(lp.handoff_words() as f64),
+                ]);
+            }
+        }
+    }
+    println!("{}", t.to_text());
+
+    // Planning throughput: the coordinator shards per bucket, so the whole
+    // shard plan (all block GEMMs) must stay in the microsecond range.
+    let mut b = Bench::new("shard");
+    let model = zoo::bert_base();
+    for devices in device_counts {
+        let gemms = model.linear_gemms(512);
+        b.run(
+            &format!("plan/bert-base/seq512/dev{devices}"),
+            Throughput::Elements(gemms.len() as u64),
+            || {
+                gemms
+                    .iter()
+                    .map(|g| {
+                        let sp = shard_gemm(
+                            &g.shape,
+                            &tiling,
+                            ShardSpec::new(devices, ShardAxis::Auto),
+                            0.0,
+                        );
+                        sp.link_traffic().total()
+                    })
+                    .sum::<u64>()
+            },
+        );
+    }
+    b.write_csv();
+}

@@ -1,0 +1,163 @@
+//! Inter-chip interconnect model for multi-accelerator sharding.
+//!
+//! When a [`crate::dataflow::Plan`] is partitioned across devices
+//! ([`crate::dataflow::shard`]), operand words whose home device differs
+//! from the consuming device cross a chip-to-chip link instead of staying
+//! on the local DRAM bus.  The link carries the same cost algebra as DRAM
+//! — bandwidth (words/cycle), a per-message latency, and an energy per
+//! word — but with serving-scale ratios: inter-chip SerDes moves a word
+//! slower and at higher energy than local DRAM ("Data Movement Is All You
+//! Need", Ivanov et al.; multi-core data arrangement, Amirshahi et al.).
+//!
+//! Like the rest of [`crate::arch`], these types carry *capacities and
+//! costs*; which words actually cross a link is decided by the shard
+//! partition and accounted in [`crate::dataflow::shard`] /
+//! [`crate::sim::shard`].
+
+/// Link parameters shared by every chip-to-chip connection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct InterconnectConfig {
+    /// Link bandwidth in words/cycle (per direction).
+    pub link_bandwidth: u64,
+    /// Per-message latency in cycles (hop setup / SerDes).
+    pub link_latency: u64,
+    /// Energy per word crossing one link (pJ).
+    pub link_energy_pj: f64,
+}
+
+impl Default for InterconnectConfig {
+    fn default() -> Self {
+        // Half the default DRAM bandwidth (16 w/cyc), 500-cycle hop
+        // latency, 2x the default DRAM word energy (200 pJ): inter-chip
+        // traffic is strictly worse than local DRAM, never free.
+        InterconnectConfig { link_bandwidth: 8, link_latency: 500, link_energy_pj: 400.0 }
+    }
+}
+
+impl InterconnectConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.link_bandwidth > 0, "link_bandwidth must be positive");
+        anyhow::ensure!(self.link_energy_pj >= 0.0, "link_energy_pj must be non-negative");
+        Ok(())
+    }
+}
+
+/// The interconnect: link config + transfer-primitive cost formulas.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Interconnect {
+    pub cfg: InterconnectConfig,
+}
+
+impl Interconnect {
+    pub fn new(cfg: InterconnectConfig) -> Interconnect {
+        Interconnect { cfg }
+    }
+
+    /// Streaming time of `words` over one link, without hop latency.
+    pub fn stream_cycles(&self, words: u64) -> u64 {
+        words.div_ceil(self.cfg.link_bandwidth)
+    }
+
+    /// Point-to-point transfer: one hop latency + streaming.
+    pub fn p2p_cycles(&self, words: u64) -> u64 {
+        if words == 0 {
+            0
+        } else {
+            self.cfg.link_latency + self.stream_cycles(words)
+        }
+    }
+
+    /// Ring all-gather of `words_per_device` from each of `devices`
+    /// participants: D-1 rounds, each a p2p of one shard.
+    pub fn all_gather_cycles(&self, words_per_device: u64, devices: u64) -> u64 {
+        if devices <= 1 {
+            0
+        } else {
+            (devices - 1) * self.p2p_cycles(words_per_device)
+        }
+    }
+
+    /// Tree reduce of `total_words` crossing links down to one device:
+    /// ceil(log2 D) latency rounds, all words streamed once.
+    pub fn reduce_cycles(&self, total_words: u64, devices: u64) -> u64 {
+        if devices <= 1 || total_words == 0 {
+            0
+        } else {
+            let rounds = 64 - u64::leading_zeros(devices - 1) as u64;
+            rounds * self.cfg.link_latency + self.stream_cycles(total_words)
+        }
+    }
+
+    /// Energy of `words` crossing links (each word counted once per hop).
+    pub fn transfer_energy_pj(&self, words: u64) -> f64 {
+        self.cfg.link_energy_pj * words as f64
+    }
+
+    /// Time cost of a link word relative to a local DRAM word at
+    /// `dram_bandwidth` words/cycle — the weight the device-aware per-tile
+    /// chooser applies to a remote-prone operand stream.
+    pub fn remote_word_weight(&self, dram_bandwidth: u64) -> f64 {
+        dram_bandwidth as f64 / self.cfg.link_bandwidth as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        InterconnectConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn zero_words_cost_nothing() {
+        let icx = Interconnect::default();
+        assert_eq!(icx.p2p_cycles(0), 0);
+        assert_eq!(icx.reduce_cycles(0, 4), 0);
+        assert_eq!(icx.all_gather_cycles(100, 1), 0);
+        assert_eq!(icx.transfer_energy_pj(0), 0.0);
+    }
+
+    #[test]
+    fn p2p_charges_latency_plus_stream() {
+        let icx = Interconnect::new(InterconnectConfig {
+            link_bandwidth: 8,
+            link_latency: 500,
+            link_energy_pj: 400.0,
+        });
+        assert_eq!(icx.p2p_cycles(80), 500 + 10);
+        assert_eq!(icx.stream_cycles(81), 11);
+    }
+
+    #[test]
+    fn reduce_rounds_are_logarithmic() {
+        let icx = Interconnect::default();
+        // 4 devices -> 2 latency rounds; 8 -> 3.
+        let r4 = icx.reduce_cycles(8, 4);
+        let r8 = icx.reduce_cycles(8, 8);
+        assert_eq!(r4, 2 * 500 + 1);
+        assert_eq!(r8, 3 * 500 + 1);
+    }
+
+    #[test]
+    fn all_gather_scales_with_participants() {
+        let icx = Interconnect::default();
+        let one = icx.p2p_cycles(64);
+        assert_eq!(icx.all_gather_cycles(64, 4), 3 * one);
+    }
+
+    #[test]
+    fn remote_word_weight_tracks_bandwidth_ratio() {
+        let icx = Interconnect::default();
+        // 16 w/cyc DRAM vs 8 w/cyc link -> a link word costs 2x.
+        assert_eq!(icx.remote_word_weight(16), 2.0);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = InterconnectConfig::default();
+        c.link_bandwidth = 0;
+        assert!(c.validate().is_err());
+    }
+}

@@ -7,9 +7,11 @@
 
 pub mod dram;
 pub mod dram_timing;
+pub mod interconnect;
 pub mod pe;
 pub mod sram;
 
 pub use dram::{Dram, DramDir, DramStats};
+pub use interconnect::{Interconnect, InterconnectConfig};
 pub use pe::PeArray;
 pub use sram::{RegFile, Sram};

@@ -5,7 +5,7 @@
 //! words, an internal SRAM of a few hundred KiB, and Ayaka-calibrated
 //! energy ratios (external transfer 10–100× internal compute, §IV).
 
-use crate::arch::{Dram, PeArray, RegFile, Sram};
+use crate::arch::{Dram, InterconnectConfig, PeArray, RegFile, Sram};
 use crate::gemm::Tiling;
 use crate::util::toml::TomlDoc;
 use anyhow::{Context, Result};
@@ -157,11 +157,26 @@ impl EnergyConfig {
     }
 }
 
+/// TOML loading for the inter-chip link model (see
+/// [`crate::arch::interconnect`]), kept beside the other config parsers
+/// so every `[section]` is parsed the same way.
+impl InterconnectConfig {
+    pub fn from_toml(doc: &TomlDoc) -> Self {
+        let d = InterconnectConfig::default();
+        InterconnectConfig {
+            link_bandwidth: doc.get_u64("interconnect.link_bandwidth", d.link_bandwidth),
+            link_latency: doc.get_u64("interconnect.link_latency", d.link_latency),
+            link_energy_pj: doc.get_f64("interconnect.link_energy_pj", d.link_energy_pj),
+        }
+    }
+}
+
 /// Top-level config bundle.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Config {
     pub accelerator: AcceleratorConfig,
     pub energy: EnergyConfig,
+    pub interconnect: InterconnectConfig,
 }
 
 impl Config {
@@ -172,8 +187,10 @@ impl Config {
         let cfg = Config {
             accelerator: AcceleratorConfig::from_toml(&doc),
             energy: EnergyConfig::from_toml(&doc),
+            interconnect: InterconnectConfig::from_toml(&doc),
         };
         cfg.accelerator.validate()?;
+        cfg.interconnect.validate()?;
         Ok(cfg)
     }
 }
@@ -215,6 +232,19 @@ mod tests {
     }
 
     #[test]
+    fn interconnect_toml_overrides() {
+        let doc = TomlDoc::parse(
+            "[interconnect]\nlink_bandwidth = 4\nlink_energy_pj = 800.0",
+        )
+        .unwrap();
+        let i = InterconnectConfig::from_toml(&doc);
+        assert_eq!(i.link_bandwidth, 4);
+        assert_eq!(i.link_energy_pj, 800.0);
+        // untouched fields keep defaults
+        assert_eq!(i.link_latency, InterconnectConfig::default().link_latency);
+    }
+
+    #[test]
     fn invalid_configs_rejected() {
         let mut c = AcceleratorConfig::default();
         c.psum_regs = 1;
@@ -252,5 +282,6 @@ mod file_tests {
         let cfg = Config::load(&path).unwrap();
         assert_eq!(cfg.accelerator, AcceleratorConfig::default());
         assert_eq!(cfg.energy, EnergyConfig::default());
+        assert_eq!(cfg.interconnect, InterconnectConfig::default());
     }
 }

@@ -96,6 +96,43 @@ pub fn layer_plan_for_bucket(
     )
 }
 
+/// Floor on per-device work when widening a bucket across accelerators:
+/// below this many tokens a device's GEMM slices are too small for the
+/// strip planner to amortise anything and link latency dominates.
+pub const MIN_TOKENS_PER_DEVICE: u64 = 64;
+
+/// Device-aware bucket decision: how many of the `max_devices` chips a
+/// bucket of `tokens` tokens should span.  Powers of two, each device
+/// keeping at least [`MIN_TOKENS_PER_DEVICE`] tokens of work.
+pub fn devices_for_bucket(tokens: u64, max_devices: u64) -> u64 {
+    let max = max_devices.max(1);
+    let mut d = 1u64;
+    while d * 2 <= max && tokens / (d * 2) >= MIN_TOKENS_PER_DEVICE {
+        d *= 2;
+    }
+    d
+}
+
+/// Layer-level plan for a bucket placed across `devices` accelerators:
+/// stages are balanced by MAC count ([`crate::dataflow::place_stages`])
+/// and residency only chains stages sharing a device — the cross-device
+/// activations surface as [`LayerPlan::handoff_words`] link traffic.
+#[allow(clippy::too_many_arguments)]
+pub fn sharded_layer_plan_for_bucket(
+    tokens: u64,
+    hidden: u64,
+    ffn: u64,
+    vocab: u64,
+    n_layers: u64,
+    tiling: &Tiling,
+    sram_words: u64,
+    devices: u64,
+) -> LayerPlan {
+    let stages = bucket_stages(tokens, hidden, ffn, vocab, n_layers);
+    let placement = crate::dataflow::place_stages(&stages, devices);
+    LayerPlan::plan_placed(stages, tokens, tiling, sram_words, placement)
+}
+
 fn scheme_to_manifest_name(s: Scheme) -> &'static str {
     match s {
         Scheme::IsOs => "is_os",
@@ -189,6 +226,34 @@ mod tests {
                 assert_eq!(from_dims, m.block_stages(tokens), "{}", m.name);
             }
         }
+    }
+
+    #[test]
+    fn devices_scale_with_bucket_tokens() {
+        assert_eq!(devices_for_bucket(32, 8), 1);
+        assert_eq!(devices_for_bucket(128, 8), 2);
+        assert_eq!(devices_for_bucket(512, 8), 8);
+        assert_eq!(devices_for_bucket(512, 4), 4);
+        assert_eq!(devices_for_bucket(4096, 1), 1);
+        // never zero devices, even on degenerate input
+        assert_eq!(devices_for_bucket(1, 0), 1);
+    }
+
+    #[test]
+    fn sharded_bucket_plan_conserves_and_reports_handoffs() {
+        let tiling = Tiling::square(16);
+        let single = layer_plan_for_bucket(512, 128, 512, 0, 4, &tiling, 256 * 1024);
+        let sharded =
+            sharded_layer_plan_for_bucket(512, 128, 512, 0, 4, &tiling, 256 * 1024, 2);
+        assert_eq!(sharded.devices(), 2);
+        assert_eq!(
+            sharded.per_device_ema().iter().sum::<u64>(),
+            sharded.total_ema()
+        );
+        // a 1-device "shard" is the plain bucket plan
+        let one = sharded_layer_plan_for_bucket(512, 128, 512, 0, 4, &tiling, 256 * 1024, 1);
+        assert_eq!(one.total_ema(), single.total_ema());
+        assert_eq!(one.handoff_words(), 0);
     }
 
     #[test]

@@ -32,6 +32,8 @@ struct Inner {
     ema_tas_words: u64,
     ema_plan_words: u64,
     ema_plan_baseline_words: u64,
+    link_words: u64,
+    device_ema_words: Vec<u64>,
     flops: u64,
 }
 
@@ -54,6 +56,11 @@ pub struct MetricsSnapshot {
     pub ema_plan_words: u64,
     /// Per-GEMM TAS total EMA for the same batches (the plan's baseline).
     pub ema_plan_baseline_words: u64,
+    /// Inter-chip activation handoffs of the served (placed) layer plans.
+    pub link_words: u64,
+    /// Plan EMA per device (len = widest placement seen; sums to
+    /// `ema_plan_words`).
+    pub per_device_ema_words: Vec<u64>,
     pub flops: u64,
 }
 
@@ -121,6 +128,8 @@ impl Metrics {
         let tas = workload_read_ema(Scheme::Tas, gemms, tiling);
         let plan_words = layer_plan.total_ema();
         let plan_baseline = layer_plan.per_gemm_tas_total();
+        let link_words = layer_plan.handoff_words();
+        let per_device = layer_plan.per_device_ema();
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
         g.requests += n_requests as u64;
@@ -132,6 +141,13 @@ impl Metrics {
         g.ema_tas_words += tas;
         g.ema_plan_words += plan_words;
         g.ema_plan_baseline_words += plan_baseline;
+        g.link_words += link_words;
+        if g.device_ema_words.len() < per_device.len() {
+            g.device_ema_words.resize(per_device.len(), 0);
+        }
+        for (acc, w) in g.device_ema_words.iter_mut().zip(&per_device) {
+            *acc += w;
+        }
         g.flops += flops;
     }
 
@@ -156,6 +172,8 @@ impl Metrics {
             ema_tas_words: g.ema_tas_words,
             ema_plan_words: g.ema_plan_words,
             ema_plan_baseline_words: g.ema_plan_baseline_words,
+            link_words: g.link_words,
+            per_device_ema_words: g.device_ema_words.clone(),
             flops: g.flops,
         }
     }
@@ -183,10 +201,26 @@ mod tests {
     #[test]
     fn batch_accounting_accumulates() {
         let m = Metrics::new();
-        m.record_batch(2, 100, 28, Duration::from_millis(3), &gemms(),
-                       &Tiling::square(16), &plan(), 1000);
-        m.record_batch(1, 60, 4, Duration::from_millis(5), &gemms(),
-                       &Tiling::square(16), &plan(), 500);
+        m.record_batch(
+            2,
+            100,
+            28,
+            Duration::from_millis(3),
+            &gemms(),
+            &Tiling::square(16),
+            &plan(),
+            1000,
+        );
+        m.record_batch(
+            1,
+            60,
+            4,
+            Duration::from_millis(5),
+            &gemms(),
+            &Tiling::square(16),
+            &plan(),
+            500,
+        );
         m.record_latency(Duration::from_millis(4));
         let s = m.snapshot();
         assert_eq!(s.requests, 3);
@@ -208,5 +242,40 @@ mod tests {
         assert_eq!(s.ema_reduction_vs_naive(), 0.0);
         assert_eq!(s.ema_reduction_vs_per_gemm(), 0.0);
         assert_eq!(s.padding_fraction(), 0.0);
+        assert_eq!(s.link_words, 0);
+        assert!(s.per_device_ema_words.is_empty());
+    }
+
+    #[test]
+    fn sharded_batches_report_per_device_and_link_words() {
+        use crate::coordinator::decisions::sharded_layer_plan_for_bucket;
+        let m = Metrics::new();
+        let plan = sharded_layer_plan_for_bucket(
+            256,
+            128,
+            512,
+            0,
+            2,
+            &Tiling::square(16),
+            256 * 1024,
+            2,
+        );
+        m.record_batch(
+            1,
+            200,
+            56,
+            Duration::from_millis(2),
+            &gemms(),
+            &Tiling::square(16),
+            &plan,
+            100,
+        );
+        let s = m.snapshot();
+        assert_eq!(s.per_device_ema_words.len(), plan.devices() as usize);
+        assert_eq!(
+            s.per_device_ema_words.iter().sum::<u64>(),
+            s.ema_plan_words
+        );
+        assert_eq!(s.link_words, plan.handoff_words());
     }
 }

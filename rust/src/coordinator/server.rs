@@ -45,6 +45,10 @@ pub struct CoordinatorOptions {
     /// Accelerator SRAM capacity in words — the residency budget the
     /// layer-level planner may park intermediate activations in.
     pub sram_words: u64,
+    /// Accelerators available to a bucket.  The device-aware bucket
+    /// decision ([`decisions::devices_for_bucket`]) widens large buckets
+    /// up to this many chips; 1 keeps the single-accelerator behaviour.
+    pub max_devices: u64,
 }
 
 impl Default for CoordinatorOptions {
@@ -55,6 +59,7 @@ impl Default for CoordinatorOptions {
             preload_all: true,
             tiling: Tiling::square(16),
             sram_words: crate::config::AcceleratorConfig::default().sram_words,
+            max_devices: 1,
         }
     }
 }
@@ -308,7 +313,10 @@ fn device_loop(
         let tokens = (b * s) as u64;
         let gemms = bucket_gemms(tokens, hidden, ffn, vocab as u64, n_layers);
         let layer_plan = plan_cache.entry(tokens).or_insert_with(|| {
-            decisions::layer_plan_for_bucket(
+            // Device-aware bucket decision: wide buckets span more chips
+            // (deterministic per token count, so the cache key holds).
+            let devices = decisions::devices_for_bucket(tokens, opts.max_devices);
+            decisions::sharded_layer_plan_for_bucket(
                 tokens,
                 hidden,
                 ffn,
@@ -316,6 +324,7 @@ fn device_loop(
                 n_layers,
                 &opts.tiling,
                 opts.sram_words,
+                devices,
             )
         });
         let flops = engine

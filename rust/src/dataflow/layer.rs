@@ -51,6 +51,8 @@ pub struct StageSpec {
 pub struct StagePlan {
     pub spec: StageSpec,
     pub plan: Plan,
+    /// Device this stage runs on (0 for single-accelerator plans).
+    pub device: usize,
     /// Input served from SRAM (chained or shared) — no DRAM reads.
     pub input_resident: bool,
     /// Output handed to the next stage in SRAM — no DRAM writes.
@@ -76,6 +78,24 @@ impl LayerPlan {
     /// a working margin for double-buffered operand tiles is reserved
     /// before any activation may claim residency.
     pub fn plan(stages: Vec<StageSpec>, tokens: u64, tiling: &Tiling, sram_words: u64) -> LayerPlan {
+        let placement = vec![0; stages.len()];
+        LayerPlan::plan_placed(stages, tokens, tiling, sram_words, placement)
+    }
+
+    /// Plan a chain of stages placed on devices (`placement[i]` = device
+    /// of stage `i`, e.g. from [`super::shard::place_stages`]).  SRAM is
+    /// per-device, so residency only chains stages that share a device;
+    /// a chained or shared tensor crossing devices instead becomes an
+    /// activation handoff over the interconnect, costed as link traffic
+    /// by [`LayerPlan::handoff_words`] — never silently free.
+    pub fn plan_placed(
+        stages: Vec<StageSpec>,
+        tokens: u64,
+        tiling: &Tiling,
+        sram_words: u64,
+        placement: Vec<usize>,
+    ) -> LayerPlan {
+        assert_eq!(placement.len(), stages.len(), "one device per stage");
         // Reserve space for two double-buffered operand tile pairs.
         let margin = 4 * (tiling.tm * tiling.tn + tiling.tn * tiling.tk);
         let budget = sram_words.saturating_sub(margin);
@@ -83,14 +103,15 @@ impl LayerPlan {
 
         let mut planned: Vec<StagePlan> = Vec::with_capacity(stages.len());
         for (idx, spec) in stages.iter().enumerate() {
+            let same_device = idx > 0 && placement[idx] == placement[idx - 1];
             let input_resident = if spec.shares_input_with_previous && idx > 0 {
                 // The previous stage already streamed this tensor; keep it
                 // if it fits.  (The first stage of the sharing group pays
-                // the DRAM read.)
-                fits(spec.shape.input_words())
+                // the DRAM read.)  Another device's SRAM doesn't help.
+                same_device && fits(spec.shape.input_words())
             } else if spec.consumes_previous && idx > 0 {
                 // Only resident if the producer could keep its output.
-                planned[idx - 1].output_resident
+                same_device && planned[idx - 1].output_resident
             } else {
                 false
             };
@@ -104,6 +125,7 @@ impl LayerPlan {
                 .map(|next| {
                     next.consumes_previous
                         && next.count == spec.count
+                        && placement[idx + 1] == placement[idx]
                         && fits(held_with_output)
                 })
                 .unwrap_or(false);
@@ -119,6 +141,7 @@ impl LayerPlan {
             planned.push(StagePlan {
                 spec: spec.clone(),
                 plan,
+                device: placement[idx],
                 input_resident,
                 output_resident,
                 ema_words,
@@ -158,6 +181,40 @@ impl LayerPlan {
             .iter()
             .map(|s| s.input_resident as u64 + s.output_resident as u64)
             .sum()
+    }
+
+    /// Devices the placement spans (1 for single-accelerator plans).
+    pub fn devices(&self) -> u64 {
+        self.stages.iter().map(|s| s.device).max().unwrap_or(0) as u64 + 1
+    }
+
+    /// Activation words crossing inter-chip links per forward pass: each
+    /// chained (or input-sharing) edge whose endpoints sit on different
+    /// devices hands the consumer's input tensor across a link.
+    pub fn handoff_words(&self) -> u64 {
+        self.stages
+            .windows(2)
+            .map(|w| {
+                let (prev, s) = (&w[0], &w[1]);
+                let crosses = s.device != prev.device
+                    && (s.spec.consumes_previous || s.spec.shares_input_with_previous);
+                if crosses {
+                    s.spec.count * s.spec.shape.input_words()
+                } else {
+                    0
+                }
+            })
+            .sum()
+    }
+
+    /// Per-device DRAM words of one forward pass (length is
+    /// [`LayerPlan::devices`]); sums to [`LayerPlan::total_ema`].
+    pub fn per_device_ema(&self) -> Vec<u64> {
+        let mut out = vec![0u64; self.devices() as usize];
+        for s in &self.stages {
+            out[s.device] += s.spec.count * s.ema_words;
+        }
+        out
     }
 }
 
@@ -243,6 +300,53 @@ mod tests {
         let p64 = plan(64, 256 * 1024);
         let ffn1_64 = p64.stages.iter().find(|s| s.spec.name == "ffn1").unwrap();
         assert!(ffn1_64.input_resident && ffn1_64.output_resident);
+    }
+
+    #[test]
+    fn cross_device_edges_break_residency_and_become_handoffs() {
+        // Split the block at the ffn boundary: qkv+attn on device 0, FFN
+        // on device 1.  attn_out -> ffn1 now crosses a link: ffn1 loses
+        // input residency and the activation becomes handoff words.
+        let stages = bert_block(64);
+        let placement = vec![0, 0, 0, 0, 1, 1];
+        let single = LayerPlan::plan(bert_block(64), 64, &Tiling::square(16), 256 * 1024);
+        let split =
+            LayerPlan::plan_placed(stages, 64, &Tiling::square(16), 256 * 1024, placement);
+        assert_eq!(split.devices(), 2);
+        let ffn1 = split.stages.iter().find(|s| s.spec.name == "ffn1").unwrap();
+        assert!(!ffn1.input_resident, "residency must not cross devices");
+        assert_eq!(split.handoff_words(), ffn1.spec.shape.input_words());
+        assert_eq!(single.handoff_words(), 0);
+        // within-device chaining still works (ffn1 -> ffn2 on device 1)
+        let ffn2 = split.stages.iter().find(|s| s.spec.name == "ffn2").unwrap();
+        assert!(ffn2.input_resident);
+        // the split never gains DRAM words it did not pay for as handoff
+        assert!(split.total_ema() >= single.total_ema());
+    }
+
+    #[test]
+    fn per_device_ema_sums_to_total() {
+        let stages = bert_block(128);
+        let placement = vec![0, 0, 1, 1, 2, 2];
+        let p = LayerPlan::plan_placed(stages, 128, &Tiling::square(16), 256 * 1024, placement);
+        assert_eq!(p.devices(), 3);
+        assert_eq!(p.per_device_ema().iter().sum::<u64>(), p.total_ema());
+        assert_eq!(p.per_device_ema().len(), 3);
+    }
+
+    #[test]
+    fn single_device_placement_is_the_plain_plan() {
+        let a = LayerPlan::plan(bert_block(64), 64, &Tiling::square(16), 256 * 1024);
+        let b = LayerPlan::plan_placed(
+            bert_block(64),
+            64,
+            &Tiling::square(16),
+            256 * 1024,
+            vec![0; 6],
+        );
+        assert_eq!(a.total_ema(), b.total_ema());
+        assert_eq!(a.resident_edges(), b.resident_edges());
+        assert_eq!(b.handoff_words(), 0);
     }
 
     #[test]

@@ -11,6 +11,9 @@
 //!   backend replays (see [`crate::sim::replay`]).
 //! * [`layer`] — layer-level planning: [`LayerPlan`] chains the GEMMs of
 //!   one transformer block and models SRAM residency of intermediates.
+//! * [`shard`] — multi-accelerator sharding: partition a [`Plan`] across
+//!   devices by strip ranges, inter-chip traffic under the same cost
+//!   algebra ([`crate::arch::interconnect`]).
 //!
 //! The generators and the closed forms are developed independently and
 //! cross-checked by property tests: for every shape (ragged included) the
@@ -20,11 +23,15 @@ pub mod analytic;
 pub mod layer;
 pub mod plan;
 pub mod schedule;
+pub mod shard;
 
 pub use analytic::{ema, EmaBreakdown};
 pub use layer::{LayerPlan, StagePlan, StageSpec};
 pub use plan::{Plan, PlanBody, Strip, StripKind};
 pub use schedule::{for_each_step, step_count, Step};
+pub use shard::{
+    place_stages, shard_gemm, LinkTraffic, ShardAxis, ShardSpec, ShardedPlan,
+};
 
 /// A stationary scheme. `Tas` resolves to `IsOs` or `WsOs` per shape via
 /// the paper's rule (§III-A): input-stationary iff `M < K`.

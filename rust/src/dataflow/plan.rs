@@ -65,10 +65,34 @@ impl Strip {
     pub fn tiles(&self) -> u64 {
         (self.i1 - self.i0) * (self.j1 - self.j0)
     }
+
+    /// (input, weight, output) words this strip moves over the full
+    /// contraction (ragged edges resolved) — the single source of truth
+    /// for per-strip EMA, shared by [`Plan::ema`] and the shard
+    /// partitioner ([`super::shard`]).
+    pub(crate) fn words(&self, shape: &GemmShape, tiling: &Tiling) -> (u64, u64, u64) {
+        let n = shape.n;
+        match self.kind {
+            StripKind::InputStationary => {
+                let mi = tile_extent(shape.m, tiling.tm, self.i0);
+                let kw: u64 = (self.j0..self.j1)
+                    .map(|j| tile_extent(shape.k, tiling.tk, j))
+                    .sum();
+                (mi * n, n * kw, mi * kw)
+            }
+            StripKind::WeightStationary => {
+                let kj = tile_extent(shape.k, tiling.tk, self.j0);
+                let mw: u64 = (self.i0..self.i1)
+                    .map(|i| tile_extent(shape.m, tiling.tm, i))
+                    .sum();
+                (mw * n, n * kj, mw * kj)
+            }
+        }
+    }
 }
 
 /// How a plan's step stream is produced.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum PlanBody {
     /// A fixed-scheme loop nest over the whole grid (already resolved —
     /// never `Scheme::Tas`).
@@ -78,7 +102,7 @@ pub enum PlanBody {
 }
 
 /// The schedule IR: shape + tiling + resolved step stream + residency.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Plan {
     pub shape: GemmShape,
     pub tiling: Tiling,
@@ -117,6 +141,66 @@ impl Plan {
         input_resident: bool,
         output_resident: bool,
     ) -> Plan {
+        Plan::plan_cover(
+            shape,
+            tiling,
+            input_resident,
+            output_resident,
+            Plan::WEIGHT_SCALE,
+            Plan::WEIGHT_SCALE,
+            true,
+        )
+    }
+
+    /// Chooser stream weights are integers in 1/256ths of a local DRAM
+    /// word, so uniform (all-local) planning is an exact rescaling of the
+    /// unweighted objective — same argmin, same ties, same plan.
+    const WEIGHT_SCALE: u64 = 256;
+
+    /// Tile-granular TAS restricted to strip covers (no fixed-scheme
+    /// fallback): every output tile belongs to an explicit stationary
+    /// strip, so the plan can be partitioned across devices by strip
+    /// ranges ([`super::shard`]).
+    pub fn tas_strips(shape: &GemmShape, tiling: &Tiling) -> Plan {
+        Plan::plan_cover(
+            shape,
+            tiling,
+            false,
+            false,
+            Plan::WEIGHT_SCALE,
+            Plan::WEIGHT_SCALE,
+            false,
+        )
+    }
+
+    /// Device-aware per-tile TAS: each operand stream is weighted by its
+    /// expected cost per word (`1.0` = a local DRAM word), so a stationary
+    /// choice that keeps re-reading a remote operand pays the link premium
+    /// inside the chooser's objective.  Uniform weights reproduce the
+    /// [`Plan::tas_strips`] cover exactly.
+    pub fn tas_link_weighted(
+        shape: &GemmShape,
+        tiling: &Tiling,
+        input_weight: f64,
+        weight_weight: f64,
+    ) -> Plan {
+        let wi = ((Plan::WEIGHT_SCALE as f64 * input_weight).round() as u64).max(1);
+        let ww = ((Plan::WEIGHT_SCALE as f64 * weight_weight).round() as u64).max(1);
+        Plan::plan_cover(shape, tiling, false, false, wi, ww, false)
+    }
+
+    /// The strip-cover search behind every per-tile constructor.  `wi` /
+    /// `ww` weight the input / weight streams (in [`Plan::WEIGHT_SCALE`]
+    /// units); `allow_fixed` enables the fixed-scheme fallback.
+    fn plan_cover(
+        shape: &GemmShape,
+        tiling: &Tiling,
+        input_resident: bool,
+        output_resident: bool,
+        wi: u64,
+        ww: u64,
+        allow_fixed: bool,
+    ) -> Plan {
         let (gm, _gn, gk) = tiling.grid(shape);
         let wk = tiling.window_tiles_k(shape);
         let wm = tiling.window_tiles_m(shape);
@@ -139,7 +223,7 @@ impl Plan {
         let w_total = w_pre[gk as usize]; // N·K
         let nwin_m = ceil_div(gm, wm);
         let nwin_k = ceil_div(gk, wk);
-        let in_cost = |w: u64| if input_resident { 0 } else { w };
+        let in_cost = |w: u64| if input_resident { 0 } else { wi * w };
 
         // Guillotine families: one contiguous block of columns (or rows)
         // goes weight-stationary, the complement input-stationary.  Both
@@ -160,17 +244,17 @@ impl Plan {
             let w_hi = w_total - w_lo;
             // WS cols [0, c), IS cols [c, gk):
             consider(
-                nwin_m * w_lo                                // WS stationary weights
+                nwin_m * w_lo * ww                           // WS stationary weights
                     + in_cost(c * in_total)                  // WS streamed inputs
                     + in_cost(ceil_div(gk - c, wk) * in_total) // IS stationary inputs
-                    + gm * w_hi,                             // IS streamed weights
+                    + gm * w_hi * ww,                        // IS streamed weights
                 SplitChoice { col_split: true, ws_block_first: true, at: c },
             );
             // IS cols [0, c), WS cols [c, gk):
             consider(
                 in_cost(ceil_div(c, wk) * in_total)
-                    + gm * w_lo
-                    + nwin_m * w_hi
+                    + gm * w_lo * ww
+                    + nwin_m * w_hi * ww
                     + in_cost((gk - c) * in_total),
                 SplitChoice { col_split: true, ws_block_first: false, at: c },
             );
@@ -181,17 +265,17 @@ impl Plan {
             // IS rows [0, r), WS rows [r, gm):
             consider(
                 in_cost(nwin_k * in_lo)
-                    + r * w_total
-                    + ceil_div(gm - r, wm) * w_total
+                    + r * w_total * ww
+                    + ceil_div(gm - r, wm) * w_total * ww
                     + in_cost(gk * in_hi),
                 SplitChoice { col_split: false, ws_block_first: false, at: r },
             );
             // WS rows [0, r), IS rows [r, gm):
             consider(
-                ceil_div(r, wm) * w_total
+                ceil_div(r, wm) * w_total * ww
                     + in_cost(gk * in_lo)
                     + in_cost(nwin_k * in_hi)
-                    + (gm - r) * w_total,
+                    + (gm - r) * w_total * ww,
                 SplitChoice { col_split: false, ws_block_first: true, at: r },
             );
         }
@@ -199,11 +283,12 @@ impl Plan {
         // Fixed-scheme fallback: without residency, a spilling scheme can
         // still beat the OS strip covers on extreme aspect ratios (e.g. a
         // single contraction tile makes plain IS's spill column free).
-        if !input_resident && !output_resident {
-            let strip_total = best_cost + shape.output_words();
+        if allow_fixed && !input_resident && !output_resident {
+            let strip_total = best_cost + Plan::WEIGHT_SCALE * shape.output_words();
             let mut best_fixed: Option<(u64, Scheme)> = None;
             for s in Scheme::FIXED {
-                let total = analytic::ema(s, shape, tiling).total();
+                let e = analytic::ema(s, shape, tiling);
+                let total = wi * e.input + ww * e.weight + Plan::WEIGHT_SCALE * e.output;
                 if best_fixed.map(|(t, _)| total < t).unwrap_or(true) {
                     best_fixed = Some((total, s));
                 }
@@ -243,33 +328,40 @@ impl Plan {
                 schedule::for_each_step(*s, &self.shape, &self.tiling, visit)
             }
             PlanBody::Strips(strips) => {
-                let (_, gn, _) = self.tiling.grid(&self.shape);
                 for strip in strips {
-                    match strip.kind {
-                        StripKind::InputStationary => {
-                            let i = strip.i0;
-                            for r in 0..gn {
-                                for j in strip.j0..strip.j1 {
-                                    let mut s = Step::new(i, r, j);
-                                    s.load_input = j == strip.j0;
-                                    s.load_weight = true;
-                                    s.store_out = r + 1 == gn;
-                                    visit(s);
-                                }
-                            }
-                        }
-                        StripKind::WeightStationary => {
-                            let j = strip.j0;
-                            for r in 0..gn {
-                                for i in strip.i0..strip.i1 {
-                                    let mut s = Step::new(i, r, j);
-                                    s.load_input = true;
-                                    s.load_weight = i == strip.i0;
-                                    s.store_out = r + 1 == gn;
-                                    visit(s);
-                                }
-                            }
-                        }
+                    self.for_each_strip_step(strip, &mut visit);
+                }
+            }
+        }
+    }
+
+    /// Steps of one strip in schedule order — the per-strip half of
+    /// [`Plan::for_each_step`], also used by the shard partitioner
+    /// ([`super::shard`]) to route whole strips to devices.
+    pub(crate) fn for_each_strip_step<F: FnMut(Step)>(&self, strip: &Strip, visit: &mut F) {
+        let (_, gn, _) = self.tiling.grid(&self.shape);
+        match strip.kind {
+            StripKind::InputStationary => {
+                let i = strip.i0;
+                for r in 0..gn {
+                    for j in strip.j0..strip.j1 {
+                        let mut s = Step::new(i, r, j);
+                        s.load_input = j == strip.j0;
+                        s.load_weight = true;
+                        s.store_out = r + 1 == gn;
+                        visit(s);
+                    }
+                }
+            }
+            StripKind::WeightStationary => {
+                let j = strip.j0;
+                for r in 0..gn {
+                    for i in strip.i0..strip.i1 {
+                        let mut s = Step::new(i, r, j);
+                        s.load_input = true;
+                        s.load_weight = i == strip.i0;
+                        s.store_out = r + 1 == gn;
+                        visit(s);
                     }
                 }
             }
@@ -297,35 +389,19 @@ impl Plan {
             PlanBody::Strips(strips) => {
                 let mut input = 0u64;
                 let mut weight = 0u64;
-                let n = self.shape.n;
+                let mut output = 0u64;
                 for strip in strips {
-                    match strip.kind {
-                        StripKind::InputStationary => {
-                            let mi = tile_extent(self.shape.m, self.tiling.tm, strip.i0);
-                            let kw: u64 = (strip.j0..strip.j1)
-                                .map(|j| tile_extent(self.shape.k, self.tiling.tk, j))
-                                .sum();
-                            input += mi * n;
-                            weight += n * kw;
-                        }
-                        StripKind::WeightStationary => {
-                            let kj = tile_extent(self.shape.k, self.tiling.tk, strip.j0);
-                            let mw: u64 = (strip.i0..strip.i1)
-                                .map(|i| tile_extent(self.shape.m, self.tiling.tm, i))
-                                .sum();
-                            weight += n * kj;
-                            input += mw * n;
-                        }
-                    }
+                    let (iw, ww, ow) = strip.words(&self.shape, &self.tiling);
+                    input += iw;
+                    weight += ww;
+                    // Σ per-strip output == M·K: the cover tiles the grid
+                    // exactly (debug-asserted at construction).
+                    output += ow;
                 }
                 EmaBreakdown {
                     input: if self.input_resident { 0 } else { input },
                     weight,
-                    output: if self.output_resident {
-                        0
-                    } else {
-                        self.shape.output_words()
-                    },
+                    output: if self.output_resident { 0 } else { output },
                 }
             }
         }
@@ -615,6 +691,40 @@ mod tests {
         let e = plan.ema();
         assert_eq!(e.input, 0);
         assert_eq!(e.weight, shape.weight_words());
+    }
+
+    #[test]
+    fn strips_only_planner_matches_per_tile_when_no_fallback() {
+        let shape = GemmShape::new(384, 768, 768);
+        let tiling = Tiling::square(16);
+        let per_tile = Plan::tas_per_tile(&shape, &tiling);
+        let strips = Plan::tas_strips(&shape, &tiling);
+        assert_eq!(per_tile, strips);
+        // uniform link weights are an exact rescaling: same cover again
+        let weighted = Plan::tas_link_weighted(&shape, &tiling, 1.0, 1.0);
+        assert_eq!(strips, weighted);
+    }
+
+    #[test]
+    fn link_weighting_shifts_cover_toward_rereading_the_cheap_stream() {
+        // M < K: the unweighted chooser keeps inputs stationary and
+        // re-reads weights.  Pricing weight words 4x (remote weights on
+        // another chip) flips the cover to weight-stationary.
+        let shape = GemmShape::new(64, 768, 768);
+        let tiling = Tiling::square(16);
+        let (gm, _, gk) = tiling.grid(&shape);
+        let base = Plan::tas_per_tile(&shape, &tiling);
+        let (is, _, _) = base.tile_mix();
+        assert_eq!(is, gm * gk, "baseline should be all input-stationary");
+        let weighted = Plan::tas_link_weighted(&shape, &tiling, 1.0, 4.0);
+        let (_, ws, _) = weighted.tile_mix();
+        assert_eq!(ws, gm * gk, "weighted cover should go weight-stationary");
+        // the weighted objective never increases under the weighted plan
+        let cost = |p: &Plan, wi: u64, ww: u64| {
+            let e = p.ema();
+            wi * e.input + ww * e.weight + e.output
+        };
+        assert!(cost(&weighted, 1, 4) <= cost(&base, 1, 4));
     }
 
     #[test]

@@ -1,0 +1,661 @@
+//! Multi-accelerator sharding: partition a [`Plan`] across devices by
+//! strip ranges, with inter-chip traffic under the same cost algebra as
+//! DRAM.
+//!
+//! A [`Plan`]'s strip cover is already a set of independent
+//! output-stationary work units, so sharding routes **whole strips** to
+//! devices instead of re-planning per-device sub-GEMMs:
+//!
+//! * every schedule step runs on exactly one device, so the per-device
+//!   *compute EMA* (words a device's PE array consumes, wherever they were
+//!   homed) sums to the unsharded plan's EMA **exactly** — conservation is
+//!   a construction invariant, not an approximation;
+//! * operand words whose home device differs from the consuming device
+//!   additionally cross a chip-to-chip link ([`LinkTraffic`]), costed by
+//!   [`crate::arch::Interconnect`]; link traffic is additive on top of the
+//!   conserved EMA, so a sharded plan can never undercut its unsharded
+//!   cost;
+//! * one device degenerates to the unsharded plan byte-for-byte.
+//!
+//! The partition axis follows the paper's notation (`out[M,K] =
+//! in[M,N]·w[N,K]`, N the contraction dim): [`ShardAxis::Rows`] splits
+//! output rows (M), [`ShardAxis::Cols`] splits output columns (K), and
+//! [`ShardAxis::Contraction`] splits N — each device computes partial sums
+//! of the whole output and a psum-reduce crosses the links.  The natural
+//! axis depends on the stationary decision: IS strips are single output
+//! rows (they partition cleanly by M), WS strips are single output columns
+//! (cleanly by K), which is what [`ShardAxis::Auto`] picks from the tile
+//! mix — the per-tile stationary choice dictates the partition axis.
+
+use super::analytic::EmaBreakdown;
+use super::layer::StageSpec;
+use super::plan::{Plan, PlanBody, Strip, StripKind};
+use crate::gemm::{tile_extent, GemmShape, Tiling};
+
+/// Partition axis of a sharded GEMM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardAxis {
+    /// Split output tile rows (M): inputs and outputs are row-local,
+    /// weights are homed by K tile-column.
+    Rows,
+    /// Split output tile columns (K): weights and outputs are
+    /// column-local, inputs are homed by M tile-row.
+    Cols,
+    /// Split the contraction (N): operands are range-local, every device
+    /// holds full-output partial sums, reduced across links at the end.
+    Contraction,
+    /// Pick [`ShardAxis::Rows`] or [`ShardAxis::Cols`] from the plan's
+    /// tile mix (IS-dominated covers shard by rows, WS by columns).
+    Auto,
+}
+
+impl ShardAxis {
+    pub fn from_name(name: &str) -> anyhow::Result<ShardAxis> {
+        Ok(match name {
+            "rows" | "m" => ShardAxis::Rows,
+            "cols" | "k" => ShardAxis::Cols,
+            "contraction" | "n" => ShardAxis::Contraction,
+            "auto" => ShardAxis::Auto,
+            _ => anyhow::bail!("unknown shard axis '{name}' (rows|cols|contraction|auto)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardAxis::Rows => "rows",
+            ShardAxis::Cols => "cols",
+            ShardAxis::Contraction => "contraction",
+            ShardAxis::Auto => "auto",
+        }
+    }
+}
+
+/// How to shard one GEMM.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardSpec {
+    pub devices: u64,
+    pub axis: ShardAxis,
+    /// Let the per-tile chooser price the remote-prone operand stream at
+    /// its link premium ([`Plan::tas_link_weighted`]): trades extra local
+    /// DRAM words for fewer inter-chip words.  No effect on
+    /// [`ShardAxis::Contraction`], whose operands are range-local by
+    /// construction (only the psum reduce crosses links).
+    pub link_aware: bool,
+}
+
+impl ShardSpec {
+    pub fn new(devices: u64, axis: ShardAxis) -> ShardSpec {
+        ShardSpec { devices, axis, link_aware: false }
+    }
+}
+
+/// Inter-chip word counts of one sharded plan.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LinkTraffic {
+    /// Operand/output words served from (or written back to) a remote
+    /// home device, point-to-point.
+    pub operand_words: u64,
+    /// Partial-sum words crossing links in the contraction-split reduce.
+    pub reduce_words: u64,
+    /// Words received per device.
+    pub per_device_in: Vec<u64>,
+    /// Words sent per device.
+    pub per_device_out: Vec<u64>,
+}
+
+impl LinkTraffic {
+    pub fn total(&self) -> u64 {
+        self.operand_words + self.reduce_words
+    }
+}
+
+fn p2p(lt: &mut LinkTraffic, from: usize, to: usize, words: u64) {
+    lt.operand_words += words;
+    lt.per_device_out[from] += words;
+    lt.per_device_in[to] += words;
+}
+
+/// Even tile split: `bounds[d] = d·extent/devices`, length `devices + 1`.
+pub fn even_bounds(extent: u64, devices: u64) -> Vec<u64> {
+    let d = devices.max(1);
+    (0..=d).map(|i| i * extent / d).collect()
+}
+
+/// Device owning tile index `t` under `bounds` (skipping empty ranges).
+pub fn owner_of(bounds: &[u64], t: u64) -> usize {
+    let d = bounds.len() - 1;
+    for dev in 0..d {
+        if t < bounds[dev + 1] {
+            return dev;
+        }
+    }
+    d - 1
+}
+
+/// A [`Plan`] partitioned across `devices` by strip ranges.
+#[derive(Clone, Debug)]
+pub struct ShardedPlan {
+    pub plan: Plan,
+    pub devices: u64,
+    /// Resolved partition axis (never [`ShardAxis::Auto`]).
+    pub axis: ShardAxis,
+    /// Tile-index boundaries along the partition axis (len devices + 1).
+    bounds: Vec<u64>,
+}
+
+impl ShardedPlan {
+    /// Partition `plan`.  Multi-device shards require a strip-cover body
+    /// (strips are the atomic routing unit); one device accepts any plan.
+    pub fn new(plan: Plan, devices: u64, axis: ShardAxis) -> ShardedPlan {
+        let devices = devices.max(1);
+        let axis = resolve_axis(axis, &plan);
+        assert!(
+            devices == 1 || matches!(plan.body, PlanBody::Strips(_)),
+            "multi-device shards require a strip-cover plan"
+        );
+        let (gm, gn, gk) = plan.tiling.grid(&plan.shape);
+        let extent = match axis {
+            ShardAxis::Rows => gm,
+            ShardAxis::Cols => gk,
+            ShardAxis::Contraction => gn,
+            ShardAxis::Auto => unreachable!("axis resolved above"),
+        };
+        let bounds = even_bounds(extent, devices);
+        ShardedPlan { plan, devices, axis, bounds }
+    }
+
+    fn strip_owner(&self, strip: &Strip) -> usize {
+        match self.axis {
+            ShardAxis::Rows => owner_of(&self.bounds, strip.i0),
+            ShardAxis::Cols => owner_of(&self.bounds, strip.j0),
+            // Contraction routes by step (r), not by strip.
+            ShardAxis::Contraction => 0,
+            ShardAxis::Auto => unreachable!("axis resolved at construction"),
+        }
+    }
+
+    /// Element extent of device `dev`'s contraction range.
+    fn contraction_elems(&self, dev: usize) -> u64 {
+        let n = self.plan.shape.n;
+        let tn = self.plan.tiling.tn;
+        let lo = (self.bounds[dev] * tn).min(n);
+        let hi = (self.bounds[dev + 1] * tn).min(n);
+        hi - lo
+    }
+
+    /// Drive `visit` over every step with the device that executes it.
+    /// Each step of the underlying plan is visited exactly once.
+    pub fn for_each_step_device<F: FnMut(usize, super::Step)>(&self, mut visit: F) {
+        match &self.plan.body {
+            PlanBody::Fixed(_) => self.plan.for_each_step(|s| visit(0, s)),
+            PlanBody::Strips(strips) => match self.axis {
+                ShardAxis::Rows | ShardAxis::Cols => {
+                    for strip in strips {
+                        let dev = self.strip_owner(strip);
+                        self.plan.for_each_strip_step(strip, &mut |s| visit(dev, s));
+                    }
+                }
+                ShardAxis::Contraction => {
+                    for strip in strips {
+                        self.plan.for_each_strip_step(strip, &mut |s: super::Step| {
+                            visit(owner_of(&self.bounds, s.r), s)
+                        });
+                    }
+                }
+                ShardAxis::Auto => unreachable!("axis resolved at construction"),
+            },
+        }
+    }
+
+    /// Closed-form per-device compute EMA: the DRAM words each device's
+    /// replayed steps charge (see [`crate::sim::ema::charge_step`]'s
+    /// accounting).  Sums to `self.plan.ema()` exactly — each step is
+    /// owned by exactly one device.
+    pub fn device_emas(&self) -> Vec<EmaBreakdown> {
+        let d = self.devices as usize;
+        let mut out = vec![EmaBreakdown::default(); d];
+        let shape = self.plan.shape;
+        let t = self.plan.tiling;
+        let strips = match &self.plan.body {
+            PlanBody::Fixed(_) => {
+                out[0] = self.plan.ema();
+                return out;
+            }
+            PlanBody::Strips(s) => s,
+        };
+        let (_, gn, _) = t.grid(&shape);
+        match self.axis {
+            ShardAxis::Rows | ShardAxis::Cols => {
+                for strip in strips {
+                    let dev = self.strip_owner(strip);
+                    let (iw, ww, ow) = strip.words(&shape, &t);
+                    let e = &mut out[dev];
+                    if !self.plan.input_resident {
+                        e.input += iw;
+                    }
+                    e.weight += ww;
+                    if !self.plan.output_resident {
+                        e.output += ow;
+                    }
+                }
+            }
+            ShardAxis::Contraction => {
+                // Operand reads split by each device's N-range: both
+                // streams are linear in the contraction extent, and every
+                // per-strip word count is a multiple of N, so the split is
+                // exact.  Only the final-range owner stores the output.
+                let n = shape.n;
+                let last = owner_of(&self.bounds, gn - 1);
+                let elems: Vec<u64> =
+                    (0..d).map(|dev| self.contraction_elems(dev)).collect();
+                for strip in strips {
+                    let (iw, ww, ow) = strip.words(&shape, &t);
+                    for (dev, e) in out.iter_mut().enumerate() {
+                        if elems[dev] == 0 {
+                            continue;
+                        }
+                        if !self.plan.input_resident {
+                            e.input += (iw / n) * elems[dev];
+                        }
+                        e.weight += (ww / n) * elems[dev];
+                    }
+                    if !self.plan.output_resident {
+                        out[last].output += ow;
+                    }
+                }
+            }
+            ShardAxis::Auto => unreachable!("axis resolved at construction"),
+        }
+        out
+    }
+
+    /// Closed-form inter-chip traffic of the partition.
+    pub fn link_traffic(&self) -> LinkTraffic {
+        let d = self.devices as usize;
+        let mut lt = LinkTraffic {
+            per_device_in: vec![0; d],
+            per_device_out: vec![0; d],
+            ..Default::default()
+        };
+        let shape = self.plan.shape;
+        let t = self.plan.tiling;
+        let n = shape.n;
+        let strips = match &self.plan.body {
+            PlanBody::Fixed(_) => return lt,
+            PlanBody::Strips(s) => s,
+        };
+        if d == 1 {
+            return lt;
+        }
+        let (gm, gn, gk) = t.grid(&shape);
+        match self.axis {
+            ShardAxis::Rows => {
+                // Inputs/outputs are homed with their row owner (the shard
+                // bounds); weights are homed by K tile-column.
+                let col_bounds = even_bounds(gk, self.devices);
+                for strip in strips {
+                    let dev = self.strip_owner(strip);
+                    match strip.kind {
+                        StripKind::InputStationary => {
+                            // the strip's input row is its owner's: local
+                            for j in strip.j0..strip.j1 {
+                                let home = owner_of(&col_bounds, j);
+                                if home != dev {
+                                    p2p(&mut lt, home, dev, n * tile_extent(shape.k, t.tk, j));
+                                }
+                            }
+                        }
+                        StripKind::WeightStationary => {
+                            let kj = tile_extent(shape.k, t.tk, strip.j0);
+                            let home_w = owner_of(&col_bounds, strip.j0);
+                            if home_w != dev {
+                                p2p(&mut lt, home_w, dev, n * kj);
+                            }
+                            for i in strip.i0..strip.i1 {
+                                let home = owner_of(&self.bounds, i);
+                                if home != dev {
+                                    let mi = tile_extent(shape.m, t.tm, i);
+                                    if !self.plan.input_resident {
+                                        p2p(&mut lt, home, dev, mi * n);
+                                    }
+                                    if !self.plan.output_resident {
+                                        p2p(&mut lt, dev, home, mi * kj);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            ShardAxis::Cols => {
+                // Weights/outputs are homed with their column owner;
+                // inputs are homed by M tile-row.
+                let row_bounds = even_bounds(gm, self.devices);
+                for strip in strips {
+                    let dev = self.strip_owner(strip);
+                    match strip.kind {
+                        StripKind::InputStationary => {
+                            let i = strip.i0;
+                            let mi = tile_extent(shape.m, t.tm, i);
+                            let home_in = owner_of(&row_bounds, i);
+                            if home_in != dev && !self.plan.input_resident {
+                                p2p(&mut lt, home_in, dev, mi * n);
+                            }
+                            for j in strip.j0..strip.j1 {
+                                let home = owner_of(&self.bounds, j);
+                                if home != dev {
+                                    let kj = tile_extent(shape.k, t.tk, j);
+                                    p2p(&mut lt, home, dev, n * kj);
+                                    if !self.plan.output_resident {
+                                        p2p(&mut lt, dev, home, mi * kj);
+                                    }
+                                }
+                            }
+                        }
+                        StripKind::WeightStationary => {
+                            // the strip's weight column is its owner's: local
+                            for i in strip.i0..strip.i1 {
+                                let home = owner_of(&row_bounds, i);
+                                if home != dev && !self.plan.input_resident {
+                                    p2p(&mut lt, home, dev, tile_extent(shape.m, t.tm, i) * n);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            ShardAxis::Contraction => {
+                // Operands are range-local; every non-final device ships
+                // its full-output partials to the final-range owner.
+                let last = owner_of(&self.bounds, gn - 1);
+                let ow = shape.output_words();
+                for dev in 0..d {
+                    if dev != last && self.contraction_elems(dev) > 0 {
+                        lt.reduce_words += ow;
+                        lt.per_device_out[dev] += ow;
+                        lt.per_device_in[last] += ow;
+                    }
+                }
+            }
+            ShardAxis::Auto => unreachable!("axis resolved at construction"),
+        }
+        lt
+    }
+}
+
+fn resolve_axis(axis: ShardAxis, plan: &Plan) -> ShardAxis {
+    match axis {
+        ShardAxis::Auto => {
+            let (is, ws, _) = plan.tile_mix();
+            if ws > is {
+                ShardAxis::Cols
+            } else {
+                ShardAxis::Rows
+            }
+        }
+        a => a,
+    }
+}
+
+/// Shard one GEMM: plan per-tile TAS, then partition the strip cover.
+///
+/// `remote_word_weight` is the link premium per word relative to a local
+/// DRAM word (see [`crate::arch::Interconnect::remote_word_weight`]); it
+/// only matters when `spec.link_aware` is set.  One device returns the
+/// unsharded [`Plan::tas_per_tile`] verbatim.
+pub fn shard_gemm(
+    shape: &GemmShape,
+    tiling: &Tiling,
+    spec: ShardSpec,
+    remote_word_weight: f64,
+) -> ShardedPlan {
+    let devices = spec.devices.max(1);
+    let base = Plan::tas_per_tile(shape, tiling);
+    if devices == 1 {
+        return ShardedPlan::new(base, 1, spec.axis);
+    }
+    // Strips are the routing unit: the rare fixed-scheme fallback has no
+    // strips, so rebuild as the best pure strip cover.
+    let base = match base.body {
+        PlanBody::Strips(_) => base,
+        PlanBody::Fixed(_) => Plan::tas_strips(shape, tiling),
+    };
+    let axis = resolve_axis(spec.axis, &base);
+    let lambda = remote_word_weight.max(0.0);
+    let plan = if spec.link_aware && lambda > 0.0 {
+        // The axis decides which stationary operand is device-resident:
+        // row ownership co-locates input/output rows, so weight-stationary
+        // strips — which re-read input rows homed on other devices — pay
+        // the link premium on every re-read (symmetrically for columns).
+        // Pricing that stream keeps the cover axis-aligned; an evenly
+        // spread home makes (D-1)/D of its words cross a link.
+        let frac = (devices - 1) as f64 / devices as f64;
+        match axis {
+            ShardAxis::Rows => {
+                Plan::tas_link_weighted(shape, tiling, 1.0 + lambda * frac, 1.0)
+            }
+            ShardAxis::Cols => {
+                Plan::tas_link_weighted(shape, tiling, 1.0, 1.0 + lambda * frac)
+            }
+            _ => base,
+        }
+    } else {
+        base
+    };
+    ShardedPlan::new(plan, devices, axis)
+}
+
+/// Place chained block stages on devices: contiguous groups balanced by
+/// MAC count (for two devices: QKV+attention on the first, FFN on the
+/// second).  Returns one device index per stage, non-decreasing.
+pub fn place_stages(stages: &[StageSpec], devices: u64) -> Vec<usize> {
+    let d = devices.max(1) as usize;
+    let total: u128 = stages
+        .iter()
+        .map(|s| (s.count * s.shape.macs()) as u128)
+        .sum();
+    if total == 0 || d == 1 {
+        return vec![0; stages.len()];
+    }
+    let mut placement = Vec::with_capacity(stages.len());
+    let mut cum: u128 = 0;
+    for s in stages {
+        let macs = (s.count * s.shape.macs()) as u128;
+        // a stage lives where the midpoint of its MAC interval falls
+        let dev = ((cum + macs / 2) * d as u128 / total) as usize;
+        placement.push(dev.min(d - 1));
+        cum += macs;
+    }
+    placement
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn sum_emas(emas: &[EmaBreakdown]) -> EmaBreakdown {
+        let mut total = EmaBreakdown::default();
+        for e in emas {
+            total.input += e.input;
+            total.weight += e.weight;
+            total.output += e.output;
+        }
+        total
+    }
+
+    #[test]
+    fn even_bounds_cover_and_are_monotone() {
+        for extent in [1u64, 3, 7, 16, 100] {
+            for d in [1u64, 2, 4, 8, 13] {
+                let b = even_bounds(extent, d);
+                assert_eq!(b.len() as u64, d + 1);
+                assert_eq!(b[0], 0);
+                assert_eq!(*b.last().unwrap(), extent);
+                assert!(b.windows(2).all(|w| w[0] <= w[1]));
+                for t in 0..extent {
+                    let o = owner_of(&b, t);
+                    assert!(b[o] <= t && t < b[o + 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_device_shard_is_the_unsharded_plan() {
+        let shape = GemmShape::new(384, 768, 768);
+        let tiling = Tiling::square(16);
+        let sp = shard_gemm(&shape, &tiling, ShardSpec::new(1, ShardAxis::Auto), 0.0);
+        assert_eq!(sp.plan, Plan::tas_per_tile(&shape, &tiling));
+        let emas = sp.device_emas();
+        assert_eq!(emas.len(), 1);
+        assert_eq!(emas[0], sp.plan.ema());
+        assert_eq!(sp.link_traffic().total(), 0);
+    }
+
+    #[test]
+    fn sharded_steps_cover_each_tile_triple_once() {
+        let shape = GemmShape::new(130, 70, 90);
+        let tiling = Tiling::square(16);
+        for axis in [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Contraction] {
+            let sp = shard_gemm(&shape, &tiling, ShardSpec::new(3, axis), 0.0);
+            let mut seen: HashSet<(u64, u64, u64)> = HashSet::new();
+            let mut steps = 0u64;
+            sp.for_each_step_device(|dev, s| {
+                assert!((dev as u64) < sp.devices);
+                assert!(seen.insert((s.i, s.r, s.j)), "step visited twice");
+                steps += 1;
+            });
+            assert_eq!(steps, sp.plan.step_count(), "{axis:?}");
+        }
+    }
+
+    #[test]
+    fn device_emas_sum_to_the_plan_ema() {
+        let tiling = Tiling::square(16);
+        for shape in [
+            GemmShape::new(64, 768, 768),
+            GemmShape::new(4096, 768, 768),
+            GemmShape::new(130, 70, 90),
+        ] {
+            for axis in [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Contraction, ShardAxis::Auto]
+            {
+                for d in [1u64, 2, 4, 8] {
+                    let sp = shard_gemm(&shape, &tiling, ShardSpec::new(d, axis), 0.0);
+                    let total = sum_emas(&sp.device_emas());
+                    assert_eq!(total, sp.plan.ema(), "{shape:?} {axis:?} d={d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_axis_follows_the_stationary_decision() {
+        let tiling = Tiling::square(16);
+        // M < K: all-IS cover -> rows; M >= K: all-WS cover -> cols.
+        let is_shape = GemmShape::new(64, 768, 768);
+        let ws_shape = GemmShape::new(4096, 768, 768);
+        let sp_is = shard_gemm(&is_shape, &tiling, ShardSpec::new(4, ShardAxis::Auto), 0.0);
+        let sp_ws = shard_gemm(&ws_shape, &tiling, ShardSpec::new(4, ShardAxis::Auto), 0.0);
+        assert_eq!(sp_is.axis, ShardAxis::Rows);
+        assert_eq!(sp_ws.axis, ShardAxis::Cols);
+        // ...and the natural axis balances the shard: every device works.
+        for sp in [&sp_is, &sp_ws] {
+            let emas = sp.device_emas();
+            assert!(emas.iter().all(|e| e.total() > 0), "{:?}", sp.axis);
+        }
+    }
+
+    #[test]
+    fn rows_shard_links_only_remote_weight_columns() {
+        // All-IS cover, rows axis: every device owns its input rows and
+        // output rows; only weight columns homed elsewhere cross links.
+        // Each of the gm row strips reads all of W, of which (D-1)/D is
+        // homed remotely: gm·W·(D-1)/D link words in total (gm = D here).
+        let shape = GemmShape::new(64, 768, 768);
+        let tiling = Tiling::square(16);
+        let d = 4u64;
+        let sp = shard_gemm(&shape, &tiling, ShardSpec::new(d, ShardAxis::Rows), 0.0);
+        let lt = sp.link_traffic();
+        assert_eq!(lt.reduce_words, 0);
+        assert_eq!(lt.operand_words, (d - 1) * shape.weight_words(), "{lt:?}");
+        assert_eq!(lt.per_device_in.iter().sum::<u64>(), lt.total());
+        assert_eq!(lt.per_device_out.iter().sum::<u64>(), lt.total());
+    }
+
+    #[test]
+    fn contraction_shard_pays_one_reduce_per_extra_device() {
+        let shape = GemmShape::new(128, 256, 128);
+        let tiling = Tiling::square(16);
+        for d in [2u64, 4, 8] {
+            let sp = shard_gemm(&shape, &tiling, ShardSpec::new(d, ShardAxis::Contraction), 0.0);
+            let lt = sp.link_traffic();
+            assert_eq!(lt.operand_words, 0, "operands are range-local");
+            assert_eq!(lt.reduce_words, (d - 1) * shape.output_words());
+        }
+    }
+
+    #[test]
+    fn more_devices_than_tiles_leaves_spares_idle() {
+        let shape = GemmShape::new(32, 64, 64); // 2 tile rows
+        let tiling = Tiling::square(16);
+        let sp = shard_gemm(&shape, &tiling, ShardSpec::new(8, ShardAxis::Rows), 0.0);
+        let emas = sp.device_emas();
+        assert_eq!(emas.len(), 8);
+        assert_eq!(sum_emas(&emas), sp.plan.ema());
+        assert!(emas.iter().filter(|e| e.total() > 0).count() <= 2);
+    }
+
+    #[test]
+    fn link_aware_plan_cuts_link_words_and_rebalances() {
+        // M >= K forced onto the rows axis: the default cover goes
+        // weight-stationary, whose full-height strips all land on the
+        // first row owner and re-read remote input rows per column.
+        // Pricing the input stream flips the cover to row-aligned IS
+        // strips: fewer inter-chip words AND a balanced partition.
+        let shape = GemmShape::new(4096, 768, 768);
+        let tiling = Tiling::square(16);
+        let d = 4u64;
+        let plain = shard_gemm(&shape, &tiling, ShardSpec::new(d, ShardAxis::Rows), 2.0);
+        let mut spec = ShardSpec::new(d, ShardAxis::Rows);
+        spec.link_aware = true;
+        let aware = shard_gemm(&shape, &tiling, spec, 2.0);
+        let (pl, al) = (plain.link_traffic().total(), aware.link_traffic().total());
+        assert!(al < pl, "aware {al} >= plain {pl}");
+        let max_ema = |sp: &ShardedPlan| {
+            sp.device_emas().iter().map(|e| e.total()).max().unwrap()
+        };
+        assert!(max_ema(&aware) < max_ema(&plain), "partition should rebalance");
+        // conservation still holds for the aware plan
+        assert_eq!(sum_emas(&aware.device_emas()), aware.plan.ema());
+    }
+
+    #[test]
+    fn fixed_fallback_rebuilds_as_strips_for_multi_device() {
+        // A shape whose per-tile plan falls back to a fixed scheme (single
+        // contraction tile favours spilling IS on extreme ratios) must
+        // still shard: the planner rebuilds a strip cover.
+        let tiling = Tiling::square(16).with_kp(16).with_mp(16);
+        let shape = GemmShape::new(4096, 16, 4096);
+        let sp = shard_gemm(&shape, &tiling, ShardSpec::new(4, ShardAxis::Auto), 0.0);
+        assert!(matches!(sp.plan.body, PlanBody::Strips(_)));
+        assert_eq!(sum_emas(&sp.device_emas()), sp.plan.ema());
+    }
+
+    #[test]
+    fn place_stages_balances_and_stays_contiguous() {
+        use crate::models::zoo;
+        let m = zoo::bert_base();
+        let stages = m.block_stages(512);
+        for d in [1u64, 2, 4, 8] {
+            let p = place_stages(&stages, d);
+            assert_eq!(p.len(), stages.len());
+            assert!(p.windows(2).all(|w| w[0] <= w[1]), "placement contiguous");
+            assert!(p.iter().all(|&x| (x as u64) < d));
+            if d >= 2 {
+                // FFN must not share a device with the QKV projections
+                assert!(p[p.len() - 1] > p[0]);
+            }
+        }
+    }
+}

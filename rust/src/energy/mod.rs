@@ -87,7 +87,16 @@ impl EnergyModel {
     /// SRAM/MAC terms depend only on the MAC count, exactly as in the
     /// fixed-scheme path.
     pub fn plan_energy(&self, plan: &Plan, dram_words: u64) -> EnergyCost {
-        let macs = plan.shape.macs() as f64;
+        self.traffic_energy(plan.shape.macs(), dram_words)
+    }
+
+    /// Energy from raw MAC and DRAM word counts — the unit a sharded
+    /// device reports ([`crate::sim::shard`]): its MACs and EMA are
+    /// partial sums of the plan's, and the same formula applies per
+    /// device.  Inter-chip link energy is accounted separately by
+    /// [`crate::arch::Interconnect::transfer_energy_pj`].
+    pub fn traffic_energy(&self, macs: u64, dram_words: u64) -> EnergyCost {
+        let macs = macs as f64;
         EnergyCost {
             dram_pj: self.cfg.dram_pj * dram_words as f64,
             sram_pj: self.cfg.sram_pj * 2.0 * macs + self.cfg.reg_pj * macs,

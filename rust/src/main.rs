@@ -4,6 +4,7 @@
 //!   tables    regenerate the paper's Tables I–IV
 //!   simulate  EMA / energy / cycle report for one GEMM or model
 //!   plan      layer-level plan: per-tile TAS + SRAM residency per block
+//!   shard     partition a model across devices + interconnect costs
 //!   sweep     sequence-length sweep (crossover analysis)
 //!   trace     dump a tile-step trace (Fig. 1/2 evidence)
 //!   validate  run every artifact against its golden vectors (PJRT)
@@ -12,13 +13,18 @@
 use anyhow::Result;
 use std::collections::BTreeMap;
 use std::time::Duration;
+use tas::arch::{Interconnect, InterconnectConfig};
 use tas::config::AcceleratorConfig;
 use tas::coordinator::{Coordinator, CoordinatorOptions};
-use tas::dataflow::{ema, for_each_step, LayerPlan, Scheme};
+use tas::dataflow::{
+    ema, for_each_step, place_stages, shard_gemm, LayerPlan, Plan, Scheme, ShardAxis,
+    ShardSpec,
+};
+use tas::energy::EnergyModel;
 use tas::gemm::{GemmShape, Tiling};
 use tas::models::{zoo, LengthDist};
 use tas::report;
-use tas::sim::{estimate_cycles, measure_occupancy};
+use tas::sim::{estimate_cycles, measure_occupancy, sharded_fused_cost};
 use tas::util::cli::Args;
 use tas::util::json::Json;
 use tas::util::prng::Rng;
@@ -30,6 +36,7 @@ fn main() {
         Some("tables") => cmd_tables(args),
         Some("simulate") => cmd_simulate(args),
         Some("plan") => cmd_plan(args),
+        Some("shard") => cmd_shard(args),
         Some("sweep") => cmd_sweep(args),
         Some("trace") => cmd_trace(args),
         Some("figs") => cmd_figs(args),
@@ -55,12 +62,15 @@ USAGE: tas <subcommand> [options]
   tables    [--table 1|2|3|4] [--csv] [--tile N] [--seed N]
   simulate  --model NAME --seq N [--tile N] [--json] | --m M --n N --k K
   plan      --model NAME [--seq N] [--tile N] [--sram WORDS] [--json]
+  shard     --model NAME [--seq N] [--devices D] [--axis auto|rows|cols|
+            contraction] [--tile N] [--sram WORDS] [--link-aware]
+            [--link-bw WORDS] [--config FILE] [--json]
   sweep     --model NAME [--tile N] [--seqs a,b,c] [--json]
-  trace     --scheme NAME --m M --n N --k K [--tile N] [--limit N]
+  trace     --scheme NAME --m M --n N --k K [--tile N] [--limit N] [--json]
   figs      [--m M] [--n N] [--k K] [--tile N]   (Fig. 1/2 tile maps)
   validate  [--artifacts DIR]
   serve     [--artifacts DIR] [--requests N] [--dist librispeech|fixed]
-            [--seed N] [--linger-ms N]
+            [--seed N] [--linger-ms N] [--devices N]
 
 Models: vit-g14, wav2vec2-xls-r-2b, gpt-3, bert-base, bert-large,
         wav2vec2-large";
@@ -274,6 +284,222 @@ fn cmd_plan(mut args: Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_shard(mut args: Args) -> Result<()> {
+    let name = args.opt_or("model", "bert-base");
+    let tiling = tiling_from(&mut args)?;
+    // --config loads accelerator/energy/[interconnect] from a TOML preset
+    // (see configs/); individual flags still override.
+    let config = match args.opt("config") {
+        Some(path) => tas::config::Config::load(std::path::Path::new(&path))?,
+        None => tas::config::Config::default(),
+    };
+    let cfg = config.accelerator;
+    let devices = args.opt_u64("devices", 2)?.max(1);
+    let axis = ShardAxis::from_name(&args.opt_or("axis", "auto"))?;
+    let link_aware = args.flag("link-aware");
+    let json = args.flag("json");
+    let model = zoo::by_name(&name)?;
+    let seq = args.opt_u64("seq", model.default_seq)?;
+    let sram = args.opt_u64("sram", cfg.sram_words)?;
+    let icx_cfg = InterconnectConfig {
+        link_bandwidth: args.opt_u64("link-bw", config.interconnect.link_bandwidth)?,
+        ..config.interconnect
+    };
+    args.finish()?;
+    icx_cfg.validate()?;
+    anyhow::ensure!(
+        !(link_aware && axis == ShardAxis::Contraction),
+        "--link-aware has no effect on the contraction axis: operands are \
+         range-local by construction and only the psum reduce crosses links"
+    );
+    let icx = Interconnect::new(icx_cfg);
+    let em = EnergyModel::new(config.energy);
+    let lambda = icx.remote_word_weight(cfg.dram_bandwidth);
+    let spec = ShardSpec { devices, axis, link_aware };
+
+    let d = devices as usize;
+    let mut dev_ema = vec![0u64; d];
+    let mut dev_energy_pj = vec![0f64; d];
+    let mut dev_link_in = vec![0u64; d];
+    let mut dev_link_out = vec![0u64; d];
+    let mut total_link = 0u64;
+    let mut total_reduce = 0u64;
+    let mut total_dram = 0u64;
+    let mut total_link_energy_pj = 0f64;
+    let mut critical_cycles = 0u64;
+    let mut unsharded_dram = 0u64;
+
+    let mut gemm_rows = Vec::new();
+    let mut gemm_json = Vec::new();
+    for g in model.linear_gemms(seq) {
+        let sp = shard_gemm(&g.shape, &tiling, spec, lambda);
+        let cost = sharded_fused_cost(&sp, &cfg, &em, &icx);
+        let unsharded = Plan::tas_per_tile(&g.shape, &tiling).ema().total();
+        unsharded_dram += g.count * unsharded;
+        total_dram += g.count * cost.dram_words();
+        total_link += g.count * cost.link.operand_words;
+        total_reduce += g.count * cost.link.reduce_words;
+        total_link_energy_pj += g.count as f64 * cost.link_energy_pj;
+        critical_cycles += g.count * cost.total_cycles();
+        let mut dev_json = Vec::new();
+        for dc in &cost.per_device {
+            dev_ema[dc.device] += g.count * dc.ema.total_words();
+            dev_energy_pj[dc.device] += g.count as f64 * dc.energy.total_pj();
+            dev_link_in[dc.device] += g.count * dc.link_in_words;
+            dev_link_out[dc.device] += g.count * dc.link_out_words;
+            if json {
+                dev_json.push(jobj(vec![
+                    ("device", jnum(dc.device as u64)),
+                    ("ema_words", jnum(dc.ema.total_words())),
+                    ("macs", jnum(dc.macs)),
+                    ("cycles", jnum(dc.cycles.total_cycles)),
+                    ("energy_pj", Json::Num(dc.energy.total_pj())),
+                    ("link_in_words", jnum(dc.link_in_words)),
+                    ("link_out_words", jnum(dc.link_out_words)),
+                ]));
+            }
+        }
+        if json {
+            gemm_json.push(jobj(vec![
+                ("gemm", jstr(g.name)),
+                ("m", jnum(g.shape.m)),
+                ("n", jnum(g.shape.n)),
+                ("k", jnum(g.shape.k)),
+                ("count", jnum(g.count)),
+                ("axis", jstr(sp.axis.name())),
+                ("decision", jstr(&sp.plan.describe())),
+                ("dram_words", jnum(cost.dram_words())),
+                ("link_words", jnum(cost.link.operand_words)),
+                ("reduce_words", jnum(cost.link.reduce_words)),
+                ("link_cycles", jnum(cost.link_cycles)),
+                ("per_device", Json::Arr(dev_json)),
+            ]));
+        } else {
+            gemm_rows.push(vec![
+                g.name.to_string(),
+                format!("{},{},{}", g.shape.m, g.shape.n, g.shape.k),
+                g.count.to_string(),
+                sp.axis.name().to_string(),
+                sp.plan.describe(),
+                sci(cost.dram_words() as f64),
+                sci(cost.link_words() as f64),
+                sci(cost.max_device_cycles() as f64),
+            ]);
+        }
+    }
+
+    // Layer pipeline placement: chained block stages across the devices.
+    let stages = model.block_stages(seq);
+    let placement = place_stages(&stages, devices);
+    let lp = LayerPlan::plan_placed(stages, seq, &tiling, sram, placement.clone());
+    let handoff = lp.handoff_words();
+
+    if json {
+        let doc = jobj(vec![
+            ("model", jstr(model.name)),
+            ("seq", jnum(seq)),
+            ("devices", jnum(devices)),
+            ("axis", jstr(axis.name())),
+            ("link_aware", Json::Bool(link_aware)),
+            ("link_bandwidth", jnum(icx.cfg.link_bandwidth)),
+            ("gemms", Json::Arr(gemm_json)),
+            (
+                "totals",
+                jobj(vec![
+                    ("dram_words", jnum(total_dram)),
+                    ("link_words", jnum(total_link)),
+                    ("reduce_words", jnum(total_reduce)),
+                    ("inter_chip_words", jnum(total_link + total_reduce)),
+                    ("link_energy_pj", Json::Num(total_link_energy_pj)),
+                    ("unsharded_dram_words", jnum(unsharded_dram)),
+                    ("critical_path_cycles", jnum(critical_cycles)),
+                    (
+                        "per_device_ema_words",
+                        Json::Arr(dev_ema.iter().map(|w| jnum(*w)).collect()),
+                    ),
+                    (
+                        "per_device_energy_pj",
+                        Json::Arr(dev_energy_pj.iter().map(|e| Json::Num(*e)).collect()),
+                    ),
+                ]),
+            ),
+            (
+                "layer_pipeline",
+                jobj(vec![
+                    (
+                        "placement",
+                        Json::Arr(placement.iter().map(|p| jnum(*p as u64)).collect()),
+                    ),
+                    ("handoff_words", jnum(handoff)),
+                    ("total_ema_words", jnum(lp.total_ema())),
+                    (
+                        "per_device_ema_words",
+                        Json::Arr(lp.per_device_ema().iter().map(|w| jnum(*w)).collect()),
+                    ),
+                ]),
+            ),
+        ]);
+        println!("{}", doc.to_string_compact());
+        return Ok(());
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "{} @ seq {} sharded across {} devices (axis {}, tile {}, link {} w/cyc)",
+            model.name, seq, devices, axis.name(), tiling.tm, icx.cfg.link_bandwidth
+        ),
+        &["gemm", "M,N,K", "×", "axis", "decision", "dram EMA", "inter-chip", "max-dev cycles"],
+    );
+    for row in gemm_rows {
+        t.row(row);
+    }
+    println!("{}", t.to_text());
+
+    let mut dt = Table::new(
+        "per-device totals (one forward pass)",
+        &["device", "EMA words", "energy (mJ)", "link in", "link out"],
+    );
+    for dev in 0..d {
+        dt.row(vec![
+            dev.to_string(),
+            sci(dev_ema[dev] as f64),
+            format!("{:.2}", dev_energy_pj[dev] / 1e9),
+            sci(dev_link_in[dev] as f64),
+            sci(dev_link_out[dev] as f64),
+        ]);
+    }
+    println!("{}", dt.to_text());
+
+    println!(
+        "forward pass:  dram {}   inter-chip {} ({} p2p + {} reduce, {:.2} mJ)",
+        sci(total_dram as f64),
+        sci((total_link + total_reduce) as f64),
+        sci(total_link as f64),
+        sci(total_reduce as f64),
+        total_link_energy_pj / 1e9,
+    );
+    println!(
+        "vs unsharded:  dram {}   overhead {}",
+        sci(unsharded_dram as f64),
+        pct(if unsharded_dram == 0 {
+            0.0
+        } else {
+            (total_dram + total_link + total_reduce) as f64 / unsharded_dram as f64 - 1.0
+        }),
+    );
+    let names: Vec<String> = lp
+        .stages
+        .iter()
+        .map(|s| format!("{}:{}", s.spec.name, s.device))
+        .collect();
+    println!(
+        "layer pipeline: {}   handoff {} words/pass",
+        names.join(" "),
+        sci(handoff as f64)
+    );
+    Ok(())
+}
+
 fn cmd_sweep(mut args: Args) -> Result<()> {
     let name = args.opt_or("model", "wav2vec2-large");
     let tiling = tiling_from(&mut args)?;
@@ -347,8 +573,42 @@ fn cmd_trace(mut args: Args) -> Result<()> {
     let k = args.opt_u64("k", 64)?;
     let tiling = tiling_from(&mut args)?;
     let limit = args.opt_u64("limit", 64)?;
+    let json = args.flag("json");
     args.finish()?;
     let shape = GemmShape::new(m, n, k);
+    if json {
+        let mut steps = Vec::new();
+        let mut count = 0u64;
+        for_each_step(scheme, &shape, &tiling, |s| {
+            if count < limit {
+                steps.push(jobj(vec![
+                    ("step", jnum(count)),
+                    ("i", jnum(s.i)),
+                    ("r", jnum(s.r)),
+                    ("j", jnum(s.j)),
+                    ("load_input", Json::Bool(s.load_input)),
+                    ("load_weight", Json::Bool(s.load_weight)),
+                    ("psum_fetch", Json::Bool(s.psum_fetch)),
+                    ("psum_spill", Json::Bool(s.psum_spill)),
+                    ("store_out", Json::Bool(s.store_out)),
+                ]));
+            }
+            count += 1;
+        });
+        let doc = jobj(vec![
+            ("scheme", jstr(scheme.resolve(&shape).name())),
+            ("m", jnum(m)),
+            ("n", jnum(n)),
+            ("k", jnum(k)),
+            ("tile_m", jnum(tiling.tm)),
+            ("tile_n", jnum(tiling.tn)),
+            ("tile_k", jnum(tiling.tk)),
+            ("total_steps", jnum(count)),
+            ("steps", Json::Arr(steps)),
+        ]);
+        println!("{}", doc.to_string_compact());
+        return Ok(());
+    }
     println!(
         "# {} on M={m} N={n} K={k}, tiles ({},{},{}) — first {limit} steps",
         scheme.resolve(&shape).name(),
@@ -413,6 +673,7 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     let dist_name = args.opt_or("dist", "librispeech");
     let seed = args.opt_u64("seed", 42)?;
     let linger = Duration::from_millis(args.opt_u64("linger-ms", 2)?);
+    let max_devices = args.opt_u64("devices", 1)?.max(1);
     args.finish()?;
     anyhow::ensure!(
         tas::runtime::artifacts_available(&dir),
@@ -423,6 +684,7 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     let coordinator = Coordinator::start(CoordinatorOptions {
         artifacts_dir: dir,
         linger,
+        max_devices,
         ..Default::default()
     })?;
     let vocab = *coordinator.model.get("vocab").unwrap_or(&1024);
@@ -480,6 +742,19 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         sci(snap.ema_plan_words as f64),
         pct(snap.ema_reduction_vs_per_gemm())
     );
+    if max_devices > 1 {
+        let per_dev: Vec<String> = snap
+            .per_device_ema_words
+            .iter()
+            .map(|w| sci(*w as f64))
+            .collect();
+        println!(
+            "sharding        {} devices: per-device EMA [{}], inter-chip {} words",
+            snap.per_device_ema_words.len(),
+            per_dev.join(", "),
+            sci(snap.link_words as f64)
+        );
+    }
     coordinator.shutdown();
     Ok(())
 }

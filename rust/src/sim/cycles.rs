@@ -73,11 +73,18 @@ pub fn estimate_cycles_plan(plan: &Plan, cfg: &AcceleratorConfig) -> CycleEstima
 /// replay ([`crate::sim::replay::fused_cost`]) so both paths are one
 /// formula by construction.
 pub fn cycles_from_replay(sim: &SimEma, shape: &GemmShape, cfg: &AcceleratorConfig) -> CycleEstimate {
+    cycles_from_parts(shape.macs(), sim, cfg)
+}
+
+/// Same formula from an explicit MAC count — a sharded device replays
+/// only its slice of the grid, so its MACs are a partial sum rather than
+/// `shape.macs()` ([`crate::sim::shard`]).
+pub fn cycles_from_parts(macs: u64, sim: &SimEma, cfg: &AcceleratorConfig) -> CycleEstimate {
     let pe = cfg.pe_array();
     // Compute: each of the `steps` tile passes is a tile MAC burst; model
-    // the whole GEMM as total MACs at array throughput + per-pass fill.
+    // the whole workload as total MACs at array throughput + per-pass fill.
     let fill = pe.fill_latency * sim.steps;
-    let mac_cycles = shape.macs().div_ceil(pe.macs_per_cycle());
+    let mac_cycles = macs.div_ceil(pe.macs_per_cycle());
     let compute_cycles = mac_cycles + fill;
 
     let dram_stream_cycles = sim.stats.total_words().div_ceil(cfg.dram_bandwidth);

@@ -13,7 +13,12 @@
 //! * [`functional`] — numeric execution of the schedule on real f32 data
 //!   (proves every schedule computes the same GEMM),
 //! * [`cycles`] — a first-order latency model (compute/DRAM overlap with
-//!   turnaround stalls).
+//!   turnaround stalls),
+//! * [`pipeline`] — step-level (DMA ‖ PE) stall attribution, a
+//!   [`replay::CostSink`] over the fused pass,
+//! * [`shard`] — per-device cost replay for multi-accelerator shards
+//!   ([`crate::dataflow::shard`]), link traffic costed by
+//!   [`crate::arch::Interconnect`].
 //!
 //! [`Plan`]: crate::dataflow::Plan
 
@@ -25,6 +30,7 @@ pub mod occupancy;
 pub mod pipeline;
 pub mod replay;
 pub mod roofline;
+pub mod shard;
 
 pub use cycles::{estimate_cycles, estimate_cycles_plan, CycleEstimate};
 pub use dram_trace::{simulate_dram_timing, simulate_dram_timing_plan};
@@ -33,4 +39,5 @@ pub use replay::{fused_cost, CostSink, EmaSink, FusedCost, StepCtx, TimingSink};
 pub use roofline::{ridge_intensity, roofline, RooflinePoint};
 pub use functional::{execute_plan, execute_schedule};
 pub use occupancy::{measure_occupancy, measure_occupancy_plan, Occupancy};
-pub use pipeline::{simulate_pipeline, PipelineStats};
+pub use pipeline::{simulate_pipeline, simulate_pipeline_plan, PipelineSink, PipelineStats};
+pub use shard::{sharded_fused_cost, DeviceCost, ShardCost};

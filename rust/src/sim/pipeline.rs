@@ -8,11 +8,19 @@
 //! step's compute.  This resolves *where* the stalls land — the spilling
 //! schemes stall on every psum round-trip, the hybrids only at window
 //! boundaries — which the aggregate max() model cannot show.
+//!
+//! The walk is a [`CostSink`] over the fused single-pass replay
+//! ([`super::replay`]): stall attribution rides the same step stream as
+//! EMA/cycles/energy/timing, so per-tile TAS plans — and each device's
+//! slice of a sharded plan ([`super::shard`]) — get stall breakdowns for
+//! free.  [`simulate_pipeline`] keeps the standalone entry point.
 
 use crate::arch::dram::DramDir;
+use crate::arch::PeArray;
 use crate::config::AcceleratorConfig;
-use crate::dataflow::{for_each_step, Scheme};
-use crate::gemm::{tile_extent, GemmShape, Tiling};
+use crate::dataflow::{Plan, Scheme};
+use crate::gemm::{GemmShape, Tiling};
+use crate::sim::replay::{replay, CostSink, StepCtx};
 
 /// Per-step pipeline statistics.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -47,37 +55,54 @@ impl PipelineStats {
     }
 }
 
-/// Walk the schedule through the two-stage (DMA ‖ PE) pipeline.
-pub fn simulate_pipeline(
-    scheme: Scheme,
-    shape: &GemmShape,
-    tiling: &Tiling,
-    cfg: &AcceleratorConfig,
-) -> PipelineStats {
-    let pe = cfg.pe_array();
-    let bw = cfg.dram_bandwidth;
-    let turn = cfg.dram_turnaround;
-    let mut stats = PipelineStats::default();
-    let mut last_dir: Option<DramDir> = None;
+/// Pipeline backend for the fused replay: two-stage (DMA ‖ PE) overlap
+/// with read↔write turnaround, resolved per step.
+pub struct PipelineSink {
+    pe: PeArray,
+    bw: u64,
+    turn: u64,
+    last_dir: Option<DramDir>,
+    /// Compute time of the previous step, which the current step's
+    /// transfer overlaps against (primed with the pipeline prologue).
+    prev_compute: u64,
+    stats: PipelineStats,
+}
 
-    // transfer time of the *next* step overlaps this step's compute: keep
-    // the previous compute time and charge max(0, xfer - prev_compute).
-    let mut prev_compute = pe.fill_latency; // pipeline prologue
+impl PipelineSink {
+    pub fn new(cfg: &AcceleratorConfig) -> PipelineSink {
+        let pe = cfg.pe_array();
+        PipelineSink {
+            prev_compute: pe.fill_latency,
+            pe,
+            bw: cfg.dram_bandwidth,
+            turn: cfg.dram_turnaround,
+            last_dir: None,
+            stats: PipelineStats::default(),
+        }
+    }
 
-    for_each_step(scheme, shape, tiling, |s| {
-        let mi = tile_extent(shape.m, tiling.tm, s.i);
-        let nr = tile_extent(shape.n, tiling.tn, s.r);
-        let kj = tile_extent(shape.k, tiling.tk, s.j);
+    pub fn finish(self) -> PipelineStats {
+        let mut stats = self.stats;
+        stats.total_cycles = self.pe.fill_latency + stats.compute_cycles + stats.stall_cycles;
+        stats
+    }
+}
+
+impl CostSink for PipelineSink {
+    fn on_step(&mut self, ctx: &StepCtx) {
+        let s = &ctx.step;
+        let (mi, nr, kj) = (ctx.mi, ctx.nr, ctx.kj);
 
         // --- transfer phase for this step ---------------------------------
         let mut read_words = 0u64;
         let mut write_words = 0u64;
         let mut switches = 0u64;
+        let last_dir = &mut self.last_dir;
         let mut dir = |d: DramDir, sw: &mut u64| {
-            if last_dir.is_some() && last_dir != Some(d) {
+            if last_dir.is_some() && *last_dir != Some(d) {
                 *sw += 1;
             }
-            last_dir = Some(d);
+            *last_dir = Some(d);
         };
         if s.scalar_traffic {
             let macs = mi * nr * kj;
@@ -86,7 +111,7 @@ pub fn simulate_pipeline(
             write_words += macs;
             dir(DramDir::Write, &mut switches);
         } else {
-            if s.load_input {
+            if s.load_input && !ctx.plan.input_resident {
                 read_words += mi * nr;
                 dir(DramDir::Read, &mut switches);
             }
@@ -98,28 +123,46 @@ pub fn simulate_pipeline(
                 read_words += mi * kj;
                 dir(DramDir::Read, &mut switches);
             }
-            if s.psum_spill || s.store_out {
+            if s.psum_spill || (s.store_out && !ctx.plan.output_resident) {
                 write_words += mi * kj;
                 dir(DramDir::Write, &mut switches);
             }
         }
-        let xfer = (read_words + write_words).div_ceil(bw) + switches * turn;
+        let xfer = (read_words + write_words).div_ceil(self.bw) + switches * self.turn;
 
         // --- overlap against the previous step's compute -------------------
-        let stall = xfer.saturating_sub(prev_compute);
+        let stall = xfer.saturating_sub(self.prev_compute);
         if stall > 0 {
-            stats.stall_cycles += stall;
-            stats.stalled_steps += 1;
+            self.stats.stall_cycles += stall;
+            self.stats.stalled_steps += 1;
         }
 
-        let compute = pe.tile_cycles(mi * nr * kj) - pe.fill_latency;
-        stats.compute_cycles += compute;
-        stats.steps += 1;
-        prev_compute = compute.max(1);
-    });
+        let compute = self.pe.tile_cycles(mi * nr * kj) - self.pe.fill_latency;
+        self.stats.compute_cycles += compute;
+        self.stats.steps += 1;
+        self.prev_compute = compute.max(1);
+    }
+}
 
-    stats.total_cycles = pe.fill_latency + stats.compute_cycles + stats.stall_cycles;
-    stats
+/// Walk the schedule through the two-stage (DMA ‖ PE) pipeline.
+pub fn simulate_pipeline(
+    scheme: Scheme,
+    shape: &GemmShape,
+    tiling: &Tiling,
+    cfg: &AcceleratorConfig,
+) -> PipelineStats {
+    simulate_pipeline_plan(&Plan::from_scheme(scheme, shape, tiling), cfg)
+}
+
+/// Pipeline timing of any [`Plan`] (fixed scheme or per-tile TAS), via
+/// the fused replay's sink interface.
+pub fn simulate_pipeline_plan(plan: &Plan, cfg: &AcceleratorConfig) -> PipelineStats {
+    let mut sink = PipelineSink::new(cfg);
+    {
+        let sinks: &mut [&mut dyn CostSink] = &mut [&mut sink];
+        replay(plan, sinks);
+    }
+    sink.finish()
 }
 
 #[cfg(test)]
@@ -185,5 +228,35 @@ mod tests {
             );
             assert!(s.stalled_steps <= s.steps);
         }
+    }
+
+    #[test]
+    fn per_tile_plans_get_stall_attribution() {
+        // The sink consumes any Plan through the fused replay — including
+        // mixed per-tile covers the old schedule-walking loop never saw.
+        let shape = GemmShape::new(2048, 64, 65);
+        let tiling = Tiling::square(16).with_kp(64).with_mp(32);
+        let plan = Plan::tas_per_tile(&shape, &tiling);
+        let stats = simulate_pipeline_plan(&plan, &cfg());
+        assert_eq!(stats.steps, plan.step_count());
+        assert!(stats.compute_cycles > 0);
+        assert_eq!(
+            stats.total_cycles,
+            cfg().pe_array().fill_latency + stats.compute_cycles + stats.stall_cycles
+        );
+    }
+
+    #[test]
+    fn residency_reduces_transfer_stalls() {
+        // A resident input removes its DRAM reads from the transfer phase:
+        // stalls can only go down.
+        let shape = GemmShape::new(384, 768, 768);
+        let tiling = Tiling::square(16);
+        let base = simulate_pipeline_plan(&Plan::tas_per_tile(&shape, &tiling), &cfg());
+        let resident = simulate_pipeline_plan(
+            &Plan::tas_with_residency(&shape, &tiling, true, false),
+            &cfg(),
+        );
+        assert!(resident.stall_cycles <= base.stall_cycles);
     }
 }

@@ -10,6 +10,8 @@
 //!   [`super::ema::simulate_ema`] uses;
 //! * [`TimingSink`] — transaction-level bank/row DRAM timing, sharing the
 //!   per-step logic of [`super::dram_trace`];
+//! * [`PipelineSink`] — step-level (DMA ‖ PE) stall attribution
+//!   ([`super::pipeline`]);
 //! * cycles and energy are closed forms over the EMA result, derived at
 //!   [`FusedCost`] assembly (`cycles_from_replay`, `plan_energy`) — no
 //!   second walk.
@@ -27,6 +29,7 @@ use crate::gemm::tile_extent;
 use crate::sim::cycles::{cycles_from_replay, CycleEstimate};
 use crate::sim::dram_trace::charge_timing_step;
 use crate::sim::ema::{charge_step, SimEma};
+use crate::sim::pipeline::{PipelineSink, PipelineStats};
 
 /// One schedule step with its resolved tile extents, as seen by sinks.
 pub struct StepCtx<'a> {
@@ -131,9 +134,12 @@ pub struct FusedCost {
     pub cycles: CycleEstimate,
     pub energy: EnergyCost,
     pub timing: DramTimingStats,
+    /// Step-level stall attribution ([`crate::sim::pipeline`]).
+    pub pipeline: PipelineStats,
 }
 
-/// Replay `plan` once and report EMA, cycles, energy and DRAM timing.
+/// Replay `plan` once and report EMA, cycles, energy, DRAM timing and
+/// step-level pipeline stalls.
 pub fn fused_cost(
     plan: &Plan,
     cfg: &AcceleratorConfig,
@@ -142,15 +148,23 @@ pub fn fused_cost(
 ) -> FusedCost {
     let mut ema_sink = EmaSink::new(cfg.dram());
     let mut timing_sink = TimingSink::new(plan, timing_cfg);
+    let mut pipeline_sink = PipelineSink::new(cfg);
     {
-        let sinks: &mut [&mut dyn CostSink] = &mut [&mut ema_sink, &mut timing_sink];
+        let sinks: &mut [&mut dyn CostSink] =
+            &mut [&mut ema_sink, &mut timing_sink, &mut pipeline_sink];
         replay(plan, sinks);
     }
     let ema = ema_sink.finish();
     let cycles = cycles_from_replay(&ema, &plan.shape, cfg);
     let (i, w, o) = ema.table2();
     let energy = energy.plan_energy(plan, i + w + o);
-    FusedCost { ema, cycles, energy, timing: timing_sink.finish() }
+    FusedCost {
+        ema,
+        cycles,
+        energy,
+        timing: timing_sink.finish(),
+        pipeline: pipeline_sink.finish(),
+    }
 }
 
 #[cfg(test)]
@@ -185,6 +199,10 @@ mod tests {
 
             let energy = em.gemm_energy(*scheme, &shape, &tiling);
             assert!((fused.energy.total_pj() - energy.total_pj()).abs() < 1e-6);
+
+            let pipeline =
+                crate::sim::pipeline::simulate_pipeline(*scheme, &shape, &tiling, &cfg);
+            assert_eq!(fused.pipeline, pipeline, "{scheme:?} pipeline");
         }
     }
 

@@ -1,0 +1,224 @@
+//! Per-device cost replay for sharded plans.
+//!
+//! One walk of the sharded step stream drives a [`CostSink`] per device
+//! (the same sink machinery as [`super::replay`]), so every device gets
+//! the full EMA → cycles → energy derivation over exactly the steps it
+//! executes; inter-chip traffic comes from the partition's closed form
+//! ([`ShardedPlan::link_traffic`]) and is costed by the
+//! [`Interconnect`] primitives.
+//!
+//! Invariants (property-tested in `rust/tests/shard_conservation.rs`):
+//! summed per-device EMA equals the plan's EMA word-for-word, and link
+//! traffic is additive on top — a sharded plan never undercuts its
+//! unsharded cost.
+
+use crate::arch::Interconnect;
+use crate::config::AcceleratorConfig;
+use crate::dataflow::shard::{LinkTraffic, ShardAxis, ShardedPlan};
+use crate::energy::{EnergyCost, EnergyModel};
+use crate::gemm::tile_extent;
+use crate::sim::cycles::{cycles_from_parts, CycleEstimate};
+use crate::sim::ema::SimEma;
+use crate::sim::replay::{CostSink, EmaSink, StepCtx};
+
+/// One device's share of a sharded plan, fully costed.
+#[derive(Clone, Debug)]
+pub struct DeviceCost {
+    pub device: usize,
+    /// DRAM words this device's steps consume (compute EMA).
+    pub ema: SimEma,
+    /// MACs this device executes.
+    pub macs: u64,
+    pub cycles: CycleEstimate,
+    pub energy: EnergyCost,
+    /// Words this device receives over links.
+    pub link_in_words: u64,
+    /// Words this device sends over links.
+    pub link_out_words: u64,
+}
+
+/// Cost report of one sharded GEMM.
+#[derive(Clone, Debug)]
+pub struct ShardCost {
+    pub per_device: Vec<DeviceCost>,
+    pub link: LinkTraffic,
+    /// Serialized link time: operand point-to-point + psum reduce.
+    pub link_cycles: u64,
+    pub link_energy_pj: f64,
+}
+
+impl ShardCost {
+    /// Total DRAM words across devices (== the plan's EMA total).
+    pub fn dram_words(&self) -> u64 {
+        self.per_device.iter().map(|d| d.ema.total_words()).sum()
+    }
+
+    pub fn link_words(&self) -> u64 {
+        self.link.total()
+    }
+
+    /// Slowest device's cycle estimate — the shard's critical path before
+    /// link serialization.
+    pub fn max_device_cycles(&self) -> u64 {
+        self.per_device
+            .iter()
+            .map(|d| d.cycles.total_cycles)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Whole-shard latency: slowest device plus serialized link time.
+    pub fn total_cycles(&self) -> u64 {
+        self.max_device_cycles() + self.link_cycles
+    }
+
+    /// Total energy: per-device DRAM/SRAM/MAC plus link transfer energy.
+    pub fn total_energy_pj(&self) -> f64 {
+        self.per_device.iter().map(|d| d.energy.total_pj()).sum::<f64>()
+            + self.link_energy_pj
+    }
+}
+
+/// Replay a sharded plan once, dispatching each step to its device's
+/// [`EmaSink`], and assemble the per-device and link cost report.
+pub fn sharded_fused_cost(
+    sp: &ShardedPlan,
+    cfg: &AcceleratorConfig,
+    energy: &EnergyModel,
+    icx: &Interconnect,
+) -> ShardCost {
+    let d = sp.devices as usize;
+    let mut sinks: Vec<EmaSink> = (0..d).map(|_| EmaSink::new(cfg.dram())).collect();
+    let mut macs = vec![0u64; d];
+    let (shape, tiling) = (sp.plan.shape, sp.plan.tiling);
+    sp.for_each_step_device(|dev, step| {
+        let ctx = StepCtx {
+            plan: &sp.plan,
+            step,
+            mi: tile_extent(shape.m, tiling.tm, step.i),
+            nr: tile_extent(shape.n, tiling.tn, step.r),
+            kj: tile_extent(shape.k, tiling.tk, step.j),
+        };
+        macs[dev] += ctx.mi * ctx.nr * ctx.kj;
+        sinks[dev].on_step(&ctx);
+    });
+
+    let link = sp.link_traffic();
+    let mut link_cycles = 0u64;
+    if link.operand_words > 0 {
+        link_cycles += icx.p2p_cycles(link.operand_words);
+    }
+    if link.reduce_words > 0 {
+        link_cycles += icx.reduce_cycles(link.reduce_words, sp.devices);
+    }
+    let link_energy_pj = icx.transfer_energy_pj(link.total());
+
+    let per_device = sinks
+        .into_iter()
+        .enumerate()
+        .map(|(dev, sink)| {
+            let ema = sink.finish();
+            let cycles = cycles_from_parts(macs[dev], &ema, cfg);
+            let (i, w, o) = ema.table2();
+            DeviceCost {
+                device: dev,
+                cycles,
+                energy: energy.traffic_energy(macs[dev], i + w + o),
+                macs: macs[dev],
+                link_in_words: link.per_device_in[dev],
+                link_out_words: link.per_device_out[dev],
+                ema,
+            }
+        })
+        .collect();
+
+    ShardCost { per_device, link, link_cycles, link_energy_pj }
+}
+
+/// Convenience: is the partition a psum-reducing contraction split?
+pub fn is_reduce_shard(sp: &ShardedPlan) -> bool {
+    sp.axis == ShardAxis::Contraction
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::shard::{shard_gemm, ShardSpec};
+    use crate::dataflow::Plan;
+    use crate::gemm::{GemmShape, Tiling};
+
+    fn cost(shape: GemmShape, devices: u64, axis: ShardAxis) -> (ShardedPlan, ShardCost) {
+        let tiling = Tiling::square(16);
+        let sp = shard_gemm(&shape, &tiling, ShardSpec::new(devices, axis), 0.0);
+        let cfg = AcceleratorConfig::default();
+        let c = sharded_fused_cost(&sp, &cfg, &EnergyModel::default(), &Interconnect::default());
+        (sp, c)
+    }
+
+    #[test]
+    fn replayed_device_emas_match_closed_form() {
+        for axis in [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Contraction] {
+            let (sp, c) = cost(GemmShape::new(130, 70, 90), 3, axis);
+            let closed = sp.device_emas();
+            assert_eq!(c.per_device.len(), closed.len());
+            for (dc, e) in c.per_device.iter().zip(&closed) {
+                assert_eq!(
+                    dc.ema.table2(),
+                    (e.input, e.weight, e.output),
+                    "device {} {axis:?}",
+                    dc.device
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn device_macs_sum_to_the_gemm() {
+        let shape = GemmShape::new(120, 96, 88);
+        for axis in [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Contraction] {
+            let (_, c) = cost(shape, 4, axis);
+            let total: u64 = c.per_device.iter().map(|d| d.macs).sum();
+            assert_eq!(total, shape.macs(), "{axis:?}");
+        }
+    }
+
+    #[test]
+    fn one_device_matches_the_unsharded_fused_pass() {
+        use crate::arch::dram_timing::DramTimingConfig;
+        use crate::sim::replay::fused_cost;
+        let shape = GemmShape::new(96, 128, 160);
+        let tiling = Tiling::square(16);
+        let cfg = AcceleratorConfig::default();
+        let (_, c) = cost(shape, 1, ShardAxis::Auto);
+        let plan = Plan::tas_per_tile(&shape, &tiling);
+        let fused = fused_cost(&plan, &cfg, &EnergyModel::default(), DramTimingConfig::default());
+        assert_eq!(c.per_device.len(), 1);
+        assert_eq!(c.per_device[0].ema, fused.ema);
+        assert_eq!(c.per_device[0].cycles, fused.cycles);
+        assert_eq!(c.link_words(), 0);
+        assert_eq!(c.link_cycles, 0);
+    }
+
+    #[test]
+    fn sharding_splits_the_critical_path() {
+        // 4-way row shard of an IS-friendly GEMM: the slowest device does
+        // about a quarter of the work.
+        let shape = GemmShape::new(256, 768, 768);
+        let (_, c1) = cost(shape, 1, ShardAxis::Rows);
+        let (_, c4) = cost(shape, 4, ShardAxis::Rows);
+        assert!(c4.max_device_cycles() < c1.max_device_cycles());
+        // but link time + conserved EMA mean total work never shrinks
+        assert_eq!(c4.dram_words(), c1.dram_words());
+        assert!(c4.total_energy_pj() > c1.total_energy_pj());
+    }
+
+    #[test]
+    fn reduce_shard_reports_link_cycles() {
+        let shape = GemmShape::new(128, 512, 128);
+        let (sp, c) = cost(shape, 4, ShardAxis::Contraction);
+        assert!(is_reduce_shard(&sp));
+        assert!(c.link.reduce_words > 0);
+        assert!(c.link_cycles > 0);
+        assert!(c.link_energy_pj > 0.0);
+    }
+}

@@ -106,6 +106,104 @@ fn simulate_json_lists_all_schemes() {
 }
 
 #[test]
+fn shard_reports_per_device_costs_and_link_traffic() {
+    let (ok, stdout, stderr) =
+        tas(&["shard", "--model", "bert-base", "--seq", "512", "--devices", "4"]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("sharded across 4 devices"));
+    assert!(stdout.contains("per-device totals"));
+    assert!(stdout.contains("inter-chip"));
+    assert!(stdout.contains("layer pipeline"));
+}
+
+#[test]
+fn shard_json_conserves_ema_and_counts_link_words() {
+    let (ok, stdout, stderr) = tas(&[
+        "shard", "--model", "bert-base", "--seq", "512", "--devices", "4", "--json",
+    ]);
+    assert!(ok, "{stderr}");
+    let doc = tas::util::json::Json::parse(stdout.trim()).expect("valid json");
+    assert_eq!(doc.get("devices").unwrap().as_u64(), Some(4));
+    let totals = doc.get("totals").unwrap();
+    let dram = totals.get("dram_words").unwrap().as_u64().unwrap();
+    let unsharded = totals.get("unsharded_dram_words").unwrap().as_u64().unwrap();
+    // conservation: the partition moves no extra DRAM words
+    assert_eq!(dram, unsharded);
+    // but chips have to talk
+    assert!(totals.get("inter_chip_words").unwrap().as_u64().unwrap() > 0);
+    let per_dev = totals.get("per_device_ema_words").unwrap().as_arr().unwrap();
+    assert_eq!(per_dev.len(), 4);
+    let sum: u64 = per_dev.iter().map(|v| v.as_u64().unwrap()).sum();
+    assert_eq!(sum, dram);
+    // every gemm reports per-device EMA/cycles/energy
+    let gemms = doc.get("gemms").unwrap().as_arr().unwrap();
+    assert!(!gemms.is_empty());
+    for g in gemms {
+        let devs = g.get("per_device").unwrap().as_arr().unwrap();
+        assert_eq!(devs.len(), 4);
+        for d in devs {
+            assert!(d.get("cycles").unwrap().as_u64().is_some());
+            assert!(d.get("energy_pj").unwrap().as_f64().is_some());
+        }
+    }
+    // the layer pipeline places stages and prices the handoffs
+    let lp = doc.get("layer_pipeline").unwrap();
+    assert!(!lp.get("placement").unwrap().as_arr().unwrap().is_empty());
+    assert!(lp.get("handoff_words").unwrap().as_u64().is_some());
+}
+
+#[test]
+fn shard_single_device_is_free_of_link_traffic() {
+    let (ok, stdout, stderr) = tas(&[
+        "shard", "--model", "bert-base", "--seq", "64", "--devices", "1", "--json",
+    ]);
+    assert!(ok, "{stderr}");
+    let doc = tas::util::json::Json::parse(stdout.trim()).expect("valid json");
+    let totals = doc.get("totals").unwrap();
+    assert_eq!(totals.get("inter_chip_words").unwrap().as_u64(), Some(0));
+    assert_eq!(
+        totals.get("dram_words").unwrap().as_u64().unwrap(),
+        totals.get("unsharded_dram_words").unwrap().as_u64().unwrap()
+    );
+}
+
+#[test]
+fn shard_loads_interconnect_from_config_file() {
+    let cfg = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/small8x8.toml");
+    let (ok, stdout, stderr) = tas(&[
+        "shard", "--model", "bert-base", "--seq", "64", "--devices", "2", "--config", cfg,
+        "--json",
+    ]);
+    assert!(ok, "{stderr}");
+    let doc = tas::util::json::Json::parse(stdout.trim()).expect("valid json");
+    // the [interconnect] section of the preset drives the link model
+    assert_eq!(doc.get("link_bandwidth").unwrap().as_u64(), Some(8));
+    // a CLI flag still overrides the file
+    let (ok, stdout, _) = tas(&[
+        "shard", "--model", "bert-base", "--seq", "64", "--devices", "2", "--config", cfg,
+        "--link-bw", "4", "--json",
+    ]);
+    assert!(ok);
+    let doc = tas::util::json::Json::parse(stdout.trim()).expect("valid json");
+    assert_eq!(doc.get("link_bandwidth").unwrap().as_u64(), Some(4));
+}
+
+#[test]
+fn trace_json_emits_step_stream() {
+    let (ok, stdout, _) = tas(&[
+        "trace", "--scheme", "is-os", "--m", "64", "--n", "64", "--k", "64", "--limit", "5",
+        "--json",
+    ]);
+    assert!(ok);
+    let doc = tas::util::json::Json::parse(stdout.trim()).expect("valid json");
+    assert_eq!(doc.get("scheme").unwrap().as_str(), Some("is-os"));
+    assert_eq!(doc.get("total_steps").unwrap().as_u64(), Some(64));
+    let steps = doc.get("steps").unwrap().as_arr().unwrap();
+    assert_eq!(steps.len(), 5);
+    assert_eq!(steps[0].get("load_input"), Some(&tas::util::json::Json::Bool(true)));
+}
+
+#[test]
 fn sweep_json_is_machine_diffable() {
     let (ok, stdout, _) = tas(&["sweep", "--model", "bert-base", "--seqs", "64,512", "--json"]);
     assert!(ok);

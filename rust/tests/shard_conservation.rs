@@ -1,0 +1,232 @@
+//! Shard conservation: the acceptance properties of multi-accelerator
+//! sharding ([`tas::dataflow::shard`]).
+//!
+//! (a) the per-device compute EMA sums to the unsharded EMA word-for-word
+//!     (every schedule step runs on exactly one device);
+//! (b) sharded total cost (DRAM + inter-chip words) never undercuts the
+//!     unsharded cost — link traffic is additive, with no modeled overlap
+//!     credit;
+//! (c) a 1-device shard is byte-identical to the unsharded plan.
+//!
+//! Zoo-scale checks use the closed forms (`device_emas`/`link_traffic`);
+//! the closed forms themselves are pinned to a replayed per-device pass
+//! on randomized small shapes.
+
+use tas::config::AcceleratorConfig;
+use tas::dataflow::shard::{shard_gemm, ShardAxis, ShardSpec};
+use tas::dataflow::{EmaBreakdown, Plan};
+use tas::energy::EnergyModel;
+use tas::gemm::{GemmShape, Tiling};
+use tas::models::zoo;
+use tas::sim::sharded_fused_cost;
+use tas::util::check::property;
+use tas::util::prng::Rng;
+
+use tas::arch::Interconnect;
+
+/// The three bench sequence lengths the acceptance criteria pin.
+const BENCH_SEQS: [u64; 3] = [64, 512, 4096];
+const DEVICE_COUNTS: [u64; 4] = [1, 2, 4, 8];
+const AXES: [ShardAxis; 4] = [
+    ShardAxis::Rows,
+    ShardAxis::Cols,
+    ShardAxis::Contraction,
+    ShardAxis::Auto,
+];
+
+fn sum_emas(emas: &[EmaBreakdown]) -> EmaBreakdown {
+    let mut total = EmaBreakdown::default();
+    for e in emas {
+        total.input += e.input;
+        total.weight += e.weight;
+        total.output += e.output;
+    }
+    total
+}
+
+/// (a) across the model zoo at the bench sequence lengths: summed
+/// per-device EMA equals the unsharded per-tile TAS EMA exactly, on every
+/// axis, for 1/2/4/8 devices.  Closed forms only — gpt-3's LM head at seq
+/// 4096 has ~6e8 steps, so a replayed check would never finish.
+#[test]
+fn shard_conserves_ema_across_the_zoo() {
+    let tiling = Tiling::square(16);
+    for model in zoo::all_models() {
+        for seq in BENCH_SEQS {
+            for g in model.linear_gemms(seq) {
+                let unsharded = Plan::tas_per_tile(&g.shape, &tiling).ema();
+                for axis in AXES {
+                    for devices in DEVICE_COUNTS {
+                        let sp = shard_gemm(
+                            &g.shape,
+                            &tiling,
+                            ShardSpec::new(devices, axis),
+                            0.0,
+                        );
+                        let total = sum_emas(&sp.device_emas());
+                        assert_eq!(
+                            total, unsharded,
+                            "{} {} @ seq {seq} {axis:?} d={devices}",
+                            model.name, g.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// (b) sharded total cost >= unsharded cost: DRAM words are conserved and
+/// inter-chip words are additive.  Also holds for link-aware plans, whose
+/// DRAM EMA may exceed the unsharded optimum (the chooser trades local
+/// words for link words but never beats the unsharded lower bound).
+#[test]
+fn sharded_total_cost_never_undercuts_unsharded() {
+    let tiling = Tiling::square(16);
+    for model in zoo::all_models() {
+        for seq in BENCH_SEQS {
+            for g in model.linear_gemms(seq) {
+                let unsharded = Plan::tas_per_tile(&g.shape, &tiling).ema().total();
+                for link_aware in [false, true] {
+                    for devices in DEVICE_COUNTS {
+                        let spec = ShardSpec {
+                            devices,
+                            axis: ShardAxis::Auto,
+                            link_aware,
+                        };
+                        let sp = shard_gemm(&g.shape, &tiling, spec, 2.0);
+                        let dram = sum_emas(&sp.device_emas()).total();
+                        let link = sp.link_traffic().total();
+                        assert!(
+                            dram + link >= unsharded,
+                            "{} {} @ seq {seq} d={devices} aware={link_aware}: \
+                             {dram}+{link} < {unsharded}",
+                            model.name,
+                            g.name
+                        );
+                        assert!(dram >= unsharded, "DRAM side alone never undercuts");
+                        if devices == 1 {
+                            assert_eq!(dram, unsharded);
+                            assert_eq!(link, 0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// (c) a 1-device shard is byte-identical to the unsharded plan: same
+/// body, same residency, and the same step stream flag-for-flag.
+#[test]
+fn one_device_shard_is_byte_identical() {
+    let tiling = Tiling::square(16);
+    for model in zoo::all_models() {
+        let seq = 512;
+        for g in model.linear_gemms(seq) {
+            let sp = shard_gemm(&g.shape, &tiling, ShardSpec::new(1, ShardAxis::Auto), 0.0);
+            let unsharded = Plan::tas_per_tile(&g.shape, &tiling);
+            assert_eq!(sp.plan, unsharded, "{} {}", model.name, g.name);
+        }
+    }
+    // step-stream identity, spot-checked at a replayable size
+    let shape = GemmShape::new(96, 80, 112);
+    let sp = shard_gemm(&shape, &tiling, ShardSpec::new(1, ShardAxis::Auto), 0.0);
+    let unsharded = Plan::tas_per_tile(&shape, &tiling);
+    let mut shard_steps = Vec::new();
+    sp.for_each_step_device(|dev, s| {
+        assert_eq!(dev, 0);
+        shard_steps.push(s);
+    });
+    let mut plain_steps = Vec::new();
+    unsharded.for_each_step(|s| plain_steps.push(s));
+    assert_eq!(shard_steps, plain_steps);
+}
+
+/// The closed forms are honest: a replayed per-device pass (through the
+/// fused CostSink machinery) reproduces `device_emas` exactly on
+/// randomized shapes, every axis, ragged edges included.
+#[test]
+fn closed_form_device_emas_match_replayed_pass() {
+    let cfg = AcceleratorConfig::default();
+    let em = EnergyModel::default();
+    let icx = Interconnect::default();
+    property("sharded replay == closed form", 60, |rng: &mut Rng| {
+        let shape = GemmShape::new(
+            rng.gen_in(1, 200),
+            rng.gen_in(1, 200),
+            rng.gen_in(1, 200),
+        );
+        let t = *rng.choose(&[8u64, 16]);
+        let mut tiling = Tiling::square(t);
+        if rng.gen_range(2) == 0 {
+            tiling = tiling
+                .with_kp(rng.gen_in(1, 5) * t)
+                .with_mp(rng.gen_in(1, 5) * t);
+        }
+        let devices = *rng.choose(&[1u64, 2, 3, 4, 8]);
+        let axis = *rng.choose(&AXES);
+        let sp = shard_gemm(&shape, &tiling, ShardSpec::new(devices, axis), 0.0);
+        let cost = sharded_fused_cost(&sp, &cfg, &em, &icx);
+        let closed = sp.device_emas();
+        assert_eq!(cost.per_device.len(), closed.len());
+        for (dc, e) in cost.per_device.iter().zip(&closed) {
+            assert_eq!(
+                dc.ema.table2(),
+                (e.input, e.weight, e.output),
+                "{shape:?} d={devices} {axis:?} device {}",
+                dc.device
+            );
+        }
+        // and the replayed MACs partition the GEMM
+        let macs: u64 = cost.per_device.iter().map(|d| d.macs).sum();
+        assert_eq!(macs, shape.macs());
+    });
+}
+
+/// Contraction splits pay one full-output psum reduce per extra active
+/// device and nothing point-to-point; row/col splits never reduce.
+#[test]
+fn link_traffic_matches_axis_semantics() {
+    let tiling = Tiling::square(16);
+    for model in zoo::all_models() {
+        let seq = 512;
+        for g in model.linear_gemms(seq) {
+            for devices in [2u64, 4] {
+                let sp = shard_gemm(
+                    &g.shape,
+                    &tiling,
+                    ShardSpec::new(devices, ShardAxis::Contraction),
+                    0.0,
+                );
+                let lt = sp.link_traffic();
+                assert_eq!(lt.operand_words, 0, "{} {}", model.name, g.name);
+                assert_eq!(lt.reduce_words, (devices - 1) * g.shape.output_words());
+
+                let auto =
+                    shard_gemm(&g.shape, &tiling, ShardSpec::new(devices, ShardAxis::Auto), 0.0);
+                assert_eq!(auto.link_traffic().reduce_words, 0);
+            }
+        }
+    }
+}
+
+/// Per-device in/out ledgers balance: every link word leaves one device
+/// and arrives at another.
+#[test]
+fn link_ledgers_balance() {
+    property("link ledger", 60, |rng: &mut Rng| {
+        let shape = GemmShape::new(
+            rng.gen_in(1, 400),
+            rng.gen_in(1, 400),
+            rng.gen_in(1, 400),
+        );
+        let tiling = Tiling::square(16);
+        let devices = *rng.choose(&[2u64, 3, 4, 8]);
+        let axis = *rng.choose(&AXES);
+        let sp = shard_gemm(&shape, &tiling, ShardSpec::new(devices, axis), 0.0);
+        let lt = sp.link_traffic();
+        assert_eq!(lt.per_device_in.iter().sum::<u64>(), lt.total());
+        assert_eq!(lt.per_device_out.iter().sum::<u64>(), lt.total());
+    });
+}
