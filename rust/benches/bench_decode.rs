@@ -1,0 +1,89 @@
+//! Bench E9 — KV-cache-aware decode planning across the model zoo.
+//!
+//! For every zoo model at batch {1, 8, 32}, plan a decode trajectory
+//! (prefill 64, 32 steps) and report per-token decode EMA under the
+//! cache-resident per-tile plan vs per-GEMM TAS, the resident cache rows,
+//! and the reduction — asserting the plan never loses (the acceptance
+//! property, also pinned in `tests/decode_invariants.rs`).  A second
+//! table shows the long-context regime where cache residency carries the
+//! win: prefill 512 with a 4 MiW SRAM.  Closed forms only, so the sweep
+//! is instant; the replayed equivalence is property-tested.
+
+use tas::dataflow::{DecodeDims, DecodePlan};
+use tas::gemm::Tiling;
+use tas::models::zoo;
+use tas::util::bench::{Bench, Throughput};
+use tas::util::table::{pct, sci, Table};
+
+fn sweep(
+    title: &str,
+    models: &[tas::models::ModelSpec],
+    batches: &[u64],
+    prefill: u64,
+    steps: u64,
+    sram: u64,
+) {
+    let tiling = Tiling::square(16);
+    let mut t = Table::new(
+        title,
+        &["model", "batch", "EMA/token", "per-GEMM TAS", "reduction", "resident rows"],
+    );
+    for model in models {
+        for &batch in batches {
+            let dp = DecodePlan::plan(model, prefill, steps, batch, &tiling, sram);
+            assert!(
+                dp.decode_ema() <= dp.per_gemm_tas_decode_total(),
+                "{} batch {batch}: decode plan must never lose to per-GEMM TAS",
+                model.name
+            );
+            assert!(dp.peak_sram_claim() <= dp.budget, "{}", model.name);
+            t.row(vec![
+                model.name.to_string(),
+                batch.to_string(),
+                sci(dp.per_token_ema()),
+                sci(dp.per_token_per_gemm_tas()),
+                pct(dp.reduction_vs_per_gemm()),
+                dp.resident_rows.to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.to_text());
+}
+
+fn main() {
+    sweep(
+        "Decode EMA per generated token (prefill 64, 32 steps, 256 KiW SRAM)",
+        &zoo::all_models(),
+        &[1, 8, 32],
+        64,
+        32,
+        256 * 1024,
+    );
+    sweep(
+        "Long-context decode (prefill 512, 32 steps, 4 MiW SRAM): cache residency regime",
+        &[zoo::bert_base(), zoo::bert_large(), zoo::wav2vec2_large()],
+        &[1, 8],
+        512,
+        32,
+        4 * 1024 * 1024,
+    );
+
+    // Planning throughput: the coordinator plans a decode step per
+    // dispatched batch, so one steady-state step must stay cheap.
+    let mut b = Bench::new("decode");
+    let tiling = Tiling::square(16);
+    let dims = DecodeDims::of(&zoo::bert_base());
+    for batch in [1u64, 8, 32] {
+        b.run(
+            &format!("plan-step/bert-base/cache96/b{batch}"),
+            Throughput::Elements(1),
+            || DecodePlan::plan_step(&dims, batch, 96, &tiling, 256 * 1024).total_ema(),
+        );
+    }
+    b.run(
+        "plan-trajectory/bert-base/prefill64/steps32/b8",
+        Throughput::Elements(32),
+        || DecodePlan::plan(&zoo::bert_base(), 64, 32, 8, &tiling, 256 * 1024).decode_ema(),
+    );
+    b.write_csv();
+}

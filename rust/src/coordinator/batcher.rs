@@ -6,6 +6,13 @@
 //! fights), accumulates per-seq queues, and flushes a batch when the
 //! largest compiled batch size for that seq fills up or the oldest
 //! request exceeds the linger deadline.
+//!
+//! Besides the prefill lane, the batcher carries a **decode lane**: each
+//! in-flight autoregressive sequence is a [`DecodeSlot`] awaiting its
+//! next single-token step.  Decode slots are always ready (every step is
+//! on a request's latency path) and ride the same dispatch as a prefill
+//! batch — continuous batching, planned as one mixed bucket by
+//! [`super::decisions::mixed_bucket_plan`].
 
 use super::request::Request;
 use std::collections::BTreeMap;
@@ -46,12 +53,38 @@ impl Batch {
     }
 }
 
+/// One in-flight autoregressive sequence awaiting its next decode step.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DecodeSlot {
+    pub id: u64,
+    /// Cache positions the next step attends (prompt + generated so far).
+    pub cache_len: u64,
+}
+
+/// A mixed continuous-batching dispatch: at most one prefill batch plus
+/// the decode slots that ride along with it.
+#[derive(Clone, Debug)]
+pub struct MixedBatch {
+    pub prefill: Option<Batch>,
+    pub decode: Vec<DecodeSlot>,
+}
+
+impl MixedBatch {
+    /// Largest cache length among the decode slots (the decode bucket's
+    /// planning length — shorter caches pad up to it).
+    pub fn max_cache_len(&self) -> u64 {
+        self.decode.iter().map(|s| s.cache_len).max().unwrap_or(0)
+    }
+}
+
 /// The batcher: per-seq pending queues over a fixed bucket set.
 #[derive(Debug)]
 pub struct Batcher {
     /// seq -> batch sizes available (ascending), artifact per (b, s).
     by_seq: BTreeMap<u64, Vec<(u64, String)>>,
     pending: BTreeMap<u64, Vec<Request>>,
+    /// In-flight sequences awaiting their next decode step (FIFO).
+    decode_pending: Vec<DecodeSlot>,
     /// Flush a non-full batch once its oldest request waited this long.
     pub linger: Duration,
 }
@@ -67,7 +100,12 @@ impl Batcher {
         for v in by_seq.values_mut() {
             v.sort_by_key(|(b, _)| *b);
         }
-        Ok(Batcher { by_seq, pending: BTreeMap::new(), linger })
+        Ok(Batcher {
+            by_seq,
+            pending: BTreeMap::new(),
+            decode_pending: Vec::new(),
+            linger,
+        })
     }
 
     /// Largest request length any bucket can serve.
@@ -99,6 +137,29 @@ impl Batcher {
 
     pub fn pending_count(&self) -> usize {
         self.pending.values().map(|v| v.len()).sum()
+    }
+
+    /// Enqueue an in-flight sequence for its next decode step.
+    pub fn push_decode(&mut self, slot: DecodeSlot) {
+        self.decode_pending.push(slot);
+    }
+
+    pub fn decode_pending_count(&self) -> usize {
+        self.decode_pending.len()
+    }
+
+    /// Pop one mixed dispatch: a ready prefill batch (if any) plus up to
+    /// `max_decode` decode slots.  Decode slots never linger — each one
+    /// is a token on a request's latency path — so the pop is non-empty
+    /// whenever either lane has ready work.
+    pub fn pop_mixed_ready(&mut self, now: Instant, max_decode: usize) -> Option<MixedBatch> {
+        let prefill = self.pop_ready(now);
+        let take = self.decode_pending.len().min(max_decode);
+        if prefill.is_none() && take == 0 {
+            return None;
+        }
+        let decode: Vec<DecodeSlot> = self.decode_pending.drain(..take).collect();
+        Some(MixedBatch { prefill, decode })
     }
 
     /// Pop at most one ready batch.  A seq queue is ready when it can
@@ -138,6 +199,13 @@ impl Batcher {
             requests: reqs,
             formed: now,
         })
+    }
+
+    /// Hand back every pending decode slot (shutdown / draining) — the
+    /// decode lane counterpart of [`Batcher::drain`], so in-flight
+    /// sequences are never silently dropped.
+    pub fn drain_decode(&mut self) -> Vec<DecodeSlot> {
+        std::mem::take(&mut self.decode_pending)
     }
 
     /// Flush everything regardless of deadlines (shutdown / draining).
@@ -227,15 +295,64 @@ mod tests {
     }
 
     #[test]
+    fn decode_slots_ride_along_with_prefill_batches() {
+        let mut b = batcher();
+        for i in 0..8 {
+            b.push(req(i, 50)).unwrap();
+        }
+        for i in 0..3u64 {
+            b.push_decode(DecodeSlot { id: 100 + i, cache_len: 64 + i });
+        }
+        assert_eq!(b.decode_pending_count(), 3);
+        let mixed = b.pop_mixed_ready(Instant::now(), 8).unwrap();
+        let prefill = mixed.prefill.as_ref().unwrap();
+        assert_eq!(prefill.requests.len(), 8);
+        assert_eq!(mixed.decode.len(), 3);
+        assert_eq!(mixed.max_cache_len(), 66);
+        assert_eq!(b.decode_pending_count(), 0);
+    }
+
+    #[test]
+    fn decode_slots_never_linger() {
+        // No prefill demand at all: a lone decode slot still pops.
+        let mut b = batcher();
+        b.push_decode(DecodeSlot { id: 1, cache_len: 32 });
+        let mixed = b.pop_mixed_ready(Instant::now(), 4).unwrap();
+        assert!(mixed.prefill.is_none());
+        assert_eq!(mixed.decode.len(), 1);
+        // both lanes empty: nothing to pop
+        assert!(b.pop_mixed_ready(Instant::now(), 4).is_none());
+    }
+
+    #[test]
+    fn decode_pop_respects_the_batch_cap() {
+        let mut b = batcher();
+        for i in 0..10u64 {
+            b.push_decode(DecodeSlot { id: i, cache_len: 16 });
+        }
+        let mixed = b.pop_mixed_ready(Instant::now(), 4).unwrap();
+        assert_eq!(mixed.decode.len(), 4);
+        assert_eq!(b.decode_pending_count(), 6);
+        // FIFO order preserved
+        assert_eq!(mixed.decode[0].id, 0);
+        assert_eq!(mixed.decode[3].id, 3);
+    }
+
+    #[test]
     fn drain_empties_all_queues() {
         let mut b = batcher();
         for i in 0..3 {
             b.push(req(i, 20)).unwrap();
         }
         b.push(req(9, 100)).unwrap();
+        b.push_decode(DecodeSlot { id: 50, cache_len: 40 });
         let batches = b.drain();
         assert_eq!(b.pending_count(), 0);
         let total: usize = batches.iter().map(|x| x.requests.len()).sum();
         assert_eq!(total, 4);
+        // the decode lane drains through its own exit
+        let slots = b.drain_decode();
+        assert_eq!(slots.len(), 1);
+        assert_eq!(b.decode_pending_count(), 0);
     }
 }

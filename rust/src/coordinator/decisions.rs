@@ -15,7 +15,7 @@
 //! both (the per-GEMM rule is the compile-path contract; the layer plan is
 //! what the accelerator-side accounting reports as achievable EMA).
 
-use crate::dataflow::{LayerPlan, Scheme, StageSpec};
+use crate::dataflow::{DecodeDims, DecodePlan, DecodeStepPlan, LayerPlan, Scheme, StageSpec};
 use crate::gemm::{GemmShape, Tiling};
 use crate::runtime::Manifest;
 use anyhow::Result;
@@ -62,6 +62,7 @@ pub fn bucket_stages(
         count,
         consumes_previous: consumes,
         shares_input_with_previous: shares,
+        cache: None,
     };
     let mut v = vec![
         stage("q", GemmShape::new(tokens, hidden, hidden), n_layers, false, false),
@@ -131,6 +132,119 @@ pub fn sharded_layer_plan_for_bucket(
     let stages = bucket_stages(tokens, hidden, ffn, vocab, n_layers);
     let placement = crate::dataflow::place_stages(&stages, devices);
     LayerPlan::plan_placed(stages, tokens, tiling, sram_words, placement)
+}
+
+/// Decode dims from raw manifest model entries.  `heads` defaults to one
+/// head per 64 hidden lanes when the manifest predates the field, walked
+/// down to the nearest divisor of `hidden` (1 always qualifies) so the
+/// repaired dims can never trip the `hidden % heads == 0` invariant.
+pub fn decode_dims(hidden: u64, ffn: u64, vocab: u64, n_layers: u64, heads: u64) -> DecodeDims {
+    let heads = if heads > 0 && hidden % heads == 0 {
+        heads
+    } else {
+        let mut h = (hidden / 64).max(1);
+        while hidden % h != 0 {
+            h -= 1;
+        }
+        h
+    };
+    DecodeDims { hidden, ffn, layers: n_layers.max(1), heads, vocab }
+}
+
+/// Decode-bucket plan: one steady-state autoregressive step for `batch`
+/// in-flight sequences at `cache_len` cache positions, with cache rows
+/// SRAM-resident under the budget ([`DecodePlan::plan_step`]).
+#[allow(clippy::too_many_arguments)]
+pub fn decode_plan_for_bucket(
+    batch: u64,
+    cache_len: u64,
+    hidden: u64,
+    ffn: u64,
+    vocab: u64,
+    n_layers: u64,
+    heads: u64,
+    tiling: &Tiling,
+    sram_words: u64,
+) -> DecodeStepPlan {
+    DecodePlan::plan_step(
+        &decode_dims(hidden, ffn, vocab, n_layers, heads),
+        batch,
+        cache_len,
+        tiling,
+        sram_words,
+    )
+}
+
+/// One continuous-batching bucket plan: a prefill chunk and a decode step
+/// priced together.  When both phases share the dispatch, the SRAM is
+/// split evenly between the prefill residency chain and the decode cache
+/// — neither planner may claim words the other holds.
+#[derive(Clone, Debug)]
+pub struct MixedBucketPlan {
+    pub prefill: Option<LayerPlan>,
+    pub decode: Option<DecodeStepPlan>,
+}
+
+impl MixedBucketPlan {
+    /// DRAM words of the whole mixed dispatch.
+    pub fn total_ema(&self) -> u64 {
+        self.prefill.as_ref().map(|p| p.total_ema()).unwrap_or(0)
+            + self.decode.as_ref().map(|d| d.total_ema()).unwrap_or(0)
+    }
+
+    /// The per-GEMM TAS baseline for the same dispatch.
+    pub fn per_gemm_tas_total(&self) -> u64 {
+        self.prefill
+            .as_ref()
+            .map(|p| p.per_gemm_tas_total())
+            .unwrap_or(0)
+            + self
+                .decode
+                .as_ref()
+                .map(|d| d.per_gemm_tas_total())
+                .unwrap_or(0)
+    }
+
+    pub fn reduction_vs_per_gemm(&self) -> f64 {
+        let base = self.per_gemm_tas_total();
+        if base == 0 {
+            0.0
+        } else {
+            1.0 - self.total_ema() as f64 / base as f64
+        }
+    }
+}
+
+/// Plan a mixed prefill+decode bucket.  `prefill_tokens` is the padded
+/// token count of the prefill half (None = decode-only dispatch);
+/// `decode` is `(batch, cache_len)` of the decode half (None =
+/// prefill-only — the classic bucket plan).
+#[allow(clippy::too_many_arguments)]
+pub fn mixed_bucket_plan(
+    prefill_tokens: Option<u64>,
+    decode: Option<(u64, u64)>,
+    hidden: u64,
+    ffn: u64,
+    vocab: u64,
+    n_layers: u64,
+    heads: u64,
+    tiling: &Tiling,
+    sram_words: u64,
+) -> MixedBucketPlan {
+    let sram_each = if prefill_tokens.is_some() && decode.is_some() {
+        sram_words / 2
+    } else {
+        sram_words
+    };
+    let prefill = prefill_tokens.map(|tokens| {
+        layer_plan_for_bucket(tokens, hidden, ffn, vocab, n_layers, tiling, sram_each)
+    });
+    let decode = decode.map(|(batch, cache_len)| {
+        decode_plan_for_bucket(
+            batch, cache_len, hidden, ffn, vocab, n_layers, heads, tiling, sram_each,
+        )
+    });
+    MixedBucketPlan { prefill, decode }
 }
 
 fn scheme_to_manifest_name(s: Scheme) -> &'static str {
@@ -254,6 +368,68 @@ mod tests {
         let one = sharded_layer_plan_for_bucket(512, 128, 512, 0, 4, &tiling, 256 * 1024, 1);
         assert_eq!(one.total_ema(), single.total_ema());
         assert_eq!(one.handoff_words(), 0);
+    }
+
+    #[test]
+    fn decode_bucket_plan_beats_per_gemm_rule() {
+        let t = Tiling::square(16);
+        for (batch, cache_len) in [(1u64, 65u64), (8, 96), (32, 512)] {
+            let p = decode_plan_for_bucket(
+                batch, cache_len, 128, 512, 0, 4, 2, &t, 256 * 1024,
+            );
+            assert!(
+                p.total_ema() <= p.per_gemm_tas_total(),
+                "batch {batch} cache {cache_len}"
+            );
+            assert_eq!(p.cache_len, cache_len);
+        }
+    }
+
+    #[test]
+    fn decode_dims_repairs_missing_heads() {
+        // heads absent from an old manifest: derive from hidden
+        let d = decode_dims(768, 3072, 0, 12, 0);
+        assert_eq!(d.heads, 12);
+        assert_eq!(d.head_dim(), 64);
+        // heads that do not divide hidden are replaced, not trusted
+        let d2 = decode_dims(768, 3072, 0, 12, 7);
+        assert_eq!(d2.hidden % d2.heads, 0);
+        // ... and the fallback itself is walked down to a divisor even
+        // when hidden/64 does not divide hidden (1000/64 = 15 ∤ 1000)
+        let d3 = decode_dims(1000, 4000, 0, 4, 0);
+        assert_eq!(d3.hidden % d3.heads, 0);
+        assert!(d3.heads >= 1);
+    }
+
+    #[test]
+    fn mixed_bucket_plan_prices_both_phases() {
+        let t = Tiling::square(16);
+        let mixed = mixed_bucket_plan(
+            Some(256),
+            Some((4, 96)),
+            128,
+            512,
+            0,
+            4,
+            2,
+            &t,
+            256 * 1024,
+        );
+        let prefill_only =
+            mixed_bucket_plan(Some(256), None, 128, 512, 0, 4, 2, &t, 256 * 1024);
+        let decode_only =
+            mixed_bucket_plan(None, Some((4, 96)), 128, 512, 0, 4, 2, &t, 256 * 1024);
+        assert!(mixed.prefill.is_some() && mixed.decode.is_some());
+        assert!(mixed.total_ema() > 0);
+        // each half never loses to the per-GEMM rule, so neither does the mix
+        assert!(mixed.total_ema() <= mixed.per_gemm_tas_total());
+        assert!(prefill_only.decode.is_none());
+        assert!(decode_only.prefill.is_none());
+        // halving the SRAM for the mix can only cost words, never gain
+        assert!(
+            mixed.total_ema()
+                >= prefill_only.total_ema() + decode_only.total_ema()
+        );
     }
 
     #[test]

@@ -35,6 +35,11 @@ struct Inner {
     link_words: u64,
     device_ema_words: Vec<u64>,
     flops: u64,
+    decode_batches: u64,
+    decode_tokens: u64,
+    ema_decode_words: u64,
+    ema_decode_baseline_words: u64,
+    decode_cache_hot_words: u64,
 }
 
 /// Point-in-time snapshot for reporting.
@@ -62,6 +67,14 @@ pub struct MetricsSnapshot {
     /// `ema_plan_words`).
     pub per_device_ema_words: Vec<u64>,
     pub flops: u64,
+    /// Decode-lane accounting: dispatched decode steps, generated tokens,
+    /// and their EMA under the cache-resident decode plan vs per-GEMM TAS.
+    pub decode_batches: u64,
+    pub decode_tokens: u64,
+    pub ema_decode_words: u64,
+    pub ema_decode_baseline_words: u64,
+    /// Cache words served from SRAM instead of DRAM across decode steps.
+    pub decode_cache_hot_words: u64,
 }
 
 impl MetricsSnapshot {
@@ -89,6 +102,24 @@ impl MetricsSnapshot {
             0.0
         } else {
             1.0 - self.ema_plan_words as f64 / self.ema_plan_baseline_words as f64
+        }
+    }
+
+    /// Saving of the decode plan over per-GEMM TAS on dispatched steps.
+    pub fn decode_reduction_vs_per_gemm(&self) -> f64 {
+        if self.ema_decode_baseline_words == 0 {
+            0.0
+        } else {
+            1.0 - self.ema_decode_words as f64 / self.ema_decode_baseline_words as f64
+        }
+    }
+
+    /// Decode DRAM words per generated token.
+    pub fn decode_per_token_ema(&self) -> f64 {
+        if self.decode_tokens == 0 {
+            0.0
+        } else {
+            self.ema_decode_words as f64 / self.decode_tokens as f64
         }
     }
 
@@ -151,6 +182,21 @@ impl Metrics {
         g.flops += flops;
     }
 
+    /// Record one dispatched decode step: `slots` sequences each advanced
+    /// by one token under `step_plan`'s accounting.
+    pub fn record_decode_batch(
+        &self,
+        slots: usize,
+        step_plan: &crate::dataflow::DecodeStepPlan,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        g.decode_batches += 1;
+        g.decode_tokens += slots as u64;
+        g.ema_decode_words += step_plan.total_ema();
+        g.ema_decode_baseline_words += step_plan.per_gemm_tas_total();
+        g.decode_cache_hot_words += step_plan.cache_hot_total();
+    }
+
     /// Record one completed request's end-to-end latency.
     pub fn record_latency(&self, latency: Duration) {
         self.inner.lock().unwrap().latency.push(latency.as_secs_f64() * 1e3);
@@ -175,6 +221,11 @@ impl Metrics {
             link_words: g.link_words,
             per_device_ema_words: g.device_ema_words.clone(),
             flops: g.flops,
+            decode_batches: g.decode_batches,
+            decode_tokens: g.decode_tokens,
+            ema_decode_words: g.ema_decode_words,
+            ema_decode_baseline_words: g.ema_decode_baseline_words,
+            decode_cache_hot_words: g.decode_cache_hot_words,
         }
     }
 }
@@ -244,6 +295,37 @@ mod tests {
         assert_eq!(s.padding_fraction(), 0.0);
         assert_eq!(s.link_words, 0);
         assert!(s.per_device_ema_words.is_empty());
+        assert_eq!(s.decode_reduction_vs_per_gemm(), 0.0);
+        assert_eq!(s.decode_per_token_ema(), 0.0);
+    }
+
+    #[test]
+    fn decode_batches_accumulate_their_own_lane() {
+        use crate::coordinator::decisions::decode_plan_for_bucket;
+        let m = Metrics::new();
+        let step = decode_plan_for_bucket(
+            4,
+            96,
+            128,
+            512,
+            0,
+            4,
+            2,
+            &Tiling::square(16),
+            256 * 1024,
+        );
+        m.record_decode_batch(4, &step);
+        m.record_decode_batch(4, &step);
+        let s = m.snapshot();
+        assert_eq!(s.decode_batches, 2);
+        assert_eq!(s.decode_tokens, 8);
+        assert_eq!(s.ema_decode_words, 2 * step.total_ema());
+        assert!(s.ema_decode_words <= s.ema_decode_baseline_words);
+        assert!((0.0..=1.0).contains(&s.decode_reduction_vs_per_gemm()));
+        assert!(s.decode_per_token_ema() > 0.0);
+        // the prefill lane is untouched
+        assert_eq!(s.batches, 0);
+        assert_eq!(s.ema_plan_words, 0);
     }
 
     #[test]

@@ -18,9 +18,9 @@ pub mod metrics;
 pub mod request;
 pub mod server;
 
-pub use batcher::{Batch, Batcher, Bucket};
+pub use batcher::{Batch, Batcher, Bucket, DecodeSlot, MixedBatch};
 pub use chunking::{serve_chunked, ChunkPolicy};
-pub use decisions::{scheme_plan, SchemePlan};
+pub use decisions::{mixed_bucket_plan, scheme_plan, MixedBucketPlan, SchemePlan};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{Request, RequestId, Response};
 pub use server::{Coordinator, CoordinatorOptions};

@@ -15,8 +15,15 @@
 //!
 //! The PJRT [`Engine`] is constructed *inside* the device thread (its
 //! handles are not `Send`); startup errors propagate through a oneshot.
+//!
+//! Dispatches are **mixed** (continuous batching): every job carries an
+//! optional prefill batch plus a capped number of decode slots
+//! ([`Coordinator::enqueue_decode_step`]).  The decode half is
+//! priced by the decode planner and accounted in the metrics' decode
+//! lane — no decode artifact executes until the real PJRT binding and a
+//! decode-step compile path land (see ROADMAP).
 
-use super::batcher::{Batch, Batcher};
+use super::batcher::{Batch, Batcher, DecodeSlot};
 use super::decisions;
 use super::metrics::Metrics;
 use super::request::{Request, RequestId, Response};
@@ -66,18 +73,30 @@ impl Default for CoordinatorOptions {
 
 enum ToBatcher {
     Submit(Request, Sender<Response>),
+    /// One in-flight sequence awaiting its next single-token step; rides
+    /// the next dispatch alongside a prefill batch (continuous batching).
+    SubmitDecode(DecodeSlot),
     Shutdown,
 }
 
+/// One mixed dispatch: an optional prefill batch (with its reply
+/// channels) plus the decode slots that ride along.
 struct DeviceJob {
-    batch: Batch,
-    replies: Vec<Sender<Response>>,
+    batch: Option<(Batch, Vec<Sender<Response>>)>,
+    decode: Vec<DecodeSlot>,
 }
 
 enum ToDevice {
     Run(DeviceJob),
     Shutdown,
 }
+
+/// Most decode slots dispatched per mixed batch.
+const DECODE_DISPATCH_CAP: usize = 32;
+
+/// Decode plans are cached per (batch, cache bucket): cache lengths pad
+/// up to the next multiple of this, like prefill buckets pad seq.
+const DECODE_LEN_BUCKET: u64 = 64;
 
 /// Handle to a running coordinator.
 pub struct Coordinator {
@@ -135,6 +154,20 @@ impl Coordinator {
     /// Longest request (tokens) the bucket set can serve.
     pub fn max_len(&self) -> u64 {
         self.max_len
+    }
+
+    /// Enqueue one autoregressive step for an in-flight sequence whose
+    /// cache holds `cache_len` positions.  The slot rides the next mixed
+    /// dispatch; until decode artifacts exist the device side prices the
+    /// step through the decode planner and accounts it in the metrics
+    /// (`decode_*` fields of [`super::metrics::MetricsSnapshot`]).
+    pub fn enqueue_decode_step(&self, cache_len: u64) -> Result<u64> {
+        anyhow::ensure!(cache_len > 0, "empty cache");
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.to_batcher
+            .send(ToBatcher::SubmitDecode(DecodeSlot { id, cache_len }))
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+        Ok(id)
     }
 
     /// Submit a request; returns the receiver for its response.
@@ -215,13 +248,21 @@ fn batcher_loop(
     let mut replies: BTreeMap<RequestId, Sender<Response>> = BTreeMap::new();
     let flush = |batcher: &mut Batcher,
                      replies: &mut BTreeMap<RequestId, Sender<Response>>| {
-        while let Some(batch) = batcher.pop_ready(Instant::now()) {
-            let rs = batch
-                .requests
-                .iter()
-                .filter_map(|r| replies.remove(&r.id))
-                .collect();
-            if dev_tx.send(ToDevice::Run(DeviceJob { batch, replies: rs })).is_err() {
+        // Mixed pops: every ready prefill batch plus the decode slots
+        // that ride along (decode never lingers — each slot is a token
+        // on a request's latency path).
+        while let Some(mixed) = batcher.pop_mixed_ready(Instant::now(), DECODE_DISPATCH_CAP)
+        {
+            let batch = mixed.prefill.map(|batch| {
+                let rs: Vec<Sender<Response>> = batch
+                    .requests
+                    .iter()
+                    .filter_map(|r| replies.remove(&r.id))
+                    .collect();
+                (batch, rs)
+            });
+            let job = DeviceJob { batch, decode: mixed.decode };
+            if dev_tx.send(ToDevice::Run(job)).is_err() {
                 return;
             }
         }
@@ -238,6 +279,10 @@ fn batcher_loop(
                 }
                 flush(&mut batcher, &mut replies);
             }
+            Ok(ToBatcher::SubmitDecode(slot)) => {
+                batcher.push_decode(slot);
+                flush(&mut batcher, &mut replies);
+            }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
                 flush(&mut batcher, &mut replies);
             }
@@ -248,7 +293,16 @@ fn batcher_loop(
                         .iter()
                         .filter_map(|r| replies.remove(&r.id))
                         .collect();
-                    let _ = dev_tx.send(ToDevice::Run(DeviceJob { batch, replies: rs }));
+                    let job = DeviceJob { batch: Some((batch, rs)), decode: Vec::new() };
+                    let _ = dev_tx.send(ToDevice::Run(job));
+                }
+                // In-flight decode slots get their final dispatch too.
+                let leftover = batcher.drain_decode();
+                for chunk in leftover.chunks(DECODE_DISPATCH_CAP) {
+                    let _ = dev_tx.send(ToDevice::Run(DeviceJob {
+                        batch: None,
+                        decode: chunk.to_vec(),
+                    }));
                 }
                 let _ = dev_tx.send(ToDevice::Shutdown);
                 return;
@@ -288,16 +342,54 @@ fn device_loop(
     let ffn = *engine.manifest().model.get("ffn").unwrap_or(&0);
     let vocab = *engine.manifest().model.get("vocab").unwrap_or(&0) as usize;
     let n_layers = *engine.manifest().model.get("n_layers").unwrap_or(&1);
-    // Layer plans are pure functions of the bucket token count; memoise
-    // so the per-batch accounting never re-runs the planner.
-    let mut plan_cache: BTreeMap<u64, crate::dataflow::LayerPlan> = BTreeMap::new();
+    let heads = *engine.manifest().model.get("heads").unwrap_or(&0);
+    // Layer plans are pure functions of the bucket token count (and
+    // whether the dispatch was mixed); memoise so the per-batch
+    // accounting never re-runs the planner.
+    let mut plan_cache: BTreeMap<(u64, bool), crate::dataflow::LayerPlan> = BTreeMap::new();
+    // Decode-step plans keyed by (slots, cache-length bucket, mixed).
+    let mut decode_cache: BTreeMap<(u64, u64, bool), crate::dataflow::DecodeStepPlan> =
+        BTreeMap::new();
 
     while let Ok(msg) = rx.recv() {
         let job = match msg {
             ToDevice::Run(job) => job,
             ToDevice::Shutdown => return,
         };
-        let batch = &job.batch;
+
+        // A mixed dispatch splits the SRAM between the two lanes (the
+        // `decisions::mixed_bucket_plan` policy): neither planner may
+        // claim words the other holds during the same dispatch.
+        let mixed = job.batch.is_some() && !job.decode.is_empty();
+        let sram_share = if mixed { opts.sram_words / 2 } else { opts.sram_words };
+
+        // Decode half of the dispatch: no artifact executes yet (the AOT
+        // path compiles prefill encoders only), so the step is priced by
+        // the decode planner and accounted in the decode metrics lane.
+        if !job.decode.is_empty() {
+            let slots = job.decode.len() as u64;
+            let max_len = job.decode.iter().map(|s| s.cache_len).max().unwrap_or(1);
+            let bucket_len = max_len.div_ceil(DECODE_LEN_BUCKET) * DECODE_LEN_BUCKET;
+            let step_plan =
+                decode_cache.entry((slots, bucket_len, mixed)).or_insert_with(|| {
+                    decisions::decode_plan_for_bucket(
+                        slots,
+                        bucket_len,
+                        hidden,
+                        ffn,
+                        vocab as u64,
+                        n_layers,
+                        heads,
+                        &opts.tiling,
+                        sram_share,
+                    )
+                });
+            metrics.record_decode_batch(job.decode.len(), step_plan);
+        }
+
+        let Some((ref batch, ref job_replies)) = job.batch else {
+            continue;
+        };
         let ids = batch.padded_ids();
         let (b, s) = (batch.bucket.batch as usize, batch.bucket.seq as usize);
         let t0 = Instant::now();
@@ -312,7 +404,7 @@ fn device_loop(
         // TAS with SRAM residency across the block's chained GEMMs).
         let tokens = (b * s) as u64;
         let gemms = bucket_gemms(tokens, hidden, ffn, vocab as u64, n_layers);
-        let layer_plan = plan_cache.entry(tokens).or_insert_with(|| {
+        let layer_plan = plan_cache.entry((tokens, mixed)).or_insert_with(|| {
             // Device-aware bucket decision: wide buckets span more chips
             // (deterministic per token count, so the cache key holds).
             let devices = decisions::devices_for_bucket(tokens, opts.max_devices);
@@ -323,7 +415,7 @@ fn device_loop(
                 vocab as u64,
                 n_layers,
                 &opts.tiling,
-                opts.sram_words,
+                sram_share,
                 devices,
             )
         });
@@ -352,7 +444,7 @@ fn device_loop(
                 };
                 // logits: [b, s, vocab] — slice each request's rows.
                 for (row, (req, reply)) in
-                    batch.requests.iter().zip(&job.replies).enumerate()
+                    batch.requests.iter().zip(job_replies).enumerate()
                 {
                     let start = row * s * vocab;
                     let end = start + req.len() * vocab;

@@ -1,0 +1,1037 @@
+//! KV-cache-aware decode planning: the autoregressive phase model.
+//!
+//! Prefill processes all prompt tokens at once, so per-GEMM TAS and the
+//! layer planner ([`super::layer`]) have fat `M` to work with.  Decode is
+//! the opposite regime: every step is a *skinny* GEMM (`M = 1..batch`)
+//! against a K/V cache that grows by one token per step, so weight and
+//! cache traffic dominate and the prefill residency model does not apply
+//! (T-REX, ISSCC 2025; "Data Movement Is All You Need", Ivanov et al.).
+//!
+//! This module introduces:
+//!
+//! * a [`Phase`] model — `Prefill` vs `Decode { step, batch }`;
+//! * a **cache edge** on [`StageSpec`] ([`CacheEdge`]): attention stages
+//!   declare the K/V tensor they append to or read, so the planner knows
+//!   which weight-side operands persist and grow across steps;
+//! * [`DecodePlan`] — a whole trajectory (prefill at seq `S`, then `T`
+//!   decode steps at batch `B`).  The planner keeps the **newest** cache
+//!   rows SRAM-resident under the cumulative budget (coldest rows are
+//!   evicted first; the cache is write-through, so eviction is free) and
+//!   runs the per-tile TAS chooser with cache-resident operands priced at
+//!   zero EMA ([`Plan::tas_cached`]).  A partially resident cache splits
+//!   the attention GEMM into a hot slice (resident rows, weight stream
+//!   free) and a cold slice (DRAM rows) — the stationary decision flips
+//!   per tile, not per GEMM, and the split is only kept when it beats the
+//!   unsplit plan, so a decode plan never loses to per-GEMM TAS;
+//! * [`ShardedDecodePlan`] — decode across devices with the cache
+//!   **sharded by heads** ([`super::shard::shard_heads`]): each device
+//!   owns its heads' K/V blocks (aggregate SRAM scales with the device
+//!   count), QKV/FFN weights are column/row split Megatron-style, and the
+//!   per-layer partial sums cross the interconnect as tree reduces.
+//!
+//! Residency model for one decode step: attention touches every cache
+//! row, so streaming the cold rows necessarily brings them on-chip —
+//! *retaining* the newest `R` of them for the next step costs nothing.
+//! Hot rows are therefore free from step 1 on (step 0 inherits nothing:
+//! prefill wrote the cache through to DRAM), and the resident set never
+//! exceeds `R · row_words`, which is carved out of the SRAM budget after
+//! the step's activation residency claim.
+
+use super::analytic;
+use super::layer::{LayerPlan, StageSpec};
+use super::plan::Plan;
+use super::shard::{even_bounds, shard_heads};
+use super::Scheme;
+use crate::arch::Interconnect;
+use crate::gemm::{GemmShape, Tiling};
+use crate::models::ModelSpec;
+use crate::util::ceil_div;
+use std::collections::HashMap;
+
+/// Memo of cover searches keyed by (shape, residency flags): within one
+/// trajectory the tiling is fixed and the cache-length-independent stages
+/// (projections, FFN, LM head) repeat identical searches every step.
+type PlanMemo = HashMap<(GemmShape, bool, bool, bool), Plan>;
+
+fn memo_plan(
+    memo: &mut PlanMemo,
+    shape: &GemmShape,
+    tiling: &Tiling,
+    input_resident: bool,
+    weight_resident: bool,
+    output_resident: bool,
+) -> Plan {
+    memo.entry((*shape, input_resident, weight_resident, output_resident))
+        .or_insert_with(|| {
+            Plan::tas_cached(shape, tiling, input_resident, weight_resident, output_resident)
+        })
+        .clone()
+}
+
+/// Execution phase of a transformer workload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Prompt ingestion: all tokens at once (`M = batch × seq`).
+    Prefill { seq: u64 },
+    /// One autoregressive step: `M = batch`, attention over the cache.
+    Decode { step: u64, batch: u64 },
+}
+
+/// Which persistent cache tensor an attention stage touches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheTensor {
+    Key,
+    Value,
+}
+
+/// How a stage relates to a K/V cache tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheEdge {
+    /// The stage's output appends one row per sequence (k/v projections).
+    Append(CacheTensor),
+    /// The stage's weight-side operand *is* the cache (attention matmuls:
+    /// `q·Kᵀ` reads the K cache along its output axis, `p·V` reads the V
+    /// cache along its contraction axis).
+    Read(CacheTensor),
+}
+
+/// Raw decode dimensions — the coordinator builds these straight from
+/// manifest dims, the CLI from a [`ModelSpec`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecodeDims {
+    pub hidden: u64,
+    pub ffn: u64,
+    pub layers: u64,
+    pub heads: u64,
+    /// 0 = no LM head.
+    pub vocab: u64,
+}
+
+impl DecodeDims {
+    pub fn of(model: &ModelSpec) -> DecodeDims {
+        DecodeDims {
+            hidden: model.hidden,
+            ffn: model.ffn,
+            layers: model.layers,
+            heads: model.heads,
+            vocab: model.vocab.unwrap_or(0),
+        }
+    }
+
+    pub fn head_dim(&self) -> u64 {
+        self.hidden / self.heads
+    }
+
+    fn validate(&self) {
+        assert!(self.layers > 0 && self.heads > 0 && self.hidden > 0);
+        assert_eq!(
+            self.hidden % self.heads,
+            0,
+            "hidden {} must divide into {} heads",
+            self.hidden,
+            self.heads
+        );
+    }
+}
+
+/// Stage inventory of ONE decode step: `batch` in-flight sequences whose
+/// per-sequence K/V caches hold `cache_len` positions (including the
+/// token being generated).  Linear projections are batched across
+/// sequences (shared weights, `M = batch`); attention matmuls are
+/// per-sequence-per-head (`M = 1`, distinct caches), which is exactly
+/// where cache-resident per-tile TAS acts.
+pub fn decode_step_stages(dims: &DecodeDims, batch: u64, cache_len: u64) -> Vec<StageSpec> {
+    decode_step_stages_sliced(dims, batch, cache_len, dims.heads, dims.ffn, dims.vocab)
+}
+
+/// Head/ffn/vocab-sliced variant for head-sharded decode: weight columns
+/// shrink to the slice, the input width stays the full hidden dim.
+pub(crate) fn decode_step_stages_sliced(
+    dims: &DecodeDims,
+    batch: u64,
+    cache_len: u64,
+    heads_slice: u64,
+    ffn_slice: u64,
+    vocab_slice: u64,
+) -> Vec<StageSpec> {
+    dims.validate();
+    assert!(batch > 0 && cache_len > 0 && heads_slice > 0 && ffn_slice > 0);
+    let h = dims.hidden;
+    let d = dims.head_dim();
+    let hs = heads_slice * d;
+    let l = dims.layers;
+    let attn = l * heads_slice * batch;
+    let stage = |name, shape, count, consumes, shares, cache| StageSpec {
+        name,
+        shape,
+        count,
+        consumes_previous: consumes,
+        shares_input_with_previous: shares,
+        cache,
+    };
+    let k_app = Some(CacheEdge::Append(CacheTensor::Key));
+    let v_app = Some(CacheEdge::Append(CacheTensor::Value));
+    let k_read = Some(CacheEdge::Read(CacheTensor::Key));
+    let v_read = Some(CacheEdge::Read(CacheTensor::Value));
+    let proj = GemmShape::new(batch, h, hs);
+    let mut v = vec![
+        stage("k", proj, l, false, false, k_app),
+        stage("v", proj, l, false, true, v_app),
+        stage("q", proj, l, false, true, None),
+        stage("qk_t", GemmShape::new(1, d, cache_len), attn, true, false, k_read),
+        stage("attn_v", GemmShape::new(1, cache_len, d), attn, true, false, v_read),
+        stage("attn_out", GemmShape::new(batch, hs, h), l, true, false, None),
+        stage("ffn1", GemmShape::new(batch, h, ffn_slice), l, true, false, None),
+        stage("ffn2", GemmShape::new(batch, ffn_slice, h), l, true, false, None),
+    ];
+    if vocab_slice > 0 {
+        let head = GemmShape::new(batch, h, vocab_slice);
+        v.push(stage("lm_head", head, 1, false, false, None));
+    }
+    v
+}
+
+/// Prefill stage chain with sliced weight columns — reduces to
+/// [`ModelSpec::block_stages`] for full slices (asserted in tests).
+pub(crate) fn prefill_stages_sliced(
+    dims: &DecodeDims,
+    tokens: u64,
+    heads_slice: u64,
+    ffn_slice: u64,
+    vocab_slice: u64,
+) -> Vec<StageSpec> {
+    dims.validate();
+    assert!(tokens > 0 && heads_slice > 0 && ffn_slice > 0);
+    let h = dims.hidden;
+    let hs = heads_slice * dims.head_dim();
+    let l = dims.layers;
+    let stage = |name, shape, count, consumes, shares| StageSpec {
+        name,
+        shape,
+        count,
+        consumes_previous: consumes,
+        shares_input_with_previous: shares,
+        cache: None,
+    };
+    let mut v = vec![
+        stage("q", GemmShape::new(tokens, h, hs), l, false, false),
+        stage("k", GemmShape::new(tokens, h, hs), l, false, true),
+        stage("v", GemmShape::new(tokens, h, hs), l, false, true),
+        stage("attn_out", GemmShape::new(tokens, hs, h), l, false, false),
+        stage("ffn1", GemmShape::new(tokens, h, ffn_slice), l, true, false),
+        stage("ffn2", GemmShape::new(tokens, ffn_slice, h), l, true, false),
+    ];
+    if vocab_slice > 0 {
+        v.push(stage("lm_head", GemmShape::new(tokens, h, vocab_slice), 1, false, false));
+    }
+    v
+}
+
+/// One planned decode stage: residency decisions plus the slice plans.
+#[derive(Clone, Debug)]
+pub struct DecodeStagePlan {
+    pub spec: StageSpec,
+    /// GEMM slice plans — one normally; a hot/cold pair when a partially
+    /// resident cache splits the stage along its cache axis.
+    pub slices: Vec<Plan>,
+    /// Input served from SRAM (chained activation) — no DRAM reads.
+    pub input_resident: bool,
+    /// Output handed on-chip to the next stage — no DRAM writes.
+    pub output_resident: bool,
+    /// Cache words served from SRAM per instance (hot-slice weights).
+    pub cache_hot_words: u64,
+    /// DRAM words per instance under this plan (summed over slices).
+    pub ema_words: u64,
+    /// DRAM words per instance under per-GEMM TAS on the unsplit shape.
+    pub per_gemm_tas_words: u64,
+}
+
+/// One planned decode step: every stage of the block at one cache length.
+#[derive(Clone, Debug)]
+pub struct DecodeStepPlan {
+    pub phase: Phase,
+    /// Positions attended this step (cache length including new token).
+    pub cache_len: u64,
+    /// Cache rows resident in SRAM while this step runs (newest rows).
+    pub hot_rows: u64,
+    /// Peak SRAM words the step's resident activations claim.
+    pub act_resident_words: u64,
+    pub stages: Vec<DecodeStagePlan>,
+}
+
+impl DecodeStepPlan {
+    /// DRAM words of one decode step under this plan.
+    pub fn total_ema(&self) -> u64 {
+        self.stages.iter().map(|s| s.spec.count * s.ema_words).sum()
+    }
+
+    /// DRAM words of the same step under per-GEMM TAS (the baseline the
+    /// decode plan must never exceed).
+    pub fn per_gemm_tas_total(&self) -> u64 {
+        self.stages
+            .iter()
+            .map(|s| s.spec.count * s.per_gemm_tas_words)
+            .sum()
+    }
+
+    /// Cache words served from SRAM this step (all instances).
+    pub fn cache_hot_total(&self) -> u64 {
+        self.stages
+            .iter()
+            .map(|s| s.spec.count * s.cache_hot_words)
+            .sum()
+    }
+
+    pub fn reduction_vs_per_gemm(&self) -> f64 {
+        let base = self.per_gemm_tas_total();
+        if base == 0 {
+            0.0
+        } else {
+            1.0 - self.total_ema() as f64 / base as f64
+        }
+    }
+}
+
+/// Plan one decode step over an explicit stage list.  `hot_rows` cache
+/// rows (strictly fewer than `cache_len` — the new token's row is never
+/// pre-resident) are SRAM-resident; `budget` bounds activation residency.
+pub fn plan_decode_step(
+    stages: &[StageSpec],
+    layers: u64,
+    cache_len: u64,
+    hot_rows: u64,
+    tiling: &Tiling,
+    budget: u64,
+    phase: Phase,
+) -> DecodeStepPlan {
+    let mut memo = PlanMemo::new();
+    plan_decode_step_memo(stages, layers, cache_len, hot_rows, tiling, budget, phase, &mut memo)
+}
+
+/// The memoised core: `memo` carries cover searches across the steps of
+/// one trajectory, so the shapes that do not depend on the cache length
+/// are planned once instead of once per step.
+#[allow(clippy::too_many_arguments)]
+fn plan_decode_step_memo(
+    stages: &[StageSpec],
+    layers: u64,
+    cache_len: u64,
+    hot_rows: u64,
+    tiling: &Tiling,
+    budget: u64,
+    phase: Phase,
+    memo: &mut PlanMemo,
+) -> DecodeStepPlan {
+    assert!(hot_rows < cache_len, "the newest row is appended this step");
+    let fits = |w: u64| w > 0 && w <= budget;
+    // Aggregate tensor sizes per layer: attention stages run
+    // heads × batch instances whose activations coexist within a layer.
+    let per_layer = |s: &StageSpec| (s.count / layers.max(1)).max(1);
+
+    let mut planned: Vec<DecodeStagePlan> = Vec::with_capacity(stages.len());
+    let mut act_peak = 0u64;
+    for (idx, spec) in stages.iter().enumerate() {
+        let group_in = per_layer(spec) * spec.shape.input_words();
+        let group_out = per_layer(spec) * spec.shape.output_words();
+        let input_resident = if spec.shares_input_with_previous && idx > 0 {
+            fits(spec.shape.input_words())
+        } else if spec.consumes_previous && idx > 0 {
+            planned[idx - 1].output_resident
+        } else {
+            false
+        };
+        // The consumer may fan out (q -> per-head qk_t) or fan in
+        // (per-head attn_v -> attn_out); either way the chained tensor is
+        // the same per-layer aggregate, so counts must divide.
+        let output_resident = stages
+            .get(idx + 1)
+            .map(|next| {
+                next.consumes_previous
+                    && (next.count % spec.count.max(1) == 0
+                        || spec.count % next.count.max(1) == 0)
+                    && fits(group_out + if input_resident { group_in } else { 0 })
+            })
+            .unwrap_or(false);
+        let held = (if output_resident { group_out } else { 0 })
+            + (if input_resident { group_in } else { 0 });
+        act_peak = act_peak.max(held);
+
+        let unsplit =
+            memo_plan(memo, &spec.shape, tiling, input_resident, false, output_resident);
+        let mut slices = vec![unsplit];
+        let mut cache_hot_words = 0u64;
+        if let Some(CacheEdge::Read(tensor)) = spec.cache {
+            if hot_rows > 0 {
+                let GemmShape { m, n, k } = spec.shape;
+                let (hot, cold) = match tensor {
+                    // K cache runs along the output axis: split K.
+                    CacheTensor::Key => {
+                        debug_assert_eq!(k, cache_len);
+                        (
+                            memo_plan(
+                                memo,
+                                &GemmShape::new(m, n, hot_rows),
+                                tiling,
+                                input_resident,
+                                true,
+                                output_resident,
+                            ),
+                            memo_plan(
+                                memo,
+                                &GemmShape::new(m, n, k - hot_rows),
+                                tiling,
+                                input_resident,
+                                false,
+                                output_resident,
+                            ),
+                        )
+                    }
+                    // V cache runs along the contraction: split N; the hot
+                    // slice's partial context accumulates on chip.
+                    CacheTensor::Value => {
+                        debug_assert_eq!(n, cache_len);
+                        (
+                            memo_plan(
+                                memo,
+                                &GemmShape::new(m, hot_rows, k),
+                                tiling,
+                                input_resident,
+                                true,
+                                true,
+                            ),
+                            memo_plan(
+                                memo,
+                                &GemmShape::new(m, n - hot_rows, k),
+                                tiling,
+                                input_resident,
+                                false,
+                                output_resident,
+                            ),
+                        )
+                    }
+                };
+                let split_total = hot.ema().total() + cold.ema().total();
+                // Keep the split only when it wins: never worse than the
+                // unsplit per-tile plan, hence never worse than per-GEMM
+                // TAS either.
+                if split_total < slices[0].ema().total() {
+                    cache_hot_words = hot.shape.weight_words();
+                    slices = vec![hot, cold];
+                }
+            }
+        }
+        let ema_words: u64 = slices.iter().map(|p| p.ema().total()).sum();
+        let per_gemm_tas_words = analytic::ema(Scheme::Tas, &spec.shape, tiling).total();
+        planned.push(DecodeStagePlan {
+            spec: spec.clone(),
+            slices,
+            input_resident,
+            output_resident,
+            cache_hot_words,
+            ema_words,
+            per_gemm_tas_words,
+        });
+    }
+    DecodeStepPlan {
+        phase,
+        cache_len,
+        hot_rows,
+        act_resident_words: act_peak,
+        stages: planned,
+    }
+}
+
+/// A planned decode trajectory: prefill at seq `S`, then `T` decode steps
+/// at batch `B`, with a static cache-residency allocation.
+#[derive(Clone, Debug)]
+pub struct DecodePlan {
+    pub dims: DecodeDims,
+    pub batch: u64,
+    pub prefill_seq: u64,
+    pub steps: u64,
+    pub tiling: Tiling,
+    /// Head/ffn/vocab slice this plan covers (full dims unless sharded).
+    pub heads_slice: u64,
+    pub ffn_slice: u64,
+    pub vocab_slice: u64,
+    /// Planning budget: SRAM minus the double-buffered operand margin.
+    pub budget: u64,
+    /// SRAM words one resident cache row occupies (one position, both
+    /// tensors, every layer, every sequence of the batch).
+    pub row_words: u64,
+    /// Cache rows the planner keeps resident (newest-first; coldest are
+    /// evicted — free, the cache is write-through).
+    pub resident_rows: u64,
+    /// Peak activation residency reserved ahead of the cache.
+    pub act_peak_words: u64,
+    pub prefill: LayerPlan,
+    pub step_plans: Vec<DecodeStepPlan>,
+}
+
+impl DecodePlan {
+    /// Plan a trajectory for a zoo model with cache residency on.
+    pub fn plan(
+        model: &ModelSpec,
+        prefill_seq: u64,
+        steps: u64,
+        batch: u64,
+        tiling: &Tiling,
+        sram_words: u64,
+    ) -> DecodePlan {
+        DecodePlan::plan_policy(
+            &DecodeDims::of(model),
+            prefill_seq,
+            steps,
+            batch,
+            tiling,
+            sram_words,
+            true,
+        )
+    }
+
+    /// Plan with explicit cache-residency policy (`false` disables the
+    /// hot-row pricing entirely — the conservation baseline the property
+    /// tests pin against).
+    pub fn plan_policy(
+        dims: &DecodeDims,
+        prefill_seq: u64,
+        steps: u64,
+        batch: u64,
+        tiling: &Tiling,
+        sram_words: u64,
+        cache_residency: bool,
+    ) -> DecodePlan {
+        DecodePlan::plan_sliced(
+            dims,
+            dims.heads,
+            dims.ffn,
+            dims.vocab,
+            prefill_seq,
+            steps,
+            batch,
+            tiling,
+            sram_words,
+            cache_residency,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn plan_sliced(
+        dims: &DecodeDims,
+        heads_slice: u64,
+        ffn_slice: u64,
+        vocab_slice: u64,
+        prefill_seq: u64,
+        steps: u64,
+        batch: u64,
+        tiling: &Tiling,
+        sram_words: u64,
+        cache_residency: bool,
+    ) -> DecodePlan {
+        dims.validate();
+        assert!(prefill_seq > 0 && steps > 0 && batch > 0);
+        let margin = 4 * (tiling.tm * tiling.tn + tiling.tn * tiling.tk);
+        let budget = sram_words.saturating_sub(margin);
+
+        // Pass 1: plan every step cold (hot = 0) to size the activation
+        // claim.  Per-step activation claims are NOT monotone in cache
+        // length — a per-layer group can stop fitting at the longest
+        // step — so the peak is taken over the whole trajectory, not a
+        // single probe.  One memo carries the cover searches of the
+        // cache-length-independent stages across both passes.
+        let mut memo = PlanMemo::new();
+        let step_stages = |cache_len: u64| {
+            decode_step_stages_sliced(dims, batch, cache_len, heads_slice, ffn_slice, vocab_slice)
+        };
+        let mut act_peak = 0u64;
+        let mut cold_steps = Vec::with_capacity(steps as usize);
+        for t in 0..steps {
+            let cache_len = prefill_seq + t + 1;
+            let sp = plan_decode_step_memo(
+                &step_stages(cache_len),
+                dims.layers,
+                cache_len,
+                0,
+                tiling,
+                budget,
+                Phase::Decode { step: t, batch },
+                &mut memo,
+            );
+            act_peak = act_peak.max(sp.act_resident_words);
+            cold_steps.push(sp);
+        }
+        let row_words = 2 * dims.layers * batch * heads_slice * dims.head_dim();
+        let cache_budget = budget.saturating_sub(act_peak);
+        // Cap at the most rows any step can actually retain (the last
+        // step inherits prefill_seq + steps - 1 rows), so the residency
+        // claim reports SRAM the trajectory really occupies.
+        let resident_rows = if cache_residency && row_words > 0 {
+            (cache_budget / row_words).min(prefill_seq + steps - 1)
+        } else {
+            0
+        };
+
+        let prefill_tokens = batch * prefill_seq;
+        let prefill = LayerPlan::plan(
+            prefill_stages_sliced(dims, prefill_tokens, heads_slice, ffn_slice, vocab_slice),
+            prefill_tokens,
+            tiling,
+            sram_words,
+        );
+
+        // Pass 2: re-plan with hot rows; a step that retains nothing
+        // reuses its cold plan (the residency walk never depends on
+        // hot_rows, so the two passes agree on the activation flags).
+        let mut step_plans = Vec::with_capacity(steps as usize);
+        for (t, cold) in cold_steps.into_iter().enumerate() {
+            let t = t as u64;
+            let cache_len = prefill_seq + t + 1;
+            // Step 0 inherits nothing (prefill wrote through to DRAM);
+            // later steps retain the newest rows streamed last step.
+            let hot = if t == 0 { 0 } else { (prefill_seq + t).min(resident_rows) };
+            if hot == 0 {
+                step_plans.push(cold);
+                continue;
+            }
+            step_plans.push(plan_decode_step_memo(
+                &step_stages(cache_len),
+                dims.layers,
+                cache_len,
+                hot,
+                tiling,
+                budget,
+                Phase::Decode { step: t, batch },
+                &mut memo,
+            ));
+        }
+        DecodePlan {
+            dims: *dims,
+            batch,
+            prefill_seq,
+            steps,
+            tiling: *tiling,
+            heads_slice,
+            ffn_slice,
+            vocab_slice,
+            budget,
+            row_words,
+            resident_rows,
+            act_peak_words: act_peak,
+            prefill,
+            step_plans,
+        }
+    }
+
+    /// One steady-state decode step at `cache_len` (the coordinator's
+    /// decode-bucket unit): hot rows as a retained trajectory would have.
+    pub fn plan_step(
+        dims: &DecodeDims,
+        batch: u64,
+        cache_len: u64,
+        tiling: &Tiling,
+        sram_words: u64,
+    ) -> DecodeStepPlan {
+        dims.validate();
+        assert!(batch > 0 && cache_len > 0);
+        let margin = 4 * (tiling.tm * tiling.tn + tiling.tn * tiling.tk);
+        let budget = sram_words.saturating_sub(margin);
+        let stages = decode_step_stages(dims, batch, cache_len);
+        // One memo serves both passes: the probe's cover searches for the
+        // cache-length-independent stages are reused by the final plan.
+        let mut memo = PlanMemo::new();
+        let probe = plan_decode_step_memo(
+            &stages,
+            dims.layers,
+            cache_len,
+            0,
+            tiling,
+            budget,
+            Phase::Decode { step: 0, batch },
+            &mut memo,
+        );
+        let row_words = 2 * dims.layers * batch * dims.hidden;
+        let cache_budget = budget.saturating_sub(probe.act_resident_words);
+        let hot = if row_words > 0 {
+            (cache_budget / row_words).min(cache_len - 1)
+        } else {
+            0
+        };
+        if hot == 0 {
+            return probe;
+        }
+        plan_decode_step_memo(
+            &stages,
+            dims.layers,
+            cache_len,
+            hot,
+            tiling,
+            budget,
+            Phase::Decode { step: 0, batch },
+            &mut memo,
+        )
+    }
+
+    /// DRAM words of the decode phase (all `T` steps).
+    pub fn decode_ema(&self) -> u64 {
+        self.step_plans.iter().map(|s| s.total_ema()).sum()
+    }
+
+    /// Decode-phase DRAM words under per-GEMM TAS at the same shapes.
+    pub fn per_gemm_tas_decode_total(&self) -> u64 {
+        self.step_plans.iter().map(|s| s.per_gemm_tas_total()).sum()
+    }
+
+    /// Whole-trajectory DRAM words (prefill + decode).
+    pub fn total_ema(&self) -> u64 {
+        self.prefill.total_ema() + self.decode_ema()
+    }
+
+    /// Decode DRAM words per generated token.
+    pub fn per_token_ema(&self) -> f64 {
+        self.decode_ema() as f64 / (self.steps * self.batch) as f64
+    }
+
+    /// Per-token baseline under per-GEMM TAS.
+    pub fn per_token_per_gemm_tas(&self) -> f64 {
+        self.per_gemm_tas_decode_total() as f64 / (self.steps * self.batch) as f64
+    }
+
+    /// Fractional decode saving over per-GEMM TAS.
+    pub fn reduction_vs_per_gemm(&self) -> f64 {
+        let base = self.per_gemm_tas_decode_total();
+        if base == 0 {
+            0.0
+        } else {
+            1.0 - self.decode_ema() as f64 / base as f64
+        }
+    }
+
+    /// Upper bound on cache words resident at any point of the trajectory.
+    pub fn max_cache_resident_words(&self) -> u64 {
+        self.resident_rows * self.row_words
+    }
+
+    /// Peak SRAM the plan ever claims (activations + resident cache) —
+    /// never exceeds [`DecodePlan::budget`] by construction
+    /// (property-tested in `rust/tests/decode_invariants.rs`).
+    pub fn peak_sram_claim(&self) -> u64 {
+        self.act_peak_words + self.max_cache_resident_words()
+    }
+}
+
+/// Decode across devices with the cache sharded by heads: device `d` owns
+/// head range `head_ranges[d]` (its K/V blocks live in — and fill — its
+/// own SRAM), QKV/FFN weight columns are split to match, and each layer's
+/// attention/FFN partial sums are all-reduced across the links.
+#[derive(Clone, Debug)]
+pub struct ShardedDecodePlan {
+    pub dims: DecodeDims,
+    pub batch: u64,
+    pub steps: u64,
+    pub devices: u64,
+    /// `(head_lo, head_hi)` per device.
+    pub head_ranges: Vec<(u64, u64)>,
+    pub per_device: Vec<DecodePlan>,
+    /// Partial-sum words crossing links per decode step (tree reduces of
+    /// the attention-output and FFN contractions, every layer).
+    pub reduce_words_per_step: u64,
+    /// Broadcast/all-gather words per decode step (reduced activations
+    /// back to every device, plus the LM-head logit gather).
+    pub gather_words_per_step: u64,
+}
+
+impl ShardedDecodePlan {
+    pub fn plan(
+        dims: &DecodeDims,
+        prefill_seq: u64,
+        steps: u64,
+        batch: u64,
+        tiling: &Tiling,
+        sram_words_per_device: u64,
+        devices: u64,
+    ) -> anyhow::Result<ShardedDecodePlan> {
+        dims.validate();
+        let devices = devices.max(1);
+        anyhow::ensure!(
+            devices <= dims.heads,
+            "cannot shard {} heads across {devices} devices",
+            dims.heads
+        );
+        let head_ranges = shard_heads(dims.heads, devices);
+        let ffn_bounds = even_bounds(dims.ffn, devices);
+        let vocab_bounds = even_bounds(dims.vocab, devices);
+        let mut per_device = Vec::with_capacity(devices as usize);
+        for dev in 0..devices as usize {
+            let heads_slice = head_ranges[dev].1 - head_ranges[dev].0;
+            let ffn_slice = ffn_bounds[dev + 1] - ffn_bounds[dev];
+            let vocab_slice = vocab_bounds[dev + 1] - vocab_bounds[dev];
+            per_device.push(DecodePlan::plan_sliced(
+                dims,
+                heads_slice,
+                ffn_slice,
+                vocab_slice,
+                prefill_seq,
+                steps,
+                batch,
+                tiling,
+                sram_words_per_device,
+                true,
+            ));
+        }
+        let bh = batch * dims.hidden;
+        let (reduce, mut gather) = if devices > 1 {
+            // Two all-reduces per layer (attention output + FFN down),
+            // modelled as tree-reduce + tree-broadcast of B×H partials.
+            let per_layer = 2 * (devices - 1) * bh;
+            (dims.layers * per_layer, dims.layers * per_layer)
+        } else {
+            (0, 0)
+        };
+        if dims.vocab > 0 && devices > 1 {
+            gather += (devices - 1) * batch * dims.vocab;
+        }
+        Ok(ShardedDecodePlan {
+            dims: *dims,
+            batch,
+            steps,
+            devices,
+            head_ranges,
+            per_device,
+            reduce_words_per_step: reduce,
+            gather_words_per_step: gather,
+        })
+    }
+
+    /// Summed decode DRAM words across devices.
+    pub fn decode_ema(&self) -> u64 {
+        self.per_device.iter().map(|p| p.decode_ema()).sum()
+    }
+
+    /// Busiest device's decode DRAM words — the critical path.
+    pub fn max_device_decode_ema(&self) -> u64 {
+        self.per_device
+            .iter()
+            .map(|p| p.decode_ema())
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn per_gemm_tas_decode_total(&self) -> u64 {
+        self.per_device
+            .iter()
+            .map(|p| p.per_gemm_tas_decode_total())
+            .sum()
+    }
+
+    /// Inter-chip words over the whole trajectory.
+    pub fn link_words_total(&self) -> u64 {
+        self.steps * (self.reduce_words_per_step + self.gather_words_per_step)
+    }
+
+    /// Cache words resident across ALL devices — head sharding scales the
+    /// aggregate residency with the device count.
+    pub fn total_resident_cache_words(&self) -> u64 {
+        self.per_device
+            .iter()
+            .map(|p| p.max_cache_resident_words())
+            .sum()
+    }
+
+    /// Serialized link time of one decode step under `icx`: per layer two
+    /// all-reduces (tree reduce + broadcast), plus the logit all-gather.
+    pub fn link_cycles_per_step(&self, icx: &Interconnect) -> u64 {
+        if self.devices <= 1 {
+            return 0;
+        }
+        let bh = self.batch * self.dims.hidden;
+        let allreduce = 2 * icx.tree_reduce_cycles(bh, self.devices);
+        let mut cycles = 2 * self.dims.layers * allreduce;
+        if self.dims.vocab > 0 {
+            cycles += icx.all_gather_cycles(
+                ceil_div(self.batch * self.dims.vocab, self.devices),
+                self.devices,
+            );
+        }
+        cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    fn dims() -> DecodeDims {
+        DecodeDims::of(&zoo::bert_base())
+    }
+
+    #[test]
+    fn decode_stages_cover_the_block_and_scale_with_heads() {
+        let d = dims();
+        let stages = decode_step_stages(&d, 8, 96);
+        let qk = stages.iter().find(|s| s.name == "qk_t").unwrap();
+        assert_eq!(qk.count, 12 * 12 * 8);
+        assert_eq!(qk.shape, GemmShape::new(1, 64, 96));
+        assert_eq!(qk.cache, Some(CacheEdge::Read(CacheTensor::Key)));
+        let av = stages.iter().find(|s| s.name == "attn_v").unwrap();
+        assert_eq!(av.shape, GemmShape::new(1, 96, 64));
+        let k = stages.iter().find(|s| s.name == "k").unwrap();
+        assert_eq!(k.cache, Some(CacheEdge::Append(CacheTensor::Key)));
+        // linear stages batch across sequences
+        let ffn1 = stages.iter().find(|s| s.name == "ffn1").unwrap();
+        assert_eq!(ffn1.shape, GemmShape::new(8, 768, 3072));
+    }
+
+    #[test]
+    fn prefill_stages_reduce_to_block_stages() {
+        for m in zoo::all_models() {
+            let d = DecodeDims::of(&m);
+            let mine = prefill_stages_sliced(&d, 384, d.heads, d.ffn, d.vocab);
+            assert_eq!(mine, m.block_stages(384), "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn step_plan_never_worse_than_per_gemm_tas() {
+        let d = dims();
+        let t = Tiling::square(16);
+        let phase = Phase::Decode { step: 1, batch: 8 };
+        for hot in [0u64, 1, 13, 64] {
+            let stages = decode_step_stages(&d, 8, 96);
+            let p = plan_decode_step(&stages, d.layers, 96, hot, &t, 256 * 1024, phase);
+            for s in &p.stages {
+                assert!(
+                    s.ema_words <= s.per_gemm_tas_words,
+                    "{} hot={hot}: {} > {}",
+                    s.spec.name,
+                    s.ema_words,
+                    s.per_gemm_tas_words
+                );
+            }
+            assert!(p.total_ema() <= p.per_gemm_tas_total());
+        }
+    }
+
+    #[test]
+    fn hot_rows_price_the_cache_at_zero_and_win() {
+        let d = dims();
+        let t = Tiling::square(16);
+        let stages = decode_step_stages(&d, 1, 96);
+        let phase = Phase::Decode { step: 1, batch: 1 };
+        let cold = plan_decode_step(&stages, d.layers, 96, 0, &t, 256 * 1024, phase);
+        let hot = plan_decode_step(&stages, d.layers, 96, 64, &t, 256 * 1024, phase);
+        assert!(hot.total_ema() < cold.total_ema());
+        assert!(hot.cache_hot_total() > 0);
+        assert_eq!(cold.cache_hot_total(), 0);
+        // the attention stages actually split
+        let qk = hot.stages.iter().find(|s| s.spec.name == "qk_t").unwrap();
+        assert_eq!(qk.slices.len(), 2);
+        assert!(qk.slices[0].weight_resident);
+        assert!(!qk.slices[1].weight_resident);
+    }
+
+    #[test]
+    fn trajectory_retains_rows_from_step_one() {
+        let p = DecodePlan::plan(&zoo::bert_base(), 64, 8, 1, &Tiling::square(16), 256 * 1024);
+        assert_eq!(p.step_plans[0].hot_rows, 0, "nothing retained from prefill");
+        if p.resident_rows > 0 {
+            assert!(p.step_plans[1].hot_rows > 0);
+        }
+        for (t, sp) in p.step_plans.iter().enumerate() {
+            assert_eq!(sp.cache_len, 64 + t as u64 + 1);
+            assert!(sp.hot_rows < sp.cache_len);
+            assert!(sp.hot_rows <= p.resident_rows);
+        }
+        // the budget is respected
+        assert!(p.peak_sram_claim() <= p.budget);
+    }
+
+    #[test]
+    fn resident_rows_never_exceed_what_the_trajectory_holds() {
+        // Plenty of SRAM, short trajectory: the claim must report rows
+        // the cache can actually contain, not raw budget capacity.
+        let p = DecodePlan::plan(
+            &zoo::bert_base(),
+            64,
+            4,
+            1,
+            &Tiling::square(16),
+            4 * 1024 * 1024,
+        );
+        assert_eq!(p.resident_rows, 64 + 4 - 1);
+        assert!(p.peak_sram_claim() <= p.budget);
+    }
+
+    #[test]
+    fn residency_disabled_prices_every_row_cold() {
+        let d = dims();
+        let t = Tiling::square(16);
+        let on = DecodePlan::plan_policy(&d, 64, 4, 1, &t, 256 * 1024, true);
+        let off = DecodePlan::plan_policy(&d, 64, 4, 1, &t, 256 * 1024, false);
+        assert_eq!(off.resident_rows, 0);
+        assert!(off.step_plans.iter().all(|s| s.hot_rows == 0));
+        assert!(on.decode_ema() <= off.decode_ema());
+        // identical per-GEMM baseline either way
+        assert_eq!(on.per_gemm_tas_decode_total(), off.per_gemm_tas_decode_total());
+    }
+
+    #[test]
+    fn steady_state_step_plan_uses_retained_rows() {
+        let d = dims();
+        let sp = DecodePlan::plan_step(&d, 1, 96, &Tiling::square(16), 256 * 1024);
+        assert!(sp.hot_rows > 0);
+        assert!(sp.total_ema() <= sp.per_gemm_tas_total());
+    }
+
+    #[test]
+    fn head_sharding_splits_work_and_scales_cache_residency() {
+        let d = dims();
+        let t = Tiling::square(16);
+        let single = DecodePlan::plan_policy(&d, 64, 4, 8, &t, 256 * 1024, true);
+        let sharded =
+            ShardedDecodePlan::plan(&d, 64, 4, 8, &t, 256 * 1024, 4).unwrap();
+        assert_eq!(sharded.per_device.len(), 4);
+        // every device owns a non-empty contiguous head range
+        let total_heads: u64 =
+            sharded.head_ranges.iter().map(|(lo, hi)| hi - lo).sum();
+        assert_eq!(total_heads, d.heads);
+        // MACs partition exactly across devices
+        let macs = |p: &DecodePlan| -> u64 {
+            p.step_plans
+                .iter()
+                .flat_map(|s| s.stages.iter())
+                .map(|s| s.spec.count * s.spec.shape.macs())
+                .sum()
+        };
+        let total: u64 = sharded.per_device.iter().map(macs).sum();
+        assert_eq!(total, macs(&single));
+        // aggregate SRAM scales: 4 devices park at least as many cache
+        // words as one (in practice several times more)
+        assert!(
+            sharded.total_resident_cache_words()
+                >= single.max_cache_resident_words()
+        );
+        // the links carry the per-layer all-reduces
+        assert!(sharded.reduce_words_per_step > 0);
+        assert!(sharded.link_words_total() > 0);
+        assert!(sharded.link_cycles_per_step(&Interconnect::default()) > 0);
+    }
+
+    #[test]
+    fn sharding_rejects_more_devices_than_heads() {
+        let d = dims();
+        assert!(ShardedDecodePlan::plan(&d, 64, 2, 1, &Tiling::square(16), 256 * 1024, 64)
+            .is_err());
+    }
+
+    #[test]
+    fn one_device_shard_matches_the_unsharded_plan() {
+        let d = dims();
+        let t = Tiling::square(16);
+        let single = DecodePlan::plan_policy(&d, 64, 4, 2, &t, 256 * 1024, true);
+        let sharded = ShardedDecodePlan::plan(&d, 64, 4, 2, &t, 256 * 1024, 1).unwrap();
+        assert_eq!(sharded.decode_ema(), single.decode_ema());
+        assert_eq!(sharded.link_words_total(), 0);
+        assert_eq!(sharded.link_cycles_per_step(&Interconnect::default()), 0);
+    }
+}

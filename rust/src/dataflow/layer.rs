@@ -44,6 +44,11 @@ pub struct StageSpec {
     pub consumes_previous: bool,
     /// This stage reads the same input tensor as the previous stage.
     pub shares_input_with_previous: bool,
+    /// K/V-cache relation of this stage, if any: attention stages declare
+    /// the cache tensor they append to or read, so the decode planner
+    /// ([`super::decode`]) can keep cache blocks SRAM-resident across
+    /// autoregressive steps.  `None` for every prefill linear projection.
+    pub cache: Option<super::decode::CacheEdge>,
 }
 
 /// A planned stage: the per-tile plan plus its residency decisions.
@@ -233,6 +238,7 @@ mod tests {
             count: 1,
             consumes_previous: consumes,
             shares_input_with_previous: shares,
+            cache: None,
         };
         vec![
             stage("q", GemmShape::new(tokens, h, h), false, false),

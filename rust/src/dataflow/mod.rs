@@ -14,23 +14,32 @@
 //! * [`shard`] — multi-accelerator sharding: partition a [`Plan`] across
 //!   devices by strip ranges, inter-chip traffic under the same cost
 //!   algebra ([`crate::arch::interconnect`]).
+//! * [`decode`] — KV-cache-aware decode planning: the autoregressive
+//!   phase model ([`decode::Phase`]), cache edges on [`StageSpec`], and
+//!   [`decode::DecodePlan`] trajectories with cache-resident per-tile TAS
+//!   (head-sharded across devices via [`decode::ShardedDecodePlan`]).
 //!
 //! The generators and the closed forms are developed independently and
 //! cross-checked by property tests: for every shape (ragged included) the
 //! replayed word counts equal the formulas exactly.
 
 pub mod analytic;
+pub mod decode;
 pub mod layer;
 pub mod plan;
 pub mod schedule;
 pub mod shard;
 
 pub use analytic::{ema, EmaBreakdown};
+pub use decode::{
+    CacheEdge, CacheTensor, DecodeDims, DecodePlan, DecodeStagePlan, DecodeStepPlan,
+    Phase, ShardedDecodePlan,
+};
 pub use layer::{LayerPlan, StagePlan, StageSpec};
 pub use plan::{Plan, PlanBody, Strip, StripKind};
 pub use schedule::{for_each_step, step_count, Step};
 pub use shard::{
-    place_stages, shard_gemm, LinkTraffic, ShardAxis, ShardSpec, ShardedPlan,
+    place_stages, shard_gemm, shard_heads, LinkTraffic, ShardAxis, ShardSpec, ShardedPlan,
 };
 
 /// A stationary scheme. `Tas` resolves to `IsOs` or `WsOs` per shape via

@@ -26,11 +26,13 @@
 //! the per-tile decision is not just a per-GEMM argmin in disguise.
 //!
 //! Plans also carry SRAM **residency** flags used by layer-level planning
-//! ([`super::layer`]): an input already resident in SRAM costs no DRAM
-//! reads; an output consumed on-chip by the next stage costs no DRAM
-//! writes.  Step flags keep their schedule semantics (`load_input` means
-//! "tile enters the PE array"); residency is a plan-level property the
-//! cost backends consult when charging DRAM.
+//! ([`super::layer`]) and decode planning ([`super::decode`]): an input
+//! already resident in SRAM costs no DRAM reads; an output consumed
+//! on-chip by the next stage costs no DRAM writes; a resident *weight*
+//! operand (a K/V-cache block the decode planner parked in SRAM) costs no
+//! DRAM reads either.  Step flags keep their schedule semantics
+//! (`load_input` means "tile enters the PE array"); residency is a
+//! plan-level property the cost backends consult when charging DRAM.
 
 use super::analytic::{self, EmaBreakdown};
 use super::schedule::{self, Step};
@@ -109,6 +111,11 @@ pub struct Plan {
     pub body: PlanBody,
     /// Input matrix is already SRAM-resident: operand reads cost no DRAM.
     pub input_resident: bool,
+    /// Weight matrix is SRAM-resident (a parked K/V-cache block): weight
+    /// reads cost no DRAM.  Layer planning never sets this (block weights
+    /// are touched once per pass); the decode planner does, for the hot
+    /// slice of a cache tensor retained across autoregressive steps.
+    pub weight_resident: bool,
     /// Output is consumed on-chip by the next stage: no DRAM writes.
     pub output_resident: bool,
 }
@@ -124,6 +131,7 @@ impl Plan {
             tiling: *tiling,
             body: PlanBody::Fixed(scheme.resolve(shape)),
             input_resident: false,
+            weight_resident: false,
             output_resident: false,
         }
     }
@@ -141,10 +149,26 @@ impl Plan {
         input_resident: bool,
         output_resident: bool,
     ) -> Plan {
+        Plan::tas_cached(shape, tiling, input_resident, false, output_resident)
+    }
+
+    /// Tile-granular TAS with full residency control, including a
+    /// SRAM-resident *weight* operand — the decode planner's entry point
+    /// for cache-resident attention slices ([`super::decode`]).  A free
+    /// stream drops out of the chooser's objective, so the cover flips
+    /// toward re-reading whatever residency made free.
+    pub fn tas_cached(
+        shape: &GemmShape,
+        tiling: &Tiling,
+        input_resident: bool,
+        weight_resident: bool,
+        output_resident: bool,
+    ) -> Plan {
         Plan::plan_cover(
             shape,
             tiling,
             input_resident,
+            weight_resident,
             output_resident,
             Plan::WEIGHT_SCALE,
             Plan::WEIGHT_SCALE,
@@ -167,6 +191,7 @@ impl Plan {
             tiling,
             false,
             false,
+            false,
             Plan::WEIGHT_SCALE,
             Plan::WEIGHT_SCALE,
             false,
@@ -186,7 +211,7 @@ impl Plan {
     ) -> Plan {
         let wi = ((Plan::WEIGHT_SCALE as f64 * input_weight).round() as u64).max(1);
         let ww = ((Plan::WEIGHT_SCALE as f64 * weight_weight).round() as u64).max(1);
-        Plan::plan_cover(shape, tiling, false, false, wi, ww, false)
+        Plan::plan_cover(shape, tiling, false, false, false, wi, ww, false)
     }
 
     /// The strip-cover search behind every per-tile constructor.  `wi` /
@@ -196,6 +221,7 @@ impl Plan {
         shape: &GemmShape,
         tiling: &Tiling,
         input_resident: bool,
+        weight_resident: bool,
         output_resident: bool,
         wi: u64,
         ww: u64,
@@ -224,6 +250,7 @@ impl Plan {
         let nwin_m = ceil_div(gm, wm);
         let nwin_k = ceil_div(gk, wk);
         let in_cost = |w: u64| if input_resident { 0 } else { wi * w };
+        let w_cost = |w: u64| if weight_resident { 0 } else { ww * w };
 
         // Guillotine families: one contiguous block of columns (or rows)
         // goes weight-stationary, the complement input-stationary.  Both
@@ -244,17 +271,17 @@ impl Plan {
             let w_hi = w_total - w_lo;
             // WS cols [0, c), IS cols [c, gk):
             consider(
-                nwin_m * w_lo * ww                           // WS stationary weights
+                w_cost(nwin_m * w_lo)                        // WS stationary weights
                     + in_cost(c * in_total)                  // WS streamed inputs
                     + in_cost(ceil_div(gk - c, wk) * in_total) // IS stationary inputs
-                    + gm * w_hi * ww,                        // IS streamed weights
+                    + w_cost(gm * w_hi),                     // IS streamed weights
                 SplitChoice { col_split: true, ws_block_first: true, at: c },
             );
             // IS cols [0, c), WS cols [c, gk):
             consider(
                 in_cost(ceil_div(c, wk) * in_total)
-                    + gm * w_lo * ww
-                    + nwin_m * w_hi * ww
+                    + w_cost(gm * w_lo)
+                    + w_cost(nwin_m * w_hi)
                     + in_cost((gk - c) * in_total),
                 SplitChoice { col_split: true, ws_block_first: false, at: c },
             );
@@ -265,17 +292,17 @@ impl Plan {
             // IS rows [0, r), WS rows [r, gm):
             consider(
                 in_cost(nwin_k * in_lo)
-                    + r * w_total * ww
-                    + ceil_div(gm - r, wm) * w_total * ww
+                    + w_cost(r * w_total)
+                    + w_cost(ceil_div(gm - r, wm) * w_total)
                     + in_cost(gk * in_hi),
                 SplitChoice { col_split: false, ws_block_first: false, at: r },
             );
             // WS rows [0, r), IS rows [r, gm):
             consider(
-                ceil_div(r, wm) * w_total * ww
+                w_cost(ceil_div(r, wm) * w_total)
                     + in_cost(gk * in_lo)
                     + in_cost(nwin_k * in_hi)
-                    + (gm - r) * w_total * ww,
+                    + w_cost((gm - r) * w_total),
                 SplitChoice { col_split: false, ws_block_first: true, at: r },
             );
         }
@@ -283,7 +310,7 @@ impl Plan {
         // Fixed-scheme fallback: without residency, a spilling scheme can
         // still beat the OS strip covers on extreme aspect ratios (e.g. a
         // single contraction tile makes plain IS's spill column free).
-        if allow_fixed && !input_resident && !output_resident {
+        if allow_fixed && !input_resident && !weight_resident && !output_resident {
             let strip_total = best_cost + Plan::WEIGHT_SCALE * shape.output_words();
             let mut best_fixed: Option<(u64, Scheme)> = None;
             for s in Scheme::FIXED {
@@ -300,6 +327,7 @@ impl Plan {
                         tiling: *tiling,
                         body: PlanBody::Fixed(s),
                         input_resident,
+                        weight_resident,
                         output_resident,
                     };
                 }
@@ -317,6 +345,7 @@ impl Plan {
             tiling: *tiling,
             body: PlanBody::Strips(strips),
             input_resident,
+            weight_resident,
             output_resident,
         }
     }
@@ -381,7 +410,7 @@ impl Plan {
         match &self.body {
             PlanBody::Fixed(s) => {
                 debug_assert!(
-                    !self.input_resident && !self.output_resident,
+                    !self.input_resident && !self.weight_resident && !self.output_resident,
                     "residency is only planned onto strip bodies"
                 );
                 analytic::ema(*s, &self.shape, &self.tiling)
@@ -400,7 +429,7 @@ impl Plan {
                 }
                 EmaBreakdown {
                     input: if self.input_resident { 0 } else { input },
-                    weight,
+                    weight: if self.weight_resident { 0 } else { weight },
                     output: if self.output_resident { 0 } else { output },
                 }
             }
@@ -534,7 +563,7 @@ mod tests {
             if s.load_input && !plan.input_resident {
                 e.input += mi * nr;
             }
-            if s.load_weight {
+            if s.load_weight && !plan.weight_resident {
                 e.weight += nr * kj;
             }
             if s.psum_spill {
@@ -679,6 +708,31 @@ mod tests {
         assert!(out_res.total() < base.total());
         // weight traffic is never resident
         assert!(in_res.weight > 0 && out_res.weight > 0);
+    }
+
+    #[test]
+    fn weight_residency_zeroes_the_weight_stream() {
+        property("weight residency", 80, |rng: &mut Rng| {
+            let shape = GemmShape::new(
+                rng.gen_in(1, 150),
+                rng.gen_in(1, 150),
+                rng.gen_in(1, 150),
+            );
+            let tiling = rand_tiling(rng);
+            let plan = Plan::tas_cached(&shape, &tiling, false, true, false);
+            let e = plan.ema();
+            assert_eq!(e.weight, 0);
+            // closed form still matches the replayed step stream
+            assert_eq!(e, replayed_ema(&plan), "{shape:?}");
+            // with weights free, the chooser reads the input once per
+            // psum window (an all-IS cover; one window when k' covers K)
+            let nwin_k = crate::util::ceil_div(
+                tiling.grid(&shape).2,
+                tiling.window_tiles_k(&shape),
+            );
+            assert_eq!(e.input, nwin_k * shape.input_words());
+            assert_eq!(e.output, shape.output_words());
+        });
     }
 
     #[test]

@@ -445,6 +445,17 @@ pub fn shard_gemm(
     ShardedPlan::new(plan, devices, axis)
 }
 
+/// Head-parallel partition for decode attention: contiguous head ranges
+/// `(lo, hi)` per device.  A head's K/V cache lives wholly on its owner
+/// (no cache words ever cross a link), so aggregate cache residency
+/// scales with the device count — see [`super::decode`].
+pub fn shard_heads(heads: u64, devices: u64) -> Vec<(u64, u64)> {
+    even_bounds(heads, devices.max(1))
+        .windows(2)
+        .map(|w| (w[0], w[1]))
+        .collect()
+}
+
 /// Place chained block stages on devices: contiguous groups balanced by
 /// MAC count (for two devices: QKV+attention on the first, FFN on the
 /// second).  Returns one device index per stage, non-decreasing.
@@ -640,6 +651,26 @@ mod tests {
         let sp = shard_gemm(&shape, &tiling, ShardSpec::new(4, ShardAxis::Auto), 0.0);
         assert!(matches!(sp.plan.body, PlanBody::Strips(_)));
         assert_eq!(sum_emas(&sp.device_emas()), sp.plan.ema());
+    }
+
+    #[test]
+    fn shard_heads_covers_every_head_once() {
+        for heads in [1u64, 12, 16, 96] {
+            for d in [1u64, 2, 3, 4, 8] {
+                if d > heads {
+                    continue;
+                }
+                let ranges = shard_heads(heads, d);
+                assert_eq!(ranges.len() as u64, d);
+                assert_eq!(ranges[0].0, 0);
+                assert_eq!(ranges.last().unwrap().1, heads);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "ranges contiguous");
+                }
+                let total: u64 = ranges.iter().map(|(lo, hi)| hi - lo).sum();
+                assert_eq!(total, heads);
+            }
+        }
     }
 
     #[test]

@@ -5,26 +5,29 @@
 //!   simulate  EMA / energy / cycle report for one GEMM or model
 //!   plan      layer-level plan: per-tile TAS + SRAM residency per block
 //!   shard     partition a model across devices + interconnect costs
+//!   decode    KV-cache-aware decode trajectory (prefill + T steps)
 //!   sweep     sequence-length sweep (crossover analysis)
 //!   trace     dump a tile-step trace (Fig. 1/2 evidence)
 //!   validate  run every artifact against its golden vectors (PJRT)
 //!   serve     closed-loop serving demo over the artifacts
 
 use anyhow::Result;
-use std::collections::BTreeMap;
 use std::time::Duration;
 use tas::arch::{Interconnect, InterconnectConfig};
 use tas::config::AcceleratorConfig;
 use tas::coordinator::{Coordinator, CoordinatorOptions};
 use tas::dataflow::{
-    ema, for_each_step, place_stages, shard_gemm, LayerPlan, Plan, Scheme, ShardAxis,
-    ShardSpec,
+    ema, for_each_step, place_stages, shard_gemm, DecodeDims, DecodePlan, LayerPlan,
+    Plan, Scheme, ShardAxis, ShardSpec, ShardedDecodePlan,
 };
 use tas::energy::EnergyModel;
 use tas::gemm::{GemmShape, Tiling};
 use tas::models::{zoo, LengthDist};
 use tas::report;
-use tas::sim::{estimate_cycles, measure_occupancy, sharded_fused_cost};
+use tas::report::json::{jarr, jbool, jf64, jnum, jobj, jstr, Report};
+use tas::sim::{
+    estimate_cycles, measure_occupancy, sharded_fused_cost, trajectory_fused_cost,
+};
 use tas::util::cli::Args;
 use tas::util::json::Json;
 use tas::util::prng::Rng;
@@ -37,6 +40,7 @@ fn main() {
         Some("simulate") => cmd_simulate(args),
         Some("plan") => cmd_plan(args),
         Some("shard") => cmd_shard(args),
+        Some("decode") => cmd_decode(args),
         Some("sweep") => cmd_sweep(args),
         Some("trace") => cmd_trace(args),
         Some("figs") => cmd_figs(args),
@@ -65,12 +69,14 @@ USAGE: tas <subcommand> [options]
   shard     --model NAME [--seq N] [--devices D] [--axis auto|rows|cols|
             contraction] [--tile N] [--sram WORDS] [--link-aware]
             [--link-bw WORDS] [--config FILE] [--json]
+  decode    --model NAME [--prefill N] [--steps T] [--batch B] [--tile N]
+            [--sram WORDS] [--devices D] [--config FILE] [--json]
   sweep     --model NAME [--tile N] [--seqs a,b,c] [--json]
   trace     --scheme NAME --m M --n N --k K [--tile N] [--limit N] [--json]
   figs      [--m M] [--n N] [--k K] [--tile N]   (Fig. 1/2 tile maps)
   validate  [--artifacts DIR]
   serve     [--artifacts DIR] [--requests N] [--dist librispeech|fixed]
-            [--seed N] [--linger-ms N] [--devices N]
+            [--seed N] [--linger-ms N] [--devices N] [--decode-steps N]
 
 Models: vit-g14, wav2vec2-xls-r-2b, gpt-3, bert-base, bert-large,
         wav2vec2-large";
@@ -108,24 +114,6 @@ fn cmd_tables(mut args: Args) -> Result<()> {
         n => anyhow::bail!("no table {n} in the paper"),
     }
     Ok(())
-}
-
-/// `Json::Num` from a count (exact below 2^53 — every EMA figure here is).
-fn jnum(v: u64) -> Json {
-    Json::Num(v as f64)
-}
-
-fn jstr(v: &str) -> Json {
-    Json::Str(v.to_string())
-}
-
-fn jobj(entries: Vec<(&str, Json)>) -> Json {
-    Json::Obj(
-        entries
-            .into_iter()
-            .map(|(k, v)| (k.to_string(), v))
-            .collect::<BTreeMap<String, Json>>(),
-    )
 }
 
 fn cmd_simulate(mut args: Args) -> Result<()> {
@@ -188,14 +176,14 @@ fn cmd_simulate(mut args: Args) -> Result<()> {
                 ("n", jnum(shape.n)),
                 ("k", jnum(shape.k)),
                 ("count", jnum(count)),
-                ("schemes", Json::Arr(schemes)),
+                ("schemes", jarr(schemes)),
             ]));
         } else {
             println!("{}", t.to_text());
         }
     }
     if json {
-        println!("{}", Json::Arr(out).to_string_compact());
+        Report::new("simulate").field("gemms", jarr(out)).print();
     }
     Ok(())
 }
@@ -229,23 +217,22 @@ fn cmd_plan(mut args: Args) -> Result<()> {
                     ("k", jnum(s.spec.shape.k)),
                     ("count", jnum(s.spec.count)),
                     ("decision", jstr(&s.plan.describe())),
-                    ("input_resident", Json::Bool(s.input_resident)),
-                    ("output_resident", Json::Bool(s.output_resident)),
+                    ("input_resident", jbool(s.input_resident)),
+                    ("output_resident", jbool(s.output_resident)),
                     ("ema_words", jnum(s.ema_words)),
                     ("per_gemm_tas_words", jnum(s.per_gemm_tas_words)),
                 ])
             })
             .collect();
-        let doc = jobj(vec![
-            ("model", jstr(model.name)),
-            ("seq", jnum(seq)),
-            ("sram_words", jnum(sram)),
-            ("stages", Json::Arr(stages)),
-            ("total_ema_words", jnum(plan.total_ema())),
-            ("per_gemm_tas_words", jnum(plan.per_gemm_tas_total())),
-            ("naive_words", jnum(naive)),
-        ]);
-        println!("{}", doc.to_string_compact());
+        Report::new("plan")
+            .field("model", jstr(model.name))
+            .field("seq", jnum(seq))
+            .field("sram_words", jnum(sram))
+            .field("stages", jarr(stages))
+            .field("total_ema_words", jnum(plan.total_ema()))
+            .field("per_gemm_tas_words", jnum(plan.per_gemm_tas_total()))
+            .field("naive_words", jnum(naive))
+            .print();
         return Ok(());
     }
 
@@ -353,7 +340,7 @@ fn cmd_shard(mut args: Args) -> Result<()> {
                     ("ema_words", jnum(dc.ema.total_words())),
                     ("macs", jnum(dc.macs)),
                     ("cycles", jnum(dc.cycles.total_cycles)),
-                    ("energy_pj", Json::Num(dc.energy.total_pj())),
+                    ("energy_pj", jf64(dc.energy.total_pj())),
                     ("link_in_words", jnum(dc.link_in_words)),
                     ("link_out_words", jnum(dc.link_out_words)),
                 ]));
@@ -372,7 +359,7 @@ fn cmd_shard(mut args: Args) -> Result<()> {
                 ("link_words", jnum(cost.link.operand_words)),
                 ("reduce_words", jnum(cost.link.reduce_words)),
                 ("link_cycles", jnum(cost.link_cycles)),
-                ("per_device", Json::Arr(dev_json)),
+                ("per_device", jarr(dev_json)),
             ]));
         } else {
             gemm_rows.push(vec![
@@ -395,51 +382,50 @@ fn cmd_shard(mut args: Args) -> Result<()> {
     let handoff = lp.handoff_words();
 
     if json {
-        let doc = jobj(vec![
-            ("model", jstr(model.name)),
-            ("seq", jnum(seq)),
-            ("devices", jnum(devices)),
-            ("axis", jstr(axis.name())),
-            ("link_aware", Json::Bool(link_aware)),
-            ("link_bandwidth", jnum(icx.cfg.link_bandwidth)),
-            ("gemms", Json::Arr(gemm_json)),
-            (
+        Report::new("shard")
+            .field("model", jstr(model.name))
+            .field("seq", jnum(seq))
+            .field("devices", jnum(devices))
+            .field("axis", jstr(axis.name()))
+            .field("link_aware", jbool(link_aware))
+            .field("link_bandwidth", jnum(icx.cfg.link_bandwidth))
+            .field("gemms", jarr(gemm_json))
+            .field(
                 "totals",
                 jobj(vec![
                     ("dram_words", jnum(total_dram)),
                     ("link_words", jnum(total_link)),
                     ("reduce_words", jnum(total_reduce)),
                     ("inter_chip_words", jnum(total_link + total_reduce)),
-                    ("link_energy_pj", Json::Num(total_link_energy_pj)),
+                    ("link_energy_pj", jf64(total_link_energy_pj)),
                     ("unsharded_dram_words", jnum(unsharded_dram)),
                     ("critical_path_cycles", jnum(critical_cycles)),
                     (
                         "per_device_ema_words",
-                        Json::Arr(dev_ema.iter().map(|w| jnum(*w)).collect()),
+                        jarr(dev_ema.iter().map(|w| jnum(*w)).collect()),
                     ),
                     (
                         "per_device_energy_pj",
-                        Json::Arr(dev_energy_pj.iter().map(|e| Json::Num(*e)).collect()),
+                        jarr(dev_energy_pj.iter().map(|e| jf64(*e)).collect()),
                     ),
                 ]),
-            ),
-            (
+            )
+            .field(
                 "layer_pipeline",
                 jobj(vec![
                     (
                         "placement",
-                        Json::Arr(placement.iter().map(|p| jnum(*p as u64)).collect()),
+                        jarr(placement.iter().map(|p| jnum(*p as u64)).collect()),
                     ),
                     ("handoff_words", jnum(handoff)),
                     ("total_ema_words", jnum(lp.total_ema())),
                     (
                         "per_device_ema_words",
-                        Json::Arr(lp.per_device_ema().iter().map(|w| jnum(*w)).collect()),
+                        jarr(lp.per_device_ema().iter().map(|w| jnum(*w)).collect()),
                     ),
                 ]),
-            ),
-        ]);
-        println!("{}", doc.to_string_compact());
+            )
+            .print();
         return Ok(());
     }
 
@@ -500,6 +486,205 @@ fn cmd_shard(mut args: Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_decode(mut args: Args) -> Result<()> {
+    let name = args.opt_or("model", "bert-base");
+    let tiling = tiling_from(&mut args)?;
+    // --config loads accelerator/[interconnect] from a TOML preset, same
+    // as `tas shard`, so sharded-decode link numbers agree with it.
+    let config = match args.opt("config") {
+        Some(path) => tas::config::Config::load(std::path::Path::new(&path))?,
+        None => tas::config::Config::default(),
+    };
+    let cfg = config.accelerator;
+    let sram = args.opt_u64("sram", cfg.sram_words)?;
+    let prefill = args.opt_u64("prefill", 64)?;
+    let steps = args.opt_u64("steps", 32)?;
+    let batch = args.opt_u64("batch", 8)?;
+    let devices = args.opt_u64("devices", 1)?.max(1);
+    let json = args.flag("json");
+    let model = zoo::by_name(&name)?;
+    args.finish()?;
+    anyhow::ensure!(
+        prefill >= 1 && steps >= 1 && batch >= 1,
+        "--prefill/--steps/--batch must be at least 1"
+    );
+    let dims = DecodeDims::of(&model);
+
+    if devices > 1 {
+        let sp = ShardedDecodePlan::plan(&dims, prefill, steps, batch, &tiling, sram, devices)?;
+        config.interconnect.validate()?;
+        let icx = Interconnect::new(config.interconnect);
+        let link_cycles = sp.link_cycles_per_step(&icx);
+        if json {
+            let per_device: Vec<Json> = sp
+                .per_device
+                .iter()
+                .enumerate()
+                .map(|(dev, p)| {
+                    jobj(vec![
+                        ("device", jnum(dev as u64)),
+                        ("heads", jnum(p.heads_slice)),
+                        ("decode_ema_words", jnum(p.decode_ema())),
+                        ("per_gemm_tas_words", jnum(p.per_gemm_tas_decode_total())),
+                        ("resident_rows", jnum(p.resident_rows)),
+                        ("cache_resident_words", jnum(p.max_cache_resident_words())),
+                    ])
+                })
+                .collect();
+            Report::new("decode")
+                .field("model", jstr(model.name))
+                .field("prefill", jnum(prefill))
+                .field("steps", jnum(steps))
+                .field("batch", jnum(batch))
+                .field("devices", jnum(devices))
+                .field("sram_words", jnum(sram))
+                .field("decode_ema_words", jnum(sp.decode_ema()))
+                .field("per_gemm_tas_words", jnum(sp.per_gemm_tas_decode_total()))
+                .field("max_device_ema_words", jnum(sp.max_device_decode_ema()))
+                .field(
+                    "total_cache_resident_words",
+                    jnum(sp.total_resident_cache_words()),
+                )
+                .field(
+                    "link",
+                    jobj(vec![
+                        ("reduce_words_per_step", jnum(sp.reduce_words_per_step)),
+                        ("gather_words_per_step", jnum(sp.gather_words_per_step)),
+                        ("total_words", jnum(sp.link_words_total())),
+                        ("cycles_per_step", jnum(link_cycles)),
+                    ]),
+                )
+                .field("per_device", jarr(per_device))
+                .print();
+            return Ok(());
+        }
+        let mut t = Table::new(
+            &format!(
+                "{} decode across {} devices (cache sharded by heads): prefill {}, {} steps, batch {}",
+                model.name, devices, prefill, steps, batch
+            ),
+            &["device", "heads", "decode EMA", "vs per-GEMM TAS", "resident rows", "cache in SRAM"],
+        );
+        for (dev, p) in sp.per_device.iter().enumerate() {
+            t.row(vec![
+                dev.to_string(),
+                p.heads_slice.to_string(),
+                sci(p.decode_ema() as f64),
+                pct(p.reduction_vs_per_gemm()),
+                p.resident_rows.to_string(),
+                sci(p.max_cache_resident_words() as f64),
+            ]);
+        }
+        println!("{}", t.to_text());
+        println!(
+            "decode:  total EMA {}   busiest device {}   aggregate cache {} words",
+            sci(sp.decode_ema() as f64),
+            sci(sp.max_device_decode_ema() as f64),
+            sci(sp.total_resident_cache_words() as f64),
+        );
+        println!(
+            "links:   {} reduce + {} gather words/step, {} cycles/step ({} words over the trajectory)",
+            sci(sp.reduce_words_per_step as f64),
+            sci(sp.gather_words_per_step as f64),
+            link_cycles,
+            sci(sp.link_words_total() as f64),
+        );
+        return Ok(());
+    }
+
+    let dp = DecodePlan::plan(&model, prefill, steps, batch, &tiling, sram);
+    let tc = trajectory_fused_cost(&dp, &cfg, &EnergyModel::default());
+    if json {
+        let per_step: Vec<Json> = dp
+            .step_plans
+            .iter()
+            .enumerate()
+            .map(|(t, s)| {
+                jobj(vec![
+                    ("step", jnum(t as u64)),
+                    ("cache_len", jnum(s.cache_len)),
+                    ("hot_rows", jnum(s.hot_rows)),
+                    ("ema_words", jnum(s.total_ema())),
+                    ("per_gemm_tas_words", jnum(s.per_gemm_tas_total())),
+                    ("cache_hot_words", jnum(s.cache_hot_total())),
+                ])
+            })
+            .collect();
+        Report::new("decode")
+            .field("model", jstr(model.name))
+            .field("prefill", jnum(prefill))
+            .field("steps", jnum(steps))
+            .field("batch", jnum(batch))
+            .field("devices", jnum(1))
+            .field("sram_words", jnum(sram))
+            .field("resident_rows", jnum(dp.resident_rows))
+            .field("row_words", jnum(dp.row_words))
+            .field("cache_resident_words", jnum(dp.max_cache_resident_words()))
+            .field("act_peak_words", jnum(dp.act_peak_words))
+            .field("prefill_ema_words", jnum(dp.prefill.total_ema()))
+            .field("decode_ema_words", jnum(dp.decode_ema()))
+            .field("per_gemm_tas_words", jnum(dp.per_gemm_tas_decode_total()))
+            .field("per_token_ema_words", jf64(dp.per_token_ema()))
+            .field("per_token_per_gemm_tas_words", jf64(dp.per_token_per_gemm_tas()))
+            .field("reduction_vs_per_gemm", jf64(dp.reduction_vs_per_gemm()))
+            .field("trajectory_cycles", jnum(tc.cycles.total_cycles))
+            .field("trajectory_energy_pj", jf64(tc.energy.total_pj()))
+            .field("per_step", jarr(per_step))
+            .print();
+        return Ok(());
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "{} decode trajectory: prefill {} → {} steps at batch {} (tile {}, SRAM {} words)",
+            model.name, prefill, steps, batch, tiling.tm, sram
+        ),
+        &["step", "cache len", "hot rows", "EMA words", "vs per-GEMM TAS", "cache from SRAM"],
+    );
+    let shown: Vec<usize> = if dp.step_plans.len() <= 6 {
+        (0..dp.step_plans.len()).collect()
+    } else {
+        vec![0, 1, dp.step_plans.len() / 2, dp.step_plans.len() - 1]
+    };
+    for t_idx in shown {
+        let s = &dp.step_plans[t_idx];
+        t.row(vec![
+            t_idx.to_string(),
+            s.cache_len.to_string(),
+            s.hot_rows.to_string(),
+            sci(s.total_ema() as f64),
+            pct(s.reduction_vs_per_gemm()),
+            sci(s.cache_hot_total() as f64),
+        ]);
+    }
+    println!("{}", t.to_text());
+    println!(
+        "cache:   {} resident rows × {} words/row = {} words parked (+{} activation peak, budget {})",
+        dp.resident_rows,
+        dp.row_words,
+        sci(dp.max_cache_resident_words() as f64),
+        sci(dp.act_peak_words as f64),
+        sci(dp.budget as f64),
+    );
+    println!(
+        "decode:  {} words over {} tokens -> {} words/token vs per-GEMM TAS {} ({} saved)",
+        sci(dp.decode_ema() as f64),
+        steps * batch,
+        sci(dp.per_token_ema()),
+        sci(dp.per_token_per_gemm_tas()),
+        pct(dp.reduction_vs_per_gemm()),
+    );
+    println!(
+        "total:   prefill {} + decode {} = {} words; {} cycles, {:.2} mJ (fused trajectory replay)",
+        sci(dp.prefill.total_ema() as f64),
+        sci(dp.decode_ema() as f64),
+        sci(dp.total_ema() as f64),
+        tc.cycles.total_cycles,
+        tc.energy.total_pj() / 1e9,
+    );
+    Ok(())
+}
+
 fn cmd_sweep(mut args: Args) -> Result<()> {
     let name = args.opt_or("model", "wav2vec2-large");
     let tiling = tiling_from(&mut args)?;
@@ -555,11 +740,10 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
         }
     }
     if json {
-        let doc = jobj(vec![
-            ("model", jstr(model.name)),
-            ("rows", Json::Arr(rows)),
-        ]);
-        println!("{}", doc.to_string_compact());
+        Report::new("sweep")
+            .field("model", jstr(model.name))
+            .field("rows", jarr(rows))
+            .print();
     } else {
         println!("{}", t.to_text());
     }
@@ -586,27 +770,26 @@ fn cmd_trace(mut args: Args) -> Result<()> {
                     ("i", jnum(s.i)),
                     ("r", jnum(s.r)),
                     ("j", jnum(s.j)),
-                    ("load_input", Json::Bool(s.load_input)),
-                    ("load_weight", Json::Bool(s.load_weight)),
-                    ("psum_fetch", Json::Bool(s.psum_fetch)),
-                    ("psum_spill", Json::Bool(s.psum_spill)),
-                    ("store_out", Json::Bool(s.store_out)),
+                    ("load_input", jbool(s.load_input)),
+                    ("load_weight", jbool(s.load_weight)),
+                    ("psum_fetch", jbool(s.psum_fetch)),
+                    ("psum_spill", jbool(s.psum_spill)),
+                    ("store_out", jbool(s.store_out)),
                 ]));
             }
             count += 1;
         });
-        let doc = jobj(vec![
-            ("scheme", jstr(scheme.resolve(&shape).name())),
-            ("m", jnum(m)),
-            ("n", jnum(n)),
-            ("k", jnum(k)),
-            ("tile_m", jnum(tiling.tm)),
-            ("tile_n", jnum(tiling.tn)),
-            ("tile_k", jnum(tiling.tk)),
-            ("total_steps", jnum(count)),
-            ("steps", Json::Arr(steps)),
-        ]);
-        println!("{}", doc.to_string_compact());
+        Report::new("trace")
+            .field("scheme", jstr(scheme.resolve(&shape).name()))
+            .field("m", jnum(m))
+            .field("n", jnum(n))
+            .field("k", jnum(k))
+            .field("tile_m", jnum(tiling.tm))
+            .field("tile_n", jnum(tiling.tn))
+            .field("tile_k", jnum(tiling.tk))
+            .field("total_steps", jnum(count))
+            .field("steps", jarr(steps))
+            .print();
         return Ok(());
     }
     println!(
@@ -674,6 +857,7 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     let seed = args.opt_u64("seed", 42)?;
     let linger = Duration::from_millis(args.opt_u64("linger-ms", 2)?);
     let max_devices = args.opt_u64("devices", 1)?.max(1);
+    let decode_steps = args.opt_u64("decode-steps", 0)?;
     args.finish()?;
     anyhow::ensure!(
         tas::runtime::artifacts_available(&dir),
@@ -708,6 +892,22 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let responses = coordinator.run_closed_loop(requests)?;
     let wall = t0.elapsed();
+
+    if decode_steps > 0 {
+        // Continuous-batching demo: keep generating one token per step on
+        // the decode lane (planner-accounted until decode artifacts land).
+        for t in 0..decode_steps {
+            coordinator.enqueue_decode_step(max_len + t)?;
+        }
+        // wait (bounded) until the lane drains so the report sees every
+        // step — each slot is one token, so the counter is exact
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while coordinator.metrics().snapshot().decode_tokens < decode_steps
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
 
     let snap = coordinator.metrics().snapshot();
     let total_tokens: usize = responses.iter().map(|r| r.logits.len() / r.vocab).sum();
@@ -753,6 +953,16 @@ fn cmd_serve(mut args: Args) -> Result<()> {
             snap.per_device_ema_words.len(),
             per_dev.join(", "),
             sci(snap.link_words as f64)
+        );
+    }
+    if snap.decode_batches > 0 {
+        println!(
+            "decode lane     {} steps / {} tokens, {} EMA words/token ({} below per-GEMM TAS, {} cache words from SRAM)",
+            snap.decode_batches,
+            snap.decode_tokens,
+            sci(snap.decode_per_token_ema()),
+            pct(snap.decode_reduction_vs_per_gemm()),
+            sci(snap.decode_cache_hot_words as f64)
         );
     }
     coordinator.shutdown();

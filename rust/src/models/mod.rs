@@ -103,30 +103,33 @@ impl ModelSpec {
     /// conservatively treated as DRAM round-trips.  Stage shapes × counts
     /// sum to exactly the `linear_gemms` inventory.
     pub fn block_stages(&self, tokens: u64) -> Vec<crate::dataflow::StageSpec> {
-        use crate::dataflow::StageSpec;
-        assert!(tokens > 0);
-        let h = self.hidden;
-        let f = self.ffn;
-        let l = self.layers;
-        let stage = |name, shape, count, consumes, shares| StageSpec {
-            name,
-            shape,
-            count,
-            consumes_previous: consumes,
-            shares_input_with_previous: shares,
-        };
-        let mut v = vec![
-            stage("q", GemmShape::new(tokens, h, h), l, false, false),
-            stage("k", GemmShape::new(tokens, h, h), l, false, true),
-            stage("v", GemmShape::new(tokens, h, h), l, false, true),
-            stage("attn_out", GemmShape::new(tokens, h, h), l, false, false),
-            stage("ffn1", GemmShape::new(tokens, h, f), l, true, false),
-            stage("ffn2", GemmShape::new(tokens, f, h), l, true, false),
-        ];
-        if let Some(vocab) = self.vocab {
-            v.push(stage("lm_head", GemmShape::new(tokens, h, vocab), 1, false, false));
-        }
-        v
+        // One source of truth for the block inventory: the decode module's
+        // sliced builder at full slices (it also serves the head-sharded
+        // prefill path).  The coordinator's manifest-dims twin
+        // (`coordinator::decisions::bucket_stages`) stays a deliberate
+        // independent copy, pinned by a cross-implementation contract test.
+        let dims = crate::dataflow::DecodeDims::of(self);
+        crate::dataflow::decode::prefill_stages_sliced(
+            &dims,
+            tokens,
+            dims.heads,
+            dims.ffn,
+            dims.vocab,
+        )
+    }
+
+    /// Decode-phase stage inventory: ONE autoregressive step at `batch`
+    /// in-flight sequences whose K/V caches hold `cache_len` positions.
+    /// Unlike [`ModelSpec::block_stages`] this includes the attention
+    /// matmuls — during decode they read the growing K/V cache, which is
+    /// exactly the traffic the decode planner
+    /// ([`crate::dataflow::DecodePlan`]) keeps SRAM-resident.
+    pub fn decode_stages(&self, batch: u64, cache_len: u64) -> Vec<crate::dataflow::StageSpec> {
+        crate::dataflow::decode::decode_step_stages(
+            &crate::dataflow::DecodeDims::of(self),
+            batch,
+            cache_len,
+        )
     }
 
     /// Attention score (Q·Kᵀ) and context (P·V) matmuls — per head.
@@ -209,6 +212,26 @@ mod tests {
                 assert_eq!(stage_macs, m.total_linear_macs(tokens), "{}", m.name);
             }
         }
+    }
+
+    #[test]
+    fn decode_stages_inventory_matches_phase_shapes() {
+        let m = bert_base();
+        let stages = m.decode_stages(8, 96);
+        // linear projections are skinny (M = batch) ...
+        let q = stages.iter().find(|s| s.name == "q").unwrap();
+        assert_eq!(q.shape, GemmShape::new(8, 768, 768));
+        // ... attention runs per sequence per head against the cache
+        let qk = stages.iter().find(|s| s.name == "qk_t").unwrap();
+        assert_eq!(qk.shape, GemmShape::new(1, 64, 96));
+        assert_eq!(qk.count, m.layers * m.heads * 8);
+        assert!(qk.cache.is_some());
+        // the cache length only scales the attention stages
+        let longer = m.decode_stages(8, 512);
+        let qk_long = longer.iter().find(|s| s.name == "qk_t").unwrap();
+        assert_eq!(qk_long.shape.k, 512);
+        let q_long = longer.iter().find(|s| s.name == "q").unwrap();
+        assert_eq!(q_long.shape, q.shape);
     }
 
     #[test]

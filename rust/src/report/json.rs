@@ -1,0 +1,106 @@
+//! Shared JSON report assembly for the CLI.
+//!
+//! Every `tas` subcommand used to hand-roll its own `--json` document in
+//! `main.rs`; this module centralises the value helpers and wraps each
+//! document in one consistent envelope, so `simulate`/`plan`/`shard`/
+//! `sweep`/`trace`/`decode` all emit:
+//!
+//! ```json
+//! {"command": "<subcommand>", "schema_version": 1, ...fields}
+//! ```
+//!
+//! Downstream tooling dispatches on `command` and can rely on the field
+//! names staying put within a schema version.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// `Json::Num` from a count (exact below 2^53 — every EMA figure is).
+pub fn jnum(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+pub fn jf64(v: f64) -> Json {
+    Json::Num(v)
+}
+
+pub fn jstr(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+pub fn jbool(v: bool) -> Json {
+    Json::Bool(v)
+}
+
+pub fn jarr(items: Vec<Json>) -> Json {
+    Json::Arr(items)
+}
+
+pub fn jobj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<String, Json>>(),
+    )
+}
+
+/// Builder for one subcommand's report document.
+pub struct Report {
+    fields: Vec<(String, Json)>,
+}
+
+impl Report {
+    pub fn new(command: &str) -> Report {
+        Report {
+            fields: vec![
+                ("command".to_string(), jstr(command)),
+                ("schema_version".to_string(), jnum(1)),
+            ],
+        }
+    }
+
+    pub fn field(mut self, key: &str, value: Json) -> Report {
+        self.fields.push((key.to_string(), value));
+        self
+    }
+
+    pub fn into_json(self) -> Json {
+        Json::Obj(self.fields.into_iter().collect::<BTreeMap<String, Json>>())
+    }
+
+    /// Print the document compactly to stdout — the one emission path
+    /// every subcommand shares.
+    pub fn print(self) {
+        println!("{}", self.into_json().to_string_compact());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelope_carries_command_and_version() {
+        let doc = Report::new("simulate")
+            .field("total", jnum(42))
+            .field("ok", jbool(true))
+            .into_json();
+        assert_eq!(doc.get("command").unwrap().as_str(), Some("simulate"));
+        assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(1));
+        assert_eq!(doc.get("total").unwrap().as_u64(), Some(42));
+        // round-trips through the parser
+        let text = doc.to_string_compact();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+    }
+
+    #[test]
+    fn helpers_build_the_expected_values() {
+        assert_eq!(jnum(7), Json::Num(7.0));
+        assert_eq!(jstr("x"), Json::Str("x".into()));
+        assert_eq!(jbool(false), Json::Bool(false));
+        let o = jobj(vec![("a", jnum(1)), ("b", jarr(vec![jnum(2)]))]);
+        assert_eq!(o.get("a").unwrap().as_u64(), Some(1));
+        assert_eq!(o.get("b").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

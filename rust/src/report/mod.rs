@@ -1,9 +1,11 @@
 //! Paper-table generators: each function renders one of the paper's
 //! tables from the analytic model / simulator, shaped like the original
 //! so the two can be diffed by eye.  Used by `tas tables`, the benches
-//! and EXPERIMENTS.md.
+//! and EXPERIMENTS.md.  [`json`] holds the shared `--json` report
+//! envelope every CLI subcommand emits.
 
 pub mod figviz;
+pub mod json;
 
 use crate::dataflow::{analytic, ema, Scheme};
 use crate::energy::{ayaka::ayaka_workload_read_ema, workload_read_ema};

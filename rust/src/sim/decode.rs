@@ -1,0 +1,181 @@
+//! Trajectory-level fused cost: price a whole decode trajectory (prefill
+//! plus every autoregressive step) through the [`CostSink`] machinery in
+//! one pass.
+//!
+//! The [`crate::dataflow::DecodePlan`] is a sequence of stage plans whose
+//! instances repeat `count` times with identical step streams, so the
+//! replay walks each distinct [`Plan`] once through an [`EmaSink`] and a
+//! [`PipelineSink`] and scales the observed statistics by the instance
+//! count — words, MACs, steps and switches are all exactly linear in the
+//! count, and the cycle/energy closed forms derive from those totals the
+//! same way [`super::replay::fused_cost`] derives them for one GEMM.
+//! Every EMA word is therefore *replayed*, never assumed: the equality
+//! between this pass and the planner's closed forms is pinned by
+//! `rust/tests/decode_invariants.rs`.
+
+use crate::arch::dram::DramStats;
+use crate::config::AcceleratorConfig;
+use crate::dataflow::{DecodePlan, Plan};
+use crate::energy::{EnergyCost, EnergyModel};
+use crate::sim::cycles::{cycles_from_parts, CycleEstimate};
+use crate::sim::ema::SimEma;
+use crate::sim::pipeline::{PipelineSink, PipelineStats};
+use crate::sim::replay::{replay, CostSink, EmaSink};
+
+/// Every cost model's verdict on one decode trajectory.
+#[derive(Clone, Debug)]
+pub struct TrajectoryCost {
+    /// Trajectory-wide DRAM accounting (prefill + decode).
+    pub ema: SimEma,
+    /// Total MACs executed.
+    pub macs: u64,
+    pub cycles: CycleEstimate,
+    pub energy: EnergyCost,
+    pub pipeline: PipelineStats,
+    /// Replayed DRAM words of the prefill phase.
+    pub prefill_ema_words: u64,
+    /// Replayed DRAM words per decode step (length = `steps`).
+    pub per_step_ema: Vec<u64>,
+}
+
+impl TrajectoryCost {
+    /// Replayed decode-phase DRAM words (sum over steps).
+    pub fn decode_ema_words(&self) -> u64 {
+        self.per_step_ema.iter().sum()
+    }
+
+    /// Replayed trajectory total.
+    pub fn dram_words(&self) -> u64 {
+        let (i, w, o) = self.ema.table2();
+        i + w + o
+    }
+}
+
+#[derive(Default)]
+struct Acc {
+    stats: DramStats,
+    steps: u64,
+    macs: u64,
+    pipeline: PipelineStats,
+}
+
+impl Acc {
+    /// Replay `plan` once, scale everything by `count`, and return the
+    /// table2 words this plan group contributed.
+    fn add(&mut self, plan: &Plan, count: u64, cfg: &AcceleratorConfig) -> u64 {
+        let mut ema = EmaSink::new(cfg.dram());
+        let mut pipe = PipelineSink::new(cfg);
+        {
+            let sinks: &mut [&mut dyn CostSink] = &mut [&mut ema, &mut pipe];
+            replay(plan, sinks);
+        }
+        let sim = ema.finish();
+        self.stats.input_read_words += count * sim.stats.input_read_words;
+        self.stats.weight_read_words += count * sim.stats.weight_read_words;
+        self.stats.psum_read_words += count * sim.stats.psum_read_words;
+        self.stats.psum_write_words += count * sim.stats.psum_write_words;
+        self.stats.output_write_words += count * sim.stats.output_write_words;
+        self.stats.direction_switches += count * sim.stats.direction_switches;
+        self.steps += count * sim.steps;
+        self.macs += count * plan.shape.macs();
+        let p = pipe.finish();
+        self.pipeline.steps += count * p.steps;
+        self.pipeline.compute_cycles += count * p.compute_cycles;
+        self.pipeline.stall_cycles += count * p.stall_cycles;
+        self.pipeline.stalled_steps += count * p.stalled_steps;
+        self.pipeline.total_cycles += count * p.total_cycles;
+        let (i, w, o) = sim.table2();
+        count * (i + w + o)
+    }
+}
+
+/// Replay a whole decode trajectory once and report EMA, cycles, energy
+/// and pipeline stalls, plus the per-step decode EMA profile.
+pub fn trajectory_fused_cost(
+    dp: &DecodePlan,
+    cfg: &AcceleratorConfig,
+    energy: &EnergyModel,
+) -> TrajectoryCost {
+    let mut acc = Acc::default();
+    let mut prefill_ema_words = 0u64;
+    for stage in &dp.prefill.stages {
+        prefill_ema_words += acc.add(&stage.plan, stage.spec.count, cfg);
+    }
+    let mut per_step_ema = Vec::with_capacity(dp.step_plans.len());
+    for step in &dp.step_plans {
+        let mut step_words = 0u64;
+        for stage in &step.stages {
+            for slice in &stage.slices {
+                step_words += acc.add(slice, stage.spec.count, cfg);
+            }
+        }
+        per_step_ema.push(step_words);
+    }
+    let ema = SimEma { stats: acc.stats, steps: acc.steps };
+    let cycles = cycles_from_parts(acc.macs, &ema, cfg);
+    let (i, w, o) = ema.table2();
+    let energy = energy.traffic_energy(acc.macs, i + w + o);
+    TrajectoryCost {
+        ema,
+        macs: acc.macs,
+        cycles,
+        energy,
+        pipeline: acc.pipeline,
+        prefill_ema_words,
+        per_step_ema,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::DecodeDims;
+    use crate::gemm::Tiling;
+    use crate::models::zoo;
+
+    #[test]
+    fn trajectory_replay_matches_planner_closed_forms() {
+        let dims = DecodeDims::of(&zoo::bert_base());
+        let cfg = AcceleratorConfig::default();
+        let em = EnergyModel::default();
+        for residency in [true, false] {
+            let dp = DecodePlan::plan_policy(
+                &dims,
+                16,
+                3,
+                2,
+                &Tiling::square(16),
+                256 * 1024,
+                residency,
+            );
+            let tc = trajectory_fused_cost(&dp, &cfg, &em);
+            assert_eq!(tc.prefill_ema_words, dp.prefill.total_ema());
+            assert_eq!(tc.per_step_ema.len(), dp.step_plans.len());
+            for (replayed, planned) in tc.per_step_ema.iter().zip(&dp.step_plans) {
+                assert_eq!(*replayed, planned.total_ema(), "residency={residency}");
+            }
+            assert_eq!(tc.dram_words(), dp.total_ema());
+            assert_eq!(tc.decode_ema_words(), dp.decode_ema());
+            assert!(tc.macs > 0);
+            assert!(tc.cycles.total_cycles > 0);
+            assert!(tc.energy.total_pj() > 0.0);
+            assert!(tc.pipeline.total_cycles > 0);
+        }
+    }
+
+    #[test]
+    fn cache_residency_cuts_replayed_traffic_too() {
+        let dims = DecodeDims::of(&zoo::bert_base());
+        let cfg = AcceleratorConfig::default();
+        let em = EnergyModel::default();
+        let t = Tiling::square(16);
+        let on = DecodePlan::plan_policy(&dims, 32, 4, 1, &t, 256 * 1024, true);
+        let off = DecodePlan::plan_policy(&dims, 32, 4, 1, &t, 256 * 1024, false);
+        let c_on = trajectory_fused_cost(&on, &cfg, &em);
+        let c_off = trajectory_fused_cost(&off, &cfg, &em);
+        assert!(c_on.decode_ema_words() < c_off.decode_ema_words());
+        assert!(c_on.energy.total_pj() < c_off.energy.total_pj());
+        // compute is identical — only data movement changed
+        assert_eq!(c_on.macs, c_off.macs);
+    }
+}

@@ -37,6 +37,7 @@ pub fn simulate_dram_timing_plan(plan: &Plan, cfg: DramTimingConfig) -> DramTimi
             nr,
             kj,
             plan.input_resident,
+            plan.weight_resident,
             plan.output_resident,
         );
     });
@@ -55,6 +56,7 @@ pub(crate) fn charge_timing_step(
     nr: u64,
     kj: u64,
     input_resident: bool,
+    weight_resident: bool,
     output_resident: bool,
 ) {
     let (i0, r0, j0) = (s.i * tiling.tm, s.r * tiling.tn, s.j * tiling.tk);
@@ -89,7 +91,7 @@ pub(crate) fn charge_timing_step(
             );
         }
     }
-    if s.load_weight {
+    if s.load_weight && !weight_resident {
         for dr in 0..nr {
             dram.access(
                 DramDir::Read,

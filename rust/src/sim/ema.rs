@@ -40,8 +40,9 @@ impl SimEma {
 /// the fused replay ([`crate::sim::replay`]) and anything else that walks
 /// a [`Plan`]: one accounting rule, every consumer.
 ///
-/// `input_resident` / `output_resident` suppress the corresponding DRAM
-/// streams (the tensor lives in SRAM — see [`crate::dataflow::layer`]).
+/// `input_resident` / `weight_resident` / `output_resident` suppress the
+/// corresponding DRAM streams (the tensor lives in SRAM — see
+/// [`crate::dataflow::layer`] and [`crate::dataflow::decode`]).
 pub(crate) fn charge_step(
     dram: &mut Dram,
     s: &Step,
@@ -49,6 +50,7 @@ pub(crate) fn charge_step(
     nr: u64,
     kj: u64,
     input_resident: bool,
+    weight_resident: bool,
     output_resident: bool,
 ) {
     if s.scalar_traffic {
@@ -69,7 +71,7 @@ pub(crate) fn charge_step(
     if s.load_input && !input_resident {
         dram.transfer(Stream::Input, mi * nr);
     }
-    if s.load_weight {
+    if s.load_weight && !weight_resident {
         dram.transfer(Stream::Weight, nr * kj);
     }
     if s.psum_fetch {
@@ -97,7 +99,16 @@ pub fn simulate_ema_plan(plan: &Plan, dram: &mut Dram) -> SimEma {
         let mi = tile_extent(shape.m, tiling.tm, s.i);
         let nr = tile_extent(shape.n, tiling.tn, s.r);
         let kj = tile_extent(shape.k, tiling.tk, s.j);
-        charge_step(dram, &s, mi, nr, kj, plan.input_resident, plan.output_resident);
+        charge_step(
+            dram,
+            &s,
+            mi,
+            nr,
+            kj,
+            plan.input_resident,
+            plan.weight_resident,
+            plan.output_resident,
+        );
     });
     SimEma { stats: dram.stats(), steps }
 }

@@ -18,11 +18,15 @@
 //!   [`replay::CostSink`] over the fused pass,
 //! * [`shard`] — per-device cost replay for multi-accelerator shards
 //!   ([`crate::dataflow::shard`]), link traffic costed by
-//!   [`crate::arch::Interconnect`].
+//!   [`crate::arch::Interconnect`],
+//! * [`decode`] — trajectory-level fused cost for decode plans
+//!   ([`crate::dataflow::DecodePlan`]): prefill plus every autoregressive
+//!   step priced through the same sinks in one pass.
 //!
 //! [`Plan`]: crate::dataflow::Plan
 
 pub mod cycles;
+pub mod decode;
 pub mod dram_trace;
 pub mod ema;
 pub mod functional;
@@ -33,6 +37,7 @@ pub mod roofline;
 pub mod shard;
 
 pub use cycles::{estimate_cycles, estimate_cycles_plan, CycleEstimate};
+pub use decode::{trajectory_fused_cost, TrajectoryCost};
 pub use dram_trace::{simulate_dram_timing, simulate_dram_timing_plan};
 pub use ema::{simulate_ema, simulate_ema_plan, SimEma};
 pub use replay::{fused_cost, CostSink, EmaSink, FusedCost, StepCtx, TimingSink};

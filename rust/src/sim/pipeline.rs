@@ -115,7 +115,7 @@ impl CostSink for PipelineSink {
                 read_words += mi * nr;
                 dir(DramDir::Read, &mut switches);
             }
-            if s.load_weight {
+            if s.load_weight && !ctx.plan.weight_resident {
                 read_words += nr * kj;
                 dir(DramDir::Read, &mut switches);
             }

@@ -89,6 +89,7 @@ impl CostSink for EmaSink {
             ctx.nr,
             ctx.kj,
             ctx.plan.input_resident,
+            ctx.plan.weight_resident,
             ctx.plan.output_resident,
         );
     }
@@ -122,6 +123,7 @@ impl CostSink for TimingSink {
             ctx.nr,
             ctx.kj,
             ctx.plan.input_resident,
+            ctx.plan.weight_resident,
             ctx.plan.output_resident,
         );
     }

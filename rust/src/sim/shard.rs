@@ -106,10 +106,19 @@ pub fn sharded_fused_cost(
     let link = sp.link_traffic();
     let mut link_cycles = 0u64;
     if link.operand_words > 0 {
-        link_cycles += icx.p2p_cycles(link.operand_words);
+        // Ring all-gather: every device forwards its share over its own
+        // link each round, instead of one serialized p2p of the total.
+        let share = link.operand_words.div_ceil(sp.devices);
+        link_cycles += icx.all_gather_cycles(share, sp.devices);
     }
     if link.reduce_words > 0 {
-        link_cycles += icx.reduce_cycles(link.reduce_words, sp.devices);
+        // Collective tree reduce of the full-output psum payload: the
+        // pairwise rounds run on disjoint links, so reduce time scales
+        // with ceil(log2 D) payloads, not with the (D-1) copies the
+        // serialized point-to-point chain streamed (ROADMAP item).
+        let payload = sp.plan.shape.output_words();
+        let active = link.reduce_words / payload + 1;
+        link_cycles += icx.tree_reduce_cycles(payload, active);
     }
     let link_energy_pj = icx.transfer_energy_pj(link.total());
 
@@ -220,5 +229,38 @@ mod tests {
         assert!(c.link.reduce_words > 0);
         assert!(c.link_cycles > 0);
         assert!(c.link_energy_pj > 0.0);
+    }
+
+    #[test]
+    fn collective_reduce_beats_serialized_chain_at_scale() {
+        // The psum reduce rides the tree primitive: at 4+ devices its
+        // serialized time must undercut streaming every (D-1) psum copy
+        // through one link, which is what the old point-to-point model
+        // charged.
+        let shape = GemmShape::new(512, 1024, 512);
+        let icx = Interconnect::default();
+        for devices in [4u64, 8] {
+            let (_, c) = cost(shape, devices, ShardAxis::Contraction);
+            let serialized = icx.p2p_cycles(c.link.reduce_words);
+            assert!(
+                c.link_cycles < serialized,
+                "d={devices}: {} >= {serialized}",
+                c.link_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn operand_traffic_rides_the_all_gather_ring() {
+        // Rows shard of an IS GEMM: every device gathers the remote
+        // weight columns; (D-1) rounds of one per-device share each.
+        let shape = GemmShape::new(64, 768, 768);
+        let icx = Interconnect::default();
+        let d = 4u64;
+        let (_, c) = cost(shape, d, ShardAxis::Rows);
+        assert!(c.link.operand_words > 0);
+        let share = c.link.operand_words.div_ceil(d);
+        assert_eq!(c.link_cycles, icx.all_gather_cycles(share, d));
+        assert!(c.link_cycles < icx.p2p_cycles(c.link.operand_words));
     }
 }

@@ -99,10 +99,40 @@ fn simulate_json_lists_all_schemes() {
     let (ok, stdout, _) = tas(&["simulate", "--m", "64", "--n", "64", "--k", "64", "--json"]);
     assert!(ok);
     let doc = tas::util::json::Json::parse(stdout.trim()).expect("valid json");
-    let gemms = doc.as_arr().unwrap();
+    let gemms = doc.get("gemms").unwrap().as_arr().unwrap();
     assert_eq!(gemms.len(), 1);
     let schemes = gemms[0].get("schemes").unwrap().as_arr().unwrap();
     assert_eq!(schemes.len(), 8); // 7 fixed + tas
+}
+
+/// Every subcommand's --json document carries the shared envelope
+/// (`report::json::Report`): a command name and a schema version.
+#[test]
+fn json_reports_share_one_envelope() {
+    let cases: Vec<(&str, Vec<&str>)> = vec![
+        ("simulate", vec!["simulate", "--m", "64", "--n", "64", "--k", "64", "--json"]),
+        ("plan", vec!["plan", "--model", "bert-base", "--seq", "64", "--json"]),
+        (
+            "shard",
+            vec!["shard", "--model", "bert-base", "--seq", "64", "--devices", "2", "--json"],
+        ),
+        ("sweep", vec!["sweep", "--model", "bert-base", "--seqs", "64", "--json"]),
+        (
+            "trace",
+            vec!["trace", "--scheme", "is-os", "--m", "32", "--n", "32", "--k", "32", "--json"],
+        ),
+        (
+            "decode",
+            vec!["decode", "--model", "bert-base", "--prefill", "16", "--steps", "2", "--json"],
+        ),
+    ];
+    for (command, args) in cases {
+        let (ok, stdout, stderr) = tas(&args);
+        assert!(ok, "{command}: {stderr}");
+        let doc = tas::util::json::Json::parse(stdout.trim()).expect(command);
+        assert_eq!(doc.get("command").unwrap().as_str(), Some(command));
+        assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(1));
+    }
 }
 
 #[test]
@@ -186,6 +216,61 @@ fn shard_loads_interconnect_from_config_file() {
     assert!(ok);
     let doc = tas::util::json::Json::parse(stdout.trim()).expect("valid json");
     assert_eq!(doc.get("link_bandwidth").unwrap().as_u64(), Some(4));
+}
+
+#[test]
+fn decode_reports_trajectory_and_beats_per_gemm() {
+    let (ok, stdout, stderr) = tas(&[
+        "decode", "--model", "bert-base", "--prefill", "32", "--steps", "4", "--batch", "2",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("decode trajectory"));
+    assert!(stdout.contains("resident rows"));
+    assert!(stdout.contains("words/token"));
+}
+
+#[test]
+fn decode_json_runs_across_the_model_zoo() {
+    for model in [
+        "bert-base",
+        "bert-large",
+        "wav2vec2-large",
+        "vit-g14",
+        "wav2vec2-xls-r-2b",
+        "gpt-3",
+    ] {
+        let (ok, stdout, stderr) = tas(&[
+            "decode", "--model", model, "--prefill", "16", "--steps", "2", "--batch", "1",
+            "--json",
+        ]);
+        assert!(ok, "{model}: {stderr}");
+        let doc = tas::util::json::Json::parse(stdout.trim()).expect("valid json");
+        let plan = doc.get("decode_ema_words").unwrap().as_u64().unwrap();
+        let base = doc.get("per_gemm_tas_words").unwrap().as_u64().unwrap();
+        assert!(plan <= base, "{model}: decode {plan} > per-gemm {base}");
+        let steps = doc.get("per_step").unwrap().as_arr().unwrap();
+        assert_eq!(steps.len(), 2);
+        assert_eq!(steps[0].get("cache_len").unwrap().as_u64(), Some(17));
+    }
+}
+
+#[test]
+fn decode_shards_the_cache_by_heads() {
+    let (ok, stdout, stderr) = tas(&[
+        "decode", "--model", "bert-base", "--prefill", "16", "--steps", "2", "--batch", "4",
+        "--devices", "4", "--json",
+    ]);
+    assert!(ok, "{stderr}");
+    let doc = tas::util::json::Json::parse(stdout.trim()).expect("valid json");
+    let per_device = doc.get("per_device").unwrap().as_arr().unwrap();
+    assert_eq!(per_device.len(), 4);
+    let heads: u64 = per_device
+        .iter()
+        .map(|d| d.get("heads").unwrap().as_u64().unwrap())
+        .sum();
+    assert_eq!(heads, 12, "bert-base heads partition exactly");
+    let link = doc.get("link").unwrap();
+    assert!(link.get("total_words").unwrap().as_u64().unwrap() > 0);
 }
 
 #[test]
