@@ -1,15 +1,18 @@
-//! Bench E9 — KV-cache-aware decode planning across the model zoo.
+//! Bench E9 — KV-cache-aware decode planning across the model zoo,
+//! paged vs uniform cache residency.
 //!
 //! For every zoo model at batch {1, 8, 32}, plan a decode trajectory
-//! (prefill 64, 32 steps) and report per-token decode EMA under the
-//! cache-resident per-tile plan vs per-GEMM TAS, the resident cache rows,
-//! and the reduction — asserting the plan never loses (the acceptance
-//! property, also pinned in `tests/decode_invariants.rs`).  A second
-//! table shows the long-context regime where cache residency carries the
-//! win: prefill 512 with a 4 MiW SRAM.  Closed forms only, so the sweep
-//! is instant; the replayed equivalence is property-tested.
+//! (prefill 64, 32 steps) and report per-token decode EMA under (a)
+//! per-GEMM TAS, (b) the seed's uniform per-layer cache split and (c)
+//! the paged allocator (per-layer cache rows + parked weight slices
+//! competing by marginal EMA saved per word) — asserting paged never
+//! loses to uniform, which never loses to per-GEMM TAS (the acceptance
+//! properties, also pinned in `tests/residency_invariants.rs`).  A
+//! second table shows the long-context regime where cache residency
+//! carries the win: prefill 512 with a 4 MiW SRAM.  Closed forms only,
+//! so the sweep is instant; the replayed equivalence is property-tested.
 
-use tas::dataflow::{DecodeDims, DecodePlan};
+use tas::dataflow::{DecodeDims, DecodePlan, ResidencyPolicy};
 use tas::gemm::Tiling;
 use tas::models::zoo;
 use tas::util::bench::{Bench, Throughput};
@@ -26,24 +29,55 @@ fn sweep(
     let tiling = Tiling::square(16);
     let mut t = Table::new(
         title,
-        &["model", "batch", "EMA/token", "per-GEMM TAS", "reduction", "resident rows"],
+        &[
+            "model",
+            "batch",
+            "per-GEMM/token",
+            "uniform/token",
+            "paged/token",
+            "paged vs uniform",
+            "rows/layer",
+            "weight words",
+        ],
     );
     for model in models {
+        let dims = DecodeDims::of(model);
         for &batch in batches {
-            let dp = DecodePlan::plan(model, prefill, steps, batch, &tiling, sram);
+            let uniform = DecodePlan::plan_with_policy(
+                &dims,
+                prefill,
+                steps,
+                batch,
+                &tiling,
+                sram,
+                ResidencyPolicy::AllOrNothing,
+            );
+            let paged = DecodePlan::plan(model, prefill, steps, batch, &tiling, sram);
             assert!(
-                dp.decode_ema() <= dp.per_gemm_tas_decode_total(),
-                "{} batch {batch}: decode plan must never lose to per-GEMM TAS",
+                uniform.decode_ema() <= uniform.per_gemm_tas_decode_total(),
+                "{} batch {batch}: uniform must never lose to per-GEMM TAS",
                 model.name
             );
-            assert!(dp.peak_sram_claim() <= dp.budget, "{}", model.name);
+            assert!(
+                paged.decode_ema() <= uniform.decode_ema(),
+                "{} batch {batch}: paged must never lose to uniform",
+                model.name
+            );
+            assert!(paged.peak_sram_claim() <= paged.budget, "{}", model.name);
+            let rows = format!(
+                "{}..{}",
+                paged.cache_rows.iter().copied().min().unwrap_or(0),
+                paged.resident_rows
+            );
             t.row(vec![
                 model.name.to_string(),
                 batch.to_string(),
-                sci(dp.per_token_ema()),
-                sci(dp.per_token_per_gemm_tas()),
-                pct(dp.reduction_vs_per_gemm()),
-                dp.resident_rows.to_string(),
+                sci(paged.per_token_per_gemm_tas()),
+                sci(uniform.per_token_ema()),
+                sci(paged.per_token_ema()),
+                pct(1.0 - paged.decode_ema() as f64 / uniform.decode_ema().max(1) as f64),
+                rows,
+                sci(paged.weight_hot_words as f64),
             ]);
         }
     }

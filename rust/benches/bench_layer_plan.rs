@@ -1,16 +1,18 @@
-//! Bench E7 — layer-level planning vs per-GEMM TAS.
+//! Bench E7 — layer-level planning vs per-GEMM TAS, paged vs whole-tensor.
 //!
-//! For every zoo model at sequence lengths {64, 512, 4096}: total forward
-//! pass EMA under (a) the paper's per-GEMM TAS rule and (b) the layer plan
-//! (per-tile TAS + SRAM residency across the block's chained GEMMs), plus
-//! the planning throughput itself (the coordinator plans per batch, so
-//! planning must be microseconds, not milliseconds).
+//! For every zoo model at sequence lengths {64, 384, 512, 4096}: total
+//! forward pass EMA under (a) the paper's per-GEMM TAS rule, (b) the
+//! all-or-nothing layer plan (whole tensors only — the seed behaviour)
+//! and (c) the paged layer plan (fractional SRAM residency via the
+//! allocator), plus the planning throughput itself (the coordinator
+//! plans per batch, so planning must be microseconds, not milliseconds).
 //!
-//! Invariant asserted here and in tests/plan_equivalence.rs: the layer
-//! plan never loses to per-GEMM TAS — residency only removes DRAM words.
+//! Invariants asserted here and in tests/residency_invariants.rs: the
+//! all-or-nothing plan never loses to per-GEMM TAS, and the paged plan
+//! never loses to all-or-nothing — residency only removes DRAM words.
 
 use tas::config::AcceleratorConfig;
-use tas::dataflow::LayerPlan;
+use tas::dataflow::{LayerPlan, ResidencyPolicy};
 use tas::gemm::Tiling;
 use tas::models::zoo;
 use tas::util::bench::{Bench, Throughput};
@@ -19,37 +21,50 @@ use tas::util::table::{pct, sci, Table};
 fn main() {
     let cfg = AcceleratorConfig::default();
     let tiling = Tiling::square(16);
-    let seqs = [64u64, 512, 4096];
+    let seqs = [64u64, 384, 512, 4096];
 
     let mut t = Table::new(
-        "Layer-level planning vs per-GEMM TAS (total EMA words / forward pass, 16-tiles, 256 KiW SRAM)",
-        &["model", "seq", "per-GEMM TAS", "layer plan", "saving", "resident edges"],
+        "Layer planning: per-GEMM TAS vs all-or-nothing vs paged residency (EMA words / forward pass, 16-tiles, 256 KiW SRAM)",
+        &["model", "seq", "per-GEMM TAS", "all-or-nothing", "paged", "paged vs a-o-n", "hot rows"],
     );
     for model in zoo::all_models() {
         for seq in seqs {
-            let plan = LayerPlan::plan(model.block_stages(seq), seq, &tiling, cfg.sram_words);
-            let per_gemm = plan.per_gemm_tas_total();
-            let layer = plan.total_ema();
+            let aon = LayerPlan::plan_with_policy(
+                model.block_stages(seq),
+                seq,
+                &tiling,
+                cfg.sram_words,
+                ResidencyPolicy::AllOrNothing,
+            );
+            let paged = LayerPlan::plan(model.block_stages(seq), seq, &tiling, cfg.sram_words);
+            let per_gemm = aon.per_gemm_tas_total();
             assert!(
-                layer <= per_gemm,
-                "{} @ {seq}: layer plan must never lose",
+                aon.total_ema() <= per_gemm,
+                "{} @ {seq}: all-or-nothing must never lose",
+                model.name
+            );
+            assert!(
+                paged.total_ema() <= aon.total_ema(),
+                "{} @ {seq}: paged must never lose to all-or-nothing",
                 model.name
             );
             t.row(vec![
                 model.name.to_string(),
                 seq.to_string(),
                 sci(per_gemm as f64),
-                sci(layer as f64),
-                pct(1.0 - layer as f64 / per_gemm as f64),
-                plan.resident_edges().to_string(),
+                sci(aon.total_ema() as f64),
+                sci(paged.total_ema() as f64),
+                pct(1.0 - paged.total_ema() as f64 / aon.total_ema().max(1) as f64),
+                paged.resident_rows().to_string(),
             ]);
         }
     }
     println!("{}", t.to_text());
 
-    // Planning throughput: one full block plan per iteration.
+    // Planning throughput: one full block plan per iteration (the paged
+    // planner prices both policies internally, so this is its true cost).
     let mut b = Bench::new("layer_plan");
-    for seq in seqs {
+    for seq in [64u64, 512, 4096] {
         let model = zoo::bert_base();
         let stages = model.block_stages(seq);
         b.run(

@@ -177,12 +177,18 @@ pub fn decode_plan_for_bucket(
 
 /// One continuous-batching bucket plan: a prefill chunk and a decode step
 /// priced together.  When both phases share the dispatch, the SRAM is
-/// split evenly between the prefill residency chain and the decode cache
-/// — neither planner may claim words the other holds.
+/// split between the prefill residency chain and the decode cache by
+/// **marginal EMA**: both lanes are residency-aware planners, so the
+/// split is searched over a fraction grid (always including the even
+/// split, so the searched split never loses to the legacy 50/50) and the
+/// cheapest total wins — neither planner may claim words the other holds.
 #[derive(Clone, Debug)]
 pub struct MixedBucketPlan {
     pub prefill: Option<LayerPlan>,
     pub decode: Option<DecodeStepPlan>,
+    /// SRAM words granted to the prefill lane (the decode lane gets the
+    /// complement; meaningful only for mixed dispatches).
+    pub prefill_sram_words: u64,
 }
 
 impl MixedBucketPlan {
@@ -219,6 +225,12 @@ impl MixedBucketPlan {
 /// token count of the prefill half (None = decode-only dispatch);
 /// `decode` is `(batch, cache_len)` of the decode half (None =
 /// prefill-only — the classic bucket plan).
+///
+/// When both halves are present the SRAM split between the lanes is
+/// chosen by marginal EMA over an eighth-fraction grid — the discrete
+/// form of the residency allocator's greedy, applied at lane
+/// granularity.  The even split is always a grid point, so the searched
+/// split never loses to the old fixed 50/50.
 #[allow(clippy::too_many_arguments)]
 pub fn mixed_bucket_plan(
     prefill_tokens: Option<u64>,
@@ -231,20 +243,42 @@ pub fn mixed_bucket_plan(
     tiling: &Tiling,
     sram_words: u64,
 ) -> MixedBucketPlan {
-    let sram_each = if prefill_tokens.is_some() && decode.is_some() {
-        sram_words / 2
-    } else {
-        sram_words
+    let plan_prefill = |tokens: u64, sram: u64| {
+        layer_plan_for_bucket(tokens, hidden, ffn, vocab, n_layers, tiling, sram)
     };
-    let prefill = prefill_tokens.map(|tokens| {
-        layer_plan_for_bucket(tokens, hidden, ffn, vocab, n_layers, tiling, sram_each)
-    });
-    let decode = decode.map(|(batch, cache_len)| {
+    let plan_decode = |batch: u64, cache_len: u64, sram: u64| {
         decode_plan_for_bucket(
-            batch, cache_len, hidden, ffn, vocab, n_layers, heads, tiling, sram_each,
+            batch, cache_len, hidden, ffn, vocab, n_layers, heads, tiling, sram,
         )
-    });
-    MixedBucketPlan { prefill, decode }
+    };
+    match (prefill_tokens, decode) {
+        (Some(tokens), Some((batch, cache_len))) => {
+            let mut best: Option<MixedBucketPlan> = None;
+            for eighths in 1..=7u64 {
+                let prefill_sram = sram_words * eighths / 8;
+                let p = plan_prefill(tokens, prefill_sram);
+                let d = plan_decode(batch, cache_len, sram_words - prefill_sram);
+                let total = p.total_ema() + d.total_ema();
+                let better = best
+                    .as_ref()
+                    .map(|b| total < b.total_ema())
+                    .unwrap_or(true);
+                if better {
+                    best = Some(MixedBucketPlan {
+                        prefill: Some(p),
+                        decode: Some(d),
+                        prefill_sram_words: prefill_sram,
+                    });
+                }
+            }
+            best.expect("grid is non-empty")
+        }
+        (prefill_tokens, decode) => MixedBucketPlan {
+            prefill: prefill_tokens.map(|tokens| plan_prefill(tokens, sram_words)),
+            decode: decode.map(|(batch, cache_len)| plan_decode(batch, cache_len, sram_words)),
+            prefill_sram_words: if prefill_tokens.is_some() { sram_words } else { 0 },
+        },
+    }
 }
 
 fn scheme_to_manifest_name(s: Scheme) -> &'static str {

@@ -357,9 +357,12 @@ fn device_loop(
             ToDevice::Shutdown => return,
         };
 
-        // A mixed dispatch splits the SRAM between the two lanes (the
-        // `decisions::mixed_bucket_plan` policy): neither planner may
-        // claim words the other holds during the same dispatch.
+        // A mixed dispatch splits the SRAM between the two lanes so
+        // neither planner may claim words the other holds.  The device
+        // loop keeps the even split (its plan caches key on the bucket
+        // alone, and a searched split would couple the two lanes' keys);
+        // `decisions::mixed_bucket_plan` searches the split by marginal
+        // EMA where the joint plan is priced as one unit.
         let mixed = job.batch.is_some() && !job.decode.is_empty();
         let sram_share = if mixed { opts.sram_words / 2 } else { opts.sram_words };
 

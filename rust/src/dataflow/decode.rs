@@ -3,26 +3,33 @@
 //! Prefill processes all prompt tokens at once, so per-GEMM TAS and the
 //! layer planner ([`super::layer`]) have fat `M` to work with.  Decode is
 //! the opposite regime: every step is a *skinny* GEMM (`M = 1..batch`)
-//! against a K/V cache that grows by one token per step, so weight and
-//! cache traffic dominate and the prefill residency model does not apply
-//! (T-REX, ISSCC 2025; "Data Movement Is All You Need", Ivanov et al.).
+//! against a K/V cache that grows per step, so weight and cache traffic
+//! dominate and the prefill residency model does not apply (T-REX, ISSCC
+//! 2025; "Data Movement Is All You Need", Ivanov et al.).
 //!
 //! This module introduces:
 //!
-//! * a [`Phase`] model — `Prefill` vs `Decode { step, batch }`;
+//! * a [`Phase`] model — `Prefill` vs `Decode { step, batch }`.  A
+//!   speculative draft-and-verify step is the same model with
+//!   `M = batch × (draft + 1)` — see [`DecodePlan::plan_draft`];
 //! * a **cache edge** on [`StageSpec`] ([`CacheEdge`]): attention stages
 //!   declare the K/V tensor they append to or read, so the planner knows
 //!   which weight-side operands persist and grow across steps;
 //! * [`DecodePlan`] — a whole trajectory (prefill at seq `S`, then `T`
-//!   decode steps at batch `B`).  The planner keeps the **newest** cache
-//!   rows SRAM-resident under the cumulative budget (coldest rows are
-//!   evicted first; the cache is write-through, so eviction is free) and
-//!   runs the per-tile TAS chooser with cache-resident operands priced at
-//!   zero EMA ([`Plan::tas_cached`]).  A partially resident cache splits
-//!   the attention GEMM into a hot slice (resident rows, weight stream
-//!   free) and a cold slice (DRAM rows) — the stationary decision flips
-//!   per tile, not per GEMM, and the split is only kept when it beats the
-//!   unsplit plan, so a decode plan never loses to per-GEMM TAS;
+//!   decode steps at batch `B`).  Under the paged policy
+//!   ([`ResidencyPolicy::Paged`]) the SRAM left after the step's
+//!   activation claim is handed to the [`ResidencyAllocator`]
+//!   ([`super::residency`]): the candidates are every layer's K/V cache
+//!   rows *and every layer's weight slices* (decode re-reads weights each
+//!   step, so parked weight columns save exactly as many words per SRAM
+//!   word as parked cache rows — the FlexGen-style trade the uniform
+//!   split could not express).  A partially resident cache or weight
+//!   splits its GEMM into a hot slice (resident operand, weight stream
+//!   free — [`Plan::tas_cached`]) and a cold slice; the split is kept
+//!   only when it wins, so a decode plan never loses to per-GEMM TAS.
+//!   The seed's uniform per-layer cache split survives as
+//!   [`ResidencyPolicy::AllOrNothing`] and the paged planner keeps
+//!   whichever prices lower, so paged never loses to uniform either;
 //! * [`ShardedDecodePlan`] — decode across devices with the cache
 //!   **sharded by heads** ([`super::shard::shard_heads`]): each device
 //!   owns its heads' K/V blocks (aggregate SRAM scales with the device
@@ -31,40 +38,42 @@
 //!
 //! Residency model for one decode step: attention touches every cache
 //! row, so streaming the cold rows necessarily brings them on-chip —
-//! *retaining* the newest `R` of them for the next step costs nothing.
-//! Hot rows are therefore free from step 1 on (step 0 inherits nothing:
-//! prefill wrote the cache through to DRAM), and the resident set never
-//! exceeds `R · row_words`, which is carved out of the SRAM budget after
+//! *retaining* the newest rows for the next step costs nothing, and the
+//! same holds for weight slices (every step streams every weight).  Hot
+//! operands are therefore free from step 1 on (step 0 inherits nothing:
+//! prefill wrote the cache through to DRAM), and the resident claim never
+//! exceeds the allocation, which is carved out of the SRAM budget after
 //! the step's activation residency claim.
 
 use super::analytic;
 use super::layer::{LayerPlan, StageSpec};
 use super::plan::Plan;
+use super::residency::{
+    split_cols, split_contraction, Candidate, Residency, ResidencyAllocator, ResidencyPolicy,
+};
 use super::shard::{even_bounds, shard_heads};
 use super::Scheme;
 use crate::arch::Interconnect;
 use crate::gemm::{GemmShape, Tiling};
 use crate::models::ModelSpec;
 use crate::util::ceil_div;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
-/// Memo of cover searches keyed by (shape, residency flags): within one
+/// Memo of cover searches keyed by (shape, residency triple): within one
 /// trajectory the tiling is fixed and the cache-length-independent stages
 /// (projections, FFN, LM head) repeat identical searches every step.
-type PlanMemo = HashMap<(GemmShape, bool, bool, bool), Plan>;
+type PlanMemo = HashMap<(GemmShape, Residency, Residency, Residency), Plan>;
 
 fn memo_plan(
     memo: &mut PlanMemo,
     shape: &GemmShape,
     tiling: &Tiling,
-    input_resident: bool,
-    weight_resident: bool,
-    output_resident: bool,
+    input: Residency,
+    weight: Residency,
+    output: Residency,
 ) -> Plan {
-    memo.entry((*shape, input_resident, weight_resident, output_resident))
-        .or_insert_with(|| {
-            Plan::tas_cached(shape, tiling, input_resident, weight_resident, output_resident)
-        })
+    memo.entry((*shape, input, weight, output))
+        .or_insert_with(|| Plan::tas_cached(shape, tiling, input, weight, output))
         .clone()
 }
 
@@ -73,7 +82,9 @@ fn memo_plan(
 pub enum Phase {
     /// Prompt ingestion: all tokens at once (`M = batch × seq`).
     Prefill { seq: u64 },
-    /// One autoregressive step: `M = batch`, attention over the cache.
+    /// One autoregressive step: `M = batch × step_tokens`, attention over
+    /// the cache.  Plain decode has one token per sequence per step;
+    /// speculative draft-and-verify has `draft + 1`.
     Decode { step: u64, batch: u64 },
 }
 
@@ -141,25 +152,30 @@ impl DecodeDims {
 /// per-sequence-per-head (`M = 1`, distinct caches), which is exactly
 /// where cache-resident per-tile TAS acts.
 pub fn decode_step_stages(dims: &DecodeDims, batch: u64, cache_len: u64) -> Vec<StageSpec> {
-    decode_step_stages_sliced(dims, batch, cache_len, dims.heads, dims.ffn, dims.vocab)
+    decode_step_stages_spec(dims, batch, cache_len, 1, dims.heads, dims.ffn, dims.vocab)
 }
 
-/// Head/ffn/vocab-sliced variant for head-sharded decode: weight columns
-/// shrink to the slice, the input width stays the full hidden dim.
-pub(crate) fn decode_step_stages_sliced(
+/// The general builder: `step_tokens` tokens per sequence are processed
+/// this step (`1` for plain decode, `draft + 1` for a speculative
+/// draft-and-verify step — the `M = batch × (draft + 1)` GEMM of the
+/// ROADMAP item, expressed through the existing [`Phase`] model).
+pub(crate) fn decode_step_stages_spec(
     dims: &DecodeDims,
     batch: u64,
     cache_len: u64,
+    step_tokens: u64,
     heads_slice: u64,
     ffn_slice: u64,
     vocab_slice: u64,
 ) -> Vec<StageSpec> {
     dims.validate();
     assert!(batch > 0 && cache_len > 0 && heads_slice > 0 && ffn_slice > 0);
+    assert!(step_tokens > 0 && step_tokens <= cache_len);
     let h = dims.hidden;
     let d = dims.head_dim();
     let hs = heads_slice * d;
     let l = dims.layers;
+    let m = batch * step_tokens;
     let attn = l * heads_slice * batch;
     let stage = |name, shape, count, consumes, shares, cache| StageSpec {
         name,
@@ -173,19 +189,19 @@ pub(crate) fn decode_step_stages_sliced(
     let v_app = Some(CacheEdge::Append(CacheTensor::Value));
     let k_read = Some(CacheEdge::Read(CacheTensor::Key));
     let v_read = Some(CacheEdge::Read(CacheTensor::Value));
-    let proj = GemmShape::new(batch, h, hs);
+    let proj = GemmShape::new(m, h, hs);
     let mut v = vec![
         stage("k", proj, l, false, false, k_app),
         stage("v", proj, l, false, true, v_app),
         stage("q", proj, l, false, true, None),
-        stage("qk_t", GemmShape::new(1, d, cache_len), attn, true, false, k_read),
-        stage("attn_v", GemmShape::new(1, cache_len, d), attn, true, false, v_read),
-        stage("attn_out", GemmShape::new(batch, hs, h), l, true, false, None),
-        stage("ffn1", GemmShape::new(batch, h, ffn_slice), l, true, false, None),
-        stage("ffn2", GemmShape::new(batch, ffn_slice, h), l, true, false, None),
+        stage("qk_t", GemmShape::new(step_tokens, d, cache_len), attn, true, false, k_read),
+        stage("attn_v", GemmShape::new(step_tokens, cache_len, d), attn, true, false, v_read),
+        stage("attn_out", GemmShape::new(m, hs, h), l, true, false, None),
+        stage("ffn1", GemmShape::new(m, h, ffn_slice), l, true, false, None),
+        stage("ffn2", GemmShape::new(m, ffn_slice, h), l, true, false, None),
     ];
     if vocab_slice > 0 {
-        let head = GemmShape::new(batch, h, vocab_slice);
+        let head = GemmShape::new(m, h, vocab_slice);
         v.push(stage("lm_head", head, 1, false, false, None));
     }
     v
@@ -227,22 +243,71 @@ pub(crate) fn prefill_stages_sliced(
     v
 }
 
+/// Residency allocation feeding one decode step: per-layer resident cache
+/// rows and per-stage, per-layer parked weight columns.  Produced by the
+/// allocator (paged), a uniform split (all-or-nothing) or empty (off /
+/// step 0).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StepResidency {
+    /// Resident cache rows per layer (newest rows retained).
+    pub cache_rows: Vec<u64>,
+    /// Parked weight columns per stage name, per layer (`lm_head` has a
+    /// single entry — it is not a per-layer stage).
+    pub weight_cols: BTreeMap<&'static str, Vec<u64>>,
+}
+
+impl StepResidency {
+    pub fn none() -> StepResidency {
+        StepResidency::default()
+    }
+
+    /// The seed's uniform split: every layer retains the same `rows`.
+    pub fn uniform(rows: u64, layers: u64) -> StepResidency {
+        StepResidency {
+            cache_rows: vec![rows; layers as usize],
+            weight_cols: BTreeMap::new(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache_rows.iter().all(|&r| r == 0)
+            && self.weight_cols.values().all(|v| v.iter().all(|&c| c == 0))
+    }
+
+    /// Largest per-layer resident row count.
+    pub fn max_rows(&self) -> u64 {
+        self.cache_rows.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// One GEMM slice of a planned stage with the instances it covers.
+#[derive(Clone, Debug)]
+pub struct SlicePlan {
+    /// Stage instances this slice plan runs for (layer groups with equal
+    /// allocations share one plan).
+    pub count: u64,
+    pub plan: Plan,
+}
+
 /// One planned decode stage: residency decisions plus the slice plans.
 #[derive(Clone, Debug)]
 pub struct DecodeStagePlan {
     pub spec: StageSpec,
-    /// GEMM slice plans — one normally; a hot/cold pair when a partially
-    /// resident cache splits the stage along its cache axis.
-    pub slices: Vec<Plan>,
+    /// Slice plans.  One per instance group normally; a hot/cold pair per
+    /// group when a partially resident cache or weight splits the stage.
+    pub slices: Vec<SlicePlan>,
     /// Input served from SRAM (chained activation) — no DRAM reads.
-    pub input_resident: bool,
+    pub input: Residency,
     /// Output handed on-chip to the next stage — no DRAM writes.
-    pub output_resident: bool,
-    /// Cache words served from SRAM per instance (hot-slice weights).
+    pub output: Residency,
+    /// Cache words served from SRAM across all instances this step.
     pub cache_hot_words: u64,
-    /// DRAM words per instance under this plan (summed over slices).
+    /// Weight words parked in SRAM for this stage (summed over layers —
+    /// the stage's share of the step's weight-residency claim).
+    pub weight_hot_words: u64,
+    /// DRAM words of this stage across all instances under this plan.
     pub ema_words: u64,
-    /// DRAM words per instance under per-GEMM TAS on the unsplit shape.
+    /// DRAM words across all instances under per-GEMM TAS.
     pub per_gemm_tas_words: u64,
 }
 
@@ -250,9 +315,9 @@ pub struct DecodeStagePlan {
 #[derive(Clone, Debug)]
 pub struct DecodeStepPlan {
     pub phase: Phase,
-    /// Positions attended this step (cache length including new token).
+    /// Positions attended this step (cache length including new tokens).
     pub cache_len: u64,
-    /// Cache rows resident in SRAM while this step runs (newest rows).
+    /// Largest per-layer resident cache row count while this step runs.
     pub hot_rows: u64,
     /// Peak SRAM words the step's resident activations claim.
     pub act_resident_words: u64,
@@ -262,24 +327,23 @@ pub struct DecodeStepPlan {
 impl DecodeStepPlan {
     /// DRAM words of one decode step under this plan.
     pub fn total_ema(&self) -> u64 {
-        self.stages.iter().map(|s| s.spec.count * s.ema_words).sum()
+        self.stages.iter().map(|s| s.ema_words).sum()
     }
 
     /// DRAM words of the same step under per-GEMM TAS (the baseline the
     /// decode plan must never exceed).
     pub fn per_gemm_tas_total(&self) -> u64 {
-        self.stages
-            .iter()
-            .map(|s| s.spec.count * s.per_gemm_tas_words)
-            .sum()
+        self.stages.iter().map(|s| s.per_gemm_tas_words).sum()
     }
 
     /// Cache words served from SRAM this step (all instances).
     pub fn cache_hot_total(&self) -> u64 {
-        self.stages
-            .iter()
-            .map(|s| s.spec.count * s.cache_hot_words)
-            .sum()
+        self.stages.iter().map(|s| s.cache_hot_words).sum()
+    }
+
+    /// Weight words parked in SRAM while this step runs.
+    pub fn weight_hot_total(&self) -> u64 {
+        self.stages.iter().map(|s| s.weight_hot_words).sum()
     }
 
     pub fn reduction_vs_per_gemm(&self) -> f64 {
@@ -292,9 +356,11 @@ impl DecodeStepPlan {
     }
 }
 
-/// Plan one decode step over an explicit stage list.  `hot_rows` cache
-/// rows (strictly fewer than `cache_len` — the new token's row is never
-/// pre-resident) are SRAM-resident; `budget` bounds activation residency.
+/// Plan one decode step over an explicit stage list with a uniform
+/// cache-row residency (`hot_rows` rows in every layer, strictly fewer
+/// than `cache_len` — the new token's row is never pre-resident) and no
+/// parked weights; `budget` bounds activation residency.  The paged
+/// planners call the [`StepResidency`]-shaped core instead.
 pub fn plan_decode_step(
     stages: &[StageSpec],
     layers: u64,
@@ -304,29 +370,44 @@ pub fn plan_decode_step(
     budget: u64,
     phase: Phase,
 ) -> DecodeStepPlan {
+    assert!(hot_rows < cache_len, "the newest row is appended this step");
     let mut memo = PlanMemo::new();
-    plan_decode_step_memo(stages, layers, cache_len, hot_rows, tiling, budget, phase, &mut memo)
+    plan_decode_step_res(
+        stages,
+        layers,
+        cache_len,
+        1,
+        &StepResidency::uniform(hot_rows, layers),
+        tiling,
+        budget,
+        phase,
+        &mut memo,
+    )
 }
 
 /// The memoised core: `memo` carries cover searches across the steps of
 /// one trajectory, so the shapes that do not depend on the cache length
 /// are planned once instead of once per step.
 #[allow(clippy::too_many_arguments)]
-fn plan_decode_step_memo(
+fn plan_decode_step_res(
     stages: &[StageSpec],
     layers: u64,
     cache_len: u64,
-    hot_rows: u64,
+    step_tokens: u64,
+    res: &StepResidency,
     tiling: &Tiling,
     budget: u64,
     phase: Phase,
     memo: &mut PlanMemo,
 ) -> DecodeStepPlan {
-    assert!(hot_rows < cache_len, "the newest row is appended this step");
+    assert!(step_tokens >= 1 && step_tokens <= cache_len);
     let fits = |w: u64| w > 0 && w <= budget;
     // Aggregate tensor sizes per layer: attention stages run
     // heads × batch instances whose activations coexist within a layer.
     let per_layer = |s: &StageSpec| (s.count / layers.max(1)).max(1);
+    // Cache rows available for retention this step: the step's own new
+    // rows were never streamed before, so they cannot be pre-resident.
+    let retained_cap = cache_len - step_tokens;
 
     let mut planned: Vec<DecodeStagePlan> = Vec::with_capacity(stages.len());
     let mut act_peak = 0u64;
@@ -336,7 +417,7 @@ fn plan_decode_step_memo(
         let input_resident = if spec.shares_input_with_previous && idx > 0 {
             fits(spec.shape.input_words())
         } else if spec.consumes_previous && idx > 0 {
-            planned[idx - 1].output_resident
+            planned[idx - 1].output.is_free()
         } else {
             false
         };
@@ -355,79 +436,112 @@ fn plan_decode_step_memo(
         let held = (if output_resident { group_out } else { 0 })
             + (if input_resident { group_in } else { 0 });
         act_peak = act_peak.max(held);
+        let in_res = if input_resident { Residency::Full } else { Residency::None };
+        let out_res = if output_resident { Residency::Full } else { Residency::None };
 
-        let unsplit =
-            memo_plan(memo, &spec.shape, tiling, input_resident, false, output_resident);
-        let mut slices = vec![unsplit];
+        // Layers collapse into groups with equal residency allocations;
+        // a stage whose count is not a per-layer multiple (the LM head)
+        // forms a single group.
+        let l_s = if layers > 0 && spec.count % layers.max(1) == 0 && spec.count > 0 {
+            layers
+        } else {
+            1
+        };
+        let inst_per_layer = spec.count / l_s;
+        let is_cache_read = matches!(spec.cache, Some(CacheEdge::Read(_)));
+        let layer_value = |l: usize| -> u64 {
+            if is_cache_read {
+                res.cache_rows.get(l).copied().unwrap_or(0).min(retained_cap)
+            } else {
+                res.weight_cols
+                    .get(spec.name)
+                    .and_then(|v| v.get(l.min(v.len().saturating_sub(1))))
+                    .copied()
+                    .unwrap_or(0)
+                    .min(spec.shape.k)
+            }
+        };
+        let mut groups: BTreeMap<u64, u64> = BTreeMap::new();
+        for l in 0..l_s as usize {
+            *groups.entry(layer_value(l)).or_insert(0) += 1;
+        }
+
+        let unsplit = memo_plan(memo, &spec.shape, tiling, in_res, Residency::None, out_res);
+        let unsplit_cost = unsplit.ema().total();
+        let mut slices: Vec<SlicePlan> = Vec::new();
         let mut cache_hot_words = 0u64;
-        if let Some(CacheEdge::Read(tensor)) = spec.cache {
-            if hot_rows > 0 {
-                let GemmShape { m, n, k } = spec.shape;
-                let (hot, cold) = match tensor {
-                    // K cache runs along the output axis: split K.
-                    CacheTensor::Key => {
-                        debug_assert_eq!(k, cache_len);
-                        (
-                            memo_plan(
-                                memo,
-                                &GemmShape::new(m, n, hot_rows),
-                                tiling,
-                                input_resident,
-                                true,
-                                output_resident,
-                            ),
-                            memo_plan(
-                                memo,
-                                &GemmShape::new(m, n, k - hot_rows),
-                                tiling,
-                                input_resident,
-                                false,
-                                output_resident,
-                            ),
-                        )
-                    }
-                    // V cache runs along the contraction: split N; the hot
-                    // slice's partial context accumulates on chip.
-                    CacheTensor::Value => {
-                        debug_assert_eq!(n, cache_len);
-                        (
-                            memo_plan(
-                                memo,
-                                &GemmShape::new(m, hot_rows, k),
-                                tiling,
-                                input_resident,
-                                true,
-                                true,
-                            ),
-                            memo_plan(
-                                memo,
-                                &GemmShape::new(m, n - hot_rows, k),
-                                tiling,
-                                input_resident,
-                                false,
-                                output_resident,
-                            ),
-                        )
-                    }
-                };
-                let split_total = hot.ema().total() + cold.ema().total();
-                // Keep the split only when it wins: never worse than the
-                // unsplit per-tile plan, hence never worse than per-GEMM
-                // TAS either.
-                if split_total < slices[0].ema().total() {
-                    cache_hot_words = hot.shape.weight_words();
-                    slices = vec![hot, cold];
+        let mut weight_hot_words = 0u64;
+        let mut ema_words = 0u64;
+        for (&value, &n_layers) in &groups {
+            let inst = n_layers * inst_per_layer;
+            if value == 0 {
+                ema_words += inst * unsplit_cost;
+                slices.push(SlicePlan { count: inst, plan: unsplit.clone() });
+                continue;
+            }
+            // Split the GEMM along the resident operand's axis: the K
+            // cache runs along the output axis (split K), the V cache
+            // along the contraction (split N, hot context accumulating on
+            // chip), parked weight columns along K.
+            let (hot_shape, cold_shape, hot_out_res) = match spec.cache {
+                Some(CacheEdge::Read(CacheTensor::Key)) => {
+                    debug_assert_eq!(spec.shape.k, cache_len);
+                    let (h, c) = split_cols(&spec.shape, value);
+                    (h, c, out_res)
                 }
+                Some(CacheEdge::Read(CacheTensor::Value)) => {
+                    debug_assert_eq!(spec.shape.n, cache_len);
+                    let (h, c) = split_contraction(&spec.shape, value);
+                    (h, c, Residency::Full)
+                }
+                _ => {
+                    let (h, c) = split_cols(&spec.shape, value);
+                    (h, c, out_res)
+                }
+            };
+            let hot = hot_shape.map(|hs| {
+                memo_plan(memo, &hs, tiling, in_res, Residency::Full, hot_out_res)
+            });
+            let cold = cold_shape.map(|cs| {
+                memo_plan(memo, &cs, tiling, in_res, Residency::None, out_res)
+            });
+            let split_cost = hot.as_ref().map(|p| p.ema().total()).unwrap_or(0)
+                + cold.as_ref().map(|p| p.ema().total()).unwrap_or(0);
+            // Keep the split only when it wins: never worse than the
+            // unsplit per-tile plan, hence never worse than per-GEMM TAS.
+            if split_cost < unsplit_cost {
+                let hot_words = hot
+                    .as_ref()
+                    .map(|p| p.shape.weight_words())
+                    .unwrap_or(0);
+                if is_cache_read {
+                    cache_hot_words += inst * hot_words;
+                } else {
+                    // Weights are shared across the layer's instances:
+                    // the SRAM claim scales with layers, not instances.
+                    weight_hot_words += n_layers * hot_words;
+                }
+                ema_words += inst * split_cost;
+                if let Some(p) = hot {
+                    slices.push(SlicePlan { count: inst, plan: p });
+                }
+                if let Some(p) = cold {
+                    slices.push(SlicePlan { count: inst, plan: p });
+                }
+            } else {
+                ema_words += inst * unsplit_cost;
+                slices.push(SlicePlan { count: inst, plan: unsplit.clone() });
             }
         }
-        let ema_words: u64 = slices.iter().map(|p| p.ema().total()).sum();
-        let per_gemm_tas_words = analytic::ema(Scheme::Tas, &spec.shape, tiling).total();
+        let per_gemm_tas_words =
+            spec.count * analytic::ema(Scheme::Tas, &spec.shape, tiling).total();
         planned.push(DecodeStagePlan {
             spec: spec.clone(),
             slices,
-            input_resident,
-            output_resident,
+            input: in_res,
+            output: out_res,
             cache_hot_words,
+            weight_hot_words,
             ema_words,
             per_gemm_tas_words,
         });
@@ -435,20 +549,24 @@ fn plan_decode_step_memo(
     DecodeStepPlan {
         phase,
         cache_len,
-        hot_rows,
+        hot_rows: res.max_rows().min(retained_cap),
         act_resident_words: act_peak,
         stages: planned,
     }
 }
 
 /// A planned decode trajectory: prefill at seq `S`, then `T` decode steps
-/// at batch `B`, with a static cache-residency allocation.
+/// at batch `B`, with a static residency allocation.
 #[derive(Clone, Debug)]
 pub struct DecodePlan {
     pub dims: DecodeDims,
     pub batch: u64,
     pub prefill_seq: u64,
     pub steps: u64,
+    /// Speculative draft tokens verified per step (0 = plain decode);
+    /// each step processes `batch × (draft + 1)` tokens and the cache
+    /// grows by `draft + 1` rows per sequence.
+    pub draft: u64,
     pub tiling: Tiling,
     /// Head/ffn/vocab slice this plan covers (full dims unless sharded).
     pub heads_slice: u64,
@@ -456,20 +574,32 @@ pub struct DecodePlan {
     pub vocab_slice: u64,
     /// Planning budget: SRAM minus the double-buffered operand margin.
     pub budget: u64,
-    /// SRAM words one resident cache row occupies (one position, both
-    /// tensors, every layer, every sequence of the batch).
+    /// SRAM words one resident cache row occupies across **all** layers
+    /// (one position, both tensors, every sequence of the batch) — the
+    /// uniform split's page size.
     pub row_words: u64,
-    /// Cache rows the planner keeps resident (newest-first; coldest are
-    /// evicted — free, the cache is write-through).
+    /// SRAM words one cache row of ONE layer occupies — the paged
+    /// allocator's page size.
+    pub layer_row_words: u64,
+    /// Resident cache rows per layer (newest-first; coldest are evicted —
+    /// free, the cache is write-through).  Uniform under the
+    /// all-or-nothing policy.
+    pub cache_rows: Vec<u64>,
+    /// Largest per-layer resident row count.
     pub resident_rows: u64,
+    /// Weight words parked across decode steps (paged policy only).
+    pub weight_hot_words: u64,
     /// Peak activation residency reserved ahead of the cache.
     pub act_peak_words: u64,
+    /// Residency model that produced this plan (a paged request that lost
+    /// to the uniform split reports `AllOrNothing`).
+    pub policy: ResidencyPolicy,
     pub prefill: LayerPlan,
     pub step_plans: Vec<DecodeStepPlan>,
 }
 
 impl DecodePlan {
-    /// Plan a trajectory for a zoo model with cache residency on.
+    /// Plan a trajectory for a zoo model with paged residency.
     pub fn plan(
         model: &ModelSpec,
         prefill_seq: u64,
@@ -478,28 +608,57 @@ impl DecodePlan {
         tiling: &Tiling,
         sram_words: u64,
     ) -> DecodePlan {
-        DecodePlan::plan_policy(
+        DecodePlan::plan_with_policy(
             &DecodeDims::of(model),
             prefill_seq,
             steps,
             batch,
             tiling,
             sram_words,
-            true,
+            ResidencyPolicy::Paged,
         )
     }
 
-    /// Plan with explicit cache-residency policy (`false` disables the
-    /// hot-row pricing entirely — the conservation baseline the property
-    /// tests pin against).
-    pub fn plan_policy(
+    /// Plan a speculative decode trajectory: each step drafts and
+    /// verifies `draft + 1` tokens per sequence (`M = batch × (draft+1)`,
+    /// all drafts assumed accepted — the optimistic shape sweep of the
+    /// ROADMAP item).
+    pub fn plan_draft(
+        model: &ModelSpec,
+        prefill_seq: u64,
+        steps: u64,
+        batch: u64,
+        draft: u64,
+        tiling: &Tiling,
+        sram_words: u64,
+    ) -> DecodePlan {
+        let dims = DecodeDims::of(model);
+        DecodePlan::plan_sliced(
+            &dims,
+            dims.heads,
+            dims.ffn,
+            dims.vocab,
+            prefill_seq,
+            steps,
+            batch,
+            draft,
+            tiling,
+            sram_words,
+            ResidencyPolicy::Paged,
+        )
+    }
+
+    /// Plan with an explicit residency policy (`Off` disables cache and
+    /// weight residency entirely — the conservation baseline the property
+    /// tests pin against; `AllOrNothing` is the seed's uniform split).
+    pub fn plan_with_policy(
         dims: &DecodeDims,
         prefill_seq: u64,
         steps: u64,
         batch: u64,
         tiling: &Tiling,
         sram_words: u64,
-        cache_residency: bool,
+        policy: ResidencyPolicy,
     ) -> DecodePlan {
         DecodePlan::plan_sliced(
             dims,
@@ -509,10 +668,85 @@ impl DecodePlan {
             prefill_seq,
             steps,
             batch,
+            0,
             tiling,
             sram_words,
-            cache_residency,
+            policy,
         )
+    }
+
+    /// The paged allocation for one trajectory (or one steady-state step
+    /// when `hot_steps == 1`): every layer's cache rows and weight slices
+    /// compete for the post-activation budget by marginal EMA saved per
+    /// word.  Cache candidates precede weight candidates, so at the equal
+    /// steady-state rate the cache wins ties (its rows also serve the
+    /// *next* trajectory's longer contexts).
+    #[allow(clippy::too_many_arguments)]
+    fn paged_allocation(
+        stages: &[StageSpec],
+        layers: u64,
+        layer_row_words: u64,
+        max_rows: u64,
+        cache_budget: u64,
+        tiling: &Tiling,
+        hot_steps: u64,
+    ) -> StepResidency {
+        if cache_budget == 0 || hot_steps == 0 {
+            return StepResidency::uniform(0, layers);
+        }
+        let mut candidates: Vec<Candidate> = Vec::new();
+        // K/V cache rows, one candidate per layer.
+        for l in 0..layers {
+            let lrw = layer_row_words;
+            candidates.push(Candidate {
+                label: format!("cache:L{l}"),
+                page_words: lrw,
+                max_pages: max_rows,
+                live: 0..1,
+                saving: Box::new(move |p| p * lrw * hot_steps),
+            });
+        }
+        // Weight slices of every linear stage, one candidate per layer
+        // (tile-column pages): a parked weight word saves one DRAM word
+        // per step it is hot, same rate as a cache word.
+        let mut weight_stages: Vec<(usize, u64)> = Vec::new(); // (stage idx, layers)
+        for (idx, spec) in stages.iter().enumerate() {
+            if matches!(spec.cache, Some(CacheEdge::Read(_))) {
+                continue; // the cache IS this stage's weight operand
+            }
+            let l_s = if spec.count % layers.max(1) == 0 { layers } else { 1 };
+            weight_stages.push((idx, l_s));
+            let n = spec.shape.n;
+            let k = spec.shape.k;
+            let tk = tiling.tk;
+            for l in 0..l_s {
+                candidates.push(Candidate {
+                    label: format!("w:{}:L{l}", spec.name),
+                    page_words: n * tk,
+                    max_pages: ceil_div(k, tk),
+                    live: 0..1,
+                    saving: Box::new(move |p| (p * tk).min(k) * n * hot_steps),
+                });
+            }
+        }
+        let alloc = ResidencyAllocator::new(cache_budget, 1).allocate(&candidates);
+        let mut res = StepResidency {
+            cache_rows: alloc.pages[..layers as usize].to_vec(),
+            weight_cols: BTreeMap::new(),
+        };
+        let mut cursor = layers as usize;
+        for (idx, l_s) in weight_stages {
+            let spec = &stages[idx];
+            let cols: Vec<u64> = alloc.pages[cursor..cursor + l_s as usize]
+                .iter()
+                .map(|p| (p * tiling.tk).min(spec.shape.k))
+                .collect();
+            cursor += l_s as usize;
+            if cols.iter().any(|&c| c > 0) {
+                res.weight_cols.insert(spec.name, cols);
+            }
+        }
+        res
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -524,34 +758,48 @@ impl DecodePlan {
         prefill_seq: u64,
         steps: u64,
         batch: u64,
+        draft: u64,
         tiling: &Tiling,
         sram_words: u64,
-        cache_residency: bool,
+        policy: ResidencyPolicy,
     ) -> DecodePlan {
         dims.validate();
         assert!(prefill_seq > 0 && steps > 0 && batch > 0);
+        let step_tokens = draft + 1;
         let margin = 4 * (tiling.tm * tiling.tn + tiling.tn * tiling.tk);
         let budget = sram_words.saturating_sub(margin);
+        let layers = dims.layers;
 
-        // Pass 1: plan every step cold (hot = 0) to size the activation
-        // claim.  Per-step activation claims are NOT monotone in cache
-        // length — a per-layer group can stop fitting at the longest
-        // step — so the peak is taken over the whole trajectory, not a
-        // single probe.  One memo carries the cover searches of the
-        // cache-length-independent stages across both passes.
+        // Pass 1: plan every step cold to size the activation claim.
+        // Per-step activation claims are NOT monotone in cache length — a
+        // per-layer group can stop fitting at the longest step — so the
+        // peak is taken over the whole trajectory, not a single probe.
+        // One memo carries the cover searches of the cache-length-
+        // independent stages across both passes.
         let mut memo = PlanMemo::new();
         let step_stages = |cache_len: u64| {
-            decode_step_stages_sliced(dims, batch, cache_len, heads_slice, ffn_slice, vocab_slice)
+            decode_step_stages_spec(
+                dims,
+                batch,
+                cache_len,
+                step_tokens,
+                heads_slice,
+                ffn_slice,
+                vocab_slice,
+            )
         };
+        let cache_len_at = |t: u64| prefill_seq + (t + 1) * step_tokens;
+        let none = StepResidency::none();
         let mut act_peak = 0u64;
         let mut cold_steps = Vec::with_capacity(steps as usize);
         for t in 0..steps {
-            let cache_len = prefill_seq + t + 1;
-            let sp = plan_decode_step_memo(
+            let cache_len = cache_len_at(t);
+            let sp = plan_decode_step_res(
                 &step_stages(cache_len),
-                dims.layers,
+                layers,
                 cache_len,
-                0,
+                step_tokens,
+                &none,
                 tiling,
                 budget,
                 Phase::Decode { step: t, batch },
@@ -560,16 +808,13 @@ impl DecodePlan {
             act_peak = act_peak.max(sp.act_resident_words);
             cold_steps.push(sp);
         }
-        let row_words = 2 * dims.layers * batch * heads_slice * dims.head_dim();
+        let layer_row_words = 2 * batch * heads_slice * dims.head_dim();
+        let row_words = layers * layer_row_words;
         let cache_budget = budget.saturating_sub(act_peak);
         // Cap at the most rows any step can actually retain (the last
-        // step inherits prefill_seq + steps - 1 rows), so the residency
-        // claim reports SRAM the trajectory really occupies.
-        let resident_rows = if cache_residency && row_words > 0 {
-            (cache_budget / row_words).min(prefill_seq + steps - 1)
-        } else {
-            0
-        };
+        // step inherits prefill + (T-1)·step_tokens rows), so the
+        // residency claim reports SRAM the trajectory really occupies.
+        let max_rows = prefill_seq + (steps - 1) * step_tokens;
 
         let prefill_tokens = batch * prefill_seq;
         let prefill = LayerPlan::plan(
@@ -579,51 +824,111 @@ impl DecodePlan {
             sram_words,
         );
 
-        // Pass 2: re-plan with hot rows; a step that retains nothing
-        // reuses its cold plan (the residency walk never depends on
-        // hot_rows, so the two passes agree on the activation flags).
-        let mut step_plans = Vec::with_capacity(steps as usize);
-        for (t, cold) in cold_steps.into_iter().enumerate() {
-            let t = t as u64;
-            let cache_len = prefill_seq + t + 1;
-            // Step 0 inherits nothing (prefill wrote through to DRAM);
-            // later steps retain the newest rows streamed last step.
-            let hot = if t == 0 { 0 } else { (prefill_seq + t).min(resident_rows) };
-            if hot == 0 {
-                step_plans.push(cold);
-                continue;
+        // Pass 2 under one allocation: a step that retains nothing reuses
+        // its cold plan (the residency walk never depends on the hot
+        // allocation, so the passes agree on the activation flags).
+        let replan = |alloc: &StepResidency,
+                      cold: &[DecodeStepPlan],
+                      memo: &mut PlanMemo|
+         -> Vec<DecodeStepPlan> {
+            let mut out = Vec::with_capacity(cold.len());
+            for (t, cold_sp) in cold.iter().enumerate() {
+                let t = t as u64;
+                // Step 0 inherits nothing (prefill wrote through to
+                // DRAM); later steps retain what streamed last step.
+                if t == 0 || alloc.is_empty() {
+                    out.push(cold_sp.clone());
+                    continue;
+                }
+                let cache_len = cache_len_at(t);
+                let avail = prefill_seq + t * step_tokens;
+                let step_alloc = StepResidency {
+                    cache_rows: alloc.cache_rows.iter().map(|r| (*r).min(avail)).collect(),
+                    weight_cols: alloc.weight_cols.clone(),
+                };
+                out.push(plan_decode_step_res(
+                    &step_stages(cache_len),
+                    layers,
+                    cache_len,
+                    step_tokens,
+                    &step_alloc,
+                    tiling,
+                    budget,
+                    Phase::Decode { step: t, batch },
+                    memo,
+                ));
             }
-            step_plans.push(plan_decode_step_memo(
-                &step_stages(cache_len),
-                dims.layers,
-                cache_len,
-                hot,
-                tiling,
-                budget,
-                Phase::Decode { step: t, batch },
-                &mut memo,
-            ));
-        }
+            out
+        };
+
+        let uniform_rows = if row_words > 0 {
+            (cache_budget / row_words).min(max_rows)
+        } else {
+            0
+        };
+        let (alloc, step_plans, policy_used) = match policy {
+            ResidencyPolicy::Off => (StepResidency::none(), cold_steps, ResidencyPolicy::Off),
+            ResidencyPolicy::AllOrNothing => {
+                let alloc = StepResidency::uniform(uniform_rows, layers);
+                let plans = replan(&alloc, &cold_steps, &mut memo);
+                (alloc, plans, ResidencyPolicy::AllOrNothing)
+            }
+            ResidencyPolicy::Paged => {
+                let stages0 = step_stages(cache_len_at(0));
+                let paged_alloc = DecodePlan::paged_allocation(
+                    &stages0,
+                    layers,
+                    layer_row_words,
+                    max_rows,
+                    cache_budget,
+                    tiling,
+                    steps.saturating_sub(1),
+                );
+                let paged_plans = replan(&paged_alloc, &cold_steps, &mut memo);
+                let uniform_alloc = StepResidency::uniform(uniform_rows, layers);
+                let uniform_plans = replan(&uniform_alloc, &cold_steps, &mut memo);
+                let paged_total: u64 = paged_plans.iter().map(|s| s.total_ema()).sum();
+                let uniform_total: u64 = uniform_plans.iter().map(|s| s.total_ema()).sum();
+                // Paged must never lose to the uniform split.
+                if paged_total <= uniform_total {
+                    (paged_alloc, paged_plans, ResidencyPolicy::Paged)
+                } else {
+                    (uniform_alloc, uniform_plans, ResidencyPolicy::AllOrNothing)
+                }
+            }
+        };
+
+        let weight_hot_words = step_plans
+            .iter()
+            .map(|s| s.weight_hot_total())
+            .max()
+            .unwrap_or(0);
         DecodePlan {
             dims: *dims,
             batch,
             prefill_seq,
             steps,
+            draft,
             tiling: *tiling,
             heads_slice,
             ffn_slice,
             vocab_slice,
             budget,
             row_words,
-            resident_rows,
+            layer_row_words,
+            resident_rows: alloc.max_rows().min(max_rows),
+            cache_rows: alloc.cache_rows.clone(),
+            weight_hot_words,
             act_peak_words: act_peak,
+            policy: policy_used,
             prefill,
             step_plans,
         }
     }
 
     /// One steady-state decode step at `cache_len` (the coordinator's
-    /// decode-bucket unit): hot rows as a retained trajectory would have.
+    /// decode-bucket unit): residency as a retained trajectory would have
+    /// — cache rows and weight slices allocated by the same paged policy.
     pub fn plan_step(
         dims: &DecodeDims,
         batch: u64,
@@ -639,36 +944,76 @@ impl DecodePlan {
         // One memo serves both passes: the probe's cover searches for the
         // cache-length-independent stages are reused by the final plan.
         let mut memo = PlanMemo::new();
-        let probe = plan_decode_step_memo(
+        let phase = Phase::Decode { step: 0, batch };
+        let none = StepResidency::none();
+        let probe = plan_decode_step_res(
             &stages,
             dims.layers,
             cache_len,
-            0,
+            1,
+            &none,
             tiling,
             budget,
-            Phase::Decode { step: 0, batch },
+            phase,
             &mut memo,
         );
-        let row_words = 2 * dims.layers * batch * dims.hidden;
+        if cache_len <= 1 {
+            return probe;
+        }
+        // One resident cache position of ONE layer: K and V vectors of
+        // the full hidden width, for every sequence of the batch.
+        let layer_row_words = 2 * batch * dims.hidden;
         let cache_budget = budget.saturating_sub(probe.act_resident_words);
-        let hot = if row_words > 0 {
+        let alloc = DecodePlan::paged_allocation(
+            &stages,
+            dims.layers,
+            layer_row_words,
+            cache_len - 1,
+            cache_budget,
+            tiling,
+            1,
+        );
+        if alloc.is_empty() {
+            return probe;
+        }
+        let paged = plan_decode_step_res(
+            &stages,
+            dims.layers,
+            cache_len,
+            1,
+            &alloc,
+            tiling,
+            budget,
+            phase,
+            &mut memo,
+        );
+        // The steady state must also never lose to the uniform split.
+        let row_words = 2 * dims.layers * batch * dims.hidden;
+        let uniform_rows = if row_words > 0 {
             (cache_budget / row_words).min(cache_len - 1)
         } else {
             0
         };
-        if hot == 0 {
-            return probe;
+        let uniform = if uniform_rows > 0 {
+            plan_decode_step_res(
+                &stages,
+                dims.layers,
+                cache_len,
+                1,
+                &StepResidency::uniform(uniform_rows, dims.layers),
+                tiling,
+                budget,
+                phase,
+                &mut memo,
+            )
+        } else {
+            probe
+        };
+        if paged.total_ema() <= uniform.total_ema() {
+            paged
+        } else {
+            uniform
         }
-        plan_decode_step_memo(
-            &stages,
-            dims.layers,
-            cache_len,
-            hot,
-            tiling,
-            budget,
-            Phase::Decode { step: 0, batch },
-            &mut memo,
-        )
     }
 
     /// DRAM words of the decode phase (all `T` steps).
@@ -686,14 +1031,20 @@ impl DecodePlan {
         self.prefill.total_ema() + self.decode_ema()
     }
 
+    /// Tokens generated (and, for speculative decode, verified) over the
+    /// trajectory.
+    pub fn generated_tokens(&self) -> u64 {
+        self.steps * self.batch * (self.draft + 1)
+    }
+
     /// Decode DRAM words per generated token.
     pub fn per_token_ema(&self) -> f64 {
-        self.decode_ema() as f64 / (self.steps * self.batch) as f64
+        self.decode_ema() as f64 / self.generated_tokens() as f64
     }
 
     /// Per-token baseline under per-GEMM TAS.
     pub fn per_token_per_gemm_tas(&self) -> f64 {
-        self.per_gemm_tas_decode_total() as f64 / (self.steps * self.batch) as f64
+        self.per_gemm_tas_decode_total() as f64 / self.generated_tokens() as f64
     }
 
     /// Fractional decode saving over per-GEMM TAS.
@@ -706,16 +1057,18 @@ impl DecodePlan {
         }
     }
 
-    /// Upper bound on cache words resident at any point of the trajectory.
+    /// Upper bound on cache words resident at any point of the trajectory
+    /// (summed over the per-layer allocations).
     pub fn max_cache_resident_words(&self) -> u64 {
-        self.resident_rows * self.row_words
+        self.cache_rows.iter().map(|r| r * self.layer_row_words).sum()
     }
 
-    /// Peak SRAM the plan ever claims (activations + resident cache) —
-    /// never exceeds [`DecodePlan::budget`] by construction
-    /// (property-tested in `rust/tests/decode_invariants.rs`).
+    /// Peak SRAM the plan ever claims (activations + resident cache +
+    /// parked weights) — never exceeds [`DecodePlan::budget`] by
+    /// construction (property-tested in `rust/tests/decode_invariants.rs`
+    /// and `rust/tests/residency_invariants.rs`).
     pub fn peak_sram_claim(&self) -> u64 {
-        self.act_peak_words + self.max_cache_resident_words()
+        self.act_peak_words + self.max_cache_resident_words() + self.weight_hot_words
     }
 }
 
@@ -773,9 +1126,10 @@ impl ShardedDecodePlan {
                 prefill_seq,
                 steps,
                 batch,
+                0,
                 tiling,
                 sram_words_per_device,
-                true,
+                ResidencyPolicy::Paged,
             ));
         }
         let bh = batch * dims.hidden;
@@ -883,6 +1237,16 @@ mod tests {
     }
 
     #[test]
+    fn draft_steps_widen_every_stage() {
+        let d = dims();
+        let stages = decode_step_stages_spec(&d, 4, 96, 3, d.heads, d.ffn, d.vocab);
+        let ffn1 = stages.iter().find(|s| s.name == "ffn1").unwrap();
+        assert_eq!(ffn1.shape.m, 12, "M = batch × step_tokens");
+        let qk = stages.iter().find(|s| s.name == "qk_t").unwrap();
+        assert_eq!(qk.shape, GemmShape::new(3, 64, 96));
+    }
+
+    #[test]
     fn prefill_stages_reduce_to_block_stages() {
         for m in zoo::all_models() {
             let d = DecodeDims::of(&m);
@@ -926,8 +1290,43 @@ mod tests {
         // the attention stages actually split
         let qk = hot.stages.iter().find(|s| s.spec.name == "qk_t").unwrap();
         assert_eq!(qk.slices.len(), 2);
-        assert!(qk.slices[0].weight_resident);
-        assert!(!qk.slices[1].weight_resident);
+        assert!(qk.slices[0].plan.weight_residency.is_free());
+        assert!(!qk.slices[1].plan.weight_residency.is_free());
+        // slice instances cover the stage exactly
+        let inst: u64 = qk.slices.iter().map(|s| s.count).sum();
+        assert_eq!(inst, 2 * qk.spec.count, "hot+cold pair per instance");
+    }
+
+    #[test]
+    fn parked_weights_split_projections_and_win() {
+        let d = dims();
+        let t = Tiling::square(16);
+        let stages = decode_step_stages(&d, 1, 96);
+        let phase = Phase::Decode { step: 1, batch: 1 };
+        let mut memo = PlanMemo::new();
+        let mut res = StepResidency::none();
+        res.cache_rows = vec![0; d.layers as usize];
+        res.weight_cols
+            .insert("ffn1", vec![256; d.layers as usize]);
+        let with = plan_decode_step_res(
+            &stages, d.layers, 96, 1, &res, &t, 256 * 1024, phase, &mut memo,
+        );
+        let without = plan_decode_step_res(
+            &stages,
+            d.layers,
+            96,
+            1,
+            &StepResidency::none(),
+            &t,
+            256 * 1024,
+            phase,
+            &mut memo,
+        );
+        assert!(with.total_ema() < without.total_ema());
+        let ffn1 = with.stages.iter().find(|s| s.spec.name == "ffn1").unwrap();
+        assert!(ffn1.weight_hot_words > 0);
+        assert_eq!(ffn1.weight_hot_words, d.layers * 256 * 768);
+        assert_eq!(ffn1.slices.len(), 2, "hot/cold column split");
     }
 
     #[test]
@@ -959,6 +1358,7 @@ mod tests {
             4 * 1024 * 1024,
         );
         assert_eq!(p.resident_rows, 64 + 4 - 1);
+        assert!(p.cache_rows.iter().all(|&r| r <= 64 + 4 - 1));
         assert!(p.peak_sram_claim() <= p.budget);
     }
 
@@ -966,9 +1366,19 @@ mod tests {
     fn residency_disabled_prices_every_row_cold() {
         let d = dims();
         let t = Tiling::square(16);
-        let on = DecodePlan::plan_policy(&d, 64, 4, 1, &t, 256 * 1024, true);
-        let off = DecodePlan::plan_policy(&d, 64, 4, 1, &t, 256 * 1024, false);
+        let on = DecodePlan::plan_with_policy(
+            &d,
+            64,
+            4,
+            1,
+            &t,
+            256 * 1024,
+            ResidencyPolicy::Paged,
+        );
+        let off =
+            DecodePlan::plan_with_policy(&d, 64, 4, 1, &t, 256 * 1024, ResidencyPolicy::Off);
         assert_eq!(off.resident_rows, 0);
+        assert_eq!(off.weight_hot_words, 0);
         assert!(off.step_plans.iter().all(|s| s.hot_rows == 0));
         assert!(on.decode_ema() <= off.decode_ema());
         // identical per-GEMM baseline either way
@@ -976,18 +1386,79 @@ mod tests {
     }
 
     #[test]
+    fn paged_never_loses_to_the_uniform_split() {
+        let d = dims();
+        let t = Tiling::square(16);
+        for batch in [1u64, 8] {
+            let paged = DecodePlan::plan_with_policy(
+                &d,
+                64,
+                6,
+                batch,
+                &t,
+                256 * 1024,
+                ResidencyPolicy::Paged,
+            );
+            let uniform = DecodePlan::plan_with_policy(
+                &d,
+                64,
+                6,
+                batch,
+                &t,
+                256 * 1024,
+                ResidencyPolicy::AllOrNothing,
+            );
+            assert!(
+                paged.decode_ema() <= uniform.decode_ema(),
+                "batch {batch}: paged {} > uniform {}",
+                paged.decode_ema(),
+                uniform.decode_ema()
+            );
+            assert!(paged.peak_sram_claim() <= paged.budget);
+        }
+    }
+
+    #[test]
     fn steady_state_step_plan_uses_retained_rows() {
         let d = dims();
         let sp = DecodePlan::plan_step(&d, 1, 96, &Tiling::square(16), 256 * 1024);
-        assert!(sp.hot_rows > 0);
+        assert!(sp.hot_rows > 0 || sp.weight_hot_total() > 0);
         assert!(sp.total_ema() <= sp.per_gemm_tas_total());
+    }
+
+    #[test]
+    fn draft_trajectories_grow_the_cache_by_draft_plus_one() {
+        let p = DecodePlan::plan_draft(
+            &zoo::bert_base(),
+            32,
+            4,
+            2,
+            3,
+            &Tiling::square(16),
+            256 * 1024,
+        );
+        assert_eq!(p.draft, 3);
+        for (t, sp) in p.step_plans.iter().enumerate() {
+            assert_eq!(sp.cache_len, 32 + (t as u64 + 1) * 4);
+        }
+        assert_eq!(p.generated_tokens(), 4 * 2 * 4);
+        assert!(p.decode_ema() <= p.per_gemm_tas_decode_total());
+        assert!(p.peak_sram_claim() <= p.budget);
     }
 
     #[test]
     fn head_sharding_splits_work_and_scales_cache_residency() {
         let d = dims();
         let t = Tiling::square(16);
-        let single = DecodePlan::plan_policy(&d, 64, 4, 8, &t, 256 * 1024, true);
+        let single = DecodePlan::plan_with_policy(
+            &d,
+            64,
+            4,
+            8,
+            &t,
+            256 * 1024,
+            ResidencyPolicy::Paged,
+        );
         let sharded =
             ShardedDecodePlan::plan(&d, 64, 4, 8, &t, 256 * 1024, 4).unwrap();
         assert_eq!(sharded.per_device.len(), 4);
@@ -1005,12 +1476,6 @@ mod tests {
         };
         let total: u64 = sharded.per_device.iter().map(macs).sum();
         assert_eq!(total, macs(&single));
-        // aggregate SRAM scales: 4 devices park at least as many cache
-        // words as one (in practice several times more)
-        assert!(
-            sharded.total_resident_cache_words()
-                >= single.max_cache_resident_words()
-        );
         // the links carry the per-layer all-reduces
         assert!(sharded.reduce_words_per_step > 0);
         assert!(sharded.link_words_total() > 0);
@@ -1028,7 +1493,15 @@ mod tests {
     fn one_device_shard_matches_the_unsharded_plan() {
         let d = dims();
         let t = Tiling::square(16);
-        let single = DecodePlan::plan_policy(&d, 64, 4, 2, &t, 256 * 1024, true);
+        let single = DecodePlan::plan_with_policy(
+            &d,
+            64,
+            4,
+            2,
+            &t,
+            256 * 1024,
+            ResidencyPolicy::Paged,
+        );
         let sharded = ShardedDecodePlan::plan(&d, 64, 4, 2, &t, 256 * 1024, 1).unwrap();
         assert_eq!(sharded.decode_ema(), single.decode_ema());
         assert_eq!(sharded.link_words_total(), 0);

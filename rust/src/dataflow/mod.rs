@@ -9,8 +9,13 @@
 //! * [`plan`] — the schedule IR: a [`Plan`] owns a resolved tile-step
 //!   stream with **per-tile** stationary decisions and is what every cost
 //!   backend replays (see [`crate::sim::replay`]).
+//! * [`residency`] — fractional SRAM residency: the [`Residency`] type,
+//!   hot/cold GEMM slicing, and the greedy [`ResidencyAllocator`] that
+//!   treats SRAM as a budgeted, fractionally divisible resource shared by
+//!   layer, decode and lane planning.
 //! * [`layer`] — layer-level planning: [`LayerPlan`] chains the GEMMs of
-//!   one transformer block and models SRAM residency of intermediates.
+//!   one transformer block and models SRAM residency of intermediates
+//!   (fractionally, via the allocator).
 //! * [`shard`] — multi-accelerator sharding: partition a [`Plan`] across
 //!   devices by strip ranges, inter-chip traffic under the same cost
 //!   algebra ([`crate::arch::interconnect`]).
@@ -27,16 +32,18 @@ pub mod analytic;
 pub mod decode;
 pub mod layer;
 pub mod plan;
+pub mod residency;
 pub mod schedule;
 pub mod shard;
 
 pub use analytic::{ema, EmaBreakdown};
 pub use decode::{
     CacheEdge, CacheTensor, DecodeDims, DecodePlan, DecodeStagePlan, DecodeStepPlan,
-    Phase, ShardedDecodePlan,
+    Phase, ShardedDecodePlan, SlicePlan, StepResidency,
 };
 pub use layer::{LayerPlan, StagePlan, StageSpec};
 pub use plan::{Plan, PlanBody, Strip, StripKind};
+pub use residency::{Allocation, Candidate, Residency, ResidencyAllocator, ResidencyPolicy};
 pub use schedule::{for_each_step, step_count, Step};
 pub use shard::{
     place_stages, shard_gemm, shard_heads, LinkTraffic, ShardAxis, ShardSpec, ShardedPlan,

@@ -25,16 +25,21 @@
 //! On ragged shapes a *mixed* cover can strictly beat both pure hybrids —
 //! the per-tile decision is not just a per-GEMM argmin in disguise.
 //!
-//! Plans also carry SRAM **residency** flags used by layer-level planning
-//! ([`super::layer`]) and decode planning ([`super::decode`]): an input
-//! already resident in SRAM costs no DRAM reads; an output consumed
-//! on-chip by the next stage costs no DRAM writes; a resident *weight*
-//! operand (a K/V-cache block the decode planner parked in SRAM) costs no
-//! DRAM reads either.  Step flags keep their schedule semantics
-//! (`load_input` means "tile enters the PE array"); residency is a
-//! plan-level property the cost backends consult when charging DRAM.
+//! Plans also carry per-stream SRAM [`Residency`] used by layer-level
+//! planning ([`super::layer`]) and decode planning ([`super::decode`]):
+//! an input already resident in SRAM costs no DRAM reads; an output
+//! consumed on-chip by the next stage costs no DRAM writes; a resident
+//! *weight* operand (a K/V-cache block or parked weight slice) costs no
+//! DRAM reads either.  At the plan level a stream is either fully
+//! resident or fully streamed — a *partial* [`Residency::Rows`] is
+//! resolved by the planners into hot/cold **slice** plans (see
+//! [`super::residency`]), so every cost backend keeps one charging rule.
+//! Step flags keep their schedule semantics (`load_input` means "tile
+//! enters the PE array"); residency is a plan-level property the cost
+//! backends consult when charging DRAM.
 
 use super::analytic::{self, EmaBreakdown};
+use super::residency::Residency;
 use super::schedule::{self, Step};
 use super::Scheme;
 use crate::gemm::{tile_extent, GemmShape, Tiling};
@@ -109,15 +114,16 @@ pub struct Plan {
     pub shape: GemmShape,
     pub tiling: Tiling,
     pub body: PlanBody,
-    /// Input matrix is already SRAM-resident: operand reads cost no DRAM.
-    pub input_resident: bool,
-    /// Weight matrix is SRAM-resident (a parked K/V-cache block): weight
-    /// reads cost no DRAM.  Layer planning never sets this (block weights
-    /// are touched once per pass); the decode planner does, for the hot
-    /// slice of a cache tensor retained across autoregressive steps.
-    pub weight_resident: bool,
-    /// Output is consumed on-chip by the next stage: no DRAM writes.
-    pub output_resident: bool,
+    /// SRAM residency of the input matrix: a free stream costs no DRAM
+    /// reads.  Plan-level residency is never partial — planners slice a
+    /// partially resident tensor into hot/cold plans first.
+    pub input_residency: Residency,
+    /// SRAM residency of the weight-side operand (a parked K/V-cache
+    /// block or a weight slice retained across decode steps).
+    pub weight_residency: Residency,
+    /// SRAM residency of the output (consumed on-chip by the next
+    /// stage): a free stream costs no DRAM writes.
+    pub output_residency: Residency,
 }
 
 impl Plan {
@@ -130,46 +136,52 @@ impl Plan {
             shape: *shape,
             tiling: *tiling,
             body: PlanBody::Fixed(scheme.resolve(shape)),
-            input_resident: false,
-            weight_resident: false,
-            output_resident: false,
+            input_residency: Residency::None,
+            weight_residency: Residency::None,
+            output_residency: Residency::None,
         }
     }
 
     /// Tile-granular TAS for a standalone GEMM (nothing resident).
     pub fn tas_per_tile(shape: &GemmShape, tiling: &Tiling) -> Plan {
-        Plan::tas_with_residency(shape, tiling, false, false)
+        Plan::tas_with_residency(shape, tiling, Residency::None, Residency::None)
     }
 
     /// Tile-granular TAS given SRAM residency of the input/output tensors
-    /// (layer-level planning feeds these flags per chained stage).
+    /// (layer-level planning feeds these per chained stage slice).
     pub fn tas_with_residency(
         shape: &GemmShape,
         tiling: &Tiling,
-        input_resident: bool,
-        output_resident: bool,
+        input: Residency,
+        output: Residency,
     ) -> Plan {
-        Plan::tas_cached(shape, tiling, input_resident, false, output_resident)
+        Plan::tas_cached(shape, tiling, input, Residency::None, output)
     }
 
     /// Tile-granular TAS with full residency control, including a
     /// SRAM-resident *weight* operand — the decode planner's entry point
-    /// for cache-resident attention slices ([`super::decode`]).  A free
-    /// stream drops out of the chooser's objective, so the cover flips
-    /// toward re-reading whatever residency made free.
+    /// for cache-resident attention slices and parked weight slices
+    /// ([`super::decode`]).  A free stream drops out of the chooser's
+    /// objective, so the cover flips toward re-reading whatever residency
+    /// made free.  Partial residency is a planner-level notion: resolve
+    /// it into hot/cold slices ([`super::residency`]) before planning.
     pub fn tas_cached(
         shape: &GemmShape,
         tiling: &Tiling,
-        input_resident: bool,
-        weight_resident: bool,
-        output_resident: bool,
+        input: Residency,
+        weight: Residency,
+        output: Residency,
     ) -> Plan {
+        debug_assert!(
+            !input.is_partial() && !weight.is_partial() && !output.is_partial(),
+            "partial residency must be sliced before planning"
+        );
         Plan::plan_cover(
             shape,
             tiling,
-            input_resident,
-            weight_resident,
-            output_resident,
+            input,
+            weight,
+            output,
             Plan::WEIGHT_SCALE,
             Plan::WEIGHT_SCALE,
             true,
@@ -189,9 +201,9 @@ impl Plan {
         Plan::plan_cover(
             shape,
             tiling,
-            false,
-            false,
-            false,
+            Residency::None,
+            Residency::None,
+            Residency::None,
             Plan::WEIGHT_SCALE,
             Plan::WEIGHT_SCALE,
             false,
@@ -211,7 +223,16 @@ impl Plan {
     ) -> Plan {
         let wi = ((Plan::WEIGHT_SCALE as f64 * input_weight).round() as u64).max(1);
         let ww = ((Plan::WEIGHT_SCALE as f64 * weight_weight).round() as u64).max(1);
-        Plan::plan_cover(shape, tiling, false, false, false, wi, ww, false)
+        Plan::plan_cover(
+            shape,
+            tiling,
+            Residency::None,
+            Residency::None,
+            Residency::None,
+            wi,
+            ww,
+            false,
+        )
     }
 
     /// The strip-cover search behind every per-tile constructor.  `wi` /
@@ -220,13 +241,16 @@ impl Plan {
     fn plan_cover(
         shape: &GemmShape,
         tiling: &Tiling,
-        input_resident: bool,
-        weight_resident: bool,
-        output_resident: bool,
+        input_residency: Residency,
+        weight_residency: Residency,
+        output_residency: Residency,
         wi: u64,
         ww: u64,
         allow_fixed: bool,
     ) -> Plan {
+        let input_resident = input_residency.is_free();
+        let weight_resident = weight_residency.is_free();
+        let output_resident = output_residency.is_free();
         let (gm, _gn, gk) = tiling.grid(shape);
         let wk = tiling.window_tiles_k(shape);
         let wm = tiling.window_tiles_m(shape);
@@ -326,9 +350,9 @@ impl Plan {
                         shape: *shape,
                         tiling: *tiling,
                         body: PlanBody::Fixed(s),
-                        input_resident,
-                        weight_resident,
-                        output_resident,
+                        input_residency,
+                        weight_residency,
+                        output_residency,
                     };
                 }
             }
@@ -344,9 +368,9 @@ impl Plan {
             shape: *shape,
             tiling: *tiling,
             body: PlanBody::Strips(strips),
-            input_resident,
-            weight_resident,
-            output_resident,
+            input_residency,
+            weight_residency,
+            output_residency,
         }
     }
 
@@ -410,7 +434,9 @@ impl Plan {
         match &self.body {
             PlanBody::Fixed(s) => {
                 debug_assert!(
-                    !self.input_resident && !self.weight_resident && !self.output_resident,
+                    !self.input_residency.is_free()
+                        && !self.weight_residency.is_free()
+                        && !self.output_residency.is_free(),
                     "residency is only planned onto strip bodies"
                 );
                 analytic::ema(*s, &self.shape, &self.tiling)
@@ -428,9 +454,9 @@ impl Plan {
                     output += ow;
                 }
                 EmaBreakdown {
-                    input: if self.input_resident { 0 } else { input },
-                    weight: if self.weight_resident { 0 } else { weight },
-                    output: if self.output_resident { 0 } else { output },
+                    input: if self.input_residency.is_free() { 0 } else { input },
+                    weight: if self.weight_residency.is_free() { 0 } else { weight },
+                    output: if self.output_residency.is_free() { 0 } else { output },
                 }
             }
         }
@@ -560,16 +586,16 @@ mod tests {
             let mi = tile_extent(shape.m, t.tm, s.i);
             let nr = tile_extent(shape.n, t.tn, s.r);
             let kj = tile_extent(shape.k, t.tk, s.j);
-            if s.load_input && !plan.input_resident {
+            if s.load_input && !plan.input_residency.is_free() {
                 e.input += mi * nr;
             }
-            if s.load_weight && !plan.weight_resident {
+            if s.load_weight && !plan.weight_residency.is_free() {
                 e.weight += nr * kj;
             }
             if s.psum_spill {
                 e.output += mi * kj;
             }
-            if s.store_out && !plan.output_resident {
+            if s.store_out && !plan.output_residency.is_free() {
                 e.output += mi * kj;
             }
         });
@@ -700,8 +726,10 @@ mod tests {
         let shape = GemmShape::new(384, 768, 768);
         let tiling = Tiling::square(16);
         let base = Plan::tas_per_tile(&shape, &tiling).ema();
-        let in_res = Plan::tas_with_residency(&shape, &tiling, true, false).ema();
-        let out_res = Plan::tas_with_residency(&shape, &tiling, false, true).ema();
+        let in_res =
+            Plan::tas_with_residency(&shape, &tiling, Residency::Full, Residency::None).ema();
+        let out_res =
+            Plan::tas_with_residency(&shape, &tiling, Residency::None, Residency::Full).ema();
         assert_eq!(in_res.input, 0);
         assert_eq!(out_res.output, 0);
         assert!(in_res.total() < base.total());
@@ -719,7 +747,8 @@ mod tests {
                 rng.gen_in(1, 150),
             );
             let tiling = rand_tiling(rng);
-            let plan = Plan::tas_cached(&shape, &tiling, false, true, false);
+            let plan =
+                Plan::tas_cached(&shape, &tiling, Residency::None, Residency::Full, Residency::None);
             let e = plan.ema();
             assert_eq!(e.weight, 0);
             // closed form still matches the replayed step stream
@@ -741,7 +770,7 @@ mod tests {
         // planner must find a cover that reads each weight word once.
         let shape = GemmShape::new(4096, 768, 768);
         let tiling = Tiling::square(16);
-        let plan = Plan::tas_with_residency(&shape, &tiling, true, false);
+        let plan = Plan::tas_with_residency(&shape, &tiling, Residency::Full, Residency::None);
         let e = plan.ema();
         assert_eq!(e.input, 0);
         assert_eq!(e.weight, shape.weight_words());

@@ -1,0 +1,407 @@
+//! Fractional SRAM residency: the [`Residency`] type, hot/cold GEMM
+//! slicing, and the greedy page allocator shared by layer-level planning
+//! ([`super::layer`]), decode planning ([`super::decode`]) and the
+//! coordinator's lane splitting ([`crate::coordinator::decisions`]).
+//!
+//! The seed planners treated SRAM residency as an all-or-nothing boolean
+//! per tensor: an intermediate either fit the budget whole or moved every
+//! word through DRAM, and the decode cache was split uniformly across
+//! layers.  This module makes SRAM a *budgeted, fractionally divisible*
+//! resource, the way FlexGen-style offloading policies and FLAT's on-chip
+//! fusion budgets treat it:
+//!
+//! * [`Residency`] describes how much of a tensor is SRAM-resident —
+//!   nothing, everything, or a leading *row range* along the tensor's
+//!   residency axis.  It replaces the `weight_resident: bool` flags the
+//!   [`super::plan::Plan`] IR used to carry.
+//! * A partially resident operand is priced by **hot/cold slicing**
+//!   ([`split_rows`] / [`split_cols`] / [`split_contraction`]): the GEMM
+//!   splits along the axis the resident rows run along, the hot slice
+//!   plans with the operand [`Residency::Full`] (the per-tile TAS chooser
+//!   then flips its cover toward re-reading the free stream), the cold
+//!   slice streams from DRAM.  This generalises the decode planner's
+//!   attention split to *every* GEMM; a split is only kept when it wins,
+//!   so fractional plans never lose to the all-or-nothing planner.
+//! * [`ResidencyAllocator`] takes the SRAM budget plus every candidate
+//!   tensor and allocates pages greedily by **marginal EMA saved per
+//!   word**.  Savings curves are supplied by the planners (exact slice
+//!   pricing for layer intermediates, closed-form rates for cache rows
+//!   and decode weights); candidates carry a *live interval* over the
+//!   plan's timeline so tensors that coexist share the budget and
+//!   tensors that don't can reuse it.
+
+use crate::gemm::GemmShape;
+use std::ops::Range;
+
+/// SRAM residency of one tensor (or one operand stream of a plan).
+///
+/// At the [`super::plan::Plan`] level only [`Residency::None`] and
+/// [`Residency::Full`] appear: the planners resolve a partial
+/// [`Residency::Rows`] into hot/cold slice plans before constructing the
+/// step streams, so every cost backend keeps a single charging rule
+/// (free stream or charged stream, per slice).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Residency {
+    /// Streamed from DRAM: every operand word is charged.
+    #[default]
+    None,
+    /// The whole tensor is SRAM-resident: the stream charges nothing.
+    Full,
+    /// The leading `hot` of `of` rows along the tensor's residency axis
+    /// are SRAM-resident (a planner-level fraction, resolved by slicing).
+    Rows { hot: u64, of: u64 },
+}
+
+impl Residency {
+    /// Normalising constructor: 0 hot rows is [`Residency::None`], all
+    /// rows is [`Residency::Full`].
+    pub fn rows(hot: u64, of: u64) -> Residency {
+        if hot == 0 || of == 0 {
+            Residency::None
+        } else if hot >= of {
+            Residency::Full
+        } else {
+            Residency::Rows { hot, of }
+        }
+    }
+
+    /// The stream charges no DRAM words (plan-level semantics).
+    pub fn is_free(&self) -> bool {
+        matches!(self, Residency::Full)
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, Residency::None)
+    }
+
+    pub fn is_partial(&self) -> bool {
+        matches!(self, Residency::Rows { .. })
+    }
+
+    /// Hot rows given the tensor's total row count.
+    pub fn hot_in(&self, total: u64) -> u64 {
+        match self {
+            Residency::None => 0,
+            Residency::Full => total,
+            Residency::Rows { hot, .. } => (*hot).min(total),
+        }
+    }
+
+    /// Human-readable summary: `-`, `full`, or `hot/total`.
+    pub fn describe(&self) -> String {
+        match self {
+            Residency::None => "-".to_string(),
+            Residency::Full => "full".to_string(),
+            Residency::Rows { hot, of } => format!("{hot}/{of}"),
+        }
+    }
+}
+
+/// Which residency model a planner runs under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResidencyPolicy {
+    /// No SRAM residency at all: every tensor streams through DRAM.
+    Off,
+    /// The seed behaviour: whole tensors only (layer chains), uniform
+    /// per-layer decode cache split.
+    AllOrNothing,
+    /// Fractional paged allocation via [`ResidencyAllocator`].  Never
+    /// loses to [`ResidencyPolicy::AllOrNothing`]: the planners price
+    /// both and keep the better plan.
+    Paged,
+}
+
+impl ResidencyPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ResidencyPolicy::Off => "off",
+            ResidencyPolicy::AllOrNothing => "all-or-nothing",
+            ResidencyPolicy::Paged => "paged",
+        }
+    }
+}
+
+/// Split `shape` along M at `hot` rows: `(hot_shape, cold_shape)`.
+/// `hot` is clamped to `[0, m]`; a degenerate side returns `None`.
+pub fn split_rows(shape: &GemmShape, hot: u64) -> (Option<GemmShape>, Option<GemmShape>) {
+    let hot = hot.min(shape.m);
+    let hot_s = (hot > 0).then(|| GemmShape::new(hot, shape.n, shape.k));
+    let cold_s = (hot < shape.m).then(|| GemmShape::new(shape.m - hot, shape.n, shape.k));
+    (hot_s, cold_s)
+}
+
+/// Split `shape` along K (weight columns / output features) at `hot`.
+pub fn split_cols(shape: &GemmShape, hot: u64) -> (Option<GemmShape>, Option<GemmShape>) {
+    let hot = hot.min(shape.k);
+    let hot_s = (hot > 0).then(|| GemmShape::new(shape.m, shape.n, hot));
+    let cold_s = (hot < shape.k).then(|| GemmShape::new(shape.m, shape.n, shape.k - hot));
+    (hot_s, cold_s)
+}
+
+/// Split `shape` along N (the contraction) at `hot`.
+pub fn split_contraction(shape: &GemmShape, hot: u64) -> (Option<GemmShape>, Option<GemmShape>) {
+    let hot = hot.min(shape.n);
+    let hot_s = (hot > 0).then(|| GemmShape::new(shape.m, hot, shape.k));
+    let cold_s = (hot < shape.n).then(|| GemmShape::new(shape.m, shape.n - hot, shape.k));
+    (hot_s, cold_s)
+}
+
+/// One tensor competing for SRAM pages.
+pub struct Candidate<'a> {
+    /// Debug/report label (e.g. `"shared:k+v"`, `"cache:L3"`).
+    pub label: String,
+    /// SRAM words one page occupies while the tensor is live.
+    pub page_words: u64,
+    /// Most pages this tensor can use.
+    pub max_pages: u64,
+    /// Timeline slots the resident pages occupy (stages for layer plans,
+    /// a single steady-state slot for decode).  Tensors whose live
+    /// intervals are disjoint reuse the same SRAM words.
+    pub live: Range<usize>,
+    /// Total EMA words saved when `p` pages of this tensor are resident.
+    /// Supplied by the planner; need not be linear (the allocator probes
+    /// geometric jumps, so flat-then-steep curves — an input flipping the
+    /// stationary cover once a slice goes free — are still found).
+    pub saving: Box<dyn Fn(u64) -> u64 + 'a>,
+}
+
+/// Result of one allocation: pages per candidate plus the peak SRAM
+/// claim over the timeline.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Allocation {
+    /// Pages granted per candidate (same order as the candidate list).
+    pub pages: Vec<u64>,
+    /// Largest per-slot word claim — never exceeds the budget.
+    pub peak_words: u64,
+}
+
+/// Greedy fractional SRAM allocator: highest marginal-EMA-saved-per-word
+/// first, in bulk jumps.
+pub struct ResidencyAllocator {
+    budget: u64,
+    slots: usize,
+}
+
+impl ResidencyAllocator {
+    /// `budget` words are available in each of `slots` timeline slots.
+    pub fn new(budget: u64, slots: usize) -> ResidencyAllocator {
+        ResidencyAllocator { budget, slots: slots.max(1) }
+    }
+
+    /// Allocate pages to `candidates` greedily.  Each round the allocator
+    /// probes every candidate at geometrically spaced jumps (1, 2, 4, …
+    /// pages up to its headroom) and takes the jump with the best
+    /// saved-words-per-SRAM-word rate; it stops when no jump saves
+    /// anything.  Deterministic: ties keep the earliest candidate and the
+    /// largest jump at that rate.
+    pub fn allocate(&self, candidates: &[Candidate]) -> Allocation {
+        let mut pages = vec![0u64; candidates.len()];
+        let mut used = vec![0u64; self.slots];
+        loop {
+            // (rate, gain, candidate, jump)
+            let mut best: Option<(f64, u64, usize, u64)> = None;
+            for (i, c) in candidates.iter().enumerate() {
+                if c.page_words == 0 || c.live.start >= self.slots {
+                    continue;
+                }
+                let live = c.live.start..c.live.end.min(self.slots);
+                let headroom = live
+                    .clone()
+                    .map(|s| self.budget.saturating_sub(used[s]))
+                    .min()
+                    .unwrap_or(0)
+                    / c.page_words;
+                let max_jump = headroom.min(c.max_pages.saturating_sub(pages[i]));
+                if max_jump == 0 {
+                    continue;
+                }
+                let base = (c.saving)(pages[i]);
+                let mut jump = 1u64;
+                loop {
+                    let j = jump.min(max_jump);
+                    let gain = (c.saving)(pages[i] + j).saturating_sub(base);
+                    if gain > 0 {
+                        let rate = gain as f64 / (j * c.page_words) as f64;
+                        let better = match best {
+                            None => true,
+                            // strictly better rate wins; at equal rate the
+                            // earliest candidate keeps its claim and a
+                            // larger jump is preferred within it
+                            Some((r, g, bi, _)) => {
+                                rate > r || (bi == i && rate >= r && gain > g)
+                            }
+                        };
+                        if better {
+                            best = Some((rate, gain, i, j));
+                        }
+                    }
+                    if j == max_jump {
+                        break;
+                    }
+                    jump *= 2;
+                }
+            }
+            let Some((_, _, i, jump)) = best else { break };
+            pages[i] += jump;
+            let c = &candidates[i];
+            for s in c.live.start..c.live.end.min(self.slots) {
+                used[s] += jump * c.page_words;
+            }
+        }
+        Allocation {
+            pages,
+            peak_words: used.iter().copied().max().unwrap_or(0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn residency_normalises() {
+        assert_eq!(Residency::rows(0, 10), Residency::None);
+        assert_eq!(Residency::rows(10, 10), Residency::Full);
+        assert_eq!(Residency::rows(12, 10), Residency::Full);
+        assert_eq!(Residency::rows(3, 10), Residency::Rows { hot: 3, of: 10 });
+        assert!(Residency::Full.is_free());
+        assert!(!Residency::rows(3, 10).is_free());
+        assert_eq!(Residency::rows(3, 10).hot_in(10), 3);
+        assert_eq!(Residency::Full.hot_in(7), 7);
+        assert_eq!(Residency::None.hot_in(7), 0);
+        assert_eq!(Residency::rows(3, 10).describe(), "3/10");
+    }
+
+    #[test]
+    fn splits_partition_the_shape() {
+        let s = GemmShape::new(100, 64, 80);
+        let (h, c) = split_rows(&s, 48);
+        assert_eq!(h.unwrap().m + c.unwrap().m, 100);
+        let (h, c) = split_cols(&s, 16);
+        assert_eq!(h.unwrap().k + c.unwrap().k, 80);
+        let (h, c) = split_contraction(&s, 64);
+        assert_eq!(h.unwrap(), GemmShape::new(100, 64, 80));
+        assert!(c.is_none());
+        let (h, c) = split_rows(&s, 0);
+        assert!(h.is_none());
+        assert_eq!(c.unwrap(), s);
+    }
+
+    fn linear(rate: u64) -> Box<dyn Fn(u64) -> u64> {
+        Box::new(move |p| p * rate)
+    }
+
+    #[test]
+    fn allocator_respects_the_budget_per_slot() {
+        property("allocator budget", 60, |rng: &mut Rng| {
+            let budget = rng.gen_in(1, 10_000);
+            let slots = rng.gen_in(1, 5) as usize;
+            let n = rng.gen_in(1, 6) as usize;
+            let cands: Vec<Candidate> = (0..n)
+                .map(|i| {
+                    let lo = rng.gen_range(slots as u64) as usize;
+                    let hi = lo + 1 + rng.gen_range((slots - lo) as u64) as usize;
+                    Candidate {
+                        label: format!("c{i}"),
+                        page_words: rng.gen_in(1, 200),
+                        max_pages: rng.gen_in(1, 50),
+                        live: lo..hi,
+                        saving: linear(rng.gen_in(1, 300)),
+                    }
+                })
+                .collect();
+            let alloc = ResidencyAllocator::new(budget, slots).allocate(&cands);
+            assert!(alloc.peak_words <= budget);
+            // recompute per-slot usage independently
+            let mut used = vec![0u64; slots];
+            for (c, p) in cands.iter().zip(&alloc.pages) {
+                assert!(*p <= c.max_pages);
+                for s in c.live.start..c.live.end.min(slots) {
+                    used[s] += p * c.page_words;
+                }
+            }
+            assert!(used.iter().all(|u| *u <= budget));
+            assert_eq!(used.iter().copied().max().unwrap_or(0), alloc.peak_words);
+        });
+    }
+
+    #[test]
+    fn allocator_prefers_the_better_rate() {
+        // Two candidates on one slot: the second saves 10 words per SRAM
+        // word, the first only 1 — the second must be served first.
+        let cands = vec![
+            Candidate {
+                label: "cheap".into(),
+                page_words: 10,
+                max_pages: 100,
+                live: 0..1,
+                saving: linear(10),
+            },
+            Candidate {
+                label: "dense".into(),
+                page_words: 10,
+                max_pages: 100,
+                live: 0..1,
+                saving: linear(100),
+            },
+        ];
+        let alloc = ResidencyAllocator::new(200, 1).allocate(&cands);
+        assert_eq!(alloc.pages[1], 20, "dense candidate fills the budget");
+        assert_eq!(alloc.pages[0], 0);
+    }
+
+    #[test]
+    fn allocator_finds_flat_then_steep_curves() {
+        // Saving is 0 for the first page and jumps at the second — the
+        // greedy's geometric probes must see past the flat start.
+        let cands = vec![Candidate {
+            label: "steep".into(),
+            page_words: 1,
+            max_pages: 8,
+            live: 0..1,
+            saving: Box::new(|p| if p >= 2 { 1000 + p } else { 0 }),
+        }];
+        let alloc = ResidencyAllocator::new(100, 1).allocate(&cands);
+        assert!(alloc.pages[0] >= 2, "got {:?}", alloc.pages);
+    }
+
+    #[test]
+    fn disjoint_live_ranges_reuse_the_budget() {
+        let cands = vec![
+            Candidate {
+                label: "a".into(),
+                page_words: 10,
+                max_pages: 10,
+                live: 0..1,
+                saving: linear(5),
+            },
+            Candidate {
+                label: "b".into(),
+                page_words: 10,
+                max_pages: 10,
+                live: 1..2,
+                saving: linear(5),
+            },
+        ];
+        let alloc = ResidencyAllocator::new(100, 2).allocate(&cands);
+        assert_eq!(alloc.pages, vec![10, 10], "both fill their own slot");
+        assert_eq!(alloc.peak_words, 100);
+    }
+
+    #[test]
+    fn zero_saving_allocates_nothing() {
+        let cands = vec![Candidate {
+            label: "dead".into(),
+            page_words: 1,
+            max_pages: 10,
+            live: 0..1,
+            saving: linear(0),
+        }];
+        let alloc = ResidencyAllocator::new(100, 1).allocate(&cands);
+        assert_eq!(alloc.pages, vec![0]);
+        assert_eq!(alloc.peak_words, 0);
+    }
+}

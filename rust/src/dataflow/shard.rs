@@ -230,11 +230,11 @@ impl ShardedPlan {
                     let dev = self.strip_owner(strip);
                     let (iw, ww, ow) = strip.words(&shape, &t);
                     let e = &mut out[dev];
-                    if !self.plan.input_resident {
+                    if !self.plan.input_residency.is_free() {
                         e.input += iw;
                     }
                     e.weight += ww;
-                    if !self.plan.output_resident {
+                    if !self.plan.output_residency.is_free() {
                         e.output += ow;
                     }
                 }
@@ -254,12 +254,12 @@ impl ShardedPlan {
                         if elems[dev] == 0 {
                             continue;
                         }
-                        if !self.plan.input_resident {
+                        if !self.plan.input_residency.is_free() {
                             e.input += (iw / n) * elems[dev];
                         }
                         e.weight += (ww / n) * elems[dev];
                     }
-                    if !self.plan.output_resident {
+                    if !self.plan.output_residency.is_free() {
                         out[last].output += ow;
                     }
                 }
@@ -315,10 +315,10 @@ impl ShardedPlan {
                                 let home = owner_of(&self.bounds, i);
                                 if home != dev {
                                     let mi = tile_extent(shape.m, t.tm, i);
-                                    if !self.plan.input_resident {
+                                    if !self.plan.input_residency.is_free() {
                                         p2p(&mut lt, home, dev, mi * n);
                                     }
-                                    if !self.plan.output_resident {
+                                    if !self.plan.output_residency.is_free() {
                                         p2p(&mut lt, dev, home, mi * kj);
                                     }
                                 }
@@ -338,7 +338,7 @@ impl ShardedPlan {
                             let i = strip.i0;
                             let mi = tile_extent(shape.m, t.tm, i);
                             let home_in = owner_of(&row_bounds, i);
-                            if home_in != dev && !self.plan.input_resident {
+                            if home_in != dev && !self.plan.input_residency.is_free() {
                                 p2p(&mut lt, home_in, dev, mi * n);
                             }
                             for j in strip.j0..strip.j1 {
@@ -346,7 +346,7 @@ impl ShardedPlan {
                                 if home != dev {
                                     let kj = tile_extent(shape.k, t.tk, j);
                                     p2p(&mut lt, home, dev, n * kj);
-                                    if !self.plan.output_resident {
+                                    if !self.plan.output_residency.is_free() {
                                         p2p(&mut lt, dev, home, mi * kj);
                                     }
                                 }
@@ -356,7 +356,7 @@ impl ShardedPlan {
                             // the strip's weight column is its owner's: local
                             for i in strip.i0..strip.i1 {
                                 let home = owner_of(&row_bounds, i);
-                                if home != dev && !self.plan.input_resident {
+                                if home != dev && !self.plan.input_residency.is_free() {
                                     p2p(&mut lt, home, dev, tile_extent(shape.m, t.tm, i) * n);
                                 }
                             }

@@ -69,9 +69,9 @@ USAGE: tas <subcommand> [options]
   shard     --model NAME [--seq N] [--devices D] [--axis auto|rows|cols|
             contraction] [--tile N] [--sram WORDS] [--link-aware]
             [--link-bw WORDS] [--config FILE] [--json]
-  decode    --model NAME [--prefill N] [--steps T] [--batch B] [--tile N]
-            [--sram WORDS] [--devices D] [--config FILE] [--json]
-  sweep     --model NAME [--tile N] [--seqs a,b,c] [--json]
+  decode    --model NAME [--prefill N] [--steps T] [--batch B] [--draft D]
+            [--tile N] [--sram WORDS] [--devices D] [--config FILE] [--json]
+  sweep     --model NAME [--tile N] [--seqs a,b,c] [--sram WORDS] [--json]
   trace     --scheme NAME --m M --n N --k K [--tile N] [--limit N] [--json]
   figs      [--m M] [--n N] [--k K] [--tile N]   (Fig. 1/2 tile maps)
   validate  [--artifacts DIR]
@@ -205,6 +205,14 @@ fn cmd_plan(mut args: Args) -> Result<()> {
         .map(|s| s.spec.count * ema(Scheme::Naive, &s.spec.shape, &tiling).total())
         .sum();
 
+    // "yes" for fully resident, "-" for streamed, "hot/total" for paged.
+    let mark = |r: &tas::dataflow::Residency| {
+        if r.is_free() {
+            "yes".to_string()
+        } else {
+            r.describe()
+        }
+    };
     if json {
         let stages: Vec<Json> = plan
             .stages
@@ -216,9 +224,11 @@ fn cmd_plan(mut args: Args) -> Result<()> {
                     ("n", jnum(s.spec.shape.n)),
                     ("k", jnum(s.spec.shape.k)),
                     ("count", jnum(s.spec.count)),
-                    ("decision", jstr(&s.plan.describe())),
-                    ("input_resident", jbool(s.input_resident)),
-                    ("output_resident", jbool(s.output_resident)),
+                    ("decision", jstr(&s.describe())),
+                    ("input_residency", jstr(&s.input.describe())),
+                    ("output_residency", jstr(&s.output.describe())),
+                    ("input_hot_rows", jnum(s.input.hot_in(s.spec.shape.m))),
+                    ("output_hot_rows", jnum(s.output.hot_in(s.spec.shape.m))),
                     ("ema_words", jnum(s.ema_words)),
                     ("per_gemm_tas_words", jnum(s.per_gemm_tas_words)),
                 ])
@@ -228,6 +238,9 @@ fn cmd_plan(mut args: Args) -> Result<()> {
             .field("model", jstr(model.name))
             .field("seq", jnum(seq))
             .field("sram_words", jnum(sram))
+            .field("residency_policy", jstr(plan.policy.name()))
+            .field("resident_rows", jnum(plan.resident_rows()))
+            .field("resident_peak_words", jnum(plan.resident_peak_words))
             .field("stages", jarr(stages))
             .field("total_ema_words", jnum(plan.total_ema()))
             .field("per_gemm_tas_words", jnum(plan.per_gemm_tas_total()))
@@ -238,8 +251,12 @@ fn cmd_plan(mut args: Args) -> Result<()> {
 
     let mut t = Table::new(
         &format!(
-            "{} layer plan @ seq {} (tile {}, SRAM {} words)",
-            model.name, seq, tiling.tm, sram
+            "{} layer plan @ seq {} (tile {}, SRAM {} words, {} residency)",
+            model.name,
+            seq,
+            tiling.tm,
+            sram,
+            plan.policy.name()
         ),
         &["stage", "M,N,K", "×", "decision", "in SRAM", "out SRAM", "EMA words", "vs per-GEMM TAS"],
     );
@@ -248,9 +265,9 @@ fn cmd_plan(mut args: Args) -> Result<()> {
             s.spec.name.to_string(),
             format!("{},{},{}", s.spec.shape.m, s.spec.shape.n, s.spec.shape.k),
             s.spec.count.to_string(),
-            s.plan.describe(),
-            if s.input_resident { "yes" } else { "-" }.into(),
-            if s.output_resident { "yes" } else { "-" }.into(),
+            s.describe(),
+            mark(&s.input),
+            mark(&s.output),
             sci(s.ema_words as f64),
             pct(1.0 - s.ema_words as f64 / s.per_gemm_tas_words.max(1) as f64),
         ]);
@@ -263,10 +280,12 @@ fn cmd_plan(mut args: Args) -> Result<()> {
         sci(naive as f64)
     );
     println!(
-        "layer planning saves {} vs per-GEMM TAS; {} vs naive ({} resident edges)",
+        "layer planning saves {} vs per-GEMM TAS; {} vs naive ({} resident edges, {} hot rows, peak {} words)",
         pct(plan.reduction_vs_per_gemm()),
         pct(1.0 - plan.total_ema() as f64 / naive as f64),
-        plan.resident_edges()
+        plan.resident_edges(),
+        plan.resident_rows(),
+        sci(plan.resident_peak_words as f64)
     );
     Ok(())
 }
@@ -500,6 +519,7 @@ fn cmd_decode(mut args: Args) -> Result<()> {
     let prefill = args.opt_u64("prefill", 64)?;
     let steps = args.opt_u64("steps", 32)?;
     let batch = args.opt_u64("batch", 8)?;
+    let draft = args.opt_u64("draft", 0)?;
     let devices = args.opt_u64("devices", 1)?.max(1);
     let json = args.flag("json");
     let model = zoo::by_name(&name)?;
@@ -507,6 +527,10 @@ fn cmd_decode(mut args: Args) -> Result<()> {
     anyhow::ensure!(
         prefill >= 1 && steps >= 1 && batch >= 1,
         "--prefill/--steps/--batch must be at least 1"
+    );
+    anyhow::ensure!(
+        draft == 0 || devices == 1,
+        "--draft models a single-device speculative step (drop --devices)"
     );
     let dims = DecodeDims::of(&model);
 
@@ -592,8 +616,24 @@ fn cmd_decode(mut args: Args) -> Result<()> {
         return Ok(());
     }
 
-    let dp = DecodePlan::plan(&model, prefill, steps, batch, &tiling, sram);
+    let dp = DecodePlan::plan_draft(&model, prefill, steps, batch, draft, &tiling, sram);
     let tc = trajectory_fused_cost(&dp, &cfg, &EnergyModel::default());
+    // Speculative-decode flip sweep (ROADMAP item): each draft width d
+    // turns a step into an M = batch×(d+1) GEMM; report where the paper's
+    // sign rule (IS iff M < K) flips per projection class.
+    let pick = |m: u64, k: u64| if k > 0 && m < k { "IS-OS" } else { "WS-OS" };
+    let draft_rows: Vec<(u64, u64, &str, &str, &str)> = (0..=draft)
+        .map(|d| {
+            let m = batch * (d + 1);
+            (
+                d,
+                m,
+                pick(m, model.hidden),
+                pick(m, model.ffn),
+                model.vocab.map(|v| pick(m, v)).unwrap_or("-"),
+            )
+        })
+        .collect();
     if json {
         let per_step: Vec<Json> = dp
             .step_plans
@@ -607,6 +647,27 @@ fn cmd_decode(mut args: Args) -> Result<()> {
                     ("ema_words", jnum(s.total_ema())),
                     ("per_gemm_tas_words", jnum(s.per_gemm_tas_total())),
                     ("cache_hot_words", jnum(s.cache_hot_total())),
+                    ("weight_hot_words", jnum(s.weight_hot_total())),
+                ])
+            })
+            .collect();
+        let per_draft: Vec<Json> = draft_rows
+            .iter()
+            .map(|(d, m, qkv, ffn1, head)| {
+                jobj(vec![
+                    ("draft", jnum(*d)),
+                    ("m", jnum(*m)),
+                    ("qkv_pick", jstr(qkv)),
+                    ("ffn1_pick", jstr(ffn1)),
+                    ("lm_head_pick", jstr(head)),
+                    (
+                        "flipped",
+                        jbool(
+                            *qkv != draft_rows[0].2
+                                || *ffn1 != draft_rows[0].3
+                                || *head != draft_rows[0].4,
+                        ),
+                    ),
                 ])
             })
             .collect();
@@ -615,11 +676,19 @@ fn cmd_decode(mut args: Args) -> Result<()> {
             .field("prefill", jnum(prefill))
             .field("steps", jnum(steps))
             .field("batch", jnum(batch))
+            .field("draft", jnum(draft))
+            .field("generated_tokens", jnum(dp.generated_tokens()))
             .field("devices", jnum(1))
             .field("sram_words", jnum(sram))
+            .field("residency_policy", jstr(dp.policy.name()))
             .field("resident_rows", jnum(dp.resident_rows))
             .field("row_words", jnum(dp.row_words))
+            .field(
+                "cache_rows_per_layer",
+                jarr(dp.cache_rows.iter().map(|r| jnum(*r)).collect()),
+            )
             .field("cache_resident_words", jnum(dp.max_cache_resident_words()))
+            .field("weight_hot_words", jnum(dp.weight_hot_words))
             .field("act_peak_words", jnum(dp.act_peak_words))
             .field("prefill_ema_words", jnum(dp.prefill.total_ema()))
             .field("decode_ema_words", jnum(dp.decode_ema()))
@@ -629,6 +698,7 @@ fn cmd_decode(mut args: Args) -> Result<()> {
             .field("reduction_vs_per_gemm", jf64(dp.reduction_vs_per_gemm()))
             .field("trajectory_cycles", jnum(tc.cycles.total_cycles))
             .field("trajectory_energy_pj", jf64(tc.energy.total_pj()))
+            .field("per_draft", jarr(per_draft))
             .field("per_step", jarr(per_step))
             .print();
         return Ok(());
@@ -636,8 +706,15 @@ fn cmd_decode(mut args: Args) -> Result<()> {
 
     let mut t = Table::new(
         &format!(
-            "{} decode trajectory: prefill {} → {} steps at batch {} (tile {}, SRAM {} words)",
-            model.name, prefill, steps, batch, tiling.tm, sram
+            "{} decode trajectory: prefill {} → {} steps at batch {}{} (tile {}, SRAM {} words, {} residency)",
+            model.name,
+            prefill,
+            steps,
+            batch,
+            if draft > 0 { format!(" × draft {draft}") } else { String::new() },
+            tiling.tm,
+            sram,
+            dp.policy.name()
         ),
         &["step", "cache len", "hot rows", "EMA words", "vs per-GEMM TAS", "cache from SRAM"],
     );
@@ -658,18 +735,36 @@ fn cmd_decode(mut args: Args) -> Result<()> {
         ]);
     }
     println!("{}", t.to_text());
+    if draft > 0 {
+        let mut dt = Table::new(
+            "speculative shapes: where the per-GEMM sign rule flips",
+            &["draft", "M = B×(d+1)", "qkv", "ffn1", "lm_head"],
+        );
+        for (d, m, qkv, ffn1, head) in &draft_rows {
+            dt.row(vec![
+                d.to_string(),
+                m.to_string(),
+                qkv.to_string(),
+                ffn1.to_string(),
+                head.to_string(),
+            ]);
+        }
+        println!("{}", dt.to_text());
+    }
+    let min_rows = dp.cache_rows.iter().copied().min().unwrap_or(0);
     println!(
-        "cache:   {} resident rows × {} words/row = {} words parked (+{} activation peak, budget {})",
+        "cache:   {}..{} resident rows/layer = {} cache words + {} weight words parked (+{} activation peak, budget {})",
+        min_rows,
         dp.resident_rows,
-        dp.row_words,
         sci(dp.max_cache_resident_words() as f64),
+        sci(dp.weight_hot_words as f64),
         sci(dp.act_peak_words as f64),
         sci(dp.budget as f64),
     );
     println!(
         "decode:  {} words over {} tokens -> {} words/token vs per-GEMM TAS {} ({} saved)",
         sci(dp.decode_ema() as f64),
-        steps * batch,
+        dp.generated_tokens(),
         sci(dp.per_token_ema()),
         sci(dp.per_token_per_gemm_tas()),
         pct(dp.reduction_vs_per_gemm()),
@@ -688,6 +783,7 @@ fn cmd_decode(mut args: Args) -> Result<()> {
 fn cmd_sweep(mut args: Args) -> Result<()> {
     let name = args.opt_or("model", "wav2vec2-large");
     let tiling = tiling_from(&mut args)?;
+    let sram = args.opt_u64("sram", AcceleratorConfig::default().sram_words)?;
     let json = args.flag("json");
     let seqs: Vec<u64> = match args.opt("seqs") {
         Some(s) => s
@@ -700,7 +796,7 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
     let model = zoo::by_name(&name)?;
     let mut t = Table::new(
         &format!("{name}: EMA (words) per forward pass vs sequence length"),
-        &["seq", "is-os", "ws-os", "tas", "tas picks", "reduction vs naive"],
+        &["seq", "is-os", "ws-os", "tas", "layer plan", "R", "tas picks", "reduction vs naive"],
     );
     let mut rows = Vec::new();
     for seq in seqs {
@@ -717,6 +813,11 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
             total(Scheme::Tas),
             total(Scheme::Naive),
         );
+        // Layer-level plan at this length: its EMA and the resident-row
+        // count R (`tas decode --json` reports the decode-side R; this is
+        // the prefill-side twin the sweep used to omit).
+        let plan = LayerPlan::plan(model.block_stages(seq), seq, &tiling, sram);
+        let resident_rows = plan.resident_rows();
         // which way did the rule go for the hidden-sized projections?
         let pick = if seq < model.hidden { "IS-OS" } else { "WS-OS" };
         if json {
@@ -726,6 +827,8 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
                 ("ws_os_words", jnum(ws_os)),
                 ("tas_words", jnum(tas)),
                 ("naive_words", jnum(naive)),
+                ("plan_words", jnum(plan.total_ema())),
+                ("resident_rows", jnum(resident_rows)),
                 ("tas_picks", jstr(pick)),
             ]));
         } else {
@@ -734,6 +837,8 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
                 sci(is_os as f64),
                 sci(ws_os as f64),
                 sci(tas as f64),
+                sci(plan.total_ema() as f64),
+                resident_rows.to_string(),
                 pick.into(),
                 pct(1.0 - tas as f64 / naive as f64),
             ]);
@@ -742,6 +847,7 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
     if json {
         Report::new("sweep")
             .field("model", jstr(model.name))
+            .field("sram_words", jnum(sram))
             .field("rows", jarr(rows))
             .print();
     } else {

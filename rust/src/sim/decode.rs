@@ -99,14 +99,19 @@ pub fn trajectory_fused_cost(
     let mut acc = Acc::default();
     let mut prefill_ema_words = 0u64;
     for stage in &dp.prefill.stages {
-        prefill_ema_words += acc.add(&stage.plan, stage.spec.count, cfg);
+        // A layer stage's hot/cold row slices each run once per instance.
+        for slice in &stage.slices {
+            prefill_ema_words += acc.add(slice, stage.spec.count, cfg);
+        }
     }
     let mut per_step_ema = Vec::with_capacity(dp.step_plans.len());
     for step in &dp.step_plans {
         let mut step_words = 0u64;
         for stage in &step.stages {
+            // Decode slices carry their own instance counts (layer groups
+            // with different residency allocations split the stage).
             for slice in &stage.slices {
-                step_words += acc.add(slice, stage.spec.count, cfg);
+                step_words += acc.add(&slice.plan, slice.count, cfg);
             }
         }
         per_step_ema.push(step_words);
@@ -129,7 +134,7 @@ pub fn trajectory_fused_cost(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataflow::DecodeDims;
+    use crate::dataflow::{DecodeDims, ResidencyPolicy};
     use crate::gemm::Tiling;
     use crate::models::zoo;
 
@@ -138,21 +143,25 @@ mod tests {
         let dims = DecodeDims::of(&zoo::bert_base());
         let cfg = AcceleratorConfig::default();
         let em = EnergyModel::default();
-        for residency in [true, false] {
-            let dp = DecodePlan::plan_policy(
+        for policy in [
+            ResidencyPolicy::Paged,
+            ResidencyPolicy::AllOrNothing,
+            ResidencyPolicy::Off,
+        ] {
+            let dp = DecodePlan::plan_with_policy(
                 &dims,
                 16,
                 3,
                 2,
                 &Tiling::square(16),
                 256 * 1024,
-                residency,
+                policy,
             );
             let tc = trajectory_fused_cost(&dp, &cfg, &em);
             assert_eq!(tc.prefill_ema_words, dp.prefill.total_ema());
             assert_eq!(tc.per_step_ema.len(), dp.step_plans.len());
             for (replayed, planned) in tc.per_step_ema.iter().zip(&dp.step_plans) {
-                assert_eq!(*replayed, planned.total_ema(), "residency={residency}");
+                assert_eq!(*replayed, planned.total_ema(), "policy={policy:?}");
             }
             assert_eq!(tc.dram_words(), dp.total_ema());
             assert_eq!(tc.decode_ema_words(), dp.decode_ema());
@@ -169,8 +178,17 @@ mod tests {
         let cfg = AcceleratorConfig::default();
         let em = EnergyModel::default();
         let t = Tiling::square(16);
-        let on = DecodePlan::plan_policy(&dims, 32, 4, 1, &t, 256 * 1024, true);
-        let off = DecodePlan::plan_policy(&dims, 32, 4, 1, &t, 256 * 1024, false);
+        let on = DecodePlan::plan_with_policy(
+            &dims,
+            32,
+            4,
+            1,
+            &t,
+            256 * 1024,
+            ResidencyPolicy::Paged,
+        );
+        let off =
+            DecodePlan::plan_with_policy(&dims, 32, 4, 1, &t, 256 * 1024, ResidencyPolicy::Off);
         let c_on = trajectory_fused_cost(&on, &cfg, &em);
         let c_off = trajectory_fused_cost(&off, &cfg, &em);
         assert!(c_on.decode_ema_words() < c_off.decode_ema_words());

@@ -5,7 +5,7 @@
 
 use crate::arch::dram::DramDir;
 use crate::arch::dram_timing::{DramTiming, DramTimingConfig, DramTimingStats, MatrixLayout};
-use crate::dataflow::{Plan, Scheme, Step};
+use crate::dataflow::{Plan, Residency, Scheme, Step};
 use crate::gemm::{tile_extent, GemmShape, Tiling};
 
 /// Replay `scheme` at transaction granularity (one transaction per tile
@@ -36,9 +36,9 @@ pub fn simulate_dram_timing_plan(plan: &Plan, cfg: DramTimingConfig) -> DramTimi
             mi,
             nr,
             kj,
-            plan.input_resident,
-            plan.weight_resident,
-            plan.output_resident,
+            plan.input_residency,
+            plan.weight_residency,
+            plan.output_residency,
         );
     });
     dram.stats()
@@ -55,10 +55,13 @@ pub(crate) fn charge_timing_step(
     mi: u64,
     nr: u64,
     kj: u64,
-    input_resident: bool,
-    weight_resident: bool,
-    output_resident: bool,
+    input: Residency,
+    weight: Residency,
+    output: Residency,
 ) {
+    let input_resident = input.is_free();
+    let weight_resident = weight.is_free();
+    let output_resident = output.is_free();
     let (i0, r0, j0) = (s.i * tiling.tm, s.r * tiling.tn, s.j * tiling.tk);
 
     if s.scalar_traffic {

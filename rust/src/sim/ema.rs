@@ -8,7 +8,7 @@
 //! read/write problem for the spilling schemes.
 
 use crate::arch::dram::{Dram, DramStats, Stream};
-use crate::dataflow::{Plan, Scheme, Step};
+use crate::dataflow::{Plan, Residency, Scheme, Step};
 use crate::gemm::{tile_extent, GemmShape, Tiling};
 
 /// Simulated EMA result.
@@ -40,19 +40,23 @@ impl SimEma {
 /// the fused replay ([`crate::sim::replay`]) and anything else that walks
 /// a [`Plan`]: one accounting rule, every consumer.
 ///
-/// `input_resident` / `weight_resident` / `output_resident` suppress the
-/// corresponding DRAM streams (the tensor lives in SRAM — see
-/// [`crate::dataflow::layer`] and [`crate::dataflow::decode`]).
+/// The per-stream [`Residency`] values suppress the corresponding DRAM
+/// streams when the tensor is fully SRAM-resident (see
+/// [`crate::dataflow::residency`]); a partial residency never reaches
+/// this level — the planners slice it into fully hot / fully cold plans.
 pub(crate) fn charge_step(
     dram: &mut Dram,
     s: &Step,
     mi: u64,
     nr: u64,
     kj: u64,
-    input_resident: bool,
-    weight_resident: bool,
-    output_resident: bool,
+    input: Residency,
+    weight: Residency,
+    output: Residency,
 ) {
+    let input_resident = input.is_free();
+    let weight_resident = weight.is_free();
+    let output_resident = output.is_free();
     if s.scalar_traffic {
         // Naive: per-MAC operand fetches and psum writes (3·MNK).
         let macs = mi * nr * kj;
@@ -105,9 +109,9 @@ pub fn simulate_ema_plan(plan: &Plan, dram: &mut Dram) -> SimEma {
             mi,
             nr,
             kj,
-            plan.input_resident,
-            plan.weight_resident,
-            plan.output_resident,
+            plan.input_residency,
+            plan.weight_residency,
+            plan.output_residency,
         );
     });
     SimEma { stats: dram.stats(), steps }

@@ -111,11 +111,11 @@ impl CostSink for PipelineSink {
             write_words += macs;
             dir(DramDir::Write, &mut switches);
         } else {
-            if s.load_input && !ctx.plan.input_resident {
+            if s.load_input && !ctx.plan.input_residency.is_free() {
                 read_words += mi * nr;
                 dir(DramDir::Read, &mut switches);
             }
-            if s.load_weight && !ctx.plan.weight_resident {
+            if s.load_weight && !ctx.plan.weight_residency.is_free() {
                 read_words += nr * kj;
                 dir(DramDir::Read, &mut switches);
             }
@@ -123,7 +123,7 @@ impl CostSink for PipelineSink {
                 read_words += mi * kj;
                 dir(DramDir::Read, &mut switches);
             }
-            if s.psum_spill || (s.store_out && !ctx.plan.output_resident) {
+            if s.psum_spill || (s.store_out && !ctx.plan.output_residency.is_free()) {
                 write_words += mi * kj;
                 dir(DramDir::Write, &mut switches);
             }
@@ -252,9 +252,10 @@ mod tests {
         // stalls can only go down.
         let shape = GemmShape::new(384, 768, 768);
         let tiling = Tiling::square(16);
+        use crate::dataflow::Residency;
         let base = simulate_pipeline_plan(&Plan::tas_per_tile(&shape, &tiling), &cfg());
         let resident = simulate_pipeline_plan(
-            &Plan::tas_with_residency(&shape, &tiling, true, false),
+            &Plan::tas_with_residency(&shape, &tiling, Residency::Full, Residency::None),
             &cfg(),
         );
         assert!(resident.stall_cycles <= base.stall_cycles);

@@ -88,9 +88,9 @@ impl CostSink for EmaSink {
             ctx.mi,
             ctx.nr,
             ctx.kj,
-            ctx.plan.input_resident,
-            ctx.plan.weight_resident,
-            ctx.plan.output_resident,
+            ctx.plan.input_residency,
+            ctx.plan.weight_residency,
+            ctx.plan.output_residency,
         );
     }
 }
@@ -122,9 +122,9 @@ impl CostSink for TimingSink {
             ctx.mi,
             ctx.nr,
             ctx.kj,
-            ctx.plan.input_resident,
-            ctx.plan.weight_resident,
-            ctx.plan.output_resident,
+            ctx.plan.input_residency,
+            ctx.plan.weight_residency,
+            ctx.plan.output_residency,
         );
     }
 }

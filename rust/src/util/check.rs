@@ -24,9 +24,22 @@ fn base_seed() -> u64 {
         .unwrap_or(0xC0FFEE)
 }
 
+/// Case-count floor from the environment: `PROPTEST_CASES=256` (the
+/// conventional proptest knob) raises every property to at least that
+/// many cases — the weekly CI deep-fuzz job uses it to push allocator
+/// and planner edge cases far past the PR-speed defaults.  Tests that
+/// already request more cases keep their own count.
+fn case_floor() -> u64 {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0)
+}
+
 /// Run `f` over `cases` seeded RNGs; panic with the failing seed on error.
 pub fn property<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut f: F) {
     let base = base_seed();
+    let cases = cases.max(case_floor());
     for case in 0..cases {
         let seed = base ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
         let mut rng = Rng::new(seed);
@@ -63,9 +76,10 @@ mod tests {
 
     #[test]
     fn passing_property_runs_all_cases() {
-        let mut count = 0;
+        let mut count = 0u64;
         property("counts", 50, |_| count += 1);
-        assert_eq!(count, 50);
+        // PROPTEST_CASES only ever raises the count (deep-fuzz CI).
+        assert_eq!(count, 50u64.max(case_floor()));
     }
 
     #[test]

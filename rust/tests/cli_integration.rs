@@ -346,3 +346,84 @@ fn validate_runs_when_artifacts_exist() {
     assert!(stdout.contains("TAS decisions match"));
     assert!(stdout.contains("validated"));
 }
+
+#[test]
+fn sweep_json_reports_resident_rows_and_plan_words() {
+    // The R column `tas decode --json` reports now also rides the sweep
+    // envelope (prefill-side resident rows of the layer plan).
+    let (ok, stdout, stderr) = tas(&["sweep", "--model", "bert-base", "--seqs", "64,384", "--json"]);
+    assert!(ok, "{stderr}");
+    let doc = tas::util::json::Json::parse(stdout.trim()).expect("valid json");
+    let rows = doc.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 2);
+    for row in rows {
+        let plan = row.get("plan_words").unwrap().as_u64().unwrap();
+        let tas_w = row.get("tas_words").unwrap().as_u64().unwrap();
+        assert!(plan <= tas_w, "layer plan never loses to per-GEMM TAS");
+        assert!(row.get("resident_rows").unwrap().as_u64().is_some());
+    }
+    // at seq 64 everything chains: R must be positive
+    assert!(rows[0].get("resident_rows").unwrap().as_u64().unwrap() > 0);
+}
+
+#[test]
+fn plan_json_reports_fractional_residency() {
+    // seq 384 at the default 256 KiW SRAM: whole tensors stopped fitting,
+    // so the paged planner must report partial (hot-row) residency and
+    // still beat per-GEMM TAS — the ISSUE acceptance configuration.
+    let (ok, stdout, stderr) = tas(&["plan", "--model", "bert-base", "--seq", "384", "--json"]);
+    assert!(ok, "{stderr}");
+    let doc = tas::util::json::Json::parse(stdout.trim()).expect("valid json");
+    assert_eq!(doc.get("residency_policy").unwrap().as_str(), Some("paged"));
+    let total = doc.get("total_ema_words").unwrap().as_u64().unwrap();
+    let per_gemm = doc.get("per_gemm_tas_words").unwrap().as_u64().unwrap();
+    assert!(total < per_gemm, "fractional rows must win at seq 384");
+    assert!(doc.get("resident_rows").unwrap().as_u64().unwrap() > 0);
+    // some stage reports a partial row range, rendered as "hot/total"
+    let stages = doc.get("stages").unwrap().as_arr().unwrap();
+    let partial = stages.iter().any(|s| {
+        s.get("input_residency")
+            .and_then(|r| r.as_str())
+            .map(|r| r.contains('/'))
+            .unwrap_or(false)
+    });
+    assert!(partial, "expected a hot/total input residency at seq 384");
+}
+
+#[test]
+fn decode_draft_sweeps_the_flip_points() {
+    let (ok, stdout, stderr) = tas(&[
+        "decode", "--model", "bert-base", "--prefill", "16", "--steps", "2", "--batch", "8",
+        "--draft", "3", "--json",
+    ]);
+    assert!(ok, "{stderr}");
+    let doc = tas::util::json::Json::parse(stdout.trim()).expect("valid json");
+    assert_eq!(doc.get("draft").unwrap().as_u64(), Some(3));
+    assert_eq!(doc.get("generated_tokens").unwrap().as_u64(), Some(2 * 8 * 4));
+    let per_draft = doc.get("per_draft").unwrap().as_arr().unwrap();
+    assert_eq!(per_draft.len(), 4);
+    assert_eq!(per_draft[0].get("m").unwrap().as_u64(), Some(8));
+    assert_eq!(per_draft[3].get("m").unwrap().as_u64(), Some(32));
+    // the cache grows by draft+1 rows per step
+    let steps = doc.get("per_step").unwrap().as_arr().unwrap();
+    assert_eq!(steps[0].get("cache_len").unwrap().as_u64(), Some(16 + 4));
+    assert_eq!(steps[1].get("cache_len").unwrap().as_u64(), Some(16 + 8));
+    // and the plan still never loses to per-GEMM TAS
+    let plan = doc.get("decode_ema_words").unwrap().as_u64().unwrap();
+    let base = doc.get("per_gemm_tas_words").unwrap().as_u64().unwrap();
+    assert!(plan <= base);
+}
+
+#[test]
+fn decode_json_reports_the_residency_allocation() {
+    let (ok, stdout, stderr) = tas(&[
+        "decode", "--model", "bert-base", "--prefill", "32", "--steps", "4", "--batch", "1",
+        "--json",
+    ]);
+    assert!(ok, "{stderr}");
+    let doc = tas::util::json::Json::parse(stdout.trim()).expect("valid json");
+    let rows = doc.get("cache_rows_per_layer").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 12, "one allocation per bert-base layer");
+    assert!(doc.get("weight_hot_words").unwrap().as_u64().is_some());
+    assert!(doc.get("residency_policy").unwrap().as_str().is_some());
+}

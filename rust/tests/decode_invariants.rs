@@ -1,16 +1,18 @@
 //! Decode-plan acceptance properties ([`tas::dataflow::decode`]):
 //!
 //! (a) conservation — the trajectory EMA from the per-step fused replay
-//!     equals the sum of independently planned steps when cache residency
-//!     is disabled (and matches the planner's closed forms in general);
-//! (b) the cache residency claim never exceeds the SRAM budget;
+//!     equals the sum of independently planned steps when residency is
+//!     disabled (and matches the planner's closed forms in general);
+//! (b) the residency claim (cache rows + parked weights + activation
+//!     peak) never exceeds the SRAM budget;
 //! (c) a decode plan is never worse than per-GEMM TAS at the same shapes,
-//!     across the zoo at batch {1, 8, 32};
+//!     across the zoo at batch {1, 8, 32}, and the paged allocation is
+//!     never worse than the seed's uniform cache split;
 //! (d) head-sharded decode partitions the work exactly and scales the
 //!     aggregate cache residency with the device count.
 
 use tas::config::AcceleratorConfig;
-use tas::dataflow::{DecodeDims, DecodePlan, ShardedDecodePlan};
+use tas::dataflow::{DecodeDims, DecodePlan, ResidencyPolicy, ShardedDecodePlan};
 use tas::energy::EnergyModel;
 use tas::gemm::Tiling;
 use tas::models::zoo;
@@ -31,13 +33,28 @@ fn trajectory_equals_sum_of_independent_steps_without_residency() {
     let dims = DecodeDims::of(&zoo::bert_base());
     let t = tiling();
     let (prefill, steps, batch) = (16u64, 4u64, 2u64);
-    let dp = DecodePlan::plan_policy(&dims, prefill, steps, batch, &t, 256 * 1024, false);
+    let dp = DecodePlan::plan_with_policy(
+        &dims,
+        prefill,
+        steps,
+        batch,
+        &t,
+        256 * 1024,
+        ResidencyPolicy::Off,
+    );
 
     // independently planned steps: a fresh 1-step trajectory per length
     let mut independent = 0u64;
     for s in 0..steps {
-        let one =
-            DecodePlan::plan_policy(&dims, prefill + s, 1, batch, &t, 256 * 1024, false);
+        let one = DecodePlan::plan_with_policy(
+            &dims,
+            prefill + s,
+            1,
+            batch,
+            &t,
+            256 * 1024,
+            ResidencyPolicy::Off,
+        );
         assert_eq!(one.step_plans[0].cache_len, prefill + s + 1);
         independent += one.step_plans[0].total_ema();
     }
@@ -52,32 +69,53 @@ fn trajectory_equals_sum_of_independent_steps_without_residency() {
     }
 }
 
-/// The replay equality also holds with residency on (hot/cold splits and
-/// weight-resident slices included), on a second model for coverage.
+/// The replay equality also holds with residency on (hot/cold splits,
+/// weight-resident slices and per-layer paged rows included), on a
+/// second model for coverage.
 #[test]
 fn trajectory_replay_matches_closed_forms_with_residency() {
     let cfg = AcceleratorConfig::default();
     let em = EnergyModel::default();
     for model in [zoo::bert_base(), zoo::bert_large()] {
         let dims = DecodeDims::of(&model);
-        let dp = DecodePlan::plan_policy(&dims, 32, 3, 1, &tiling(), 256 * 1024, true);
-        assert!(dp.resident_rows > 0, "{}: want hot rows for this test", model.name);
+        let dp = DecodePlan::plan_with_policy(
+            &dims,
+            32,
+            3,
+            1,
+            &tiling(),
+            256 * 1024,
+            ResidencyPolicy::Paged,
+        );
+        assert!(
+            dp.resident_rows > 0 || dp.weight_hot_words > 0,
+            "{}: want residency for this test",
+            model.name
+        );
         let tc = trajectory_fused_cost(&dp, &cfg, &em);
         assert_eq!(tc.decode_ema_words(), dp.decode_ema(), "{}", model.name);
         assert_eq!(tc.prefill_ema_words, dp.prefill.total_ema());
     }
 }
 
-/// (b) Cache residency never exceeds the SRAM budget: the resident-row
-/// claim plus the activation peak stays under the planning budget, which
-/// itself sits under the configured SRAM.
+/// (b) The residency claim never exceeds the SRAM budget: resident cache
+/// rows plus parked weights plus the activation peak stay under the
+/// planning budget, which itself sits under the configured SRAM.
 #[test]
 fn cache_residency_respects_the_sram_budget() {
     let sram = 256 * 1024u64;
     for model in zoo::all_models() {
         let dims = DecodeDims::of(&model);
         for &batch in &BATCHES {
-            let dp = DecodePlan::plan_policy(&dims, 64, 8, batch, &tiling(), sram, true);
+            let dp = DecodePlan::plan_with_policy(
+                &dims,
+                64,
+                8,
+                batch,
+                &tiling(),
+                sram,
+                ResidencyPolicy::Paged,
+            );
             assert!(dp.budget <= sram);
             assert!(
                 dp.peak_sram_claim() <= dp.budget,
@@ -86,16 +124,19 @@ fn cache_residency_respects_the_sram_budget() {
                 dp.peak_sram_claim(),
                 dp.budget
             );
+            assert_eq!(dp.cache_rows.len() as u64, dims.layers);
             for sp in &dp.step_plans {
                 assert!(sp.hot_rows <= dp.resident_rows);
                 assert!(sp.hot_rows < sp.cache_len, "newest row is never pre-resident");
-                assert!(sp.hot_rows * dp.row_words <= dp.max_cache_resident_words());
                 // the per-step claim (this step's resident activations
-                // plus its parked cache rows) also fits — activation
-                // claims are not monotone in cache length, so this is
-                // stronger than the trajectory-peak check above
+                // plus its parked cache rows and weights) also fits —
+                // activation claims are not monotone in cache length, so
+                // this is stronger than the trajectory-peak check above
                 assert!(
-                    sp.act_resident_words + sp.hot_rows * dp.row_words <= dp.budget,
+                    sp.act_resident_words
+                        + dp.max_cache_resident_words()
+                        + sp.weight_hot_total()
+                        <= dp.budget,
                     "{} batch {batch} step claim over budget",
                     model.name
                 );
@@ -112,7 +153,15 @@ fn decode_plan_never_worse_than_per_gemm_tas_across_the_zoo() {
     for model in zoo::all_models() {
         let dims = DecodeDims::of(&model);
         for &batch in &BATCHES {
-            let dp = DecodePlan::plan_policy(&dims, 64, 8, batch, &tiling(), 256 * 1024, true);
+            let dp = DecodePlan::plan_with_policy(
+                &dims,
+                64,
+                8,
+                batch,
+                &tiling(),
+                256 * 1024,
+                ResidencyPolicy::Paged,
+            );
             for sp in &dp.step_plans {
                 for stage in &sp.stages {
                     assert!(
@@ -128,8 +177,34 @@ fn decode_plan_never_worse_than_per_gemm_tas_across_the_zoo() {
             }
             assert!(dp.decode_ema() <= dp.per_gemm_tas_decode_total(), "{}", model.name);
 
-            let off = DecodePlan::plan_policy(&dims, 64, 8, batch, &tiling(), 256 * 1024, false);
+            let off = DecodePlan::plan_with_policy(
+                &dims,
+                64,
+                8,
+                batch,
+                &tiling(),
+                256 * 1024,
+                ResidencyPolicy::Off,
+            );
             assert!(dp.decode_ema() <= off.decode_ema(), "residency only removes words");
+
+            // paged allocation never loses to the seed's uniform split
+            let uniform = DecodePlan::plan_with_policy(
+                &dims,
+                64,
+                8,
+                batch,
+                &tiling(),
+                256 * 1024,
+                ResidencyPolicy::AllOrNothing,
+            );
+            assert!(
+                dp.decode_ema() <= uniform.decode_ema(),
+                "{} batch {batch}: paged {} > uniform {}",
+                model.name,
+                dp.decode_ema(),
+                uniform.decode_ema()
+            );
         }
     }
 }
@@ -150,13 +225,39 @@ fn bert_class_models_strictly_beat_per_gemm_tas() {
     }
 }
 
+/// Speculative decode (`--draft`): the M = batch×(draft+1) step shapes
+/// keep every invariant — budget, per-GEMM dominance, and cache growth
+/// of draft+1 rows per sequence per step.
+#[test]
+fn draft_trajectories_keep_the_invariants() {
+    let model = zoo::bert_base();
+    for draft in [1u64, 3, 7] {
+        let dp = DecodePlan::plan_draft(&model, 32, 4, 2, draft, &tiling(), 256 * 1024);
+        assert_eq!(dp.draft, draft);
+        for (t, sp) in dp.step_plans.iter().enumerate() {
+            assert_eq!(sp.cache_len, 32 + (t as u64 + 1) * (draft + 1));
+        }
+        assert!(dp.decode_ema() <= dp.per_gemm_tas_decode_total(), "draft {draft}");
+        assert!(dp.peak_sram_claim() <= dp.budget);
+        assert_eq!(dp.generated_tokens(), 4 * 2 * (draft + 1));
+    }
+}
+
 /// (d) Head sharding: MACs partition exactly, heads cover exactly, and
 /// four devices park strictly more aggregate cache than one.
 #[test]
 fn head_sharded_decode_partitions_work_and_scales_cache() {
     let dims = DecodeDims::of(&zoo::bert_base());
     let t = tiling();
-    let single = DecodePlan::plan_policy(&dims, 64, 4, 8, &t, 256 * 1024, true);
+    let single = DecodePlan::plan_with_policy(
+        &dims,
+        64,
+        4,
+        8,
+        &t,
+        256 * 1024,
+        ResidencyPolicy::Paged,
+    );
     let macs = |p: &DecodePlan| -> u64 {
         p.step_plans
             .iter()

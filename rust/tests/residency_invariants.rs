@@ -1,0 +1,247 @@
+//! Fractional-residency acceptance properties ([`tas::dataflow::residency`]):
+//!
+//! (a) the paged (fractional) allocation never loses to the seed's
+//!     all-or-nothing planner — layer plans across the zoo at seq
+//!     {64, 256, 512}, decode plans across the zoo at batch {1, 8, 32};
+//! (b) allocated pages never exceed the SRAM budget (layer chain peak,
+//!     decode cache + weights + activation peak);
+//! (c) the ISSUE's acceptance configuration: bert-base at 256 KiW and a
+//!     seq in (338, 512] where layer planning now beats per-GEMM TAS and
+//!     the all-or-nothing walk (the pre-refactor planner) did not;
+//! (d) randomized chains: slices partition every stage, fractional ≤
+//!     all-or-nothing ≤ per-GEMM TAS, budgets respected.
+//!
+//! Deep fuzzing: the weekly CI job runs this suite with
+//! `PROPTEST_CASES=256` (see `util::check::property`).
+
+use tas::config::AcceleratorConfig;
+use tas::dataflow::{
+    DecodeDims, DecodePlan, LayerPlan, ResidencyPolicy, StageSpec,
+};
+use tas::gemm::{GemmShape, Tiling};
+use tas::models::zoo;
+use tas::util::check::property;
+use tas::util::prng::Rng;
+
+fn tiling() -> Tiling {
+    Tiling::square(16)
+}
+
+const SEQS: [u64; 3] = [64, 256, 512];
+const BATCHES: [u64; 3] = [1, 8, 32];
+
+/// (a) layer side: paged ≤ all-or-nothing ≤ per-GEMM TAS, every zoo
+/// model, every acceptance seq.
+#[test]
+fn layer_paged_never_loses_to_all_or_nothing_across_the_zoo() {
+    let sram = AcceleratorConfig::default().sram_words;
+    let t = tiling();
+    for model in zoo::all_models() {
+        for seq in SEQS {
+            let paged = LayerPlan::plan(model.block_stages(seq), seq, &t, sram);
+            let aon = LayerPlan::plan_with_policy(
+                model.block_stages(seq),
+                seq,
+                &t,
+                sram,
+                ResidencyPolicy::AllOrNothing,
+            );
+            assert!(
+                paged.total_ema() <= aon.total_ema(),
+                "{} seq {seq}: paged {} > aon {}",
+                model.name,
+                paged.total_ema(),
+                aon.total_ema()
+            );
+            assert!(aon.total_ema() <= aon.per_gemm_tas_total());
+            // (b) the chain's resident peak stays under the budget
+            assert!(paged.resident_peak_words <= paged.sram_budget.max(1));
+        }
+    }
+}
+
+/// (a) decode side: paged ≤ uniform split ≤ per-GEMM TAS, every zoo
+/// model, every acceptance batch.
+#[test]
+fn decode_paged_never_loses_to_uniform_across_the_zoo() {
+    let t = tiling();
+    for model in zoo::all_models() {
+        let dims = DecodeDims::of(&model);
+        for &batch in &BATCHES {
+            let paged = DecodePlan::plan_with_policy(
+                &dims,
+                64,
+                6,
+                batch,
+                &t,
+                256 * 1024,
+                ResidencyPolicy::Paged,
+            );
+            let uniform = DecodePlan::plan_with_policy(
+                &dims,
+                64,
+                6,
+                batch,
+                &t,
+                256 * 1024,
+                ResidencyPolicy::AllOrNothing,
+            );
+            assert!(
+                paged.decode_ema() <= uniform.decode_ema(),
+                "{} batch {batch}: paged {} > uniform {}",
+                model.name,
+                paged.decode_ema(),
+                uniform.decode_ema()
+            );
+            assert!(paged.decode_ema() <= paged.per_gemm_tas_decode_total());
+            // (b) cache + weights + activation peak fit the budget
+            assert!(paged.peak_sram_claim() <= paged.budget);
+            assert!(uniform.peak_sram_claim() <= uniform.budget);
+        }
+    }
+}
+
+/// (c) the ISSUE acceptance configuration: bert-base, 256 KiW, seq in
+/// (338, 512].  The 384×768 block input (294912 words) no longer fits
+/// the ~260k budget whole, so the all-or-nothing walk degraded to
+/// per-GEMM TAS exactly; parking hot tile rows must now win strictly.
+#[test]
+fn bert_base_mid_seq_now_beats_per_gemm_tas() {
+    let t = tiling();
+    let sram = 256 * 1024;
+    for seq in [352u64, 384, 448, 512] {
+        let aon = LayerPlan::plan_with_policy(
+            zoo::bert_base().block_stages(seq),
+            seq,
+            &t,
+            sram,
+            ResidencyPolicy::AllOrNothing,
+        );
+        assert_eq!(
+            aon.total_ema(),
+            aon.per_gemm_tas_total(),
+            "seq {seq}: the all-or-nothing walk used to degrade to per-GEMM here"
+        );
+        let paged = LayerPlan::plan(zoo::bert_base().block_stages(seq), seq, &t, sram);
+        assert!(
+            paged.total_ema() < paged.per_gemm_tas_total(),
+            "seq {seq}: fractional residency must beat per-GEMM TAS"
+        );
+        assert!(paged.resident_rows() > 0, "seq {seq}: expected hot rows");
+    }
+}
+
+fn random_chain(rng: &mut Rng) -> (Vec<StageSpec>, u64) {
+    let tokens = rng.gen_in(1, 40) * 16;
+    let h = rng.gen_in(1, 24) * 16;
+    let f = rng.gen_in(1, 24) * 16;
+    let stage = |name, shape, consumes, shares| StageSpec {
+        name,
+        shape,
+        count: 1,
+        consumes_previous: consumes,
+        shares_input_with_previous: shares,
+        cache: None,
+    };
+    let n = rng.gen_in(3, 6);
+    let mut stages = Vec::new();
+    stages.push(stage("s0", GemmShape::new(tokens, h, h), false, false));
+    let mut prev_k = h;
+    for i in 1..n {
+        let name: &'static str = ["s1", "s2", "s3", "s4", "s5"][(i - 1) as usize];
+        match rng.gen_range(3) {
+            0 => {
+                // share the previous stage's input (same m, n)
+                let prev_n = stages.last().unwrap().shape.n;
+                let k = rng.gen_in(1, 24) * 16;
+                stages.push(stage(name, GemmShape::new(tokens, prev_n, k), false, true));
+                prev_k = k;
+            }
+            1 => {
+                // consume the previous stage's output (n = prev k)
+                let k = if rng.gen_range(2) == 0 { h } else { f };
+                stages.push(stage(name, GemmShape::new(tokens, prev_k, k), true, false));
+                prev_k = k;
+            }
+            _ => {
+                let k = rng.gen_in(1, 24) * 16;
+                stages.push(stage(name, GemmShape::new(tokens, h, k), false, false));
+                prev_k = k;
+            }
+        }
+    }
+    (stages, tokens)
+}
+
+/// (d) randomized chains: the fractional planner keeps every structural
+/// invariant on shapes the zoo never exercises.
+#[test]
+fn random_chains_keep_the_invariants() {
+    property("residency random chains", 40, |rng: &mut Rng| {
+        let (stages, tokens) = random_chain(rng);
+        let sram = rng.gen_in(1, 64) * 8 * 1024;
+        let t = tiling();
+        let paged = LayerPlan::plan(stages.clone(), tokens, &t, sram);
+        let aon = LayerPlan::plan_with_policy(
+            stages,
+            tokens,
+            &t,
+            sram,
+            ResidencyPolicy::AllOrNothing,
+        );
+        assert!(
+            paged.total_ema() <= aon.total_ema(),
+            "paged {} > aon {} (tokens {tokens}, sram {sram})",
+            paged.total_ema(),
+            aon.total_ema()
+        );
+        assert!(aon.total_ema() <= aon.per_gemm_tas_total());
+        assert!(paged.resident_peak_words <= paged.sram_budget.max(1));
+        // slices partition every stage along M
+        for s in &paged.stages {
+            let rows: u64 = s.slices.iter().map(|p| p.shape.m).sum();
+            assert_eq!(rows, s.spec.shape.m, "{}", s.spec.name);
+        }
+    });
+}
+
+/// Randomized decode dims: paged ≤ uniform and the budget holds on
+/// odd (non-power-of-two) layer/batch combinations — exactly where the
+/// uniform split wastes its remainder.
+#[test]
+fn random_decode_dims_keep_the_invariants() {
+    property("residency random decode", 12, |rng: &mut Rng| {
+        let heads = rng.gen_in(2, 8);
+        let dims = DecodeDims {
+            hidden: heads * 16 * rng.gen_in(1, 4),
+            ffn: rng.gen_in(1, 16) * 64,
+            layers: rng.gen_in(1, 7),
+            heads,
+            vocab: 0,
+        };
+        let batch = rng.gen_in(1, 9);
+        let t = tiling();
+        let sram = rng.gen_in(32, 256) * 1024;
+        let paged = DecodePlan::plan_with_policy(
+            &dims,
+            rng.gen_in(8, 48),
+            4,
+            batch,
+            &t,
+            sram,
+            ResidencyPolicy::Paged,
+        );
+        let uniform = DecodePlan::plan_with_policy(
+            &dims,
+            paged.prefill_seq,
+            4,
+            batch,
+            &t,
+            sram,
+            ResidencyPolicy::AllOrNothing,
+        );
+        assert!(paged.decode_ema() <= uniform.decode_ema());
+        assert!(paged.decode_ema() <= paged.per_gemm_tas_decode_total());
+        assert!(paged.peak_sram_claim() <= paged.budget);
+    });
+}
