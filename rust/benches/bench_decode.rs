@@ -12,9 +12,13 @@
 //! carries the win: prefill 512 with a 4 MiW SRAM.  Closed forms only,
 //! so the sweep is instant; the replayed equivalence is property-tested.
 
-use tas::dataflow::{DecodeDims, DecodePlan, ResidencyPolicy};
+use tas::arch::Interconnect;
+use tas::config::AcceleratorConfig;
+use tas::dataflow::{DecodeDims, DecodePlan, ResidencyPolicy, ShardedDecodePlan};
+use tas::energy::EnergyModel;
 use tas::gemm::Tiling;
 use tas::models::zoo;
+use tas::sim::sharded_trajectory_cost;
 use tas::util::bench::{Bench, Throughput};
 use tas::util::table::{pct, sci, Table};
 
@@ -101,6 +105,57 @@ fn main() {
         32,
         4 * 1024 * 1024,
     );
+
+    // Sharded decode (4 devices, head-sharded cache): the per-layer
+    // all-reduces and logit gather were a barrier after every token; the
+    // trajectory replay drains each step's link rounds behind its own
+    // compute window.  Serialized vs overlapped cycles per trajectory,
+    // with the overlap bound asserted per cell.
+    {
+        let tiling = Tiling::square(16);
+        let cfg = AcceleratorConfig::default();
+        let em = EnergyModel::default();
+        let icx = Interconnect::default();
+        let mut t = Table::new(
+            "Sharded decode overlap (prefill 64, 8 steps, 4 devices, 256 KiW/device)",
+            &[
+                "model",
+                "batch",
+                "link cyc/step",
+                "serialized",
+                "overlapped",
+                "hidden",
+            ],
+        );
+        for model in [zoo::bert_base(), zoo::bert_large(), zoo::wav2vec2_large()] {
+            let dims = DecodeDims::of(&model);
+            for batch in [1u64, 8, 32] {
+                let sp = ShardedDecodePlan::plan(&dims, 64, 8, batch, &tiling, 256 * 1024, 4)
+                    .expect("4 devices divide the heads");
+                let c = sharded_trajectory_cost(&sp, &cfg, &em, &icx);
+                let link_total = sp.steps * c.link_cycles_per_step;
+                assert!(
+                    c.max_device_cycles.max(link_total) <= c.overlapped_cycles
+                        && c.overlapped_cycles <= c.serialized_cycles,
+                    "{} batch {batch}: overlap bound violated",
+                    model.name
+                );
+                t.row(vec![
+                    model.name.to_string(),
+                    batch.to_string(),
+                    sci(c.link_cycles_per_step as f64),
+                    sci(c.serialized_cycles as f64),
+                    sci(c.overlapped_cycles as f64),
+                    pct(if c.serialized_cycles == 0 {
+                        0.0
+                    } else {
+                        c.hidden_link_cycles() as f64 / c.serialized_cycles as f64
+                    }),
+                ]);
+            }
+        }
+        println!("{}", t.to_text());
+    }
 
     // Planning throughput: the coordinator plans a decode step per
     // dispatched batch, so one steady-state step must stay cheap.

@@ -4,34 +4,53 @@
 //! shard every linear-projection GEMM across 1/2/4/8 devices (auto axis:
 //! IS-dominated covers split by output rows, WS by columns) and report,
 //! per forward pass: total DRAM EMA (conserved by construction — asserted
-//! here), inter-chip words, the busiest device's EMA share, and the
-//! layer-pipeline activation handoff.  Closed forms only, so the sweep is
-//! instant; the replayed equivalence is property-tested in
-//! `tests/shard_conservation.rs`.
+//! here), inter-chip words, the busiest device's EMA share, the
+//! layer-pipeline activation handoff, and the serialized vs overlapped
+//! latency (link rounds drained behind compute — the overlap bound
+//! `max(compute, link) <= overlapped <= serialized` is asserted per
+//! cell).  Closed forms only, so the sweep is instant; the replayed
+//! equivalence is property-tested in `tests/shard_conservation.rs` and
+//! `tests/overlap_invariants.rs`.
 
+use tas::arch::Interconnect;
 use tas::dataflow::shard::{shard_gemm, ShardAxis, ShardSpec};
 use tas::dataflow::{place_stages, LayerPlan, Plan};
 use tas::gemm::Tiling;
 use tas::models::zoo;
+use tas::sim::sharded_closed_latency;
 use tas::util::bench::{Bench, Throughput};
 use tas::util::table::{pct, sci, Table};
 
 fn main() {
     let tiling = Tiling::square(16);
     let cfg = tas::config::AcceleratorConfig::default();
+    let icx = Interconnect::default();
     let models = [zoo::bert_base(), zoo::wav2vec2_large()];
     let seqs = [64u64, 512, 4096];
     let device_counts = [1u64, 2, 4, 8];
 
     let mut t = Table::new(
-        "Sharded TAS (auto axis, 16-tiles): EMA + inter-chip words per forward pass",
-        &["model", "seq", "devices", "dram EMA", "inter-chip", "max device", "handoff"],
+        "Sharded TAS (auto axis, 16-tiles): EMA, inter-chip words and serialized-vs-overlapped cycles per forward pass",
+        &[
+            "model",
+            "seq",
+            "devices",
+            "dram EMA",
+            "inter-chip",
+            "max device",
+            "handoff",
+            "serialized",
+            "overlapped",
+            "hidden",
+        ],
     );
     for model in &models {
         for seq in seqs {
             for devices in device_counts {
                 let mut dram = 0u64;
                 let mut link = 0u64;
+                let mut serialized = 0u64;
+                let mut overlapped = 0u64;
                 let mut per_dev = vec![0u64; devices as usize];
                 for g in model.linear_gemms(seq) {
                     let sp = shard_gemm(
@@ -48,8 +67,18 @@ fn main() {
                         "{} {}: EMA must be conserved",
                         model.name, g.name
                     );
+                    let lat = sharded_closed_latency(&sp, &cfg, &icx);
+                    assert!(
+                        lat.max_device_cycles.max(lat.link_cycles) <= lat.overlapped_cycles
+                            && lat.overlapped_cycles <= lat.serialized_cycles,
+                        "{} {}: overlap bound violated",
+                        model.name,
+                        g.name
+                    );
                     dram += g.count * total;
                     link += g.count * sp.link_traffic().total();
+                    serialized += g.count * lat.serialized_cycles;
+                    overlapped += g.count * lat.overlapped_cycles;
                     for (dev, e) in emas.iter().enumerate() {
                         per_dev[dev] += g.count * e.total();
                     }
@@ -66,6 +95,13 @@ fn main() {
                     sci(link as f64),
                     pct(max_dev as f64 / dram.max(1) as f64),
                     sci(lp.handoff_words() as f64),
+                    sci(serialized as f64),
+                    sci(overlapped as f64),
+                    pct(if serialized == 0 {
+                        0.0
+                    } else {
+                        (serialized - overlapped) as f64 / serialized as f64
+                    }),
                 ]);
             }
         }

@@ -77,6 +77,31 @@ impl Interconnect {
         }
     }
 
+    /// Per-round cycle costs of the ring all-gather: D-1 rounds, each a
+    /// p2p of one per-device share.  Sums to
+    /// [`Interconnect::all_gather_cycles`] exactly; the round list is what
+    /// the pipeline's link stream ([`crate::sim::pipeline::LinkStream`])
+    /// drains behind compute windows.
+    pub fn all_gather_rounds(&self, words_per_device: u64, devices: u64) -> Vec<u64> {
+        if devices <= 1 {
+            Vec::new()
+        } else {
+            vec![self.p2p_cycles(words_per_device); (devices - 1) as usize]
+        }
+    }
+
+    /// Per-round cycle costs of the collective tree reduce: ceil(log2 D)
+    /// rounds, each a p2p of the payload.  Sums to
+    /// [`Interconnect::tree_reduce_cycles`] exactly.
+    pub fn tree_reduce_rounds(&self, words: u64, devices: u64) -> Vec<u64> {
+        if devices <= 1 || words == 0 {
+            Vec::new()
+        } else {
+            let rounds = 64 - u64::leading_zeros(devices - 1) as u64;
+            vec![self.p2p_cycles(words); rounds as usize]
+        }
+    }
+
     /// Tree reduce of `total_words` crossing links down to one device:
     /// ceil(log2 D) latency rounds, all words streamed once — the
     /// *serialized* model (every transfer shares one link).
@@ -176,6 +201,22 @@ mod tests {
         let icx = Interconnect::default();
         let one = icx.p2p_cycles(64);
         assert_eq!(icx.all_gather_cycles(64, 4), 3 * one);
+    }
+
+    #[test]
+    fn round_lists_sum_to_the_closed_forms() {
+        let icx = Interconnect::default();
+        for d in [1u64, 2, 3, 4, 8, 16] {
+            for w in [1u64, 64, 1000, 123_457] {
+                let ag = icx.all_gather_rounds(w, d);
+                assert_eq!(ag.iter().sum::<u64>(), icx.all_gather_cycles(w, d));
+                assert_eq!(ag.len() as u64, d.saturating_sub(1));
+                let tr = icx.tree_reduce_rounds(w, d);
+                assert_eq!(tr.iter().sum::<u64>(), icx.tree_reduce_cycles(w, d));
+            }
+        }
+        assert!(icx.tree_reduce_rounds(0, 8).is_empty());
+        assert!(icx.all_gather_rounds(64, 1).is_empty());
     }
 
     #[test]

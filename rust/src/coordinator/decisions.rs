@@ -224,7 +224,9 @@ impl MixedBucketPlan {
 /// Plan a mixed prefill+decode bucket.  `prefill_tokens` is the padded
 /// token count of the prefill half (None = decode-only dispatch);
 /// `decode` is `(batch, cache_len)` of the decode half (None =
-/// prefill-only — the classic bucket plan).
+/// prefill-only — the classic bucket plan); `devices` is the accelerator
+/// count the prefill lane spans ([`devices_for_bucket`]; 1 keeps the
+/// single-chip plan, and the decode lane is single-device either way).
 ///
 /// When both halves are present the SRAM split between the lanes is
 /// chosen by marginal EMA over an eighth-fraction grid — the discrete
@@ -242,9 +244,12 @@ pub fn mixed_bucket_plan(
     heads: u64,
     tiling: &Tiling,
     sram_words: u64,
+    devices: u64,
 ) -> MixedBucketPlan {
     let plan_prefill = |tokens: u64, sram: u64| {
-        layer_plan_for_bucket(tokens, hidden, ffn, vocab, n_layers, tiling, sram)
+        sharded_layer_plan_for_bucket(
+            tokens, hidden, ffn, vocab, n_layers, tiling, sram, devices,
+        )
     };
     let plan_decode = |batch: u64, cache_len: u64, sram: u64| {
         decode_plan_for_bucket(
@@ -278,6 +283,165 @@ pub fn mixed_bucket_plan(
             decode: decode.map(|(batch, cache_len)| plan_decode(batch, cache_len, sram_words)),
             prefill_sram_words: if prefill_tokens.is_some() { sram_words } else { 0 },
         },
+    }
+}
+
+/// The device loop's plan memo: layer / decode-step / mixed plans keyed
+/// by the **joint** dispatch.
+///
+/// The seed device loop keyed its two caches on one lane's bucket alone
+/// (`(tokens, mixed)` / `(slots, cache bucket, mixed)`) and hard-coded
+/// the even SRAM split for mixed dispatches, so the lane split
+/// [`mixed_bucket_plan`] searches never reached the served metrics — a
+/// planner/executor divergence.  Here a mixed dispatch resolves through
+/// the searched joint plan, memoised on `(prefill bucket, decode slots,
+/// decode cache bucket)`; the granted split is a deterministic function
+/// of that key, so the cache can never hand one joint dispatch another
+/// dispatch's split.  Single-lane dispatches keep the whole SRAM.
+pub struct DispatchPlanner {
+    hidden: u64,
+    ffn: u64,
+    vocab: u64,
+    n_layers: u64,
+    heads: u64,
+    tiling: Tiling,
+    sram_words: u64,
+    max_devices: u64,
+    prefill_cache: BTreeMap<u64, LayerPlan>,
+    decode_cache: BTreeMap<(u64, u64), DecodeStepPlan>,
+    mixed_cache: BTreeMap<(u64, u64, u64), MixedBucketPlan>,
+}
+
+/// One dispatch's resolved plans, borrowed from the planner's memo.
+#[derive(Clone, Copy)]
+pub enum PlannedDispatch<'a> {
+    /// Joint mixed plan carrying the searched SRAM lane split.
+    Mixed(&'a MixedBucketPlan),
+    /// Prefill-only dispatch: the bucket's layer plan, whole SRAM.
+    Prefill(&'a LayerPlan),
+    /// Decode-only dispatch: the step plan, whole SRAM.
+    Decode(&'a DecodeStepPlan),
+    /// Nothing to run.
+    Empty,
+}
+
+impl<'a> PlannedDispatch<'a> {
+    pub fn prefill(&self) -> Option<&'a LayerPlan> {
+        match *self {
+            PlannedDispatch::Mixed(m) => m.prefill.as_ref(),
+            PlannedDispatch::Prefill(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    pub fn decode(&self) -> Option<&'a DecodeStepPlan> {
+        match *self {
+            PlannedDispatch::Mixed(m) => m.decode.as_ref(),
+            PlannedDispatch::Decode(d) => Some(d),
+            _ => None,
+        }
+    }
+
+    /// The mixed joint plan, when this dispatch carried both lanes.
+    pub fn mixed(&self) -> Option<&'a MixedBucketPlan> {
+        match *self {
+            PlannedDispatch::Mixed(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+impl DispatchPlanner {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        hidden: u64,
+        ffn: u64,
+        vocab: u64,
+        n_layers: u64,
+        heads: u64,
+        tiling: Tiling,
+        sram_words: u64,
+        max_devices: u64,
+    ) -> DispatchPlanner {
+        DispatchPlanner {
+            hidden,
+            ffn,
+            vocab,
+            n_layers,
+            heads,
+            tiling,
+            sram_words,
+            max_devices,
+            prefill_cache: BTreeMap::new(),
+            decode_cache: BTreeMap::new(),
+            mixed_cache: BTreeMap::new(),
+        }
+    }
+
+    /// Resolve (and memoise) the plans for one dispatch.  `prefill_tokens`
+    /// is the padded prefill bucket (batch × seq); `decode` is
+    /// `(slots, cache-length bucket)`.
+    pub fn plan_dispatch(
+        &mut self,
+        prefill_tokens: Option<u64>,
+        decode: Option<(u64, u64)>,
+    ) -> PlannedDispatch<'_> {
+        let (hidden, ffn, vocab, n_layers, heads) =
+            (self.hidden, self.ffn, self.vocab, self.n_layers, self.heads);
+        let (tiling, sram_words, max_devices) =
+            (self.tiling, self.sram_words, self.max_devices);
+        match (prefill_tokens, decode) {
+            (Some(tokens), Some((slots, cache_bucket))) => {
+                let devices = devices_for_bucket(tokens, max_devices);
+                let plan = self
+                    .mixed_cache
+                    .entry((tokens, slots, cache_bucket))
+                    .or_insert_with(|| {
+                        mixed_bucket_plan(
+                            Some(tokens),
+                            Some((slots, cache_bucket)),
+                            hidden,
+                            ffn,
+                            vocab,
+                            n_layers,
+                            heads,
+                            &tiling,
+                            sram_words,
+                            devices,
+                        )
+                    });
+                PlannedDispatch::Mixed(plan)
+            }
+            (Some(tokens), None) => {
+                let devices = devices_for_bucket(tokens, max_devices);
+                let plan = self.prefill_cache.entry(tokens).or_insert_with(|| {
+                    sharded_layer_plan_for_bucket(
+                        tokens, hidden, ffn, vocab, n_layers, &tiling, sram_words, devices,
+                    )
+                });
+                PlannedDispatch::Prefill(plan)
+            }
+            (None, Some((slots, cache_bucket))) => {
+                let plan = self
+                    .decode_cache
+                    .entry((slots, cache_bucket))
+                    .or_insert_with(|| {
+                        decode_plan_for_bucket(
+                            slots,
+                            cache_bucket,
+                            hidden,
+                            ffn,
+                            vocab,
+                            n_layers,
+                            heads,
+                            &tiling,
+                            sram_words,
+                        )
+                    });
+                PlannedDispatch::Decode(plan)
+            }
+            (None, None) => PlannedDispatch::Empty,
+        }
     }
 }
 
@@ -448,11 +612,12 @@ mod tests {
             2,
             &t,
             256 * 1024,
+            1,
         );
         let prefill_only =
-            mixed_bucket_plan(Some(256), None, 128, 512, 0, 4, 2, &t, 256 * 1024);
+            mixed_bucket_plan(Some(256), None, 128, 512, 0, 4, 2, &t, 256 * 1024, 1);
         let decode_only =
-            mixed_bucket_plan(None, Some((4, 96)), 128, 512, 0, 4, 2, &t, 256 * 1024);
+            mixed_bucket_plan(None, Some((4, 96)), 128, 512, 0, 4, 2, &t, 256 * 1024, 1);
         assert!(mixed.prefill.is_some() && mixed.decode.is_some());
         assert!(mixed.total_ema() > 0);
         // each half never loses to the per-GEMM rule, so neither does the mix
@@ -464,6 +629,155 @@ mod tests {
             mixed.total_ema()
                 >= prefill_only.total_ema() + decode_only.total_ema()
         );
+    }
+
+    /// ISSUE-5 headline regression: on bert-base dims the searched lane
+    /// split differs from even (the replica scan picks a 7/8 prefill
+    /// share at every probed config) and strictly beats the even-split
+    /// total the old device loop hard-coded.
+    #[test]
+    fn mixed_searched_split_beats_the_even_split() {
+        let t = Tiling::square(16);
+        let (hidden, ffn, vocab, layers, heads) = (768u64, 3072, 0, 12, 12);
+        let sram = 256 * 1024u64;
+        let mixed = mixed_bucket_plan(
+            Some(384),
+            Some((4, 64)),
+            hidden,
+            ffn,
+            vocab,
+            layers,
+            heads,
+            &t,
+            sram,
+            1,
+        );
+        assert_ne!(
+            mixed.prefill_sram_words,
+            sram / 2,
+            "searched split must differ from even on this config"
+        );
+        // the old device-loop behaviour: even split, lanes planned apart
+        let even_p = sharded_layer_plan_for_bucket(
+            384, hidden, ffn, vocab, layers, &t, sram / 2, 1,
+        );
+        let even_d = decode_plan_for_bucket(
+            4, 64, hidden, ffn, vocab, layers, heads, &t, sram - sram / 2,
+        );
+        let even_total = even_p.total_ema() + even_d.total_ema();
+        assert!(
+            mixed.total_ema() < even_total,
+            "searched {} must strictly beat even {}",
+            mixed.total_ema(),
+            even_total
+        );
+    }
+
+    /// The served metrics must see the searched plan: the device loop's
+    /// planner resolves a mixed dispatch to `mixed_bucket_plan`'s joint
+    /// plan, and recording those plans yields served EMA equal to the
+    /// searched total — not the even-split total.
+    #[test]
+    fn dispatch_planner_serves_the_searched_lane_split() {
+        use crate::coordinator::metrics::Metrics;
+        use crate::models::GemmWorkload;
+        use std::time::Duration;
+        let t = Tiling::square(16);
+        let (hidden, ffn, vocab, layers, heads) = (768u64, 3072, 0, 12, 12);
+        let sram = 256 * 1024u64;
+        let mut planner =
+            DispatchPlanner::new(hidden, ffn, vocab, layers, heads, t, sram, 1);
+        let metrics = Metrics::new();
+        {
+            let planned = planner.plan_dispatch(Some(384), Some((4, 64)));
+            let step_plan = planned.decode().expect("mixed dispatch has a decode plan");
+            let layer_plan = planned.prefill().expect("mixed dispatch has a layer plan");
+            metrics.record_decode_batch(4, step_plan);
+            let gemms = vec![GemmWorkload {
+                name: "qkv",
+                shape: crate::gemm::GemmShape::new(384, hidden, hidden),
+                count: 1,
+            }];
+            metrics.record_batch(
+                1,
+                384,
+                0,
+                Duration::from_millis(1),
+                &gemms,
+                &t,
+                layer_plan,
+                0,
+            );
+        }
+        let snap = metrics.snapshot();
+        let searched = mixed_bucket_plan(
+            Some(384),
+            Some((4, 64)),
+            hidden,
+            ffn,
+            vocab,
+            layers,
+            heads,
+            &t,
+            sram,
+            1,
+        );
+        assert_eq!(snap.ema_decode_words, searched.decode.as_ref().unwrap().total_ema());
+        assert_eq!(snap.ema_plan_words, searched.prefill.as_ref().unwrap().total_ema());
+        assert_eq!(
+            snap.ema_plan_words + snap.ema_decode_words,
+            searched.total_ema(),
+            "served EMA must equal the searched plan's chosen total"
+        );
+        let even_p = sharded_layer_plan_for_bucket(
+            384, hidden, ffn, vocab, layers, &t, sram / 2, 1,
+        );
+        let even_d = decode_plan_for_bucket(
+            4, 64, hidden, ffn, vocab, layers, heads, &t, sram - sram / 2,
+        );
+        assert!(
+            snap.ema_plan_words + snap.ema_decode_words
+                < even_p.total_ema() + even_d.total_ema(),
+            "served EMA must not be the even-split total"
+        );
+    }
+
+    #[test]
+    fn dispatch_planner_keys_caches_on_the_joint_dispatch() {
+        let t = Tiling::square(16);
+        let sram = 256 * 1024u64;
+        let mut planner = DispatchPlanner::new(768, 3072, 0, 12, 12, t, sram, 1);
+        // same prefill bucket, two different decode halves: distinct
+        // joint plans (the seed's (tokens, mixed) key conflated them)
+        let small = {
+            let p = planner.plan_dispatch(Some(256), Some((1, 64)));
+            let m = p.mixed().unwrap();
+            (m.prefill_sram_words, m.total_ema())
+        };
+        let big = {
+            let p = planner.plan_dispatch(Some(256), Some((32, 256)));
+            let m = p.mixed().unwrap();
+            (m.prefill_sram_words, m.total_ema())
+        };
+        assert_ne!(small.1, big.1, "different decode halves, different plans");
+        // memoised: the same joint dispatch returns the identical plan
+        let again = {
+            let p = planner.plan_dispatch(Some(256), Some((1, 64)));
+            let m = p.mixed().unwrap();
+            (m.prefill_sram_words, m.total_ema())
+        };
+        assert_eq!(small, again);
+        // single-lane dispatches keep the whole SRAM (no halving)
+        let solo = planner
+            .plan_dispatch(Some(256), None)
+            .prefill()
+            .unwrap()
+            .total_ema();
+        let full =
+            sharded_layer_plan_for_bucket(256, 768, 3072, 0, 12, &t, sram, 1).total_ema();
+        assert_eq!(solo, full);
+        assert!(planner.plan_dispatch(None, None).prefill().is_none());
+        assert!(planner.plan_dispatch(None, Some((4, 64))).decode().is_some());
     }
 
     #[test]

@@ -20,7 +20,10 @@ pub mod server;
 
 pub use batcher::{Batch, Batcher, Bucket, DecodeSlot, MixedBatch};
 pub use chunking::{serve_chunked, ChunkPolicy};
-pub use decisions::{mixed_bucket_plan, scheme_plan, MixedBucketPlan, SchemePlan};
+pub use decisions::{
+    mixed_bucket_plan, scheme_plan, DispatchPlanner, MixedBucketPlan, PlannedDispatch,
+    SchemePlan,
+};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{Request, RequestId, Response};
 pub use server::{Coordinator, CoordinatorOptions};

@@ -343,13 +343,22 @@ fn device_loop(
     let vocab = *engine.manifest().model.get("vocab").unwrap_or(&0) as usize;
     let n_layers = *engine.manifest().model.get("n_layers").unwrap_or(&1);
     let heads = *engine.manifest().model.get("heads").unwrap_or(&0);
-    // Layer plans are pure functions of the bucket token count (and
-    // whether the dispatch was mixed); memoise so the per-batch
-    // accounting never re-runs the planner.
-    let mut plan_cache: BTreeMap<(u64, bool), crate::dataflow::LayerPlan> = BTreeMap::new();
-    // Decode-step plans keyed by (slots, cache-length bucket, mixed).
-    let mut decode_cache: BTreeMap<(u64, u64, bool), crate::dataflow::DecodeStepPlan> =
-        BTreeMap::new();
+    // All plan memoisation lives in the dispatch planner, keyed on the
+    // *joint* dispatch: a mixed prefill+decode job resolves through
+    // `decisions::mixed_bucket_plan`, so the SRAM lane split it searches
+    // by marginal EMA is exactly the split the served metrics see (the
+    // seed hard-coded the even split here and keyed each cache on one
+    // lane's bucket alone — planner/executor divergence).
+    let mut planner = decisions::DispatchPlanner::new(
+        hidden,
+        ffn,
+        vocab as u64,
+        n_layers,
+        heads,
+        opts.tiling,
+        opts.sram_words,
+        opts.max_devices,
+    );
 
     while let Ok(msg) = rx.recv() {
         let job = match msg {
@@ -357,36 +366,24 @@ fn device_loop(
             ToDevice::Shutdown => return,
         };
 
-        // A mixed dispatch splits the SRAM between the two lanes so
-        // neither planner may claim words the other holds.  The device
-        // loop keeps the even split (its plan caches key on the bucket
-        // alone, and a searched split would couple the two lanes' keys);
-        // `decisions::mixed_bucket_plan` searches the split by marginal
-        // EMA where the joint plan is priced as one unit.
-        let mixed = job.batch.is_some() && !job.decode.is_empty();
-        let sram_share = if mixed { opts.sram_words / 2 } else { opts.sram_words };
+        let prefill_tokens = job
+            .batch
+            .as_ref()
+            .map(|(batch, _)| batch.bucket.batch * batch.bucket.seq);
+        let decode_key = if job.decode.is_empty() {
+            None
+        } else {
+            let slots = job.decode.len() as u64;
+            let max_len = job.decode.iter().map(|s| s.cache_len).max().unwrap_or(1);
+            let bucket_len = max_len.div_ceil(DECODE_LEN_BUCKET) * DECODE_LEN_BUCKET;
+            Some((slots, bucket_len))
+        };
+        let planned = planner.plan_dispatch(prefill_tokens, decode_key);
 
         // Decode half of the dispatch: no artifact executes yet (the AOT
         // path compiles prefill encoders only), so the step is priced by
         // the decode planner and accounted in the decode metrics lane.
-        if !job.decode.is_empty() {
-            let slots = job.decode.len() as u64;
-            let max_len = job.decode.iter().map(|s| s.cache_len).max().unwrap_or(1);
-            let bucket_len = max_len.div_ceil(DECODE_LEN_BUCKET) * DECODE_LEN_BUCKET;
-            let step_plan =
-                decode_cache.entry((slots, bucket_len, mixed)).or_insert_with(|| {
-                    decisions::decode_plan_for_bucket(
-                        slots,
-                        bucket_len,
-                        hidden,
-                        ffn,
-                        vocab as u64,
-                        n_layers,
-                        heads,
-                        &opts.tiling,
-                        sram_share,
-                    )
-                });
+        if let Some(step_plan) = planned.decode() {
             metrics.record_decode_batch(job.decode.len(), step_plan);
         }
 
@@ -404,24 +401,14 @@ fn device_loop(
 
         // Accelerator-side accounting for this batch: the paper's
         // per-GEMM read-EMA columns plus the layer-level plan (per-tile
-        // TAS with SRAM residency across the block's chained GEMMs).
+        // TAS with SRAM residency across the block's chained GEMMs, its
+        // SRAM share granted by the searched lane split when the
+        // dispatch was mixed).
         let tokens = (b * s) as u64;
         let gemms = bucket_gemms(tokens, hidden, ffn, vocab as u64, n_layers);
-        let layer_plan = plan_cache.entry((tokens, mixed)).or_insert_with(|| {
-            // Device-aware bucket decision: wide buckets span more chips
-            // (deterministic per token count, so the cache key holds).
-            let devices = decisions::devices_for_bucket(tokens, opts.max_devices);
-            decisions::sharded_layer_plan_for_bucket(
-                tokens,
-                hidden,
-                ffn,
-                vocab as u64,
-                n_layers,
-                &opts.tiling,
-                sram_share,
-                devices,
-            )
-        });
+        let layer_plan = planned
+            .prefill()
+            .expect("a dispatched prefill batch always has a layer plan");
         let flops = engine
             .manifest()
             .artifact(&batch.bucket.artifact)

@@ -1208,6 +1208,32 @@ impl ShardedDecodePlan {
         }
         cycles
     }
+
+    /// The same link time as a per-round list (two all-reduces per layer,
+    /// each a tree reduce plus a tree broadcast of the B×H partials, then
+    /// the logit all-gather) — what the trajectory replay drains behind
+    /// each step's compute window ([`crate::sim::decode`]).  Sums to
+    /// [`ShardedDecodePlan::link_cycles_per_step`] exactly.
+    pub fn link_rounds_per_step(&self, icx: &Interconnect) -> Vec<u64> {
+        let mut rounds = Vec::new();
+        if self.devices <= 1 {
+            return rounds;
+        }
+        let bh = self.batch * self.dims.hidden;
+        for _layer in 0..self.dims.layers {
+            // attention-output + FFN-down all-reduces: reduce, broadcast
+            for _op in 0..4 {
+                rounds.extend(icx.tree_reduce_rounds(bh, self.devices));
+            }
+        }
+        if self.dims.vocab > 0 {
+            rounds.extend(icx.all_gather_rounds(
+                ceil_div(self.batch * self.dims.vocab, self.devices),
+                self.devices,
+            ));
+        }
+        rounds
+    }
 }
 
 #[cfg(test)]
@@ -1480,6 +1506,25 @@ mod tests {
         assert!(sharded.reduce_words_per_step > 0);
         assert!(sharded.link_words_total() > 0);
         assert!(sharded.link_cycles_per_step(&Interconnect::default()) > 0);
+    }
+
+    #[test]
+    fn link_rounds_sum_to_the_per_step_cycles() {
+        let d = dims();
+        let t = Tiling::square(16);
+        let icx = Interconnect::default();
+        for devices in [1u64, 2, 4, 8] {
+            let sp = ShardedDecodePlan::plan(&d, 64, 3, 4, &t, 256 * 1024, devices).unwrap();
+            let rounds = sp.link_rounds_per_step(&icx);
+            assert_eq!(
+                rounds.iter().sum::<u64>(),
+                sp.link_cycles_per_step(&icx),
+                "devices={devices}"
+            );
+            if devices == 1 {
+                assert!(rounds.is_empty());
+            }
+        }
     }
 
     #[test]

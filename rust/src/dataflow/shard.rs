@@ -109,6 +109,20 @@ impl LinkTraffic {
     }
 }
 
+/// Per-device closed-form compute summary: the schedule-side inputs of the
+/// aggregate cycle model ([`crate::sim::cycles::cycles_from_parts`]) —
+/// obtained from strip ranges without replaying the step stream, so
+/// zoo-scale latency checks stay cheap ([`crate::sim::shard`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeviceCompute {
+    /// Schedule steps this device executes.
+    pub steps: u64,
+    /// MACs this device executes.
+    pub macs: u64,
+    /// Output tiles this device stores (each stored exactly once).
+    pub stores: u64,
+}
+
 fn p2p(lt: &mut LinkTraffic, from: usize, to: usize, words: u64) {
     lt.operand_words += words;
     lt.per_device_out[from] += words;
@@ -262,6 +276,61 @@ impl ShardedPlan {
                     if !self.plan.output_residency.is_free() {
                         out[last].output += ow;
                     }
+                }
+            }
+            ShardAxis::Auto => unreachable!("axis resolved at construction"),
+        }
+        out
+    }
+
+    /// Closed-form per-device (steps, MACs, output stores): sums to the
+    /// whole plan's step/MAC counts exactly — each step and each store is
+    /// owned by exactly one device.  For a strip body, per-strip MACs are
+    /// `output words × N` (every output element accumulates over the full
+    /// contraction), split by each device's N-range on the contraction
+    /// axis; the rare fixed-scheme body only occurs unsharded (1 device).
+    pub fn device_compute(&self) -> Vec<DeviceCompute> {
+        let d = self.devices as usize;
+        let mut out = vec![DeviceCompute::default(); d];
+        let shape = self.plan.shape;
+        let t = self.plan.tiling;
+        let (gm, gn, gk) = t.grid(&shape);
+        let strips = match &self.plan.body {
+            PlanBody::Fixed(_) => {
+                out[0] = DeviceCompute {
+                    steps: self.plan.step_count(),
+                    macs: shape.macs(),
+                    stores: gm * gk,
+                };
+                return out;
+            }
+            PlanBody::Strips(s) => s,
+        };
+        let n = shape.n;
+        match self.axis {
+            ShardAxis::Rows | ShardAxis::Cols => {
+                for strip in strips {
+                    let dev = self.strip_owner(strip);
+                    let (_, _, ow) = strip.words(&shape, &t);
+                    let e = &mut out[dev];
+                    e.steps += strip.tiles() * gn;
+                    e.macs += ow * n;
+                    e.stores += strip.tiles();
+                }
+            }
+            ShardAxis::Contraction => {
+                let last = owner_of(&self.bounds, gn - 1);
+                for strip in strips {
+                    let (_, _, ow) = strip.words(&shape, &t);
+                    for (dev, e) in out.iter_mut().enumerate() {
+                        let range_tiles = self.bounds[dev + 1] - self.bounds[dev];
+                        if range_tiles == 0 {
+                            continue;
+                        }
+                        e.steps += strip.tiles() * range_tiles;
+                        e.macs += ow * self.contraction_elems(dev);
+                    }
+                    out[last].stores += strip.tiles();
                 }
             }
             ShardAxis::Auto => unreachable!("axis resolved at construction"),
@@ -603,6 +672,38 @@ mod tests {
             let lt = sp.link_traffic();
             assert_eq!(lt.operand_words, 0, "operands are range-local");
             assert_eq!(lt.reduce_words, (d - 1) * shape.output_words());
+        }
+    }
+
+    #[test]
+    fn device_compute_partitions_steps_macs_and_stores() {
+        let tiling = Tiling::square(16);
+        for shape in [
+            GemmShape::new(130, 70, 90),
+            GemmShape::new(64, 768, 768),
+            GemmShape::new(4096, 768, 768),
+        ] {
+            let (gm, _, gk) = tiling.grid(&shape);
+            for axis in [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Contraction, ShardAxis::Auto]
+            {
+                for d in [1u64, 2, 3, 4, 8] {
+                    let sp = shard_gemm(&shape, &tiling, ShardSpec::new(d, axis), 0.0);
+                    let dc = sp.device_compute();
+                    assert_eq!(dc.len() as u64, sp.devices);
+                    let steps: u64 = dc.iter().map(|c| c.steps).sum();
+                    let macs: u64 = dc.iter().map(|c| c.macs).sum();
+                    let stores: u64 = dc.iter().map(|c| c.stores).sum();
+                    assert_eq!(steps, sp.plan.step_count(), "{shape:?} {axis:?} d={d}");
+                    assert_eq!(macs, shape.macs(), "{shape:?} {axis:?} d={d}");
+                    assert_eq!(stores, gm * gk, "{shape:?} {axis:?} d={d}");
+                    // replayed per-device step counts agree
+                    let mut replayed = vec![0u64; sp.devices as usize];
+                    sp.for_each_step_device(|dev, _| replayed[dev] += 1);
+                    for (c, r) in dc.iter().zip(&replayed) {
+                        assert_eq!(c.steps, *r);
+                    }
+                }
+            }
         }
     }
 

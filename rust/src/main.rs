@@ -26,7 +26,8 @@ use tas::models::{zoo, LengthDist};
 use tas::report;
 use tas::report::json::{jarr, jbool, jf64, jnum, jobj, jstr, Report};
 use tas::sim::{
-    estimate_cycles, measure_occupancy, sharded_fused_cost, trajectory_fused_cost,
+    estimate_cycles, measure_occupancy, sharded_fused_cost, sharded_trajectory_cost,
+    trajectory_fused_cost,
 };
 use tas::util::cli::Args;
 use tas::util::json::Json;
@@ -333,6 +334,7 @@ fn cmd_shard(mut args: Args) -> Result<()> {
     let mut total_dram = 0u64;
     let mut total_link_energy_pj = 0f64;
     let mut critical_cycles = 0u64;
+    let mut serialized_cycles = 0u64;
     let mut unsharded_dram = 0u64;
 
     let mut gemm_rows = Vec::new();
@@ -346,7 +348,8 @@ fn cmd_shard(mut args: Args) -> Result<()> {
         total_link += g.count * cost.link.operand_words;
         total_reduce += g.count * cost.link.reduce_words;
         total_link_energy_pj += g.count as f64 * cost.link_energy_pj;
-        critical_cycles += g.count * cost.total_cycles();
+        critical_cycles += g.count * cost.overlapped_cycles();
+        serialized_cycles += g.count * cost.serialized_cycles();
         let mut dev_json = Vec::new();
         for dc in &cost.per_device {
             dev_ema[dc.device] += g.count * dc.ema.total_words();
@@ -359,6 +362,8 @@ fn cmd_shard(mut args: Args) -> Result<()> {
                     ("ema_words", jnum(dc.ema.total_words())),
                     ("macs", jnum(dc.macs)),
                     ("cycles", jnum(dc.cycles.total_cycles)),
+                    ("stall_cycles", jnum(dc.pipeline.stall_cycles)),
+                    ("link_hidden_cycles", jnum(dc.link_hidden_cycles)),
                     ("energy_pj", jf64(dc.energy.total_pj())),
                     ("link_in_words", jnum(dc.link_in_words)),
                     ("link_out_words", jnum(dc.link_out_words)),
@@ -377,7 +382,10 @@ fn cmd_shard(mut args: Args) -> Result<()> {
                 ("dram_words", jnum(cost.dram_words())),
                 ("link_words", jnum(cost.link.operand_words)),
                 ("reduce_words", jnum(cost.link.reduce_words)),
-                ("link_cycles", jnum(cost.link_cycles)),
+                ("link_cycles", jnum(cost.link_cycles())),
+                ("serialized_cycles", jnum(cost.serialized_cycles())),
+                ("overlapped_cycles", jnum(cost.overlapped_cycles())),
+                ("link_hidden_cycles", jnum(cost.latency.hidden_link_cycles())),
                 ("per_device", jarr(dev_json)),
             ]));
         } else {
@@ -389,7 +397,8 @@ fn cmd_shard(mut args: Args) -> Result<()> {
                 sp.plan.describe(),
                 sci(cost.dram_words() as f64),
                 sci(cost.link_words() as f64),
-                sci(cost.max_device_cycles() as f64),
+                sci(cost.serialized_cycles() as f64),
+                sci(cost.overlapped_cycles() as f64),
             ]);
         }
     }
@@ -418,7 +427,13 @@ fn cmd_shard(mut args: Args) -> Result<()> {
                     ("inter_chip_words", jnum(total_link + total_reduce)),
                     ("link_energy_pj", jf64(total_link_energy_pj)),
                     ("unsharded_dram_words", jnum(unsharded_dram)),
-                    ("critical_path_cycles", jnum(critical_cycles)),
+                    ("serialized_cycles", jnum(serialized_cycles)),
+                    ("overlapped_cycles", jnum(critical_cycles)),
+                    ("link_hidden_cycles", jnum(serialized_cycles - critical_cycles)),
+                    // kept at its pre-overlap meaning (== serialized) so
+                    // existing consumers see no silent redefinition; the
+                    // overlapped model is the new key above
+                    ("critical_path_cycles", jnum(serialized_cycles)),
                     (
                         "per_device_ema_words",
                         jarr(dev_ema.iter().map(|w| jnum(*w)).collect()),
@@ -453,7 +468,17 @@ fn cmd_shard(mut args: Args) -> Result<()> {
             "{} @ seq {} sharded across {} devices (axis {}, tile {}, link {} w/cyc)",
             model.name, seq, devices, axis.name(), tiling.tm, icx.cfg.link_bandwidth
         ),
-        &["gemm", "M,N,K", "×", "axis", "decision", "dram EMA", "inter-chip", "max-dev cycles"],
+        &[
+            "gemm",
+            "M,N,K",
+            "×",
+            "axis",
+            "decision",
+            "dram EMA",
+            "inter-chip",
+            "serialized",
+            "overlapped",
+        ],
     );
     for row in gemm_rows {
         t.row(row);
@@ -491,6 +516,12 @@ fn cmd_shard(mut args: Args) -> Result<()> {
         } else {
             (total_dram + total_link + total_reduce) as f64 / unsharded_dram as f64 - 1.0
         }),
+    );
+    println!(
+        "latency:       serialized {} cycles   overlapped {} ({} link cycles hidden behind compute)",
+        sci(serialized_cycles as f64),
+        sci(critical_cycles as f64),
+        sci((serialized_cycles - critical_cycles) as f64),
     );
     let names: Vec<String> = lp
         .stages
@@ -539,6 +570,10 @@ fn cmd_decode(mut args: Args) -> Result<()> {
         config.interconnect.validate()?;
         let icx = Interconnect::new(config.interconnect);
         let link_cycles = sp.link_cycles_per_step(&icx);
+        // Replayed trajectory latency: per-step all-reduce rounds drained
+        // behind each device's compute window instead of a per-token
+        // barrier (serialized vs overlapped).
+        let tc = sharded_trajectory_cost(&sp, &cfg, &EnergyModel::default(), &icx);
         if json {
             let per_device: Vec<Json> = sp
                 .per_device
@@ -578,6 +613,9 @@ fn cmd_decode(mut args: Args) -> Result<()> {
                         ("cycles_per_step", jnum(link_cycles)),
                     ]),
                 )
+                .field("serialized_cycles", jnum(tc.serialized_cycles))
+                .field("overlapped_cycles", jnum(tc.overlapped_cycles))
+                .field("link_hidden_cycles", jnum(tc.hidden_link_cycles()))
                 .field("per_device", jarr(per_device))
                 .print();
             return Ok(());
@@ -612,6 +650,12 @@ fn cmd_decode(mut args: Args) -> Result<()> {
             sci(sp.gather_words_per_step as f64),
             link_cycles,
             sci(sp.link_words_total() as f64),
+        );
+        println!(
+            "latency: serialized {} cycles (all-reduce barrier per token)   overlapped {} ({} link cycles hidden behind compute)",
+            sci(tc.serialized_cycles as f64),
+            sci(tc.overlapped_cycles as f64),
+            sci(tc.hidden_link_cycles() as f64),
         );
         return Ok(());
     }
@@ -697,6 +741,9 @@ fn cmd_decode(mut args: Args) -> Result<()> {
             .field("per_token_per_gemm_tas_words", jf64(dp.per_token_per_gemm_tas()))
             .field("reduction_vs_per_gemm", jf64(dp.reduction_vs_per_gemm()))
             .field("trajectory_cycles", jnum(tc.cycles.total_cycles))
+            // single-device: no link time, so both latency models agree
+            .field("serialized_cycles", jnum(tc.serialized_cycles()))
+            .field("overlapped_cycles", jnum(tc.overlapped_cycles()))
             .field("trajectory_energy_pj", jf64(tc.energy.total_pj()))
             .field("per_draft", jarr(per_draft))
             .field("per_step", jarr(per_step))

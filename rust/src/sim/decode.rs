@@ -6,20 +6,37 @@
 //! instances repeat `count` times with identical step streams, so the
 //! replay walks each distinct [`Plan`] once through an [`EmaSink`] and a
 //! [`PipelineSink`] and scales the observed statistics by the instance
-//! count — words, MACs, steps and switches are all exactly linear in the
-//! count, and the cycle/energy closed forms derive from those totals the
-//! same way [`super::replay::fused_cost`] derives them for one GEMM.
-//! Every EMA word is therefore *replayed*, never assumed: the equality
-//! between this pass and the planner's closed forms is pinned by
+//! count — words, MACs, steps, switches and pipeline fills are all
+//! exactly linear in the count (one fill per plan segment instance — the
+//! convention documented in [`crate::sim::pipeline`] and asserted here),
+//! and the cycle/energy closed forms derive from those totals the same
+//! way [`super::replay::fused_cost`] derives them for one GEMM.  Every
+//! EMA word is therefore *replayed*, never assumed: the equality between
+//! this pass and the planner's closed forms is pinned by
 //! `rust/tests/decode_invariants.rs`.
+//!
+//! **Link overlap.**  A head-sharded decode
+//! ([`crate::dataflow::ShardedDecodePlan`]) all-reduces every layer's
+//! attention/FFN partials and gathers the logits each step.  The old
+//! model charged that as a barrier after every token
+//! (`steps × link_cycles_per_step` on top of compute); here the step's
+//! round list ([`ShardedDecodePlan::link_rounds_per_step`]) drains
+//! behind the same step's compute window ([`LinkSchedule`]), so
+//! [`ShardedTrajectoryCost`] reports both the serialized and the
+//! overlapped trajectory latency, with
+//! `max(compute, link) ≤ overlapped ≤ serialized` by construction
+//! (property-tested in `rust/tests/overlap_invariants.rs`).  Per-step
+//! hiding windows use *floored* MAC cycles, so the sum of windows never
+//! exceeds the trajectory's compute total and the bound stays exact.
 
 use crate::arch::dram::DramStats;
+use crate::arch::Interconnect;
 use crate::config::AcceleratorConfig;
-use crate::dataflow::{DecodePlan, Plan};
+use crate::dataflow::{DecodePlan, Plan, ShardedDecodePlan};
 use crate::energy::{EnergyCost, EnergyModel};
 use crate::sim::cycles::{cycles_from_parts, CycleEstimate};
 use crate::sim::ema::SimEma;
-use crate::sim::pipeline::{PipelineSink, PipelineStats};
+use crate::sim::pipeline::{LinkSchedule, PipelineSink, PipelineStats};
 use crate::sim::replay::{replay, CostSink, EmaSink};
 
 /// Every cost model's verdict on one decode trajectory.
@@ -36,6 +53,11 @@ pub struct TrajectoryCost {
     pub prefill_ema_words: u64,
     /// Replayed DRAM words per decode step (length = `steps`).
     pub per_step_ema: Vec<u64>,
+    /// Serialized link time over the trajectory (every per-step round
+    /// list end to end; 0 for an unsharded trajectory).
+    pub link_cycles: u64,
+    /// Link cycles hidden behind the owning step's compute window.
+    pub link_hidden_cycles: u64,
 }
 
 impl TrajectoryCost {
@@ -48,6 +70,17 @@ impl TrajectoryCost {
     pub fn dram_words(&self) -> u64 {
         let (i, w, o) = self.ema.table2();
         i + w + o
+    }
+
+    /// Pre-overlap latency: trajectory busy time plus a link barrier
+    /// after every step.
+    pub fn serialized_cycles(&self) -> u64 {
+        self.cycles.total_cycles + self.link_cycles
+    }
+
+    /// Latency with each step's link rounds drained behind its compute.
+    pub fn overlapped_cycles(&self) -> u64 {
+        self.cycles.total_cycles + (self.link_cycles - self.link_hidden_cycles)
     }
 }
 
@@ -79,10 +112,14 @@ impl Acc {
         self.steps += count * sim.steps;
         self.macs += count * plan.shape.macs();
         let p = pipe.finish();
+        // One pipeline fill per plan segment instance (count fills): the
+        // documented convention — total stays fills·fill + compute + stall.
+        debug_assert_eq!(p.fills, 1);
         self.pipeline.steps += count * p.steps;
         self.pipeline.compute_cycles += count * p.compute_cycles;
         self.pipeline.stall_cycles += count * p.stall_cycles;
         self.pipeline.stalled_steps += count * p.stalled_steps;
+        self.pipeline.fills += count * p.fills;
         self.pipeline.total_cycles += count * p.total_cycles;
         let (i, w, o) = sim.table2();
         count * (i + w + o)
@@ -96,6 +133,21 @@ pub fn trajectory_fused_cost(
     cfg: &AcceleratorConfig,
     energy: &EnergyModel,
 ) -> TrajectoryCost {
+    trajectory_cost_with_links(dp, cfg, energy, &[])
+}
+
+/// Same pass, with each decode step carrying `step_rounds` of inter-chip
+/// link time (one round list, repeated per step) drained behind the
+/// step's own compute window.  An empty round list reproduces
+/// [`trajectory_fused_cost`] exactly.
+pub fn trajectory_cost_with_links(
+    dp: &DecodePlan,
+    cfg: &AcceleratorConfig,
+    energy: &EnergyModel,
+    step_rounds: &[u64],
+) -> TrajectoryCost {
+    let pe = cfg.pe_array();
+    let mpc = pe.macs_per_cycle();
     let mut acc = Acc::default();
     let mut prefill_ema_words = 0u64;
     for stage in &dp.prefill.stages {
@@ -105,14 +157,29 @@ pub fn trajectory_fused_cost(
         }
     }
     let mut per_step_ema = Vec::with_capacity(dp.step_plans.len());
+    let mut link_cycles = 0u64;
+    let mut link_hidden_cycles = 0u64;
     for step in &dp.step_plans {
         let mut step_words = 0u64;
+        // The step's compute window the link rounds hide behind: floored
+        // MAC cycles plus per-pass fill, summed over the step's slices —
+        // never more than the trajectory compute total.
+        let mut window = 0u64;
         for stage in &step.stages {
             // Decode slices carry their own instance counts (layer groups
             // with different residency allocations split the stage).
             for slice in &stage.slices {
                 step_words += acc.add(&slice.plan, slice.count, cfg);
+                window += slice.count
+                    * (slice.plan.shape.macs() / mpc
+                        + pe.fill_latency * slice.plan.step_count());
             }
+        }
+        if !step_rounds.is_empty() {
+            let mut sched = LinkSchedule::new(step_rounds.to_vec());
+            sched.drain(window);
+            link_cycles += sched.total_cycles();
+            link_hidden_cycles += sched.hidden_cycles();
         }
         per_step_ema.push(step_words);
     }
@@ -128,6 +195,69 @@ pub fn trajectory_fused_cost(
         pipeline: acc.pipeline,
         prefill_ema_words,
         per_step_ema,
+        link_cycles,
+        link_hidden_cycles,
+    }
+}
+
+/// A head-sharded decode trajectory, fully costed: one replayed
+/// [`TrajectoryCost`] per device, each draining the per-step collective
+/// rounds behind its own compute, plus the serialized-vs-overlapped
+/// whole-trajectory latency.
+#[derive(Clone, Debug)]
+pub struct ShardedTrajectoryCost {
+    pub per_device: Vec<TrajectoryCost>,
+    /// Serialized link time of one decode step (sum of the round list).
+    pub link_cycles_per_step: u64,
+    /// Busiest device's trajectory busy time (no link time).
+    pub max_device_cycles: u64,
+    /// Pre-overlap model: busiest device + a barrier after every step.
+    pub serialized_cycles: u64,
+    /// Each device pays its busy time plus the link time its own step
+    /// windows could not hide; the trajectory waits for the worst.
+    pub overlapped_cycles: u64,
+}
+
+impl ShardedTrajectoryCost {
+    /// Link cycles hidden behind compute — the overlap win.
+    pub fn hidden_link_cycles(&self) -> u64 {
+        self.serialized_cycles - self.overlapped_cycles
+    }
+}
+
+/// Replay every device's trajectory with the per-step all-reduce rounds
+/// overlapped against that device's compute windows.
+pub fn sharded_trajectory_cost(
+    sp: &ShardedDecodePlan,
+    cfg: &AcceleratorConfig,
+    energy: &EnergyModel,
+    icx: &Interconnect,
+) -> ShardedTrajectoryCost {
+    let rounds = sp.link_rounds_per_step(icx);
+    let link_cycles_per_step: u64 = rounds.iter().sum();
+    let per_device: Vec<TrajectoryCost> = sp
+        .per_device
+        .iter()
+        .map(|dp| trajectory_cost_with_links(dp, cfg, energy, &rounds))
+        .collect();
+    let max_device_cycles = per_device
+        .iter()
+        .map(|t| t.cycles.total_cycles)
+        .max()
+        .unwrap_or(0);
+    let link_total = sp.steps * link_cycles_per_step;
+    let serialized_cycles = max_device_cycles + link_total;
+    let overlapped_cycles = per_device
+        .iter()
+        .map(|t| t.overlapped_cycles())
+        .max()
+        .unwrap_or(link_total);
+    ShardedTrajectoryCost {
+        per_device,
+        link_cycles_per_step,
+        max_device_cycles,
+        serialized_cycles,
+        overlapped_cycles,
     }
 }
 
@@ -169,6 +299,17 @@ mod tests {
             assert!(tc.cycles.total_cycles > 0);
             assert!(tc.energy.total_pj() > 0.0);
             assert!(tc.pipeline.total_cycles > 0);
+            // one fill per replayed plan segment instance
+            assert_eq!(
+                tc.pipeline.total_cycles,
+                tc.pipeline.fills * cfg.pe_array().fill_latency
+                    + tc.pipeline.compute_cycles
+                    + tc.pipeline.stall_cycles
+            );
+            // no links: serialized == overlapped == busy
+            assert_eq!(tc.link_cycles, 0);
+            assert_eq!(tc.serialized_cycles(), tc.cycles.total_cycles);
+            assert_eq!(tc.overlapped_cycles(), tc.cycles.total_cycles);
         }
     }
 
@@ -195,5 +336,45 @@ mod tests {
         assert!(c_on.energy.total_pj() < c_off.energy.total_pj());
         // compute is identical — only data movement changed
         assert_eq!(c_on.macs, c_off.macs);
+    }
+
+    #[test]
+    fn sharded_trajectory_overlap_obeys_the_bounds() {
+        let dims = DecodeDims::of(&zoo::bert_base());
+        let cfg = AcceleratorConfig::default();
+        let em = EnergyModel::default();
+        let icx = Interconnect::default();
+        let t = Tiling::square(16);
+        let sp = ShardedDecodePlan::plan(&dims, 64, 4, 8, &t, 256 * 1024, 4).unwrap();
+        let c = sharded_trajectory_cost(&sp, &cfg, &em, &icx);
+        assert_eq!(c.per_device.len(), 4);
+        assert_eq!(
+            c.link_cycles_per_step,
+            sp.link_cycles_per_step(&icx),
+            "round list sums to the closed form"
+        );
+        let link_total = sp.steps * c.link_cycles_per_step;
+        assert!(c.link_cycles_per_step > 0);
+        assert!(c.overlapped_cycles >= c.max_device_cycles.max(link_total));
+        assert!(c.overlapped_cycles <= c.serialized_cycles);
+        assert_eq!(c.serialized_cycles, c.max_device_cycles + link_total);
+        for tc in &c.per_device {
+            assert_eq!(tc.link_cycles, link_total);
+            assert!(tc.link_hidden_cycles <= tc.link_cycles);
+        }
+    }
+
+    #[test]
+    fn one_device_sharded_trajectory_has_no_link_time() {
+        let dims = DecodeDims::of(&zoo::bert_base());
+        let cfg = AcceleratorConfig::default();
+        let em = EnergyModel::default();
+        let icx = Interconnect::default();
+        let sp =
+            ShardedDecodePlan::plan(&dims, 32, 2, 4, &Tiling::square(16), 256 * 1024, 1).unwrap();
+        let c = sharded_trajectory_cost(&sp, &cfg, &em, &icx);
+        assert_eq!(c.link_cycles_per_step, 0);
+        assert_eq!(c.overlapped_cycles, c.serialized_cycles);
+        assert_eq!(c.overlapped_cycles, c.max_device_cycles);
     }
 }

@@ -15,13 +15,18 @@
 //! * [`cycles`] — a first-order latency model (compute/DRAM overlap with
 //!   turnaround stalls),
 //! * [`pipeline`] — step-level (DMA ‖ PE) stall attribution, a
-//!   [`replay::CostSink`] over the fused pass,
+//!   [`replay::CostSink`] over the fused pass, plus the third
+//!   ([`pipeline::LinkStream`]) stream: inter-chip link rounds drained
+//!   behind the same compute windows,
 //! * [`shard`] — per-device cost replay for multi-accelerator shards
 //!   ([`crate::dataflow::shard`]), link traffic costed by
-//!   [`crate::arch::Interconnect`],
+//!   [`crate::arch::Interconnect`] and reported both serialized and
+//!   overlapped ([`shard::ShardLatency`]),
 //! * [`decode`] — trajectory-level fused cost for decode plans
 //!   ([`crate::dataflow::DecodePlan`]): prefill plus every autoregressive
-//!   step priced through the same sinks in one pass.
+//!   step priced through the same sinks in one pass; head-sharded
+//!   trajectories overlap each step's all-reduce against its compute
+//!   ([`decode::sharded_trajectory_cost`]).
 //!
 //! [`Plan`]: crate::dataflow::Plan
 
@@ -37,12 +42,21 @@ pub mod roofline;
 pub mod shard;
 
 pub use cycles::{estimate_cycles, estimate_cycles_plan, CycleEstimate};
-pub use decode::{trajectory_fused_cost, TrajectoryCost};
+pub use decode::{
+    sharded_trajectory_cost, trajectory_cost_with_links, trajectory_fused_cost,
+    ShardedTrajectoryCost, TrajectoryCost,
+};
 pub use dram_trace::{simulate_dram_timing, simulate_dram_timing_plan};
 pub use ema::{simulate_ema, simulate_ema_plan, SimEma};
 pub use replay::{fused_cost, CostSink, EmaSink, FusedCost, StepCtx, TimingSink};
 pub use roofline::{ridge_intensity, roofline, RooflinePoint};
 pub use functional::{execute_plan, execute_schedule};
 pub use occupancy::{measure_occupancy, measure_occupancy_plan, Occupancy};
-pub use pipeline::{simulate_pipeline, simulate_pipeline_plan, PipelineSink, PipelineStats};
-pub use shard::{sharded_fused_cost, DeviceCost, ShardCost};
+pub use pipeline::{
+    simulate_pipeline, simulate_pipeline_plan, LinkSchedule, LinkStream, PipelineSink,
+    PipelineStats,
+};
+pub use shard::{
+    shard_link_rounds, sharded_closed_latency, sharded_fused_cost, DeviceCost, ShardCost,
+    ShardLatency,
+};

@@ -14,6 +14,20 @@
 //! EMA/cycles/energy/timing, so per-tile TAS plans — and each device's
 //! slice of a sharded plan ([`super::shard`]) — get stall breakdowns for
 //! free.  [`simulate_pipeline`] keeps the standalone entry point.
+//!
+//! Besides the DMA prefetch, a replayed step can carry a **third
+//! stream**: inter-chip link rounds ([`LinkStream`], fed by the round
+//! lists of [`crate::arch::Interconnect`]) drain behind the same per-step
+//! compute windows the DMA overlaps against, so all-gather operand
+//! traffic and tree-reduce psum payloads hide behind compute instead of
+//! serializing after it (see [`super::shard`] / [`super::decode`]).
+//!
+//! Fill-latency convention: one pipeline fill is charged **per replay**
+//! (per plan segment).  Multi-segment trajectories (decode stage slices,
+//! per-device shard slices) charge one fill per segment instance — the
+//! [`PipelineStats::fills`] counter makes the convention auditable, and
+//! `total_cycles == fills·fill_latency + compute + stalls` is asserted at
+//! both aggregation sites (`sim::decode`, `sim::shard`).
 
 use crate::arch::dram::DramDir;
 use crate::arch::PeArray;
@@ -32,6 +46,9 @@ pub struct PipelineStats {
     pub stall_cycles: u64,
     /// Steps that stalled at all.
     pub stalled_steps: u64,
+    /// Pipeline fills charged (one per replayed plan segment — see the
+    /// module docs for the convention).
+    pub fills: u64,
     /// Total latency (compute + stalls + pipeline fill).
     pub total_cycles: u64,
 }
@@ -83,6 +100,7 @@ impl PipelineSink {
 
     pub fn finish(self) -> PipelineStats {
         let mut stats = self.stats;
+        stats.fills = 1;
         stats.total_cycles = self.pe.fill_latency + stats.compute_cycles + stats.stall_cycles;
         stats
     }
@@ -141,6 +159,93 @@ impl CostSink for PipelineSink {
         self.stats.compute_cycles += compute;
         self.stats.steps += 1;
         self.prev_compute = compute.max(1);
+    }
+}
+
+/// Drain state of one inter-chip round sequence against compute windows.
+///
+/// The rounds come from the [`crate::arch::Interconnect`] round lists
+/// (ring all-gather shares, tree-reduce payloads); [`LinkSchedule::drain`]
+/// hides up to one compute window's worth of link cycles per call, in
+/// round order.  Whatever is left at the end is *exposed* link time the
+/// shard (or decode step) pays after compute — the overlapped latency is
+/// `busy + exposed` instead of the serialized `busy + total`.
+#[derive(Clone, Debug)]
+pub struct LinkSchedule {
+    rounds: Vec<u64>,
+    next: usize,
+    done_in_round: u64,
+    total: u64,
+    hidden: u64,
+}
+
+impl LinkSchedule {
+    pub fn new(rounds: Vec<u64>) -> LinkSchedule {
+        let total = rounds.iter().sum();
+        LinkSchedule { rounds, next: 0, done_in_round: 0, total, hidden: 0 }
+    }
+
+    /// Hide up to `window` cycles of link streaming behind one compute
+    /// window (round by round; a round never outlives its own cycles).
+    pub fn drain(&mut self, mut window: u64) {
+        while window > 0 && self.next < self.rounds.len() {
+            let left = self.rounds[self.next] - self.done_in_round;
+            let take = left.min(window);
+            self.done_in_round += take;
+            self.hidden += take;
+            window -= take;
+            if self.done_in_round == self.rounds[self.next] {
+                self.next += 1;
+                self.done_in_round = 0;
+            }
+        }
+    }
+
+    /// Serialized link time: every round end to end.
+    pub fn total_cycles(&self) -> u64 {
+        self.total
+    }
+
+    /// Link cycles hidden behind the compute windows drained so far.
+    pub fn hidden_cycles(&self) -> u64 {
+        self.hidden
+    }
+
+    /// Link cycles still exposed (paid after compute).
+    pub fn exposed_cycles(&self) -> u64 {
+        self.total - self.hidden
+    }
+}
+
+/// Third pipeline stream: inter-chip link rounds riding the fused replay.
+///
+/// Each replayed step contributes its MAC-burst window (tile compute
+/// without fill) to the [`LinkSchedule`] drain, so link transfers hide
+/// behind exactly the compute the device performs while they stream —
+/// the step-granular counterpart of the aggregate overlap in
+/// [`super::shard::ShardLatency`].  The greedy drain makes the total
+/// hidden time `min(link total, Σ step windows)` regardless of round
+/// granularity (property-pinned below).
+pub struct LinkStream {
+    pe: PeArray,
+    schedule: LinkSchedule,
+}
+
+impl LinkStream {
+    pub fn new(cfg: &AcceleratorConfig, rounds: Vec<u64>) -> LinkStream {
+        LinkStream { pe: cfg.pe_array(), schedule: LinkSchedule::new(rounds) }
+    }
+
+    pub fn finish(self) -> LinkSchedule {
+        self.schedule
+    }
+}
+
+impl CostSink for LinkStream {
+    fn on_step(&mut self, ctx: &StepCtx) {
+        let macs = ctx.mi * ctx.nr * ctx.kj;
+        let window = self.pe.tile_cycles(macs) - self.pe.fill_latency;
+        self.schedule.drain(window);
     }
 }
 
@@ -222,12 +327,70 @@ mod tests {
         let shape = GemmShape::new(96, 96, 96);
         for scheme in Scheme::FIXED {
             let s = run(scheme, &shape);
+            assert_eq!(s.fills, 1, "one fill per replayed segment");
             assert_eq!(
                 s.total_cycles,
-                cfg().pe_array().fill_latency + s.compute_cycles + s.stall_cycles
+                s.fills * cfg().pe_array().fill_latency + s.compute_cycles + s.stall_cycles
             );
             assert!(s.stalled_steps <= s.steps);
         }
+    }
+
+    #[test]
+    fn link_stream_hides_min_of_link_and_compute() {
+        // The greedy drain's total is min(link, Σ MAC windows), no matter
+        // how the link cycles are cut into rounds.
+        use crate::sim::replay::replay;
+        let shape = GemmShape::new(130, 70, 90);
+        let tiling = Tiling::square(16);
+        let plan = Plan::tas_per_tile(&shape, &tiling);
+        let cfg = cfg();
+        let pe = cfg.pe_array();
+        let mut mac_windows = 0u64;
+        plan.for_each_step(|s| {
+            use crate::gemm::tile_extent;
+            let mi = tile_extent(shape.m, tiling.tm, s.i);
+            let nr = tile_extent(shape.n, tiling.tn, s.r);
+            let kj = tile_extent(shape.k, tiling.tk, s.j);
+            mac_windows += pe.tile_cycles(mi * nr * kj) - pe.fill_latency;
+        });
+        for rounds in [
+            vec![],
+            vec![1u64],
+            vec![517, 517, 517],
+            vec![mac_windows + 10_000],
+            vec![1; 97],
+            vec![mac_windows / 2, 3, mac_windows],
+        ] {
+            let total: u64 = rounds.iter().sum();
+            let mut link = LinkStream::new(&cfg, rounds);
+            {
+                let sinks: &mut [&mut dyn CostSink] = &mut [&mut link];
+                replay(&plan, sinks);
+            }
+            let sched = link.finish();
+            assert_eq!(sched.total_cycles(), total);
+            assert_eq!(sched.hidden_cycles(), total.min(mac_windows));
+            assert_eq!(
+                sched.exposed_cycles(),
+                total - total.min(mac_windows)
+            );
+        }
+    }
+
+    #[test]
+    fn link_schedule_drains_round_by_round() {
+        let mut s = LinkSchedule::new(vec![10, 5]);
+        assert_eq!(s.total_cycles(), 15);
+        s.drain(4);
+        assert_eq!(s.hidden_cycles(), 4);
+        s.drain(8); // finishes round 0, eats 2 of round 1
+        assert_eq!(s.hidden_cycles(), 12);
+        s.drain(100);
+        assert_eq!(s.hidden_cycles(), 15);
+        assert_eq!(s.exposed_cycles(), 0);
+        s.drain(7); // nothing left
+        assert_eq!(s.hidden_cycles(), 15);
     }
 
     #[test]

@@ -7,18 +7,38 @@
 //! ([`ShardedPlan::link_traffic`]) and is costed by the
 //! [`Interconnect`] primitives.
 //!
+//! **Latency** is a first-class output: the collective transfers (ring
+//! all-gather of remote operands, tree reduce of contraction psums) are
+//! a round list ([`Interconnect::all_gather_rounds`] /
+//! [`Interconnect::tree_reduce_rounds`]) that drains behind each
+//! device's compute window instead of serializing after the slowest
+//! device.  [`ShardLatency`] reports both models — `serialized`
+//! (`max_device_cycles + link_cycles`, the pre-overlap behaviour) and
+//! `overlapped` — and the bound
+//! `max(compute, link) ≤ overlapped ≤ serialized` holds by construction
+//! (property-tested across the zoo in `rust/tests/overlap_invariants.rs`).
+//! [`sharded_closed_latency`] computes the same numbers from the strip
+//! closed forms ([`ShardedPlan::device_compute`]) without replaying, so
+//! zoo-scale checks stay cheap; [`sharded_fused_cost`] additionally runs
+//! a per-device [`PipelineSink`] + [`LinkStream`] for step-granular
+//! stall attribution (which device's DMA stalls, and how much link time
+//! its MAC bursts hide).
+//!
 //! Invariants (property-tested in `rust/tests/shard_conservation.rs`):
 //! summed per-device EMA equals the plan's EMA word-for-word, and link
 //! traffic is additive on top — a sharded plan never undercuts its
 //! unsharded cost.
 
+use crate::arch::dram::DramStats;
 use crate::arch::Interconnect;
 use crate::config::AcceleratorConfig;
 use crate::dataflow::shard::{LinkTraffic, ShardAxis, ShardedPlan};
+use crate::dataflow::PlanBody;
 use crate::energy::{EnergyCost, EnergyModel};
 use crate::gemm::tile_extent;
 use crate::sim::cycles::{cycles_from_parts, CycleEstimate};
 use crate::sim::ema::SimEma;
+use crate::sim::pipeline::{LinkStream, PipelineSink, PipelineStats};
 use crate::sim::replay::{CostSink, EmaSink, StepCtx};
 
 /// One device's share of a sharded plan, fully costed.
@@ -31,10 +51,62 @@ pub struct DeviceCost {
     pub macs: u64,
     pub cycles: CycleEstimate,
     pub energy: EnergyCost,
+    /// Step-granular (DMA ‖ PE) stall attribution over this device's
+    /// slice of the step stream (one pipeline fill per device).
+    pub pipeline: PipelineStats,
+    /// Link-round cycles this device's MAC bursts hid (third stream).
+    pub link_hidden_cycles: u64,
     /// Words this device receives over links.
     pub link_in_words: u64,
     /// Words this device sends over links.
     pub link_out_words: u64,
+}
+
+/// Latency decomposition of one sharded GEMM under the aggregate cycle
+/// model ([`cycles_from_parts`]): serialized vs overlapped link time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardLatency {
+    /// Serialized link time: every collective round end to end.
+    pub link_cycles: u64,
+    /// Busiest device's latency before any link time.
+    pub max_device_cycles: u64,
+    /// Pre-overlap model: `max_device_cycles + link_cycles`.
+    pub serialized_cycles: u64,
+    /// Link rounds drained behind each device's PE-busy window: the
+    /// whole-shard latency is the worst device's busy time plus the link
+    /// cycles *its own* compute could not hide (an idle device just
+    /// waits out the collective).
+    pub overlapped_cycles: u64,
+}
+
+impl ShardLatency {
+    /// Assemble from per-device cycle estimates plus the round total.
+    /// Per device, `exposed = link - min(link, compute)`; the overlapped
+    /// latency is `max over devices of (total + exposed)`, which pins
+    /// `max(compute, link) <= overlapped <= serialized` by construction.
+    pub fn from_parts(per_device: &[CycleEstimate], link_cycles: u64) -> ShardLatency {
+        let max_device_cycles = per_device
+            .iter()
+            .map(|c| c.total_cycles)
+            .max()
+            .unwrap_or(0);
+        let mut overlapped = link_cycles; // an all-idle shard still waits
+        for c in per_device {
+            let exposed = link_cycles - link_cycles.min(c.compute_cycles);
+            overlapped = overlapped.max(c.total_cycles + exposed);
+        }
+        ShardLatency {
+            link_cycles,
+            max_device_cycles,
+            serialized_cycles: max_device_cycles + link_cycles,
+            overlapped_cycles: overlapped,
+        }
+    }
+
+    /// Link cycles hidden behind compute — the overlap win.
+    pub fn hidden_link_cycles(&self) -> u64 {
+        self.serialized_cycles - self.overlapped_cycles
+    }
 }
 
 /// Cost report of one sharded GEMM.
@@ -42,9 +114,11 @@ pub struct DeviceCost {
 pub struct ShardCost {
     pub per_device: Vec<DeviceCost>,
     pub link: LinkTraffic,
-    /// Serialized link time: operand point-to-point + psum reduce.
-    pub link_cycles: u64,
     pub link_energy_pj: f64,
+    /// Serialized-vs-overlapped latency (aggregate cycle model) — the
+    /// single source for the shard's cycle-level quantities
+    /// (`link_cycles`, `max_device_cycles`, both totals).
+    pub latency: ShardLatency,
 }
 
 impl ShardCost {
@@ -57,19 +131,56 @@ impl ShardCost {
         self.link.total()
     }
 
-    /// Slowest device's cycle estimate — the shard's critical path before
-    /// link serialization.
-    pub fn max_device_cycles(&self) -> u64 {
-        self.per_device
-            .iter()
-            .map(|d| d.cycles.total_cycles)
-            .max()
-            .unwrap_or(0)
+    /// Serialized link time: operand all-gather + psum tree reduce.
+    pub fn link_cycles(&self) -> u64 {
+        self.latency.link_cycles
     }
 
-    /// Whole-shard latency: slowest device plus serialized link time.
+    /// Slowest device's cycle estimate — the shard's critical path before
+    /// link time.
+    pub fn max_device_cycles(&self) -> u64 {
+        self.latency.max_device_cycles
+    }
+
+    /// Pre-overlap latency: slowest device plus every link round.
+    pub fn serialized_cycles(&self) -> u64 {
+        self.latency.serialized_cycles
+    }
+
+    /// Latency with link rounds overlapped against compute.
+    pub fn overlapped_cycles(&self) -> u64 {
+        self.latency.overlapped_cycles
+    }
+
+    /// Whole-shard latency — the overlapped model (link transfers hide
+    /// behind compute; see [`ShardLatency`]).  The serialized number the
+    /// old model reported is [`ShardCost::serialized_cycles`].
     pub fn total_cycles(&self) -> u64 {
-        self.max_device_cycles() + self.link_cycles
+        self.latency.overlapped_cycles
+    }
+
+    /// Step-granular serialized latency: slowest pipeline walk (DMA
+    /// stalls included) plus every link round.
+    pub fn pipeline_serialized_cycles(&self) -> u64 {
+        let max_pipe = self
+            .per_device
+            .iter()
+            .map(|d| d.pipeline.total_cycles)
+            .max()
+            .unwrap_or(0);
+        max_pipe + self.latency.link_cycles
+    }
+
+    /// Step-granular overlapped latency: each device pays its pipeline
+    /// walk plus the link rounds its own MAC windows could not hide
+    /// ([`LinkStream`]); the shard waits for the worst device.
+    pub fn pipeline_overlapped_cycles(&self) -> u64 {
+        let link = self.latency.link_cycles;
+        self.per_device
+            .iter()
+            .map(|d| d.pipeline.total_cycles + (link - d.link_hidden_cycles))
+            .max()
+            .unwrap_or(link)
     }
 
     /// Total energy: per-device DRAM/SRAM/MAC plus link transfer energy.
@@ -79,14 +190,89 @@ impl ShardCost {
     }
 }
 
-/// Replay a sharded plan once, dispatching each step to its device's
-/// [`EmaSink`], and assemble the per-device and link cost report.
-pub fn sharded_fused_cost(
+/// The collective round list of one sharded plan: the ring all-gather of
+/// remote operand shares, then the tree reduce of contraction psums.
+/// Sums to the serialized `link_cycles` exactly (the round closed forms
+/// are pinned in [`crate::arch::interconnect`]'s tests).
+pub fn shard_link_rounds(sp: &ShardedPlan, icx: &Interconnect) -> Vec<u64> {
+    link_rounds_from(&sp.link_traffic(), sp, icx)
+}
+
+/// Round list from an already-computed [`LinkTraffic`] (the closed-form
+/// walk is O(strips × devices), so callers that need the traffic anyway
+/// pass it in instead of recomputing).
+fn link_rounds_from(link: &LinkTraffic, sp: &ShardedPlan, icx: &Interconnect) -> Vec<u64> {
+    let mut rounds = Vec::new();
+    if link.operand_words > 0 {
+        // Ring all-gather: every device forwards its share over its own
+        // link each round, instead of one serialized p2p of the total.
+        let share = link.operand_words.div_ceil(sp.devices);
+        rounds.extend(icx.all_gather_rounds(share, sp.devices));
+    }
+    if link.reduce_words > 0 {
+        // Collective tree reduce of the full-output psum payload: the
+        // pairwise rounds run on disjoint links, so reduce time scales
+        // with ceil(log2 D) payloads, not with (D-1) serialized copies.
+        let payload = sp.plan.shape.output_words();
+        let active = link.reduce_words / payload + 1;
+        rounds.extend(icx.tree_reduce_rounds(payload, active));
+    }
+    rounds
+}
+
+/// Closed-form [`ShardLatency`]: per-device cycle estimates from the
+/// strip closed forms ([`ShardedPlan::device_compute`] +
+/// [`ShardedPlan::device_emas`]) — no step replay, so the whole zoo is
+/// checkable in milliseconds.  Equals the replayed
+/// [`ShardCost::latency`] exactly (property-pinned): per-device words,
+/// steps and MACs are closed forms already, and for the streamed strip
+/// covers [`shard_gemm`] produces, the direction-switch count is
+/// `2·stores − 1` — every store step writes between operand reads, and
+/// strips chain read-first, so each store contributes a read→write and a
+/// write→read switch except the last.  Plans with resident streams or a
+/// fixed-scheme body (both only reachable unsharded) fall back to the
+/// replayed per-device pass.
+///
+/// [`shard_gemm`]: crate::dataflow::shard::shard_gemm
+pub fn sharded_closed_latency(
     sp: &ShardedPlan,
     cfg: &AcceleratorConfig,
-    energy: &EnergyModel,
     icx: &Interconnect,
-) -> ShardCost {
+) -> ShardLatency {
+    let link_cycles: u64 = shard_link_rounds(sp, icx).iter().sum();
+    let streamed = !sp.plan.input_residency.is_free()
+        && !sp.plan.weight_residency.is_free()
+        && !sp.plan.output_residency.is_free();
+    let per_device: Vec<CycleEstimate> =
+        if streamed && matches!(sp.plan.body, PlanBody::Strips(_)) {
+            sp.device_compute()
+                .iter()
+                .zip(sp.device_emas())
+                .map(|(dc, e)| {
+                    let switches = if dc.stores > 0 { 2 * dc.stores - 1 } else { 0 };
+                    let sim = SimEma {
+                        stats: DramStats {
+                            input_read_words: e.input,
+                            weight_read_words: e.weight,
+                            output_write_words: e.output,
+                            direction_switches: switches,
+                            ..Default::default()
+                        },
+                        steps: dc.steps,
+                    };
+                    cycles_from_parts(dc.macs, &sim, cfg)
+                })
+                .collect()
+        } else {
+            replayed_device_estimates(sp, cfg)
+        };
+    ShardLatency::from_parts(&per_device, link_cycles)
+}
+
+/// Per-device cycle estimates via the replayed EmaSink pass — the
+/// fallback for resident streams / fixed bodies, and the reference the
+/// closed form is pinned against.
+fn replayed_device_estimates(sp: &ShardedPlan, cfg: &AcceleratorConfig) -> Vec<CycleEstimate> {
     let d = sp.devices as usize;
     let mut sinks: Vec<EmaSink> = (0..d).map(|_| EmaSink::new(cfg.dram())).collect();
     let mut macs = vec![0u64; d];
@@ -102,38 +288,72 @@ pub fn sharded_fused_cost(
         macs[dev] += ctx.mi * ctx.nr * ctx.kj;
         sinks[dev].on_step(&ctx);
     });
-
-    let link = sp.link_traffic();
-    let mut link_cycles = 0u64;
-    if link.operand_words > 0 {
-        // Ring all-gather: every device forwards its share over its own
-        // link each round, instead of one serialized p2p of the total.
-        let share = link.operand_words.div_ceil(sp.devices);
-        link_cycles += icx.all_gather_cycles(share, sp.devices);
-    }
-    if link.reduce_words > 0 {
-        // Collective tree reduce of the full-output psum payload: the
-        // pairwise rounds run on disjoint links, so reduce time scales
-        // with ceil(log2 D) payloads, not with the (D-1) copies the
-        // serialized point-to-point chain streamed (ROADMAP item).
-        let payload = sp.plan.shape.output_words();
-        let active = link.reduce_words / payload + 1;
-        link_cycles += icx.tree_reduce_cycles(payload, active);
-    }
-    let link_energy_pj = icx.transfer_energy_pj(link.total());
-
-    let per_device = sinks
+    sinks
         .into_iter()
         .enumerate()
-        .map(|(dev, sink)| {
+        .map(|(dev, sink)| cycles_from_parts(macs[dev], &sink.finish(), cfg))
+        .collect()
+}
+
+/// Replay a sharded plan once, dispatching each step to its device's
+/// [`EmaSink`] + [`PipelineSink`] + [`LinkStream`], and assemble the
+/// per-device and link cost report.
+pub fn sharded_fused_cost(
+    sp: &ShardedPlan,
+    cfg: &AcceleratorConfig,
+    energy: &EnergyModel,
+    icx: &Interconnect,
+) -> ShardCost {
+    let d = sp.devices as usize;
+    let link = sp.link_traffic();
+    let rounds = link_rounds_from(&link, sp, icx);
+    let link_cycles: u64 = rounds.iter().sum();
+    let mut sinks: Vec<EmaSink> = (0..d).map(|_| EmaSink::new(cfg.dram())).collect();
+    let mut pipes: Vec<PipelineSink> = (0..d).map(|_| PipelineSink::new(cfg)).collect();
+    let mut links: Vec<LinkStream> =
+        (0..d).map(|_| LinkStream::new(cfg, rounds.clone())).collect();
+    let mut macs = vec![0u64; d];
+    let (shape, tiling) = (sp.plan.shape, sp.plan.tiling);
+    sp.for_each_step_device(|dev, step| {
+        let ctx = StepCtx {
+            plan: &sp.plan,
+            step,
+            mi: tile_extent(shape.m, tiling.tm, step.i),
+            nr: tile_extent(shape.n, tiling.tn, step.r),
+            kj: tile_extent(shape.k, tiling.tk, step.j),
+        };
+        macs[dev] += ctx.mi * ctx.nr * ctx.kj;
+        sinks[dev].on_step(&ctx);
+        pipes[dev].on_step(&ctx);
+        links[dev].on_step(&ctx);
+    });
+
+    let link_energy_pj = icx.transfer_energy_pj(link.total());
+
+    let per_device: Vec<DeviceCost> = sinks
+        .into_iter()
+        .zip(pipes)
+        .zip(links)
+        .enumerate()
+        .map(|(dev, ((sink, pipe), lstream))| {
             let ema = sink.finish();
             let cycles = cycles_from_parts(macs[dev], &ema, cfg);
+            let pipeline = pipe.finish();
+            debug_assert_eq!(
+                pipeline.total_cycles,
+                pipeline.fills * cfg.pe_array().fill_latency
+                    + pipeline.compute_cycles
+                    + pipeline.stall_cycles,
+                "single-fill-per-segment convention (see sim::pipeline)"
+            );
             let (i, w, o) = ema.table2();
             DeviceCost {
                 device: dev,
                 cycles,
                 energy: energy.traffic_energy(macs[dev], i + w + o),
                 macs: macs[dev],
+                pipeline,
+                link_hidden_cycles: lstream.finish().hidden_cycles(),
                 link_in_words: link.per_device_in[dev],
                 link_out_words: link.per_device_out[dev],
                 ema,
@@ -141,7 +361,9 @@ pub fn sharded_fused_cost(
         })
         .collect();
 
-    ShardCost { per_device, link, link_cycles, link_energy_pj }
+    let estimates: Vec<CycleEstimate> = per_device.iter().map(|dc| dc.cycles).collect();
+    let latency = ShardLatency::from_parts(&estimates, link_cycles);
+    ShardCost { per_device, link, link_energy_pj, latency }
 }
 
 /// Convenience: is the partition a psum-reducing contraction split?
@@ -204,8 +426,13 @@ mod tests {
         assert_eq!(c.per_device.len(), 1);
         assert_eq!(c.per_device[0].ema, fused.ema);
         assert_eq!(c.per_device[0].cycles, fused.cycles);
+        assert_eq!(c.per_device[0].pipeline, fused.pipeline);
         assert_eq!(c.link_words(), 0);
-        assert_eq!(c.link_cycles, 0);
+        assert_eq!(c.link_cycles(), 0);
+        // no links: overlapped == serialized == the device's own latency
+        assert_eq!(c.overlapped_cycles(), c.serialized_cycles());
+        assert_eq!(c.overlapped_cycles(), c.max_device_cycles());
+        assert_eq!(c.per_device[0].link_hidden_cycles, 0);
     }
 
     #[test]
@@ -227,26 +454,28 @@ mod tests {
         let (sp, c) = cost(shape, 4, ShardAxis::Contraction);
         assert!(is_reduce_shard(&sp));
         assert!(c.link.reduce_words > 0);
-        assert!(c.link_cycles > 0);
+        assert!(c.link_cycles() > 0);
         assert!(c.link_energy_pj > 0.0);
     }
 
     #[test]
     fn collective_reduce_beats_serialized_chain_at_scale() {
-        // The psum reduce rides the tree primitive: at 4+ devices its
-        // serialized time must undercut streaming every (D-1) psum copy
-        // through one link, which is what the old point-to-point model
-        // charged.
+        // The psum reduce rides the tree primitive: at 4+ devices it must
+        // undercut streaming every (D-1) psum copy through one link — and
+        // the overlapped latency must undercut even the chain model's
+        // total, because overlap only ever removes link time.
         let shape = GemmShape::new(512, 1024, 512);
         let icx = Interconnect::default();
         for devices in [4u64, 8] {
             let (_, c) = cost(shape, devices, ShardAxis::Contraction);
-            let serialized = icx.p2p_cycles(c.link.reduce_words);
+            let chain = icx.p2p_cycles(c.link.reduce_words);
             assert!(
-                c.link_cycles < serialized,
-                "d={devices}: {} >= {serialized}",
-                c.link_cycles
+                c.link_cycles() < chain,
+                "d={devices}: {} >= {chain}",
+                c.link_cycles()
             );
+            assert!(c.overlapped_cycles() <= c.serialized_cycles());
+            assert!(c.overlapped_cycles() < c.max_device_cycles() + chain);
         }
     }
 
@@ -257,10 +486,78 @@ mod tests {
         let shape = GemmShape::new(64, 768, 768);
         let icx = Interconnect::default();
         let d = 4u64;
-        let (_, c) = cost(shape, d, ShardAxis::Rows);
+        let (sp, c) = cost(shape, d, ShardAxis::Rows);
         assert!(c.link.operand_words > 0);
         let share = c.link.operand_words.div_ceil(d);
-        assert_eq!(c.link_cycles, icx.all_gather_cycles(share, d));
-        assert!(c.link_cycles < icx.p2p_cycles(c.link.operand_words));
+        assert_eq!(c.link_cycles(), icx.all_gather_cycles(share, d));
+        assert!(c.link_cycles() < icx.p2p_cycles(c.link.operand_words));
+        // the round list is the same time, cut into D-1 rounds
+        let rounds = shard_link_rounds(&sp, &icx);
+        assert_eq!(rounds.len() as u64, d - 1);
+        assert_eq!(rounds.iter().sum::<u64>(), c.link_cycles());
+    }
+
+    #[test]
+    fn closed_latency_matches_replayed_latency() {
+        let cfg = AcceleratorConfig::default();
+        let icx = Interconnect::default();
+        for shape in [
+            GemmShape::new(130, 70, 90),
+            GemmShape::new(64, 768, 768),
+            GemmShape::new(512, 96, 256),
+        ] {
+            for axis in [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Contraction] {
+                for d in [1u64, 2, 3, 4, 8] {
+                    let tiling = Tiling::square(16);
+                    let sp = shard_gemm(&shape, &tiling, ShardSpec::new(d, axis), 0.0);
+                    let closed = sharded_closed_latency(&sp, &cfg, &icx);
+                    let replayed =
+                        sharded_fused_cost(&sp, &cfg, &EnergyModel::default(), &icx).latency;
+                    assert_eq!(closed, replayed, "{shape:?} {axis:?} d={d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_bounds_hold_and_bite() {
+        // The invariant, plus a case where overlap strictly wins: a
+        // contraction shard's tree reduce hides behind the per-device
+        // compute of a compute-heavy GEMM.
+        let (_, c) = cost(GemmShape::new(512, 1024, 512), 4, ShardAxis::Contraction);
+        let lat = c.latency;
+        assert!(lat.overlapped_cycles >= lat.max_device_cycles.max(lat.link_cycles));
+        assert!(lat.overlapped_cycles <= lat.serialized_cycles);
+        assert!(
+            lat.overlapped_cycles < lat.serialized_cycles,
+            "overlap should hide link time here: {lat:?}"
+        );
+        assert_eq!(
+            lat.hidden_link_cycles(),
+            lat.serialized_cycles - lat.overlapped_cycles
+        );
+        // pipeline-granular model obeys the same bound
+        let max_pipe = c
+            .per_device
+            .iter()
+            .map(|d| d.pipeline.total_cycles)
+            .max()
+            .unwrap();
+        assert!(c.pipeline_overlapped_cycles() >= max_pipe.max(c.link_cycles()));
+        assert!(c.pipeline_overlapped_cycles() <= c.pipeline_serialized_cycles());
+    }
+
+    #[test]
+    fn link_stream_hidden_bounded_by_device_compute() {
+        let (_, c) = cost(GemmShape::new(64, 768, 768), 4, ShardAxis::Rows);
+        for dc in &c.per_device {
+            assert!(dc.link_hidden_cycles <= c.link_cycles());
+            assert!(dc.link_hidden_cycles <= dc.pipeline.compute_cycles);
+            assert_eq!(
+                dc.link_hidden_cycles,
+                c.link_cycles().min(dc.pipeline.compute_cycles),
+                "greedy drain hides min(link, compute)"
+            );
+        }
     }
 }

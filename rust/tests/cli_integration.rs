@@ -182,6 +182,35 @@ fn shard_json_conserves_ema_and_counts_link_words() {
     assert!(lp.get("handoff_words").unwrap().as_u64().is_some());
 }
 
+/// Acceptance (ISSUE 5): `tas shard --json` reports both serialized and
+/// overlapped cycles, and the overlap bound holds at every level.
+#[test]
+fn shard_json_reports_serialized_and_overlapped_cycles() {
+    let (ok, stdout, stderr) = tas(&[
+        "shard", "--model", "bert-base", "--seq", "512", "--devices", "4", "--json",
+    ]);
+    assert!(ok, "{stderr}");
+    let doc = tas::util::json::Json::parse(stdout.trim()).expect("valid json");
+    let totals = doc.get("totals").unwrap();
+    let ser = totals.get("serialized_cycles").unwrap().as_u64().unwrap();
+    let ovl = totals.get("overlapped_cycles").unwrap().as_u64().unwrap();
+    let hidden = totals.get("link_hidden_cycles").unwrap().as_u64().unwrap();
+    assert!(ovl <= ser, "overlapped {ovl} > serialized {ser}");
+    assert_eq!(hidden, ser - ovl);
+    assert!(hidden > 0, "link time must hide behind compute on this sweep");
+    for g in doc.get("gemms").unwrap().as_arr().unwrap() {
+        let gser = g.get("serialized_cycles").unwrap().as_u64().unwrap();
+        let govl = g.get("overlapped_cycles").unwrap().as_u64().unwrap();
+        let glink = g.get("link_cycles").unwrap().as_u64().unwrap();
+        assert!(govl <= gser);
+        assert!(gser >= glink, "serialized includes all link rounds");
+        for d in g.get("per_device").unwrap().as_arr().unwrap() {
+            assert!(d.get("stall_cycles").unwrap().as_u64().is_some());
+            assert!(d.get("link_hidden_cycles").unwrap().as_u64().unwrap() <= glink);
+        }
+    }
+}
+
 #[test]
 fn shard_single_device_is_free_of_link_traffic() {
     let (ok, stdout, stderr) = tas(&[
@@ -271,6 +300,31 @@ fn decode_shards_the_cache_by_heads() {
     assert_eq!(heads, 12, "bert-base heads partition exactly");
     let link = doc.get("link").unwrap();
     assert!(link.get("total_words").unwrap().as_u64().unwrap() > 0);
+    // acceptance (ISSUE 5): both latency models, bound holding — the
+    // per-step all-reduce is no longer a barrier
+    let ser = doc.get("serialized_cycles").unwrap().as_u64().unwrap();
+    let ovl = doc.get("overlapped_cycles").unwrap().as_u64().unwrap();
+    let hidden = doc.get("link_hidden_cycles").unwrap().as_u64().unwrap();
+    assert!(ovl <= ser);
+    assert_eq!(hidden, ser - ovl);
+}
+
+/// Single-device decode: the two latency models must agree (no links).
+#[test]
+fn decode_json_single_device_latencies_agree() {
+    let (ok, stdout, stderr) = tas(&[
+        "decode", "--model", "bert-base", "--prefill", "16", "--steps", "2", "--batch", "4",
+        "--json",
+    ]);
+    assert!(ok, "{stderr}");
+    let doc = tas::util::json::Json::parse(stdout.trim()).expect("valid json");
+    let ser = doc.get("serialized_cycles").unwrap().as_u64().unwrap();
+    let ovl = doc.get("overlapped_cycles").unwrap().as_u64().unwrap();
+    assert_eq!(ser, ovl);
+    assert_eq!(
+        doc.get("trajectory_cycles").unwrap().as_u64().unwrap(),
+        ovl
+    );
 }
 
 #[test]
