@@ -1,0 +1,77 @@
+//! Bench E9 — planner throughput: closed-form strip costing vs the replay
+//! oracle ([`tas::sim::plan_cost`] vs [`tas::sim::replayed_cost`]).
+//!
+//! Each iteration prices every slice plan of a bert-base layer plan
+//! through all five planner-facing sinks (EMA, cycles, energy, DRAM
+//! words/transactions/switches, pipeline stalls).  The closed path folds
+//! compressed runs in O(strips); the oracle replays every tile step.  The
+//! two are word-for-word equal (`tests/strip_closed_form.rs`), so this
+//! bench measures nothing but the planning speedup — the PR's acceptance
+//! floor is 10× plans-per-second on the full run.  The CI smoke run
+//! (`TAS_BENCH_FAST=1`) asserts only closed ≥ replay, staying robust to
+//! timer noise on shared runners.
+//!
+//! Besides the usual CSV, one machine-readable JSON row is printed per
+//! sequence length.
+
+use tas::config::{AcceleratorConfig, EnergyConfig};
+use tas::dataflow::LayerPlan;
+use tas::energy::EnergyModel;
+use tas::gemm::Tiling;
+use tas::models::zoo;
+use tas::sim::{plan_cost, replayed_cost};
+use tas::util::bench::{bb, Bench, Throughput};
+
+fn main() {
+    let cfg = AcceleratorConfig::default();
+    let energy = EnergyModel::new(EnergyConfig::default());
+    let tiling = Tiling::square(16);
+    let fast = std::env::var("TAS_BENCH_FAST").is_ok();
+    let mut b = Bench::new("planner");
+
+    for seq in [64u64, 512, 4096] {
+        let layer = LayerPlan::plan(
+            zoo::bert_base().block_stages(seq),
+            seq,
+            &tiling,
+            cfg.sram_words,
+        );
+        let plans: Vec<_> = layer.stages.iter().flat_map(|s| s.slices.iter()).collect();
+        let n = plans.len() as u64;
+        b.run(
+            &format!("closed/bert-base/seq{seq}"),
+            Throughput::Elements(n),
+            || {
+                plans
+                    .iter()
+                    .map(|p| bb(plan_cost(p, &cfg, &energy)).cycles.total_cycles)
+                    .sum::<u64>()
+            },
+        );
+        b.run(
+            &format!("replay/bert-base/seq{seq}"),
+            Throughput::Elements(n),
+            || {
+                plans
+                    .iter()
+                    .map(|p| bb(replayed_cost(p, &cfg, &energy)).cycles.total_cycles)
+                    .sum::<u64>()
+            },
+        );
+        let closed = b.results[b.results.len() - 2].per_sec.expect("throughput set");
+        let replay = b.results[b.results.len() - 1].per_sec.expect("throughput set");
+        let speedup = closed / replay;
+        println!(
+            "{{\"bench\":\"planner\",\"model\":\"bert-base\",\"seq\":{seq},\
+             \"plans\":{n},\"closed_plans_per_sec\":{closed:.1},\
+             \"replay_plans_per_sec\":{replay:.1},\"speedup\":{speedup:.2}}}"
+        );
+        let floor = if fast { 1.0 } else { 10.0 };
+        assert!(
+            speedup >= floor,
+            "closed-form planning must be >= {floor}x replay throughput at \
+             seq {seq}, got {speedup:.2}x"
+        );
+    }
+    b.write_csv();
+}

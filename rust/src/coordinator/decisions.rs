@@ -258,22 +258,41 @@ pub fn mixed_bucket_plan(
     };
     match (prefill_tokens, decode) {
         (Some(tokens), Some((batch, cache_len))) => {
+            // Each grid point plans a full prefill chain plus a decode
+            // step and the points are independent, so score all seven
+            // lane splits concurrently.  The pick below walks the joined
+            // results in grid order with a strict `<`, which keeps the
+            // lowest eighths on ties — exactly the sequential loop's
+            // deterministic answer.
+            let candidates = std::thread::scope(|scope| {
+                let handles: Vec<_> = (1..=7u64)
+                    .map(|eighths| {
+                        let (plan_prefill, plan_decode) = (&plan_prefill, &plan_decode);
+                        scope.spawn(move || {
+                            let prefill_sram = sram_words * eighths / 8;
+                            let p = plan_prefill(tokens, prefill_sram);
+                            let d = plan_decode(batch, cache_len, sram_words - prefill_sram);
+                            MixedBucketPlan {
+                                prefill: Some(p),
+                                decode: Some(d),
+                                prefill_sram_words: prefill_sram,
+                            }
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("lane-split worker panicked"))
+                    .collect::<Vec<_>>()
+            });
             let mut best: Option<MixedBucketPlan> = None;
-            for eighths in 1..=7u64 {
-                let prefill_sram = sram_words * eighths / 8;
-                let p = plan_prefill(tokens, prefill_sram);
-                let d = plan_decode(batch, cache_len, sram_words - prefill_sram);
-                let total = p.total_ema() + d.total_ema();
+            for cand in candidates {
                 let better = best
                     .as_ref()
-                    .map(|b| total < b.total_ema())
+                    .map(|b| cand.total_ema() < b.total_ema())
                     .unwrap_or(true);
                 if better {
-                    best = Some(MixedBucketPlan {
-                        prefill: Some(p),
-                        decode: Some(d),
-                        prefill_sram_words: prefill_sram,
-                    });
+                    best = Some(cand);
                 }
             }
             best.expect("grid is non-empty")
@@ -283,6 +302,78 @@ pub fn mixed_bucket_plan(
             decode: decode.map(|(batch, cache_len)| plan_decode(batch, cache_len, sram_words)),
             prefill_sram_words: if prefill_tokens.is_some() { sram_words } else { 0 },
         },
+    }
+}
+
+/// Default entry cap per planner memo cache ([`PlanCache`]).  A serving
+/// run sees a handful of padded buckets per lane, so 64 joint keys is
+/// generous; the cap exists to bound the resident plan memory when a
+/// workload's cache-length buckets churn (every decode step can shift
+/// the `(slots, cache bucket)` key).
+pub const PLAN_CACHE_CAP: usize = 64;
+
+/// Hit/miss/evict counters of the planner's bounded memo caches, summed
+/// across the three lanes and surfaced in the coordinator metrics
+/// ([`crate::coordinator::metrics::MetricsSnapshot`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlannerCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Entries currently resident across the three caches.
+    pub entries: u64,
+}
+
+/// A bounded memo: ordered map storage plus an LRU clock.  Eviction runs
+/// *before* insertion because [`PlanCache::get_or_insert_with`] hands out
+/// a borrow of the inserted value — the planner's `plan_dispatch` returns
+/// plans by reference, so a post-insert sweep could invalidate the entry
+/// it just promised.
+struct PlanCache<K: Ord + Clone, V> {
+    map: BTreeMap<K, (u64, V)>,
+    cap: usize,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl<K: Ord + Clone, V> PlanCache<K, V> {
+    fn new(cap: usize) -> PlanCache<K, V> {
+        PlanCache {
+            map: BTreeMap::new(),
+            cap: cap.max(1),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    fn contains(&self, key: &K) -> bool {
+        self.map.contains_key(key)
+    }
+
+    fn get_or_insert_with(&mut self, key: K, build: impl FnOnce() -> V) -> &V {
+        self.tick += 1;
+        if self.map.contains_key(&key) {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            if self.map.len() >= self.cap {
+                let stalest = self
+                    .map
+                    .iter()
+                    .min_by_key(|(_, (stamp, _))| *stamp)
+                    .map(|(k, _)| k.clone())
+                    .expect("cap >= 1, so a full cache has an entry");
+                self.map.remove(&stalest);
+                self.evictions += 1;
+            }
+        }
+        let entry = self.map.entry(key).or_insert_with(|| (0, build()));
+        entry.0 = self.tick;
+        &entry.1
     }
 }
 
@@ -298,6 +389,12 @@ pub fn mixed_bucket_plan(
 /// decode cache bucket)`; the granted split is a deterministic function
 /// of that key, so the cache can never hand one joint dispatch another
 /// dispatch's split.  Single-lane dispatches keep the whole SRAM.
+///
+/// The caches are bounded ([`PLAN_CACHE_CAP`] entries each, LRU
+/// eviction) and counted ([`DispatchPlanner::cache_stats`]); known
+/// dispatch keys can be planned ahead of serving with
+/// [`DispatchPlanner::warm_up`], which fans the misses out across
+/// scoped worker threads.
 pub struct DispatchPlanner {
     hidden: u64,
     ffn: u64,
@@ -307,9 +404,9 @@ pub struct DispatchPlanner {
     tiling: Tiling,
     sram_words: u64,
     max_devices: u64,
-    prefill_cache: BTreeMap<u64, LayerPlan>,
-    decode_cache: BTreeMap<(u64, u64), DecodeStepPlan>,
-    mixed_cache: BTreeMap<(u64, u64, u64), MixedBucketPlan>,
+    prefill_cache: PlanCache<u64, LayerPlan>,
+    decode_cache: PlanCache<(u64, u64), DecodeStepPlan>,
+    mixed_cache: PlanCache<(u64, u64, u64), MixedBucketPlan>,
 }
 
 /// One dispatch's resolved plans, borrowed from the planner's memo.
@@ -372,9 +469,143 @@ impl DispatchPlanner {
             tiling,
             sram_words,
             max_devices,
-            prefill_cache: BTreeMap::new(),
-            decode_cache: BTreeMap::new(),
-            mixed_cache: BTreeMap::new(),
+            prefill_cache: PlanCache::new(PLAN_CACHE_CAP),
+            decode_cache: PlanCache::new(PLAN_CACHE_CAP),
+            mixed_cache: PlanCache::new(PLAN_CACHE_CAP),
+        }
+    }
+
+    /// Override the per-cache entry cap (tests use tiny caps to exercise
+    /// eviction; [`PLAN_CACHE_CAP`] otherwise).
+    pub fn with_cache_cap(mut self, cap: usize) -> DispatchPlanner {
+        self.prefill_cache = PlanCache::new(cap);
+        self.decode_cache = PlanCache::new(cap);
+        self.mixed_cache = PlanCache::new(cap);
+        self
+    }
+
+    /// Cumulative hit/miss/evict counters summed over the three caches.
+    pub fn cache_stats(&self) -> PlannerCacheStats {
+        let caches = [
+            (
+                self.prefill_cache.hits,
+                self.prefill_cache.misses,
+                self.prefill_cache.evictions,
+                self.prefill_cache.map.len(),
+            ),
+            (
+                self.decode_cache.hits,
+                self.decode_cache.misses,
+                self.decode_cache.evictions,
+                self.decode_cache.map.len(),
+            ),
+            (
+                self.mixed_cache.hits,
+                self.mixed_cache.misses,
+                self.mixed_cache.evictions,
+                self.mixed_cache.map.len(),
+            ),
+        ];
+        let mut s = PlannerCacheStats::default();
+        for (h, m, e, n) in caches {
+            s.hits += h;
+            s.misses += m;
+            s.evictions += e;
+            s.entries += n as u64;
+        }
+        s
+    }
+
+    /// Plan a batch of dispatch keys ahead of serving.  Keys not yet
+    /// cached are planned concurrently in scoped worker threads (each
+    /// plan is independent), then inserted in key order — so a warmed
+    /// planner answers its first dispatches from cache, and the plans are
+    /// byte-identical to what the lazy path would have built.
+    pub fn warm_up(&mut self, dispatches: &[(Option<u64>, Option<(u64, u64)>)]) {
+        let (hidden, ffn, vocab, n_layers, heads) =
+            (self.hidden, self.ffn, self.vocab, self.n_layers, self.heads);
+        let (tiling, sram_words, max_devices) =
+            (self.tiling, self.sram_words, self.max_devices);
+        enum Warmed {
+            Prefill(u64, LayerPlan),
+            Decode((u64, u64), DecodeStepPlan),
+            Mixed((u64, u64, u64), MixedBucketPlan),
+        }
+        let mut todo: Vec<(Option<u64>, Option<(u64, u64)>)> = Vec::new();
+        for &key in dispatches {
+            let missing = match key {
+                (Some(tokens), Some((slots, cache))) => {
+                    !self.mixed_cache.contains(&(tokens, slots, cache))
+                }
+                (Some(tokens), None) => !self.prefill_cache.contains(&tokens),
+                (None, Some(decode)) => !self.decode_cache.contains(&decode),
+                (None, None) => false,
+            };
+            if missing && !todo.contains(&key) {
+                todo.push(key);
+            }
+        }
+        let warmed = std::thread::scope(|scope| {
+            let handles: Vec<_> = todo
+                .iter()
+                .map(|&key| {
+                    scope.spawn(move || match key {
+                        (Some(tokens), Some((slots, cache))) => Warmed::Mixed(
+                            (tokens, slots, cache),
+                            mixed_bucket_plan(
+                                Some(tokens),
+                                Some((slots, cache)),
+                                hidden,
+                                ffn,
+                                vocab,
+                                n_layers,
+                                heads,
+                                &tiling,
+                                sram_words,
+                                devices_for_bucket(tokens, max_devices),
+                            ),
+                        ),
+                        (Some(tokens), None) => Warmed::Prefill(
+                            tokens,
+                            sharded_layer_plan_for_bucket(
+                                tokens,
+                                hidden,
+                                ffn,
+                                vocab,
+                                n_layers,
+                                &tiling,
+                                sram_words,
+                                devices_for_bucket(tokens, max_devices),
+                            ),
+                        ),
+                        (None, Some((slots, cache))) => Warmed::Decode(
+                            (slots, cache),
+                            decode_plan_for_bucket(
+                                slots, cache, hidden, ffn, vocab, n_layers, heads, &tiling,
+                                sram_words,
+                            ),
+                        ),
+                        (None, None) => unreachable!("empty dispatches are filtered"),
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("warm-up worker panicked"))
+                .collect::<Vec<_>>()
+        });
+        for plan in warmed {
+            match plan {
+                Warmed::Prefill(key, p) => {
+                    self.prefill_cache.get_or_insert_with(key, move || p);
+                }
+                Warmed::Decode(key, d) => {
+                    self.decode_cache.get_or_insert_with(key, move || d);
+                }
+                Warmed::Mixed(key, m) => {
+                    self.mixed_cache.get_or_insert_with(key, move || m);
+                }
+            }
         }
     }
 
@@ -395,8 +626,7 @@ impl DispatchPlanner {
                 let devices = devices_for_bucket(tokens, max_devices);
                 let plan = self
                     .mixed_cache
-                    .entry((tokens, slots, cache_bucket))
-                    .or_insert_with(|| {
+                    .get_or_insert_with((tokens, slots, cache_bucket), || {
                         mixed_bucket_plan(
                             Some(tokens),
                             Some((slots, cache_bucket)),
@@ -414,7 +644,7 @@ impl DispatchPlanner {
             }
             (Some(tokens), None) => {
                 let devices = devices_for_bucket(tokens, max_devices);
-                let plan = self.prefill_cache.entry(tokens).or_insert_with(|| {
+                let plan = self.prefill_cache.get_or_insert_with(tokens, || {
                     sharded_layer_plan_for_bucket(
                         tokens, hidden, ffn, vocab, n_layers, &tiling, sram_words, devices,
                     )
@@ -424,8 +654,7 @@ impl DispatchPlanner {
             (None, Some((slots, cache_bucket))) => {
                 let plan = self
                     .decode_cache
-                    .entry((slots, cache_bucket))
-                    .or_insert_with(|| {
+                    .get_or_insert_with((slots, cache_bucket), || {
                         decode_plan_for_bucket(
                             slots,
                             cache_bucket,
@@ -778,6 +1007,73 @@ mod tests {
         assert_eq!(solo, full);
         assert!(planner.plan_dispatch(None, None).prefill().is_none());
         assert!(planner.plan_dispatch(None, Some((4, 64))).decode().is_some());
+    }
+
+    #[test]
+    fn plan_cache_evicts_least_recently_used_and_counts() {
+        let t = Tiling::square(16);
+        let sram = 64 * 1024u64;
+        let mut planner =
+            DispatchPlanner::new(128, 512, 0, 2, 2, t, sram, 1).with_cache_cap(2);
+        let ema = |planner: &mut DispatchPlanner, tokens| {
+            planner
+                .plan_dispatch(Some(tokens), None)
+                .prefill()
+                .unwrap()
+                .total_ema()
+        };
+        let (a, b) = (ema(&mut planner, 64), ema(&mut planner, 128));
+        assert_eq!(planner.cache_stats().misses, 2);
+        assert_eq!(planner.cache_stats().entries, 2);
+        // touch A so B becomes the LRU entry, then overflow the cap
+        assert_eq!(ema(&mut planner, 64), a);
+        assert_eq!(planner.cache_stats().hits, 1);
+        ema(&mut planner, 256);
+        let s = planner.cache_stats();
+        assert_eq!(s.evictions, 1, "cap 2 + third key evicts one entry");
+        assert_eq!(s.entries, 2, "cache stays at its cap");
+        // A survived (recently used): hit.  B was evicted: miss, but the
+        // rebuilt plan is identical — eviction never changes answers.
+        assert_eq!(ema(&mut planner, 64), a);
+        assert_eq!(planner.cache_stats().hits, 2);
+        let miss_before = planner.cache_stats().misses;
+        assert_eq!(ema(&mut planner, 128), b);
+        assert_eq!(planner.cache_stats().misses, miss_before + 1);
+    }
+
+    #[test]
+    fn warm_up_precomputes_the_dispatch_plans() {
+        let t = Tiling::square(16);
+        let sram = 64 * 1024u64;
+        let mut warmed = DispatchPlanner::new(128, 512, 0, 2, 2, t, sram, 1);
+        let mut lazy = DispatchPlanner::new(128, 512, 0, 2, 2, t, sram, 1);
+        let dispatches = [
+            (Some(128), None),
+            (Some(128), Some((4u64, 64u64))),
+            (None, Some((4, 64))),
+            (None, None),          // filtered out
+            (Some(128), None),     // duplicate, planned once
+        ];
+        warmed.warm_up(&dispatches);
+        let s = warmed.cache_stats();
+        assert_eq!(s.entries, 3, "one entry per distinct non-empty key");
+        assert_eq!(s.misses, 3);
+        assert_eq!(s.hits, 0);
+        // the warmed planner serves from cache and matches the lazy path
+        for key in [(Some(128), None), (None, Some((4, 64)))] {
+            let w = warmed.plan_dispatch(key.0, key.1);
+            let l = lazy.plan_dispatch(key.0, key.1);
+            assert_eq!(
+                w.prefill().map(|p| p.total_ema()),
+                l.prefill().map(|p| p.total_ema())
+            );
+            assert_eq!(
+                w.decode().map(|d| d.total_ema()),
+                l.decode().map(|d| d.total_ema())
+            );
+        }
+        assert_eq!(warmed.cache_stats().hits, 2, "warmed keys are cache hits");
+        assert_eq!(warmed.cache_stats().misses, 3, "no new planning after warm-up");
     }
 
     #[test]

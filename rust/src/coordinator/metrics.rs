@@ -40,6 +40,7 @@ struct Inner {
     ema_decode_words: u64,
     ema_decode_baseline_words: u64,
     decode_cache_hot_words: u64,
+    planner_cache: crate::coordinator::decisions::PlannerCacheStats,
 }
 
 /// Point-in-time snapshot for reporting.
@@ -75,6 +76,10 @@ pub struct MetricsSnapshot {
     pub ema_decode_baseline_words: u64,
     /// Cache words served from SRAM instead of DRAM across decode steps.
     pub decode_cache_hot_words: u64,
+    /// Cumulative hit/miss/evict counters of the dispatch planner's
+    /// bounded plan-memo caches (latest counters recorded by the device
+    /// loop — already cumulative on the planner side).
+    pub planner_cache: crate::coordinator::decisions::PlannerCacheStats,
 }
 
 impl MetricsSnapshot {
@@ -202,6 +207,16 @@ impl Metrics {
         self.inner.lock().unwrap().latency.push(latency.as_secs_f64() * 1e3);
     }
 
+    /// Record the dispatch planner's cache counters.  The planner's
+    /// counters are cumulative, so the latest snapshot replaces the
+    /// stored one rather than accumulating.
+    pub fn record_planner_cache(
+        &self,
+        stats: crate::coordinator::decisions::PlannerCacheStats,
+    ) {
+        self.inner.lock().unwrap().planner_cache = stats;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         MetricsSnapshot {
@@ -226,6 +241,7 @@ impl Metrics {
             ema_decode_words: g.ema_decode_words,
             ema_decode_baseline_words: g.ema_decode_baseline_words,
             decode_cache_hot_words: g.decode_cache_hot_words,
+            planner_cache: g.planner_cache,
         }
     }
 }
@@ -326,6 +342,26 @@ mod tests {
         // the prefill lane is untouched
         assert_eq!(s.batches, 0);
         assert_eq!(s.ema_plan_words, 0);
+    }
+
+    #[test]
+    fn planner_cache_counters_surface_in_the_snapshot() {
+        use crate::coordinator::decisions::DispatchPlanner;
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().planner_cache.misses, 0);
+        let mut planner =
+            DispatchPlanner::new(128, 512, 0, 2, 2, Tiling::square(16), 64 * 1024, 1);
+        planner.plan_dispatch(Some(64), None);
+        planner.plan_dispatch(Some(64), None);
+        m.record_planner_cache(planner.cache_stats());
+        let s = m.snapshot();
+        assert_eq!(s.planner_cache.misses, 1);
+        assert_eq!(s.planner_cache.hits, 1);
+        assert_eq!(s.planner_cache.entries, 1);
+        // counters are cumulative on the planner: re-recording replaces
+        planner.plan_dispatch(Some(128), None);
+        m.record_planner_cache(planner.cache_stats());
+        assert_eq!(m.snapshot().planner_cache.misses, 2);
     }
 
     #[test]

@@ -22,7 +22,7 @@ pub use batcher::{Batch, Batcher, Bucket, DecodeSlot, MixedBatch};
 pub use chunking::{serve_chunked, ChunkPolicy};
 pub use decisions::{
     mixed_bucket_plan, scheme_plan, DispatchPlanner, MixedBucketPlan, PlannedDispatch,
-    SchemePlan,
+    PlannerCacheStats, SchemePlan,
 };
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{Request, RequestId, Response};

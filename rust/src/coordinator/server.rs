@@ -359,6 +359,18 @@ fn device_loop(
         opts.sram_words,
         opts.max_devices,
     );
+    // Warm the planner over the compiled prefill buckets before serving:
+    // each bucket's layer plan is computed once in a scoped worker, so
+    // the first dispatch of every bucket is a cache hit instead of an
+    // inline planning stall.
+    let warm_keys: Vec<_> = engine
+        .manifest()
+        .bert_buckets()
+        .iter()
+        .map(|(batch, seq, _)| (Some(batch * seq), None))
+        .collect();
+    planner.warm_up(&warm_keys);
+    metrics.record_planner_cache(planner.cache_stats());
 
     while let Ok(msg) = rx.recv() {
         let job = match msg {
@@ -388,6 +400,7 @@ fn device_loop(
         }
 
         let Some((ref batch, ref job_replies)) = job.batch else {
+            metrics.record_planner_cache(planner.cache_stats());
             continue;
         };
         let ids = batch.padded_ids();
@@ -425,6 +438,7 @@ fn device_loop(
             layer_plan,
             flops,
         );
+        metrics.record_planner_cache(planner.cache_stats());
 
         match result {
             Ok(outputs) => {

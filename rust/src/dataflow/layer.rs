@@ -234,14 +234,21 @@ impl LayerPlan {
             ResidencyPolicy::Paged => {
                 // Price both; fractional planning must never lose to the
                 // whole-tensor walk, so keep whichever moves fewer words.
-                let aon = LayerPlan::plan_all_or_nothing(
-                    stages.clone(),
-                    tokens,
-                    tiling,
-                    budget,
-                    &placement,
-                );
-                let paged = LayerPlan::plan_paged(stages, tokens, tiling, budget, &placement);
+                // The two walks share no state, so the all-or-nothing
+                // baseline prices on a scoped worker while this thread
+                // runs the paged planner.
+                let stages_aon = stages.clone();
+                let placement_ref: &[usize] = &placement;
+                let (aon, paged) = std::thread::scope(|scope| {
+                    let aon = scope.spawn(move || {
+                        LayerPlan::plan_all_or_nothing(
+                            stages_aon, tokens, tiling, budget, placement_ref,
+                        )
+                    });
+                    let paged =
+                        LayerPlan::plan_paged(stages, tokens, tiling, budget, placement_ref);
+                    (aon.join().expect("all-or-nothing planner panicked"), paged)
+                });
                 if paged.total_ema() <= aon.total_ema() {
                     paged
                 } else {
@@ -399,6 +406,53 @@ impl LayerPlan {
         // layer-planner twin of decode's PlanMemo.
         let memo: RefCell<HashMap<(GemmShape, u64, u64), u64>> =
             RefCell::new(HashMap::new());
+        // Warm the memo concurrently before the sequential greedy runs:
+        // the allocator's first rounds probe every stage at its base cost
+        // and every edge at its full-residency endpoints, and those cover
+        // searches dominate planning time.  Scoring each distinct
+        // (shape, hot_in, hot_out) triple on a scoped worker leaves the
+        // greedy itself untouched — it reads the same memoised numbers it
+        // would have computed inline, so the allocation is unchanged.
+        {
+            let mut seen: std::collections::HashSet<(GemmShape, u64, u64)> =
+                std::collections::HashSet::new();
+            let mut probes: Vec<(GemmShape, u64, u64)> = Vec::new();
+            let mut probe = |shape: &GemmShape, hot_in: u64, hot_out: u64| {
+                let key = (*shape, hot_in.min(shape.m), hot_out.min(shape.m));
+                if seen.insert(key) {
+                    probes.push(key);
+                }
+            };
+            for spec in &stages {
+                probe(&spec.shape, 0, 0);
+            }
+            for e in &edges {
+                match &e.kind {
+                    EdgeKind::Shared { sharers } => {
+                        for &s in sharers {
+                            probe(&stages[s].shape, e.rows, 0);
+                        }
+                    }
+                    EdgeKind::Chained { producer, consumer } => {
+                        probe(&stages[*producer].shape, 0, e.rows);
+                        probe(&stages[*consumer].shape, e.rows, 0);
+                    }
+                }
+            }
+            let costs: Vec<u64> = std::thread::scope(|scope| {
+                let handles: Vec<_> = probes
+                    .iter()
+                    .map(|&(shape, hi, ho)| {
+                        scope.spawn(move || segments_cost(&shape, tiling, hi, ho))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("slice-cost worker panicked"))
+                    .collect()
+            });
+            memo.borrow_mut().extend(probes.into_iter().zip(costs));
+        }
         let seg_cost = |shape: &GemmShape, hot_in: u64, hot_out: u64| -> u64 {
             let key = (*shape, hot_in.min(shape.m), hot_out.min(shape.m));
             if let Some(&c) = memo.borrow().get(&key) {

@@ -46,8 +46,8 @@ pub use plan::{Plan, PlanBody, Strip, StripKind};
 pub use residency::{Allocation, Candidate, Residency, ResidencyAllocator, ResidencyPolicy};
 pub use schedule::{for_each_step, step_count, Step};
 pub use shard::{
-    place_stages, shard_gemm, shard_heads, DeviceCompute, LinkTraffic, ShardAxis, ShardSpec,
-    ShardedPlan,
+    natural_axis, place_stages, shard_gemm, shard_heads, DeviceCompute, LinkTraffic, ShardAxis,
+    ShardSpec, ShardedPlan,
 };
 
 /// A stationary scheme. `Tas` resolves to `IsOs` or `WsOs` per shape via

@@ -76,26 +76,32 @@ impl Strip {
     /// (input, weight, output) words this strip moves over the full
     /// contraction (ragged edges resolved) — the single source of truth
     /// for per-strip EMA, shared by [`Plan::ema`] and the shard
-    /// partitioner ([`super::shard`]).
+    /// partitioner ([`super::shard`]).  O(1): a contiguous tile range's
+    /// element count is a difference of clamped prefixes, so pricing a
+    /// plan is O(strips) rather than O(strip widths).
     pub(crate) fn words(&self, shape: &GemmShape, tiling: &Tiling) -> (u64, u64, u64) {
         let n = shape.n;
         match self.kind {
             StripKind::InputStationary => {
                 let mi = tile_extent(shape.m, tiling.tm, self.i0);
-                let kw: u64 = (self.j0..self.j1)
-                    .map(|j| tile_extent(shape.k, tiling.tk, j))
-                    .sum();
+                let kw = extent_sum(shape.k, tiling.tk, self.j0, self.j1);
                 (mi * n, n * kw, mi * kw)
             }
             StripKind::WeightStationary => {
                 let kj = tile_extent(shape.k, tiling.tk, self.j0);
-                let mw: u64 = (self.i0..self.i1)
-                    .map(|i| tile_extent(shape.m, tiling.tm, i))
-                    .sum();
+                let mw = extent_sum(shape.m, tiling.tm, self.i0, self.i1);
                 (mw * n, n * kj, mw * kj)
             }
         }
     }
+}
+
+/// Σ `tile_extent(dim, tile, idx)` for `idx ∈ [lo, hi)`, in O(1): the
+/// elements covered by tiles `[0, x)` are `min(x·tile, dim)`, so a range
+/// sum is a difference of two clamped prefixes (exact on ragged edges).
+pub(crate) fn extent_sum(dim: u64, tile: u64, lo: u64, hi: u64) -> u64 {
+    debug_assert!(lo <= hi);
+    (hi * tile).min(dim) - (lo * tile).min(dim)
 }
 
 /// How a plan's step stream is produced.
@@ -612,6 +618,19 @@ mod tests {
             tiling = tiling.with_mp(rng.gen_in(1, 6) * t);
         }
         tiling
+    }
+
+    #[test]
+    fn extent_sum_matches_looped_tile_extents() {
+        property("extent_sum == Σ tile_extent", 120, |rng: &mut Rng| {
+            let dim = rng.gen_in(1, 500);
+            let tile = rng.gen_in(1, 40);
+            let grid = crate::util::ceil_div(dim, tile);
+            let lo = rng.gen_range(grid + 1);
+            let hi = lo + rng.gen_range(grid + 1 - lo);
+            let looped: u64 = (lo..hi).map(|i| tile_extent(dim, tile, i)).sum();
+            assert_eq!(extent_sum(dim, tile, lo, hi), looped, "{dim}/{tile} [{lo},{hi})");
+        });
     }
 
     #[test]

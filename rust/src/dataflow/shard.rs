@@ -197,6 +197,40 @@ impl ShardedPlan {
         hi - lo
     }
 
+    /// Drive `visit` over every `(device, strip, round range)` triple of
+    /// the partition — the strip-granular routing the closed per-device
+    /// walker folds ([`crate::sim::strip`]).  Rows/Cols devices own whole
+    /// strips (`[0, gn)`); Contraction devices own the round range
+    /// `[bounds[d], bounds[d+1])` of **every** strip, in the same order
+    /// [`ShardedPlan::for_each_step_device`] dispatches the steps.  Fixed
+    /// bodies (reachable only unsharded) yield nothing — callers fall
+    /// back to the step replay.
+    pub fn for_each_strip_range<F: FnMut(usize, &Strip, u64, u64)>(&self, mut visit: F) {
+        let strips = match &self.plan.body {
+            PlanBody::Fixed(_) => return,
+            PlanBody::Strips(s) => s,
+        };
+        let (_, gn, _) = self.plan.tiling.grid(&self.plan.shape);
+        match self.axis {
+            ShardAxis::Rows | ShardAxis::Cols => {
+                for strip in strips {
+                    visit(self.strip_owner(strip), strip, 0, gn);
+                }
+            }
+            ShardAxis::Contraction => {
+                for strip in strips {
+                    for dev in 0..self.devices as usize {
+                        let (lo, hi) = (self.bounds[dev], self.bounds[dev + 1]);
+                        if lo < hi {
+                            visit(dev, strip, lo, hi);
+                        }
+                    }
+                }
+            }
+            ShardAxis::Auto => unreachable!("axis resolved at construction"),
+        }
+    }
+
     /// Drive `visit` over every step with the device that executes it.
     /// Each step of the underlying plan is visited exactly once.
     pub fn for_each_step_device<F: FnMut(usize, super::Step)>(&self, mut visit: F) {
@@ -452,16 +486,23 @@ impl ShardedPlan {
     }
 }
 
+/// The tile-mix default behind [`ShardAxis::Auto`]: IS-dominated covers
+/// shard by output rows, WS-dominated by output columns — the stationary
+/// decision dictates the partition axis.  The overlap-aware resolver
+/// ([`crate::sim::shard::shard_gemm_overlap_aware`]) starts from this
+/// axis and only moves on a strict overlapped-latency win.
+pub fn natural_axis(plan: &Plan) -> ShardAxis {
+    let (is, ws, _) = plan.tile_mix();
+    if ws > is {
+        ShardAxis::Cols
+    } else {
+        ShardAxis::Rows
+    }
+}
+
 fn resolve_axis(axis: ShardAxis, plan: &Plan) -> ShardAxis {
     match axis {
-        ShardAxis::Auto => {
-            let (is, ws, _) = plan.tile_mix();
-            if ws > is {
-                ShardAxis::Cols
-            } else {
-                ShardAxis::Rows
-            }
-        }
+        ShardAxis::Auto => natural_axis(plan),
         a => a,
     }
 }

@@ -846,24 +846,45 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
         &["seq", "is-os", "ws-os", "tas", "layer plan", "R", "tas picks", "reduction vs naive"],
     );
     let mut rows = Vec::new();
-    for seq in seqs {
-        let gemms = model.linear_gemms(seq);
-        let total = |scheme: Scheme| -> u64 {
-            gemms
-                .iter()
-                .map(|g| g.count * ema(scheme, &g.shape, &tiling).total())
-                .sum()
-        };
-        let (is_os, ws_os, tas, naive) = (
-            total(Scheme::IsOs),
-            total(Scheme::WsOs),
-            total(Scheme::Tas),
-            total(Scheme::Naive),
-        );
-        // Layer-level plan at this length: its EMA and the resident-row
-        // count R (`tas decode --json` reports the decode-side R; this is
-        // the prefill-side twin the sweep used to omit).
-        let plan = LayerPlan::plan(model.block_stages(seq), seq, &tiling, sram);
+    // Every sequence length prices four closed-form scheme totals plus a
+    // full layer plan, all independent of each other — score the lengths
+    // on scoped workers and render the joined results in order.
+    let sweep: Vec<(u64, u64, u64, u64, u64, LayerPlan)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = seqs
+            .iter()
+            .map(|&seq| {
+                let (model, tiling) = (&model, &tiling);
+                scope.spawn(move || {
+                    let gemms = model.linear_gemms(seq);
+                    let total = |scheme: Scheme| -> u64 {
+                        gemms
+                            .iter()
+                            .map(|g| g.count * ema(scheme, &g.shape, tiling).total())
+                            .sum()
+                    };
+                    // Layer-level plan at this length: its EMA and the
+                    // resident-row count R (`tas decode --json` reports
+                    // the decode-side R; this is the prefill-side twin
+                    // the sweep used to omit).
+                    let plan =
+                        LayerPlan::plan(model.block_stages(seq), seq, tiling, sram);
+                    (
+                        seq,
+                        total(Scheme::IsOs),
+                        total(Scheme::WsOs),
+                        total(Scheme::Tas),
+                        total(Scheme::Naive),
+                        plan,
+                    )
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("sweep worker panicked"))
+            .collect()
+    });
+    for (seq, is_os, ws_os, tas, naive, plan) in sweep {
         let resident_rows = plan.resident_rows();
         // which way did the rule go for the hidden-sized projections?
         let pick = if seq < model.hidden { "IS-OS" } else { "WS-OS" };

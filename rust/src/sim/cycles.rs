@@ -11,7 +11,7 @@ use crate::arch::PeArray;
 use crate::config::AcceleratorConfig;
 use crate::dataflow::{Plan, Scheme};
 use crate::gemm::{GemmShape, Tiling};
-use crate::sim::ema::{simulate_ema_plan, SimEma};
+use crate::sim::ema::SimEma;
 
 /// Cycle estimate for one GEMM under one scheme.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -62,9 +62,13 @@ pub fn estimate_cycles_tiled(
 }
 
 /// Cycle estimate for any [`Plan`] (fixed scheme or per-tile TAS).
+///
+/// Strip bodies are priced by the closed-form walker
+/// ([`crate::sim::strip`]) in O(strips); fixed bodies still replay.  The
+/// result is bit-identical to the replayed estimate either way — the
+/// strip property suite pins it.
 pub fn estimate_cycles_plan(plan: &Plan, cfg: &AcceleratorConfig) -> CycleEstimate {
-    let mut dram = cfg.dram();
-    let sim = simulate_ema_plan(plan, &mut dram);
+    let sim = crate::sim::strip::plan_sim_ema(plan, cfg);
     cycles_from_replay(&sim, &plan.shape, cfg)
 }
 

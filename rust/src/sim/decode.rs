@@ -4,16 +4,17 @@
 //!
 //! The [`crate::dataflow::DecodePlan`] is a sequence of stage plans whose
 //! instances repeat `count` times with identical step streams, so the
-//! replay walks each distinct [`Plan`] once through an [`EmaSink`] and a
-//! [`PipelineSink`] and scales the observed statistics by the instance
-//! count — words, MACs, steps, switches and pipeline fills are all
-//! exactly linear in the count (one fill per plan segment instance — the
-//! convention documented in [`crate::sim::pipeline`] and asserted here),
-//! and the cycle/energy closed forms derive from those totals the same
-//! way [`super::replay::fused_cost`] derives them for one GEMM.  Every
-//! EMA word is therefore *replayed*, never assumed: the equality between
-//! this pass and the planner's closed forms is pinned by
-//! `rust/tests/decode_invariants.rs`.
+//! pass prices each distinct [`Plan`] once through the closed-form strip
+//! walker ([`crate::sim::strip::plan_ema_pipeline`], replay-equal by the
+//! strip property suite; fixed bodies still replay) and scales the
+//! observed statistics by the instance count — words, MACs, steps,
+//! switches and pipeline fills are all exactly linear in the count (one
+//! fill per plan segment instance — the convention documented in
+//! [`crate::sim::pipeline`] and asserted here), and the cycle/energy
+//! closed forms derive from those totals the same way
+//! [`super::replay::fused_cost`] derives them for one GEMM.  The
+//! equality between this pass and the planner's closed forms is pinned
+//! by `rust/tests/decode_invariants.rs`.
 //!
 //! **Link overlap.**  A head-sharded decode
 //! ([`crate::dataflow::ShardedDecodePlan`]) all-reduces every layer's
@@ -36,8 +37,7 @@ use crate::dataflow::{DecodePlan, Plan, ShardedDecodePlan};
 use crate::energy::{EnergyCost, EnergyModel};
 use crate::sim::cycles::{cycles_from_parts, CycleEstimate};
 use crate::sim::ema::SimEma;
-use crate::sim::pipeline::{LinkSchedule, PipelineSink, PipelineStats};
-use crate::sim::replay::{replay, CostSink, EmaSink};
+use crate::sim::pipeline::{LinkSchedule, PipelineStats};
 
 /// Every cost model's verdict on one decode trajectory.
 #[derive(Clone, Debug)]
@@ -93,16 +93,11 @@ struct Acc {
 }
 
 impl Acc {
-    /// Replay `plan` once, scale everything by `count`, and return the
-    /// table2 words this plan group contributed.
+    /// Price `plan` once (closed-form strip walk; fixed bodies replay),
+    /// scale everything by `count`, and return the table2 words this plan
+    /// group contributed.
     fn add(&mut self, plan: &Plan, count: u64, cfg: &AcceleratorConfig) -> u64 {
-        let mut ema = EmaSink::new(cfg.dram());
-        let mut pipe = PipelineSink::new(cfg);
-        {
-            let sinks: &mut [&mut dyn CostSink] = &mut [&mut ema, &mut pipe];
-            replay(plan, sinks);
-        }
-        let sim = ema.finish();
+        let (sim, p) = crate::sim::strip::plan_ema_pipeline(plan, cfg);
         self.stats.input_read_words += count * sim.stats.input_read_words;
         self.stats.weight_read_words += count * sim.stats.weight_read_words;
         self.stats.psum_read_words += count * sim.stats.psum_read_words;
@@ -111,7 +106,6 @@ impl Acc {
         self.stats.direction_switches += count * sim.stats.direction_switches;
         self.steps += count * sim.steps;
         self.macs += count * plan.shape.macs();
-        let p = pipe.finish();
         // One pipeline fill per plan segment instance (count fills): the
         // documented convention — total stays fills·fill + compute + stall.
         debug_assert_eq!(p.fills, 1);

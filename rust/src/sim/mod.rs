@@ -18,10 +18,17 @@
 //!   [`replay::CostSink`] over the fused pass, plus the third
 //!   ([`pipeline::LinkStream`]) stream: inter-chip link rounds drained
 //!   behind the same compute windows,
-//! * [`shard`] — per-device cost replay for multi-accelerator shards
-//!   ([`crate::dataflow::shard`]), link traffic costed by
+//! * [`shard`] — per-device cost model for multi-accelerator shards
+//!   ([`crate::dataflow::shard`]): closed-form per-device walkers with
+//!   the step replay retained as the oracle
+//!   ([`shard::sharded_replayed_cost`]), link traffic costed by
 //!   [`crate::arch::Interconnect`] and reported both serialized and
-//!   overlapped ([`shard::ShardLatency`]),
+//!   overlapped ([`shard::ShardLatency`]); the cheap closed form funds
+//!   the overlap-aware `Auto` axis ([`shard::shard_gemm_overlap_aware`]),
+//! * [`strip`] — closed-form strip costing: every planner-facing sink
+//!   (EMA, cycles, energy, pipeline, DRAM words/transactions/switches)
+//!   priced in O(strips) via compressed-run folding, with the replay
+//!   retained as the property-test oracle,
 //! * [`decode`] — trajectory-level fused cost for decode plans
 //!   ([`crate::dataflow::DecodePlan`]): prefill plus every autoregressive
 //!   step priced through the same sinks in one pass; head-sharded
@@ -40,6 +47,7 @@ pub mod pipeline;
 pub mod replay;
 pub mod roofline;
 pub mod shard;
+pub mod strip;
 
 pub use cycles::{estimate_cycles, estimate_cycles_plan, CycleEstimate};
 pub use decode::{
@@ -57,6 +65,7 @@ pub use pipeline::{
     PipelineStats,
 };
 pub use shard::{
-    shard_link_rounds, sharded_closed_latency, sharded_fused_cost, DeviceCost, ShardCost,
-    ShardLatency,
+    shard_gemm_overlap_aware, shard_link_rounds, sharded_closed_latency, sharded_fused_cost,
+    sharded_replayed_cost, DeviceCost, ShardCost, ShardLatency,
 };
+pub use strip::{plan_cost, plan_ema_pipeline, plan_sim_ema, replayed_cost, StripCost, StripTiming};

@@ -1,11 +1,20 @@
-//! Per-device cost replay for sharded plans.
+//! Per-device cost model for sharded plans — closed-form by default,
+//! replay-backed as the oracle.
 //!
-//! One walk of the sharded step stream drives a [`CostSink`] per device
-//! (the same sink machinery as [`super::replay`]), so every device gets
-//! the full EMA → cycles → energy derivation over exactly the steps it
-//! executes; inter-chip traffic comes from the partition's closed form
-//! ([`ShardedPlan::link_traffic`]) and is costed by the
-//! [`Interconnect`] primitives.
+//! Every device of a [`ShardedPlan`] executes a contiguous slice of the
+//! strip cover (whole strips on the Rows/Cols axes, a contraction round
+//! range of every strip on the Contraction axis —
+//! [`ShardedPlan::for_each_strip_range`]), so one compressed-run walker
+//! ([`crate::sim::strip::StripWalker`]) per device folds exactly the
+//! steps that device executes in O(strips) — the same EMA → cycles →
+//! energy → pipeline derivation the step replay produces, word-for-word
+//! and cycle-for-cycle.  [`sharded_replayed_cost`] drives the original
+//! per-device [`CostSink`]s step by step and is retained as the
+//! property-test oracle ([`sharded_fused_cost`] equals it exactly;
+//! pinned below and in `rust/tests/strip_closed_form.rs`).  Inter-chip
+//! traffic comes from the partition's closed form
+//! ([`ShardedPlan::link_traffic`]) and is costed by the [`Interconnect`]
+//! primitives either way.
 //!
 //! **Latency** is a first-class output: the collective transfers (ring
 //! all-gather of remote operands, tree reduce of contraction psums) are
@@ -17,29 +26,33 @@
 //! `overlapped` — and the bound
 //! `max(compute, link) ≤ overlapped ≤ serialized` holds by construction
 //! (property-tested across the zoo in `rust/tests/overlap_invariants.rs`).
-//! [`sharded_closed_latency`] computes the same numbers from the strip
-//! closed forms ([`ShardedPlan::device_compute`]) without replaying, so
-//! zoo-scale checks stay cheap; [`sharded_fused_cost`] additionally runs
-//! a per-device [`PipelineSink`] + [`LinkStream`] for step-granular
-//! stall attribution (which device's DMA stalls, and how much link time
-//! its MAC bursts hide).
+//! The link time a device hides is the greedy [`LinkStream`] drain's
+//! `min(link total, Σ MAC windows)` (pinned in [`super::pipeline`]),
+//! which the closed path charges directly.
+//!
+//! The cheap closed form also pays for a better `Auto` axis:
+//! [`shard_gemm_overlap_aware`] prices all three partition axes by
+//! overlapped latency and keeps the tile-mix natural axis unless another
+//! axis strictly wins — at 4+ devices a contraction split's
+//! `ceil(log2 D)` tree-reduce rounds hide behind compute where the
+//! natural axis's `(D-1)` all-gather rounds cannot.
 //!
 //! Invariants (property-tested in `rust/tests/shard_conservation.rs`):
 //! summed per-device EMA equals the plan's EMA word-for-word, and link
 //! traffic is additive on top — a sharded plan never undercuts its
 //! unsharded cost.
 
-use crate::arch::dram::DramStats;
 use crate::arch::Interconnect;
 use crate::config::AcceleratorConfig;
-use crate::dataflow::shard::{LinkTraffic, ShardAxis, ShardedPlan};
+use crate::dataflow::shard::{shard_gemm, LinkTraffic, ShardAxis, ShardSpec, ShardedPlan};
 use crate::dataflow::PlanBody;
 use crate::energy::{EnergyCost, EnergyModel};
-use crate::gemm::tile_extent;
+use crate::gemm::{tile_extent, GemmShape, Tiling};
 use crate::sim::cycles::{cycles_from_parts, CycleEstimate};
 use crate::sim::ema::SimEma;
 use crate::sim::pipeline::{LinkStream, PipelineSink, PipelineStats};
 use crate::sim::replay::{CostSink, EmaSink, StepCtx};
+use crate::sim::strip::{StripSummary, StripWalker};
 
 /// One device's share of a sharded plan, fully costed.
 #[derive(Clone, Debug)]
@@ -220,52 +233,47 @@ fn link_rounds_from(link: &LinkTraffic, sp: &ShardedPlan, icx: &Interconnect) ->
     rounds
 }
 
+/// Fold one compressed-run walker per device over the strip ranges the
+/// partition routes to it ([`ShardedPlan::for_each_strip_range`]) — each
+/// device's step subsequence is contiguous in schedule order, so per-
+/// device walker state evolves exactly like the replayed per-device
+/// sinks.  `None` for a fixed-scheme body (reachable only unsharded):
+/// callers fall back to the step replay.
+fn closed_device_summaries(
+    sp: &ShardedPlan,
+    cfg: &AcceleratorConfig,
+) -> Option<Vec<StripSummary>> {
+    if !matches!(sp.plan.body, PlanBody::Strips(_)) {
+        return None;
+    }
+    let mut walkers: Vec<StripWalker> =
+        (0..sp.devices).map(|_| StripWalker::new(cfg)).collect();
+    sp.for_each_strip_range(|dev, strip, r_lo, r_hi| {
+        walkers[dev].fold_strip(&sp.plan, strip, r_lo, r_hi);
+    });
+    Some(walkers.into_iter().map(StripWalker::finish).collect())
+}
+
 /// Closed-form [`ShardLatency`]: per-device cycle estimates from the
-/// strip closed forms ([`ShardedPlan::device_compute`] +
-/// [`ShardedPlan::device_emas`]) — no step replay, so the whole zoo is
-/// checkable in milliseconds.  Equals the replayed
-/// [`ShardCost::latency`] exactly (property-pinned): per-device words,
-/// steps and MACs are closed forms already, and for the streamed strip
-/// covers [`shard_gemm`] produces, the direction-switch count is
-/// `2·stores − 1` — every store step writes between operand reads, and
-/// strips chain read-first, so each store contributes a read→write and a
-/// write→read switch except the last.  Plans with resident streams or a
-/// fixed-scheme body (both only reachable unsharded) fall back to the
-/// replayed per-device pass.
-///
-/// [`shard_gemm`]: crate::dataflow::shard::shard_gemm
+/// compressed-run walker — no step replay, so the whole zoo (and the
+/// overlap-aware axis search) is checkable in milliseconds.  Equals the
+/// replayed latency exactly on every strip body, resident streams
+/// included (property-pinned below); the rare fixed-scheme body
+/// (reachable only unsharded) falls back to the replayed per-device
+/// pass.
 pub fn sharded_closed_latency(
     sp: &ShardedPlan,
     cfg: &AcceleratorConfig,
     icx: &Interconnect,
 ) -> ShardLatency {
     let link_cycles: u64 = shard_link_rounds(sp, icx).iter().sum();
-    let streamed = !sp.plan.input_residency.is_free()
-        && !sp.plan.weight_residency.is_free()
-        && !sp.plan.output_residency.is_free();
-    let per_device: Vec<CycleEstimate> =
-        if streamed && matches!(sp.plan.body, PlanBody::Strips(_)) {
-            sp.device_compute()
-                .iter()
-                .zip(sp.device_emas())
-                .map(|(dc, e)| {
-                    let switches = if dc.stores > 0 { 2 * dc.stores - 1 } else { 0 };
-                    let sim = SimEma {
-                        stats: DramStats {
-                            input_read_words: e.input,
-                            weight_read_words: e.weight,
-                            output_write_words: e.output,
-                            direction_switches: switches,
-                            ..Default::default()
-                        },
-                        steps: dc.steps,
-                    };
-                    cycles_from_parts(dc.macs, &sim, cfg)
-                })
-                .collect()
-        } else {
-            replayed_device_estimates(sp, cfg)
-        };
+    let per_device: Vec<CycleEstimate> = match closed_device_summaries(sp, cfg) {
+        Some(summaries) => summaries
+            .iter()
+            .map(|s| cycles_from_parts(s.macs, &s.ema, cfg))
+            .collect(),
+        None => replayed_device_estimates(sp, cfg),
+    };
     ShardLatency::from_parts(&per_device, link_cycles)
 }
 
@@ -295,10 +303,56 @@ fn replayed_device_estimates(sp: &ShardedPlan, cfg: &AcceleratorConfig) -> Vec<C
         .collect()
 }
 
-/// Replay a sharded plan once, dispatching each step to its device's
-/// [`EmaSink`] + [`PipelineSink`] + [`LinkStream`], and assemble the
-/// per-device and link cost report.
+/// Price a sharded plan through every per-device sink in O(strips):
+/// one compressed-run walker per device, link traffic from the
+/// partition's closed form.  Equals [`sharded_replayed_cost`] exactly on
+/// every strip body (the per-device `link_hidden_cycles` is the greedy
+/// drain's `min(link, Σ MAC windows)` — pinned in [`super::pipeline`]);
+/// fixed bodies fall back to the replay, so the report never drifts from
+/// the oracle on any plan.
 pub fn sharded_fused_cost(
+    sp: &ShardedPlan,
+    cfg: &AcceleratorConfig,
+    energy: &EnergyModel,
+    icx: &Interconnect,
+) -> ShardCost {
+    let Some(summaries) = closed_device_summaries(sp, cfg) else {
+        return sharded_replayed_cost(sp, cfg, energy, icx);
+    };
+    let link = sp.link_traffic();
+    let rounds = link_rounds_from(&link, sp, icx);
+    let link_cycles: u64 = rounds.iter().sum();
+    let link_energy_pj = icx.transfer_energy_pj(link.total());
+    let per_device: Vec<DeviceCost> = summaries
+        .into_iter()
+        .enumerate()
+        .map(|(dev, s)| {
+            let cycles = cycles_from_parts(s.macs, &s.ema, cfg);
+            let (i, w, o) = s.ema.table2();
+            DeviceCost {
+                device: dev,
+                cycles,
+                energy: energy.traffic_energy(s.macs, i + w + o),
+                macs: s.macs,
+                link_hidden_cycles: link_cycles.min(s.pipeline.compute_cycles),
+                pipeline: s.pipeline,
+                link_in_words: link.per_device_in[dev],
+                link_out_words: link.per_device_out[dev],
+                ema: s.ema,
+            }
+        })
+        .collect();
+    let estimates: Vec<CycleEstimate> = per_device.iter().map(|dc| dc.cycles).collect();
+    let latency = ShardLatency::from_parts(&estimates, link_cycles);
+    ShardCost { per_device, link, link_energy_pj, latency }
+}
+
+/// The replay-backed oracle: walk the sharded step stream once,
+/// dispatching each step to its device's [`EmaSink`] + [`PipelineSink`] +
+/// [`LinkStream`], and assemble the same report [`sharded_fused_cost`]
+/// derives closed-form.  Public so the property suites compare against
+/// exactly this path.
+pub fn sharded_replayed_cost(
     sp: &ShardedPlan,
     cfg: &AcceleratorConfig,
     energy: &EnergyModel,
@@ -364,6 +418,46 @@ pub fn sharded_fused_cost(
     let estimates: Vec<CycleEstimate> = per_device.iter().map(|dc| dc.cycles).collect();
     let latency = ShardLatency::from_parts(&estimates, link_cycles);
     ShardCost { per_device, link, link_energy_pj, latency }
+}
+
+/// Overlap-aware [`ShardAxis::Auto`]: price every candidate partition by
+/// its **overlapped** latency ([`sharded_closed_latency`], O(strips) per
+/// candidate) and keep the tile-mix natural axis
+/// ([`crate::dataflow::shard::natural_axis`]) unless another axis
+/// strictly wins.  Candidates are tried natural-first, then the other
+/// output axis, then the contraction split — so ties preserve the
+/// stationary-decision default, and the contraction split only takes
+/// over where its `ceil(log2 D)` tree-reduce rounds genuinely hide
+/// behind compute that the natural axis's `(D-1)` all-gather rounds
+/// drown (the d ≥ 4 flip pinned in the tests below).  Explicit axes and
+/// single devices pass straight through to [`shard_gemm`].
+pub fn shard_gemm_overlap_aware(
+    shape: &GemmShape,
+    tiling: &Tiling,
+    spec: ShardSpec,
+    cfg: &AcceleratorConfig,
+    icx: &Interconnect,
+) -> ShardedPlan {
+    let rww = icx.remote_word_weight(cfg.dram_bandwidth);
+    if !matches!(spec.axis, ShardAxis::Auto) || spec.devices <= 1 {
+        return shard_gemm(shape, tiling, spec, rww);
+    }
+    // shard_gemm resolves Auto to the tile-mix natural axis.
+    let mut best = shard_gemm(shape, tiling, spec, rww);
+    let mut best_cycles = sharded_closed_latency(&best, cfg, icx).overlapped_cycles;
+    let other = match best.axis {
+        ShardAxis::Rows => ShardAxis::Cols,
+        _ => ShardAxis::Rows,
+    };
+    for axis in [other, ShardAxis::Contraction] {
+        let cand = shard_gemm(shape, tiling, ShardSpec { axis, ..spec }, rww);
+        let cycles = sharded_closed_latency(&cand, cfg, icx).overlapped_cycles;
+        if cycles < best_cycles {
+            best = cand;
+            best_cycles = cycles;
+        }
+    }
+    best
 }
 
 /// Convenience: is the partition a psum-reducing contraction split?
@@ -512,11 +606,91 @@ mod tests {
                     let sp = shard_gemm(&shape, &tiling, ShardSpec::new(d, axis), 0.0);
                     let closed = sharded_closed_latency(&sp, &cfg, &icx);
                     let replayed =
-                        sharded_fused_cost(&sp, &cfg, &EnergyModel::default(), &icx).latency;
+                        sharded_replayed_cost(&sp, &cfg, &EnergyModel::default(), &icx).latency;
                     assert_eq!(closed, replayed, "{shape:?} {axis:?} d={d}");
                 }
             }
         }
+    }
+
+    #[test]
+    fn closed_shard_cost_matches_the_replayed_oracle() {
+        // The walker-backed sharded_fused_cost must reproduce the step
+        // replay field for field on every axis — ragged shapes, idle
+        // devices and contraction round routing included.
+        let cfg = AcceleratorConfig::default();
+        let em = EnergyModel::default();
+        let icx = Interconnect::default();
+        for shape in [
+            GemmShape::new(130, 70, 90),
+            GemmShape::new(64, 768, 768),
+            GemmShape::new(512, 96, 256),
+            GemmShape::new(32, 64, 64),
+        ] {
+            for axis in [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Contraction] {
+                for d in [1u64, 2, 3, 4, 8] {
+                    let tiling = Tiling::square(16);
+                    let sp = shard_gemm(&shape, &tiling, ShardSpec::new(d, axis), 0.0);
+                    let closed = sharded_fused_cost(&sp, &cfg, &em, &icx);
+                    let oracle = sharded_replayed_cost(&sp, &cfg, &em, &icx);
+                    let tag = format!("{shape:?} {axis:?} d={d}");
+                    assert_eq!(closed.latency, oracle.latency, "{tag}");
+                    assert_eq!(closed.link, oracle.link, "{tag}");
+                    assert_eq!(closed.per_device.len(), oracle.per_device.len(), "{tag}");
+                    for (c, o) in closed.per_device.iter().zip(&oracle.per_device) {
+                        assert_eq!(c.ema, o.ema, "{tag} dev={}", c.device);
+                        assert_eq!(c.macs, o.macs, "{tag} dev={}", c.device);
+                        assert_eq!(c.cycles, o.cycles, "{tag} dev={}", c.device);
+                        assert_eq!(c.pipeline, o.pipeline, "{tag} dev={}", c.device);
+                        assert_eq!(
+                            c.link_hidden_cycles, o.link_hidden_cycles,
+                            "{tag} dev={}",
+                            c.device
+                        );
+                        assert!((c.energy.total_pj() - o.energy.total_pj()).abs() < 1e-6);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_aware_auto_flips_to_contraction_at_scale() {
+        // IS-friendly GEMM (M < K): the tile-mix natural axis is Rows,
+        // whose (D-1) weight all-gather rounds swamp the per-device
+        // compute at 4+ devices; the contraction split's ceil(log2 D)
+        // tree-reduce rounds hide entirely.  At 2 devices the single
+        // all-gather round still hides, so the natural axis survives.
+        let shape = GemmShape::new(64, 768, 768);
+        let tiling = Tiling::square(16);
+        let cfg = AcceleratorConfig::default();
+        let icx = Interconnect::default();
+        let resolve = |d: u64| {
+            let spec = ShardSpec::new(d, ShardAxis::Auto);
+            shard_gemm_overlap_aware(&shape, &tiling, spec, &cfg, &icx)
+        };
+        assert_eq!(resolve(2).axis, ShardAxis::Rows, "2 devices keep the natural axis");
+        for d in [4u64, 8] {
+            let sp = resolve(d);
+            assert_eq!(sp.axis, ShardAxis::Contraction, "d={d}");
+            // ...and the flip is a genuine overlapped-latency win over the
+            // natural axis.
+            let natural = shard_gemm(&shape, &tiling, ShardSpec::new(d, ShardAxis::Auto), 0.0);
+            assert!(
+                sharded_closed_latency(&sp, &cfg, &icx).overlapped_cycles
+                    < sharded_closed_latency(&natural, &cfg, &icx).overlapped_cycles,
+                "d={d}"
+            );
+        }
+        // Explicit axes pass through untouched.
+        let pinned = shard_gemm_overlap_aware(
+            &shape,
+            &tiling,
+            ShardSpec::new(4, ShardAxis::Rows),
+            &cfg,
+            &icx,
+        );
+        assert_eq!(pinned.axis, ShardAxis::Rows);
     }
 
     #[test]

@@ -1,0 +1,619 @@
+//! Closed-form strip costing: every cost sink priced in O(strips), not
+//! O(tiles).
+//!
+//! A strip body's step stream is extremely regular: each strip runs `gn`
+//! contraction **rounds**, every round visits the strip's tiles in the
+//! same order with the same load flags, and only the first/last position
+//! of a round (ragged edge) and the last round (ragged `nr`, stores) can
+//! differ.  So each round folds into at most three *runs* of identical
+//! steps, and a run of identical steps reaches a fixed point of the
+//! replay state after one step — the walker below prices a run with two
+//! state transitions no matter how many steps it contains.
+//!
+//! The replay state every sink actually carries across steps is tiny:
+//! the DRAM bus direction (for §II-d turnaround switches) and the
+//! previous step's compute window (for the DMA ‖ PE stall attribution of
+//! [`super::pipeline`]).  Both are structure-determined after one step of
+//! a run, which is what makes the fold exact rather than approximate:
+//! [`plan_cost`] reproduces the fused replay ([`super::replay::fused_cost`])
+//! **word-for-word and cycle-for-cycle** on strip bodies — pinned by the
+//! property suite in `rust/tests/strip_closed_form.rs` and the replica
+//! fuzzer, with `sim::replay` retained as the oracle.
+//!
+//! Fixed-scheme bodies (the planner's spilling-scheme fallback) have no
+//! strip structure; [`plan_cost`] replays those through the original
+//! sinks, so the closed forms never drift from the oracle on any body.
+//!
+//! One honest asymmetry: the bank/row-buffer cycle machine of
+//! [`crate::arch::dram_timing`] walks real addresses and is *not* folded
+//! — no planner consumes its cycle output, so [`StripTiming`] carries the
+//! closed half (words, transactions, direction switches — all exact) and
+//! leaves row-hit cycle counts to the replay-only reports.
+
+use crate::arch::dram::{DramDir, DramStats};
+use crate::arch::dram_timing::DramTimingConfig;
+use crate::arch::PeArray;
+use crate::config::AcceleratorConfig;
+use crate::dataflow::{Plan, PlanBody, Strip, StripKind};
+use crate::energy::{EnergyCost, EnergyModel};
+use crate::gemm::tile_extent;
+use crate::sim::cycles::{cycles_from_parts, cycles_from_replay, CycleEstimate};
+use crate::sim::ema::SimEma;
+use crate::sim::pipeline::{PipelineSink, PipelineStats};
+use crate::sim::replay::{replay, CostSink, EmaSink, TimingSink};
+
+/// The closed half of the transaction-level DRAM accounting: exact word,
+/// transaction and direction-switch counts.  (Row-buffer hit/miss cycles
+/// need the address-walking replay and stay with
+/// [`crate::sim::simulate_dram_timing_plan`].)
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StripTiming {
+    pub words: u64,
+    pub transactions: u64,
+    pub dir_switches: u64,
+}
+
+/// Every planner-facing cost sink for one plan, priced closed-form.
+#[derive(Clone, Debug)]
+pub struct StripCost {
+    pub ema: SimEma,
+    pub cycles: CycleEstimate,
+    pub energy: EnergyCost,
+    pub timing: StripTiming,
+    /// Step-level DMA ‖ PE stall attribution, folded per run.
+    pub pipeline: PipelineStats,
+}
+
+/// One step's gated DRAM transfers, in replay order (input read, weight
+/// read, output write).  Residency gating is already applied: a resident
+/// stream's words are zero, exactly like the sinks' `is_free()` guards
+/// (tile extents are ≥ 1, so "flag set and not resident" ⇔ "words > 0").
+#[derive(Clone, Copy, Debug, Default)]
+struct StepXfer {
+    input: u64,
+    weight: u64,
+    write: u64,
+    macs: u64,
+    /// DRAM transactions a DMA engine issues for this step: one per
+    /// matrix row touched (`mi` for input/output, `nr` for weight), the
+    /// granularity of [`crate::sim::dram_trace::charge_timing_step`].
+    transactions: u64,
+}
+
+impl StepXfer {
+    fn new(input: u64, weight: u64, write: u64, macs: u64, mi: u64, nr: u64) -> StepXfer {
+        let transactions = (if input > 0 { mi } else { 0 })
+            + (if weight > 0 { nr } else { 0 })
+            + (if write > 0 { mi } else { 0 });
+        StepXfer { input, weight, write, macs, transactions }
+    }
+}
+
+/// The replay state that survives across steps — everything else the
+/// sinks accumulate is additive.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct WalkState {
+    last_dir: Option<DramDir>,
+    prev_compute: u64,
+}
+
+/// Additive accumulators; a snapshot diff of this struct is the delta of
+/// one folded round, which mid-round multiplication scales.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct Totals {
+    input_words: u64,
+    weight_words: u64,
+    output_words: u64,
+    switches: u64,
+    steps: u64,
+    macs: u64,
+    transactions: u64,
+    compute_cycles: u64,
+    stall_cycles: u64,
+    stalled_steps: u64,
+}
+
+impl Totals {
+    fn diff(&self, before: &Totals) -> Totals {
+        Totals {
+            input_words: self.input_words - before.input_words,
+            weight_words: self.weight_words - before.weight_words,
+            output_words: self.output_words - before.output_words,
+            switches: self.switches - before.switches,
+            steps: self.steps - before.steps,
+            macs: self.macs - before.macs,
+            transactions: self.transactions - before.transactions,
+            compute_cycles: self.compute_cycles - before.compute_cycles,
+            stall_cycles: self.stall_cycles - before.stall_cycles,
+            stalled_steps: self.stalled_steps - before.stalled_steps,
+        }
+    }
+
+    fn add_scaled(&mut self, d: &Totals, times: u64) {
+        self.input_words += d.input_words * times;
+        self.weight_words += d.weight_words * times;
+        self.output_words += d.output_words * times;
+        self.switches += d.switches * times;
+        self.steps += d.steps * times;
+        self.macs += d.macs * times;
+        self.transactions += d.transactions * times;
+        self.compute_cycles += d.compute_cycles * times;
+        self.stall_cycles += d.stall_cycles * times;
+        self.stalled_steps += d.stalled_steps * times;
+    }
+}
+
+/// What one closed walk yields: the EMA result, the pipeline stall
+/// breakdown (one fill, like one replayed segment), the transaction count
+/// and the MAC partial sum (a device slice's MACs are partial —
+/// [`crate::sim::shard`]).
+pub(crate) struct StripSummary {
+    pub(crate) ema: SimEma,
+    pub(crate) pipeline: PipelineStats,
+    pub(crate) transactions: u64,
+    pub(crate) macs: u64,
+}
+
+/// The compressed-run walker.  Feed it whole strips ([`fold_strip`] with
+/// the full round range) or a device's round slice of a strip (the
+/// contraction-sharded case routes rounds, not strips), in schedule
+/// order; state carries across calls exactly as the replay's sinks carry
+/// it across steps.
+///
+/// [`fold_strip`]: StripWalker::fold_strip
+pub(crate) struct StripWalker {
+    pe: PeArray,
+    bw: u64,
+    turn: u64,
+    state: WalkState,
+    totals: Totals,
+}
+
+impl StripWalker {
+    pub(crate) fn new(cfg: &AcceleratorConfig) -> StripWalker {
+        let pe = cfg.pe_array();
+        StripWalker {
+            state: WalkState { last_dir: None, prev_compute: pe.fill_latency },
+            pe,
+            bw: cfg.dram_bandwidth,
+            turn: cfg.dram_turnaround,
+            totals: Totals::default(),
+        }
+    }
+
+    /// One step's (switches, stall, compute, next state), the transition
+    /// every sink applies — [`crate::arch::Dram::record`]'s direction
+    /// chain and [`PipelineSink`]'s overlap rule in closed form.
+    fn step_delta(&self, state: WalkState, x: &StepXfer) -> (u64, u64, u64, WalkState) {
+        let mut last = state.last_dir;
+        let mut switches = 0u64;
+        for (words, d) in [
+            (x.input, DramDir::Read),
+            (x.weight, DramDir::Read),
+            (x.write, DramDir::Write),
+        ] {
+            if words > 0 {
+                if last.is_some() && last != Some(d) {
+                    switches += 1;
+                }
+                last = Some(d);
+            }
+        }
+        let xfer = (x.input + x.weight + x.write).div_ceil(self.bw) + switches * self.turn;
+        let stall = xfer.saturating_sub(state.prev_compute);
+        let compute = self.pe.tile_cycles(x.macs) - self.pe.fill_latency;
+        (
+            switches,
+            stall,
+            compute,
+            WalkState { last_dir: last, prev_compute: compute.max(1) },
+        )
+    }
+
+    fn apply(&mut self, switches: u64, stall: u64, compute: u64, times: u64) {
+        self.totals.switches += switches * times;
+        self.totals.compute_cycles += compute * times;
+        if stall > 0 {
+            self.totals.stall_cycles += stall * times;
+            self.totals.stalled_steps += times;
+        }
+    }
+
+    /// Fold `count` identical steps.  Step 2 starts from step 1's exit
+    /// state and — because the steps are identical — exits in that same
+    /// state, so steps 2..count all contribute step 2's delta.
+    fn fold_run(&mut self, x: &StepXfer, count: u64) {
+        if count == 0 {
+            return;
+        }
+        self.totals.input_words += x.input * count;
+        self.totals.weight_words += x.weight * count;
+        self.totals.output_words += x.write * count;
+        self.totals.macs += x.macs * count;
+        self.totals.transactions += x.transactions * count;
+        self.totals.steps += count;
+        let (sw, stall, compute, next) = self.step_delta(self.state, x);
+        self.apply(sw, stall, compute, 1);
+        self.state = next;
+        if count > 1 {
+            let (sw2, stall2, compute2, next2) = self.step_delta(self.state, x);
+            debug_assert_eq!(next2, self.state, "identical-step run must be a fixed point");
+            self.apply(sw2, stall2, compute2, count - 1);
+            self.state = next2;
+        }
+    }
+
+    /// One contraction round of a strip: ≤ 3 runs.  The first position
+    /// carries the stationary load (IS: the input tile; WS: the weight
+    /// tile); interior positions are full tiles by construction (only the
+    /// last grid row/column is ragged); the last position re-resolves its
+    /// ragged extent.  `store` marks the final round (`r + 1 == gn`).
+    fn fold_round(&mut self, plan: &Plan, strip: &Strip, nr: u64, store: bool) {
+        let (shape, t) = (plan.shape, plan.tiling);
+        let gi = u64::from(!plan.input_residency.is_free());
+        let gw = u64::from(!plan.weight_residency.is_free());
+        let go = u64::from(!plan.output_residency.is_free());
+        let out = |mi: u64, kj: u64| if store { go * mi * kj } else { 0 };
+        match strip.kind {
+            StripKind::InputStationary => {
+                let mi = tile_extent(shape.m, t.tm, strip.i0);
+                let w = strip.j1 - strip.j0;
+                let kj0 = tile_extent(shape.k, t.tk, strip.j0);
+                let first =
+                    StepXfer::new(gi * mi * nr, gw * nr * kj0, out(mi, kj0), mi * nr * kj0, mi, nr);
+                self.fold_run(&first, 1);
+                if w >= 2 {
+                    let kj1 = tile_extent(shape.k, t.tk, strip.j1 - 1);
+                    self.fold_run(
+                        &StepXfer::new(0, gw * nr * t.tk, out(mi, t.tk), mi * nr * t.tk, mi, nr),
+                        w - 2,
+                    );
+                    self.fold_run(
+                        &StepXfer::new(0, gw * nr * kj1, out(mi, kj1), mi * nr * kj1, mi, nr),
+                        1,
+                    );
+                }
+            }
+            StripKind::WeightStationary => {
+                let kj = tile_extent(shape.k, t.tk, strip.j0);
+                let h = strip.i1 - strip.i0;
+                let mi0 = tile_extent(shape.m, t.tm, strip.i0);
+                let first =
+                    StepXfer::new(gi * mi0 * nr, gw * nr * kj, out(mi0, kj), mi0 * nr * kj, mi0, nr);
+                self.fold_run(&first, 1);
+                if h >= 2 {
+                    let mi1 = tile_extent(shape.m, t.tm, strip.i1 - 1);
+                    self.fold_run(
+                        &StepXfer::new(gi * t.tm * nr, 0, out(t.tm, kj), t.tm * nr * kj, t.tm, nr),
+                        h - 2,
+                    );
+                    self.fold_run(
+                        &StepXfer::new(gi * mi1 * nr, 0, out(mi1, kj), mi1 * nr * kj, mi1, nr),
+                        1,
+                    );
+                }
+            }
+        }
+    }
+
+    /// Fold contraction rounds `[r_lo, r_hi)` of one strip.  Whole strips
+    /// use `(0, gn)`; a contraction-sharded device folds only its round
+    /// range.  All rounds before `gn - 1` are identical (full `tn`, no
+    /// stores) and fold as round 0 + round 1 × (mids − 1) — round 1's exit
+    /// state is debug-asserted to be round 0's, the round-level fixed
+    /// point that makes the multiplication exact.
+    pub(crate) fn fold_strip(&mut self, plan: &Plan, strip: &Strip, r_lo: u64, r_hi: u64) {
+        let (_, gn, _) = plan.tiling.grid(&plan.shape);
+        debug_assert!(r_lo <= r_hi && r_hi <= gn);
+        let mids = r_hi.min(gn - 1).saturating_sub(r_lo);
+        if mids >= 1 {
+            self.fold_round(plan, strip, plan.tiling.tn, false);
+            if mids >= 2 {
+                let before = self.totals;
+                let state0 = self.state;
+                self.fold_round(plan, strip, plan.tiling.tn, false);
+                debug_assert_eq!(self.state, state0, "mid rounds must reach a fixed point");
+                let delta = self.totals.diff(&before);
+                self.totals.add_scaled(&delta, mids - 2);
+            }
+        }
+        if r_hi == gn && r_lo < r_hi {
+            let nr = tile_extent(plan.shape.n, plan.tiling.tn, gn - 1);
+            self.fold_round(plan, strip, nr, true);
+        }
+    }
+
+    /// Fold a whole strip cover in schedule order.
+    pub(crate) fn fold_plan(&mut self, plan: &Plan, strips: &[Strip]) {
+        let (_, gn, _) = plan.tiling.grid(&plan.shape);
+        for strip in strips {
+            self.fold_strip(plan, strip, 0, gn);
+        }
+    }
+
+    pub(crate) fn finish(self) -> StripSummary {
+        let stats = DramStats {
+            input_read_words: self.totals.input_words,
+            weight_read_words: self.totals.weight_words,
+            psum_read_words: 0,
+            psum_write_words: 0,
+            output_write_words: self.totals.output_words,
+            direction_switches: self.totals.switches,
+        };
+        let pipeline = PipelineStats {
+            steps: self.totals.steps,
+            compute_cycles: self.totals.compute_cycles,
+            stall_cycles: self.totals.stall_cycles,
+            stalled_steps: self.totals.stalled_steps,
+            fills: 1,
+            total_cycles: self.pe.fill_latency
+                + self.totals.compute_cycles
+                + self.totals.stall_cycles,
+        };
+        StripSummary {
+            ema: SimEma { stats, steps: self.totals.steps },
+            pipeline,
+            transactions: self.totals.transactions,
+            macs: self.totals.macs,
+        }
+    }
+}
+
+/// Closed-form EMA + pipeline pair for one plan — the cheap inner query
+/// of the cycle model ([`crate::sim::cycles::estimate_cycles_plan`]) and
+/// the decode trajectory accumulator ([`crate::sim::decode`]).  Fixed
+/// bodies fall back to the replay sinks, so the pair is exact for every
+/// plan body.
+pub fn plan_ema_pipeline(plan: &Plan, cfg: &AcceleratorConfig) -> (SimEma, PipelineStats) {
+    match &plan.body {
+        PlanBody::Strips(strips) => {
+            let mut walker = StripWalker::new(cfg);
+            walker.fold_plan(plan, strips);
+            let s = walker.finish();
+            (s.ema, s.pipeline)
+        }
+        PlanBody::Fixed(_) => {
+            let mut ema_sink = EmaSink::new(cfg.dram());
+            let mut pipeline_sink = PipelineSink::new(cfg);
+            {
+                let sinks: &mut [&mut dyn CostSink] = &mut [&mut ema_sink, &mut pipeline_sink];
+                replay(plan, sinks);
+            }
+            (ema_sink.finish(), pipeline_sink.finish())
+        }
+    }
+}
+
+/// Closed-form [`SimEma`] for one plan (replay fallback on fixed bodies).
+pub fn plan_sim_ema(plan: &Plan, cfg: &AcceleratorConfig) -> SimEma {
+    match &plan.body {
+        PlanBody::Strips(strips) => {
+            let mut walker = StripWalker::new(cfg);
+            walker.fold_plan(plan, strips);
+            walker.finish().ema
+        }
+        PlanBody::Fixed(_) => {
+            let mut ema_sink = EmaSink::new(cfg.dram());
+            {
+                let sinks: &mut [&mut dyn CostSink] = &mut [&mut ema_sink];
+                replay(plan, sinks);
+            }
+            ema_sink.finish()
+        }
+    }
+}
+
+/// Price one plan through every sink: O(strips) closed forms for strip
+/// bodies, the fused replay for fixed bodies.  The strip-body result is
+/// bit-identical to [`crate::sim::replay::fused_cost`] on the shared
+/// fields (EMA, cycles, energy, pipeline; timing words/transactions/
+/// switches) — `rust/tests/strip_closed_form.rs` pins it.
+pub fn plan_cost(plan: &Plan, cfg: &AcceleratorConfig, energy: &EnergyModel) -> StripCost {
+    match &plan.body {
+        PlanBody::Strips(strips) => {
+            let mut walker = StripWalker::new(cfg);
+            walker.fold_plan(plan, strips);
+            let s = walker.finish();
+            debug_assert_eq!(s.macs, plan.shape.macs(), "strip cover must tile the grid");
+            let cycles = cycles_from_parts(plan.shape.macs(), &s.ema, cfg);
+            let (i, w, o) = s.ema.table2();
+            StripCost {
+                cycles,
+                energy: energy.plan_energy(plan, i + w + o),
+                timing: StripTiming {
+                    words: s.ema.stats.total_words(),
+                    transactions: s.transactions,
+                    dir_switches: s.ema.stats.direction_switches,
+                },
+                pipeline: s.pipeline,
+                ema: s.ema,
+            }
+        }
+        PlanBody::Fixed(_) => replayed_cost(plan, cfg, energy),
+    }
+}
+
+/// The replay-backed oracle: the same sinks [`plan_cost`] folds, driven
+/// step by step.  Public so the property suites and the throughput bench
+/// compare against exactly this path.
+pub fn replayed_cost(plan: &Plan, cfg: &AcceleratorConfig, energy: &EnergyModel) -> StripCost {
+    let mut ema_sink = EmaSink::new(cfg.dram());
+    let mut timing_sink = TimingSink::new(plan, DramTimingConfig::default());
+    let mut pipeline_sink = PipelineSink::new(cfg);
+    {
+        let sinks: &mut [&mut dyn CostSink] =
+            &mut [&mut ema_sink, &mut timing_sink, &mut pipeline_sink];
+        replay(plan, sinks);
+    }
+    let ema = ema_sink.finish();
+    let timing = timing_sink.finish();
+    let cycles = cycles_from_replay(&ema, &plan.shape, cfg);
+    let (i, w, o) = ema.table2();
+    StripCost {
+        cycles,
+        energy: energy.plan_energy(plan, i + w + o),
+        timing: StripTiming {
+            words: timing.words,
+            transactions: timing.transactions,
+            dir_switches: timing.dir_switches,
+        },
+        pipeline: pipeline_sink.finish(),
+        ema,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::Residency;
+    use crate::gemm::{GemmShape, Tiling};
+    use crate::util::check::property;
+    use crate::util::prng::Rng;
+
+    fn cfg() -> AcceleratorConfig {
+        AcceleratorConfig::default()
+    }
+
+    fn rand_tiling(rng: &mut Rng) -> Tiling {
+        let t = *rng.choose(&[4u64, 8, 16]);
+        let mut tiling = Tiling::square(t);
+        if rng.gen_range(2) == 0 {
+            tiling = tiling.with_kp(rng.gen_in(1, 6) * t);
+        }
+        if rng.gen_range(2) == 0 {
+            tiling = tiling.with_mp(rng.gen_in(1, 6) * t);
+        }
+        tiling
+    }
+
+    fn assert_closed_matches_replayed(plan: &Plan) {
+        let cfg = cfg();
+        let em = EnergyModel::default();
+        let closed = plan_cost(plan, &cfg, &em);
+        let oracle = replayed_cost(plan, &cfg, &em);
+        assert_eq!(closed.ema, oracle.ema, "{:?}", plan.shape);
+        assert_eq!(closed.cycles, oracle.cycles, "{:?}", plan.shape);
+        assert_eq!(closed.pipeline, oracle.pipeline, "{:?}", plan.shape);
+        assert_eq!(closed.timing, oracle.timing, "{:?}", plan.shape);
+        assert!((closed.energy.total_pj() - oracle.energy.total_pj()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn closed_cost_matches_replay_on_random_ragged_shapes() {
+        property("strip closed == replayed", 120, |rng: &mut Rng| {
+            let shape = GemmShape::new(
+                rng.gen_in(1, 260),
+                rng.gen_in(1, 260),
+                rng.gen_in(1, 260),
+            );
+            let tiling = rand_tiling(rng);
+            assert_closed_matches_replayed(&Plan::tas_per_tile(&shape, &tiling));
+        });
+    }
+
+    #[test]
+    fn closed_cost_matches_replay_under_residency() {
+        let combos = [
+            (Residency::Full, Residency::None, Residency::None),
+            (Residency::None, Residency::Full, Residency::None),
+            (Residency::None, Residency::None, Residency::Full),
+            (Residency::Full, Residency::Full, Residency::None),
+            (Residency::Full, Residency::None, Residency::Full),
+            (Residency::Full, Residency::Full, Residency::Full),
+        ];
+        property("strip closed == replayed (residency)", 80, |rng: &mut Rng| {
+            let shape = GemmShape::new(
+                rng.gen_in(1, 200),
+                rng.gen_in(1, 200),
+                rng.gen_in(1, 200),
+            );
+            let tiling = rand_tiling(rng);
+            let (i, w, o) = *rng.choose(&combos);
+            assert_closed_matches_replayed(&Plan::tas_cached(&shape, &tiling, i, w, o));
+        });
+    }
+
+    #[test]
+    fn fixed_bodies_fall_back_to_the_fused_replay() {
+        use crate::dataflow::Scheme;
+        let shape = GemmShape::new(96, 128, 160);
+        let tiling = Tiling::square(16);
+        let cfg = cfg();
+        let em = EnergyModel::default();
+        for scheme in crate::dataflow::Scheme::FIXED.iter().chain([Scheme::Tas].iter()) {
+            let plan = Plan::from_scheme(*scheme, &shape, &tiling);
+            let cost = plan_cost(&plan, &cfg, &em);
+            let fused = crate::sim::replay::fused_cost(
+                &plan,
+                &cfg,
+                &em,
+                DramTimingConfig::default(),
+            );
+            assert_eq!(cost.ema, fused.ema, "{scheme:?}");
+            assert_eq!(cost.cycles, fused.cycles, "{scheme:?}");
+            assert_eq!(cost.pipeline, fused.pipeline, "{scheme:?}");
+            assert_eq!(cost.timing.words, fused.timing.words, "{scheme:?}");
+            assert_eq!(cost.timing.transactions, fused.timing.transactions, "{scheme:?}");
+            assert_eq!(cost.timing.dir_switches, fused.timing.dir_switches, "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn ema_pair_agrees_with_plan_closed_form() {
+        // plan_ema_pipeline's word counts must equal Plan::ema — two
+        // independent closed forms of the same stream.
+        property("walker ema == Plan::ema", 80, |rng: &mut Rng| {
+            let shape = GemmShape::new(
+                rng.gen_in(1, 220),
+                rng.gen_in(1, 220),
+                rng.gen_in(1, 220),
+            );
+            let tiling = rand_tiling(rng);
+            let plan = Plan::tas_per_tile(&shape, &tiling);
+            let (sim, pipeline) = plan_ema_pipeline(&plan, &cfg());
+            let e = plan.ema();
+            if let PlanBody::Strips(_) = plan.body {
+                assert_eq!(sim.table2(), (e.input, e.weight, e.output), "{shape:?}");
+            }
+            assert_eq!(sim.steps, plan.step_count());
+            assert_eq!(pipeline.steps, plan.step_count());
+            assert_eq!(
+                pipeline.total_cycles,
+                cfg().pe_array().fill_latency + pipeline.compute_cycles + pipeline.stall_cycles
+            );
+        });
+    }
+
+    #[test]
+    fn walker_folds_partial_round_ranges_exactly() {
+        // Fold a strip as [0, split) + [split, gn) with state carried —
+        // must equal the whole-strip fold (the contraction-shard path).
+        property("split rounds == whole strip", 60, |rng: &mut Rng| {
+            let shape = GemmShape::new(
+                rng.gen_in(1, 150),
+                rng.gen_in(32, 200),
+                rng.gen_in(1, 150),
+            );
+            let tiling = rand_tiling(rng);
+            let plan = Plan::tas_strips(&shape, &tiling);
+            let strips = match &plan.body {
+                PlanBody::Strips(s) => s.clone(),
+                PlanBody::Fixed(_) => unreachable!("tas_strips never falls back"),
+            };
+            let (_, gn, _) = tiling.grid(&shape);
+            let split = rng.gen_range(gn + 1);
+            let mut whole = StripWalker::new(&cfg());
+            let mut parts = StripWalker::new(&cfg());
+            for strip in &strips {
+                whole.fold_strip(&plan, strip, 0, gn);
+                parts.fold_strip(&plan, strip, 0, split);
+                parts.fold_strip(&plan, strip, split, gn);
+            }
+            let (a, b) = (whole.finish(), parts.finish());
+            assert_eq!(a.ema, b.ema);
+            assert_eq!(a.pipeline, b.pipeline);
+            assert_eq!(a.transactions, b.transactions);
+            assert_eq!(a.macs, b.macs);
+        });
+    }
+}
