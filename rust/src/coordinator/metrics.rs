@@ -4,14 +4,45 @@
 //! *dataflow* quantities the paper cares about for every batch it
 //! dispatches: EMA words under TAS vs the fixed baselines, computed from
 //! the analytic model on the served bucket's GEMMs.
+//!
+//! Scalar accounting lives in an [`obs::Registry`] (named counters +
+//! last-value/peak gauges) instead of one struct field per statistic;
+//! latency distributions (end-to-end, TTFT, TPOT, batch exec) are bounded
+//! [`Summary`] reservoirs.  Percentiles and ratios are `Option`-valued:
+//! an empty coordinator reports JSON `null`, never a bare `NaN` token.
 
 use crate::dataflow::Scheme;
 use crate::energy::workload_read_ema;
 use crate::gemm::Tiling;
 use crate::models::GemmWorkload;
+use crate::obs::Registry;
+use crate::report::json::{jarr, jnum, jobj, jopt};
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 use std::sync::Mutex;
 use std::time::Duration;
+
+// Registry keys. One name per statistic; the snapshot reads them back out
+// into its stable public fields.
+const REQUESTS: &str = "requests";
+const BATCHES: &str = "batches";
+const TOKENS: &str = "tokens";
+const PADDED_TOKENS: &str = "padded_tokens";
+const EMA_NAIVE: &str = "ema_naive_words";
+const EMA_AYAKA: &str = "ema_ayaka_words";
+const EMA_TAS: &str = "ema_tas_words";
+const EMA_PLAN: &str = "ema_plan_words";
+const EMA_PLAN_BASE: &str = "ema_plan_baseline_words";
+const LINK_WORDS: &str = "link_words";
+const FLOPS: &str = "flops";
+const DECODE_BATCHES: &str = "decode_batches";
+const DECODE_TOKENS: &str = "decode_tokens";
+const EMA_DECODE: &str = "ema_decode_words";
+const EMA_DECODE_BASE: &str = "ema_decode_baseline_words";
+const DECODE_CACHE_HOT: &str = "decode_cache_hot_words";
+const QUEUE_DEPTH: &str = "queue_depth";
+const DECODE_QUEUE_DEPTH: &str = "decode_queue_depth";
+const BATCH_OCCUPANCY: &str = "batch_occupancy";
 
 /// Aggregated over one coordinator lifetime. Thread-safe.
 #[derive(Debug, Default)]
@@ -21,39 +52,46 @@ pub struct Metrics {
 
 #[derive(Debug, Default)]
 struct Inner {
-    requests: u64,
-    batches: u64,
-    tokens: u64,
-    padded_tokens: u64,
+    reg: Registry,
     latency: Summary,
+    ttft: Summary,
+    tpot: Summary,
     batch_exec: Summary,
-    ema_naive_words: u64,
-    ema_ayaka_words: u64,
-    ema_tas_words: u64,
-    ema_plan_words: u64,
-    ema_plan_baseline_words: u64,
-    link_words: u64,
     device_ema_words: Vec<u64>,
-    flops: u64,
-    decode_batches: u64,
-    decode_tokens: u64,
-    ema_decode_words: u64,
-    ema_decode_baseline_words: u64,
-    decode_cache_hot_words: u64,
     planner_cache: crate::coordinator::decisions::PlannerCacheStats,
 }
 
 /// Point-in-time snapshot for reporting.
+///
+/// Latency fields are `None` until at least one sample lands, so JSON
+/// emission ([`MetricsSnapshot::to_json`]) produces `null` instead of the
+/// invalid `NaN` token a raw empty percentile used to leak.
 #[derive(Clone, Debug, Default)]
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
     pub tokens: u64,
     pub padded_tokens: u64,
-    pub latency_p50_ms: f64,
-    pub latency_p99_ms: f64,
-    pub latency_mean_ms: f64,
-    pub batch_exec_mean_ms: f64,
+    pub latency_p50_ms: Option<f64>,
+    pub latency_p99_ms: Option<f64>,
+    pub latency_mean_ms: Option<f64>,
+    pub batch_exec_mean_ms: Option<f64>,
+    /// Time-to-first-token distribution (prefill completion latency).
+    pub ttft_p50_ms: Option<f64>,
+    pub ttft_p99_ms: Option<f64>,
+    /// Time-per-output-token distribution (decode-step dispatch latency
+    /// per generated token; accounting-only until decode artifacts exist).
+    pub tpot_p50_ms: Option<f64>,
+    pub tpot_p99_ms: Option<f64>,
+    /// Prefill queue depth at the last batcher poll (and its high-water
+    /// mark over the coordinator lifetime).
+    pub queue_depth: Option<f64>,
+    pub queue_depth_peak: Option<f64>,
+    pub decode_queue_depth: Option<f64>,
+    pub decode_queue_depth_peak: Option<f64>,
+    /// Requests per dispatched batch over the bucket's capacity (last /
+    /// peak), i.e. how full the padding buckets run.
+    pub batch_occupancy: Option<f64>,
     pub ema_naive_words: u64,
     pub ema_ayaka_words: u64,
     pub ema_tas_words: u64,
@@ -82,59 +120,136 @@ pub struct MetricsSnapshot {
     pub planner_cache: crate::coordinator::decisions::PlannerCacheStats,
 }
 
+fn ratio_saved(spent: u64, baseline: u64) -> Option<f64> {
+    if baseline == 0 {
+        None
+    } else {
+        Some(1.0 - spent as f64 / baseline as f64)
+    }
+}
+
 impl MetricsSnapshot {
-    /// (A−C)/A — the Table IV headline, live.
-    pub fn ema_reduction_vs_naive(&self) -> f64 {
-        if self.ema_naive_words == 0 {
-            0.0
-        } else {
-            1.0 - self.ema_tas_words as f64 / self.ema_naive_words as f64
-        }
+    /// (A−C)/A — the Table IV headline, live. `None` before any batch.
+    pub fn ema_reduction_vs_naive(&self) -> Option<f64> {
+        ratio_saved(self.ema_tas_words, self.ema_naive_words)
     }
 
-    pub fn ema_reduction_vs_ayaka(&self) -> f64 {
-        if self.ema_ayaka_words == 0 {
-            0.0
-        } else {
-            1.0 - self.ema_tas_words as f64 / self.ema_ayaka_words as f64
-        }
+    pub fn ema_reduction_vs_ayaka(&self) -> Option<f64> {
+        ratio_saved(self.ema_tas_words, self.ema_ayaka_words)
     }
 
     /// Saving of layer-level planning over per-GEMM TAS on the batches
     /// actually served (total EMA words, both sides).
-    pub fn ema_reduction_vs_per_gemm(&self) -> f64 {
-        if self.ema_plan_baseline_words == 0 {
-            0.0
-        } else {
-            1.0 - self.ema_plan_words as f64 / self.ema_plan_baseline_words as f64
-        }
+    pub fn ema_reduction_vs_per_gemm(&self) -> Option<f64> {
+        ratio_saved(self.ema_plan_words, self.ema_plan_baseline_words)
     }
 
     /// Saving of the decode plan over per-GEMM TAS on dispatched steps.
-    pub fn decode_reduction_vs_per_gemm(&self) -> f64 {
-        if self.ema_decode_baseline_words == 0 {
-            0.0
-        } else {
-            1.0 - self.ema_decode_words as f64 / self.ema_decode_baseline_words as f64
-        }
+    pub fn decode_reduction_vs_per_gemm(&self) -> Option<f64> {
+        ratio_saved(self.ema_decode_words, self.ema_decode_baseline_words)
     }
 
     /// Decode DRAM words per generated token.
-    pub fn decode_per_token_ema(&self) -> f64 {
+    pub fn decode_per_token_ema(&self) -> Option<f64> {
         if self.decode_tokens == 0 {
-            0.0
+            None
         } else {
-            self.ema_decode_words as f64 / self.decode_tokens as f64
+            Some(self.ema_decode_words as f64 / self.decode_tokens as f64)
         }
     }
 
-    pub fn padding_fraction(&self) -> f64 {
+    pub fn padding_fraction(&self) -> Option<f64> {
         let total = self.tokens + self.padded_tokens;
         if total == 0 {
-            0.0
+            None
         } else {
-            self.padded_tokens as f64 / total as f64
+            Some(self.padded_tokens as f64 / total as f64)
         }
+    }
+
+    /// The full snapshot as a JSON object — the one emission path the CLI
+    /// `--json` report and the regression tests share. Every possibly-empty
+    /// statistic goes through [`jopt`], so the document is always valid
+    /// JSON (property: parses on a fresh coordinator).
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("requests", jnum(self.requests)),
+            ("batches", jnum(self.batches)),
+            ("tokens", jnum(self.tokens)),
+            ("padded_tokens", jnum(self.padded_tokens)),
+            ("padding_fraction", jopt(self.padding_fraction())),
+            ("latency_p50_ms", jopt(self.latency_p50_ms)),
+            ("latency_p99_ms", jopt(self.latency_p99_ms)),
+            ("latency_mean_ms", jopt(self.latency_mean_ms)),
+            ("batch_exec_mean_ms", jopt(self.batch_exec_mean_ms)),
+            ("ttft_p50_ms", jopt(self.ttft_p50_ms)),
+            ("ttft_p99_ms", jopt(self.ttft_p99_ms)),
+            ("tpot_p50_ms", jopt(self.tpot_p50_ms)),
+            ("tpot_p99_ms", jopt(self.tpot_p99_ms)),
+            ("queue_depth", jopt(self.queue_depth)),
+            ("queue_depth_peak", jopt(self.queue_depth_peak)),
+            ("decode_queue_depth", jopt(self.decode_queue_depth)),
+            (
+                "decode_queue_depth_peak",
+                jopt(self.decode_queue_depth_peak),
+            ),
+            ("batch_occupancy", jopt(self.batch_occupancy)),
+            ("ema_naive_words", jnum(self.ema_naive_words)),
+            ("ema_ayaka_words", jnum(self.ema_ayaka_words)),
+            ("ema_tas_words", jnum(self.ema_tas_words)),
+            ("ema_plan_words", jnum(self.ema_plan_words)),
+            (
+                "ema_plan_baseline_words",
+                jnum(self.ema_plan_baseline_words),
+            ),
+            (
+                "ema_reduction_vs_naive",
+                jopt(self.ema_reduction_vs_naive()),
+            ),
+            (
+                "ema_reduction_vs_ayaka",
+                jopt(self.ema_reduction_vs_ayaka()),
+            ),
+            (
+                "ema_reduction_vs_per_gemm",
+                jopt(self.ema_reduction_vs_per_gemm()),
+            ),
+            ("link_words", jnum(self.link_words)),
+            (
+                "per_device_ema_words",
+                jarr(self
+                    .per_device_ema_words
+                    .iter()
+                    .map(|&w| jnum(w))
+                    .collect()),
+            ),
+            ("flops", jnum(self.flops)),
+            ("decode_batches", jnum(self.decode_batches)),
+            ("decode_tokens", jnum(self.decode_tokens)),
+            ("ema_decode_words", jnum(self.ema_decode_words)),
+            (
+                "ema_decode_baseline_words",
+                jnum(self.ema_decode_baseline_words),
+            ),
+            (
+                "decode_reduction_vs_per_gemm",
+                jopt(self.decode_reduction_vs_per_gemm()),
+            ),
+            ("decode_per_token_ema", jopt(self.decode_per_token_ema())),
+            (
+                "decode_cache_hot_words",
+                jnum(self.decode_cache_hot_words),
+            ),
+            (
+                "planner_cache",
+                jobj(vec![
+                    ("hits", jnum(self.planner_cache.hits)),
+                    ("misses", jnum(self.planner_cache.misses)),
+                    ("evictions", jnum(self.planner_cache.evictions)),
+                    ("entries", jnum(self.planner_cache.entries)),
+                ]),
+            ),
+        ])
     }
 }
 
@@ -167,44 +282,71 @@ impl Metrics {
         let link_words = layer_plan.handoff_words();
         let per_device = layer_plan.per_device_ema();
         let mut g = self.inner.lock().unwrap();
-        g.batches += 1;
-        g.requests += n_requests as u64;
-        g.tokens += real_tokens;
-        g.padded_tokens += padded_tokens;
+        g.reg.add(BATCHES, 1);
+        g.reg.add(REQUESTS, n_requests as u64);
+        g.reg.add(TOKENS, real_tokens);
+        g.reg.add(PADDED_TOKENS, padded_tokens);
         g.batch_exec.push(exec.as_secs_f64() * 1e3);
-        g.ema_naive_words += naive;
-        g.ema_ayaka_words += ayaka;
-        g.ema_tas_words += tas;
-        g.ema_plan_words += plan_words;
-        g.ema_plan_baseline_words += plan_baseline;
-        g.link_words += link_words;
+        g.reg.add(EMA_NAIVE, naive);
+        g.reg.add(EMA_AYAKA, ayaka);
+        g.reg.add(EMA_TAS, tas);
+        g.reg.add(EMA_PLAN, plan_words);
+        g.reg.add(EMA_PLAN_BASE, plan_baseline);
+        g.reg.add(LINK_WORDS, link_words);
         if g.device_ema_words.len() < per_device.len() {
             g.device_ema_words.resize(per_device.len(), 0);
         }
         for (acc, w) in g.device_ema_words.iter_mut().zip(&per_device) {
             *acc += w;
         }
-        g.flops += flops;
+        g.reg.add(FLOPS, flops);
     }
 
     /// Record one dispatched decode step: `slots` sequences each advanced
-    /// by one token under `step_plan`'s accounting.
+    /// by one token under `step_plan`'s accounting. `exec` is the step's
+    /// dispatch latency; divided by the slot count it samples TPOT.
     pub fn record_decode_batch(
         &self,
         slots: usize,
         step_plan: &crate::dataflow::DecodeStepPlan,
+        exec: Duration,
     ) {
         let mut g = self.inner.lock().unwrap();
-        g.decode_batches += 1;
-        g.decode_tokens += slots as u64;
-        g.ema_decode_words += step_plan.total_ema();
-        g.ema_decode_baseline_words += step_plan.per_gemm_tas_total();
-        g.decode_cache_hot_words += step_plan.cache_hot_total();
+        g.reg.add(DECODE_BATCHES, 1);
+        g.reg.add(DECODE_TOKENS, slots as u64);
+        g.reg.add(EMA_DECODE, step_plan.total_ema());
+        g.reg.add(EMA_DECODE_BASE, step_plan.per_gemm_tas_total());
+        g.reg.add(DECODE_CACHE_HOT, step_plan.cache_hot_total());
+        if slots > 0 {
+            g.tpot.push(exec.as_secs_f64() * 1e3);
+        }
     }
 
     /// Record one completed request's end-to-end latency.
     pub fn record_latency(&self, latency: Duration) {
         self.inner.lock().unwrap().latency.push(latency.as_secs_f64() * 1e3);
+    }
+
+    /// Record one prefill request's time-to-first-token (arrival → reply).
+    pub fn record_ttft(&self, ttft: Duration) {
+        self.inner.lock().unwrap().ttft.push(ttft.as_secs_f64() * 1e3);
+    }
+
+    /// Sample the batcher's queue depths (prefill pending, decode pending).
+    pub fn record_queue_depth(&self, prefill: usize, decode: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.reg.set_gauge(QUEUE_DEPTH, prefill as f64);
+        g.reg.set_gauge(DECODE_QUEUE_DEPTH, decode as f64);
+    }
+
+    /// Sample a dispatched batch's occupancy: requests over bucket slots.
+    pub fn record_batch_occupancy(&self, filled: usize, capacity: usize) {
+        if capacity == 0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.reg
+            .set_gauge(BATCH_OCCUPANCY, filled as f64 / capacity as f64);
     }
 
     /// Record the dispatch planner's cache counters.  The planner's
@@ -219,28 +361,44 @@ impl Metrics {
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
+        let mean_of = |s: &Summary| {
+            if s.count() == 0 {
+                None
+            } else {
+                Some(s.mean())
+            }
+        };
         MetricsSnapshot {
-            requests: g.requests,
-            batches: g.batches,
-            tokens: g.tokens,
-            padded_tokens: g.padded_tokens,
+            requests: g.reg.counter(REQUESTS),
+            batches: g.reg.counter(BATCHES),
+            tokens: g.reg.counter(TOKENS),
+            padded_tokens: g.reg.counter(PADDED_TOKENS),
             latency_p50_ms: g.latency.p50(),
             latency_p99_ms: g.latency.p99(),
-            latency_mean_ms: g.latency.mean(),
-            batch_exec_mean_ms: g.batch_exec.mean(),
-            ema_naive_words: g.ema_naive_words,
-            ema_ayaka_words: g.ema_ayaka_words,
-            ema_tas_words: g.ema_tas_words,
-            ema_plan_words: g.ema_plan_words,
-            ema_plan_baseline_words: g.ema_plan_baseline_words,
-            link_words: g.link_words,
+            latency_mean_ms: mean_of(&g.latency),
+            batch_exec_mean_ms: mean_of(&g.batch_exec),
+            ttft_p50_ms: g.ttft.p50(),
+            ttft_p99_ms: g.ttft.p99(),
+            tpot_p50_ms: g.tpot.p50(),
+            tpot_p99_ms: g.tpot.p99(),
+            queue_depth: g.reg.gauge(QUEUE_DEPTH),
+            queue_depth_peak: g.reg.gauge_peak(QUEUE_DEPTH),
+            decode_queue_depth: g.reg.gauge(DECODE_QUEUE_DEPTH),
+            decode_queue_depth_peak: g.reg.gauge_peak(DECODE_QUEUE_DEPTH),
+            batch_occupancy: g.reg.gauge(BATCH_OCCUPANCY),
+            ema_naive_words: g.reg.counter(EMA_NAIVE),
+            ema_ayaka_words: g.reg.counter(EMA_AYAKA),
+            ema_tas_words: g.reg.counter(EMA_TAS),
+            ema_plan_words: g.reg.counter(EMA_PLAN),
+            ema_plan_baseline_words: g.reg.counter(EMA_PLAN_BASE),
+            link_words: g.reg.counter(LINK_WORDS),
             per_device_ema_words: g.device_ema_words.clone(),
-            flops: g.flops,
-            decode_batches: g.decode_batches,
-            decode_tokens: g.decode_tokens,
-            ema_decode_words: g.ema_decode_words,
-            ema_decode_baseline_words: g.ema_decode_baseline_words,
-            decode_cache_hot_words: g.decode_cache_hot_words,
+            flops: g.reg.counter(FLOPS),
+            decode_batches: g.reg.counter(DECODE_BATCHES),
+            decode_tokens: g.reg.counter(DECODE_TOKENS),
+            ema_decode_words: g.reg.counter(EMA_DECODE),
+            ema_decode_baseline_words: g.reg.counter(EMA_DECODE_BASE),
+            decode_cache_hot_words: g.reg.counter(DECODE_CACHE_HOT),
             planner_cache: g.planner_cache,
         }
     }
@@ -294,25 +452,62 @@ mod tests {
         assert_eq!(s.batches, 2);
         assert_eq!(s.tokens, 160);
         assert_eq!(s.flops, 1500);
-        assert!(s.ema_reduction_vs_naive() > 0.9);
-        assert!(s.ema_reduction_vs_ayaka() > 0.5);
+        assert!(s.ema_reduction_vs_naive().unwrap() > 0.9);
+        assert!(s.ema_reduction_vs_ayaka().unwrap() > 0.5);
         assert_eq!(s.ema_plan_words, 2 * plan().total_ema());
         assert!(s.ema_plan_words <= s.ema_plan_baseline_words);
-        assert!((0.0..=1.0).contains(&s.ema_reduction_vs_per_gemm()));
-        assert!((s.padding_fraction() - 32.0 / 192.0).abs() < 1e-9);
-        assert!(s.latency_p50_ms > 0.0);
+        assert!((0.0..=1.0).contains(&s.ema_reduction_vs_per_gemm().unwrap()));
+        assert!((s.padding_fraction().unwrap() - 32.0 / 192.0).abs() < 1e-9);
+        assert!(s.latency_p50_ms.unwrap() > 0.0);
     }
 
     #[test]
     fn empty_snapshot_is_sane() {
         let s = Metrics::new().snapshot();
-        assert_eq!(s.ema_reduction_vs_naive(), 0.0);
-        assert_eq!(s.ema_reduction_vs_per_gemm(), 0.0);
-        assert_eq!(s.padding_fraction(), 0.0);
+        assert_eq!(s.ema_reduction_vs_naive(), None);
+        assert_eq!(s.ema_reduction_vs_per_gemm(), None);
+        assert_eq!(s.padding_fraction(), None);
         assert_eq!(s.link_words, 0);
         assert!(s.per_device_ema_words.is_empty());
-        assert_eq!(s.decode_reduction_vs_per_gemm(), 0.0);
-        assert_eq!(s.decode_per_token_ema(), 0.0);
+        assert_eq!(s.decode_reduction_vs_per_gemm(), None);
+        assert_eq!(s.decode_per_token_ema(), None);
+        assert_eq!(s.latency_p50_ms, None);
+        assert_eq!(s.ttft_p99_ms, None);
+        assert_eq!(s.queue_depth, None);
+    }
+
+    #[test]
+    fn fresh_snapshot_serialises_to_valid_json_without_nan() {
+        // Regression for the NaN leak: an empty coordinator's --json
+        // report used to contain bare `NaN` tokens (invalid JSON).
+        let s = Metrics::new().snapshot();
+        let text = s.to_json().to_string_compact();
+        assert!(!text.contains("NaN"), "NaN leaked into {text}");
+        let doc = Json::parse(&text).expect("fresh snapshot must parse");
+        assert_eq!(doc.get("latency_p50_ms"), Some(&Json::Null));
+        assert_eq!(doc.get("ttft_p50_ms"), Some(&Json::Null));
+        assert_eq!(doc.get("padding_fraction"), Some(&Json::Null));
+        assert_eq!(doc.get("requests").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn populated_snapshot_serialises_the_new_telemetry() {
+        let m = Metrics::new();
+        m.record_ttft(Duration::from_millis(7));
+        m.record_queue_depth(5, 2);
+        m.record_queue_depth(1, 0);
+        m.record_batch_occupancy(3, 8);
+        let s = m.snapshot();
+        assert_eq!(s.ttft_p50_ms.map(|v| v.round()), Some(7.0));
+        assert_eq!(s.queue_depth, Some(1.0));
+        assert_eq!(s.queue_depth_peak, Some(5.0));
+        assert_eq!(s.decode_queue_depth_peak, Some(2.0));
+        assert_eq!(s.batch_occupancy, Some(0.375));
+        let doc = Json::parse(&s.to_json().to_string_compact()).unwrap();
+        assert_eq!(
+            doc.get("queue_depth_peak").unwrap().as_f64(),
+            Some(5.0)
+        );
     }
 
     #[test]
@@ -330,18 +525,22 @@ mod tests {
             &Tiling::square(16),
             256 * 1024,
         );
-        m.record_decode_batch(4, &step);
-        m.record_decode_batch(4, &step);
+        m.record_decode_batch(4, &step, Duration::from_millis(2));
+        m.record_decode_batch(4, &step, Duration::from_millis(2));
         let s = m.snapshot();
         assert_eq!(s.decode_batches, 2);
         assert_eq!(s.decode_tokens, 8);
         assert_eq!(s.ema_decode_words, 2 * step.total_ema());
         assert!(s.ema_decode_words <= s.ema_decode_baseline_words);
-        assert!((0.0..=1.0).contains(&s.decode_reduction_vs_per_gemm()));
-        assert!(s.decode_per_token_ema() > 0.0);
+        assert!(
+            (0.0..=1.0).contains(&s.decode_reduction_vs_per_gemm().unwrap())
+        );
+        assert!(s.decode_per_token_ema().unwrap() > 0.0);
+        assert!(s.tpot_p50_ms.unwrap() > 0.0);
         // the prefill lane is untouched
         assert_eq!(s.batches, 0);
         assert_eq!(s.ema_plan_words, 0);
+        assert_eq!(s.ttft_p50_ms, None);
     }
 
     #[test]

@@ -22,6 +22,19 @@
 //! priced by the decode planner and accounted in the metrics' decode
 //! lane — no decode artifact executes until the real PJRT binding and a
 //! decode-step compile path land (see ROADMAP).
+//!
+//! Both loops record into an [`obs::Tracer`] when one is supplied
+//! (`tas serve --trace-out`): each request gets its own track with
+//! `queued → exec` spans (enqueue instant through reply), the device
+//! thread tracks `plan[hit|miss]`, `exec`, and `decode step` spans, and
+//! the batcher samples queue-depth counters — the Chrome trace twin of
+//! the TTFT/TPOT histograms in [`super::metrics::MetricsSnapshot`].
+//!
+//! When no PJRT artifacts exist (`synthetic: true`), the device loop
+//! boots a synthetic backend instead of the engine: the same bucket
+//! routing, planning, accounting, and span lifecycle run end-to-end, with
+//! deterministic echo logits in place of real numerics — so the serving
+//! path (and its trace export) is exercisable on a bare checkout.
 
 use super::batcher::{Batch, Batcher, DecodeSlot};
 use super::decisions;
@@ -29,6 +42,7 @@ use super::metrics::Metrics;
 use super::request::{Request, RequestId, Response};
 use crate::gemm::Tiling;
 use crate::models::GemmWorkload;
+use crate::obs::Tracer;
 use crate::runtime::{Engine, HostTensor};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -56,6 +70,14 @@ pub struct CoordinatorOptions {
     /// decision ([`decisions::devices_for_bucket`]) widens large buckets
     /// up to this many chips; 1 keeps the single-accelerator behaviour.
     pub max_devices: u64,
+    /// Serve through the synthetic backend instead of PJRT: same routing,
+    /// planning, and accounting, deterministic echo logits. Lets the
+    /// serving path run (and export traces) without compiled artifacts.
+    pub synthetic: bool,
+    /// Span recorder threaded through both loops. Defaults to a disabled
+    /// tracer (a branch per call site); `tas serve --trace-out` installs
+    /// an enabled one and exports it as Chrome trace JSON on shutdown.
+    pub tracer: Arc<Tracer>,
 }
 
 impl Default for CoordinatorOptions {
@@ -67,6 +89,8 @@ impl Default for CoordinatorOptions {
             tiling: Tiling::square(16),
             sram_words: crate::config::AcceleratorConfig::default().sram_words,
             max_devices: 1,
+            synthetic: false,
+            tracer: Arc::new(Tracer::disabled()),
         }
     }
 }
@@ -135,9 +159,13 @@ impl Coordinator {
         let (bat_tx, bat_rx) = channel::<ToBatcher>();
         let batcher = Batcher::new(&info.buckets, opts.linger)?;
         let max_len = batcher.max_len();
+        let bat_metrics = metrics.clone();
+        let bat_tracer = opts.tracer.clone();
         let batcher_handle = std::thread::Builder::new()
             .name("tas-batcher".into())
-            .spawn(move || batcher_loop(batcher, bat_rx, dev_tx))
+            .spawn(move || {
+                batcher_loop(batcher, bat_rx, dev_tx, bat_metrics, bat_tracer)
+            })
             .context("spawning batcher thread")?;
 
         Ok(Coordinator {
@@ -239,10 +267,17 @@ struct BootInfo {
     model: BTreeMap<String, u64>,
 }
 
+/// Track name of one request's span row in the exported trace.
+fn req_track(id: RequestId) -> String {
+    format!("req {id}")
+}
+
 fn batcher_loop(
     mut batcher: Batcher,
     rx: Receiver<ToBatcher>,
     dev_tx: Sender<ToDevice>,
+    metrics: Arc<Metrics>,
+    tracer: Arc<Tracer>,
 ) {
     // request id -> reply channel, carried next to the pending queues
     let mut replies: BTreeMap<RequestId, Sender<Response>> = BTreeMap::new();
@@ -259,6 +294,19 @@ fn batcher_loop(
                     .iter()
                     .filter_map(|r| replies.remove(&r.id))
                     .collect();
+                // Close each request's "queued" span: arrival → dispatch.
+                for r in &batch.requests {
+                    tracer.span_at(
+                        &req_track(r.id),
+                        "queued",
+                        tracer.ts_of(r.arrived),
+                        r.arrived.elapsed().as_micros() as u64,
+                    );
+                }
+                metrics.record_batch_occupancy(
+                    batch.requests.len(),
+                    batch.bucket.batch as usize,
+                );
                 (batch, rs)
             });
             let job = DeviceJob { batch, decode: mixed.decode };
@@ -266,12 +314,29 @@ fn batcher_loop(
                 return;
             }
         }
+        // Queue-depth gauges after every drain, so the snapshot reflects
+        // what is still waiting (and the peak survives in the gauge).
+        metrics.record_queue_depth(
+            batcher.pending_count(),
+            batcher.decode_pending_count(),
+        );
+        tracer.counter("queues", "prefill_depth", batcher.pending_count() as f64);
+        tracer.counter(
+            "queues",
+            "decode_depth",
+            batcher.decode_pending_count() as f64,
+        );
     };
     loop {
         // Poll with a short timeout so linger deadlines fire.
         match rx.recv_timeout(Duration::from_millis(1)) {
             Ok(ToBatcher::Submit(req, tx)) => {
                 replies.insert(req.id, tx);
+                tracer.instant_at(
+                    &req_track(req.id),
+                    "enqueue",
+                    tracer.ts_of(req.arrived),
+                );
                 if batcher.push(req).is_err() {
                     // Unroutable request: reply channel just drops; the
                     // submitter's recv errors out. (submit() pre-checks
@@ -311,16 +376,64 @@ fn batcher_loop(
     }
 }
 
-fn device_loop(
-    opts: CoordinatorOptions,
-    rx: Receiver<ToDevice>,
-    boot_tx: Sender<Result<BootInfo>>,
-    metrics: Arc<Metrics>,
-) {
-    // Boot: engine + contract check. Engine must be built in-thread.
-    let mut engine = match boot_engine(&opts) {
-        Ok(e) => {
-            let info = BootInfo {
+/// Execution backend of the device loop: the PJRT engine, or the
+/// synthetic device that runs the same routing/planning/accounting with
+/// deterministic echo logits when no artifacts are compiled.
+enum Backend {
+    Pjrt(Box<Engine>),
+    Synthetic(SyntheticDevice),
+}
+
+/// Artifact-free stand-in for the engine: tiny-BERT-shaped dims (the
+/// `python/compile/aot.py` target) and a fixed bucket ladder.  `execute`
+/// peaks each position's logit row at its own token id, so
+/// [`Response::argmax_ids`] round-trips the input — smoke-checkable.
+struct SyntheticDevice {
+    buckets: Vec<(u64, u64, String)>,
+    model: BTreeMap<String, u64>,
+}
+
+impl SyntheticDevice {
+    fn new() -> Self {
+        let model: BTreeMap<String, u64> = [
+            ("hidden", 128u64),
+            ("ffn", 512),
+            ("vocab", 1000),
+            ("n_layers", 2),
+            ("heads", 2),
+        ]
+        .iter()
+        .map(|(k, v)| (k.to_string(), *v))
+        .collect();
+        let buckets = [(4u64, 64u64), (4, 128), (8, 256)]
+            .iter()
+            .map(|&(b, s)| (b, s, format!("synthetic_b{b}_s{s}")))
+            .collect();
+        SyntheticDevice { buckets, model }
+    }
+
+    fn execute(&self, ids: &[i32], vocab: usize) -> Vec<f32> {
+        let mut logits = vec![0.0f32; ids.len() * vocab.max(1)];
+        for (pos, &tok) in ids.iter().enumerate() {
+            let t = (tok.max(0) as usize) % vocab.max(1);
+            logits[pos * vocab.max(1) + t] = 1.0;
+        }
+        logits
+    }
+}
+
+impl Backend {
+    fn boot(opts: &CoordinatorOptions) -> Result<Backend> {
+        if opts.synthetic {
+            Ok(Backend::Synthetic(SyntheticDevice::new()))
+        } else {
+            boot_engine(opts).map(|e| Backend::Pjrt(Box::new(e)))
+        }
+    }
+
+    fn boot_info(&self) -> BootInfo {
+        match self {
+            Backend::Pjrt(e) => BootInfo {
                 buckets: e.manifest().bert_buckets(),
                 model: e
                     .manifest()
@@ -328,9 +441,90 @@ fn device_loop(
                     .iter()
                     .map(|(k, v)| (k.clone(), *v))
                     .collect(),
-            };
-            let _ = boot_tx.send(Ok(info));
-            e
+            },
+            Backend::Synthetic(s) => BootInfo {
+                buckets: s.buckets.clone(),
+                model: s.model.clone(),
+            },
+        }
+    }
+
+    fn model_dim(&self, key: &str, default: u64) -> u64 {
+        let model = match self {
+            Backend::Pjrt(e) => &e.manifest().model,
+            Backend::Synthetic(s) => &s.model,
+        };
+        *model.get(key).unwrap_or(&default)
+    }
+
+    fn flops(&self, artifact: &str, gemms: &[GemmWorkload]) -> u64 {
+        match self {
+            Backend::Pjrt(e) => e
+                .manifest()
+                .artifact(artifact)
+                .map(|a| a.flops)
+                .unwrap_or(0),
+            // Analytic stand-in: two flops per MAC over the bucket's GEMMs.
+            Backend::Synthetic(_) => {
+                gemms.iter().map(|g| 2 * g.count * g.shape.macs()).sum()
+            }
+        }
+    }
+
+    fn execute(
+        &mut self,
+        artifact: &str,
+        ids: Vec<i32>,
+        b: usize,
+        s: usize,
+        vocab: usize,
+    ) -> Result<Vec<f32>> {
+        match self {
+            Backend::Pjrt(e) => {
+                let outputs =
+                    e.execute(artifact, &[HostTensor::I32(ids, vec![b, s])])?;
+                Ok(outputs[0].as_f32()?.to_vec())
+            }
+            Backend::Synthetic(sd) => Ok(sd.execute(&ids, vocab)),
+        }
+    }
+}
+
+/// Close the device-track planning span with its cache verdict and push
+/// the planner's cumulative cache counters into the metrics.  Called
+/// where the `PlannedDispatch` borrow has already ended (its lifetime is
+/// tied to the planner's `&mut`).
+fn finish_plan_span(
+    tracer: &Tracer,
+    planner: &decisions::DispatchPlanner,
+    before: decisions::PlannerCacheStats,
+    plan_ts: u64,
+    plan_us: u64,
+    metrics: &Metrics,
+) {
+    let stats = planner.cache_stats();
+    let verdict = if stats.misses > before.misses {
+        "plan[miss]"
+    } else {
+        "plan[hit]"
+    };
+    tracer.span_at("device", verdict, plan_ts, plan_us);
+    metrics.record_planner_cache(stats);
+}
+
+fn device_loop(
+    opts: CoordinatorOptions,
+    rx: Receiver<ToDevice>,
+    boot_tx: Sender<Result<BootInfo>>,
+    metrics: Arc<Metrics>,
+) {
+    let tracer = opts.tracer.clone();
+    // Boot: engine + contract check (PJRT handles must be built
+    // in-thread), or the synthetic device when requested.
+    let mut backend = match Backend::boot(&opts) {
+        Ok(b) => {
+            let _ = boot_tx.send(Ok(b.boot_info()));
+            b
         }
         Err(err) => {
             let _ = boot_tx.send(Err(err));
@@ -338,11 +532,11 @@ fn device_loop(
         }
     };
 
-    let hidden = *engine.manifest().model.get("hidden").unwrap_or(&0);
-    let ffn = *engine.manifest().model.get("ffn").unwrap_or(&0);
-    let vocab = *engine.manifest().model.get("vocab").unwrap_or(&0) as usize;
-    let n_layers = *engine.manifest().model.get("n_layers").unwrap_or(&1);
-    let heads = *engine.manifest().model.get("heads").unwrap_or(&0);
+    let hidden = backend.model_dim("hidden", 0);
+    let ffn = backend.model_dim("ffn", 0);
+    let vocab = backend.model_dim("vocab", 0) as usize;
+    let n_layers = backend.model_dim("n_layers", 1);
+    let heads = backend.model_dim("heads", 0);
     // All plan memoisation lives in the dispatch planner, keyed on the
     // *joint* dispatch: a mixed prefill+decode job resolves through
     // `decisions::mixed_bucket_plan`, so the SRAM lane split it searches
@@ -363,9 +557,9 @@ fn device_loop(
     // each bucket's layer plan is computed once in a scoped worker, so
     // the first dispatch of every bucket is a cache hit instead of an
     // inline planning stall.
-    let warm_keys: Vec<_> = engine
-        .manifest()
-        .bert_buckets()
+    let warm_keys: Vec<_> = backend
+        .boot_info()
+        .buckets
         .iter()
         .map(|(batch, seq, _)| (Some(batch * seq), None))
         .collect();
@@ -377,6 +571,7 @@ fn device_loop(
             ToDevice::Run(job) => job,
             ToDevice::Shutdown => return,
         };
+        let job_t0 = Instant::now();
 
         let prefill_tokens = job
             .batch
@@ -390,26 +585,39 @@ fn device_loop(
             let bucket_len = max_len.div_ceil(DECODE_LEN_BUCKET) * DECODE_LEN_BUCKET;
             Some((slots, bucket_len))
         };
+        let cache_before = planner.cache_stats();
+        let t_plan = Instant::now();
+        let plan_ts = tracer.ts_of(t_plan);
         let planned = planner.plan_dispatch(prefill_tokens, decode_key);
+        let plan_us = t_plan.elapsed().as_micros() as u64;
 
         // Decode half of the dispatch: no artifact executes yet (the AOT
         // path compiles prefill encoders only), so the step is priced by
         // the decode planner and accounted in the decode metrics lane.
+        // Its handling time (planning + pricing) is the TPOT sample.
+        // The device-track span is buffered and pushed below, once the
+        // planner borrow held by `planned` has ended.
+        let mut decode_span: Option<(u64, u64)> = None;
         if let Some(step_plan) = planned.decode() {
-            metrics.record_decode_batch(job.decode.len(), step_plan);
+            metrics.record_decode_batch(job.decode.len(), step_plan, job_t0.elapsed());
+            if tracer.enabled() {
+                let ts = plan_ts.saturating_add(plan_us);
+                decode_span = Some((ts, tracer.now_us().saturating_sub(ts)));
+            }
         }
 
         let Some((ref batch, ref job_replies)) = job.batch else {
-            metrics.record_planner_cache(planner.cache_stats());
+            finish_plan_span(&tracer, &planner, cache_before, plan_ts, plan_us, &metrics);
+            if let Some((ts, dur)) = decode_span {
+                tracer.span_at("device", "decode step", ts, dur);
+            }
             continue;
         };
         let ids = batch.padded_ids();
         let (b, s) = (batch.bucket.batch as usize, batch.bucket.seq as usize);
         let t0 = Instant::now();
-        let result = engine.execute(
-            &batch.bucket.artifact,
-            &[HostTensor::I32(ids, vec![b, s])],
-        );
+        let exec_ts = tracer.ts_of(t0);
+        let result = backend.execute(&batch.bucket.artifact, ids, b, s, vocab);
         let exec = t0.elapsed();
 
         // Accelerator-side accounting for this batch: the paper's
@@ -422,11 +630,7 @@ fn device_loop(
         let layer_plan = planned
             .prefill()
             .expect("a dispatched prefill batch always has a layer plan");
-        let flops = engine
-            .manifest()
-            .artifact(&batch.bucket.artifact)
-            .map(|a| a.flops)
-            .unwrap_or(0);
+        let flops = backend.flops(&batch.bucket.artifact, &gemms);
         let real_tokens: u64 = batch.requests.iter().map(|r| r.len() as u64).sum();
         metrics.record_batch(
             batch.requests.len(),
@@ -438,25 +642,34 @@ fn device_loop(
             layer_plan,
             flops,
         );
-        metrics.record_planner_cache(planner.cache_stats());
+        finish_plan_span(&tracer, &planner, cache_before, plan_ts, plan_us, &metrics);
+        if let Some((ts, dur)) = decode_span {
+            tracer.span_at("device", "decode step", ts, dur);
+        }
+        tracer.span_at("device", "exec", exec_ts, exec.as_micros() as u64);
 
         match result {
-            Ok(outputs) => {
-                let logits = match outputs[0].as_f32() {
-                    Ok(l) => l,
-                    Err(_) => continue,
-                };
+            Ok(logits) => {
                 // logits: [b, s, vocab] — slice each request's rows.
                 for (row, (req, reply)) in
                     batch.requests.iter().zip(job_replies).enumerate()
                 {
                     let start = row * s * vocab;
                     let end = start + req.len() * vocab;
+                    let latency = req.arrived.elapsed();
+                    // First (and, for an encoder bucket, only) tokens of
+                    // the request land with this reply: the TTFT sample.
+                    metrics.record_ttft(latency);
+                    if tracer.enabled() {
+                        let track = req_track(req.id);
+                        tracer.span_at(&track, "exec", exec_ts, exec.as_micros() as u64);
+                        tracer.instant(&track, "complete");
+                    }
                     let resp = Response {
                         id: req.id,
                         logits: logits[start..end].to_vec(),
                         vocab,
-                        latency: req.arrived.elapsed(),
+                        latency,
                         artifact: batch.bucket.artifact.clone(),
                         padded_tokens: s - req.len(),
                     };

@@ -25,6 +25,7 @@ pub mod sim;
 pub mod energy;
 pub mod gemm;
 pub mod models;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod util;

@@ -8,10 +8,12 @@
 //!   decode    KV-cache-aware decode trajectory (prefill + T steps)
 //!   sweep     sequence-length sweep (crossover analysis)
 //!   trace     dump a tile-step trace (Fig. 1/2 evidence)
+//!   explain   EMA attribution ledger: who moved every word, and why
 //!   validate  run every artifact against its golden vectors (PJRT)
 //!   serve     closed-loop serving demo over the artifacts
 
 use anyhow::Result;
+use std::sync::Arc;
 use std::time::Duration;
 use tas::arch::{Interconnect, InterconnectConfig};
 use tas::config::AcceleratorConfig;
@@ -23,11 +25,13 @@ use tas::dataflow::{
 use tas::energy::EnergyModel;
 use tas::gemm::{GemmShape, Tiling};
 use tas::models::{zoo, LengthDist};
+use tas::obs::{shard_gemm_timeline, write_chrome_trace, Tracer};
 use tas::report;
+use tas::report::explain::explain_layer_plan;
 use tas::report::json::{jarr, jbool, jf64, jnum, jobj, jstr, Report};
 use tas::sim::{
-    estimate_cycles, measure_occupancy, sharded_fused_cost, sharded_trajectory_cost,
-    trajectory_fused_cost,
+    estimate_cycles, measure_occupancy, shard_link_rounds, sharded_fused_cost,
+    sharded_trajectory_cost, trajectory_fused_cost,
 };
 use tas::util::cli::Args;
 use tas::util::json::Json;
@@ -44,6 +48,7 @@ fn main() {
         Some("decode") => cmd_decode(args),
         Some("sweep") => cmd_sweep(args),
         Some("trace") => cmd_trace(args),
+        Some("explain") => cmd_explain(args),
         Some("figs") => cmd_figs(args),
         Some("validate") => cmd_validate(args),
         Some("serve") => cmd_serve(args),
@@ -69,15 +74,17 @@ USAGE: tas <subcommand> [options]
   plan      --model NAME [--seq N] [--tile N] [--sram WORDS] [--json]
   shard     --model NAME [--seq N] [--devices D] [--axis auto|rows|cols|
             contraction] [--tile N] [--sram WORDS] [--link-aware]
-            [--link-bw WORDS] [--config FILE] [--json]
+            [--link-bw WORDS] [--config FILE] [--trace-out FILE] [--json]
   decode    --model NAME [--prefill N] [--steps T] [--batch B] [--draft D]
             [--tile N] [--sram WORDS] [--devices D] [--config FILE] [--json]
   sweep     --model NAME [--tile N] [--seqs a,b,c] [--sram WORDS] [--json]
   trace     --scheme NAME --m M --n N --k K [--tile N] [--limit N] [--json]
+  explain   --model NAME [--seq N] [--tile N] [--sram WORDS] [--json]
   figs      [--m M] [--n N] [--k K] [--tile N]   (Fig. 1/2 tile maps)
   validate  [--artifacts DIR]
   serve     [--artifacts DIR] [--requests N] [--dist librispeech|fixed]
             [--seed N] [--linger-ms N] [--devices N] [--decode-steps N]
+            [--trace-out FILE] [--json]
 
 Models: vit-g14, wav2vec2-xls-r-2b, gpt-3, bert-base, bert-large,
         wav2vec2-large";
@@ -304,6 +311,7 @@ fn cmd_shard(mut args: Args) -> Result<()> {
     let devices = args.opt_u64("devices", 2)?.max(1);
     let axis = ShardAxis::from_name(&args.opt_or("axis", "auto"))?;
     let link_aware = args.flag("link-aware");
+    let trace_out = args.opt("trace-out");
     let json = args.flag("json");
     let model = zoo::by_name(&name)?;
     let seq = args.opt_u64("seq", model.default_seq)?;
@@ -337,11 +345,22 @@ fn cmd_shard(mut args: Args) -> Result<()> {
     let mut serialized_cycles = 0u64;
     let mut unsharded_dram = 0u64;
 
+    // Simulated-timeline export: chain each GEMM's device/link schedule
+    // at its overlapped end, one instance per distinct projection, so the
+    // forward pass reads as one contiguous Perfetto picture.
+    let timeline = Tracer::new(trace_out.is_some());
+    let mut trace_cursor = 0u64;
+
     let mut gemm_rows = Vec::new();
     let mut gemm_json = Vec::new();
     for g in model.linear_gemms(seq) {
         let sp = shard_gemm(&g.shape, &tiling, spec, lambda);
         let cost = sharded_fused_cost(&sp, &cfg, &em, &icx);
+        if timeline.enabled() {
+            let rounds = shard_link_rounds(&sp, &icx);
+            trace_cursor =
+                shard_gemm_timeline(&timeline, g.name, &cost, &rounds, trace_cursor);
+        }
         let unsharded = Plan::tas_per_tile(&g.shape, &tiling).ema().total();
         unsharded_dram += g.count * unsharded;
         total_dram += g.count * cost.dram_words();
@@ -401,6 +420,16 @@ fn cmd_shard(mut args: Args) -> Result<()> {
                 sci(cost.overlapped_cycles() as f64),
             ]);
         }
+    }
+
+    if let Some(path) = &trace_out {
+        write_chrome_trace(std::path::Path::new(path), &timeline.events())?;
+        eprintln!(
+            "wrote simulated timeline to {path} ({} events, {} simulated cycles) — \
+             open in https://ui.perfetto.dev",
+            timeline.events().len(),
+            trace_cursor
+        );
     }
 
     // Layer pipeline placement: chained block stages across the devices.
@@ -996,6 +1025,90 @@ fn cmd_trace(mut args: Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_explain(mut args: Args) -> Result<()> {
+    let name = args.opt_or("model", "bert-base");
+    let tiling = tiling_from(&mut args)?;
+    let sram = args.opt_u64("sram", AcceleratorConfig::default().sram_words)?;
+    let json = args.flag("json");
+    let model = zoo::by_name(&name)?;
+    let seq = args.opt_u64("seq", model.default_seq)?;
+    args.finish()?;
+    let cfg = AcceleratorConfig { sram_words: sram, ..AcceleratorConfig::default() };
+
+    let plan = LayerPlan::plan(model.block_stages(seq), seq, &tiling, sram);
+    let ledger = explain_layer_plan(&plan, &cfg);
+    // The audit the ledger exists for: its per-stage totals re-add to the
+    // planner's own accounting exactly (the property suite pins the same
+    // identity against `sim::strip::plan_cost` across the zoo).
+    assert_eq!(ledger.total_ema(), plan.total_ema());
+
+    if json {
+        Report::new("explain")
+            .field("model", jstr(model.name))
+            .field("seq", jnum(seq))
+            .field("tile", jnum(tiling.tm))
+            .field("ledger", ledger.to_json())
+            .print();
+        return Ok(());
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "{} EMA attribution @ seq {} (tile {}, SRAM {} words, {} residency)",
+            model.name, seq, tiling.tm, sram, ledger.policy
+        ),
+        &[
+            "stage",
+            "M,N,K",
+            "×",
+            "decision",
+            "hot in/out",
+            "IS/WS tiles",
+            "input",
+            "weight",
+            "output",
+            "margin",
+            "vs per-GEMM",
+        ],
+    );
+    for (s, st) in ledger.stages.iter().zip(&plan.stages) {
+        t.row(vec![
+            s.name.to_string(),
+            format!("{},{},{}", st.spec.shape.m, st.spec.shape.n, st.spec.shape.k),
+            s.count.to_string(),
+            s.decision.clone(),
+            format!("{}/{}", s.input_hot_rows, s.output_hot_rows),
+            format!("{}/{}", s.is_tiles, s.ws_tiles),
+            sci(s.input_words as f64),
+            sci(s.weight_words as f64),
+            sci(s.output_words as f64),
+            sci(s.margin_words as f64),
+            pct(1.0 - s.ema_words() as f64 / s.per_gemm_tas_words.max(1) as f64),
+        ]);
+    }
+    println!("{}", t.to_text());
+    println!(
+        "ledger:  {} words/pass (== layer plan, word-for-word)   per-GEMM TAS {} ({} saved)",
+        sci(ledger.total_ema() as f64),
+        sci(ledger.per_gemm_tas_total() as f64),
+        ledger
+            .reduction_vs_per_gemm()
+            .map(pct)
+            .unwrap_or_else(|| "-".into()),
+    );
+    println!(
+        "margins: stationary choices saved {} words/pass vs flipped covers; residency peak {} words ({})",
+        sci(ledger
+            .stages
+            .iter()
+            .map(|s| s.count * s.margin_words)
+            .sum::<u64>() as f64),
+        sci(ledger.resident_peak_words as f64),
+        ledger.policy,
+    );
+    Ok(())
+}
+
 fn cmd_validate(mut args: Args) -> Result<()> {
     let default_dir = tas::runtime::default_artifacts_dir();
     let dir = std::path::PathBuf::from(
@@ -1032,17 +1145,29 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     let linger = Duration::from_millis(args.opt_u64("linger-ms", 2)?);
     let max_devices = args.opt_u64("devices", 1)?.max(1);
     let decode_steps = args.opt_u64("decode-steps", 0)?;
+    let trace_out = args.opt("trace-out");
+    let json = args.flag("json");
     args.finish()?;
-    anyhow::ensure!(
-        tas::runtime::artifacts_available(&dir),
-        "no artifacts at {} — run `make artifacts` first",
-        dir.display()
-    );
+
+    // Without compiled artifacts the synthetic backend serves the same
+    // routing / planning / accounting path with deterministic echo
+    // logits, so the serving demo (and its trace export) runs on a bare
+    // checkout instead of demanding `make artifacts` first.
+    let synthetic = !tas::runtime::artifacts_available(&dir);
+    if synthetic {
+        eprintln!(
+            "note: no artifacts at {} — serving through the synthetic backend",
+            dir.display()
+        );
+    }
+    let tracer = Arc::new(Tracer::new(trace_out.is_some()));
 
     let coordinator = Coordinator::start(CoordinatorOptions {
         artifacts_dir: dir,
         linger,
         max_devices,
+        synthetic,
+        tracer: tracer.clone(),
         ..Default::default()
     })?;
     let vocab = *coordinator.model.get("vocab").unwrap_or(&1024);
@@ -1062,7 +1187,7 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         })
         .collect();
 
-    println!("serving {n_requests} requests (dist={dist_name}, seed={seed}) ...");
+    eprintln!("serving {n_requests} requests (dist={dist_name}, seed={seed}) ...");
     let t0 = std::time::Instant::now();
     let responses = coordinator.run_closed_loop(requests)?;
     let wall = t0.elapsed();
@@ -1084,7 +1209,32 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     }
 
     let snap = coordinator.metrics().snapshot();
+    coordinator.shutdown();
+    if let Some(path) = &trace_out {
+        let events = tracer.events();
+        write_chrome_trace(std::path::Path::new(path), &events)?;
+        eprintln!(
+            "wrote request trace to {path} ({} events) — open in https://ui.perfetto.dev",
+            events.len()
+        );
+    }
+
     let total_tokens: usize = responses.iter().map(|r| r.logits.len() / r.vocab).sum();
+    if json {
+        Report::new("serve")
+            .field("synthetic", jbool(synthetic))
+            .field("requests_submitted", jnum(n_requests as u64))
+            .field("wall_ms", jf64(wall.as_secs_f64() * 1e3))
+            .field("snapshot", snap.to_json())
+            .print();
+        return Ok(());
+    }
+
+    // Every distribution statistic is None until a sample lands; print
+    // "-" instead of unwrapping (a fresh or decode-only run has no TTFT).
+    let ms = |v: Option<f64>| v.map(|x| format!("{x:.1} ms")).unwrap_or_else(|| "-".into());
+    let opt_pct = |v: Option<f64>| v.map(pct).unwrap_or_else(|| "-".into());
+    let depth = |v: Option<f64>| v.map(|x| format!("{x:.0}")).unwrap_or_else(|| "-".into());
     println!("\n== serving report ==");
     println!("requests        {}", snap.requests);
     println!("batches         {}", snap.batches);
@@ -1095,11 +1245,42 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         total_tokens as f64 / wall.as_secs_f64()
     );
     println!(
-        "latency         p50 {:.1} ms  p99 {:.1} ms  mean {:.1} ms",
-        snap.latency_p50_ms, snap.latency_p99_ms, snap.latency_mean_ms
+        "latency         p50 {}  p99 {}  mean {}",
+        ms(snap.latency_p50_ms),
+        ms(snap.latency_p99_ms),
+        ms(snap.latency_mean_ms)
     );
-    println!("batch exec mean {:.1} ms", snap.batch_exec_mean_ms);
-    println!("padding         {:.1}%", snap.padding_fraction() * 100.0);
+    println!(
+        "TTFT            p50 {}  p99 {}",
+        ms(snap.ttft_p50_ms),
+        ms(snap.ttft_p99_ms)
+    );
+    if snap.decode_batches > 0 {
+        println!(
+            "TPOT            p50 {}  p99 {}",
+            ms(snap.tpot_p50_ms),
+            ms(snap.tpot_p99_ms)
+        );
+    }
+    println!(
+        "queues          prefill {} (peak {})  decode {} (peak {})",
+        depth(snap.queue_depth),
+        depth(snap.queue_depth_peak),
+        depth(snap.decode_queue_depth),
+        depth(snap.decode_queue_depth_peak)
+    );
+    println!(
+        "batch occupancy {}   planner cache {} hits / {} misses / {} evictions",
+        opt_pct(snap.batch_occupancy),
+        snap.planner_cache.hits,
+        snap.planner_cache.misses,
+        snap.planner_cache.evictions
+    );
+    println!("batch exec mean {}", ms(snap.batch_exec_mean_ms));
+    println!(
+        "padding         {}",
+        opt_pct(snap.padding_fraction())
+    );
     println!(
         "EMA (accel-side): naive {}  ayaka {}  tas {}",
         sci(snap.ema_naive_words as f64),
@@ -1108,13 +1289,13 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     );
     println!(
         "EMA reduction   vs naive {}   vs ayaka [9] {}",
-        pct(snap.ema_reduction_vs_naive()),
-        pct(snap.ema_reduction_vs_ayaka())
+        opt_pct(snap.ema_reduction_vs_naive()),
+        opt_pct(snap.ema_reduction_vs_ayaka())
     );
     println!(
         "layer planning  {} words ({} below per-GEMM TAS via SRAM residency)",
         sci(snap.ema_plan_words as f64),
-        pct(snap.ema_reduction_vs_per_gemm())
+        opt_pct(snap.ema_reduction_vs_per_gemm())
     );
     if max_devices > 1 {
         let per_dev: Vec<String> = snap
@@ -1134,12 +1315,11 @@ fn cmd_serve(mut args: Args) -> Result<()> {
             "decode lane     {} steps / {} tokens, {} EMA words/token ({} below per-GEMM TAS, {} cache words from SRAM)",
             snap.decode_batches,
             snap.decode_tokens,
-            sci(snap.decode_per_token_ema()),
-            pct(snap.decode_reduction_vs_per_gemm()),
+            snap.decode_per_token_ema().map(sci).unwrap_or_else(|| "-".into()),
+            opt_pct(snap.decode_reduction_vs_per_gemm()),
             sci(snap.decode_cache_hot_words as f64)
         );
     }
-    coordinator.shutdown();
     Ok(())
 }
 

@@ -1,0 +1,131 @@
+//! Chrome trace-event JSON export.
+//!
+//! Serialises [`TraceEvent`]s in the Trace Event Format consumed by
+//! `chrome://tracing` and <https://ui.perfetto.dev>: an object with a
+//! `traceEvents` array of `B`/`E`/`i`/`C` events plus `thread_name`
+//! metadata, one tid per recorded track (assigned in first-seen order),
+//! microsecond timestamps.
+
+use super::span::{Phase, TraceEvent};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Build the `{"traceEvents": [...]}` document for a recorded event list.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
+    let mut tids: BTreeMap<&str, u64> = BTreeMap::new();
+    let mut out: Vec<Json> = Vec::new();
+    // tids in first-seen order so track rows match record order.
+    for e in events {
+        let next = tids.len() as u64 + 1;
+        let tid = *tids.entry(e.track.as_str()).or_insert(next);
+        if tid == next {
+            out.push(obj(vec![
+                ("ph", Json::Str("M".into())),
+                ("name", Json::Str("thread_name".into())),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(tid as f64)),
+                (
+                    "args",
+                    obj(vec![("name", Json::Str(e.track.clone()))]),
+                ),
+            ]));
+        }
+    }
+    for e in events {
+        let tid = tids[e.track.as_str()];
+        let mut fields = vec![
+            ("ph", Json::Str(ph(e.phase).into())),
+            ("name", Json::Str(e.name.clone())),
+            ("cat", Json::Str("tas".into())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(tid as f64)),
+            ("ts", Json::Num(e.ts_us as f64)),
+        ];
+        match e.phase {
+            Phase::Instant => fields.push(("s", Json::Str("t".into()))),
+            Phase::Counter => fields.push((
+                "args",
+                obj(vec![("value", Json::Num(e.value.unwrap_or(0.0)))]),
+            )),
+            _ => {}
+        }
+        out.push(obj(fields));
+    }
+    obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+/// Write the trace document to `path` (compact JSON, one line).
+pub fn write_chrome_trace(
+    path: &Path,
+    events: &[TraceEvent],
+) -> anyhow::Result<()> {
+    let doc = chrome_trace_json(events);
+    std::fs::write(path, doc.to_string_compact())
+        .map_err(|e| anyhow::anyhow!("writing trace {}: {e}", path.display()))
+}
+
+fn ph(p: Phase) -> &'static str {
+    match p {
+        Phase::Begin => "B",
+        Phase::End => "E",
+        Phase::Instant => "i",
+        Phase::Counter => "C",
+    }
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::Tracer;
+
+    #[test]
+    fn export_roundtrips_and_assigns_tracks() {
+        let t = Tracer::new(true);
+        t.span_at("req 1", "queued", 0, 50);
+        t.span_at("device 0", "exec", 10, 90);
+        t.counter("queues", "depth", 4.0);
+        let doc = chrome_trace_json(&t.events());
+        let text = doc.to_string_compact();
+        let parsed = Json::parse(&text).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 thread_name metadata + 4 span events + 1 counter.
+        assert_eq!(events.len(), 8);
+        let metas: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("M"))
+            .collect();
+        assert_eq!(metas.len(), 3);
+        // Distinct tracks get distinct tids.
+        let tids: std::collections::BTreeSet<u64> = metas
+            .iter()
+            .map(|e| e.get("tid").unwrap().as_u64().unwrap())
+            .collect();
+        assert_eq!(tids.len(), 3);
+    }
+
+    #[test]
+    fn write_creates_a_parseable_file() {
+        let t = Tracer::new(true);
+        t.span_at("link", "round 0", 0, 7);
+        let dir = std::env::temp_dir().join("tas-obs-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        write_chrome_trace(&path, &t.events()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,30 @@
+//! Observability: request spans, counter/gauge registry, Chrome-trace export.
+//!
+//! The paper's claim is about *where words move*; this module makes the
+//! repro's movement and latency inspectable instead of scalar-only:
+//!
+//! * [`span::Tracer`] — a lightweight span/event recorder (no external
+//!   deps; the crate builds bare).  The coordinator threads one through the
+//!   request lifecycle (`enqueue → batch → plan → dispatch → complete`),
+//!   and the simulated shard path replays device/link timelines into one.
+//!   A disabled tracer is a branch and a return — cheap enough to leave
+//!   compiled into the planner hot path (`bench_planner` pins ≤5%).
+//! * [`registry::Registry`] — named monotonic counters and last-value/peak
+//!   gauges; [`crate::coordinator::Metrics`] stores its scalar accounting
+//!   here instead of one struct field per statistic.
+//! * [`chrome`] — serialises recorded events as Chrome trace-event JSON
+//!   (`chrome://tracing`, <https://ui.perfetto.dev>), one track per span
+//!   source, B/E pairs nested per track, microsecond timestamps.
+//! * [`timeline`] — replays the sharded-GEMM latency decomposition
+//!   (compute bursts, exposed link waits, collective round drains) into a
+//!   tracer, so `tas shard --trace-out` exports the simulated schedule.
+
+pub mod chrome;
+pub mod registry;
+pub mod span;
+pub mod timeline;
+
+pub use chrome::{chrome_trace_json, write_chrome_trace};
+pub use registry::Registry;
+pub use span::{Phase, TraceEvent, Tracer};
+pub use timeline::shard_gemm_timeline;

@@ -1,0 +1,82 @@
+//! Counter/gauge registry.
+//!
+//! Replaces the one-struct-field-per-statistic pattern in
+//! [`crate::coordinator::Metrics`]: monotonic counters and last-value
+//! gauges keyed by `&'static str` names, so adding a statistic is one
+//! `add`/`set_gauge` call site plus one snapshot read — no struct churn.
+//! Gauges also retain their high-water mark (`peak`), which is what the
+//! queue-depth telemetry actually wants.
+
+use std::collections::BTreeMap;
+
+/// Named monotonic counters + last-value/peak gauges.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, Gauge>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Gauge {
+    last: f64,
+    peak: f64,
+}
+
+impl Registry {
+    /// Add `delta` to the named counter (created at zero).
+    pub fn add(&mut self, key: &'static str, delta: u64) {
+        *self.counters.entry(key).or_insert(0) += delta;
+    }
+
+    /// Current counter value; absent counters read as zero.
+    pub fn counter(&self, key: &'static str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    /// Record a gauge sample (keeps the last value and the peak).
+    pub fn set_gauge(&mut self, key: &'static str, value: f64) {
+        let g = self.gauges.entry(key).or_default();
+        g.last = value;
+        g.peak = g.peak.max(value);
+    }
+
+    /// Last sampled gauge value, `None` if never set.
+    pub fn gauge(&self, key: &'static str) -> Option<f64> {
+        self.gauges.get(key).map(|g| g.last)
+    }
+
+    /// High-water mark of the gauge, `None` if never set.
+    pub fn gauge_peak(&self, key: &'static str) -> Option<f64> {
+        self.gauges.get(key).map(|g| g.peak)
+    }
+
+    /// All counters, for bulk export.
+    pub fn counters(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.counters.iter().map(|(k, v)| (*k, *v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_from_zero() {
+        let mut r = Registry::default();
+        assert_eq!(r.counter("requests"), 0);
+        r.add("requests", 3);
+        r.add("requests", 4);
+        assert_eq!(r.counter("requests"), 7);
+        assert_eq!(r.counters().count(), 1);
+    }
+
+    #[test]
+    fn gauges_keep_last_and_peak() {
+        let mut r = Registry::default();
+        assert_eq!(r.gauge("queue_depth"), None);
+        r.set_gauge("queue_depth", 5.0);
+        r.set_gauge("queue_depth", 2.0);
+        assert_eq!(r.gauge("queue_depth"), Some(2.0));
+        assert_eq!(r.gauge_peak("queue_depth"), Some(5.0));
+    }
+}

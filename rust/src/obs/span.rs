@@ -1,0 +1,242 @@
+//! Span/event tracer.
+//!
+//! Events live on named *tracks* (one Chrome/Perfetto thread row each): a
+//! served request gets its own track, a simulated device or link gets one
+//! per lane.  Within a track, `begin`/`end` pairs must nest like a call
+//! stack — the recorder clamps timestamps monotonically per track so the
+//! exported trace is always well-formed even when spans are reconstructed
+//! after the fact from stored [`std::time::Instant`]s.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Event kind, mirroring the Chrome trace-event `ph` field.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Span open (`ph: "B"`).
+    Begin,
+    /// Span close (`ph: "E"`); closes the innermost open span on the track.
+    End,
+    /// Zero-duration marker (`ph: "i"`).
+    Instant,
+    /// Sampled counter value (`ph: "C"`).
+    Counter,
+}
+
+/// One recorded event.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Track (rendered as a thread row; tids are assigned at export).
+    pub track: String,
+    /// Span/marker/counter name (kept on `End` for readability).
+    pub name: String,
+    pub phase: Phase,
+    /// Microseconds since the tracer epoch (or simulated cycles).
+    pub ts_us: u64,
+    /// Counter value; `None` for span/marker events.
+    pub value: Option<f64>,
+}
+
+#[derive(Default)]
+struct TraceBuf {
+    events: Vec<TraceEvent>,
+    /// Last timestamp per track, for monotonic clamping.
+    last_ts: BTreeMap<String, u64>,
+    /// Open-span depth per track, so `end` without `begin` is dropped
+    /// instead of corrupting the nesting.
+    depth: BTreeMap<String, u64>,
+}
+
+/// Thread-safe span recorder anchored to a construction-time epoch.
+///
+/// Disabled tracers reject every record with a single branch, so call
+/// sites can stay unconditionally instrumented (the `bench_planner`
+/// overhead guard pins the disabled cost at ≤5%).
+pub struct Tracer {
+    enabled: bool,
+    epoch: Instant,
+    buf: Mutex<TraceBuf>,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("enabled", &self.enabled)
+            .finish_non_exhaustive()
+    }
+}
+
+impl Tracer {
+    pub fn new(enabled: bool) -> Self {
+        Tracer {
+            enabled,
+            epoch: Instant::now(),
+            buf: Mutex::new(TraceBuf::default()),
+        }
+    }
+
+    /// A tracer that records nothing (the default for `Coordinator`).
+    pub fn disabled() -> Self {
+        Tracer::new(false)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Microseconds elapsed since the tracer epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Convert a stored [`Instant`] (e.g. `Request::arrived`) to trace time.
+    pub fn ts_of(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    pub fn begin(&self, track: &str, name: &str) {
+        self.begin_at(track, name, self.now_us());
+    }
+
+    pub fn begin_at(&self, track: &str, name: &str, ts_us: u64) {
+        if !self.enabled {
+            return;
+        }
+        let mut b = self.buf.lock().unwrap();
+        *b.depth.entry(track.to_string()).or_insert(0) += 1;
+        push(&mut b, track, name, Phase::Begin, ts_us, None);
+    }
+
+    pub fn end(&self, track: &str, name: &str) {
+        self.end_at(track, name, self.now_us());
+    }
+
+    pub fn end_at(&self, track: &str, name: &str, ts_us: u64) {
+        if !self.enabled {
+            return;
+        }
+        let mut b = self.buf.lock().unwrap();
+        match b.depth.get_mut(track) {
+            Some(d) if *d > 0 => *d -= 1,
+            _ => return, // unmatched end: drop rather than corrupt nesting
+        }
+        push(&mut b, track, name, Phase::End, ts_us, None);
+    }
+
+    /// Record an already-elapsed span from explicit timestamps.
+    pub fn span_at(&self, track: &str, name: &str, ts_us: u64, dur_us: u64) {
+        self.begin_at(track, name, ts_us);
+        self.end_at(track, name, ts_us.saturating_add(dur_us));
+    }
+
+    pub fn instant(&self, track: &str, name: &str) {
+        self.instant_at(track, name, self.now_us());
+    }
+
+    pub fn instant_at(&self, track: &str, name: &str, ts_us: u64) {
+        if !self.enabled {
+            return;
+        }
+        let mut b = self.buf.lock().unwrap();
+        push(&mut b, track, name, Phase::Instant, ts_us, None);
+    }
+
+    /// Record a counter sample (rendered as a Perfetto counter track).
+    pub fn counter(&self, track: &str, name: &str, value: f64) {
+        if !self.enabled {
+            return;
+        }
+        let ts = self.now_us();
+        let mut b = self.buf.lock().unwrap();
+        push(&mut b, track, name, Phase::Counter, ts, Some(value));
+    }
+
+    /// Snapshot of everything recorded so far, in record order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.buf.lock().unwrap().events.clone()
+    }
+}
+
+fn push(
+    b: &mut TraceBuf,
+    track: &str,
+    name: &str,
+    phase: Phase,
+    ts_us: u64,
+    value: Option<f64>,
+) {
+    // Monotonic clamp per track: spans rebuilt from stored Instants can
+    // race the live clock by a few µs; the trace must never run backwards.
+    let last = b.last_ts.entry(track.to_string()).or_insert(0);
+    let ts = ts_us.max(*last);
+    *last = ts;
+    b.events.push(TraceEvent {
+        track: track.to_string(),
+        name: name.to_string(),
+        phase,
+        ts_us: ts,
+        value,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::disabled();
+        t.begin("a", "x");
+        t.end("a", "x");
+        t.instant("a", "m");
+        t.counter("c", "depth", 3.0);
+        assert!(t.events().is_empty());
+    }
+
+    #[test]
+    fn spans_record_in_order_with_monotonic_ts() {
+        let t = Tracer::new(true);
+        t.span_at("req 1", "queued", 100, 40);
+        t.span_at("req 1", "exec", 140, 60);
+        let ev = t.events();
+        assert_eq!(ev.len(), 4);
+        assert!(ev.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+        assert_eq!(ev[0].phase, Phase::Begin);
+        assert_eq!(ev[1].phase, Phase::End);
+        assert_eq!(ev[1].ts_us, 140);
+    }
+
+    #[test]
+    fn backwards_timestamps_are_clamped() {
+        let t = Tracer::new(true);
+        t.span_at("d0", "a", 500, 10);
+        t.span_at("d0", "b", 100, 10); // starts before the last end
+        let ev = t.events();
+        assert!(ev.iter().all(|e| e.ts_us >= 510));
+    }
+
+    #[test]
+    fn unmatched_end_is_dropped() {
+        let t = Tracer::new(true);
+        t.end_at("d0", "ghost", 10);
+        t.begin_at("d0", "real", 20);
+        t.end_at("d0", "real", 30);
+        let ev = t.events();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].phase, Phase::Begin);
+    }
+
+    #[test]
+    fn nesting_depth_is_per_track() {
+        let t = Tracer::new(true);
+        t.begin_at("a", "outer", 0);
+        t.begin_at("a", "inner", 1);
+        t.end_at("b", "ghost", 2); // other track: dropped
+        t.end_at("a", "inner", 3);
+        t.end_at("a", "outer", 4);
+        let ev = t.events();
+        assert_eq!(ev.len(), 4);
+        assert!(ev.iter().all(|e| e.track == "a"));
+    }
+}

@@ -1,0 +1,118 @@
+//! Simulated device/link timelines as trace spans.
+//!
+//! `tas shard` computes per-device compute bursts, link round drains,
+//! and stall attribution ([`crate::sim::shard::sharded_fused_cost`]) and
+//! used to throw the shape of that schedule away, keeping only totals.
+//! This module replays the closed-form latency decomposition into a
+//! [`Tracer`] so serialized-vs-overlapped becomes a picture: one track
+//! per device (busy burst + the link time its own compute could not
+//! hide, with the DMA-stall share nested inside the burst) and one track
+//! for the interconnect draining its collective rounds.
+//!
+//! Timestamps are **simulated cycles**, not wall-clock microseconds; the
+//! Chrome viewer only needs a consistent unit.  By construction the
+//! longest track of one GEMM's timeline spans exactly
+//! [`ShardCost::overlapped_cycles`] — pinned by the trace property suite
+//! (`rust/tests/trace_and_ledger.rs`).
+
+use super::span::Tracer;
+use crate::sim::ShardCost;
+
+/// Append one sharded GEMM's simulated timeline to `tracer`, starting at
+/// simulated cycle `t0`.  `rounds` is the interconnect's per-round cycle
+/// list ([`crate::sim::shard_link_rounds`]; its sum is the GEMM's
+/// serialized link time).  Returns the GEMM's end time,
+/// `t0 + overlapped_cycles` — the start cursor for the next GEMM, so a
+/// whole forward pass chains into one contiguous trace.
+pub fn shard_gemm_timeline(
+    tracer: &Tracer,
+    label: &str,
+    cost: &ShardCost,
+    rounds: &[u64],
+    t0: u64,
+) -> u64 {
+    let link = cost.link_cycles();
+    for dc in &cost.per_device {
+        let track = format!("device {}", dc.device);
+        let busy = dc.cycles.total_cycles;
+        tracer.begin_at(&track, &format!("{label} compute"), t0);
+        // The step-granular (DMA ‖ PE) stall share, nested at the tail of
+        // the burst: turnaround + bandwidth time the pipeline exposed.
+        let stall = dc.pipeline.stall_cycles.min(busy);
+        if stall > 0 {
+            tracer.span_at(&track, &format!("{label} stall"), t0 + busy - stall, stall);
+        }
+        tracer.end_at(&track, &format!("{label} compute"), t0 + busy);
+        // Link time this device's own PE-busy window could not hide —
+        // the exposed term of the overlapped model
+        // ([`crate::sim::ShardLatency::from_parts`]).
+        let exposed = link - link.min(dc.cycles.compute_cycles);
+        if exposed > 0 {
+            tracer.span_at(&track, &format!("{label} link wait"), t0 + busy, exposed);
+        }
+    }
+    let mut t = t0;
+    for (i, &dur) in rounds.iter().enumerate() {
+        tracer.span_at("link", &format!("{label} round {i}"), t, dur);
+        t += dur;
+    }
+    t0 + cost.overlapped_cycles()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Interconnect, InterconnectConfig};
+    use crate::config::AcceleratorConfig;
+    use crate::dataflow::{shard_gemm, ShardAxis, ShardSpec};
+    use crate::energy::EnergyModel;
+    use crate::gemm::{GemmShape, Tiling};
+    use crate::obs::span::Phase;
+    use crate::sim::{shard_link_rounds, sharded_fused_cost};
+
+    #[test]
+    fn longest_track_spans_the_overlapped_latency() {
+        let shape = GemmShape::new(256, 768, 768);
+        let tiling = Tiling::square(16);
+        let spec = ShardSpec { devices: 4, axis: ShardAxis::Rows, link_aware: false };
+        let sp = shard_gemm(&shape, &tiling, spec, 0.0);
+        let cfg = AcceleratorConfig::default();
+        let icx = Interconnect::new(InterconnectConfig::default());
+        let cost = sharded_fused_cost(&sp, &cfg, &EnergyModel::default(), &icx);
+        let rounds = shard_link_rounds(&sp, &icx);
+
+        let tracer = Tracer::new(true);
+        let end = shard_gemm_timeline(&tracer, "qkv", &cost, &rounds, 0);
+        assert_eq!(end, cost.overlapped_cycles());
+
+        // Per track, sum top-level B..E durations; the longest track is
+        // the overlapped critical path, exactly.
+        let mut sums: std::collections::BTreeMap<String, u64> = Default::default();
+        let mut depth: std::collections::BTreeMap<String, (u64, u64)> = Default::default();
+        for e in tracer.events() {
+            let (d, open_ts) = depth.entry(e.track.clone()).or_insert((0, 0));
+            match e.phase {
+                Phase::Begin => {
+                    if *d == 0 {
+                        *open_ts = e.ts_us;
+                    }
+                    *d += 1;
+                }
+                Phase::End => {
+                    *d -= 1;
+                    if *d == 0 {
+                        *sums.entry(e.track.clone()).or_insert(0) += e.ts_us - *open_ts;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let longest = sums.values().copied().max().unwrap();
+        assert_eq!(longest, cost.overlapped_cycles());
+        // and the link track, when present, drains exactly the
+        // serialized link time
+        if let Some(l) = sums.get("link") {
+            assert_eq!(*l, cost.link_cycles());
+        }
+    }
+}

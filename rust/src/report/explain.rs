@@ -1,0 +1,245 @@
+//! The `tas explain` EMA attribution ledger.
+//!
+//! Walks a layer plan ([`crate::dataflow::LayerPlan`]) stage by stage and
+//! attributes every DRAM word the closed-form cost model charges: which
+//! tensor moved it (input read / weight read / output write), what the
+//! per-strip stationary choice was, how many words the choice saved over
+//! the flipped orientation ([`StripShare::margin_words`]), and how many
+//! rows the residency allocator parked in SRAM for the stage.
+//!
+//! The ledger is an *audit*, not a second model: per-stage word totals
+//! are rebuilt from [`attribute_strips`] (strip bodies) and
+//! [`crate::dataflow::Plan::ema`] (fixed-body fallback), and the property
+//! suite pins them to [`crate::sim::strip::plan_cost`] **word-for-word**
+//! across the model zoo — if the ledger and the planner ever disagree on
+//! a single word, a test fails, not a report footnote.
+
+use crate::config::AcceleratorConfig;
+use crate::dataflow::{LayerPlan, PlanBody, StagePlan};
+use crate::report::json::{jarr, jnum, jobj, jopt, jstr};
+use crate::sim::strip::{attribute_strips, StripShare};
+use crate::util::json::Json;
+
+/// Ledger row for one GEMM stage of the planned block.
+#[derive(Clone, Debug)]
+pub struct StageLedger {
+    /// Stage role, e.g. `"q"`, `"ffn1"`.
+    pub name: &'static str,
+    /// Instances per forward pass (usually the layer count).
+    pub count: u64,
+    /// Stationary decision summary across the stage's slices.
+    pub decision: String,
+    /// Device the stage runs on (0 unless the plan is sharded).
+    pub device: usize,
+    /// Input/output residency, as the planner's `hot/total` notation.
+    pub input_residency: String,
+    pub output_residency: String,
+    /// SRAM-resident rows of the stage's input / output tensors — the
+    /// pages the residency allocator granted this stage.
+    pub input_hot_rows: u64,
+    pub output_hot_rows: u64,
+    /// Output tiles covered by input-stationary / weight-stationary
+    /// strips across the stage's slices.
+    pub is_tiles: u64,
+    pub ws_tiles: u64,
+    /// Gated DRAM words per stage instance, by tensor.
+    pub input_words: u64,
+    pub weight_words: u64,
+    pub output_words: u64,
+    /// Words the stationary choices saved per instance vs re-covering
+    /// each strip in the flipped orientation (Σ strip margins).
+    pub margin_words: u64,
+    /// Per-instance words under per-GEMM TAS — the paper's baseline.
+    pub per_gemm_tas_words: u64,
+}
+
+impl StageLedger {
+    /// Total gated words per stage instance — must equal the planner's
+    /// [`StagePlan::ema_words`] and the closed-form
+    /// [`crate::sim::strip::plan_cost`] for the same slices.
+    pub fn ema_words(&self) -> u64 {
+        self.input_words + self.weight_words + self.output_words
+    }
+}
+
+/// The full attribution ledger of one planned block.
+#[derive(Clone, Debug)]
+pub struct LayerLedger {
+    /// Padded token count the block was planned for.
+    pub tokens: u64,
+    /// SRAM words the residency planner could park activations in.
+    pub sram_budget: u64,
+    /// Residency model that produced the plan (`"paged"`, ...).
+    pub policy: &'static str,
+    /// Peak SRAM words resident at any stage of the chain.
+    pub resident_peak_words: u64,
+    pub stages: Vec<StageLedger>,
+}
+
+impl LayerLedger {
+    /// Total DRAM words of one forward pass (Σ count × stage words) —
+    /// equals [`LayerPlan::total_ema`] by construction.
+    pub fn total_ema(&self) -> u64 {
+        self.stages.iter().map(|s| s.count * s.ema_words()).sum()
+    }
+
+    /// The per-GEMM TAS baseline for the same pass.
+    pub fn per_gemm_tas_total(&self) -> u64 {
+        self.stages
+            .iter()
+            .map(|s| s.count * s.per_gemm_tas_words)
+            .sum()
+    }
+
+    /// Fractional EMA saved vs per-GEMM TAS; `None` on an empty baseline.
+    pub fn reduction_vs_per_gemm(&self) -> Option<f64> {
+        let base = self.per_gemm_tas_total();
+        if base == 0 {
+            None
+        } else {
+            Some(1.0 - self.total_ema() as f64 / base as f64)
+        }
+    }
+
+    /// The ledger as a JSON value (embedded in the `tas explain --json`
+    /// report envelope).
+    pub fn to_json(&self) -> Json {
+        let stages = self
+            .stages
+            .iter()
+            .map(|s| {
+                jobj(vec![
+                    ("stage", jstr(s.name)),
+                    ("count", jnum(s.count)),
+                    ("decision", jstr(&s.decision)),
+                    ("device", jnum(s.device as u64)),
+                    ("input_residency", jstr(&s.input_residency)),
+                    ("output_residency", jstr(&s.output_residency)),
+                    ("input_hot_rows", jnum(s.input_hot_rows)),
+                    ("output_hot_rows", jnum(s.output_hot_rows)),
+                    ("is_tiles", jnum(s.is_tiles)),
+                    ("ws_tiles", jnum(s.ws_tiles)),
+                    ("input_words", jnum(s.input_words)),
+                    ("weight_words", jnum(s.weight_words)),
+                    ("output_words", jnum(s.output_words)),
+                    ("ema_words", jnum(s.ema_words())),
+                    ("margin_words", jnum(s.margin_words)),
+                    ("per_gemm_tas_words", jnum(s.per_gemm_tas_words)),
+                ])
+            })
+            .collect();
+        jobj(vec![
+            ("tokens", jnum(self.tokens)),
+            ("sram_words", jnum(self.sram_budget)),
+            ("policy", jstr(self.policy)),
+            ("resident_peak_words", jnum(self.resident_peak_words)),
+            ("total_ema_words", jnum(self.total_ema())),
+            ("per_gemm_tas_words", jnum(self.per_gemm_tas_total())),
+            ("reduction_vs_per_gemm", jopt(self.reduction_vs_per_gemm())),
+            ("stages", jarr(stages)),
+        ])
+    }
+}
+
+/// Attribute one stage: per-strip shares on strip bodies, the analytic
+/// breakdown on fixed-body fallbacks (no strips to attribute — margin 0).
+fn stage_ledger(stage: &StagePlan, cfg: &AcceleratorConfig) -> StageLedger {
+    let (mut iw, mut ww, mut ow, mut margin) = (0u64, 0u64, 0u64, 0u64);
+    let (mut is_tiles, mut ws_tiles) = (0u64, 0u64);
+    for plan in &stage.slices {
+        match &plan.body {
+            PlanBody::Strips(_) => {
+                for share in attribute_strips(plan, cfg) {
+                    let StripShare { input_words, weight_words, output_words, .. } = share;
+                    iw += input_words;
+                    ww += weight_words;
+                    ow += output_words;
+                    margin += share.margin_words();
+                }
+            }
+            PlanBody::Fixed(_) => {
+                let e = plan.ema();
+                iw += e.input;
+                ww += e.weight;
+                ow += e.output;
+            }
+        }
+        let (is, ws, _) = plan.tile_mix();
+        is_tiles += is;
+        ws_tiles += ws;
+    }
+    StageLedger {
+        name: stage.spec.name,
+        count: stage.spec.count,
+        decision: stage.describe(),
+        device: stage.device,
+        input_residency: stage.input.describe(),
+        output_residency: stage.output.describe(),
+        input_hot_rows: stage.input.hot_in(stage.spec.shape.m),
+        output_hot_rows: stage.output.hot_in(stage.spec.shape.m),
+        is_tiles,
+        ws_tiles,
+        input_words: iw,
+        weight_words: ww,
+        output_words: ow,
+        margin_words: margin,
+        per_gemm_tas_words: stage.per_gemm_tas_words,
+    }
+}
+
+/// Build the attribution ledger for a planned block.
+pub fn explain_layer_plan(plan: &LayerPlan, cfg: &AcceleratorConfig) -> LayerLedger {
+    LayerLedger {
+        tokens: plan.tokens,
+        sram_budget: plan.sram_budget,
+        policy: plan.policy.name(),
+        resident_peak_words: plan.resident_peak_words,
+        stages: plan.stages.iter().map(|s| stage_ledger(s, cfg)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::EnergyModel;
+    use crate::gemm::Tiling;
+    use crate::models::zoo;
+    use crate::sim::strip::plan_cost;
+
+    #[test]
+    fn ledger_matches_the_planner_and_the_cost_model() {
+        let model = zoo::by_name("bert-base").unwrap();
+        let seq = 64;
+        let tiling = Tiling::square(16);
+        let cfg = AcceleratorConfig::default();
+        let plan =
+            LayerPlan::plan(model.block_stages(seq), seq, &tiling, cfg.sram_words);
+        let ledger = explain_layer_plan(&plan, &cfg);
+
+        // Layer-level reconciliation with the planner's own totals.
+        assert_eq!(ledger.total_ema(), plan.total_ema());
+        assert_eq!(ledger.per_gemm_tas_total(), plan.per_gemm_tas_total());
+
+        // Stage-level reconciliation with plan_cost, word for word.
+        let em = EnergyModel::default();
+        for (row, stage) in ledger.stages.iter().zip(&plan.stages) {
+            assert_eq!(row.ema_words(), stage.ema_words, "{}", row.name);
+            let cost: u64 = stage
+                .slices
+                .iter()
+                .map(|p| {
+                    let (i, w, o) = plan_cost(p, &cfg, &em).ema.table2();
+                    i + w + o
+                })
+                .sum();
+            assert_eq!(row.ema_words(), cost, "{}", row.name);
+        }
+
+        // The document is valid JSON with the expected keys.
+        let doc = ledger.to_json();
+        let text = doc.to_string_compact();
+        assert!(!text.contains("NaN"));
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        assert!(parsed.get("stages").unwrap().as_arr().unwrap().len() >= 6);
+    }
+}

@@ -32,6 +32,19 @@ pub fn jbool(v: bool) -> Json {
     Json::Bool(v)
 }
 
+pub fn jnull() -> Json {
+    Json::Null
+}
+
+/// `null` for absent values — the JSON-safe encoding of "no samples yet"
+/// (a bare `NaN` token is not valid JSON and breaks downstream parsers).
+pub fn jopt(v: Option<f64>) -> Json {
+    match v {
+        Some(x) if x.is_finite() => Json::Num(x),
+        _ => Json::Null,
+    }
+}
+
 pub fn jarr(items: Vec<Json>) -> Json {
     Json::Arr(items)
 }
@@ -99,6 +112,10 @@ mod tests {
         assert_eq!(jnum(7), Json::Num(7.0));
         assert_eq!(jstr("x"), Json::Str("x".into()));
         assert_eq!(jbool(false), Json::Bool(false));
+        assert_eq!(jnull(), Json::Null);
+        assert_eq!(jopt(None), Json::Null);
+        assert_eq!(jopt(Some(f64::NAN)), Json::Null);
+        assert_eq!(jopt(Some(2.5)), Json::Num(2.5));
         let o = jobj(vec![("a", jnum(1)), ("b", jarr(vec![jnum(2)]))]);
         assert_eq!(o.get("a").unwrap().as_u64(), Some(1));
         assert_eq!(o.get("b").unwrap().as_arr().unwrap().len(), 1);

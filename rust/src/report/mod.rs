@@ -2,8 +2,10 @@
 //! tables from the analytic model / simulator, shaped like the original
 //! so the two can be diffed by eye.  Used by `tas tables`, the benches
 //! and EXPERIMENTS.md.  [`json`] holds the shared `--json` report
-//! envelope every CLI subcommand emits.
+//! envelope every CLI subcommand emits; [`explain`] builds the
+//! `tas explain` EMA attribution ledger.
 
+pub mod explain;
 pub mod figviz;
 pub mod json;
 

@@ -359,6 +359,97 @@ impl StripWalker {
     }
 }
 
+/// One strip's share of a plan's DRAM traffic, plus the stationary
+/// margin — the `tas explain` ledger row ([`crate::report::explain`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StripShare {
+    /// Stationary orientation the planner chose for this strip.
+    pub kind: StripKind,
+    /// Output tiles the strip covers.
+    pub tiles: u64,
+    /// Gated DRAM words the strip charges over the full contraction
+    /// (input reads, weight reads, output writes) — residency-gated
+    /// exactly like the full walk, so the shares sum to [`plan_cost`]'s
+    /// EMA word-for-word.
+    pub input_words: u64,
+    pub weight_words: u64,
+    pub output_words: u64,
+    /// Words the same tile rectangle charges with its stationary reuse
+    /// broken: the rectangle re-covered by single-tile strips of the
+    /// *opposite* orientation, which reload the formerly-stationary
+    /// operand at every tile.  Always ≥ the chosen words.
+    pub flipped_words: u64,
+}
+
+impl StripShare {
+    /// Total gated words the strip charges.
+    pub fn words(&self) -> u64 {
+        self.input_words + self.weight_words + self.output_words
+    }
+
+    /// Sign-rule margin: words saved by keeping the chosen operand
+    /// stationary across the strip instead of re-covering its tiles in
+    /// the flipped orientation.  Non-negative by construction.
+    pub fn margin_words(&self) -> u64 {
+        self.flipped_words.saturating_sub(self.words())
+    }
+}
+
+/// Per-strip attribution of one plan's EMA: each strip priced by a fresh
+/// walker over its full round range.  Word accumulation in the walker is
+/// additive and state-free (only direction switches and stalls carry
+/// state, and those are not attributed), so the shares sum to the whole
+/// plan's EMA **word-for-word**, residency gating included — pinned by
+/// `strip_shares_sum_to_plan_cost` below and the ledger property suite.
+///
+/// Fixed-scheme bodies have no strip structure and return an empty vec;
+/// callers fall back to [`crate::dataflow::Plan::ema`] for those.
+pub fn attribute_strips(plan: &Plan, cfg: &AcceleratorConfig) -> Vec<StripShare> {
+    let strips = match &plan.body {
+        PlanBody::Strips(s) => s,
+        PlanBody::Fixed(_) => return Vec::new(),
+    };
+    let (_, gn, _) = plan.tiling.grid(&plan.shape);
+    strips
+        .iter()
+        .map(|strip| {
+            let mut chosen = StripWalker::new(cfg);
+            chosen.fold_strip(plan, strip, 0, gn);
+            let (i, w, o) = chosen.finish().ema.table2();
+
+            // The flipped re-cover: single-tile strips of the opposite
+            // kind.  O(1) per tile (fold_strip compresses rounds), so the
+            // whole attribution is O(tiles), acceptable for a report path.
+            let flipped_kind = match strip.kind {
+                StripKind::InputStationary => StripKind::WeightStationary,
+                StripKind::WeightStationary => StripKind::InputStationary,
+            };
+            let mut flipped = StripWalker::new(cfg);
+            for ti in strip.i0..strip.i1 {
+                for tj in strip.j0..strip.j1 {
+                    let tile = Strip {
+                        kind: flipped_kind,
+                        i0: ti,
+                        i1: ti + 1,
+                        j0: tj,
+                        j1: tj + 1,
+                    };
+                    flipped.fold_strip(plan, &tile, 0, gn);
+                }
+            }
+            let (fi, fw, fo) = flipped.finish().ema.table2();
+            StripShare {
+                kind: strip.kind,
+                tiles: strip.tiles(),
+                input_words: i,
+                weight_words: w,
+                output_words: o,
+                flipped_words: fi + fw + fo,
+            }
+        })
+        .collect()
+}
+
 /// Closed-form EMA + pipeline pair for one plan — the cheap inner query
 /// of the cycle model ([`crate::sim::cycles::estimate_cycles_plan`]) and
 /// the decode trajectory accumulator ([`crate::sim::decode`]).  Fixed
@@ -581,6 +672,45 @@ mod tests {
                 pipeline.total_cycles,
                 cfg().pe_array().fill_latency + pipeline.compute_cycles + pipeline.stall_cycles
             );
+        });
+    }
+
+    #[test]
+    fn strip_shares_sum_to_plan_cost() {
+        // The ledger invariant: per-strip attribution must re-add to the
+        // plan's closed-form EMA word-for-word, residency included.
+        let combos = [
+            (Residency::None, Residency::None, Residency::None),
+            (Residency::Full, Residency::None, Residency::None),
+            (Residency::None, Residency::Full, Residency::None),
+            (Residency::None, Residency::None, Residency::Full),
+            (Residency::Full, Residency::Full, Residency::Full),
+        ];
+        property("Σ strip shares == plan_cost", 80, |rng: &mut Rng| {
+            let shape = GemmShape::new(
+                rng.gen_in(1, 220),
+                rng.gen_in(1, 220),
+                rng.gen_in(1, 220),
+            );
+            let tiling = rand_tiling(rng);
+            let (i, w, o) = *rng.choose(&combos);
+            let plan = Plan::tas_cached(&shape, &tiling, i, w, o);
+            let shares = attribute_strips(&plan, &cfg());
+            let cost = plan_cost(&plan, &cfg(), &EnergyModel::default());
+            let (ci, cw, co) = cost.ema.table2();
+            let si: u64 = shares.iter().map(|s| s.input_words).sum();
+            let sw: u64 = shares.iter().map(|s| s.weight_words).sum();
+            let so: u64 = shares.iter().map(|s| s.output_words).sum();
+            if let PlanBody::Strips(_) = plan.body {
+                assert_eq!((si, sw, so), (ci, cw, co), "{shape:?}");
+                // margins never negative, and the flipped cover is an
+                // upper bound tile by tile
+                for s in &shares {
+                    assert!(s.flipped_words >= s.words(), "{shape:?}");
+                }
+            } else {
+                assert!(shares.is_empty());
+            }
         });
     }
 

@@ -99,8 +99,8 @@ impl Bench {
         let result = BenchResult {
             id: format!("{}/{}", self.suite, id),
             mean_ns: summary.mean(),
-            p50_ns: summary.p50(),
-            p99_ns: summary.p99(),
+            p50_ns: summary.p50().unwrap_or(f64::NAN),
+            p99_ns: summary.p99().unwrap_or(f64::NAN),
             iters: total_iters,
             per_sec,
         };

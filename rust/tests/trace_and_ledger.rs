@@ -1,0 +1,325 @@
+//! Trace/ledger acceptance properties (ISSUE 7 observability).
+//!
+//! (a) the Chrome-trace export is valid JSON; B/E events nest per track
+//!     and timestamps never run backwards within a track;
+//! (b) the simulated shard timeline's longest track spans exactly the
+//!     closed-form overlapped latency, and the link track drains exactly
+//!     the serialized link time — on randomized shapes/axes/device
+//!     counts, and chained across a whole forward pass;
+//! (c) the `tas explain` attribution ledger equals the planner *and* the
+//!     closed-form `sim::strip::plan_cost` word-for-word across the
+//!     model zoo and under randomized SRAM budgets;
+//! (d) `tas serve` on a bare checkout (synthetic backend) and
+//!     `tas explain --json` emit parseable, NaN-free artifacts.
+
+use std::collections::BTreeMap;
+
+use tas::arch::{Interconnect, InterconnectConfig};
+use tas::config::AcceleratorConfig;
+use tas::dataflow::shard::{shard_gemm, ShardAxis, ShardSpec};
+use tas::dataflow::LayerPlan;
+use tas::energy::EnergyModel;
+use tas::gemm::{GemmShape, Tiling};
+use tas::models::zoo;
+use tas::obs::{chrome_trace_json, shard_gemm_timeline, Phase, TraceEvent, Tracer};
+use tas::report::explain::explain_layer_plan;
+use tas::sim::strip::plan_cost;
+use tas::sim::{shard_link_rounds, sharded_fused_cost};
+use tas::util::check::property;
+use tas::util::json::Json;
+
+const AXES: [ShardAxis; 4] = [
+    ShardAxis::Rows,
+    ShardAxis::Cols,
+    ShardAxis::Contraction,
+    ShardAxis::Auto,
+];
+
+/// Validate the span invariants of a recorded event list and return each
+/// track's summed *top-level* B..E duration: per track, timestamps are
+/// monotone, every `End` closes an open span, and no span is left open.
+fn track_sums(events: &[TraceEvent]) -> BTreeMap<String, u64> {
+    let mut sums: BTreeMap<String, u64> = BTreeMap::new();
+    let mut depth: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+    let mut last: BTreeMap<String, u64> = BTreeMap::new();
+    for e in events {
+        let prev = last.entry(e.track.clone()).or_insert(0);
+        assert!(
+            e.ts_us >= *prev,
+            "track '{}' ran backwards: {} < {prev}",
+            e.track,
+            e.ts_us
+        );
+        *prev = e.ts_us;
+        let (d, open_ts) = depth.entry(e.track.clone()).or_insert((0, 0));
+        match e.phase {
+            Phase::Begin => {
+                if *d == 0 {
+                    *open_ts = e.ts_us;
+                }
+                *d += 1;
+            }
+            Phase::End => {
+                assert!(*d > 0, "unbalanced End on track '{}'", e.track);
+                *d -= 1;
+                if *d == 0 {
+                    *sums.entry(e.track.clone()).or_insert(0) += e.ts_us - *open_ts;
+                }
+            }
+            _ => {}
+        }
+    }
+    for (track, (d, _)) in depth {
+        assert_eq!(d, 0, "track '{track}' left {d} spans open");
+    }
+    sums
+}
+
+/// Parse the Chrome export of `events` and check its wire-level shape:
+/// one `thread_name` metadata record per track, and every span/marker
+/// event carrying `pid`/`tid`/`ts`.
+fn check_chrome_export(events: &[TraceEvent]) {
+    let doc = chrome_trace_json(events);
+    let text = doc.to_string_compact();
+    assert!(!text.contains("NaN"));
+    let parsed = Json::parse(&text).expect("trace export parses");
+    let arr = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    let tracks: std::collections::BTreeSet<&str> =
+        events.iter().map(|e| e.track.as_str()).collect();
+    let metas = arr
+        .iter()
+        .filter(|e| e.get("ph").unwrap().as_str() == Some("M"))
+        .count();
+    assert_eq!(metas, tracks.len(), "one thread_name record per track");
+    assert_eq!(arr.len(), events.len() + metas);
+    for e in arr {
+        if e.get("ph").unwrap().as_str() == Some("M") {
+            continue;
+        }
+        assert!(e.get("pid").unwrap().as_u64().is_some());
+        assert!(e.get("tid").unwrap().as_u64().is_some());
+        assert!(e.get("ts").unwrap().as_f64().is_some());
+    }
+}
+
+/// (a)+(b) on randomized single GEMMs: the longest track *is* the
+/// overlapped critical path, and the link track drains the serialized
+/// link time, for every axis and 1/2/4/8 devices.
+#[test]
+fn shard_timeline_longest_track_is_the_overlapped_latency() {
+    let cfg = AcceleratorConfig::default();
+    let em = EnergyModel::default();
+    let icx = Interconnect::new(InterconnectConfig::default());
+    property("shard timeline pins overlapped cycles", 40, |rng| {
+        let shape = GemmShape::new(
+            16 * (1 + rng.gen_range(24)),
+            16 * (1 + rng.gen_range(24)),
+            16 * (1 + rng.gen_range(24)),
+        );
+        let tiling = Tiling::square(16);
+        let devices = [1u64, 2, 4, 8][rng.gen_range(4) as usize];
+        let axis = AXES[rng.gen_range(4) as usize];
+        let sp = shard_gemm(&shape, &tiling, ShardSpec::new(devices, axis), 0.0);
+        let cost = sharded_fused_cost(&sp, &cfg, &em, &icx);
+        let rounds = shard_link_rounds(&sp, &icx);
+
+        let tracer = Tracer::new(true);
+        let end = shard_gemm_timeline(&tracer, "g", &cost, &rounds, 0);
+        assert_eq!(end, cost.overlapped_cycles());
+
+        let events = tracer.events();
+        let sums = track_sums(&events);
+        let longest = sums.values().copied().max().unwrap();
+        assert_eq!(longest, cost.overlapped_cycles());
+        if let Some(l) = sums.get("link") {
+            assert_eq!(*l, cost.link_cycles());
+        }
+        check_chrome_export(&events);
+    });
+}
+
+/// (b) chained across a forward pass: GEMM timelines appended at each
+/// other's overlapped end stay well-formed, the final cursor is the sum
+/// of overlapped latencies, and no event outruns it.
+#[test]
+fn chained_timelines_cover_a_forward_pass() {
+    let model = zoo::by_name("bert-base").unwrap();
+    let tiling = Tiling::square(16);
+    let cfg = AcceleratorConfig::default();
+    let em = EnergyModel::default();
+    let icx = Interconnect::new(InterconnectConfig::default());
+    let spec = ShardSpec::new(4, ShardAxis::Auto);
+
+    let tracer = Tracer::new(true);
+    let mut cursor = 0u64;
+    let mut total_overlapped = 0u64;
+    for g in model.linear_gemms(512) {
+        let sp = shard_gemm(&g.shape, &tiling, spec, 0.0);
+        let cost = sharded_fused_cost(&sp, &cfg, &em, &icx);
+        let rounds = shard_link_rounds(&sp, &icx);
+        cursor = shard_gemm_timeline(&tracer, g.name, &cost, &rounds, cursor);
+        total_overlapped += cost.overlapped_cycles();
+    }
+    assert_eq!(cursor, total_overlapped);
+
+    let events = tracer.events();
+    assert!(!events.is_empty());
+    track_sums(&events); // nesting + monotonicity per track
+    assert!(events.iter().all(|e| e.ts_us <= cursor));
+    check_chrome_export(&events);
+}
+
+/// (c) across the model zoo: the ledger's stage totals re-add to the
+/// planner's accounting AND to the closed-form `plan_cost`, word for
+/// word, at a short and a long sequence.
+#[test]
+fn ledger_equals_plan_cost_across_the_zoo() {
+    let tiling = Tiling::square(16);
+    let cfg = AcceleratorConfig::default();
+    let em = EnergyModel::default();
+    for model in zoo::all_models() {
+        for seq in [64u64, 512] {
+            let plan =
+                LayerPlan::plan(model.block_stages(seq), seq, &tiling, cfg.sram_words);
+            let ledger = explain_layer_plan(&plan, &cfg);
+            assert_eq!(
+                ledger.total_ema(),
+                plan.total_ema(),
+                "{} @ seq {seq}",
+                model.name
+            );
+            assert_eq!(ledger.per_gemm_tas_total(), plan.per_gemm_tas_total());
+            for (row, stage) in ledger.stages.iter().zip(&plan.stages) {
+                assert_eq!(row.ema_words(), stage.ema_words, "{} {}", model.name, row.name);
+                let cost: u64 = stage
+                    .slices
+                    .iter()
+                    .map(|p| {
+                        let (i, w, o) = plan_cost(p, &cfg, &em).ema.table2();
+                        i + w + o
+                    })
+                    .sum();
+                assert_eq!(
+                    row.ema_words(),
+                    cost,
+                    "{} {} @ seq {seq}: ledger vs plan_cost",
+                    model.name,
+                    row.name
+                );
+            }
+        }
+    }
+}
+
+/// (c) under randomized SRAM budgets and sequence lengths: residency
+/// gating moves words between stages, but the ledger never drifts from
+/// the planner or the cost model by a single word.
+#[test]
+fn ledger_tracks_the_planner_under_random_budgets() {
+    let tiling = Tiling::square(16);
+    let em = EnergyModel::default();
+    let names = ["bert-base", "bert-large", "wav2vec2-large", "vit-g14"];
+    property("ledger == plan_cost under random budgets", 24, |rng| {
+        let model = zoo::by_name(names[rng.gen_range(4) as usize]).unwrap();
+        let seq = 16 * (1 + rng.gen_range(40));
+        let sram = 1u64 << (14 + rng.gen_range(6));
+        let cfg = AcceleratorConfig { sram_words: sram, ..AcceleratorConfig::default() };
+        let plan = LayerPlan::plan(model.block_stages(seq), seq, &tiling, sram);
+        let ledger = explain_layer_plan(&plan, &cfg);
+        assert_eq!(ledger.total_ema(), plan.total_ema(), "{} @ {seq}/{sram}", model.name);
+        for (row, stage) in ledger.stages.iter().zip(&plan.stages) {
+            let cost: u64 = stage
+                .slices
+                .iter()
+                .map(|p| {
+                    let (i, w, o) = plan_cost(p, &cfg, &em).ema.table2();
+                    i + w + o
+                })
+                .sum();
+            assert_eq!(row.ema_words(), cost, "{} {} @ {seq}/{sram}", model.name, row.name);
+        }
+    });
+}
+
+fn tas_bin(args: &[&str]) -> (bool, String, String) {
+    let bin = env!("CARGO_BIN_EXE_tas");
+    let out = std::process::Command::new(bin)
+        .args(args)
+        .output()
+        .expect("spawn tas");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+/// (d) `tas explain --json`: the embedded ledger reconciles with itself
+/// (Σ count × stage words == total) and never loses to per-GEMM TAS.
+#[test]
+fn explain_json_reports_a_reconciled_ledger() {
+    let (ok, stdout, stderr) =
+        tas_bin(&["explain", "--model", "bert-base", "--seq", "512", "--json"]);
+    assert!(ok, "{stderr}");
+    assert!(!stdout.contains("NaN"));
+    let doc = Json::parse(stdout.trim()).expect("valid json");
+    assert_eq!(doc.get("command").unwrap().as_str(), Some("explain"));
+    let ledger = doc.get("ledger").unwrap();
+    let total = ledger.get("total_ema_words").unwrap().as_u64().unwrap();
+    let base = ledger.get("per_gemm_tas_words").unwrap().as_u64().unwrap();
+    assert!(total <= base, "plan {total} > per-gemm {base}");
+    let stages = ledger.get("stages").unwrap().as_arr().unwrap();
+    assert!(stages.len() >= 6);
+    let sum: u64 = stages
+        .iter()
+        .map(|s| {
+            s.get("count").unwrap().as_u64().unwrap()
+                * s.get("ema_words").unwrap().as_u64().unwrap()
+        })
+        .sum();
+    assert_eq!(sum, total, "stage rows re-add to the ledger total");
+}
+
+/// (d) `tas serve` on a bare checkout: the synthetic backend serves the
+/// full batching/planning path, the JSON report is NaN-free with the new
+/// telemetry present, and `--trace-out` writes a parseable trace.
+#[test]
+fn serve_emits_trace_and_nan_free_json_without_artifacts() {
+    let dir = std::env::temp_dir().join("tas-serve-trace-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("trace.json");
+    let (ok, stdout, stderr) = tas_bin(&[
+        "serve",
+        "--requests",
+        "8",
+        "--seed",
+        "7",
+        "--trace-out",
+        trace.to_str().unwrap(),
+        "--json",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(!stdout.contains("NaN"));
+    let doc = Json::parse(stdout.trim()).expect("valid json");
+    assert_eq!(doc.get("command").unwrap().as_str(), Some("serve"));
+    let snap = doc.get("snapshot").unwrap();
+    assert_eq!(snap.get("requests").unwrap().as_u64(), Some(8));
+    assert!(snap.get("latency_p50_ms").unwrap().as_f64().is_some());
+    assert!(snap.get("ttft_p50_ms").unwrap().as_f64().is_some());
+    assert!(snap.get("batch_occupancy").unwrap().as_f64().is_some());
+    let cache = snap.get("planner_cache").unwrap();
+    assert!(cache.get("misses").unwrap().as_u64().unwrap() > 0);
+
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let parsed = Json::parse(&text).expect("trace file parses");
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    // the request lifecycle shows up: queued spans and completion markers
+    let names: std::collections::BTreeSet<&str> = events
+        .iter()
+        .filter_map(|e| e.get("name").and_then(|n| n.as_str()))
+        .collect();
+    assert!(names.contains("queued"), "missing queued spans: {names:?}");
+    assert!(names.contains("complete"), "missing completion markers");
+    std::fs::remove_file(&trace).ok();
+}
