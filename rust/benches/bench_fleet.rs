@@ -1,0 +1,68 @@
+//! Bench E10 — fleet DES throughput and the router comparison the ISSUE 8
+//! acceptance pins: under bursty open-loop arrivals at ≥2 replicas,
+//! join-shortest-queue must not lose to round-robin on p99 TTFT (bursts
+//! pile onto whichever replica RR's cycle happens to hit; JSQ spreads
+//! them by in-flight depth).
+//!
+//! The timed section measures simulated-arrivals-per-second of the whole
+//! discrete-event fleet (router + batcher + planner + SLO accounting per
+//! event), one run per iteration.  `TAS_BENCH_FAST=1` shrinks the trace
+//! for CI smoke runs; the JSQ-vs-RR assertion holds at either size.
+//!
+//! One machine-readable JSON row per router follows the CSV.
+
+use tas::coordinator::{run_fleet, FleetOptions, FleetReport, RoutePolicy};
+use tas::models::{generate_arrivals, ArrivalProcess, LengthDist};
+use tas::util::bench::{bb, Bench, Throughput};
+use tas::util::prng::Rng;
+
+fn main() {
+    let fast = std::env::var("TAS_BENCH_FAST").is_ok();
+    let n = if fast { 256 } else { 2048 };
+    let process = ArrivalProcess::bursty(3000.0, 0.04, 0.08);
+    let dist = LengthDist::lognormal(80, 0.5, 4, 256);
+    let mut rng = Rng::new(23);
+    let arrivals = generate_arrivals(&process, &dist, &mut rng, n);
+
+    let mut b = Bench::new("fleet");
+    let mut reports: Vec<(RoutePolicy, FleetReport)> = Vec::new();
+    for route in [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::JoinShortestQueue,
+        RoutePolicy::CacheAffinity,
+    ] {
+        let opts = FleetOptions { replicas: 4, route, ..Default::default() };
+        b.run(
+            &format!("des/{}/r4", route.name()),
+            Throughput::Elements(n as u64),
+            || bb(run_fleet(&opts, &arrivals).unwrap()).completed,
+        );
+        let r = run_fleet(&opts, &arrivals).unwrap();
+        let per_sec = b.results.last().unwrap().per_sec.expect("throughput set");
+        println!(
+            "{{\"bench\":\"fleet\",\"router\":\"{}\",\"replicas\":4,\
+             \"arrivals\":{n},\"sim_arrivals_per_sec\":{per_sec:.0},\
+             \"ttft_p99_ms\":{:.3},\"goodput\":{:.4}}}",
+            route.name(),
+            r.ttft.p99().unwrap_or(f64::NAN),
+            r.slo.goodput.unwrap_or(f64::NAN),
+        );
+        reports.push((route, r));
+    }
+
+    let p99 = |route: RoutePolicy| {
+        reports
+            .iter()
+            .find(|(p, _)| *p == route)
+            .and_then(|(_, r)| r.ttft.p99())
+            .expect("p99 with traffic")
+    };
+    let rr = p99(RoutePolicy::RoundRobin);
+    let jsq = p99(RoutePolicy::JoinShortestQueue);
+    assert!(
+        jsq <= rr,
+        "JSQ p99 TTFT ({jsq:.3} ms) must not lose to round-robin ({rr:.3} ms) \
+         under bursty arrivals at 4 replicas"
+    );
+    b.write_csv();
+}

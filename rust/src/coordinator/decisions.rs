@@ -921,7 +921,7 @@ mod tests {
             let planned = planner.plan_dispatch(Some(384), Some((4, 64)));
             let step_plan = planned.decode().expect("mixed dispatch has a decode plan");
             let layer_plan = planned.prefill().expect("mixed dispatch has a layer plan");
-            metrics.record_decode_batch(4, step_plan);
+            metrics.record_decode_batch(4, step_plan, Duration::from_millis(1));
             let gemms = vec![GemmWorkload {
                 name: "qkv",
                 shape: crate::gemm::GemmShape::new(384, hidden, hidden),

@@ -1,0 +1,788 @@
+//! Multi-replica fleet harness: open-loop traffic over N coordinator
+//! replicas, with SLO accounting and per-replica Chrome traces.
+//!
+//! Each replica is the real serving stack — a [`Batcher`], a
+//! [`DispatchPlanner`] over its own device group, [`Metrics`], an
+//! [`SloTracker`] and a [`Tracer`] — but time is **virtual**: the fleet
+//! runs as a discrete-event simulation in microseconds, so a fixed
+//! arrival trace yields bit-identical goodput/burn numbers on every run
+//! (a wall-clock harness cannot promise that, and the acceptance tests
+//! demand it).  Virtual instants are materialised as `epoch + t`, which
+//! lets the unmodified batcher apply its linger deadline to simulated
+//! arrivals.
+//!
+//! A dispatch's service time comes from the plan the paper's stack
+//! produced for it: `overhead + plan_EMA_words / words_per_us` — the
+//! EMA-bound serving regime the paper argues for, so every planner win
+//! (PR 1–6) surfaces directly as TTFT/goodput here.
+//!
+//! The router is pluggable ([`RoutePolicy`]): round-robin,
+//! join-shortest-queue on in-flight requests, or cache-affinity keyed on
+//! the request's seq bucket — the plan-memo key — so one replica's
+//! planner cache serves each bucket's whole stream.
+
+use super::batcher::{Batcher, DecodeSlot};
+use super::decisions::DispatchPlanner;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::request::Request;
+use super::server::{bucket_gemms, DECODE_DISPATCH_CAP, DECODE_LEN_BUCKET};
+use crate::gemm::Tiling;
+use crate::models::ArrivalEvent;
+use crate::obs::slo::{SloSnapshot, SloSpec, SloTracker};
+use crate::obs::span::{TraceEvent, Tracer};
+use crate::report::json::{jarr, jf64, jnum, jobj, jopt, jstr};
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// How arriving requests pick a replica.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through replicas in arrival order.
+    RoundRobin,
+    /// Fewest in-flight requests wins (ties to the lowest index).
+    JoinShortestQueue,
+    /// Hash the request's seq bucket — the planner's plan-memo key — so
+    /// each bucket's stream stays on one replica's warm caches.
+    CacheAffinity,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Result<RoutePolicy> {
+        match s {
+            "rr" | "round-robin" => Ok(RoutePolicy::RoundRobin),
+            "jsq" | "join-shortest-queue" => Ok(RoutePolicy::JoinShortestQueue),
+            "affinity" | "cache-affinity" => Ok(RoutePolicy::CacheAffinity),
+            other => anyhow::bail!("unknown router '{other}' (rr|jsq|affinity)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "rr",
+            RoutePolicy::JoinShortestQueue => "jsq",
+            RoutePolicy::CacheAffinity => "affinity",
+        }
+    }
+}
+
+/// Model dims every replica serves (the synthetic tiny-BERT by default —
+/// the same dims the artifact-free coordinator boots with).
+#[derive(Clone, Copy, Debug)]
+pub struct FleetModel {
+    pub hidden: u64,
+    pub ffn: u64,
+    pub vocab: u64,
+    pub n_layers: u64,
+    pub heads: u64,
+}
+
+impl Default for FleetModel {
+    fn default() -> Self {
+        FleetModel { hidden: 128, ffn: 512, vocab: 1000, n_layers: 2, heads: 2 }
+    }
+}
+
+/// Fleet configuration.  Defaults mirror the synthetic coordinator:
+/// tiny-BERT dims, the `(4,64)/(4,128)/(8,256)` bucket ladder, 2 ms
+/// linger.
+#[derive(Clone, Debug)]
+pub struct FleetOptions {
+    pub replicas: usize,
+    pub route: RoutePolicy,
+    pub slo: SloSpec,
+    /// SLO accounting window (milliseconds of virtual time).
+    pub window_ms: u64,
+    pub linger: Duration,
+    /// Accelerators in each replica's device group (prefill sharding).
+    pub devices_per_replica: u64,
+    pub tiling: Tiling,
+    pub sram_words: u64,
+    /// Compiled (batch, seq, artifact) buckets each replica serves.
+    pub buckets: Vec<(u64, u64, String)>,
+    pub model: FleetModel,
+    /// Service-rate model: DRAM words a device group moves per virtual
+    /// microsecond (the EMA-bound regime's only throughput knob).
+    pub words_per_us: f64,
+    /// Fixed per-dispatch overhead (queueing glue, launch) in µs.
+    pub dispatch_overhead_us: u64,
+    /// Autoregressive steps per request after prefill (0 = encoder-only).
+    pub decode_steps: u64,
+    /// Pre-plan every prefill bucket before serving (true mirrors the
+    /// server; false leaves cold caches so router affinity is visible).
+    pub warm_plans: bool,
+    /// Record per-replica Chrome traces.
+    pub tracing: bool,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        let buckets = [(4u64, 64u64), (4, 128), (8, 256)]
+            .iter()
+            .map(|&(b, s)| (b, s, format!("synthetic_b{b}_s{s}")))
+            .collect();
+        FleetOptions {
+            replicas: 2,
+            route: RoutePolicy::RoundRobin,
+            slo: SloSpec::default(),
+            window_ms: 100,
+            linger: Duration::from_millis(2),
+            devices_per_replica: 1,
+            tiling: Tiling::square(16),
+            sram_words: 256 * 1024,
+            buckets,
+            model: FleetModel::default(),
+            words_per_us: 1000.0,
+            dispatch_overhead_us: 50,
+            decode_steps: 0,
+            warm_plans: false,
+            tracing: false,
+        }
+    }
+}
+
+/// One replica's serving stack plus its DES bookkeeping.
+struct Replica {
+    batcher: Batcher,
+    planner: DispatchPlanner,
+    metrics: Metrics,
+    slo: SloTracker,
+    tracer: Tracer,
+    /// Virtual µs when the device group frees (0 = idle).
+    busy_until: u64,
+    /// Requests routed here and not yet fully served (JSQ's signal).
+    inflight: u64,
+    routed: u64,
+    dispatches: u64,
+    busy_us: u64,
+    /// Fleet-level latency digests (merged across replicas for the
+    /// report; these are what the merge-exactness acceptance checks).
+    ttft: Summary,
+    e2e: Summary,
+    tpot: Summary,
+}
+
+/// Per-request DES state.
+struct ReqState {
+    arrived_us: u64,
+    replica: usize,
+    steps_left: u64,
+}
+
+/// Scheduled event. `Complete` carries everything the dispatch decided
+/// at pop time; its effects land at the service-completion instant.
+enum Ev {
+    Arrival(usize),
+    Poll(usize),
+    Complete(Completion),
+}
+
+struct Completion {
+    replica: usize,
+    /// Prefill requests served: (id, unpadded length).
+    prefill: Vec<(u64, usize)>,
+    /// Seq bucket of the prefill batch (initial decode cache length).
+    prefill_seq: u64,
+    decode: Vec<DecodeSlot>,
+    service_us: u64,
+}
+
+/// One replica's slice of the fleet report.
+#[derive(Clone, Debug)]
+pub struct ReplicaReport {
+    pub routed: u64,
+    pub completed: u64,
+    pub dispatches: u64,
+    pub busy_us: u64,
+    pub metrics: MetricsSnapshot,
+    pub ttft: Summary,
+    pub e2e: Summary,
+    pub tpot: Summary,
+}
+
+/// The fleet run's result: merged digests, the aggregated SLO snapshot,
+/// per-replica detail, and (when tracing) per-replica Chrome events.
+#[derive(Debug)]
+pub struct FleetReport {
+    pub replicas: usize,
+    pub route: RoutePolicy,
+    pub offered: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    /// Virtual time of the last completion (ms).
+    pub makespan_ms: f64,
+    pub offered_rate_per_s: Option<f64>,
+    pub achieved_rate_per_s: Option<f64>,
+    /// Exact fold of the per-replica digests ([`Summary::merge`]).
+    pub ttft: Summary,
+    pub e2e: Summary,
+    pub tpot: Summary,
+    pub slo: SloSnapshot,
+    pub per_replica: Vec<ReplicaReport>,
+    /// Per-replica trace events (empty unless `tracing`).
+    pub traces: Vec<Vec<TraceEvent>>,
+}
+
+impl FleetReport {
+    pub fn to_json(&self) -> Json {
+        let dig = |s: &Summary| {
+            jobj(vec![
+                ("count", jnum(s.count())),
+                ("sum_ms", jf64(s.sum())),
+                ("min_ms", jopt(s.min())),
+                ("max_ms", jopt(s.max())),
+                ("p50_ms", jopt(s.p50())),
+                ("p99_ms", jopt(s.p99())),
+            ])
+        };
+        jobj(vec![
+            ("replicas", jnum(self.replicas as u64)),
+            ("router", jstr(self.route.name())),
+            ("offered", jnum(self.offered)),
+            ("rejected", jnum(self.rejected)),
+            ("completed", jnum(self.completed)),
+            ("makespan_ms", jf64(self.makespan_ms)),
+            ("offered_rate_per_s", jopt(self.offered_rate_per_s)),
+            ("achieved_rate_per_s", jopt(self.achieved_rate_per_s)),
+            ("ttft", dig(&self.ttft)),
+            ("e2e", dig(&self.e2e)),
+            ("tpot", dig(&self.tpot)),
+            ("slo", self.slo.to_json()),
+            (
+                "per_replica",
+                jarr(
+                    self.per_replica
+                        .iter()
+                        .enumerate()
+                        .map(|(i, r)| {
+                            jobj(vec![
+                                ("replica", jnum(i as u64)),
+                                ("routed", jnum(r.routed)),
+                                ("completed", jnum(r.completed)),
+                                ("dispatches", jnum(r.dispatches)),
+                                ("busy_us", jnum(r.busy_us)),
+                                (
+                                    "utilization",
+                                    if self.makespan_ms > 0.0 {
+                                        jf64(
+                                            r.busy_us as f64
+                                                / (self.makespan_ms * 1000.0),
+                                        )
+                                    } else {
+                                        Json::Null
+                                    },
+                                ),
+                                ("ttft_p99_ms", jopt(r.ttft.p99())),
+                                (
+                                    "planner_cache_hits",
+                                    jnum(r.metrics.planner_cache.hits),
+                                ),
+                                (
+                                    "planner_cache_misses",
+                                    jnum(r.metrics.planner_cache.misses),
+                                ),
+                                ("ema_plan_words", jnum(r.metrics.ema_plan_words)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Run the fleet DES over a fixed arrival trace.  Deterministic: the
+/// same options + arrivals yield the identical report on every run.
+pub fn run_fleet(opts: &FleetOptions, arrivals: &[ArrivalEvent]) -> Result<FleetReport> {
+    anyhow::ensure!(opts.replicas >= 1, "need at least one replica");
+    anyhow::ensure!(opts.words_per_us > 0.0, "words_per_us must be positive");
+    anyhow::ensure!(!opts.buckets.is_empty(), "need at least one bucket");
+    let m = opts.model;
+    let epoch = Instant::now();
+    let virt = |t_us: u64| epoch + Duration::from_micros(t_us);
+    let linger_us = opts.linger.as_micros() as u64;
+
+    let mut replicas: Vec<Replica> = (0..opts.replicas)
+        .map(|_| -> Result<Replica> {
+            let mut planner = DispatchPlanner::new(
+                m.hidden,
+                m.ffn,
+                m.vocab,
+                m.n_layers,
+                m.heads,
+                opts.tiling,
+                opts.sram_words,
+                opts.devices_per_replica,
+            );
+            if opts.warm_plans {
+                let keys: Vec<_> = opts
+                    .buckets
+                    .iter()
+                    .map(|(b, s, _)| (Some(b * s), None))
+                    .collect();
+                planner.warm_up(&keys);
+            }
+            Ok(Replica {
+                batcher: Batcher::new(&opts.buckets, opts.linger)?,
+                planner,
+                metrics: Metrics::new(),
+                slo: SloTracker::new(opts.slo, opts.window_ms),
+                tracer: Tracer::new(opts.tracing),
+                busy_until: 0,
+                inflight: 0,
+                routed: 0,
+                dispatches: 0,
+                busy_us: 0,
+                ttft: Summary::default(),
+                e2e: Summary::default(),
+                tpot: Summary::default(),
+            })
+        })
+        .collect::<Result<_>>()?;
+
+    // Cache-affinity key space: the distinct seq buckets, in order.
+    let seqs: Vec<u64> = {
+        let mut s: Vec<u64> = opts.buckets.iter().map(|(_, s, _)| *s).collect();
+        s.sort_unstable();
+        s.dedup();
+        s
+    };
+
+    let mut events: BTreeMap<(u64, u64), Ev> = BTreeMap::new();
+    let mut eseq = 0u64;
+    let mut push_ev = |events: &mut BTreeMap<(u64, u64), Ev>, t: u64, ev: Ev| {
+        events.insert((t, eseq), ev);
+        eseq += 1;
+    };
+    for (i, a) in arrivals.iter().enumerate() {
+        push_ev(&mut events, a.t_us, Ev::Arrival(i));
+    }
+
+    let mut reqs: BTreeMap<u64, ReqState> = BTreeMap::new();
+    let mut rr_next = 0usize;
+    let mut rejected = 0u64;
+    let mut completed = 0u64;
+    let mut last_t = 0u64;
+
+    // Attempt one dispatch on replica `ri` at virtual time `t`; returns
+    // the scheduled completion (pushed by the caller — borrow rules).
+    let try_dispatch = |r: &mut Replica, ri: usize, t: u64| -> Option<(u64, Completion)> {
+        if r.busy_until > t {
+            return None;
+        }
+        let mixed = r.batcher.pop_mixed_ready(virt(t), DECODE_DISPATCH_CAP)?;
+        r.metrics
+            .record_queue_depth(r.batcher.pending_count(), r.batcher.decode_pending_count());
+        let prefill_tokens = mixed
+            .prefill
+            .as_ref()
+            .map(|b| b.bucket.batch * b.bucket.seq);
+        let decode_key = if mixed.decode.is_empty() {
+            None
+        } else {
+            let bucket_len =
+                mixed.max_cache_len().div_ceil(DECODE_LEN_BUCKET) * DECODE_LEN_BUCKET;
+            Some((mixed.decode.len() as u64, bucket_len))
+        };
+        let service_us;
+        {
+            let planned = r.planner.plan_dispatch(prefill_tokens, decode_key);
+            let total_words = planned.prefill().map(|p| p.total_ema()).unwrap_or(0)
+                + planned.decode().map(|d| d.total_ema()).unwrap_or(0);
+            service_us = opts.dispatch_overhead_us
+                + (total_words as f64 / opts.words_per_us).ceil() as u64;
+            let exec = Duration::from_micros(service_us);
+            if let Some(batch) = mixed.prefill.as_ref() {
+                let tokens = batch.bucket.batch * batch.bucket.seq;
+                let gemms = bucket_gemms(tokens, m.hidden, m.ffn, m.vocab, m.n_layers);
+                let flops: u64 = gemms.iter().map(|g| g.total_macs()).sum();
+                let real: u64 = batch.requests.iter().map(|q| q.len() as u64).sum();
+                let layer_plan = planned
+                    .prefill()
+                    .expect("a dispatched prefill batch always has a layer plan");
+                r.metrics.record_batch(
+                    batch.requests.len(),
+                    real,
+                    tokens - real,
+                    exec,
+                    &gemms,
+                    &opts.tiling,
+                    layer_plan,
+                    flops,
+                );
+                r.metrics
+                    .record_batch_occupancy(batch.requests.len(), batch.bucket.batch as usize);
+            }
+            if let Some(step_plan) = planned.decode() {
+                r.metrics
+                    .record_decode_batch(mixed.decode.len(), step_plan, exec);
+            }
+        }
+        r.metrics.record_planner_cache(r.planner.cache_stats());
+        let done = t + service_us;
+        r.busy_until = done;
+        r.busy_us += service_us;
+        r.dispatches += 1;
+        if r.tracer.enabled() {
+            let label = match (&mixed.prefill, mixed.decode.len()) {
+                (Some(b), 0) => format!("prefill b{}_s{}", b.bucket.batch, b.bucket.seq),
+                (Some(b), d) => {
+                    format!("mixed b{}_s{}+d{d}", b.bucket.batch, b.bucket.seq)
+                }
+                (None, d) => format!("decode d{d}"),
+            };
+            r.tracer.span_at("device", &label, t, service_us);
+        }
+        let (prefill, prefill_seq) = match mixed.prefill {
+            Some(b) => (
+                b.requests.iter().map(|q| (q.id, q.len())).collect(),
+                b.bucket.seq,
+            ),
+            None => (Vec::new(), 0),
+        };
+        Some((
+            done,
+            Completion {
+                replica: ri,
+                prefill,
+                prefill_seq,
+                decode: mixed.decode,
+                service_us,
+            },
+        ))
+    };
+
+    while let Some(((t, _), ev)) = events.pop_first() {
+        last_t = last_t.max(t);
+        match ev {
+            Ev::Arrival(i) => {
+                let a = arrivals[i];
+                let len = a.tokens.max(1) as usize;
+                if len as u64 > replicas[0].batcher.max_len() {
+                    rejected += 1;
+                    continue;
+                }
+                let ri = match opts.route {
+                    RoutePolicy::RoundRobin => {
+                        let ri = rr_next % opts.replicas;
+                        rr_next += 1;
+                        ri
+                    }
+                    RoutePolicy::JoinShortestQueue => replicas
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(i, r)| (r.inflight, *i))
+                        .map(|(i, _)| i)
+                        .expect("replicas is non-empty"),
+                    RoutePolicy::CacheAffinity => {
+                        let seq = replicas[0].batcher.route(len)?;
+                        let idx = seqs.iter().position(|&s| s == seq).unwrap_or(0);
+                        idx % opts.replicas
+                    }
+                };
+                let id = i as u64;
+                let mut req = Request::new(id, vec![1; len]);
+                req.arrived = virt(t);
+                let r = &mut replicas[ri];
+                r.batcher.push(req)?;
+                r.routed += 1;
+                r.inflight += 1;
+                if r.tracer.enabled() {
+                    r.tracer.instant_at("queue", &format!("arrive req {id}"), t);
+                }
+                reqs.insert(
+                    id,
+                    ReqState { arrived_us: t, replica: ri, steps_left: opts.decode_steps },
+                );
+                // This request's linger deadline: the latest instant a
+                // pop must include it (no-op if dispatched earlier).
+                push_ev(&mut events, t + linger_us, Ev::Poll(ri));
+                if let Some((done, c)) = try_dispatch(&mut replicas[ri], ri, t) {
+                    push_ev(&mut events, done, Ev::Complete(c));
+                }
+            }
+            Ev::Poll(ri) => {
+                if let Some((done, c)) = try_dispatch(&mut replicas[ri], ri, t) {
+                    push_ev(&mut events, done, Ev::Complete(c));
+                }
+            }
+            Ev::Complete(c) => {
+                let ri = c.replica;
+                let service_ms = c.service_us as f64 / 1000.0;
+                {
+                    let r = &mut replicas[ri];
+                    for &(id, _len) in &c.prefill {
+                        let st = reqs.get_mut(&id).expect("completed request is tracked");
+                        let ttft_ms = (t - st.arrived_us) as f64 / 1000.0;
+                        r.metrics
+                            .record_ttft(Duration::from_micros(t - st.arrived_us));
+                        r.slo.observe_ttft_at(t, ttft_ms);
+                        r.ttft.push(ttft_ms);
+                        if st.steps_left == 0 {
+                            finish(r, &mut reqs, id, t, &mut completed);
+                        } else {
+                            r.batcher
+                                .push_decode(DecodeSlot { id, cache_len: c.prefill_seq });
+                        }
+                    }
+                    if !c.decode.is_empty() {
+                        // One TPOT sample per decode dispatch (every slot
+                        // advanced one token in `service_us`), mirroring
+                        // the server's accounting.
+                        r.slo.observe_tpot_at(t, service_ms);
+                        r.tpot.push(service_ms);
+                        for slot in &c.decode {
+                            let st =
+                                reqs.get_mut(&slot.id).expect("decoding request is tracked");
+                            st.steps_left -= 1;
+                            if st.steps_left == 0 {
+                                finish(r, &mut reqs, slot.id, t, &mut completed);
+                            } else {
+                                r.batcher.push_decode(DecodeSlot {
+                                    id: slot.id,
+                                    cache_len: slot.cache_len + 1,
+                                });
+                            }
+                        }
+                    }
+                }
+                if let Some((done, c)) = try_dispatch(&mut replicas[ri], ri, t) {
+                    push_ev(&mut events, done, Ev::Complete(c));
+                }
+            }
+        }
+    }
+
+    // Fold the per-replica digests and SLO windows into fleet totals.
+    let slo = SloTracker::new(opts.slo, opts.window_ms);
+    let (mut ttft, mut e2e, mut tpot) =
+        (Summary::default(), Summary::default(), Summary::default());
+    let mut per_replica = Vec::with_capacity(opts.replicas);
+    let mut traces = Vec::new();
+    for r in &replicas {
+        slo.merge_from(&r.slo);
+        ttft.merge(&r.ttft);
+        e2e.merge(&r.e2e);
+        tpot.merge(&r.tpot);
+        per_replica.push(ReplicaReport {
+            routed: r.routed,
+            completed: r.routed
+                - r.inflight.min(r.routed), // still-queued work never completed
+            dispatches: r.dispatches,
+            busy_us: r.busy_us,
+            metrics: r.metrics.snapshot(),
+            ttft: r.ttft.clone(),
+            e2e: r.e2e.clone(),
+            tpot: r.tpot.clone(),
+        });
+        traces.push(if opts.tracing { r.tracer.events() } else { Vec::new() });
+    }
+    let offered = arrivals.len() as u64;
+    let horizon_s = arrivals.last().map(|a| a.t_us as f64 / 1e6).unwrap_or(0.0);
+    let makespan_ms = last_t as f64 / 1000.0;
+    Ok(FleetReport {
+        replicas: opts.replicas,
+        route: opts.route,
+        offered,
+        rejected,
+        completed,
+        makespan_ms,
+        offered_rate_per_s: if horizon_s > 0.0 {
+            Some(offered as f64 / horizon_s)
+        } else {
+            None
+        },
+        achieved_rate_per_s: if makespan_ms > 0.0 {
+            Some(completed as f64 / (makespan_ms / 1000.0))
+        } else {
+            None
+        },
+        ttft,
+        e2e,
+        tpot,
+        slo: slo.snapshot(),
+        per_replica,
+        traces,
+    })
+}
+
+/// Finalise one request: e2e accounting, in-flight bookkeeping.
+fn finish(
+    r: &mut Replica,
+    reqs: &mut BTreeMap<u64, ReqState>,
+    id: u64,
+    t: u64,
+    completed: &mut u64,
+) {
+    let st = reqs.remove(&id).expect("finishing request is tracked");
+    let e2e_us = t - st.arrived_us;
+    let e2e_ms = e2e_us as f64 / 1000.0;
+    r.metrics.record_latency(Duration::from_micros(e2e_us));
+    r.slo.observe_e2e_at(t, e2e_ms);
+    r.e2e.push(e2e_ms);
+    r.inflight -= 1;
+    *completed += 1;
+    if r.tracer.enabled() {
+        r.tracer.instant_at("queue", &format!("complete req {id}"), t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{generate_arrivals, ArrivalProcess, LengthDist};
+    use crate::util::prng::Rng;
+
+    fn arrivals(n: usize, rate: f64, seed: u64) -> Vec<ArrivalEvent> {
+        let mut rng = Rng::new(seed);
+        generate_arrivals(
+            &ArrivalProcess::poisson(rate),
+            &LengthDist::lognormal(80, 0.5, 4, 256),
+            &mut rng,
+            n,
+        )
+    }
+
+    #[test]
+    fn fleet_serves_every_request_and_is_deterministic() {
+        let opts = FleetOptions::default();
+        let a = arrivals(128, 400.0, 7);
+        let r1 = run_fleet(&opts, &a).unwrap();
+        let r2 = run_fleet(&opts, &a).unwrap();
+        assert_eq!(r1.completed + r1.rejected, r1.offered);
+        assert_eq!(r1.completed, r2.completed);
+        assert_eq!(r1.slo.goodput, r2.slo.goodput);
+        assert_eq!(r1.slo.checked, r2.slo.checked);
+        assert_eq!(r1.ttft.p99(), r2.ttft.p99());
+        assert_eq!(r1.makespan_ms, r2.makespan_ms);
+        // every replica saw work under round-robin
+        assert!(r1.per_replica.iter().all(|p| p.routed > 0));
+    }
+
+    #[test]
+    fn merged_digests_equal_the_per_replica_union_exactly() {
+        let opts = FleetOptions { replicas: 3, ..FleetOptions::default() };
+        let r = run_fleet(&opts, &arrivals(200, 500.0, 11)).unwrap();
+        let count: u64 = r.per_replica.iter().map(|p| p.ttft.count()).sum();
+        let sum: f64 = r.per_replica.iter().map(|p| p.ttft.sum()).sum();
+        assert_eq!(r.ttft.count(), count);
+        assert!((r.ttft.sum() - sum).abs() < 1e-6);
+        let min = r
+            .per_replica
+            .iter()
+            .filter_map(|p| p.ttft.min())
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(r.ttft.min(), Some(min));
+        // SLO windows merge exactly too: checked == sum of replicas
+        let checked: u64 = r
+            .per_replica
+            .iter()
+            .map(|p| p.metrics.ttft_count + p.metrics.tpot_count)
+            .sum();
+        assert_eq!(r.slo.checked, checked);
+    }
+
+    #[test]
+    fn decode_lane_runs_when_steps_are_requested() {
+        let opts = FleetOptions { decode_steps: 4, ..FleetOptions::default() };
+        let r = run_fleet(&opts, &arrivals(64, 300.0, 3)).unwrap();
+        assert_eq!(r.completed + r.rejected, r.offered);
+        assert!(r.tpot.count() > 0, "decode dispatches must sample TPOT");
+        let decode_tokens: u64 =
+            r.per_replica.iter().map(|p| p.metrics.decode_tokens).sum();
+        assert_eq!(decode_tokens, r.completed * 4);
+        // e2e strictly dominates TTFT once decoding follows prefill
+        assert!(r.e2e.p50() >= r.ttft.p50());
+    }
+
+    #[test]
+    fn goodput_is_monotone_non_increasing_in_rate() {
+        let opts = FleetOptions::default();
+        let mut last = f64::INFINITY;
+        for rate in [50.0, 200.0, 800.0, 3200.0] {
+            let r = run_fleet(&opts, &arrivals(256, rate, 13)).unwrap();
+            let g = r.slo.goodput.expect("completed requests were checked");
+            assert!(
+                g <= last + 1e-9,
+                "goodput must not improve as rate climbs: {g} after {last} at {rate}/s"
+            );
+            last = g;
+        }
+    }
+
+    #[test]
+    fn jsq_beats_round_robin_p99_ttft_under_bursty_arrivals() {
+        let mut rng = Rng::new(23);
+        let a = generate_arrivals(
+            &ArrivalProcess::bursty(3000.0, 0.04, 0.08),
+            &LengthDist::lognormal(80, 0.5, 4, 256),
+            &mut rng,
+            512,
+        );
+        let rr = run_fleet(
+            &FleetOptions { route: RoutePolicy::RoundRobin, ..FleetOptions::default() },
+            &a,
+        )
+        .unwrap();
+        let jsq = run_fleet(
+            &FleetOptions {
+                route: RoutePolicy::JoinShortestQueue,
+                ..FleetOptions::default()
+            },
+            &a,
+        )
+        .unwrap();
+        let (rr99, jsq99) = (rr.ttft.p99().unwrap(), jsq.ttft.p99().unwrap());
+        assert!(
+            jsq99 < rr99,
+            "JSQ p99 TTFT {jsq99} must beat round-robin {rr99} under bursts"
+        );
+    }
+
+    #[test]
+    fn cache_affinity_takes_fewer_planner_misses_than_round_robin() {
+        let misses = |route| {
+            let opts = FleetOptions { replicas: 3, route, ..FleetOptions::default() };
+            run_fleet(&opts, &arrivals(256, 600.0, 31))
+                .unwrap()
+                .per_replica
+                .iter()
+                .map(|p| p.metrics.planner_cache.misses)
+                .sum::<u64>()
+        };
+        let (rr, aff) = (misses(RoutePolicy::RoundRobin), misses(RoutePolicy::CacheAffinity));
+        assert!(
+            aff < rr,
+            "affinity misses {aff} must undercut round-robin {rr} on cold caches"
+        );
+    }
+
+    #[test]
+    fn oversized_requests_are_rejected_not_served() {
+        let opts = FleetOptions::default();
+        let a = vec![
+            ArrivalEvent { t_us: 0, tokens: 40 },
+            ArrivalEvent { t_us: 10, tokens: 100_000 },
+            ArrivalEvent { t_us: 20, tokens: 60 },
+        ];
+        let r = run_fleet(&opts, &a).unwrap();
+        assert_eq!(r.rejected, 1);
+        assert_eq!(r.completed, 2);
+    }
+
+    #[test]
+    fn report_serialises_to_valid_json() {
+        let opts = FleetOptions { tracing: true, ..FleetOptions::default() };
+        let r = run_fleet(&opts, &arrivals(32, 200.0, 5)).unwrap();
+        let text = r.to_json().to_string_compact();
+        assert!(!text.contains("NaN"));
+        let doc = Json::parse(&text).expect("fleet report must parse");
+        assert_eq!(doc.get("completed").unwrap().as_u64(), Some(r.completed));
+        assert!(r.traces.iter().any(|t| !t.is_empty()), "tracing was on");
+        // empty run parses too
+        let empty = run_fleet(&FleetOptions::default(), &[]).unwrap();
+        Json::parse(&empty.to_json().to_string_compact()).unwrap();
+    }
+}

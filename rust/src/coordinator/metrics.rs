@@ -16,7 +16,7 @@ use crate::energy::workload_read_ema;
 use crate::gemm::Tiling;
 use crate::models::GemmWorkload;
 use crate::obs::Registry;
-use crate::report::json::{jarr, jnum, jobj, jopt};
+use crate::report::json::{jarr, jf64, jnum, jobj, jopt};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 use std::sync::Mutex;
@@ -75,14 +75,23 @@ pub struct MetricsSnapshot {
     pub latency_p50_ms: Option<f64>,
     pub latency_p99_ms: Option<f64>,
     pub latency_mean_ms: Option<f64>,
+    /// Exact sample count and millisecond sum of the latency stream —
+    /// what a Prometheus summary's `_count`/`_sum` series need (the
+    /// reservoir only bounds the percentile samples, not these).
+    pub latency_count: u64,
+    pub latency_sum_ms: f64,
     pub batch_exec_mean_ms: Option<f64>,
     /// Time-to-first-token distribution (prefill completion latency).
     pub ttft_p50_ms: Option<f64>,
     pub ttft_p99_ms: Option<f64>,
+    pub ttft_count: u64,
+    pub ttft_sum_ms: f64,
     /// Time-per-output-token distribution (decode-step dispatch latency
     /// per generated token; accounting-only until decode artifacts exist).
     pub tpot_p50_ms: Option<f64>,
     pub tpot_p99_ms: Option<f64>,
+    pub tpot_count: u64,
+    pub tpot_sum_ms: f64,
     /// Prefill queue depth at the last batcher poll (and its high-water
     /// mark over the coordinator lifetime).
     pub queue_depth: Option<f64>,
@@ -181,11 +190,17 @@ impl MetricsSnapshot {
             ("latency_p50_ms", jopt(self.latency_p50_ms)),
             ("latency_p99_ms", jopt(self.latency_p99_ms)),
             ("latency_mean_ms", jopt(self.latency_mean_ms)),
+            ("latency_count", jnum(self.latency_count)),
+            ("latency_sum_ms", jf64(self.latency_sum_ms)),
             ("batch_exec_mean_ms", jopt(self.batch_exec_mean_ms)),
             ("ttft_p50_ms", jopt(self.ttft_p50_ms)),
             ("ttft_p99_ms", jopt(self.ttft_p99_ms)),
+            ("ttft_count", jnum(self.ttft_count)),
+            ("ttft_sum_ms", jf64(self.ttft_sum_ms)),
             ("tpot_p50_ms", jopt(self.tpot_p50_ms)),
             ("tpot_p99_ms", jopt(self.tpot_p99_ms)),
+            ("tpot_count", jnum(self.tpot_count)),
+            ("tpot_sum_ms", jf64(self.tpot_sum_ms)),
             ("queue_depth", jopt(self.queue_depth)),
             ("queue_depth_peak", jopt(self.queue_depth_peak)),
             ("decode_queue_depth", jopt(self.decode_queue_depth)),
@@ -304,7 +319,9 @@ impl Metrics {
 
     /// Record one dispatched decode step: `slots` sequences each advanced
     /// by one token under `step_plan`'s accounting. `exec` is the step's
-    /// dispatch latency; divided by the slot count it samples TPOT.
+    /// dispatch latency; each non-empty step contributes it as one TPOT
+    /// sample (every slot advances exactly one token per step, so the
+    /// step latency *is* the per-token latency of its sequences).
     pub fn record_decode_batch(
         &self,
         slots: usize,
@@ -376,11 +393,17 @@ impl Metrics {
             latency_p50_ms: g.latency.p50(),
             latency_p99_ms: g.latency.p99(),
             latency_mean_ms: mean_of(&g.latency),
+            latency_count: g.latency.count(),
+            latency_sum_ms: g.latency.sum(),
             batch_exec_mean_ms: mean_of(&g.batch_exec),
             ttft_p50_ms: g.ttft.p50(),
             ttft_p99_ms: g.ttft.p99(),
+            ttft_count: g.ttft.count(),
+            ttft_sum_ms: g.ttft.sum(),
             tpot_p50_ms: g.tpot.p50(),
             tpot_p99_ms: g.tpot.p99(),
+            tpot_count: g.tpot.count(),
+            tpot_sum_ms: g.tpot.sum(),
             queue_depth: g.reg.gauge(QUEUE_DEPTH),
             queue_depth_peak: g.reg.gauge_peak(QUEUE_DEPTH),
             decode_queue_depth: g.reg.gauge(DECODE_QUEUE_DEPTH),
@@ -499,6 +522,10 @@ mod tests {
         m.record_batch_occupancy(3, 8);
         let s = m.snapshot();
         assert_eq!(s.ttft_p50_ms.map(|v| v.round()), Some(7.0));
+        assert_eq!(s.ttft_count, 1);
+        assert!((s.ttft_sum_ms - 7.0).abs() < 1e-6);
+        assert_eq!(s.latency_count, 0);
+        assert_eq!(s.latency_sum_ms, 0.0);
         assert_eq!(s.queue_depth, Some(1.0));
         assert_eq!(s.queue_depth_peak, Some(5.0));
         assert_eq!(s.decode_queue_depth_peak, Some(2.0));

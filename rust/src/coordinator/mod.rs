@@ -10,15 +10,21 @@
 //! accelerator-side EMA/energy savings.
 //!
 //! Python never runs here: the binary serves entirely from `artifacts/`.
+//!
+//! [`fleet`] scales the same stack out: N replicas behind a pluggable
+//! router under open-loop traffic, simulated in deterministic virtual
+//! time with SLO goodput/burn accounting ([`crate::obs::slo`]).
 
 pub mod batcher;
 pub mod chunking;
 pub mod decisions;
+pub mod fleet;
 pub mod metrics;
 pub mod request;
 pub mod server;
 
 pub use batcher::{Batch, Batcher, Bucket, DecodeSlot, MixedBatch};
+pub use fleet::{run_fleet, FleetModel, FleetOptions, FleetReport, RoutePolicy};
 pub use chunking::{serve_chunked, ChunkPolicy};
 pub use decisions::{
     mixed_bucket_plan, scheme_plan, DispatchPlanner, MixedBucketPlan, PlannedDispatch,

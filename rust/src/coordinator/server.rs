@@ -116,11 +116,11 @@ enum ToDevice {
 }
 
 /// Most decode slots dispatched per mixed batch.
-const DECODE_DISPATCH_CAP: usize = 32;
+pub(crate) const DECODE_DISPATCH_CAP: usize = 32;
 
 /// Decode plans are cached per (batch, cache bucket): cache lengths pad
 /// up to the next multiple of this, like prefill buckets pad seq.
-const DECODE_LEN_BUCKET: u64 = 64;
+pub(crate) const DECODE_LEN_BUCKET: u64 = 64;
 
 /// Handle to a running coordinator.
 pub struct Coordinator {
@@ -696,8 +696,15 @@ fn boot_engine(opts: &CoordinatorOptions) -> Result<Engine> {
 }
 
 /// The linear-projection GEMMs a bucket of `tokens` induces (per forward
-/// pass), for metrics accounting.
-fn bucket_gemms(tokens: u64, hidden: u64, ffn: u64, vocab: u64, n_layers: u64) -> Vec<GemmWorkload> {
+/// pass), for metrics accounting.  Shared with the fleet harness
+/// ([`super::fleet`]), which accounts the same synthetic dispatches.
+pub(crate) fn bucket_gemms(
+    tokens: u64,
+    hidden: u64,
+    ffn: u64,
+    vocab: u64,
+    n_layers: u64,
+) -> Vec<GemmWorkload> {
     use crate::gemm::GemmShape;
     vec![
         GemmWorkload {

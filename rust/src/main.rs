@@ -11,6 +11,7 @@
 //!   explain   EMA attribution ledger: who moved every word, and why
 //!   validate  run every artifact against its golden vectors (PJRT)
 //!   serve     closed-loop serving demo over the artifacts
+//!   fleet     open-loop multi-replica fleet simulation with SLO accounting
 
 use anyhow::Result;
 use std::sync::Arc;
@@ -52,6 +53,7 @@ fn main() {
         Some("figs") => cmd_figs(args),
         Some("validate") => cmd_validate(args),
         Some("serve") => cmd_serve(args),
+        Some("fleet") => cmd_fleet(args),
         Some(other) => Err(anyhow::anyhow!("unknown subcommand '{other}'\n{USAGE}")),
         None => {
             println!("{USAGE}");
@@ -82,9 +84,16 @@ USAGE: tas <subcommand> [options]
   explain   --model NAME [--seq N] [--tile N] [--sram WORDS] [--json]
   figs      [--m M] [--n N] [--k K] [--tile N]   (Fig. 1/2 tile maps)
   validate  [--artifacts DIR]
-  serve     [--artifacts DIR] [--requests N] [--dist librispeech|fixed]
-            [--seed N] [--linger-ms N] [--devices N] [--decode-steps N]
-            [--trace-out FILE] [--json]
+  serve     [--artifacts DIR] [--requests N] [--dist librispeech|fixed[:N]|
+            lognormal:MEAN,SIGMA] [--seed N] [--linger-ms N] [--devices N]
+            [--decode-steps N] [--trace-out FILE] [--metrics-out FILE] [--json]
+  fleet     [--replicas N] [--requests N] [--rate R] [--arrivals poisson|
+            bursty] [--burst-on S] [--burst-off S] [--dist SPEC] [--seed N]
+            [--router rr|jsq|affinity] [--slo-ttft-ms A] [--slo-tpot-ms B]
+            [--objective F] [--window-ms N] [--linger-ms N] [--devices N]
+            [--decode-steps N] [--words-per-us W] [--warm-plans]
+            [--arrivals-in FILE] [--arrivals-out FILE] [--trace-out FILE]
+            [--metrics-out FILE] [--json]
 
 Models: vit-g14, wav2vec2-xls-r-2b, gpt-3, bert-base, bert-large,
         wav2vec2-large";
@@ -1146,6 +1155,7 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     let max_devices = args.opt_u64("devices", 1)?.max(1);
     let decode_steps = args.opt_u64("decode-steps", 0)?;
     let trace_out = args.opt("trace-out");
+    let metrics_out = args.opt("metrics-out");
     let json = args.flag("json");
     args.finish()?;
 
@@ -1173,12 +1183,7 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     let vocab = *coordinator.model.get("vocab").unwrap_or(&1024);
     let max_len = coordinator.max_len();
 
-    let dist = match dist_name.as_str() {
-        // LibriSpeech-shaped, rescaled into the compiled bucket range.
-        "librispeech" => LengthDist::lognormal((max_len / 3).max(8), 0.55, 4, max_len),
-        "fixed" => LengthDist::fixed(max_len.min(64)),
-        other => anyhow::bail!("unknown dist '{other}'"),
-    };
+    let dist = LengthDist::parse(&dist_name, max_len)?;
     let mut rng = Rng::new(seed);
     let requests: Vec<Vec<i32>> = (0..n_requests)
         .map(|_| {
@@ -1210,6 +1215,11 @@ fn cmd_serve(mut args: Args) -> Result<()> {
 
     let snap = coordinator.metrics().snapshot();
     coordinator.shutdown();
+    if let Some(path) = &metrics_out {
+        let page = tas::report::prom::metrics_exposition(&snap);
+        std::fs::write(path, &page)?;
+        eprintln!("wrote Prometheus exposition to {path}");
+    }
     if let Some(path) = &trace_out {
         let events = tracer.events();
         write_chrome_trace(std::path::Path::new(path), &events)?;
@@ -1318,6 +1328,188 @@ fn cmd_serve(mut args: Args) -> Result<()> {
             snap.decode_per_token_ema().map(sci).unwrap_or_else(|| "-".into()),
             opt_pct(snap.decode_reduction_vs_per_gemm()),
             sci(snap.decode_cache_hot_words as f64)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fleet(mut args: Args) -> Result<()> {
+    use tas::coordinator::{run_fleet, FleetOptions, RoutePolicy};
+    use tas::models::{
+        format_arrival_trace, generate_arrivals, parse_arrival_trace, ArrivalProcess,
+    };
+    use tas::obs::SloSpec;
+
+    let replicas = args.opt_u64("replicas", 2)?.max(1) as usize;
+    let n_requests = args.opt_u64("requests", 256)? as usize;
+    let rate = args.opt_f64("rate", 200.0)?;
+    let arrivals_kind = args.opt_or("arrivals", "poisson");
+    let burst_on = args.opt_f64("burst-on", 0.05)?;
+    let burst_off = args.opt_f64("burst-off", 0.10)?;
+    let dist_name = args.opt_or("dist", "librispeech");
+    let seed = args.opt_u64("seed", 42)?;
+    let route = RoutePolicy::parse(&args.opt_or("router", "rr"))?;
+    let slo = SloSpec {
+        ttft_ms: args.opt_f64("slo-ttft-ms", 50.0)?,
+        tpot_ms: args.opt_f64("slo-tpot-ms", 20.0)?,
+        objective: args.opt_f64("objective", 0.99)?,
+    };
+    let window_ms = args.opt_u64("window-ms", 100)?;
+    let linger = Duration::from_millis(args.opt_u64("linger-ms", 2)?);
+    let devices_per_replica = args.opt_u64("devices", 1)?.max(1);
+    let decode_steps = args.opt_u64("decode-steps", 0)?;
+    let words_per_us = args.opt_f64("words-per-us", 1000.0)?;
+    let warm_plans = args.flag("warm-plans");
+    let arrivals_in = args.opt("arrivals-in");
+    let arrivals_out = args.opt("arrivals-out");
+    let trace_out = args.opt("trace-out");
+    let metrics_out = args.opt("metrics-out");
+    let json = args.flag("json");
+    args.finish()?;
+    anyhow::ensure!(
+        (0.0..1.0).contains(&slo.objective),
+        "--objective must be in [0, 1)"
+    );
+    anyhow::ensure!(window_ms >= 1, "--window-ms must be at least 1");
+
+    let opts = FleetOptions {
+        replicas,
+        route,
+        slo,
+        window_ms,
+        linger,
+        devices_per_replica,
+        decode_steps,
+        words_per_us,
+        warm_plans,
+        tracing: trace_out.is_some(),
+        ..Default::default()
+    };
+    let max_len = opts.buckets.iter().map(|&(_, s, _)| s).max().unwrap();
+
+    // Arrivals: replay a trace file verbatim, or generate a seeded
+    // open-loop process (Poisson, or exponential on/off bursts whose ON
+    // rate is scaled so `--rate` stays the long-run mean).
+    let arrivals = if let Some(path) = &arrivals_in {
+        parse_arrival_trace(&std::fs::read_to_string(path)?)?
+    } else {
+        anyhow::ensure!(rate > 0.0, "--rate must be positive");
+        let dist = LengthDist::parse(&dist_name, max_len)?;
+        let process = match arrivals_kind.as_str() {
+            "poisson" => ArrivalProcess::poisson(rate),
+            "bursty" => {
+                anyhow::ensure!(
+                    burst_on > 0.0 && burst_off > 0.0,
+                    "--burst-on/--burst-off must be positive"
+                );
+                let duty = burst_on / (burst_on + burst_off);
+                ArrivalProcess::bursty(rate / duty, burst_on, burst_off)
+            }
+            other => anyhow::bail!("unknown arrival process '{other}' (poisson|bursty)"),
+        };
+        let mut rng = Rng::new(seed);
+        generate_arrivals(&process, &dist, &mut rng, n_requests)
+    };
+    if let Some(path) = &arrivals_out {
+        std::fs::write(path, format_arrival_trace(&arrivals))?;
+        eprintln!("wrote arrival trace ({} events) to {path}", arrivals.len());
+    }
+
+    eprintln!(
+        "fleet: {} replicas, router={}, {} arrivals ...",
+        replicas,
+        route.name(),
+        arrivals.len()
+    );
+    let r = run_fleet(&opts, &arrivals)?;
+
+    if let Some(prefix) = &trace_out {
+        // One Chrome trace per replica: foo.json -> foo.r0.json, foo.r1.json.
+        for (i, events) in r.traces.iter().enumerate() {
+            let path = match prefix.strip_suffix(".json") {
+                Some(stem) => format!("{stem}.r{i}.json"),
+                None => format!("{prefix}.r{i}"),
+            };
+            write_chrome_trace(std::path::Path::new(&path), events)?;
+            eprintln!("wrote replica {i} trace to {path} ({} events)", events.len());
+        }
+    }
+    if let Some(path) = &metrics_out {
+        // Prometheus exposition: every replica's counters labelled by
+        // replica index, plus the fleet-level SLO family.
+        let mut prom = tas::report::prom::Prom::new();
+        for (i, rep) in r.per_replica.iter().enumerate() {
+            let idx = i.to_string();
+            tas::report::prom::render_metrics(
+                &mut prom,
+                &[("replica", idx.as_str())],
+                &rep.metrics,
+            );
+        }
+        tas::report::prom::render_slo(&mut prom, &[], &r.slo);
+        std::fs::write(path, prom.render())?;
+        eprintln!("wrote Prometheus exposition to {path}");
+    }
+
+    if json {
+        Report::new("fleet").field("report", r.to_json()).print();
+        return Ok(());
+    }
+
+    let ms = |v: Option<f64>| v.map(|x| format!("{x:.2} ms")).unwrap_or_else(|| "-".into());
+    let opt_pct = |v: Option<f64>| v.map(pct).unwrap_or_else(|| "-".into());
+    println!("\n== fleet report ==");
+    println!("replicas        {}  (router {})", r.replicas, r.route.name());
+    println!(
+        "offered         {} requests ({} rejected), makespan {:.1} ms",
+        r.offered, r.rejected, r.makespan_ms
+    );
+    println!(
+        "rate            offered {} req/s, achieved {} req/s",
+        r.offered_rate_per_s.map(|x| format!("{x:.1}")).unwrap_or_else(|| "-".into()),
+        r.achieved_rate_per_s.map(|x| format!("{x:.1}")).unwrap_or_else(|| "-".into())
+    );
+    println!(
+        "TTFT            p50 {}  p99 {}   (SLO ≤ {:.1} ms)",
+        ms(r.ttft.p50()),
+        ms(r.ttft.p99()),
+        opts.slo.ttft_ms
+    );
+    if r.tpot.count() > 0 {
+        println!(
+            "TPOT            p50 {}  p99 {}   (SLO ≤ {:.1} ms)",
+            ms(r.tpot.p50()),
+            ms(r.tpot.p99()),
+            opts.slo.tpot_ms
+        );
+    }
+    println!("e2e             p50 {}  p99 {}", ms(r.e2e.p50()), ms(r.e2e.p99()));
+    println!(
+        "goodput         {} over {} checked samples (objective {})",
+        opt_pct(r.slo.goodput),
+        r.slo.checked,
+        pct(opts.slo.objective)
+    );
+    println!(
+        "burn rate       last window {}  last 8 {}  overall {}",
+        r.slo.burn.last_window.map(|x| format!("{x:.2}×")).unwrap_or_else(|| "-".into()),
+        r.slo.burn.last_8_windows.map(|x| format!("{x:.2}×")).unwrap_or_else(|| "-".into()),
+        r.slo.burn.overall.map(|x| format!("{x:.2}×")).unwrap_or_else(|| "-".into())
+    );
+    for (i, rep) in r.per_replica.iter().enumerate() {
+        let util = if r.makespan_ms > 0.0 {
+            pct(rep.busy_us as f64 / (r.makespan_ms * 1000.0))
+        } else {
+            "-".into()
+        };
+        println!(
+            "replica {i}       routed {:4}  dispatches {:4}  util {}  TTFT p99 {}  plan cache {}h/{}m",
+            rep.routed,
+            rep.dispatches,
+            util,
+            ms(rep.ttft.p99()),
+            rep.metrics.planner_cache.hits,
+            rep.metrics.planner_cache.misses
         );
     }
     Ok(())

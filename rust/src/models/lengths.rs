@@ -73,6 +73,220 @@ impl LengthDist {
     pub fn bounds(&self) -> (u64, u64) {
         (self.min, self.max)
     }
+
+    /// Parse a CLI distribution spec against a serving bucket ceiling:
+    ///
+    /// * `librispeech` — the LibriSpeech log-normal shape rescaled into
+    ///   the compiled bucket range (mean `max_len/3`, clipped to
+    ///   `[4, max_len]`) — exactly what `tas serve` has always done;
+    /// * `fixed` / `fixed:N` — constant length (default
+    ///   `min(max_len, 64)`);
+    /// * `lognormal:MEAN,SIGMA` — clipped log-normal around `MEAN`
+    ///   tokens with log-space `SIGMA`, clipped to `[4, max_len]`.
+    pub fn parse(spec: &str, max_len: u64) -> anyhow::Result<LengthDist> {
+        anyhow::ensure!(max_len >= 1, "max_len must be >= 1");
+        let lo = 4.min(max_len);
+        if spec == "librispeech" {
+            return Ok(LengthDist::lognormal(
+                (max_len / 3).max(8).min(max_len),
+                0.55,
+                lo,
+                max_len,
+            ));
+        }
+        if spec == "fixed" {
+            return Ok(LengthDist::fixed(max_len.min(64)));
+        }
+        if let Some(rest) = spec.strip_prefix("fixed:") {
+            let n: u64 = rest
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad fixed length '{rest}'"))?;
+            anyhow::ensure!(
+                (1..=max_len).contains(&n),
+                "fixed length {n} outside [1, {max_len}]"
+            );
+            return Ok(LengthDist::fixed(n));
+        }
+        if let Some(rest) = spec.strip_prefix("lognormal:") {
+            let (mean_s, sigma_s) = rest.split_once(',').ok_or_else(|| {
+                anyhow::anyhow!("lognormal spec needs MEAN,SIGMA (got '{rest}')")
+            })?;
+            let mean: u64 = mean_s
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad lognormal mean '{mean_s}'"))?;
+            let sigma: f64 = sigma_s
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad lognormal sigma '{sigma_s}'"))?;
+            anyhow::ensure!(mean >= 1, "lognormal mean must be >= 1");
+            anyhow::ensure!(
+                sigma.is_finite() && sigma >= 0.0,
+                "lognormal sigma must be finite and >= 0"
+            );
+            return Ok(LengthDist::lognormal(mean.min(max_len).max(lo), sigma, lo, max_len));
+        }
+        anyhow::bail!(
+            "unknown dist '{spec}' (want librispeech | fixed[:N] | lognormal:MEAN,SIGMA)"
+        )
+    }
+}
+
+/// Open-loop arrival process over virtual time: arrivals happen at their
+/// own pace whether or not the servers keep up (closed-loop generators —
+/// `Coordinator::run_closed_loop` — only offer load as fast as replies
+/// return, which hides queueing collapse).  Both variants are sampled
+/// through the deterministic [`Rng`], so a (process, seed) pair names one
+/// exact arrival sequence.
+#[derive(Clone, Copy, Debug)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals: exponential inter-arrival gaps at `rate_per_s`.
+    Poisson { rate_per_s: f64 },
+    /// On-off modulated Poisson (bursty): exponential ON periods of mean
+    /// `mean_on_s` seconds emitting at `rate_on_per_s`, alternating with
+    /// silent exponential OFF periods of mean `mean_off_s`.
+    Bursty {
+        rate_on_per_s: f64,
+        mean_on_s: f64,
+        mean_off_s: f64,
+    },
+}
+
+impl ArrivalProcess {
+    pub fn poisson(rate_per_s: f64) -> Self {
+        assert!(rate_per_s > 0.0 && rate_per_s.is_finite(), "rate {rate_per_s}");
+        ArrivalProcess::Poisson { rate_per_s }
+    }
+
+    pub fn bursty(rate_on_per_s: f64, mean_on_s: f64, mean_off_s: f64) -> Self {
+        assert!(rate_on_per_s > 0.0 && rate_on_per_s.is_finite());
+        assert!(mean_on_s > 0.0 && mean_off_s >= 0.0);
+        ArrivalProcess::Bursty { rate_on_per_s, mean_on_s, mean_off_s }
+    }
+
+    /// Long-run arrival rate: the Poisson rate, or the ON rate scaled by
+    /// the duty cycle `on / (on + off)` for the bursty process.
+    pub fn mean_rate_per_s(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate_per_s } => rate_per_s,
+            ArrivalProcess::Bursty { rate_on_per_s, mean_on_s, mean_off_s } => {
+                rate_on_per_s * mean_on_s / (mean_on_s + mean_off_s)
+            }
+        }
+    }
+
+    /// Draw `n` arrival timestamps (microseconds from t=0, non-decreasing).
+    pub fn sample_arrivals_us(&self, rng: &mut Rng, n: usize) -> Vec<u64> {
+        let exp = |rng: &mut Rng, mean: f64| -> f64 {
+            // inverse CDF; 1-u in (0,1] so ln never sees zero
+            -(1.0 - rng.gen_f64()).ln() * mean
+        };
+        let mut out = Vec::with_capacity(n);
+        let mut t_s = 0.0f64;
+        match *self {
+            ArrivalProcess::Poisson { rate_per_s } => {
+                for _ in 0..n {
+                    t_s += exp(rng, 1.0 / rate_per_s);
+                    out.push((t_s * 1e6) as u64);
+                }
+            }
+            ArrivalProcess::Bursty { rate_on_per_s, mean_on_s, mean_off_s } => {
+                let mut on_left_s = exp(rng, mean_on_s);
+                while out.len() < n {
+                    let gap = exp(rng, 1.0 / rate_on_per_s);
+                    if gap <= on_left_s {
+                        on_left_s -= gap;
+                        t_s += gap;
+                        out.push((t_s * 1e6) as u64);
+                    } else {
+                        // burst ends before the next arrival: spend the
+                        // rest of the ON period, sleep through OFF, and
+                        // start a fresh burst (memoryless, so the
+                        // discarded gap costs nothing statistically).
+                        t_s += on_left_s + exp(rng, mean_off_s);
+                        on_left_s = exp(rng, mean_on_s);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One open-loop arrival: a request of `tokens` tokens at `t_us`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArrivalEvent {
+    pub t_us: u64,
+    pub tokens: u64,
+}
+
+/// Draw a full arrival schedule: timestamps from the process, lengths
+/// from the distribution, both through one seeded stream (so a
+/// (process, dist, seed) triple names one exact workload).
+pub fn generate_arrivals(
+    process: &ArrivalProcess,
+    dist: &LengthDist,
+    rng: &mut Rng,
+    n: usize,
+) -> Vec<ArrivalEvent> {
+    let times = process.sample_arrivals_us(rng, n);
+    times
+        .into_iter()
+        .map(|t_us| ArrivalEvent { t_us, tokens: dist.sample(rng) })
+        .collect()
+}
+
+/// Header line of the replayable arrival-trace format.
+pub const ARRIVAL_TRACE_HEADER: &str = "# tas-arrivals v1";
+
+/// Serialise arrivals as a replayable text trace: one `t_us tokens` line
+/// per request under a version header.  The format is the unit of
+/// workload exchange — `tas fleet --arrivals-out` writes it, and
+/// `--arrivals-in` replays it bit-for-bit (same schedule, any router /
+/// replica count / SLO under test).
+pub fn format_arrival_trace(arrivals: &[ArrivalEvent]) -> String {
+    let mut out = String::with_capacity(arrivals.len() * 12 + 32);
+    out.push_str(ARRIVAL_TRACE_HEADER);
+    out.push('\n');
+    for a in arrivals {
+        out.push_str(&format!("{} {}\n", a.t_us, a.tokens));
+    }
+    out
+}
+
+/// Parse the [`format_arrival_trace`] format. Comments (`#`) and blank
+/// lines are ignored after the mandatory version header; timestamps must
+/// be non-decreasing and every request non-empty.
+pub fn parse_arrival_trace(text: &str) -> anyhow::Result<Vec<ArrivalEvent>> {
+    let mut lines = text.lines();
+    let header = lines.next().unwrap_or("").trim();
+    anyhow::ensure!(
+        header == ARRIVAL_TRACE_HEADER,
+        "bad arrival trace header '{header}' (want '{ARRIVAL_TRACE_HEADER}')"
+    );
+    let mut out = Vec::new();
+    let mut last = 0u64;
+    for (i, line) in lines.enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (t_s, tok_s) = line
+            .split_once(' ')
+            .ok_or_else(|| anyhow::anyhow!("line {}: want 't_us tokens'", i + 2))?;
+        let t_us: u64 = t_s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("line {}: bad timestamp '{t_s}'", i + 2))?;
+        let tokens: u64 = tok_s
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("line {}: bad token count '{tok_s}'", i + 2))?;
+        anyhow::ensure!(t_us >= last, "line {}: timestamps must not decrease", i + 2);
+        anyhow::ensure!(tokens >= 1, "line {}: empty request", i + 2);
+        last = t_us;
+        out.push(ArrivalEvent { t_us, tokens });
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -116,5 +330,83 @@ mod tests {
     #[should_panic]
     fn lognormal_rejects_inverted_bounds() {
         LengthDist::lognormal(100, 0.5, 200, 100);
+    }
+
+    #[test]
+    fn dist_parse_covers_the_cli_specs() {
+        let max = 256;
+        let lib = LengthDist::parse("librispeech", max).unwrap();
+        assert_eq!(lib.bounds(), (4, 256));
+        let fixed = LengthDist::parse("fixed", max).unwrap();
+        assert_eq!(fixed.bounds(), (64, 64));
+        let fixed_n = LengthDist::parse("fixed:100", max).unwrap();
+        assert_eq!(fixed_n.bounds(), (100, 100));
+        let ln = LengthDist::parse("lognormal:80,0.4", max).unwrap();
+        assert_eq!(ln.bounds(), (4, 256));
+        let mut rng = Rng::new(3);
+        let xs = ln.sample_n(&mut rng, 5000);
+        let mean = xs.iter().sum::<u64>() as f64 / xs.len() as f64;
+        assert!((60.0..110.0).contains(&mean), "mean {mean}");
+        assert!(LengthDist::parse("nope", max).is_err());
+        assert!(LengthDist::parse("lognormal:80", max).is_err());
+        assert!(LengthDist::parse("fixed:0", max).is_err());
+        assert!(LengthDist::parse("fixed:257", max).is_err());
+    }
+
+    #[test]
+    fn poisson_arrivals_hit_the_target_rate() {
+        let p = ArrivalProcess::poisson(1000.0);
+        let mut rng = Rng::new(9);
+        let n = 50_000;
+        let times = p.sample_arrivals_us(&mut rng, n);
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+        let horizon_s = *times.last().unwrap() as f64 / 1e6;
+        let rate = n as f64 / horizon_s;
+        assert!(
+            (rate - 1000.0).abs() < 20.0,
+            "empirical rate {rate} missed target 1000 (±2%)"
+        );
+    }
+
+    #[test]
+    fn bursty_arrivals_hit_the_duty_cycled_rate() {
+        let p = ArrivalProcess::bursty(2000.0, 0.05, 0.05);
+        assert!((p.mean_rate_per_s() - 1000.0).abs() < 1e-9);
+        let mut rng = Rng::new(11);
+        let n = 50_000;
+        let times = p.sample_arrivals_us(&mut rng, n);
+        let horizon_s = *times.last().unwrap() as f64 / 1e6;
+        let rate = n as f64 / horizon_s;
+        assert!(
+            (rate - 1000.0).abs() < 50.0,
+            "empirical rate {rate} missed duty-cycled 1000 (±5%)"
+        );
+    }
+
+    #[test]
+    fn arrival_generation_is_deterministic_per_seed() {
+        let p = ArrivalProcess::bursty(500.0, 0.1, 0.1);
+        let d = LengthDist::librispeech();
+        let a = generate_arrivals(&p, &d, &mut Rng::new(13), 200);
+        let b = generate_arrivals(&p, &d, &mut Rng::new(13), 200);
+        assert_eq!(a, b);
+        let c = generate_arrivals(&p, &d, &mut Rng::new(14), 200);
+        assert_ne!(a, c, "different seed, different schedule");
+    }
+
+    #[test]
+    fn arrival_trace_round_trips() {
+        let p = ArrivalProcess::poisson(100.0);
+        let d = LengthDist::fixed(64);
+        let arrivals = generate_arrivals(&p, &d, &mut Rng::new(5), 100);
+        let text = format_arrival_trace(&arrivals);
+        let back = parse_arrival_trace(&text).unwrap();
+        assert_eq!(arrivals, back);
+        assert!(parse_arrival_trace("no header\n1 2\n").is_err());
+        assert!(parse_arrival_trace("# tas-arrivals v1\n5 3\n4 3\n").is_err());
+        assert!(parse_arrival_trace("# tas-arrivals v1\n5 0\n").is_err());
+        // comments and blank lines are tolerated after the header
+        let ok = parse_arrival_trace("# tas-arrivals v1\n# c\n\n5 3\n").unwrap();
+        assert_eq!(ok, vec![ArrivalEvent { t_us: 5, tokens: 3 }]);
     }
 }

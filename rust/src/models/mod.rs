@@ -12,7 +12,10 @@
 pub mod lengths;
 pub mod zoo;
 
-pub use lengths::LengthDist;
+pub use lengths::{
+    format_arrival_trace, generate_arrivals, parse_arrival_trace, ArrivalEvent,
+    ArrivalProcess, LengthDist,
+};
 pub use zoo::{bert_base, bert_large, gpt3, vit_g14, wav2vec2_large, xlsr_2b, all_models};
 
 use crate::gemm::GemmShape;

@@ -15,16 +15,22 @@
 //! * [`chrome`] — serialises recorded events as Chrome trace-event JSON
 //!   (`chrome://tracing`, <https://ui.perfetto.dev>), one track per span
 //!   source, B/E pairs nested per track, microsecond timestamps.
+//! * [`slo`] — sliding-window SLO accounting: windowed TTFT/TPOT/e2e
+//!   percentiles over mergeable [`crate::util::stats::Summary`] digests,
+//!   per-window goodput and multi-rate burn rates.  Per-replica trackers
+//!   fold exactly into a fleet aggregate.
 //! * [`timeline`] — replays the sharded-GEMM latency decomposition
 //!   (compute bursts, exposed link waits, collective round drains) into a
 //!   tracer, so `tas shard --trace-out` exports the simulated schedule.
 
 pub mod chrome;
 pub mod registry;
+pub mod slo;
 pub mod span;
 pub mod timeline;
 
 pub use chrome::{chrome_trace_json, write_chrome_trace};
 pub use registry::Registry;
+pub use slo::{BurnRates, SloSnapshot, SloSpec, SloTracker};
 pub use span::{Phase, TraceEvent, Tracer};
 pub use timeline::shard_gemm_timeline;

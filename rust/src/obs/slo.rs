@@ -1,0 +1,483 @@
+//! SLO accounting: sliding-window latency percentiles, per-window
+//! goodput, and multi-rate burn-rate counters.
+//!
+//! A [`SloTracker`] buckets every observed latency sample into fixed
+//! windows of virtual (or wall) time.  Each window holds bounded
+//! [`Summary`] reservoirs for TTFT / TPOT / end-to-end latency plus the
+//! SLO pass counters, so a long-running fleet keeps O(windows) memory
+//! and the per-window percentiles stay reproducible.
+//!
+//! **Goodput** of a window is the fraction of SLO-checked samples that
+//! met their bound: each TTFT sample is one request checked against
+//! `ttft_ms`, each TPOT sample one decode dispatch checked against
+//! `tpot_ms` (prefill-only traffic reduces to plain request goodput).
+//! **Burn rate** over a horizon is the SRE multi-window form:
+//! `(1 − goodput) / (1 − objective)` — 1.0 burns the error budget
+//! exactly at the sustainable pace, 10× eats it ten times too fast.
+//! [`SloSnapshot::burn`] reports the last-window, last-8-window and
+//! whole-run rates, so a paging rule can require both a fast and a slow
+//! window to fire (the standard guard against one-sample pages).
+//!
+//! Per-replica trackers merge exactly: windows align on the shared
+//! index, counters add, and the reservoirs fold through
+//! [`Summary::merge`] (exact count/sum/min/max, deterministic
+//! percentiles) — so a fleet's aggregate histogram equals one global
+//! tracker fed the union of the streams.
+
+use crate::report::json::{jarr, jf64, jnum, jobj, jopt};
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Latency objectives: a request is good when TTFT ≤ `ttft_ms`, a decode
+/// dispatch when TPOT ≤ `tpot_ms`; `objective` is the target good
+/// fraction the burn rate is measured against (0.99 → 1% error budget).
+#[derive(Clone, Copy, Debug)]
+pub struct SloSpec {
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+    pub objective: f64,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        SloSpec { ttft_ms: 50.0, tpot_ms: 20.0, objective: 0.99 }
+    }
+}
+
+/// Most windows a tracker retains; beyond it the oldest windows drop
+/// (counted, so a snapshot can say its horizon was clipped).
+const MAX_WINDOWS: usize = 4096;
+
+/// One window's accumulators.
+#[derive(Clone, Debug, Default)]
+pub struct WindowAcc {
+    pub ttft: Summary,
+    pub tpot: Summary,
+    pub e2e: Summary,
+    pub ttft_good: u64,
+    pub tpot_good: u64,
+}
+
+impl WindowAcc {
+    fn checked(&self) -> u64 {
+        self.ttft.count() + self.tpot.count()
+    }
+
+    fn good(&self) -> u64 {
+        self.ttft_good + self.tpot_good
+    }
+
+    fn merge(&mut self, other: &WindowAcc) {
+        self.ttft.merge(&other.ttft);
+        self.tpot.merge(&other.tpot);
+        self.e2e.merge(&other.e2e);
+        self.ttft_good += other.ttft_good;
+        self.tpot_good += other.tpot_good;
+    }
+}
+
+/// Sliding-window SLO accountant.  Thread-safe; a disabled tracker is a
+/// no-op on every observe call (the coordinator threads one through
+/// unconditionally, like the span tracer).
+#[derive(Debug)]
+pub struct SloTracker {
+    enabled: bool,
+    spec: SloSpec,
+    window_us: u64,
+    epoch: Instant,
+    inner: Mutex<Windows>,
+}
+
+#[derive(Debug, Default)]
+struct Windows {
+    map: BTreeMap<u64, WindowAcc>,
+    dropped: u64,
+}
+
+impl SloTracker {
+    pub fn new(spec: SloSpec, window_ms: u64) -> Self {
+        assert!(window_ms >= 1, "window must be >= 1 ms");
+        assert!(
+            (0.0..1.0).contains(&spec.objective),
+            "objective {} outside [0, 1)",
+            spec.objective
+        );
+        SloTracker {
+            enabled: true,
+            spec,
+            window_us: window_ms * 1000,
+            epoch: Instant::now(),
+            inner: Mutex::new(Windows::default()),
+        }
+    }
+
+    /// A tracker that ignores every observation (default coordinator
+    /// wiring when no SLO flags are set).
+    pub fn disabled() -> Self {
+        SloTracker {
+            enabled: false,
+            spec: SloSpec::default(),
+            window_us: 1000,
+            epoch: Instant::now(),
+            inner: Mutex::new(Windows::default()),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn spec(&self) -> SloSpec {
+        self.spec
+    }
+
+    pub fn window_ms(&self) -> f64 {
+        self.window_us as f64 / 1000.0
+    }
+
+    /// Microseconds since this tracker's construction (wall-clock mode).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn observe(&self, t_us: u64, f: impl FnOnce(&mut WindowAcc)) {
+        if !self.enabled {
+            return;
+        }
+        let idx = t_us / self.window_us;
+        let mut g = self.inner.lock().unwrap();
+        f(g.map.entry(idx).or_default());
+        while g.map.len() > MAX_WINDOWS {
+            g.map.pop_first();
+            g.dropped += 1;
+        }
+    }
+
+    /// Record one request's TTFT observed at `t_us` (virtual or
+    /// tracker-relative microseconds — the caller owns the clock).
+    pub fn observe_ttft_at(&self, t_us: u64, ms: f64) {
+        let good = ms <= self.spec.ttft_ms;
+        self.observe(t_us, |w| {
+            w.ttft.push(ms);
+            w.ttft_good += good as u64;
+        });
+    }
+
+    /// Record one decode dispatch's TPOT observed at `t_us`.
+    pub fn observe_tpot_at(&self, t_us: u64, ms: f64) {
+        let good = ms <= self.spec.tpot_ms;
+        self.observe(t_us, |w| {
+            w.tpot.push(ms);
+            w.tpot_good += good as u64;
+        });
+    }
+
+    /// Record one request's end-to-end latency observed at `t_us`
+    /// (distribution only; the goodput criteria are TTFT/TPOT).
+    pub fn observe_e2e_at(&self, t_us: u64, ms: f64) {
+        self.observe(t_us, |w| w.e2e.push(ms));
+    }
+
+    /// Wall-clock conveniences for the serving path.
+    pub fn observe_ttft_now(&self, ms: f64) {
+        self.observe_ttft_at(self.now_us(), ms);
+    }
+
+    pub fn observe_tpot_now(&self, ms: f64) {
+        self.observe_tpot_at(self.now_us(), ms);
+    }
+
+    pub fn observe_e2e_now(&self, ms: f64) {
+        self.observe_e2e_at(self.now_us(), ms);
+    }
+
+    /// Fold another tracker's windows into this one (fleet aggregation).
+    /// Windows align by index, so both trackers must share a window size
+    /// and a time origin.
+    pub fn merge_from(&self, other: &SloTracker) {
+        assert_eq!(
+            self.window_us, other.window_us,
+            "cannot merge trackers with different window sizes"
+        );
+        if !self.enabled || !other.enabled {
+            return;
+        }
+        let theirs = other.inner.lock().unwrap();
+        let mut ours = self.inner.lock().unwrap();
+        for (idx, acc) in theirs.map.iter() {
+            ours.map.entry(*idx).or_default().merge(acc);
+        }
+        ours.dropped += theirs.dropped;
+        while ours.map.len() > MAX_WINDOWS {
+            ours.map.pop_first();
+            ours.dropped += 1;
+        }
+    }
+
+    pub fn snapshot(&self) -> SloSnapshot {
+        let g = self.inner.lock().unwrap();
+        let windows: Vec<WindowSnapshot> = g
+            .map
+            .iter()
+            .map(|(&index, acc)| WindowSnapshot {
+                index,
+                start_ms: index as f64 * self.window_ms(),
+                checked: acc.checked(),
+                good: acc.good(),
+                ttft_p50_ms: acc.ttft.p50(),
+                ttft_p99_ms: acc.ttft.p99(),
+                tpot_p50_ms: acc.tpot.p50(),
+                tpot_p99_ms: acc.tpot.p99(),
+                e2e_p50_ms: acc.e2e.p50(),
+                e2e_p99_ms: acc.e2e.p99(),
+            })
+            .collect();
+        let budget = 1.0 - self.spec.objective;
+        let rate_over = |wins: &[WindowSnapshot]| -> Option<f64> {
+            let checked: u64 = wins.iter().map(|w| w.checked).sum();
+            let good: u64 = wins.iter().map(|w| w.good).sum();
+            if checked == 0 {
+                None
+            } else {
+                Some((1.0 - good as f64 / checked as f64) / budget)
+            }
+        };
+        let last_k = |k: usize| -> Option<f64> {
+            let last = windows.last()?.index;
+            let lo = last.saturating_sub(k as u64 - 1);
+            let tail: Vec<WindowSnapshot> = windows
+                .iter()
+                .filter(|w| w.index >= lo)
+                .cloned()
+                .collect();
+            rate_over(&tail)
+        };
+        let checked: u64 = windows.iter().map(|w| w.checked).sum();
+        let good: u64 = windows.iter().map(|w| w.good).sum();
+        SloSnapshot {
+            spec: self.spec,
+            window_ms: self.window_ms(),
+            dropped_windows: g.dropped,
+            checked,
+            good,
+            goodput: if checked == 0 {
+                None
+            } else {
+                Some(good as f64 / checked as f64)
+            },
+            burn: BurnRates {
+                last_window: last_k(1),
+                last_8_windows: last_k(8),
+                overall: rate_over(&windows),
+            },
+            windows,
+        }
+    }
+}
+
+/// One window, snapshotted.
+#[derive(Clone, Debug)]
+pub struct WindowSnapshot {
+    pub index: u64,
+    pub start_ms: f64,
+    pub checked: u64,
+    pub good: u64,
+    pub ttft_p50_ms: Option<f64>,
+    pub ttft_p99_ms: Option<f64>,
+    pub tpot_p50_ms: Option<f64>,
+    pub tpot_p99_ms: Option<f64>,
+    pub e2e_p50_ms: Option<f64>,
+    pub e2e_p99_ms: Option<f64>,
+}
+
+impl WindowSnapshot {
+    pub fn goodput(&self) -> Option<f64> {
+        if self.checked == 0 {
+            None
+        } else {
+            Some(self.good as f64 / self.checked as f64)
+        }
+    }
+}
+
+/// Multi-rate burn: the same `(1 − goodput) / budget` ratio over three
+/// horizons (fast page, slow page, whole run).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BurnRates {
+    pub last_window: Option<f64>,
+    pub last_8_windows: Option<f64>,
+    pub overall: Option<f64>,
+}
+
+/// Point-in-time view of a tracker; everything the fleet report and the
+/// Prometheus exposition need.
+#[derive(Clone, Debug)]
+pub struct SloSnapshot {
+    pub spec: SloSpec,
+    pub window_ms: f64,
+    pub dropped_windows: u64,
+    pub checked: u64,
+    pub good: u64,
+    pub goodput: Option<f64>,
+    pub burn: BurnRates,
+    pub windows: Vec<WindowSnapshot>,
+}
+
+impl SloSnapshot {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("slo_ttft_ms", jf64(self.spec.ttft_ms)),
+            ("slo_tpot_ms", jf64(self.spec.tpot_ms)),
+            ("objective", jf64(self.spec.objective)),
+            ("window_ms", jf64(self.window_ms)),
+            ("dropped_windows", jnum(self.dropped_windows)),
+            ("checked", jnum(self.checked)),
+            ("good", jnum(self.good)),
+            ("goodput", jopt(self.goodput)),
+            (
+                "burn",
+                jobj(vec![
+                    ("last_window", jopt(self.burn.last_window)),
+                    ("last_8_windows", jopt(self.burn.last_8_windows)),
+                    ("overall", jopt(self.burn.overall)),
+                ]),
+            ),
+            (
+                "windows",
+                jarr(
+                    self.windows
+                        .iter()
+                        .map(|w| {
+                            jobj(vec![
+                                ("index", jnum(w.index)),
+                                ("start_ms", jf64(w.start_ms)),
+                                ("checked", jnum(w.checked)),
+                                ("good", jnum(w.good)),
+                                ("goodput", jopt(w.goodput())),
+                                ("ttft_p50_ms", jopt(w.ttft_p50_ms)),
+                                ("ttft_p99_ms", jopt(w.ttft_p99_ms)),
+                                ("tpot_p50_ms", jopt(w.tpot_p50_ms)),
+                                ("tpot_p99_ms", jopt(w.tpot_p99_ms)),
+                                ("e2e_p50_ms", jopt(w.e2e_p50_ms)),
+                                ("e2e_p99_ms", jopt(w.e2e_p99_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracker() -> SloTracker {
+        SloTracker::new(
+            SloSpec { ttft_ms: 10.0, tpot_ms: 5.0, objective: 0.9 },
+            100, // 100 ms windows
+        )
+    }
+
+    #[test]
+    fn goodput_counts_both_criteria() {
+        let t = tracker();
+        t.observe_ttft_at(10_000, 5.0); // good
+        t.observe_ttft_at(20_000, 50.0); // bad
+        t.observe_tpot_at(30_000, 4.0); // good
+        t.observe_tpot_at(40_000, 6.0); // bad
+        let s = t.snapshot();
+        assert_eq!(s.checked, 4);
+        assert_eq!(s.good, 2);
+        assert_eq!(s.goodput, Some(0.5));
+        // budget is 0.1, bad fraction 0.5 -> burn 5x
+        assert!((s.burn.overall.unwrap() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn windows_split_on_the_window_boundary() {
+        let t = tracker();
+        t.observe_ttft_at(99_999, 1.0); // window 0
+        t.observe_ttft_at(100_000, 1.0); // window 1
+        t.observe_ttft_at(250_000, 100.0); // window 2, violates
+        let s = t.snapshot();
+        assert_eq!(s.windows.len(), 3);
+        assert_eq!(s.windows[0].index, 0);
+        assert_eq!(s.windows[2].index, 2);
+        assert_eq!(s.windows[2].goodput(), Some(0.0));
+        // last-window burn sees only the violating window
+        assert!((s.burn.last_window.unwrap() - 10.0).abs() < 1e-9);
+        // whole-run burn: 1/3 bad over budget 0.1
+        assert!((s.burn.overall.unwrap() - (1.0 / 3.0) / 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_window_percentiles_match_a_full_sample_oracle() {
+        let t = tracker();
+        let mut oracle: Vec<f64> = Vec::new();
+        for i in 0..200u64 {
+            let ms = (i * 7 % 91) as f64;
+            t.observe_ttft_at(i * 400, ms); // all land in window 0
+            oracle.push(ms);
+        }
+        oracle.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let nearest =
+            |p: f64| oracle[((p / 100.0) * (oracle.len() - 1) as f64).round() as usize];
+        let w = &t.snapshot().windows[0];
+        assert_eq!(w.ttft_p50_ms, Some(nearest(50.0)));
+        assert_eq!(w.ttft_p99_ms, Some(nearest(99.0)));
+    }
+
+    #[test]
+    fn merged_trackers_equal_one_global_tracker() {
+        let (a, b, global) = (tracker(), tracker(), tracker());
+        for i in 0..100u64 {
+            let (t_us, ms) = (i * 3000, (i % 17) as f64);
+            if i % 2 == 0 {
+                a.observe_ttft_at(t_us, ms);
+            } else {
+                b.observe_ttft_at(t_us, ms);
+            }
+            global.observe_ttft_at(t_us, ms);
+        }
+        a.merge_from(&b);
+        let (m, g) = (a.snapshot(), global.snapshot());
+        assert_eq!(m.checked, g.checked);
+        assert_eq!(m.good, g.good);
+        assert_eq!(m.goodput, g.goodput);
+        assert_eq!(m.windows.len(), g.windows.len());
+        for (wm, wg) in m.windows.iter().zip(&g.windows) {
+            assert_eq!(wm.checked, wg.checked);
+            // same multiset per window (both under the reservoir cap)
+            assert_eq!(wm.ttft_p50_ms, wg.ttft_p50_ms);
+            assert_eq!(wm.ttft_p99_ms, wg.ttft_p99_ms);
+        }
+    }
+
+    #[test]
+    fn disabled_tracker_observes_nothing() {
+        let t = SloTracker::disabled();
+        t.observe_ttft_at(0, 1.0);
+        t.observe_tpot_now(1.0);
+        let s = t.snapshot();
+        assert_eq!(s.checked, 0);
+        assert_eq!(s.goodput, None);
+        assert_eq!(s.burn.overall, None);
+        assert!(s.windows.is_empty());
+    }
+
+    #[test]
+    fn snapshot_serialises_without_nan() {
+        let t = tracker();
+        t.observe_ttft_at(5, 1.0);
+        let text = t.snapshot().to_json().to_string_compact();
+        assert!(!text.contains("NaN"));
+        crate::util::json::Json::parse(&text).expect("slo snapshot must parse");
+        let empty = SloTracker::disabled().snapshot().to_json().to_string_compact();
+        crate::util::json::Json::parse(&empty).unwrap();
+    }
+}

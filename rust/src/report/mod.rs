@@ -3,11 +3,13 @@
 //! so the two can be diffed by eye.  Used by `tas tables`, the benches
 //! and EXPERIMENTS.md.  [`json`] holds the shared `--json` report
 //! envelope every CLI subcommand emits; [`explain`] builds the
-//! `tas explain` EMA attribution ledger.
+//! `tas explain` EMA attribution ledger; [`prom`] renders metrics
+//! snapshots as Prometheus text exposition for `--metrics-out`.
 
 pub mod explain;
 pub mod figviz;
 pub mod json;
+pub mod prom;
 
 use crate::dataflow::{analytic, ema, Scheme};
 use crate::energy::{ayaka::ayaka_workload_read_ema, workload_read_ema};

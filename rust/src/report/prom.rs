@@ -1,0 +1,392 @@
+//! Prometheus text exposition (version 0.0.4) for metrics snapshots.
+//!
+//! [`Prom`] is a buffered writer: samples land grouped by metric family
+//! so the rendered page carries one `# HELP`/`# TYPE` header per family
+//! even when several replicas emit the same metric with different
+//! labels (the format forbids repeating a family header).  Families
+//! render in name order — deterministic output, diff-able in tests.
+//!
+//! [`render_metrics`] maps a [`MetricsSnapshot`] onto conventional
+//! families (`_total` counters, gauges, latency summaries with
+//! `quantile` labels plus exact `_sum`/`_count` series);
+//! [`render_slo`] adds the SLO goodput/burn families from an
+//! [`SloSnapshot`].  `tas serve --metrics-out` and `tas fleet
+//! --metrics-out` both write through this path, so a scrape of either
+//! surface parses with the same rules.
+
+use crate::coordinator::MetricsSnapshot;
+use crate::obs::slo::SloSnapshot;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+    Summary,
+}
+
+impl Kind {
+    fn name(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Summary => "summary",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Family {
+    help: String,
+    kind: Kind,
+    lines: Vec<String>,
+}
+
+/// Buffered exposition writer; see the module docs.
+#[derive(Debug, Default)]
+pub struct Prom {
+    families: BTreeMap<String, Family>,
+}
+
+/// Escape a label value per the exposition format: backslash, double
+/// quote and newline must be backslash-escaped.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a `{k="v",...}` label block ("" when empty).
+fn label_block(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let body: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{}=\"{}\"", k, escape_label(v)))
+        .collect();
+    format!("{{{}}}", body.join(","))
+}
+
+/// One sample value. `{}` prints integers bare and floats with the
+/// shortest round-trip form; infinities use the format's +Inf/-Inf.
+fn num(v: f64) -> String {
+    if v.is_infinite() {
+        if v > 0.0 { "+Inf".into() } else { "-Inf".into() }
+    } else {
+        format!("{v}")
+    }
+}
+
+impl Prom {
+    pub fn new() -> Self {
+        Prom::default()
+    }
+
+    fn family(&mut self, name: &str, help: &str, kind: Kind) -> &mut Family {
+        let f = self.families.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            lines: Vec::new(),
+        });
+        debug_assert_eq!(f.kind, kind, "metric {name} re-registered as a different type");
+        f
+    }
+
+    /// Add one counter sample. `name` should end in `_total` by
+    /// convention; the value must be monotone from the source's view.
+    pub fn counter(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        let line = format!("{}{} {}", name, label_block(labels), num(value));
+        self.family(name, help, Kind::Counter).lines.push(line);
+    }
+
+    /// Add one gauge sample.
+    pub fn gauge(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        let line = format!("{}{} {}", name, label_block(labels), num(value));
+        self.family(name, help, Kind::Gauge).lines.push(line);
+    }
+
+    /// Add one summary: known quantiles (skipping empty ones) plus the
+    /// exact `_sum` and `_count` series.
+    pub fn summary(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        quantiles: &[(f64, Option<f64>)],
+        sum: f64,
+        count: u64,
+    ) {
+        let mut lines = Vec::new();
+        for &(q, v) in quantiles {
+            if let Some(v) = v {
+                let mut ql: Vec<(&str, &str)> = labels.to_vec();
+                let qs = num(q);
+                ql.push(("quantile", &qs));
+                lines.push(format!("{}{} {}", name, label_block(&ql), num(v)));
+            }
+        }
+        lines.push(format!("{}_sum{} {}", name, label_block(labels), num(sum)));
+        lines.push(format!("{}_count{} {}", name, label_block(labels), count));
+        self.family(name, help, Kind::Summary).lines.append(&mut lines);
+    }
+
+    /// Render the exposition page: families in name order, each with one
+    /// HELP/TYPE header followed by its buffered samples.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, f) in &self.families {
+            let _ = writeln!(out, "# HELP {} {}", name, f.help);
+            let _ = writeln!(out, "# TYPE {} {}", name, f.kind.name());
+            for line in &f.lines {
+                out.push_str(line);
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+/// Render one coordinator's [`MetricsSnapshot`] into `prom` under
+/// `labels` (e.g. `[("replica", "3")]`; empty for single `serve`).
+pub fn render_metrics(prom: &mut Prom, labels: &[(&str, &str)], s: &MetricsSnapshot) {
+    let c = |prom: &mut Prom, name: &str, help: &str, v: u64| {
+        prom.counter(name, help, labels, v as f64);
+    };
+    c(prom, "tas_requests_total", "Requests dispatched in prefill batches.", s.requests);
+    c(prom, "tas_batches_total", "Prefill batches dispatched.", s.batches);
+    c(prom, "tas_tokens_total", "Real (unpadded) prefill tokens served.", s.tokens);
+    c(prom, "tas_padded_tokens_total", "Padding tokens added by bucketing.", s.padded_tokens);
+    c(prom, "tas_decode_batches_total", "Decode steps dispatched.", s.decode_batches);
+    c(prom, "tas_decode_tokens_total", "Tokens generated by decode steps.", s.decode_tokens);
+    c(prom, "tas_flops_total", "MAC count of dispatched work.", s.flops);
+    c(
+        prom,
+        "tas_ema_naive_words_total",
+        "DRAM read words the served batches would move under the naive scheme.",
+        s.ema_naive_words,
+    );
+    c(
+        prom,
+        "tas_ema_tas_words_total",
+        "DRAM read words under tile-based adaptive stationary.",
+        s.ema_tas_words,
+    );
+    c(
+        prom,
+        "tas_ema_plan_words_total",
+        "Total DRAM words of the served layer-level plans.",
+        s.ema_plan_words,
+    );
+    c(
+        prom,
+        "tas_link_words_total",
+        "Inter-chip activation handoff words of served plans.",
+        s.link_words,
+    );
+    c(
+        prom,
+        "tas_planner_cache_hits_total",
+        "Dispatch-planner plan-memo hits.",
+        s.planner_cache.hits,
+    );
+    c(
+        prom,
+        "tas_planner_cache_misses_total",
+        "Dispatch-planner plan-memo misses.",
+        s.planner_cache.misses,
+    );
+    if let Some(v) = s.queue_depth {
+        prom.gauge("tas_queue_depth", "Prefill queue depth at the last poll.", labels, v);
+    }
+    if let Some(v) = s.queue_depth_peak {
+        prom.gauge(
+            "tas_queue_depth_peak",
+            "High-water prefill queue depth.",
+            labels,
+            v,
+        );
+    }
+    if let Some(v) = s.batch_occupancy {
+        prom.gauge(
+            "tas_batch_occupancy",
+            "Requests over bucket capacity of the last dispatched batch.",
+            labels,
+            v,
+        );
+    }
+    prom.summary(
+        "tas_request_latency_ms",
+        "End-to-end request latency (milliseconds).",
+        labels,
+        &[(0.5, s.latency_p50_ms), (0.99, s.latency_p99_ms)],
+        s.latency_sum_ms,
+        s.latency_count,
+    );
+    prom.summary(
+        "tas_ttft_ms",
+        "Time to first token (milliseconds).",
+        labels,
+        &[(0.5, s.ttft_p50_ms), (0.99, s.ttft_p99_ms)],
+        s.ttft_sum_ms,
+        s.ttft_count,
+    );
+    prom.summary(
+        "tas_tpot_ms",
+        "Time per output token (milliseconds, one sample per decode step).",
+        labels,
+        &[(0.5, s.tpot_p50_ms), (0.99, s.tpot_p99_ms)],
+        s.tpot_sum_ms,
+        s.tpot_count,
+    );
+}
+
+/// Render an [`SloSnapshot`]'s goodput and burn-rate families.
+pub fn render_slo(prom: &mut Prom, labels: &[(&str, &str)], s: &SloSnapshot) {
+    prom.counter(
+        "tas_slo_checked_total",
+        "Latency samples checked against an SLO bound.",
+        labels,
+        s.checked as f64,
+    );
+    prom.counter(
+        "tas_slo_good_total",
+        "Checked samples that met their SLO bound.",
+        labels,
+        s.good as f64,
+    );
+    if let Some(g) = s.goodput {
+        prom.gauge(
+            "tas_slo_goodput",
+            "Fraction of checked samples meeting their bound (whole run).",
+            labels,
+            g,
+        );
+    }
+    let horizons = [
+        ("last_window", s.burn.last_window),
+        ("last_8_windows", s.burn.last_8_windows),
+        ("overall", s.burn.overall),
+    ];
+    for (h, v) in horizons {
+        if let Some(v) = v {
+            let mut hl: Vec<(&str, &str)> = labels.to_vec();
+            hl.push(("horizon", h));
+            prom.gauge(
+                "tas_slo_burn_rate",
+                "Error-budget burn rate (1 at the sustainable pace).",
+                &hl,
+                v,
+            );
+        }
+    }
+}
+
+/// One-call exposition for a single coordinator: metrics (no labels),
+/// ready to write to `--metrics-out`.
+pub fn metrics_exposition(s: &MetricsSnapshot) -> String {
+    let mut p = Prom::new();
+    render_metrics(&mut p, &[], s);
+    p.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every non-comment line must be `name{labels} value` with a
+    /// parseable value — the well-formedness CI's jq-less check mirrors.
+    fn assert_well_formed(page: &str) {
+        for line in page.lines() {
+            if line.starts_with('#') {
+                assert!(
+                    line.starts_with("# HELP ") || line.starts_with("# TYPE "),
+                    "bad comment: {line}"
+                );
+                continue;
+            }
+            let (_, value) = line.rsplit_once(' ').expect("sample needs a value");
+            assert!(
+                value == "+Inf" || value == "-Inf" || value.parse::<f64>().is_ok(),
+                "bad value in: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_snapshot_renders_well_formed_families() {
+        let page = metrics_exposition(&MetricsSnapshot::default());
+        assert_well_formed(&page);
+        assert!(page.contains("# TYPE tas_requests_total counter"));
+        assert!(page.contains("tas_requests_total 0"));
+        // empty quantiles are skipped; _sum/_count always present
+        assert!(!page.contains("quantile"));
+        assert!(page.contains("tas_ttft_ms_count 0"));
+        assert!(!page.contains("NaN"));
+    }
+
+    #[test]
+    fn family_headers_appear_once_across_replicas() {
+        let mut p = Prom::new();
+        let a = MetricsSnapshot { requests: 3, ..Default::default() };
+        let b = MetricsSnapshot { requests: 5, ..Default::default() };
+        render_metrics(&mut p, &[("replica", "0")], &a);
+        render_metrics(&mut p, &[("replica", "1")], &b);
+        let page = p.render();
+        assert_well_formed(&page);
+        assert_eq!(page.matches("# TYPE tas_requests_total counter").count(), 1);
+        assert!(page.contains("tas_requests_total{replica=\"0\"} 3"));
+        assert!(page.contains("tas_requests_total{replica=\"1\"} 5"));
+    }
+
+    #[test]
+    fn summaries_carry_quantiles_sum_and_count() {
+        let mut p = Prom::new();
+        let s = MetricsSnapshot {
+            ttft_p50_ms: Some(4.0),
+            ttft_p99_ms: Some(9.5),
+            ttft_count: 12,
+            ttft_sum_ms: 60.0,
+            ..Default::default()
+        };
+        render_metrics(&mut p, &[], &s);
+        let page = p.render();
+        assert_well_formed(&page);
+        assert!(page.contains("tas_ttft_ms{quantile=\"0.5\"} 4"));
+        assert!(page.contains("tas_ttft_ms{quantile=\"0.99\"} 9.5"));
+        assert!(page.contains("tas_ttft_ms_sum 60"));
+        assert!(page.contains("tas_ttft_ms_count 12"));
+    }
+
+    #[test]
+    fn label_values_escape_the_format_specials() {
+        let mut p = Prom::new();
+        p.gauge("g", "h", &[("k", "a\"b\\c\nd")], 1.0);
+        assert!(p.render().contains("g{k=\"a\\\"b\\\\c\\nd\"} 1"));
+    }
+
+    #[test]
+    fn slo_families_render_goodput_and_horizon_burns() {
+        use crate::obs::slo::{SloSpec, SloTracker};
+        let t = SloTracker::new(SloSpec::default(), 100);
+        t.observe_ttft_at(1_000, 5.0);
+        t.observe_ttft_at(2_000, 500.0);
+        let mut p = Prom::new();
+        render_slo(&mut p, &[], &t.snapshot());
+        let page = p.render();
+        assert_well_formed(&page);
+        assert!(page.contains("tas_slo_checked_total 2"));
+        assert!(page.contains("tas_slo_good_total 1"));
+        assert!(page.contains("tas_slo_goodput 0.5"));
+        assert!(page.contains("tas_slo_burn_rate{horizon=\"overall\"}"));
+        assert!(page.contains("tas_slo_burn_rate{horizon=\"last_window\"}"));
+    }
+}

@@ -22,6 +22,25 @@ impl Welford {
         self.m2 += d * (x - self.mean);
     }
 
+    /// Parallel combination (Chan et al.): fold `other`'s moments into
+    /// `self` as if both streams had been pushed into one accumulator.
+    /// Count is exact; mean/m2 combine by the closed form.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let (na, nb) = (self.n as f64, other.n as f64);
+        let n = na + nb;
+        let delta = other.mean - self.mean;
+        self.mean += delta * nb / n;
+        self.m2 += other.m2 + delta * delta * na * nb / n;
+        self.n += other.n;
+    }
+
     pub fn count(&self) -> u64 {
         self.n
     }
@@ -59,21 +78,30 @@ pub const RESERVOIR_CAP: usize = 4096;
 pub struct Summary {
     samples: Vec<f64>,
     w: Welford,
+    sum: f64,
     lo: f64,
     hi: f64,
     rng: Rng,
 }
+
+/// Base seed of the reservoir-replacement PRNG (also the re-seed base
+/// after a [`Summary::merge`], XORed with the merged count).
+const RESERVOIR_SEED: u64 = 0x5441_535f_5245_5356;
+/// Seed base of the deterministic weighted draw a merge performs when the
+/// two reservoirs together exceed [`RESERVOIR_CAP`].
+const MERGE_SEED: u64 = 0x5441_535f_4d52_4745;
 
 impl Default for Summary {
     fn default() -> Self {
         Summary {
             samples: Vec::new(),
             w: Welford::default(),
+            sum: 0.0,
             lo: f64::INFINITY,
             hi: f64::NEG_INFINITY,
             // Fixed seed: reservoir contents depend only on the sample
             // stream, never on wall-clock or thread interleaving.
-            rng: Rng::new(0x5441_535f_5245_5356),
+            rng: Rng::new(RESERVOIR_SEED),
         }
     }
 }
@@ -81,6 +109,7 @@ impl Default for Summary {
 impl Summary {
     pub fn push(&mut self, x: f64) {
         self.w.push(x);
+        self.sum += x;
         self.lo = self.lo.min(x);
         self.hi = self.hi.max(x);
         if self.samples.len() < RESERVOIR_CAP {
@@ -104,8 +133,67 @@ impl Summary {
         self.w.mean()
     }
 
+    /// Running sum of every pushed sample (kept explicitly, not derived
+    /// from the Welford mean, so merged sums add exactly).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
     pub fn stddev(&self) -> f64 {
         self.w.stddev()
+    }
+
+    /// Fold `other` into `self` as if both sample streams had been pushed
+    /// into one summary.  Count, sum, min and max combine exactly; the
+    /// Welford moments combine by the parallel closed form; the merged
+    /// reservoir is a deterministic function of the two inputs.
+    ///
+    /// While the combined reservoirs fit under [`RESERVOIR_CAP`] the
+    /// merge concatenates them (every retained sample survives, so
+    /// percentiles equal the union's exactly).  Past the cap, each side's
+    /// samples enter a weighted draw (Efraimidis–Spirakis keys on a
+    /// [`MERGE_SEED`]-seeded PRNG, weight = represented stream count per
+    /// retained sample) and the top [`RESERVOIR_CAP`] keys survive —
+    /// deterministic given the inputs, and each source stream keeps
+    /// representation proportional to its true count.  The replacement
+    /// PRNG is re-seeded on the merged count so later pushes stay
+    /// reproducible.
+    pub fn merge(&mut self, other: &Summary) {
+        if other.count() == 0 {
+            return;
+        }
+        if self.count() == 0 {
+            *self = other.clone();
+            return;
+        }
+        let (na, nb) = (self.w.count(), other.w.count());
+        self.w.merge(&other.w);
+        self.sum += other.sum;
+        self.lo = self.lo.min(other.lo);
+        self.hi = self.hi.max(other.hi);
+        if self.samples.len() + other.samples.len() <= RESERVOIR_CAP {
+            self.samples.extend_from_slice(&other.samples);
+        } else {
+            let mut rng = Rng::new(MERGE_SEED ^ na.rotate_left(17) ^ nb);
+            let wa = na as f64 / self.samples.len() as f64;
+            let wb = nb as f64 / other.samples.len() as f64;
+            let mut keyed: Vec<(f64, f64)> =
+                Vec::with_capacity(self.samples.len() + other.samples.len());
+            for &x in &self.samples {
+                keyed.push((rng.gen_f64().powf(1.0 / wa), x));
+            }
+            for &x in &other.samples {
+                keyed.push((rng.gen_f64().powf(1.0 / wb), x));
+            }
+            keyed.sort_by(|a, b| {
+                b.0.partial_cmp(&a.0)
+                    .unwrap()
+                    .then(a.1.partial_cmp(&b.1).unwrap())
+            });
+            keyed.truncate(RESERVOIR_CAP);
+            self.samples = keyed.into_iter().map(|(_, x)| x).collect();
+        }
+        self.rng = Rng::new(RESERVOIR_SEED ^ self.w.count());
     }
 
     /// Exact running minimum (not subject to reservoir eviction).
@@ -198,6 +286,82 @@ mod tests {
             (p50 - true_mid).abs() < 0.05 * n as f64,
             "reservoir p50 {p50} drifted from {true_mid}"
         );
+    }
+
+    #[test]
+    fn merge_below_cap_equals_the_union_exactly() {
+        // Integer-valued samples: FP addition is exact in any order, so
+        // even `sum` compares with ==, not a tolerance.
+        let mut a = Summary::default();
+        let mut b = Summary::default();
+        let mut union = Summary::default();
+        for i in 0..500 {
+            a.push(i as f64);
+            union.push(i as f64);
+        }
+        for i in 500..1300 {
+            b.push(i as f64);
+            union.push(i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), union.count());
+        assert_eq!(a.sum(), union.sum());
+        assert_eq!(a.min(), union.min());
+        assert_eq!(a.max(), union.max());
+        // under the cap the merged reservoir holds the exact union
+        assert_eq!(a.p50(), union.p50());
+        assert_eq!(a.p99(), union.p99());
+        assert!((a.mean() - union.mean()).abs() < 1e-9);
+        assert!((a.stddev() - union.stddev()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_over_cap_is_deterministic_and_keeps_exact_scalars() {
+        let fill = |lo: usize, hi: usize| {
+            let mut s = Summary::default();
+            for i in lo..hi {
+                s.push(i as f64);
+            }
+            s
+        };
+        let n = 3 * RESERVOIR_CAP;
+        let (a0, b) = (fill(0, n), fill(n, 2 * n));
+        let mut a = a0.clone();
+        a.merge(&b);
+        let mut a2 = a0.clone();
+        a2.merge(&b);
+        assert_eq!(a.p50(), a2.p50(), "merge must be deterministic");
+        let union = fill(0, 2 * n);
+        assert_eq!(a.count(), union.count());
+        assert_eq!(a.sum(), union.sum());
+        assert_eq!(a.min(), union.min());
+        assert_eq!(a.max(), union.max());
+        assert_eq!(a.samples.len(), RESERVOIR_CAP);
+        // both source streams survive in the reservoir roughly per their
+        // counts: the median of the merged uniform ramp stays near n.
+        let p50 = a.p50().unwrap();
+        assert!(
+            (p50 - n as f64).abs() < 0.1 * (2 * n) as f64,
+            "merged p50 {p50} drifted from {n}"
+        );
+        // merged moments match the union's closed form
+        assert!((a.mean() - union.mean()).abs() < 1e-9 * union.mean().abs());
+        assert!((a.stddev() - union.stddev()).abs() < 1e-6 * union.stddev());
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity_both_ways() {
+        let mut a = Summary::default();
+        for i in 0..10 {
+            a.push(i as f64);
+        }
+        let before = (a.count(), a.sum(), a.p50());
+        a.merge(&Summary::default());
+        assert_eq!((a.count(), a.sum(), a.p50()), before);
+        let mut empty = Summary::default();
+        empty.merge(&a);
+        assert_eq!(empty.count(), a.count());
+        assert_eq!(empty.p50(), a.p50());
     }
 
     #[test]
