@@ -18,8 +18,17 @@
 //!
 //! Besides the usual CSV, one machine-readable JSON row is printed per
 //! sequence length.
+//!
+//! PR 9 adds the joint-search rows: a cold `dataflow::search` over the
+//! block's stage chain against a fresh plan database vs the same search
+//! replanned against the warmed database (every lookup an exact-shape
+//! hit).  The warm path's economics are the memoization PR's acceptance
+//! floor: a database hit must replan ≥100× faster than the cold search
+//! (≥10× under `TAS_BENCH_FAST`, robust to shared-runner noise).
 
+use tas::arch::Interconnect;
 use tas::config::{AcceleratorConfig, EnergyConfig};
+use tas::dataflow::search::{search_stages, PlanDb, SearchCtx, PLAN_DB_CAP};
 use tas::dataflow::LayerPlan;
 use tas::energy::EnergyModel;
 use tas::gemm::Tiling;
@@ -106,6 +115,62 @@ fn main() {
             trace_ratio >= trace_floor,
             "disabled tracing must keep >= {trace_floor}x of closed-form \
              planning throughput at seq {seq}, got {trace_ratio:.3}x"
+        );
+    }
+
+    // PR 9 — joint-search economics.  Cold: full candidate search (cover
+    // family × shard axis, beam-pruned) against a fresh database.  Warm:
+    // the same chain replanned against the warmed database, where every
+    // lookup is an exact-shape hit that returns the stored winner.
+    let icx = Interconnect::default();
+    for devices in [1u64, 4] {
+        let stages = zoo::bert_base().block_stages(384);
+        let ctx = SearchCtx {
+            tiling,
+            sram_words: cfg.sram_words,
+            devices,
+            cfg: &cfg,
+            icx: &icx,
+        };
+        let n = stages.len() as u64;
+        b.run(
+            &format!("search-cold/bert-base/d{devices}"),
+            Throughput::Elements(n),
+            || {
+                let mut db = PlanDb::new(PLAN_DB_CAP);
+                bb(search_stages(&stages, ctx, &mut db).searched_cycles)
+            },
+        );
+        let mut warmed = PlanDb::new(PLAN_DB_CAP);
+        let cold_out = search_stages(&stages, ctx, &mut warmed);
+        b.run(
+            &format!("search-warm/bert-base/d{devices}"),
+            Throughput::Elements(n),
+            || bb(search_stages(&stages, ctx, &mut warmed).searched_cycles),
+        );
+        let cold = b.results[b.results.len() - 2].per_sec.expect("throughput set");
+        let warm = b.results[b.results.len() - 1].per_sec.expect("throughput set");
+        let hit_speedup = warm / cold;
+        let latency_gain =
+            cold_out.greedy_cycles as f64 / cold_out.searched_cycles.max(1) as f64;
+        println!(
+            "{{\"bench\":\"planner\",\"row\":\"joint-search\",\"model\":\"bert-base\",\
+             \"devices\":{devices},\"stages\":{n},\
+             \"cold_searches_per_sec\":{cold:.1},\"warm_replans_per_sec\":{warm:.1},\
+             \"warm_hit_speedup\":{hit_speedup:.1},\
+             \"searched_cycles\":{},\"greedy_cycles\":{},\
+             \"latency_gain_vs_greedy\":{latency_gain:.3}}}",
+            cold_out.searched_cycles, cold_out.greedy_cycles
+        );
+        assert!(
+            cold_out.searched_cycles <= cold_out.greedy_cycles,
+            "joint search lost to greedy at d{devices}"
+        );
+        let hit_floor = if fast { 10.0 } else { 100.0 };
+        assert!(
+            hit_speedup >= hit_floor,
+            "a plan-db hit must replan >= {hit_floor}x faster than the cold \
+             search at d{devices}, got {hit_speedup:.1}x"
         );
     }
     b.write_csv();

@@ -15,6 +15,9 @@
 //! both (the per-GEMM rule is the compile-path contract; the layer plan is
 //! what the accelerator-side accounting reports as achievable EMA).
 
+use crate::arch::Interconnect;
+use crate::config::AcceleratorConfig;
+use crate::dataflow::search::{search_stages, PlanDb, SearchCtx, SearchStats, StagesOutcome};
 use crate::dataflow::{DecodeDims, DecodePlan, DecodeStepPlan, LayerPlan, Scheme, StageSpec};
 use crate::gemm::{GemmShape, Tiling};
 use crate::runtime::Manifest;
@@ -407,6 +410,13 @@ pub struct DispatchPlanner {
     prefill_cache: PlanCache<u64, LayerPlan>,
     decode_cache: PlanCache<(u64, u64), DecodeStepPlan>,
     mixed_cache: PlanCache<(u64, u64, u64), MixedBucketPlan>,
+    /// Hardware model the joint search prices overlapped latency on.
+    cfg: AcceleratorConfig,
+    icx: Interconnect,
+    /// Memoized joint-search database ([`crate::dataflow::search`]):
+    /// misses run the (cover × axis × residency) search, hits replan for
+    /// free.  Persisted across restarts by the server boot path.
+    plan_db: PlanDb,
 }
 
 /// One dispatch's resolved plans, borrowed from the planner's memo.
@@ -472,7 +482,53 @@ impl DispatchPlanner {
             prefill_cache: PlanCache::new(PLAN_CACHE_CAP),
             decode_cache: PlanCache::new(PLAN_CACHE_CAP),
             mixed_cache: PlanCache::new(PLAN_CACHE_CAP),
+            cfg: AcceleratorConfig::default(),
+            icx: Interconnect::default(),
+            plan_db: PlanDb::default(),
         }
+    }
+
+    /// Install a (typically persisted) joint-search database.  Called by
+    /// the server boot path before [`DispatchPlanner::warm_up`], so a
+    /// reloaded database serves the manifest's buckets with zero new
+    /// searches.
+    pub fn with_plan_db(mut self, db: PlanDb) -> DispatchPlanner {
+        self.plan_db = db;
+        self
+    }
+
+    /// The joint-search database (for persistence and inspection).
+    pub fn plan_db(&self) -> &PlanDb {
+        &self.plan_db
+    }
+
+    /// Cumulative joint-search counters (searches, database hits/misses,
+    /// evictions, entries, beam-pruned candidates).
+    pub fn search_stats(&self) -> SearchStats {
+        self.plan_db.stats()
+    }
+
+    /// Resolve a prefill bucket's stage chain through the joint search
+    /// ([`crate::dataflow::search::search_stages`]).  A cold database
+    /// prices the candidate grid once per canonical GEMM spec; a warm
+    /// one answers from exact-shape hits without pricing anything, so
+    /// per-dispatch replanning is effectively free.
+    pub fn search_bucket(&mut self, prefill_tokens: u64) -> StagesOutcome {
+        let stages = bucket_stages(
+            prefill_tokens,
+            self.hidden,
+            self.ffn,
+            self.vocab,
+            self.n_layers,
+        );
+        let ctx = SearchCtx {
+            tiling: self.tiling,
+            sram_words: self.sram_words,
+            devices: devices_for_bucket(prefill_tokens, self.max_devices),
+            cfg: &self.cfg,
+            icx: &self.icx,
+        };
+        search_stages(&stages, ctx, &mut self.plan_db)
     }
 
     /// Override the per-cache entry cap (tests use tiny caps to exercise
@@ -607,6 +663,19 @@ impl DispatchPlanner {
                 }
             }
         }
+        // Warm the joint-search database too: every prefill bucket
+        // resolves its stage chain once (the search parallelizes its own
+        // candidate pricing), so a planner booted from a persisted
+        // database answers with zero new searches.
+        let mut seen: Vec<u64> = Vec::new();
+        for &(prefill, _) in dispatches {
+            if let Some(tokens) = prefill {
+                if !seen.contains(&tokens) {
+                    seen.push(tokens);
+                    self.search_bucket(tokens);
+                }
+            }
+        }
     }
 
     /// Resolve (and memoise) the plans for one dispatch.  `prefill_tokens`
@@ -617,6 +686,13 @@ impl DispatchPlanner {
         prefill_tokens: Option<u64>,
         decode: Option<(u64, u64)>,
     ) -> PlannedDispatch<'_> {
+        // Keep the joint-search database in the loop on every prefill
+        // dispatch: a warm database resolves the bucket from exact-shape
+        // hits (no candidate pricing), a cold one searches once and
+        // amortizes it across every congruent dispatch that follows.
+        if let Some(tokens) = prefill_tokens {
+            self.search_bucket(tokens);
+        }
         let (hidden, ffn, vocab, n_layers, heads) =
             (self.hidden, self.ffn, self.vocab, self.n_layers, self.heads);
         let (tiling, sram_words, max_devices) =

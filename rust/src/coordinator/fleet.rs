@@ -26,6 +26,7 @@ use super::decisions::DispatchPlanner;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::request::Request;
 use super::server::{bucket_gemms, DECODE_DISPATCH_CAP, DECODE_LEN_BUCKET};
+use crate::dataflow::search::canonical_bucket_key;
 use crate::gemm::Tiling;
 use crate::models::ArrivalEvent;
 use crate::obs::slo::{SloSnapshot, SloSpec, SloTracker};
@@ -283,6 +284,8 @@ impl FleetReport {
                                     "planner_cache_misses",
                                     jnum(r.metrics.planner_cache.misses),
                                 ),
+                                ("searches", jnum(r.metrics.plan_db.searches)),
+                                ("plan_db_hits", jnum(r.metrics.plan_db.db_hits)),
                                 ("ema_plan_words", jnum(r.metrics.ema_plan_words)),
                             ])
                         })
@@ -341,14 +344,6 @@ pub fn run_fleet(opts: &FleetOptions, arrivals: &[ArrivalEvent]) -> Result<Fleet
             })
         })
         .collect::<Result<_>>()?;
-
-    // Cache-affinity key space: the distinct seq buckets, in order.
-    let seqs: Vec<u64> = {
-        let mut s: Vec<u64> = opts.buckets.iter().map(|(_, s, _)| *s).collect();
-        s.sort_unstable();
-        s.dedup();
-        s
-    };
 
     let mut events: BTreeMap<(u64, u64), Ev> = BTreeMap::new();
     let mut eseq = 0u64;
@@ -421,6 +416,7 @@ pub fn run_fleet(opts: &FleetOptions, arrivals: &[ArrivalEvent]) -> Result<Fleet
             }
         }
         r.metrics.record_planner_cache(r.planner.cache_stats());
+        r.metrics.record_search_stats(r.planner.search_stats());
         let done = t + service_us;
         r.busy_until = done;
         r.busy_us += service_us;
@@ -477,9 +473,22 @@ pub fn run_fleet(opts: &FleetOptions, arrivals: &[ArrivalEvent]) -> Result<Fleet
                         .map(|(i, _)| i)
                         .expect("replicas is non-empty"),
                     RoutePolicy::CacheAffinity => {
+                        // Route on the canonical spec key, not the raw
+                        // seq-bucket position: dim-congruent buckets
+                        // (same tile-grid token count and SRAM class)
+                        // generate identical plan-database specs, so
+                        // they belong on the replica whose database is
+                        // already warm.
                         let seq = replicas[0].batcher.route(len)?;
-                        let idx = seqs.iter().position(|&s| s == seq).unwrap_or(0);
-                        idx % opts.replicas
+                        let batch = opts
+                            .buckets
+                            .iter()
+                            .find(|(_, s, _)| *s == seq)
+                            .map(|(b, _, _)| *b)
+                            .unwrap_or(1);
+                        let key =
+                            canonical_bucket_key(batch * seq, opts.tiling, opts.sram_words);
+                        (key % opts.replicas as u64) as usize
                     }
                 };
                 let id = i as u64;
@@ -756,6 +765,43 @@ mod tests {
         assert!(
             aff < rr,
             "affinity misses {aff} must undercut round-robin {rr} on cold caches"
+        );
+    }
+
+    #[test]
+    fn cache_affinity_routes_congruent_buckets_to_one_warm_database() {
+        // (4,125) and (4,128) pad to 500 and 512 tokens — different
+        // shapes, same 32-row tile grid, so every GEMM spec they plan is
+        // congruent.  The canonical-key router lands both on the same
+        // replica, whose plan database reprices its stored choices
+        // instead of searching again; round-robin alternates them across
+        // cold replicas, which each pay a full search.
+        let buckets: Vec<(u64, u64, String)> = [(4u64, 125u64), (4, 128)]
+            .iter()
+            .map(|&(b, s)| (b, s, format!("synthetic_b{b}_s{s}")))
+            .collect();
+        let a: Vec<ArrivalEvent> = (0..64)
+            .map(|i| ArrivalEvent {
+                t_us: i * 500,
+                tokens: if i % 2 == 0 { 120 } else { 127 },
+            })
+            .collect();
+        let searches = |route| {
+            let opts =
+                FleetOptions { route, buckets: buckets.clone(), ..FleetOptions::default() };
+            run_fleet(&opts, &a)
+                .unwrap()
+                .per_replica
+                .iter()
+                .map(|p| p.metrics.plan_db.searches)
+                .sum::<u64>()
+        };
+        let (rr, aff) =
+            (searches(RoutePolicy::RoundRobin), searches(RoutePolicy::CacheAffinity));
+        assert!(
+            aff < rr,
+            "affinity searches {aff} must undercut round-robin {rr} on a \
+             congruent-heavy trace"
         );
     }
 

@@ -59,6 +59,7 @@ struct Inner {
     batch_exec: Summary,
     device_ema_words: Vec<u64>,
     planner_cache: crate::coordinator::decisions::PlannerCacheStats,
+    plan_db: crate::dataflow::SearchStats,
 }
 
 /// Point-in-time snapshot for reporting.
@@ -127,6 +128,10 @@ pub struct MetricsSnapshot {
     /// bounded plan-memo caches (latest counters recorded by the device
     /// loop — already cumulative on the planner side).
     pub planner_cache: crate::coordinator::decisions::PlannerCacheStats,
+    /// Cumulative joint-search counters of the planner's memoized plan
+    /// database (searches run, hits/misses, evictions, entries, beam
+    /// candidates pruned) — shows search amortization per replica.
+    pub plan_db: crate::dataflow::SearchStats,
 }
 
 fn ratio_saved(spent: u64, baseline: u64) -> Option<f64> {
@@ -264,6 +269,17 @@ impl MetricsSnapshot {
                     ("entries", jnum(self.planner_cache.entries)),
                 ]),
             ),
+            (
+                "plan_db",
+                jobj(vec![
+                    ("searches", jnum(self.plan_db.searches)),
+                    ("hits", jnum(self.plan_db.db_hits)),
+                    ("misses", jnum(self.plan_db.db_misses)),
+                    ("evictions", jnum(self.plan_db.evictions)),
+                    ("entries", jnum(self.plan_db.entries)),
+                    ("pruned", jnum(self.plan_db.pruned)),
+                ]),
+            ),
         ])
     }
 }
@@ -376,6 +392,13 @@ impl Metrics {
         self.inner.lock().unwrap().planner_cache = stats;
     }
 
+    /// Record the planner's joint-search database counters.  Cumulative
+    /// on the planner side, so the latest snapshot replaces the stored
+    /// one.
+    pub fn record_search_stats(&self, stats: crate::dataflow::SearchStats) {
+        self.inner.lock().unwrap().plan_db = stats;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         let mean_of = |s: &Summary| {
@@ -423,6 +446,7 @@ impl Metrics {
             ema_decode_baseline_words: g.reg.counter(EMA_DECODE_BASE),
             decode_cache_hot_words: g.reg.counter(DECODE_CACHE_HOT),
             planner_cache: g.planner_cache,
+            plan_db: g.plan_db,
         }
     }
 }
@@ -588,6 +612,29 @@ mod tests {
         planner.plan_dispatch(Some(128), None);
         m.record_planner_cache(planner.cache_stats());
         assert_eq!(m.snapshot().planner_cache.misses, 2);
+    }
+
+    #[test]
+    fn plan_db_counters_surface_in_the_snapshot() {
+        use crate::coordinator::decisions::DispatchPlanner;
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().plan_db.searches, 0);
+        let mut planner =
+            DispatchPlanner::new(128, 512, 0, 2, 2, Tiling::square(16), 64 * 1024, 1);
+        planner.plan_dispatch(Some(64), None);
+        m.record_search_stats(planner.search_stats());
+        let after_first = m.snapshot().plan_db;
+        assert!(after_first.searches > 0);
+        assert!(after_first.entries > 0);
+        // The same bucket again resolves from exact-shape hits.
+        planner.plan_dispatch(Some(64), None);
+        m.record_search_stats(planner.search_stats());
+        let after_second = m.snapshot().plan_db;
+        assert_eq!(after_second.searches, after_first.searches);
+        assert!(after_second.db_hits > after_first.db_hits);
+        let json = m.snapshot().to_json();
+        assert!(json.contains("\"plan_db\""));
+        assert!(json.contains("\"searches\""));
     }
 
     #[test]

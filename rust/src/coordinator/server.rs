@@ -78,6 +78,11 @@ pub struct CoordinatorOptions {
     /// tracer (a branch per call site); `tas serve --trace-out` installs
     /// an enabled one and exports it as Chrome trace JSON on shutdown.
     pub tracer: Arc<Tracer>,
+    /// Persisted joint-search plan database.  When set, the device loop
+    /// loads it at boot (so warm-up resolves manifest buckets through
+    /// stored top-k entries instead of fresh searches) and saves it back
+    /// on shutdown, carrying the search work across coordinator restarts.
+    pub plan_db_path: Option<PathBuf>,
 }
 
 impl Default for CoordinatorOptions {
@@ -91,6 +96,7 @@ impl Default for CoordinatorOptions {
             max_devices: 1,
             synthetic: false,
             tracer: Arc::new(Tracer::disabled()),
+            plan_db_path: None,
         }
     }
 }
@@ -510,6 +516,7 @@ fn finish_plan_span(
     };
     tracer.span_at("device", verdict, plan_ts, plan_us);
     metrics.record_planner_cache(stats);
+    metrics.record_search_stats(planner.search_stats());
 }
 
 fn device_loop(
@@ -553,6 +560,17 @@ fn device_loop(
         opts.sram_words,
         opts.max_devices,
     );
+    // Reload the persisted joint-search database before warm-up: the
+    // warm-up searches below then resolve through stored top-k entries
+    // (exact or congruent hits) instead of repeating the cold search.
+    if let Some(path) = &opts.plan_db_path {
+        if path.exists() {
+            match crate::dataflow::PlanDb::load(path, crate::dataflow::search::PLAN_DB_CAP) {
+                Ok(db) => planner = planner.with_plan_db(db),
+                Err(err) => eprintln!("device: loading plan db {}: {err}", path.display()),
+            }
+        }
+    }
     // Warm the planner over the compiled prefill buckets before serving:
     // each bucket's layer plan is computed once in a scoped worker, so
     // the first dispatch of every bucket is a cache hit instead of an
@@ -565,11 +583,12 @@ fn device_loop(
         .collect();
     planner.warm_up(&warm_keys);
     metrics.record_planner_cache(planner.cache_stats());
+    metrics.record_search_stats(planner.search_stats());
 
     while let Ok(msg) = rx.recv() {
         let job = match msg {
             ToDevice::Run(job) => job,
-            ToDevice::Shutdown => return,
+            ToDevice::Shutdown => break,
         };
         let job_t0 = Instant::now();
 
@@ -680,6 +699,14 @@ fn device_loop(
                 eprintln!("device: executing {}: {err:#}", batch.bucket.artifact);
                 // replies drop -> submitters observe disconnection
             }
+        }
+    }
+
+    // Persist the joint-search database so the next boot's warm-up is
+    // served from disk (zero fresh searches for unchanged manifests).
+    if let Some(path) = &opts.plan_db_path {
+        if let Err(err) = planner.plan_db().save(path) {
+            eprintln!("device: saving plan db {}: {err}", path.display());
         }
     }
 }

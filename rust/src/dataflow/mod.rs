@@ -23,6 +23,10 @@
 //!   phase model ([`decode::Phase`]), cache edges on [`StageSpec`], and
 //!   [`decode::DecodePlan`] trajectories with cache-resident per-tile TAS
 //!   (head-sharded across devices via [`decode::ShardedDecodePlan`]).
+//! * [`search`] — joint plan search: (cover family × shard axis ×
+//!   chained residency × lane split) minimizing overlapped latency,
+//!   memoized in a persistent top-k [`PlanDb`] keyed on canonical
+//!   [`GemmSpec`]s so dim-congruent requests share one search.
 //!
 //! The generators and the closed forms are developed independently and
 //! cross-checked by property tests: for every shape (ragged included) the
@@ -34,6 +38,7 @@ pub mod layer;
 pub mod plan;
 pub mod residency;
 pub mod schedule;
+pub mod search;
 pub mod shard;
 
 pub use analytic::{ema, EmaBreakdown};
@@ -45,6 +50,11 @@ pub use layer::{LayerPlan, StagePlan, StageSpec};
 pub use plan::{Plan, PlanBody, Strip, StripKind};
 pub use residency::{Allocation, Candidate, Residency, ResidencyAllocator, ResidencyPolicy};
 pub use schedule::{for_each_step, step_count, Step};
+pub use search::{
+    canonical_bucket_key, search_lane_split, search_stages, CoverFamily, DbEntry, GemmSpec,
+    LaneSplitOutcome, PlanDb, SearchChoice, SearchCtx, SearchOutcome, SearchStats,
+    StageDecision, StagesOutcome,
+};
 pub use shard::{
     natural_axis, place_stages, shard_gemm, shard_heads, DeviceCompute, LinkTraffic, ShardAxis,
     ShardSpec, ShardedPlan,

@@ -1,0 +1,1079 @@
+//! Joint plan search with a memoized top-k plan database.
+//!
+//! The planner stack up to PR 8 makes its choices greedily and
+//! independently: `ShardAxis::Auto` picks an axis from the tile mix
+//! alone, the prefill/decode lane split scans an eighths grid, and
+//! residency is a one-pass marginal allocator.  This module searches the
+//! joint space — (tile cover family × shard axis × chained-residency
+//! allocation × prefill/decode lane split) — minimizing *overlapped*
+//! latency ([`crate::sim::sharded_closed_latency`]), and memoizes
+//! results in a top-k database keyed on canonical GEMM specs
+//! ([`GemmSpec`]: dims reduced to tile-grid shape + SRAM-budget class +
+//! device count), so dim-congruent requests share one search.
+//!
+//! Search cost is bounded three ways:
+//!
+//! * every candidate is priced through the `sim::strip` closed forms
+//!   (no tile replay),
+//! * candidates are beam-pruned with a true lower bound —
+//!   `max(per-device compute floor, link rounds)` against the shared
+//!   incumbent ([`crate::sim::shard::overlapped_lower_bound`]) — and
+//! * the greedy stack's choice seeds the incumbent, so the search can
+//!   never return something worse than greedy.
+//!
+//! Candidates are priced on `std::thread::scope` workers (the crate
+//! builds bare — no rayon).  The database persists across coordinator
+//! restarts as a versioned line format (`# tas-plandb v1`, see
+//! [`PlanDb::to_text`]) and is loaded at boot before
+//! `DispatchPlanner::warm_up`, so a warmed fleet replica replans
+//! congruent requests without searching at all.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::layer::StageSpec;
+use super::plan::Plan;
+use super::shard::{natural_axis, shard_gemm, ShardAxis, ShardSpec, ShardedPlan};
+use crate::arch::Interconnect;
+use crate::config::AcceleratorConfig;
+use crate::gemm::{GemmShape, Tiling};
+use crate::sim::shard::overlapped_lower_bound;
+use crate::sim::{shard_link_rounds, sharded_closed_latency};
+
+/// Entries kept per canonical spec: the winner plus runners-up, so a
+/// congruent shape can reprice a handful of known-good choices instead
+/// of re-running the search.
+pub const DB_TOP_K: usize = 4;
+
+/// Default spec-key capacity of a [`PlanDb`] (LRU-evicted beyond this).
+pub const PLAN_DB_CAP: usize = 256;
+
+/// First line of the persisted database file.
+pub const PLAN_DB_MAGIC: &str = "# tas-plandb v1";
+
+/// Weight ratio that forces `tas_link_weighted` into a single-scheme
+/// cover.  Large enough to dominate any real word-count imbalance, small
+/// enough that `WEIGHT_SCALE`-scaled u64 cost terms cannot overflow even
+/// on gpt3-sized shapes.
+const PURE_WEIGHT: f64 = 1.0e4;
+
+/// Tile-cover families the search chooses between.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoverFamily {
+    /// Per-tile adaptive stationary (the paper's sign rule).
+    Tas,
+    /// Adaptive cover with the remote-prone operand stream priced at the
+    /// link premium (`shard_gemm`'s `link_aware` chooser).
+    LinkAware,
+    /// Uniform input-stationary cover.
+    PureIs,
+    /// Uniform weight-stationary cover.
+    PureWs,
+}
+
+impl CoverFamily {
+    pub fn name(self) -> &'static str {
+        match self {
+            CoverFamily::Tas => "tas",
+            CoverFamily::LinkAware => "link-aware",
+            CoverFamily::PureIs => "pure-is",
+            CoverFamily::PureWs => "pure-ws",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<CoverFamily> {
+        Some(match name {
+            "tas" => CoverFamily::Tas,
+            "link-aware" => CoverFamily::LinkAware,
+            "pure-is" => CoverFamily::PureIs,
+            "pure-ws" => CoverFamily::PureWs,
+            _ => return None,
+        })
+    }
+}
+
+/// One point in the per-GEMM search space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SearchChoice {
+    pub family: CoverFamily,
+    pub axis: ShardAxis,
+}
+
+impl SearchChoice {
+    /// Stable tie-break rank so result ordering (and therefore the
+    /// persisted database) is deterministic across thread schedules.
+    pub fn rank(self) -> u64 {
+        let f = match self.family {
+            CoverFamily::Tas => 0,
+            CoverFamily::LinkAware => 1,
+            CoverFamily::PureIs => 2,
+            CoverFamily::PureWs => 3,
+        };
+        let a = match self.axis {
+            ShardAxis::Rows => 0,
+            ShardAxis::Cols => 1,
+            ShardAxis::Contraction => 2,
+            ShardAxis::Auto => 3,
+        };
+        f * 4 + a
+    }
+
+    pub fn describe(self) -> String {
+        format!("{}/{}", self.family.name(), self.axis.name())
+    }
+}
+
+/// Power-of-two class of an SRAM budget: budgets in the same class share
+/// database entries (the residency knapsack re-solves per exact budget;
+/// only the cover/axis choice is memoized).
+pub fn sram_class(sram_words: u64) -> u32 {
+    if sram_words == 0 {
+        0
+    } else {
+        64 - (sram_words - 1).leading_zeros()
+    }
+}
+
+/// Canonical GEMM spec: the database key.  Dims are reduced to the
+/// tile-grid shape under the tiling, so bert-base seq 384 and any
+/// dim-congruent request (same grid, same tiling, same SRAM class, same
+/// device count) share one entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct GemmSpec {
+    pub gm: u64,
+    pub gn: u64,
+    pub gk: u64,
+    pub tm: u64,
+    pub tn: u64,
+    pub tk: u64,
+    /// Psum-window sizes, 0 when unset.
+    pub kp: u64,
+    pub mp: u64,
+    pub sram_class: u32,
+    pub devices: u64,
+}
+
+impl GemmSpec {
+    pub fn canonical(shape: GemmShape, tiling: Tiling, sram_words: u64, devices: u64) -> GemmSpec {
+        let (gm, gn, gk) = tiling.grid(&shape);
+        GemmSpec {
+            gm,
+            gn,
+            gk,
+            tm: tiling.tm,
+            tn: tiling.tn,
+            tk: tiling.tk,
+            kp: tiling.kp.unwrap_or(0),
+            mp: tiling.mp.unwrap_or(0),
+            sram_class: sram_class(sram_words),
+            devices,
+        }
+    }
+}
+
+/// One memoized result: a choice, the exact shape it was priced on, and
+/// both sides of the comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DbEntry {
+    pub choice: SearchChoice,
+    pub shape: GemmShape,
+    pub overlapped_cycles: u64,
+    pub greedy_cycles: u64,
+}
+
+/// Counters surfaced through the coordinator metrics snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Full joint searches run (database misses that priced candidates).
+    pub searches: u64,
+    /// Lookups served from the database (exact or congruent-repriced).
+    pub db_hits: u64,
+    /// Lookups that found no usable entry.
+    pub db_misses: u64,
+    /// Spec keys evicted by the LRU cap.
+    pub evictions: u64,
+    /// Entries currently stored (across all spec keys).
+    pub entries: u64,
+    /// Candidates discarded by the beam bound without full pricing.
+    pub pruned: u64,
+}
+
+/// Memoized top-k plan database, LRU-bounded on spec keys.
+#[derive(Clone, Debug)]
+pub struct PlanDb {
+    map: BTreeMap<GemmSpec, (u64, Vec<DbEntry>)>,
+    cap: usize,
+    tick: u64,
+    searches: u64,
+    db_hits: u64,
+    db_misses: u64,
+    evictions: u64,
+    pruned: u64,
+}
+
+impl Default for PlanDb {
+    fn default() -> Self {
+        PlanDb::new(PLAN_DB_CAP)
+    }
+}
+
+impl PlanDb {
+    pub fn new(cap: usize) -> PlanDb {
+        PlanDb {
+            map: BTreeMap::new(),
+            cap: cap.max(1),
+            tick: 0,
+            searches: 0,
+            db_hits: 0,
+            db_misses: 0,
+            evictions: 0,
+            pruned: 0,
+        }
+    }
+
+    /// Spec keys currently stored.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn stats(&self) -> SearchStats {
+        SearchStats {
+            searches: self.searches,
+            db_hits: self.db_hits,
+            db_misses: self.db_misses,
+            evictions: self.evictions,
+            entries: self.map.values().map(|(_, v)| v.len() as u64).sum(),
+            pruned: self.pruned,
+        }
+    }
+
+    /// Stored entries for one spec, best first (empty when absent).
+    pub fn entries(&self, spec: GemmSpec) -> &[DbEntry] {
+        self.map.get(&spec).map(|(_, v)| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Insert one entry under its spec: dedupe on (choice, shape), keep
+    /// the list sorted by cycles (rank tie-break), truncate to
+    /// [`DB_TOP_K`], and LRU-evict the stalest spec past the cap.
+    pub fn insert(&mut self, spec: GemmSpec, entry: DbEntry) {
+        if !self.map.contains_key(&spec) && self.map.len() >= self.cap {
+            let stale = self.map.iter().min_by_key(|(_, v)| v.0).map(|(k, _)| *k);
+            if let Some(k) = stale {
+                self.map.remove(&k);
+                self.evictions += 1;
+            }
+        }
+        self.tick += 1;
+        let slot = self.map.entry(spec).or_insert((self.tick, Vec::new()));
+        slot.0 = self.tick;
+        let list = &mut slot.1;
+        if let Some(existing) = list
+            .iter_mut()
+            .find(|e| e.choice == entry.choice && e.shape == entry.shape)
+        {
+            if entry.overlapped_cycles < existing.overlapped_cycles {
+                *existing = entry;
+            }
+        } else {
+            list.push(entry);
+        }
+        list.sort_by_key(|e| (e.overlapped_cycles, e.choice.rank()));
+        list.truncate(DB_TOP_K);
+    }
+
+    fn hit_exact(&mut self, spec: GemmSpec, shape: GemmShape) -> Option<DbEntry> {
+        self.tick += 1;
+        let tick = self.tick;
+        let slot = self.map.get_mut(&spec)?;
+        let found = slot.1.iter().find(|e| e.shape == shape).copied();
+        if found.is_some() {
+            slot.0 = tick;
+            self.db_hits += 1;
+        }
+        found
+    }
+
+    /// Congruent lookup: the spec matches but no entry was priced on
+    /// this exact shape.  Returns the stored choices (deduped, best
+    /// first) for repricing; counts the terminal hit/miss.
+    fn hit_congruent(&mut self, spec: GemmSpec) -> Option<Vec<SearchChoice>> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(&spec) {
+            Some(slot) if !slot.1.is_empty() => {
+                slot.0 = tick;
+                self.db_hits += 1;
+                let mut out: Vec<SearchChoice> = Vec::new();
+                for e in &slot.1 {
+                    if !out.contains(&e.choice) {
+                        out.push(e.choice);
+                    }
+                }
+                Some(out)
+            }
+            _ => {
+                self.db_misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Serialize to the versioned line format.  Specs stream in
+    /// `BTreeMap` order and entries best-first, so save → load → save is
+    /// byte-identical.
+    pub fn to_text(&self) -> String {
+        let mut out = String::with_capacity(64 + self.map.len() * 128);
+        out.push_str(PLAN_DB_MAGIC);
+        out.push('\n');
+        for (spec, (_, entries)) in &self.map {
+            out.push_str(&format!(
+                "spec {} {} {} {} {} {} {} {} {} {}\n",
+                spec.gm,
+                spec.gn,
+                spec.gk,
+                spec.tm,
+                spec.tn,
+                spec.tk,
+                spec.kp,
+                spec.mp,
+                spec.sram_class,
+                spec.devices,
+            ));
+            for e in entries {
+                out.push_str(&format!(
+                    "entry {} {} {} {} {} {} {}\n",
+                    e.choice.family.name(),
+                    e.choice.axis.name(),
+                    e.shape.m,
+                    e.shape.n,
+                    e.shape.k,
+                    e.overlapped_cycles,
+                    e.greedy_cycles,
+                ));
+            }
+        }
+        out
+    }
+
+    pub fn from_text(text: &str, cap: usize) -> io::Result<PlanDb> {
+        let bad = |msg: String| io::Error::new(io::ErrorKind::InvalidData, msg);
+        let mut lines = text.lines();
+        let head = lines.next().unwrap_or("").trim();
+        if head != PLAN_DB_MAGIC {
+            return Err(bad(format!(
+                "bad plan-db header {head:?} (want {PLAN_DB_MAGIC:?})"
+            )));
+        }
+        let mut db = PlanDb::new(cap);
+        let mut cur: Option<GemmSpec> = None;
+        for (ln, raw) in lines.enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            let n = |s: &str| {
+                s.parse::<u64>()
+                    .map_err(|e| bad(format!("plan-db line {}: {e}", ln + 2)))
+            };
+            match f[0] {
+                "spec" => {
+                    if f.len() != 11 {
+                        return Err(bad(format!(
+                            "plan-db line {}: spec wants 10 fields, got {}",
+                            ln + 2,
+                            f.len() - 1
+                        )));
+                    }
+                    cur = Some(GemmSpec {
+                        gm: n(f[1])?,
+                        gn: n(f[2])?,
+                        gk: n(f[3])?,
+                        tm: n(f[4])?,
+                        tn: n(f[5])?,
+                        tk: n(f[6])?,
+                        kp: n(f[7])?,
+                        mp: n(f[8])?,
+                        sram_class: n(f[9])? as u32,
+                        devices: n(f[10])?,
+                    });
+                }
+                "entry" => {
+                    let spec = cur.ok_or_else(|| {
+                        bad(format!("plan-db line {}: entry before spec", ln + 2))
+                    })?;
+                    if f.len() != 8 {
+                        return Err(bad(format!(
+                            "plan-db line {}: entry wants 7 fields, got {}",
+                            ln + 2,
+                            f.len() - 1
+                        )));
+                    }
+                    let family = CoverFamily::from_name(f[1]).ok_or_else(|| {
+                        bad(format!("plan-db line {}: unknown family '{}'", ln + 2, f[1]))
+                    })?;
+                    let axis = ShardAxis::from_name(f[2]).map_err(|e| {
+                        bad(format!("plan-db line {}: {e}", ln + 2))
+                    })?;
+                    db.insert(
+                        spec,
+                        DbEntry {
+                            choice: SearchChoice { family, axis },
+                            shape: GemmShape::new(n(f[3])?, n(f[4])?, n(f[5])?),
+                            overlapped_cycles: n(f[6])?,
+                            greedy_cycles: n(f[7])?,
+                        },
+                    );
+                }
+                other => {
+                    return Err(bad(format!(
+                        "plan-db line {}: unknown record '{other}'",
+                        ln + 2
+                    )));
+                }
+            }
+        }
+        Ok(db)
+    }
+
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        std::fs::write(path, self.to_text())
+    }
+
+    pub fn load(path: &Path, cap: usize) -> io::Result<PlanDb> {
+        PlanDb::from_text(&std::fs::read_to_string(path)?, cap)
+    }
+}
+
+/// Everything a per-GEMM search needs besides the shape.
+#[derive(Clone, Copy, Debug)]
+pub struct SearchCtx<'a> {
+    pub tiling: Tiling,
+    pub sram_words: u64,
+    pub devices: u64,
+    pub cfg: &'a AcceleratorConfig,
+    pub icx: &'a Interconnect,
+}
+
+/// Result of one per-GEMM lookup/search.
+#[derive(Clone, Copy, Debug)]
+pub struct SearchOutcome {
+    pub choice: SearchChoice,
+    /// Overlapped latency of the winning candidate, cycles.
+    pub overlapped_cycles: u64,
+    /// Overlapped latency of the greedy stack's choice (TAS cover on the
+    /// tile-mix natural axis), cycles.
+    pub greedy_cycles: u64,
+    /// True when a full candidate search ran (database miss).
+    pub searched: bool,
+}
+
+/// The candidate grid for one GEMM at `devices` shards.
+pub fn candidate_choices(devices: u64) -> Vec<SearchChoice> {
+    if devices <= 1 {
+        return vec![
+            SearchChoice { family: CoverFamily::Tas, axis: ShardAxis::Rows },
+            SearchChoice { family: CoverFamily::PureIs, axis: ShardAxis::Rows },
+            SearchChoice { family: CoverFamily::PureWs, axis: ShardAxis::Rows },
+        ];
+    }
+    let mut out = Vec::new();
+    for axis in [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Contraction] {
+        out.push(SearchChoice { family: CoverFamily::Tas, axis });
+    }
+    // The link-aware chooser only reweights the remote-prone operand on
+    // the p2p axes; contraction operands are range-local already.
+    for axis in [ShardAxis::Rows, ShardAxis::Cols] {
+        out.push(SearchChoice { family: CoverFamily::LinkAware, axis });
+    }
+    for axis in [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Contraction] {
+        out.push(SearchChoice { family: CoverFamily::PureIs, axis });
+        out.push(SearchChoice { family: CoverFamily::PureWs, axis });
+    }
+    out
+}
+
+/// Materialize one candidate as a sharded plan.
+pub fn candidate_plan(
+    shape: GemmShape,
+    tiling: Tiling,
+    choice: SearchChoice,
+    devices: u64,
+    remote_word_weight: f64,
+) -> ShardedPlan {
+    match choice.family {
+        CoverFamily::Tas => shard_gemm(
+            &shape,
+            &tiling,
+            ShardSpec::new(devices, choice.axis),
+            remote_word_weight,
+        ),
+        CoverFamily::LinkAware => {
+            let mut spec = ShardSpec::new(devices, choice.axis);
+            spec.link_aware = true;
+            shard_gemm(&shape, &tiling, spec, remote_word_weight)
+        }
+        CoverFamily::PureIs => ShardedPlan::new(
+            Plan::tas_link_weighted(&shape, &tiling, PURE_WEIGHT, 1.0),
+            devices,
+            choice.axis,
+        ),
+        CoverFamily::PureWs => ShardedPlan::new(
+            Plan::tas_link_weighted(&shape, &tiling, 1.0, PURE_WEIGHT),
+            devices,
+            choice.axis,
+        ),
+    }
+}
+
+impl SearchCtx<'_> {
+    fn remote_word_weight(&self) -> f64 {
+        self.icx.remote_word_weight(self.cfg.dram_bandwidth)
+    }
+
+    /// Canonical database key for a shape under this context.
+    pub fn spec(&self, shape: GemmShape) -> GemmSpec {
+        GemmSpec::canonical(shape, self.tiling, self.sram_words, self.devices)
+    }
+
+    /// The greedy stack's choice: TAS cover, `ShardAxis::Auto`'s
+    /// tile-mix natural axis.
+    pub fn greedy_choice(&self, shape: GemmShape) -> SearchChoice {
+        let axis = if self.devices <= 1 {
+            ShardAxis::Rows
+        } else {
+            natural_axis(&Plan::tas_strips(&shape, &self.tiling))
+        };
+        SearchChoice { family: CoverFamily::Tas, axis }
+    }
+
+    /// Overlapped latency of one candidate, closed-form.
+    pub fn price(&self, shape: GemmShape, choice: SearchChoice) -> u64 {
+        let sp = candidate_plan(shape, self.tiling, choice, self.devices, self.remote_word_weight());
+        sharded_closed_latency(&sp, self.cfg, self.icx).overlapped_cycles
+    }
+
+    /// Resolve one GEMM through the database, searching on a miss.
+    pub fn search(&self, shape: GemmShape, db: &mut PlanDb) -> SearchOutcome {
+        let spec = self.spec(shape);
+        if let Some(e) = db.hit_exact(spec, shape) {
+            return SearchOutcome {
+                choice: e.choice,
+                overlapped_cycles: e.overlapped_cycles,
+                greedy_cycles: e.greedy_cycles,
+                searched: false,
+            };
+        }
+        let greedy_choice = self.greedy_choice(shape);
+        if let Some(choices) = db.hit_congruent(spec) {
+            // Congruent hit: reprice the memoized top-k on this shape
+            // plus the greedy floor — a handful of closed-form pricings
+            // instead of a full search.
+            let greedy_cycles = self.price(shape, greedy_choice);
+            let mut best = (greedy_choice, greedy_cycles);
+            for c in choices {
+                let cy = self.price(shape, c);
+                if cy < best.1 || (cy == best.1 && c.rank() < best.0.rank()) {
+                    best = (c, cy);
+                }
+            }
+            db.insert(
+                spec,
+                DbEntry {
+                    choice: best.0,
+                    shape,
+                    overlapped_cycles: best.1,
+                    greedy_cycles,
+                },
+            );
+            return SearchOutcome {
+                choice: best.0,
+                overlapped_cycles: best.1,
+                greedy_cycles,
+                searched: false,
+            };
+        }
+
+        // Full search.  Seed the incumbent with the greedy choice and
+        // both pure covers on the same axis, then fan the rest of the
+        // grid across scoped workers with the beam bound.
+        db.searches += 1;
+        let floor = overlapped_lower_bound(shape, self.devices, self.cfg);
+        let greedy_cycles = self.price(shape, greedy_choice);
+        let mut results: Vec<(SearchChoice, u64)> = vec![(greedy_choice, greedy_cycles)];
+        for family in [CoverFamily::PureIs, CoverFamily::PureWs] {
+            let c = SearchChoice { family, axis: greedy_choice.axis };
+            results.push((c, self.price(shape, c)));
+        }
+        let rest: Vec<SearchChoice> = candidate_choices(self.devices)
+            .into_iter()
+            .filter(|c| !results.iter().any(|(s, _)| s == c))
+            .collect();
+        let incumbent =
+            AtomicU64::new(results.iter().map(|r| r.1).min().unwrap_or(u64::MAX));
+        let pruned = AtomicU64::new(0);
+        let mut priced: Vec<Option<(SearchChoice, u64)>> = vec![None; rest.len()];
+        if !rest.is_empty() {
+            let workers = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(rest.len());
+            let chunk = rest.len().div_ceil(workers);
+            let ctx = *self;
+            std::thread::scope(|s| {
+                for (cands, out) in rest.chunks(chunk).zip(priced.chunks_mut(chunk)) {
+                    let incumbent = &incumbent;
+                    let pruned = &pruned;
+                    s.spawn(move || {
+                        for (c, slot) in cands.iter().zip(out.iter_mut()) {
+                            let sp = candidate_plan(
+                                shape,
+                                ctx.tiling,
+                                *c,
+                                ctx.devices,
+                                ctx.remote_word_weight(),
+                            );
+                            let link: u64 =
+                                shard_link_rounds(&sp, ctx.icx).iter().sum();
+                            if floor.max(link) >= incumbent.load(Ordering::Relaxed) {
+                                pruned.fetch_add(1, Ordering::Relaxed);
+                                continue;
+                            }
+                            let cy =
+                                sharded_closed_latency(&sp, ctx.cfg, ctx.icx).overlapped_cycles;
+                            incumbent.fetch_min(cy, Ordering::Relaxed);
+                            *slot = Some((*c, cy));
+                        }
+                    });
+                }
+            });
+        }
+        results.extend(priced.into_iter().flatten());
+        results.sort_by_key(|r| (r.1, r.0.rank()));
+        db.pruned += pruned.into_inner();
+        for (choice, cy) in results.iter().take(DB_TOP_K) {
+            db.insert(
+                spec,
+                DbEntry {
+                    choice: *choice,
+                    shape,
+                    overlapped_cycles: *cy,
+                    greedy_cycles,
+                },
+            );
+        }
+        SearchOutcome {
+            choice: results[0].0,
+            overlapped_cycles: results[0].1,
+            greedy_cycles,
+            searched: true,
+        }
+    }
+}
+
+/// Per-stage decision in a [`StagesOutcome`].
+#[derive(Clone, Debug)]
+pub struct StageDecision {
+    pub name: &'static str,
+    pub shape: GemmShape,
+    pub count: u64,
+    pub choice: SearchChoice,
+    /// Searched overlapped cycles per stage instance.
+    pub overlapped_cycles: u64,
+    /// Greedy overlapped cycles per stage instance.
+    pub greedy_cycles: u64,
+    /// True when the joint residency pick parks this stage's input
+    /// (previous stage's output) in SRAM.
+    pub chained: bool,
+}
+
+/// Joint search over a stage chain: per-GEMM (cover × axis) through the
+/// database, plus an exact knapsack over chained-residency edges.
+#[derive(Clone, Debug)]
+pub struct StagesOutcome {
+    pub decisions: Vec<StageDecision>,
+    pub searched_cycles: u64,
+    pub greedy_cycles: u64,
+}
+
+/// Search every stage of a chain through the database, then jointly
+/// allocate chained-residency edges (exact small knapsack vs the greedy
+/// stack's savings-per-word ratio walk).  DRAM-stream savings are a
+/// closed-form proxy (`words / dram_bandwidth` per chained edge), used
+/// identically on both sides of the comparison.
+pub fn search_stages(stages: &[StageSpec], ctx: SearchCtx<'_>, db: &mut PlanDb) -> StagesOutcome {
+    let mut decisions = Vec::with_capacity(stages.len());
+    let mut searched = 0u64;
+    let mut greedy = 0u64;
+    for spec in stages {
+        let o = ctx.search(spec.shape, db);
+        searched += o.overlapped_cycles.saturating_mul(spec.count);
+        greedy += o.greedy_cycles.saturating_mul(spec.count);
+        decisions.push(StageDecision {
+            name: spec.name,
+            shape: spec.shape,
+            count: spec.count,
+            choice: o.choice,
+            overlapped_cycles: o.overlapped_cycles,
+            greedy_cycles: o.greedy_cycles,
+            chained: false,
+        });
+    }
+    // Residency edges: chaining stage i's input parks the previous
+    // stage's output in SRAM and strips the input stream from DRAM.
+    let edges: Vec<(usize, u64, u64)> = stages
+        .iter()
+        .enumerate()
+        .filter(|(i, s)| *i > 0 && s.consumes_previous)
+        .map(|(i, s)| {
+            let words = s.shape.input_words().div_ceil(ctx.devices.max(1));
+            let saved = s
+                .count
+                .saturating_mul(words.div_ceil(ctx.cfg.dram_bandwidth.max(1)));
+            (i, words, saved)
+        })
+        .filter(|&(_, w, s)| w > 0 && s > 0 && w <= ctx.sram_words)
+        .collect();
+    let best_set = best_edge_subset(&edges, ctx.sram_words);
+    let greedy_set = greedy_edge_subset(&edges, ctx.sram_words);
+    let saved_best: u64 = best_set.iter().map(|&e| edges[e].2).sum();
+    let saved_greedy: u64 = greedy_set.iter().map(|&e| edges[e].2).sum();
+    for &e in &best_set {
+        decisions[edges[e].0].chained = true;
+    }
+    StagesOutcome {
+        decisions,
+        searched_cycles: searched.saturating_sub(saved_best),
+        greedy_cycles: greedy.saturating_sub(saved_greedy),
+    }
+}
+
+/// Exact best subset of `(stage, words, saved)` edges under the SRAM
+/// budget.  A transformer block has at most a handful of chained edges,
+/// so enumeration is exact and cheap; past 16 edges fall back to the
+/// ratio greedy.
+fn best_edge_subset(edges: &[(usize, u64, u64)], budget: u64) -> Vec<usize> {
+    if edges.is_empty() {
+        return Vec::new();
+    }
+    if edges.len() > 16 {
+        return greedy_edge_subset(edges, budget);
+    }
+    let mut best_saved = 0u64;
+    let mut best: Vec<usize> = Vec::new();
+    for mask in 0u32..(1u32 << edges.len()) {
+        let mut words = 0u64;
+        let mut saved = 0u64;
+        let mut ok = true;
+        for (j, e) in edges.iter().enumerate() {
+            if mask & (1 << j) != 0 {
+                words += e.1;
+                saved += e.2;
+                if words > budget {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if ok && saved > best_saved {
+            best_saved = saved;
+            best = (0..edges.len()).filter(|j| mask & (1 << j) != 0).collect();
+        }
+    }
+    best
+}
+
+/// The greedy stack's shape: take edges by savings-per-word ratio while
+/// they fit.
+fn greedy_edge_subset(edges: &[(usize, u64, u64)], budget: u64) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..edges.len()).collect();
+    order.sort_by(|&a, &b| {
+        let ra = edges[a].2 as f64 / edges[a].1 as f64;
+        let rb = edges[b].2 as f64 / edges[b].1 as f64;
+        rb.partial_cmp(&ra).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let mut words = 0u64;
+    let mut out = Vec::new();
+    for &j in &order {
+        if words + edges[j].1 <= budget {
+            words += edges[j].1;
+            out.push(j);
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Joint prefill/decode lane split: both lane chains searched through
+/// the database at every eighths split of the SRAM budget.
+#[derive(Clone, Debug)]
+pub struct LaneSplitOutcome {
+    /// Winning prefill share of the SRAM budget, in eighths (1..=7).
+    pub prefill_eighths: u64,
+    pub prefill: StagesOutcome,
+    pub decode: StagesOutcome,
+    /// Searched total (prefill pass + decode step) at the winning split.
+    pub searched_cycles: u64,
+    /// Greedy floor: the even split with both lanes planned greedily.
+    pub greedy_cycles: u64,
+}
+
+/// Scan prefill SRAM shares f/8 for f in 1..=7, searching both lane
+/// chains at each split; the greedy floor is the even split priced with
+/// the greedy stack's choices.  Database memoization makes the scan
+/// cheap: splits in the same SRAM class share every per-GEMM entry.
+pub fn search_lane_split(
+    prefill: &[StageSpec],
+    decode: &[StageSpec],
+    ctx: SearchCtx<'_>,
+    db: &mut PlanDb,
+) -> LaneSplitOutcome {
+    let mut best: Option<LaneSplitOutcome> = None;
+    let mut greedy_even = 0u64;
+    for f in 1..=7u64 {
+        let pctx = SearchCtx { sram_words: ctx.sram_words * f / 8, ..ctx };
+        let dctx = SearchCtx { sram_words: ctx.sram_words * (8 - f) / 8, ..ctx };
+        let p = search_stages(prefill, pctx, db);
+        let d = search_stages(decode, dctx, db);
+        if f == 4 {
+            greedy_even = p.greedy_cycles.saturating_add(d.greedy_cycles);
+        }
+        let total = p.searched_cycles.saturating_add(d.searched_cycles);
+        let better = match &best {
+            None => true,
+            Some(b) => total < b.searched_cycles,
+        };
+        if better {
+            best = Some(LaneSplitOutcome {
+                prefill_eighths: f,
+                prefill: p,
+                decode: d,
+                searched_cycles: total,
+                greedy_cycles: 0,
+            });
+        }
+    }
+    let mut out = best.expect("eighths scan is non-empty");
+    out.greedy_cycles = greedy_even;
+    out
+}
+
+/// Canonical bucket key for fleet cache-affinity routing.  Two buckets
+/// whose token counts land on the same tile-grid row count (under the
+/// same tiling and SRAM class) generate the same `GemmSpec`s, so they
+/// belong on the replica whose database is already warm.
+pub fn canonical_bucket_key(tokens: u64, tiling: Tiling, sram_words: u64) -> u64 {
+    fnv64(&[
+        tokens.div_ceil(tiling.tm.max(1)),
+        sram_class(sram_words) as u64,
+        tiling.tm,
+        tiling.tn,
+        tiling.tk,
+        tiling.kp.unwrap_or(0),
+        tiling.mp.unwrap_or(0),
+    ])
+}
+
+fn fnv64(xs: &[u64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &x in xs {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(
+        cfg: &'a AcceleratorConfig,
+        icx: &'a Interconnect,
+        devices: u64,
+    ) -> SearchCtx<'a> {
+        SearchCtx {
+            tiling: Tiling::square(16),
+            sram_words: 256 * 1024,
+            devices,
+            cfg,
+            icx,
+        }
+    }
+
+    #[test]
+    fn search_never_loses_to_greedy_on_a_square_shard() {
+        let cfg = AcceleratorConfig::default();
+        let icx = Interconnect::default();
+        for d in [1, 2, 4, 8] {
+            let c = ctx(&cfg, &icx, d);
+            let mut db = PlanDb::default();
+            let o = c.search(GemmShape::new(64, 768, 768), &mut db);
+            assert!(
+                o.overlapped_cycles <= o.greedy_cycles,
+                "d={d}: searched {} > greedy {}",
+                o.overlapped_cycles,
+                o.greedy_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn search_flips_the_square_shard_to_contraction_at_scale() {
+        // Mirrors the pinned overlap-aware result: on 64x768x768 the
+        // natural (tile-mix) axis loses to the contraction split from
+        // d=4 — the joint search must find the flip and strictly win.
+        let cfg = AcceleratorConfig::default();
+        let icx = Interconnect::default();
+        for d in [4u64, 8] {
+            let c = ctx(&cfg, &icx, d);
+            let mut db = PlanDb::default();
+            let o = c.search(GemmShape::new(64, 768, 768), &mut db);
+            assert!(o.searched);
+            assert_eq!(o.choice.axis, ShardAxis::Contraction, "d={d}");
+            assert!(
+                o.overlapped_cycles < o.greedy_cycles,
+                "d={d}: expected a strict win, got {} vs greedy {}",
+                o.overlapped_cycles,
+                o.greedy_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn exact_hit_is_free_and_congruent_hit_skips_the_search() {
+        let cfg = AcceleratorConfig::default();
+        let icx = Interconnect::default();
+        let c = ctx(&cfg, &icx, 4);
+        let mut db = PlanDb::default();
+        let first = c.search(GemmShape::new(512, 768, 768), &mut db);
+        assert!(first.searched);
+        assert_eq!(db.stats().searches, 1);
+
+        // Same shape again: exact hit, identical answer, no new search.
+        let again = c.search(GemmShape::new(512, 768, 768), &mut db);
+        assert!(!again.searched);
+        assert_eq!(again.choice, first.choice);
+        assert_eq!(again.overlapped_cycles, first.overlapped_cycles);
+
+        // 500 rows lands on the same 32-row tile grid: congruent hit —
+        // repriced, not searched.
+        assert_eq!(
+            c.spec(GemmShape::new(500, 768, 768)),
+            c.spec(GemmShape::new(512, 768, 768))
+        );
+        let congruent = c.search(GemmShape::new(500, 768, 768), &mut db);
+        assert!(!congruent.searched);
+        assert!(congruent.overlapped_cycles <= congruent.greedy_cycles);
+        let s = db.stats();
+        assert_eq!(s.searches, 1);
+        assert_eq!(s.db_hits, 2);
+    }
+
+    #[test]
+    fn database_round_trips_byte_identically() {
+        let cfg = AcceleratorConfig::default();
+        let icx = Interconnect::default();
+        let c = ctx(&cfg, &icx, 4);
+        let mut db = PlanDb::default();
+        c.search(GemmShape::new(64, 768, 768), &mut db);
+        c.search(GemmShape::new(384, 768, 3072), &mut db);
+        let text = db.to_text();
+        let reloaded = PlanDb::from_text(&text, PLAN_DB_CAP).unwrap();
+        assert_eq!(reloaded.to_text(), text);
+        assert!(PlanDb::from_text("# tas-plandb v9\n", 8).is_err());
+    }
+
+    #[test]
+    fn top_k_stays_sorted_and_bounded() {
+        let spec = GemmSpec::canonical(
+            GemmShape::new(64, 64, 64),
+            Tiling::square(16),
+            1024,
+            1,
+        );
+        let mut db = PlanDb::new(8);
+        let axes = [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Contraction];
+        for (i, family) in [
+            CoverFamily::Tas,
+            CoverFamily::PureWs,
+            CoverFamily::PureIs,
+            CoverFamily::LinkAware,
+            CoverFamily::Tas,
+            CoverFamily::PureIs,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            db.insert(
+                spec,
+                DbEntry {
+                    choice: SearchChoice { family, axis: axes[i % 3] },
+                    shape: GemmShape::new(64, 64, 64),
+                    overlapped_cycles: [900, 100, 400, 250, 700, 520][i],
+                    greedy_cycles: 900,
+                },
+            );
+        }
+        let entries = db.entries(spec);
+        assert_eq!(entries.len(), DB_TOP_K);
+        assert!(entries.windows(2).all(|w| w[0].overlapped_cycles
+            <= w[1].overlapped_cycles));
+        assert_eq!(entries[0].overlapped_cycles, 100);
+    }
+
+    #[test]
+    fn lru_evicts_the_stalest_spec_at_the_cap() {
+        let mut db = PlanDb::new(2);
+        let t = Tiling::square(16);
+        let mk = |m: u64| GemmSpec::canonical(GemmShape::new(m, 64, 64), t, 1024, 1);
+        let entry = |m: u64| DbEntry {
+            choice: SearchChoice { family: CoverFamily::Tas, axis: ShardAxis::Rows },
+            shape: GemmShape::new(m, 64, 64),
+            overlapped_cycles: 10,
+            greedy_cycles: 10,
+        };
+        db.insert(mk(16), entry(16));
+        db.insert(mk(32), entry(32));
+        db.insert(mk(48), entry(48));
+        assert_eq!(db.len(), 2);
+        assert_eq!(db.stats().evictions, 1);
+        assert!(db.entries(mk(16)).is_empty());
+    }
+
+    #[test]
+    fn stage_and_lane_searches_never_lose() {
+        let cfg = AcceleratorConfig::default();
+        let icx = Interconnect::default();
+        let c = ctx(&cfg, &icx, 2);
+        let stages =
+            crate::coordinator::bucket_stages(256, 768, 3072, 0, 2);
+        let mut db = PlanDb::default();
+        let o = search_stages(&stages, c, &mut db);
+        assert!(o.searched_cycles <= o.greedy_cycles);
+        assert_eq!(o.decisions.len(), stages.len());
+
+        let decode = crate::coordinator::bucket_stages(64, 768, 3072, 0, 2);
+        let lane = search_lane_split(&stages, &decode, c, &mut db);
+        assert!(lane.searched_cycles <= lane.greedy_cycles);
+        assert!((1..=7).contains(&lane.prefill_eighths));
+    }
+
+    #[test]
+    fn congruent_buckets_share_the_canonical_routing_key() {
+        let t = Tiling::square(16);
+        let a = canonical_bucket_key(512, t, 256 * 1024);
+        let b = canonical_bucket_key(500, t, 256 * 1024);
+        let other = canonical_bucket_key(1024, t, 256 * 1024);
+        assert_eq!(a, b);
+        assert_ne!(a, other);
+    }
+}

@@ -4,6 +4,7 @@
 //!   tables    regenerate the paper's Tables I–IV
 //!   simulate  EMA / energy / cycle report for one GEMM or model
 //!   plan      layer-level plan: per-tile TAS + SRAM residency per block
+//!   search    joint plan search (cover × axis × residency) with a plan DB
 //!   shard     partition a model across devices + interconnect costs
 //!   decode    KV-cache-aware decode trajectory (prefill + T steps)
 //!   sweep     sequence-length sweep (crossover analysis)
@@ -45,6 +46,7 @@ fn main() {
         Some("tables") => cmd_tables(args),
         Some("simulate") => cmd_simulate(args),
         Some("plan") => cmd_plan(args),
+        Some("search") => cmd_search(args),
         Some("shard") => cmd_shard(args),
         Some("decode") => cmd_decode(args),
         Some("sweep") => cmd_sweep(args),
@@ -74,6 +76,8 @@ USAGE: tas <subcommand> [options]
   tables    [--table 1|2|3|4] [--csv] [--tile N] [--seed N]
   simulate  --model NAME --seq N [--tile N] [--json] | --m M --n N --k K
   plan      --model NAME [--seq N] [--tile N] [--sram WORDS] [--json]
+  search    --model NAME [--seq N] [--devices D] [--tile N] [--sram WORDS]
+            [--db FILE] [--json]
   shard     --model NAME [--seq N] [--devices D] [--axis auto|rows|cols|
             contraction] [--tile N] [--sram WORDS] [--link-aware]
             [--link-bw WORDS] [--config FILE] [--trace-out FILE] [--json]
@@ -303,6 +307,117 @@ fn cmd_plan(mut args: Args) -> Result<()> {
         plan.resident_edges(),
         plan.resident_rows(),
         sci(plan.resident_peak_words as f64)
+    );
+    Ok(())
+}
+
+fn cmd_search(mut args: Args) -> Result<()> {
+    use tas::dataflow::search::{search_stages, PlanDb, SearchCtx, PLAN_DB_CAP};
+
+    let name = args.opt_or("model", "bert-base");
+    let tiling = tiling_from(&mut args)?;
+    let cfg = AcceleratorConfig::default();
+    let sram = args.opt_u64("sram", cfg.sram_words)?;
+    let devices = args.opt_u64("devices", 4)?;
+    let db_path = args.opt("db").map(std::path::PathBuf::from);
+    let json = args.flag("json");
+    let model = zoo::by_name(&name)?;
+    let seq = args.opt_u64("seq", model.default_seq)?;
+    args.finish()?;
+
+    // A persisted database turns the whole run into exact-shape hits:
+    // `--db FILE` loads it (when present) before searching and saves it
+    // back after, so a repeated invocation reports zero new searches.
+    let mut db = match &db_path {
+        Some(p) if p.exists() => PlanDb::load(p, PLAN_DB_CAP)?,
+        _ => PlanDb::new(PLAN_DB_CAP),
+    };
+    let icx = Interconnect::default();
+    let ctx = SearchCtx {
+        tiling,
+        sram_words: sram,
+        devices,
+        cfg: &cfg,
+        icx: &icx,
+    };
+    let stages = model.block_stages(seq);
+    let outcome = search_stages(&stages, ctx, &mut db);
+    let stats = db.stats();
+    if let Some(p) = &db_path {
+        db.save(p)?;
+    }
+
+    let speedup = outcome.greedy_cycles as f64 / outcome.searched_cycles.max(1) as f64;
+    if json {
+        let decisions: Vec<Json> = outcome
+            .decisions
+            .iter()
+            .map(|d| {
+                jobj(vec![
+                    ("stage", jstr(d.name)),
+                    ("m", jnum(d.shape.m)),
+                    ("n", jnum(d.shape.n)),
+                    ("k", jnum(d.shape.k)),
+                    ("count", jnum(d.count)),
+                    ("choice", jstr(&d.choice.describe())),
+                    ("overlapped_cycles", jnum(d.overlapped_cycles)),
+                    ("greedy_cycles", jnum(d.greedy_cycles)),
+                    ("chained", jbool(d.chained)),
+                ])
+            })
+            .collect();
+        Report::new("search")
+            .field("model", jstr(model.name))
+            .field("seq", jnum(seq))
+            .field("devices", jnum(devices))
+            .field("sram_words", jnum(sram))
+            .field("searched_cycles", jnum(outcome.searched_cycles))
+            .field("greedy_cycles", jnum(outcome.greedy_cycles))
+            .field("speedup_vs_greedy", jf64(speedup))
+            .field("decisions", jarr(decisions))
+            .field(
+                "db",
+                jobj(vec![
+                    ("searches", jnum(stats.searches)),
+                    ("hits", jnum(stats.db_hits)),
+                    ("misses", jnum(stats.db_misses)),
+                    ("entries", jnum(stats.entries)),
+                    ("evictions", jnum(stats.evictions)),
+                    ("pruned", jnum(stats.pruned)),
+                ]),
+            )
+            .print();
+        return Ok(());
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "{} joint plan search @ seq {} × {} devices (tile {}, SRAM {} words)",
+            model.name, seq, devices, tiling.tm, sram
+        ),
+        &["stage", "M,N,K", "×", "choice", "chained", "cycles", "vs greedy"],
+    );
+    for d in &outcome.decisions {
+        t.row(vec![
+            d.name.to_string(),
+            format!("{},{},{}", d.shape.m, d.shape.n, d.shape.k),
+            d.count.to_string(),
+            d.choice.describe(),
+            if d.chained { "yes" } else { "-" }.to_string(),
+            sci(d.overlapped_cycles as f64),
+            pct(1.0 - d.overlapped_cycles as f64 / d.greedy_cycles.max(1) as f64),
+        ]);
+    }
+    println!("{}", t.to_text());
+    println!(
+        "block: searched {} cycles   greedy {} cycles   ({:.3}x)",
+        sci(outcome.searched_cycles as f64),
+        sci(outcome.greedy_cycles as f64),
+        speedup
+    );
+    println!(
+        "plan db: {} searches, {} hits, {} entries, {} candidates pruned",
+        stats.searches, stats.db_hits, stats.entries, stats.pruned
     );
     Ok(())
 }

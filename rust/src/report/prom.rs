@@ -204,6 +204,42 @@ pub fn render_metrics(prom: &mut Prom, labels: &[(&str, &str)], s: &MetricsSnaps
         "Dispatch-planner plan-memo misses.",
         s.planner_cache.misses,
     );
+    c(
+        prom,
+        "tas_searches_total",
+        "Joint plan searches run (plan-database misses that priced candidates).",
+        s.plan_db.searches,
+    );
+    c(
+        prom,
+        "tas_plan_db_hits_total",
+        "Plan-database lookups served without a search (exact or congruent).",
+        s.plan_db.db_hits,
+    );
+    c(
+        prom,
+        "tas_plan_db_misses_total",
+        "Plan-database lookups that found no usable entry.",
+        s.plan_db.db_misses,
+    );
+    c(
+        prom,
+        "tas_plan_db_evictions_total",
+        "Plan-database spec keys evicted by the LRU cap.",
+        s.plan_db.evictions,
+    );
+    c(
+        prom,
+        "tas_search_pruned_total",
+        "Search candidates discarded by the beam lower bound.",
+        s.plan_db.pruned,
+    );
+    prom.gauge(
+        "tas_plan_db_entries",
+        "Entries currently stored in the plan database.",
+        labels,
+        s.plan_db.entries as f64,
+    );
     if let Some(v) = s.queue_depth {
         prom.gauge("tas_queue_depth", "Prefill queue depth at the last poll.", labels, v);
     }
@@ -331,6 +367,31 @@ mod tests {
         assert!(!page.contains("quantile"));
         assert!(page.contains("tas_ttft_ms_count 0"));
         assert!(!page.contains("NaN"));
+    }
+
+    #[test]
+    fn plan_db_families_render_search_amortization() {
+        let mut p = Prom::new();
+        let s = MetricsSnapshot {
+            plan_db: crate::dataflow::SearchStats {
+                searches: 3,
+                db_hits: 40,
+                db_misses: 3,
+                entries: 12,
+                pruned: 7,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        render_metrics(&mut p, &[("replica", "0")], &s);
+        let page = p.render();
+        assert_well_formed(&page);
+        assert!(page.contains("# TYPE tas_searches_total counter"));
+        assert!(page.contains("tas_searches_total{replica=\"0\"} 3"));
+        assert!(page.contains("tas_plan_db_hits_total{replica=\"0\"} 40"));
+        assert!(page.contains("# TYPE tas_plan_db_entries gauge"));
+        assert!(page.contains("tas_plan_db_entries{replica=\"0\"} 12"));
+        assert!(page.contains("tas_search_pruned_total{replica=\"0\"} 7"));
     }
 
     #[test]

@@ -65,8 +65,8 @@ pub use pipeline::{
     PipelineStats,
 };
 pub use shard::{
-    shard_gemm_overlap_aware, shard_link_rounds, sharded_closed_latency, sharded_fused_cost,
-    sharded_replayed_cost, DeviceCost, ShardCost, ShardLatency,
+    overlapped_lower_bound, shard_gemm_overlap_aware, shard_link_rounds, sharded_closed_latency,
+    sharded_fused_cost, sharded_replayed_cost, DeviceCost, ShardCost, ShardLatency,
 };
 pub use strip::{
     attribute_strips, plan_cost, plan_ema_pipeline, plan_sim_ema, replayed_cost, StripCost,

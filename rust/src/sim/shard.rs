@@ -277,6 +277,17 @@ pub fn sharded_closed_latency(
     ShardLatency::from_parts(&per_device, link_cycles)
 }
 
+/// True lower bound on any cover's overlapped latency at `devices`
+/// shards: the busiest device computes at least `ceil(macs / devices)`
+/// MACs, and no plan beats the PE array's throughput on them.  The joint
+/// search ([`crate::dataflow::search`]) beam-prunes with
+/// `max(this, candidate link rounds)` against its incumbent, so
+/// candidates that cannot win are never fully priced.
+pub fn overlapped_lower_bound(shape: GemmShape, devices: u64, cfg: &AcceleratorConfig) -> u64 {
+    let per_device = shape.macs().div_ceil(devices.max(1));
+    per_device.div_ceil(cfg.pe_array().macs_per_cycle().max(1))
+}
+
 /// Per-device cycle estimates via the replayed EmaSink pass — the
 /// fallback for resident streams / fixed bodies, and the reference the
 /// closed form is pinned against.

@@ -1,0 +1,192 @@
+//! Integration: invariants of the joint plan search and its memoized
+//! plan database (PR 9).
+//!
+//! The load-bearing claim is *never-lose*: the greedy TAS stack's choice
+//! is a member of the search's candidate set and is priced by the same
+//! closed forms, so the searched plan can never be slower than the
+//! greedy plan — on any model, sequence length, or device count.
+
+use tas::config::AcceleratorConfig;
+use tas::arch::Interconnect;
+use tas::dataflow::search::{
+    canonical_bucket_key, search_stages, CoverFamily, DbEntry, GemmSpec, PlanDb, SearchChoice,
+    SearchCtx, DB_TOP_K, PLAN_DB_CAP,
+};
+use tas::dataflow::ShardAxis;
+use tas::gemm::{GemmShape, Tiling};
+use tas::models::zoo;
+use tas::util::check::property;
+use tas::util::prng::Rng;
+
+fn ctx<'a>(
+    tiling: Tiling,
+    sram_words: u64,
+    devices: u64,
+    cfg: &'a AcceleratorConfig,
+    icx: &'a Interconnect,
+) -> SearchCtx<'a> {
+    SearchCtx {
+        tiling,
+        sram_words,
+        devices,
+        cfg,
+        icx,
+    }
+}
+
+#[test]
+fn search_never_loses_to_greedy_across_the_zoo() {
+    let cfg = AcceleratorConfig::default();
+    let icx = Interconnect::default();
+    let tiling = Tiling::square(16);
+    let mut wins = 0u64;
+    for model in zoo::all_models() {
+        for seq in [64u64, 384, 512] {
+            for devices in [1u64, 2, 4, 8] {
+                let stages = model.block_stages(seq);
+                let mut db = PlanDb::new(PLAN_DB_CAP);
+                let c = ctx(tiling, cfg.sram_words, devices, &cfg, &icx);
+                let out = search_stages(&stages, c, &mut db);
+                assert!(
+                    out.searched_cycles <= out.greedy_cycles,
+                    "search lost to greedy: {} seq {seq} d {devices}: {} > {}",
+                    model.name,
+                    out.searched_cycles,
+                    out.greedy_cycles
+                );
+                if out.searched_cycles < out.greedy_cycles {
+                    wins += 1;
+                }
+            }
+        }
+    }
+    // The search is not vacuously equal to greedy: at least one zoo
+    // configuration must strictly improve (the multi-device shards
+    // where the contraction axis beats the natural row shard).
+    assert!(wins > 0, "search never strictly beat greedy on any config");
+}
+
+#[test]
+fn database_round_trip_is_byte_identical() {
+    let cfg = AcceleratorConfig::default();
+    let icx = Interconnect::default();
+    let tiling = Tiling::square(16);
+    let mut db = PlanDb::new(PLAN_DB_CAP);
+    for model in zoo::all_models().iter().take(3) {
+        let c = ctx(tiling, cfg.sram_words, 4, &cfg, &icx);
+        search_stages(&model.block_stages(384), c, &mut db);
+    }
+    assert!(!db.is_empty());
+    let text = db.to_text();
+    let reloaded = PlanDb::from_text(&text, PLAN_DB_CAP).unwrap();
+    assert_eq!(reloaded.to_text(), text, "save -> load -> save drifted");
+}
+
+#[test]
+fn canonical_keys_are_congruence_classes() {
+    property("canonical-key congruence", 200, |rng: &mut Rng| {
+        let t = 8 + 8 * rng.gen_range(4); // 8, 16, 24, 32
+        let tiling = Tiling::square(t);
+        let sram = 64 * 1024 + rng.gen_range(64 * 1024);
+        let devices = 1 + rng.gen_range(8);
+        let n = (1 + rng.gen_range(64)) * t;
+        let k = (1 + rng.gen_range(64)) * t;
+        // Two M dims landing in the same tile-grid row count are
+        // congruent: same spec, same routing key.
+        let rows = 1 + rng.gen_range(64);
+        let m_hi = rows * t;
+        let m_lo = m_hi - rng.gen_range(t); // same div_ceil class
+        let a = GemmSpec::canonical(GemmShape::new(m_hi, n, k), tiling, sram, devices);
+        let b = GemmSpec::canonical(GemmShape::new(m_lo.max(m_hi - t + 1), n, k), tiling, sram, devices);
+        assert_eq!(a, b, "same grid, same class must share a spec");
+        assert_eq!(
+            canonical_bucket_key(m_hi, tiling, sram),
+            canonical_bucket_key(m_lo.max(m_hi - t + 1), tiling, sram),
+        );
+        // One more grid row breaks congruence.
+        let c = GemmSpec::canonical(GemmShape::new(m_hi + t, n, k), tiling, sram, devices);
+        assert_ne!(a, c, "an extra grid row must change the spec");
+        assert_ne!(
+            canonical_bucket_key(m_hi, tiling, sram),
+            canonical_bucket_key(m_hi + t, tiling, sram),
+        );
+    });
+}
+
+#[test]
+fn top_k_keeps_the_best_entries_under_any_insertion_order() {
+    let axes = [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Contraction];
+    let families = [
+        CoverFamily::Tas,
+        CoverFamily::LinkAware,
+        CoverFamily::PureIs,
+        CoverFamily::PureWs,
+    ];
+    property("top-k ordering", 200, |rng: &mut Rng| {
+        let tiling = Tiling::square(16);
+        let shape = GemmShape::new(256, 768, 768);
+        let spec = GemmSpec::canonical(shape, tiling, 256 * 1024, 4);
+        // Distinct (choice, cycles) pool, shuffled insertion order.
+        let mut pool: Vec<DbEntry> = Vec::new();
+        for (i, &family) in families.iter().enumerate() {
+            for (j, &axis) in axes.iter().enumerate() {
+                pool.push(DbEntry {
+                    choice: SearchChoice { family, axis },
+                    shape,
+                    overlapped_cycles: 100 + 37 * (i as u64 * 3 + j as u64 + rng.gen_range(5)),
+                    greedy_cycles: 1_000,
+                });
+            }
+        }
+        let mut expected: Vec<u64> = pool.iter().map(|e| e.overlapped_cycles).collect();
+        expected.sort_unstable();
+        expected.truncate(DB_TOP_K);
+
+        rng.shuffle(&mut pool);
+        let mut db = PlanDb::new(PLAN_DB_CAP);
+        for e in &pool {
+            db.insert(spec, *e);
+        }
+        let kept = db.entries(spec);
+        assert_eq!(kept.len(), DB_TOP_K.min(pool.len()));
+        let kept_cycles: Vec<u64> = kept.iter().map(|e| e.overlapped_cycles).collect();
+        let mut sorted = kept_cycles.clone();
+        sorted.sort_unstable();
+        assert_eq!(kept_cycles, sorted, "entries must stay best-first");
+        assert_eq!(
+            kept_cycles, expected,
+            "the surviving top-k must be the global best regardless of order"
+        );
+    });
+}
+
+#[test]
+fn persisted_database_serves_a_rerun_with_zero_new_searches() {
+    let cfg = AcceleratorConfig::default();
+    let icx = Interconnect::default();
+    let tiling = Tiling::square(16);
+    let model = zoo::by_name("bert-base").unwrap();
+    let stages = model.block_stages(384);
+
+    let mut db = PlanDb::new(PLAN_DB_CAP);
+    let c = ctx(tiling, cfg.sram_words, 4, &cfg, &icx);
+    let first = search_stages(&stages, c, &mut db);
+    assert!(db.stats().searches > 0);
+    let text = db.to_text();
+
+    // Reload into a fresh database — as the coordinator does at boot —
+    // and re-run: every lookup is an exact-shape hit, zero searches.
+    let mut warmed = PlanDb::from_text(&text, PLAN_DB_CAP).unwrap();
+    let second = search_stages(&stages, c, &mut warmed);
+    assert_eq!(warmed.stats().searches, 0, "warm rerun must not search");
+    assert!(warmed.stats().db_hits > 0);
+    assert_eq!(second.searched_cycles, first.searched_cycles);
+    assert_eq!(
+        second
+            .decisions
+            .iter()
+            .map(|d| d.choice)
+            .collect::<Vec<_>>(),
+        first.decisions.iter().map(|d| d.choice).collect::<Vec<_>>(),
+    );
+}
