@@ -131,6 +131,7 @@ fn main() {
             devices,
             cfg: &cfg,
             icx: &icx,
+            backend: tas::arch::backend::BackendKind::Systolic,
         };
         let n = stages.len() as u64;
         b.run(

@@ -1,0 +1,546 @@
+//! Pluggable accelerator backends behind one trait.
+//!
+//! The paper argues TAS for one hardware point — a square systolic array fed
+//! by SRAM over a half-duplex DRAM — but the claim is about *data movement*,
+//! which should hold (or degenerate, informatively) across accelerator
+//! styles.  [`Backend`] abstracts the four things every planner and cost sink
+//! actually consumes:
+//!
+//! * tile-pass compute cycles ([`BackendParams::tile_cycles`]),
+//! * per-operand word charges for the streamed-traffic model
+//!   ([`BackendParams::charge`] / [`PlanPricing`]),
+//! * residency capacity classes ([`Backend::residency_words`]) and the
+//!   one-time weight *program* cost for backends with non-volatile
+//!   stationary storage ([`Backend::program_words`]),
+//! * the external-memory timing hook ([`Backend::timing_config`]) and the
+//!   interconnect handle ([`Backend::interconnect`]).
+//!
+//! [`SystolicBackend`] reproduces the original PE/SRAM/DRAM stack
+//! word-for-word; [`CrossbarBackend`] is an X-Former-style in-memory
+//! crossbar where weights are programmed once into NVM tiles and only
+//! activations and outputs move at run time.  The stationary sign rule and
+//! the residency knapsack see the difference *by pricing, not by special
+//! case*: a zero weight charge makes every cover activation-stationary on
+//! its own.
+
+use crate::arch::dram_timing::DramTimingConfig;
+use crate::arch::interconnect::Interconnect;
+use crate::config::{AcceleratorConfig, EnergyConfig};
+use crate::energy::EnergyModel;
+
+/// Fixed-point scale for the planner's per-word stream prices.  Must match
+/// the scale `dataflow::Plan` uses internally for its cover chooser (a unit
+/// test in `dataflow::plan` pins the two together).
+pub const PRICE_SCALE: u64 = 256;
+
+/// Operand indices into a `charge` triple: `[input, weight, output]`.
+pub const OP_INPUT: usize = 0;
+/// See [`OP_INPUT`].
+pub const OP_WEIGHT: usize = 1;
+/// See [`OP_INPUT`].
+pub const OP_OUTPUT: usize = 2;
+
+/// Which hardware model a plan was priced for.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum BackendKind {
+    /// The paper's square systolic array + SRAM + half-duplex DRAM.
+    #[default]
+    Systolic,
+    /// X-Former-style in-memory NVM crossbar: weights programmed once,
+    /// activations streamed, psums accumulated at the array periphery.
+    Crossbar,
+}
+
+impl BackendKind {
+    /// Every backend the build knows about, in id order.
+    pub const ALL: [BackendKind; 2] = [BackendKind::Systolic, BackendKind::Crossbar];
+
+    /// Stable short name, used by the CLI, TOML, and the plan-db spec key.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Systolic => "systolic",
+            BackendKind::Crossbar => "crossbar",
+        }
+    }
+
+    /// Stable numeric id for canonical spec keys.
+    pub fn id(&self) -> u64 {
+        match self {
+            BackendKind::Systolic => 0,
+            BackendKind::Crossbar => 1,
+        }
+    }
+
+    /// Parse a CLI/TOML/plan-db name.
+    pub fn from_name(name: &str) -> anyhow::Result<BackendKind> {
+        for kind in BackendKind::ALL {
+            if kind.name() == name {
+                return Ok(kind);
+            }
+        }
+        anyhow::bail!(
+            "unknown backend '{name}' (expected one of: systolic, crossbar)"
+        )
+    }
+
+    /// The planner pricing this backend kind implies.
+    pub fn pricing(&self) -> PlanPricing {
+        match self {
+            BackendKind::Systolic => PlanPricing::systolic(),
+            BackendKind::Crossbar => PlanPricing::crossbar(),
+        }
+    }
+
+    /// Inverse of [`BackendKind::id`].
+    pub fn from_id(id: u64) -> anyhow::Result<BackendKind> {
+        for kind in BackendKind::ALL {
+            if kind.id() == id {
+                return Ok(kind);
+            }
+        }
+        anyhow::bail!("unknown backend id {id}")
+    }
+}
+
+/// The copyable parameter block the cycle/pipeline walkers consume.
+///
+/// `charge[op]` is the number of external words actually moved per logical
+/// word of operand `op`; the systolic backend charges `[1, 1, 1]`, the
+/// crossbar `[1, 0, 1]` because programmed weights never stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BackendParams {
+    /// Cycles to fill the compute fabric before a tile pass drains
+    /// (systolic skew, or crossbar DAC setup + sample/hold).
+    pub fill_latency: u64,
+    /// Sustained MACs per cycle once filled.
+    pub macs_per_cycle: u64,
+    /// External-memory words per cycle (DRAM bus, or activation bus).
+    pub bandwidth: u64,
+    /// Cycles lost on a read<->write direction switch.
+    pub turnaround: u64,
+    /// Per-operand word multipliers `[input, weight, output]`.
+    pub charge: [u64; 3],
+}
+
+impl BackendParams {
+    /// The identity parameters for the paper's systolic stack: exactly what
+    /// `PeArray` + the raw `AcceleratorConfig` fields used to provide.
+    pub fn systolic(cfg: &AcceleratorConfig) -> BackendParams {
+        let pe = cfg.pe_array();
+        BackendParams {
+            fill_latency: pe.fill_latency,
+            macs_per_cycle: pe.macs_per_cycle(),
+            bandwidth: cfg.dram_bandwidth,
+            turnaround: cfg.dram_turnaround,
+            charge: [1, 1, 1],
+        }
+    }
+
+    /// Cycles for one tile pass of `macs` MACs (fill + drain).  Mirrors
+    /// `PeArray::tile_cycles` so the systolic path is bit-identical.
+    pub fn tile_cycles(&self, macs: u64) -> u64 {
+        self.fill_latency + macs.div_ceil(self.macs_per_cycle)
+    }
+}
+
+/// The planner-facing prices the stationary sign rule and the residency
+/// knapsack consume: per-word stream prices in [`PRICE_SCALE`] units plus
+/// the same charge triple the walkers use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanPricing {
+    /// Price of re-reading one input word, in [`PRICE_SCALE`] units.
+    pub wi: u64,
+    /// Price of re-reading one weight word, in [`PRICE_SCALE`] units.
+    pub ww: u64,
+    /// Per-operand word multipliers `[input, weight, output]`.
+    pub charge: [u64; 3],
+}
+
+impl PlanPricing {
+    /// Unit prices: both streams cost one external word per word.
+    pub fn systolic() -> PlanPricing {
+        PlanPricing { wi: PRICE_SCALE, ww: PRICE_SCALE, charge: [1, 1, 1] }
+    }
+
+    /// Crossbar prices: weights are programmed, not streamed, so their
+    /// marginal re-read price is zero.
+    pub fn crossbar() -> PlanPricing {
+        PlanPricing { wi: PRICE_SCALE, ww: 0, charge: [1, 0, 1] }
+    }
+
+    /// Whether the fixed-scheme fallback (which bounces partial sums
+    /// through external memory) is a sensible candidate.  Backends that do
+    /// not stream every operand never spill psums off-chip.
+    pub fn allows_fixed(&self) -> bool {
+        self.charge == [1, 1, 1]
+    }
+}
+
+/// One hardware target for the shared Plan IR.
+///
+/// Everything the simulator and the planners need is exposed here; the
+/// concrete systolic types (`PeArray`, `Dram`, `Sram`) survive untouched
+/// behind [`SystolicBackend`].
+pub trait Backend: Send + Sync {
+    /// Which backend this is (stable name + id for spec keys).
+    fn kind(&self) -> BackendKind;
+    /// Walker parameters: tile-pass cycles, bus, and charge triple.
+    fn params(&self) -> BackendParams;
+    /// Planner prices for the cover chooser and residency knapsack.
+    fn pricing(&self) -> PlanPricing;
+    /// Tile geometry, buffer capacities, and word width.
+    fn accel(&self) -> &AcceleratorConfig;
+    /// Energy table for streamed traffic and compute.
+    fn energy(&self) -> EnergyModel;
+    /// One-time external words moved to place a `weight_words`-word tensor
+    /// into stationary storage.  Zero for stream-from-DRAM backends.
+    fn program_words(&self, weight_words: u64) -> u64;
+    /// One-time energy (pJ) for the same placement.
+    fn program_pj(&self, weight_words: u64) -> f64;
+    /// Capacity class (words) for the residency knapsack.
+    fn residency_words(&self) -> u64;
+    /// Bank/row timing for the transaction-level replay oracle.
+    fn timing_config(&self) -> DramTimingConfig;
+    /// Inter-device link model for sharded plans.
+    fn interconnect(&self) -> &Interconnect;
+}
+
+/// The paper's hardware point, word-for-word: square PE array, SRAM,
+/// half-duplex DRAM.  This is the identity backend — every cost it reports
+/// equals the pre-trait code path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SystolicBackend {
+    accel: AcceleratorConfig,
+    energy: EnergyConfig,
+    icx: Interconnect,
+}
+
+impl SystolicBackend {
+    pub fn new(accel: AcceleratorConfig, energy: EnergyConfig) -> SystolicBackend {
+        SystolicBackend { accel, energy, icx: Interconnect::default() }
+    }
+
+    pub fn with_interconnect(mut self, icx: Interconnect) -> SystolicBackend {
+        self.icx = icx;
+        self
+    }
+}
+
+impl Backend for SystolicBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Systolic
+    }
+    fn params(&self) -> BackendParams {
+        BackendParams::systolic(&self.accel)
+    }
+    fn pricing(&self) -> PlanPricing {
+        PlanPricing::systolic()
+    }
+    fn accel(&self) -> &AcceleratorConfig {
+        &self.accel
+    }
+    fn energy(&self) -> EnergyModel {
+        EnergyModel::new(self.energy)
+    }
+    fn program_words(&self, _weight_words: u64) -> u64 {
+        0
+    }
+    fn program_pj(&self, _weight_words: u64) -> f64 {
+        0.0
+    }
+    fn residency_words(&self) -> u64 {
+        self.accel.sram_words
+    }
+    fn timing_config(&self) -> DramTimingConfig {
+        DramTimingConfig::default()
+    }
+    fn interconnect(&self) -> &Interconnect {
+        &self.icx
+    }
+}
+
+/// Geometry and costs of the in-memory crossbar target.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CrossbarConfig {
+    /// Crossbar tile dimension (rows == columns); weights for one
+    /// `xbar_dim x xbar_dim` sub-matrix are programmed into one tile.
+    pub xbar_dim: u64,
+    /// Column readouts resolved per cycle (ADC lanes); each readout
+    /// completes `xbar_dim` MACs, so throughput is `xbar_dim * adc_lanes`
+    /// MACs per cycle.
+    pub adc_lanes: u64,
+    /// DAC input setup + sample/hold cycles before a tile pass drains.
+    pub dac_setup: u64,
+    /// Activation/psum bus words per cycle.
+    pub bus_words_per_cycle: u64,
+    /// Bus direction-switch penalty in cycles.
+    pub bus_turnaround: u64,
+    /// Activation buffer capacity in words (the residency class — weights
+    /// live in NVM, so only activations and outputs compete for it).
+    pub buffer_words: u64,
+    /// Tile rows of activations batched per pass.
+    pub tile_m: u64,
+    /// Partial-sum accumulator capacity at the array periphery, in words.
+    pub psum_regs: u64,
+    /// One-time NVM write energy per programmed weight word, in pJ.
+    pub program_pj_per_word: f64,
+    /// External words moved per programmed weight word (program stream).
+    pub program_words_per_word: u64,
+}
+
+impl Default for CrossbarConfig {
+    fn default() -> CrossbarConfig {
+        CrossbarConfig {
+            xbar_dim: 128,
+            adc_lanes: 16,
+            dac_setup: 32,
+            bus_words_per_cycle: 16,
+            bus_turnaround: 4,
+            buffer_words: 128 * 1024,
+            tile_m: 16,
+            psum_regs: 16 * 1024,
+            program_pj_per_word: 2000.0,
+            program_words_per_word: 1,
+        }
+    }
+}
+
+impl CrossbarConfig {
+    /// Express the crossbar geometry in the shared `AcceleratorConfig`
+    /// vocabulary so the tiling/grid machinery applies unchanged: the
+    /// contraction and output tile dims are the crossbar dimension, and
+    /// the "SRAM" capacity class is the activation buffer.
+    pub fn accel(&self) -> AcceleratorConfig {
+        AcceleratorConfig {
+            pe_dim: self.xbar_dim,
+            tile_m: self.tile_m,
+            tile_n: self.xbar_dim,
+            tile_k: self.xbar_dim,
+            psum_regs: self.psum_regs,
+            sram_words: self.buffer_words,
+            dram_bandwidth: self.bus_words_per_cycle,
+            dram_turnaround: self.bus_turnaround,
+            word_bytes: 2,
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.xbar_dim == 0 || self.adc_lanes == 0 {
+            anyhow::bail!("crossbar dimensions must be positive");
+        }
+        if self.bus_words_per_cycle == 0 {
+            anyhow::bail!("crossbar bus bandwidth must be positive");
+        }
+        self.accel().validate()
+    }
+}
+
+/// The X-Former-style in-memory crossbar backend: weights resident in NVM
+/// at a one-time program cost, activations streamed and psums accumulated
+/// at the crossbar periphery.
+#[derive(Clone, Copy, Debug)]
+pub struct CrossbarBackend {
+    xbar: CrossbarConfig,
+    accel: AcceleratorConfig,
+    energy: EnergyConfig,
+    icx: Interconnect,
+}
+
+impl Default for CrossbarBackend {
+    fn default() -> CrossbarBackend {
+        CrossbarBackend::new(CrossbarConfig::default(), EnergyConfig::default())
+    }
+}
+
+impl CrossbarBackend {
+    pub fn new(xbar: CrossbarConfig, energy: EnergyConfig) -> CrossbarBackend {
+        CrossbarBackend {
+            xbar,
+            accel: xbar.accel(),
+            energy,
+            icx: Interconnect::default(),
+        }
+    }
+
+    pub fn with_interconnect(mut self, icx: Interconnect) -> CrossbarBackend {
+        self.icx = icx;
+        self
+    }
+
+    pub fn crossbar(&self) -> &CrossbarConfig {
+        &self.xbar
+    }
+}
+
+impl Backend for CrossbarBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Crossbar
+    }
+    fn params(&self) -> BackendParams {
+        BackendParams {
+            fill_latency: self.xbar.dac_setup,
+            macs_per_cycle: self.xbar.xbar_dim * self.xbar.adc_lanes,
+            bandwidth: self.xbar.bus_words_per_cycle,
+            turnaround: self.xbar.bus_turnaround,
+            charge: [1, 0, 1],
+        }
+    }
+    fn pricing(&self) -> PlanPricing {
+        PlanPricing::crossbar()
+    }
+    fn accel(&self) -> &AcceleratorConfig {
+        &self.accel
+    }
+    fn energy(&self) -> EnergyModel {
+        EnergyModel::new(self.energy)
+    }
+    fn program_words(&self, weight_words: u64) -> u64 {
+        weight_words * self.xbar.program_words_per_word
+    }
+    fn program_pj(&self, weight_words: u64) -> f64 {
+        self.program_words(weight_words) as f64 * self.xbar.program_pj_per_word
+    }
+    fn residency_words(&self) -> u64 {
+        self.xbar.buffer_words
+    }
+    fn timing_config(&self) -> DramTimingConfig {
+        DramTimingConfig::default()
+    }
+    fn interconnect(&self) -> &Interconnect {
+        &self.icx
+    }
+}
+
+/// A concrete, copy-free way to hold "whichever backend the config chose"
+/// without boxing; delegates every trait method.
+#[derive(Clone, Copy, Debug)]
+pub enum AnyBackend {
+    Systolic(SystolicBackend),
+    Crossbar(CrossbarBackend),
+}
+
+impl AnyBackend {
+    /// Build the named backend.  The systolic backend adopts the given
+    /// accelerator geometry; the crossbar derives its own from `xbar`.
+    pub fn build(
+        kind: BackendKind,
+        accel: AcceleratorConfig,
+        energy: EnergyConfig,
+        xbar: CrossbarConfig,
+    ) -> AnyBackend {
+        match kind {
+            BackendKind::Systolic => {
+                AnyBackend::Systolic(SystolicBackend::new(accel, energy))
+            }
+            BackendKind::Crossbar => {
+                AnyBackend::Crossbar(CrossbarBackend::new(xbar, energy))
+            }
+        }
+    }
+
+    fn inner(&self) -> &dyn Backend {
+        match self {
+            AnyBackend::Systolic(b) => b,
+            AnyBackend::Crossbar(b) => b,
+        }
+    }
+}
+
+impl Default for AnyBackend {
+    fn default() -> AnyBackend {
+        AnyBackend::Systolic(SystolicBackend::default())
+    }
+}
+
+impl Backend for AnyBackend {
+    fn kind(&self) -> BackendKind {
+        self.inner().kind()
+    }
+    fn params(&self) -> BackendParams {
+        self.inner().params()
+    }
+    fn pricing(&self) -> PlanPricing {
+        self.inner().pricing()
+    }
+    fn accel(&self) -> &AcceleratorConfig {
+        self.inner().accel()
+    }
+    fn energy(&self) -> EnergyModel {
+        self.inner().energy()
+    }
+    fn program_words(&self, weight_words: u64) -> u64 {
+        self.inner().program_words(weight_words)
+    }
+    fn program_pj(&self, weight_words: u64) -> f64 {
+        self.inner().program_pj(weight_words)
+    }
+    fn residency_words(&self) -> u64 {
+        self.inner().residency_words()
+    }
+    fn timing_config(&self) -> DramTimingConfig {
+        self.inner().timing_config()
+    }
+    fn interconnect(&self) -> &Interconnect {
+        self.inner().interconnect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn systolic_params_match_the_raw_config() {
+        let cfg = AcceleratorConfig::default();
+        let b = SystolicBackend::new(cfg, EnergyConfig::default());
+        let p = b.params();
+        let pe = cfg.pe_array();
+        assert_eq!(p.fill_latency, pe.fill_latency);
+        assert_eq!(p.macs_per_cycle, pe.macs_per_cycle());
+        assert_eq!(p.bandwidth, cfg.dram_bandwidth);
+        assert_eq!(p.turnaround, cfg.dram_turnaround);
+        assert_eq!(p.charge, [1, 1, 1]);
+        for macs in [0, 1, 255, 256, 100_000] {
+            assert_eq!(p.tile_cycles(macs), pe.tile_cycles(macs));
+        }
+        assert_eq!(b.program_words(1 << 20), 0);
+        assert_eq!(b.residency_words(), cfg.sram_words);
+    }
+
+    #[test]
+    fn crossbar_charges_no_weight_stream_but_a_program_cost() {
+        let b = CrossbarBackend::default();
+        assert_eq!(b.params().charge, [1, 0, 1]);
+        assert_eq!(b.pricing().ww, 0);
+        assert!(!b.pricing().allows_fixed());
+        assert_eq!(b.program_words(768 * 768), 768 * 768);
+        assert!(b.program_pj(1) > 0.0);
+        b.crossbar().validate().expect("default crossbar validates");
+    }
+
+    #[test]
+    fn kind_names_round_trip() {
+        for kind in BackendKind::ALL {
+            assert_eq!(BackendKind::from_name(kind.name()).unwrap(), kind);
+            assert_eq!(BackendKind::from_id(kind.id()).unwrap(), kind);
+        }
+        assert!(BackendKind::from_name("tpu").is_err());
+        assert!(BackendKind::from_id(99).is_err());
+    }
+
+    #[test]
+    fn any_backend_delegates() {
+        let any = AnyBackend::build(
+            BackendKind::Crossbar,
+            AcceleratorConfig::default(),
+            EnergyConfig::default(),
+            CrossbarConfig::default(),
+        );
+        assert_eq!(any.kind(), BackendKind::Crossbar);
+        assert_eq!(any.params().charge, [1, 0, 1]);
+        assert_eq!(any.accel().tile_n, CrossbarConfig::default().xbar_dim);
+        let sys = AnyBackend::default();
+        assert_eq!(sys.kind(), BackendKind::Systolic);
+        assert_eq!(sys.params().charge, [1, 1, 1]);
+    }
+}

@@ -5,12 +5,17 @@
 //! These types carry *capacities and costs*; the dynamic behaviour (what is
 //! resident when) lives in the schedule replay inside [`crate::sim`].
 
+pub mod backend;
 pub mod dram;
 pub mod dram_timing;
 pub mod interconnect;
 pub mod pe;
 pub mod sram;
 
+pub use backend::{
+    AnyBackend, Backend, BackendKind, BackendParams, CrossbarBackend, CrossbarConfig,
+    PlanPricing, SystolicBackend,
+};
 pub use dram::{Dram, DramDir, DramStats};
 pub use interconnect::{Interconnect, InterconnectConfig};
 pub use pe::PeArray;

@@ -5,6 +5,7 @@
 //! words, an internal SRAM of a few hundred KiB, and Ayaka-calibrated
 //! energy ratios (external transfer 10–100× internal compute, §IV).
 
+use crate::arch::backend::{AnyBackend, BackendKind, CrossbarConfig};
 use crate::arch::{Dram, InterconnectConfig, PeArray, RegFile, Sram};
 use crate::gemm::Tiling;
 use crate::util::toml::TomlDoc;
@@ -171,12 +172,43 @@ impl InterconnectConfig {
     }
 }
 
+/// TOML loading for the crossbar backend geometry, `[backend.crossbar]`
+/// (see [`crate::arch::backend::CrossbarConfig`]).
+impl CrossbarConfig {
+    pub fn from_toml(doc: &TomlDoc) -> Self {
+        let d = CrossbarConfig::default();
+        CrossbarConfig {
+            xbar_dim: doc.get_u64("backend.crossbar.xbar_dim", d.xbar_dim),
+            adc_lanes: doc.get_u64("backend.crossbar.adc_lanes", d.adc_lanes),
+            dac_setup: doc.get_u64("backend.crossbar.dac_setup", d.dac_setup),
+            bus_words_per_cycle: doc
+                .get_u64("backend.crossbar.bus_words_per_cycle", d.bus_words_per_cycle),
+            bus_turnaround: doc
+                .get_u64("backend.crossbar.bus_turnaround", d.bus_turnaround),
+            buffer_words: doc.get_u64("backend.crossbar.buffer_words", d.buffer_words),
+            tile_m: doc.get_u64("backend.crossbar.tile_m", d.tile_m),
+            psum_regs: doc.get_u64("backend.crossbar.psum_regs", d.psum_regs),
+            program_pj_per_word: doc
+                .get_f64("backend.crossbar.program_pj_per_word", d.program_pj_per_word),
+            program_words_per_word: doc.get_u64(
+                "backend.crossbar.program_words_per_word",
+                d.program_words_per_word,
+            ),
+        }
+    }
+}
+
 /// Top-level config bundle.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Config {
     pub accelerator: AcceleratorConfig,
     pub energy: EnergyConfig,
     pub interconnect: InterconnectConfig,
+    /// Hardware model selected by `[backend] kind = "..."`.
+    pub backend: BackendKind,
+    /// Crossbar geometry, `[backend.crossbar]`; ignored unless `backend`
+    /// is [`BackendKind::Crossbar`].
+    pub crossbar: CrossbarConfig,
 }
 
 impl Config {
@@ -188,10 +220,31 @@ impl Config {
             accelerator: AcceleratorConfig::from_toml(&doc),
             energy: EnergyConfig::from_toml(&doc),
             interconnect: InterconnectConfig::from_toml(&doc),
+            backend: BackendKind::from_name(doc.get_str("backend.kind", "systolic"))?,
+            crossbar: CrossbarConfig::from_toml(&doc),
         };
         cfg.accelerator.validate()?;
         cfg.interconnect.validate()?;
+        if cfg.backend == BackendKind::Crossbar {
+            cfg.crossbar.validate()?;
+        }
         Ok(cfg)
+    }
+
+    /// Build the selected hardware backend: the systolic target adopts
+    /// `[accelerator]`, the crossbar derives its geometry from
+    /// `[backend.crossbar]`; both share `[energy]`.
+    pub fn make_backend(&self) -> AnyBackend {
+        AnyBackend::build(self.backend, self.accelerator, self.energy, self.crossbar)
+    }
+
+    /// The accelerator geometry the selected backend plans on (the
+    /// crossbar re-expresses its own dims in the shared vocabulary).
+    pub fn planning_accel(&self) -> AcceleratorConfig {
+        match self.backend {
+            BackendKind::Systolic => self.accelerator,
+            BackendKind::Crossbar => self.crossbar.accel(),
+        }
     }
 }
 
@@ -245,6 +298,41 @@ mod tests {
     }
 
     #[test]
+    fn backend_toml_selects_and_overrides() {
+        let doc = TomlDoc::parse(
+            "[backend]\nkind = \"crossbar\"\n\
+             [backend.crossbar]\nxbar_dim = 64\nprogram_pj_per_word = 1500.0",
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("backend.kind", "systolic"), "crossbar");
+        let x = CrossbarConfig::from_toml(&doc);
+        assert_eq!(x.xbar_dim, 64);
+        assert_eq!(x.program_pj_per_word, 1500.0);
+        // untouched fields keep defaults
+        assert_eq!(x.adc_lanes, CrossbarConfig::default().adc_lanes);
+        // an absent section means the systolic default
+        let empty = TomlDoc::parse("").unwrap();
+        assert_eq!(
+            BackendKind::from_name(empty.get_str("backend.kind", "systolic")).unwrap(),
+            BackendKind::Systolic
+        );
+    }
+
+    #[test]
+    fn make_backend_follows_the_selected_kind() {
+        use crate::arch::backend::Backend;
+        let mut cfg = Config::default();
+        assert_eq!(cfg.make_backend().kind(), BackendKind::Systolic);
+        assert_eq!(cfg.planning_accel(), cfg.accelerator);
+        cfg.backend = BackendKind::Crossbar;
+        let b = cfg.make_backend();
+        assert_eq!(b.kind(), BackendKind::Crossbar);
+        assert_eq!(cfg.planning_accel(), cfg.crossbar.accel());
+        // crossbar planning geometry is the crossbar's, not [accelerator]
+        assert_eq!(cfg.planning_accel().tile_k, cfg.crossbar.xbar_dim);
+    }
+
+    #[test]
     fn invalid_configs_rejected() {
         let mut c = AcceleratorConfig::default();
         c.psum_regs = 1;
@@ -262,7 +350,11 @@ mod file_tests {
     #[test]
     fn ships_loadable_config_files() {
         // the configs/ directory must stay in sync with the parser
-        for name in ["configs/default.toml", "configs/small8x8.toml"] {
+        for name in [
+            "configs/default.toml",
+            "configs/small8x8.toml",
+            "configs/crossbar.toml",
+        ] {
             let path = Path::new(name);
             if !path.exists() {
                 // tests may run from another cwd; resolve via manifest dir
@@ -283,5 +375,15 @@ mod file_tests {
         assert_eq!(cfg.accelerator, AcceleratorConfig::default());
         assert_eq!(cfg.energy, EnergyConfig::default());
         assert_eq!(cfg.interconnect, InterconnectConfig::default());
+        assert_eq!(cfg.backend, BackendKind::Systolic);
+        assert_eq!(cfg.crossbar, CrossbarConfig::default());
+    }
+
+    #[test]
+    fn crossbar_toml_selects_the_crossbar_backend() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/crossbar.toml");
+        let cfg = Config::load(&path).unwrap();
+        assert_eq!(cfg.backend, BackendKind::Crossbar);
+        cfg.crossbar.validate().unwrap();
     }
 }

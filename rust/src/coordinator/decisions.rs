@@ -15,9 +15,14 @@
 //! both (the per-GEMM rule is the compile-path contract; the layer plan is
 //! what the accelerator-side accounting reports as achievable EMA).
 
+use crate::arch::backend::BackendKind;
 use crate::arch::Interconnect;
 use crate::config::AcceleratorConfig;
-use crate::dataflow::search::{search_stages, PlanDb, SearchCtx, SearchStats, StagesOutcome};
+use crate::dataflow::decode::decode_step_stages;
+use crate::dataflow::search::{
+    search_lane_split, search_stages, LaneSplitOutcome, PlanDb, SearchCtx, SearchStats,
+    StagesOutcome,
+};
 use crate::dataflow::{DecodeDims, DecodePlan, DecodeStepPlan, LayerPlan, Scheme, StageSpec};
 use crate::gemm::{GemmShape, Tiling};
 use crate::runtime::Manifest;
@@ -249,6 +254,42 @@ pub fn mixed_bucket_plan(
     sram_words: u64,
     devices: u64,
 ) -> MixedBucketPlan {
+    mixed_bucket_plan_grid(
+        &[1, 2, 3, 4, 5, 6, 7],
+        prefill_tokens,
+        decode,
+        hidden,
+        ffn,
+        vocab,
+        n_layers,
+        heads,
+        tiling,
+        sram_words,
+        devices,
+    )
+}
+
+/// [`mixed_bucket_plan`] over an explicit eighths grid.  The dispatch
+/// planner passes the cycle-optimal subset of the grid from the joint
+/// lane-split search ([`crate::dataflow::search::search_lane_split`]);
+/// standalone callers pass the full `1..=7` grid.  The pick walks the
+/// grid in the given order with a strict `<`, so the lowest listed
+/// eighths wins EMA ties — list grid points in ascending order to keep
+/// the scan's deterministic answer.
+#[allow(clippy::too_many_arguments)]
+pub fn mixed_bucket_plan_grid(
+    eighths_grid: &[u64],
+    prefill_tokens: Option<u64>,
+    decode: Option<(u64, u64)>,
+    hidden: u64,
+    ffn: u64,
+    vocab: u64,
+    n_layers: u64,
+    heads: u64,
+    tiling: &Tiling,
+    sram_words: u64,
+    devices: u64,
+) -> MixedBucketPlan {
     let plan_prefill = |tokens: u64, sram: u64| {
         sharded_layer_plan_for_bucket(
             tokens, hidden, ffn, vocab, n_layers, tiling, sram, devices,
@@ -268,8 +309,9 @@ pub fn mixed_bucket_plan(
             // lowest eighths on ties — exactly the sequential loop's
             // deterministic answer.
             let candidates = std::thread::scope(|scope| {
-                let handles: Vec<_> = (1..=7u64)
-                    .map(|eighths| {
+                let handles: Vec<_> = eighths_grid
+                    .iter()
+                    .map(|&eighths| {
                         let (plan_prefill, plan_decode) = (&plan_prefill, &plan_decode);
                         scope.spawn(move || {
                             let prefill_sram = sram_words * eighths / 8;
@@ -393,6 +435,12 @@ impl<K: Ord + Clone, V> PlanCache<K, V> {
 /// of that key, so the cache can never hand one joint dispatch another
 /// dispatch's split.  Single-lane dispatches keep the whole SRAM.
 ///
+/// The split itself comes from the joint lane-split search
+/// ([`crate::dataflow::search::search_lane_split`], database-memoized
+/// under backend-tagged specs): the full residency-aware plans are
+/// built only at the cycle-optimal eighths, and the EMA scan breaks
+/// the ties the coarse cycle model leaves.
+///
 /// The caches are bounded ([`PLAN_CACHE_CAP`] entries each, LRU
 /// eviction) and counted ([`DispatchPlanner::cache_stats`]); known
 /// dispatch keys can be planned ahead of serving with
@@ -413,6 +461,10 @@ pub struct DispatchPlanner {
     /// Hardware model the joint search prices overlapped latency on.
     cfg: AcceleratorConfig,
     icx: Interconnect,
+    /// Backend the searches price covers under; spec keys carry it, so
+    /// one persisted database never serves another hardware model's
+    /// plans ([`crate::dataflow::search::GemmSpec::canonical_on`]).
+    backend: BackendKind,
     /// Memoized joint-search database ([`crate::dataflow::search`]):
     /// misses run the (cover × axis × residency) search, hits replan for
     /// free.  Persisted across restarts by the server boot path.
@@ -484,8 +536,24 @@ impl DispatchPlanner {
             mixed_cache: PlanCache::new(PLAN_CACHE_CAP),
             cfg: AcceleratorConfig::default(),
             icx: Interconnect::default(),
+            backend: BackendKind::Systolic,
             plan_db: PlanDb::default(),
         }
+    }
+
+    /// Retarget the planner's searches at another hardware model: covers
+    /// are priced under the backend's operand costs
+    /// ([`BackendKind::pricing`]), cycle pricing runs on its derived
+    /// accelerator config, and every database key is tagged with it.
+    pub fn with_backend(mut self, backend: BackendKind) -> DispatchPlanner {
+        self.backend = backend;
+        self.cfg = match backend {
+            BackendKind::Systolic => AcceleratorConfig::default(),
+            BackendKind::Crossbar => {
+                crate::arch::backend::CrossbarConfig::default().accel()
+            }
+        };
+        self
     }
 
     /// Install a (typically persisted) joint-search database.  Called by
@@ -527,8 +595,90 @@ impl DispatchPlanner {
             devices: devices_for_bucket(prefill_tokens, self.max_devices),
             cfg: &self.cfg,
             icx: &self.icx,
+            backend: self.backend,
         };
         search_stages(&stages, ctx, &mut self.plan_db)
+    }
+
+    /// Joint lane-split search for a mixed dispatch, through the
+    /// database ([`crate::dataflow::search::search_lane_split`]): both
+    /// lane chains priced at every eighths split of the SRAM budget.
+    pub fn search_mixed_split(
+        &mut self,
+        prefill_tokens: u64,
+        slots: u64,
+        cache_bucket: u64,
+    ) -> LaneSplitOutcome {
+        let prefill = bucket_stages(
+            prefill_tokens,
+            self.hidden,
+            self.ffn,
+            self.vocab,
+            self.n_layers,
+        );
+        let dims =
+            decode_dims(self.hidden, self.ffn, self.vocab, self.n_layers, self.heads);
+        let decode = decode_step_stages(&dims, slots, cache_bucket);
+        let ctx = SearchCtx {
+            tiling: self.tiling,
+            sram_words: self.sram_words,
+            devices: devices_for_bucket(prefill_tokens, self.max_devices),
+            cfg: &self.cfg,
+            icx: &self.icx,
+            backend: self.backend,
+        };
+        search_lane_split(&prefill, &decode, ctx, &mut self.plan_db)
+    }
+
+    /// The cycle-optimal eighths grid for a mixed dispatch: the subset
+    /// of prefill SRAM shares whose searched lane total ties the
+    /// minimum, ascending.  The served split is then chosen by the
+    /// full-plan EMA scan *restricted to this set* — the searched split
+    /// drives serving, and the residency-aware planners only break the
+    /// ties the coarse cycle model cannot see (the per-GEMM search is
+    /// SRAM-independent, so splits often tie; the knapsack's chained
+    /// edges are what separates them).
+    fn mixed_eighths_grid(
+        &mut self,
+        prefill_tokens: u64,
+        slots: u64,
+        cache_bucket: u64,
+    ) -> Vec<u64> {
+        let lane = self.search_mixed_split(prefill_tokens, slots, cache_bucket);
+        let min = lane
+            .grid_cycles
+            .iter()
+            .copied()
+            .min()
+            .expect("eighths grid is non-empty");
+        (1..=7u64)
+            .filter(|f| lane.grid_cycles[(f - 1) as usize] == min)
+            .collect()
+    }
+
+    /// Build the joint plan a mixed dispatch serves: lane split searched
+    /// through the database, full residency-aware plans at the searched
+    /// split(s).
+    fn searched_mixed_plan(
+        &mut self,
+        prefill_tokens: u64,
+        slots: u64,
+        cache_bucket: u64,
+    ) -> MixedBucketPlan {
+        let grid = self.mixed_eighths_grid(prefill_tokens, slots, cache_bucket);
+        mixed_bucket_plan_grid(
+            &grid,
+            Some(prefill_tokens),
+            Some((slots, cache_bucket)),
+            self.hidden,
+            self.ffn,
+            self.vocab,
+            self.n_layers,
+            self.heads,
+            &self.tiling,
+            self.sram_words,
+            devices_for_bucket(prefill_tokens, self.max_devices),
+        )
     }
 
     /// Override the per-cache entry cap (tests use tiny caps to exercise
@@ -601,26 +751,51 @@ impl DispatchPlanner {
                 todo.push(key);
             }
         }
+        // Resolve the mixed keys' lane-split searches up front: they
+        // share the database (mutably), so they run sequentially here —
+        // cheap, since splits in the same SRAM class share every
+        // per-GEMM entry — and the workers below get plain grids.
+        let mixed_keys: Vec<(u64, u64, u64)> = todo
+            .iter()
+            .filter_map(|&key| match key {
+                (Some(tokens), Some((slots, cache))) => Some((tokens, slots, cache)),
+                _ => None,
+            })
+            .collect();
+        let mut mixed_grids: Vec<((u64, u64, u64), Vec<u64>)> = Vec::new();
+        for (tokens, slots, cache) in mixed_keys {
+            let grid = self.mixed_eighths_grid(tokens, slots, cache);
+            mixed_grids.push(((tokens, slots, cache), grid));
+        }
+        let mixed_grids = &mixed_grids;
         let warmed = std::thread::scope(|scope| {
             let handles: Vec<_> = todo
                 .iter()
                 .map(|&key| {
                     scope.spawn(move || match key {
-                        (Some(tokens), Some((slots, cache))) => Warmed::Mixed(
-                            (tokens, slots, cache),
-                            mixed_bucket_plan(
-                                Some(tokens),
-                                Some((slots, cache)),
-                                hidden,
-                                ffn,
-                                vocab,
-                                n_layers,
-                                heads,
-                                &tiling,
-                                sram_words,
-                                devices_for_bucket(tokens, max_devices),
-                            ),
-                        ),
+                        (Some(tokens), Some((slots, cache))) => {
+                            let grid = mixed_grids
+                                .iter()
+                                .find(|(k, _)| *k == (tokens, slots, cache))
+                                .map(|(_, g)| g.as_slice())
+                                .expect("mixed keys resolved their grids above");
+                            Warmed::Mixed(
+                                (tokens, slots, cache),
+                                mixed_bucket_plan_grid(
+                                    grid,
+                                    Some(tokens),
+                                    Some((slots, cache)),
+                                    hidden,
+                                    ffn,
+                                    vocab,
+                                    n_layers,
+                                    heads,
+                                    &tiling,
+                                    sram_words,
+                                    devices_for_bucket(tokens, max_devices),
+                                ),
+                            )
+                        }
                         (Some(tokens), None) => Warmed::Prefill(
                             tokens,
                             sharded_layer_plan_for_bucket(
@@ -699,23 +874,21 @@ impl DispatchPlanner {
             (self.tiling, self.sram_words, self.max_devices);
         match (prefill_tokens, decode) {
             (Some(tokens), Some((slots, cache_bucket))) => {
-                let devices = devices_for_bucket(tokens, max_devices);
-                let plan = self
-                    .mixed_cache
-                    .get_or_insert_with((tokens, slots, cache_bucket), || {
-                        mixed_bucket_plan(
-                            Some(tokens),
-                            Some((slots, cache_bucket)),
-                            hidden,
-                            ffn,
-                            vocab,
-                            n_layers,
-                            heads,
-                            &tiling,
-                            sram_words,
-                            devices,
-                        )
-                    });
+                // Mixed dispatches serve the *searched* lane split: the
+                // joint lane-split search resolves the cycle-optimal
+                // eighths through the database, the full plans are built
+                // only at those splits.  The search runs before the memo
+                // lookup (it needs the database mutably), but only for
+                // keys the memo has not already resolved.
+                let key = (tokens, slots, cache_bucket);
+                let prebuilt = if self.mixed_cache.contains(&key) {
+                    None
+                } else {
+                    Some(self.searched_mixed_plan(tokens, slots, cache_bucket))
+                };
+                let plan = self.mixed_cache.get_or_insert_with(key, move || {
+                    prebuilt.expect("missing mixed keys are prebuilt above")
+                });
                 PlannedDispatch::Mixed(plan)
             }
             (Some(tokens), None) => {
@@ -1045,6 +1218,61 @@ mod tests {
                 < even_p.total_ema() + even_d.total_ema(),
             "served EMA must not be the even-split total"
         );
+    }
+
+    /// Satellite: served mixed dispatches use the searched lane split.
+    /// On bert-base dims at 256 prefill tokens the ffn1 chained edge
+    /// (256 × 768 = 196,608 words) fits the prefill lane's SRAM share
+    /// only at 6/8 and 7/8 of the 256 KiW budget, so the lane-split
+    /// search's cycle-optimal grid is exactly {6, 7} — the planner must
+    /// serve one of those splits, never a cycle-suboptimal one.
+    #[test]
+    fn mixed_dispatch_serves_a_cycle_optimal_split_from_the_lane_search() {
+        let t = Tiling::square(16);
+        let sram = 256 * 1024u64;
+        let mut planner = DispatchPlanner::new(768, 3072, 0, 12, 12, t, sram, 1);
+        let lane = planner.search_mixed_split(256, 4, 64);
+        let min = *lane.grid_cycles.iter().min().unwrap();
+        assert!(
+            lane.grid_cycles[..5].iter().all(|&c| c > min),
+            "splits below 6/8 must be cycle-suboptimal here: {:?}",
+            lane.grid_cycles
+        );
+        assert_eq!(lane.grid_cycles[5], min);
+        assert_eq!(lane.grid_cycles[6], min);
+        let served = {
+            let p = planner.plan_dispatch(Some(256), Some((4, 64)));
+            p.mixed().unwrap().prefill_sram_words
+        };
+        assert!(
+            served == sram * 6 / 8 || served == sram * 7 / 8,
+            "served split {served} is not one of the searched splits"
+        );
+        // The lane searches are memoized under canonical specs: a
+        // dim-congruent prefill bucket (252 tokens, same tile-grid rows)
+        // re-serves with zero new full searches.
+        let before = planner.search_stats().searches;
+        planner.plan_dispatch(Some(252), Some((4, 64)));
+        assert_eq!(planner.search_stats().searches, before);
+    }
+
+    /// Backend-tagged memoization: two planners targeting different
+    /// hardware models write disjoint spec keys into their databases.
+    #[test]
+    fn planner_tags_its_search_database_with_the_backend() {
+        let t = Tiling::square(16);
+        let sram = 64 * 1024u64;
+        let mut sys = DispatchPlanner::new(128, 512, 0, 2, 2, t, sram, 1);
+        let mut xbar = DispatchPlanner::new(128, 512, 0, 2, 2, t, sram, 1)
+            .with_backend(BackendKind::Crossbar);
+        sys.search_bucket(128);
+        xbar.search_bucket(128);
+        let sys_text = sys.plan_db().to_text();
+        let xbar_text = xbar.plan_db().to_text();
+        assert!(sys_text.contains(" systolic\n"));
+        assert!(!sys_text.contains(" crossbar\n"));
+        assert!(xbar_text.contains(" crossbar\n"));
+        assert!(!xbar_text.contains(" systolic\n"));
     }
 
     #[test]

@@ -27,8 +27,9 @@ pub use batcher::{Batch, Batcher, Bucket, DecodeSlot, MixedBatch};
 pub use fleet::{run_fleet, FleetModel, FleetOptions, FleetReport, RoutePolicy};
 pub use chunking::{serve_chunked, ChunkPolicy};
 pub use decisions::{
-    bucket_stages, devices_for_bucket, mixed_bucket_plan, scheme_plan, DispatchPlanner,
-    MixedBucketPlan, PlannedDispatch, PlannerCacheStats, SchemePlan,
+    bucket_stages, devices_for_bucket, mixed_bucket_plan, mixed_bucket_plan_grid,
+    scheme_plan, DispatchPlanner, MixedBucketPlan, PlannedDispatch, PlannerCacheStats,
+    SchemePlan,
 };
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{Request, RequestId, Response};

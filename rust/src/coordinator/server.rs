@@ -545,11 +545,12 @@ fn device_loop(
     let n_layers = backend.model_dim("n_layers", 1);
     let heads = backend.model_dim("heads", 0);
     // All plan memoisation lives in the dispatch planner, keyed on the
-    // *joint* dispatch: a mixed prefill+decode job resolves through
-    // `decisions::mixed_bucket_plan`, so the SRAM lane split it searches
-    // by marginal EMA is exactly the split the served metrics see (the
-    // seed hard-coded the even split here and keyed each cache on one
-    // lane's bucket alone — planner/executor divergence).
+    // *joint* dispatch: a mixed prefill+decode job resolves the SRAM
+    // lane split through the database-memoized joint search
+    // (`search_lane_split`, EMA tie-break), so the searched split is
+    // exactly the split the served metrics see (the seed hard-coded the
+    // even split here and keyed each cache on one lane's bucket alone —
+    // planner/executor divergence).
     let mut planner = decisions::DispatchPlanner::new(
         hidden,
         ffn,

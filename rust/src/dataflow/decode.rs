@@ -53,6 +53,7 @@ use super::residency::{
 };
 use super::shard::{even_bounds, shard_heads};
 use super::Scheme;
+use crate::arch::backend::PlanPricing;
 use crate::arch::Interconnect;
 use crate::gemm::{GemmShape, Tiling};
 use crate::models::ModelSpec;
@@ -62,7 +63,29 @@ use std::collections::{BTreeMap, HashMap};
 /// Memo of cover searches keyed by (shape, residency triple): within one
 /// trajectory the tiling is fixed and the cache-length-independent stages
 /// (projections, FFN, LM head) repeat identical searches every step.
-type PlanMemo = HashMap<(GemmShape, Residency, Residency, Residency), Plan>;
+/// Carries the backend pricing every cover is searched and costed under,
+/// so one trajectory never mixes backends.
+struct PlanMemo {
+    pricing: PlanPricing,
+    plans: HashMap<(GemmShape, Residency, Residency, Residency), Plan>,
+}
+
+impl PlanMemo {
+    fn new() -> PlanMemo {
+        PlanMemo::priced(PlanPricing::systolic())
+    }
+
+    fn priced(pricing: PlanPricing) -> PlanMemo {
+        PlanMemo { pricing, plans: HashMap::new() }
+    }
+
+    /// Words the backend streams for `plan` — the quantity every
+    /// split-vs-unsplit comparison below minimises.  Systolic pricing
+    /// charges every operand, reproducing `plan.ema().total()`.
+    fn cost(&self, plan: &Plan) -> u64 {
+        plan.ema_words_charged(self.pricing.charge)
+    }
+}
 
 fn memo_plan(
     memo: &mut PlanMemo,
@@ -72,8 +95,10 @@ fn memo_plan(
     weight: Residency,
     output: Residency,
 ) -> Plan {
-    memo.entry((*shape, input, weight, output))
-        .or_insert_with(|| Plan::tas_cached(shape, tiling, input, weight, output))
+    let pricing = memo.pricing;
+    memo.plans
+        .entry((*shape, input, weight, output))
+        .or_insert_with(|| Plan::tas_priced(shape, tiling, input, weight, output, &pricing))
         .clone()
 }
 
@@ -467,7 +492,7 @@ fn plan_decode_step_res(
         }
 
         let unsplit = memo_plan(memo, &spec.shape, tiling, in_res, Residency::None, out_res);
-        let unsplit_cost = unsplit.ema().total();
+        let unsplit_cost = memo.cost(&unsplit);
         let mut slices: Vec<SlicePlan> = Vec::new();
         let mut cache_hot_words = 0u64;
         let mut weight_hot_words = 0u64;
@@ -505,8 +530,8 @@ fn plan_decode_step_res(
             let cold = cold_shape.map(|cs| {
                 memo_plan(memo, &cs, tiling, in_res, Residency::None, out_res)
             });
-            let split_cost = hot.as_ref().map(|p| p.ema().total()).unwrap_or(0)
-                + cold.as_ref().map(|p| p.ema().total()).unwrap_or(0);
+            let split_cost = hot.as_ref().map(|p| memo.cost(p)).unwrap_or(0)
+                + cold.as_ref().map(|p| memo.cost(p)).unwrap_or(0);
             // Keep the split only when it wins: never worse than the
             // unsplit per-tile plan, hence never worse than per-GEMM TAS.
             if split_cost < unsplit_cost {
@@ -645,6 +670,39 @@ impl DecodePlan {
             tiling,
             sram_words,
             ResidencyPolicy::Paged,
+            &PlanPricing::systolic(),
+        )
+    }
+
+    /// [`DecodePlan::plan`] under a backend's pricing: every cover search
+    /// and every split-vs-unsplit comparison in the trajectory values
+    /// operands by what the backend streams, so a weight-pinning backend
+    /// stops parking cache rows and weight slices (their re-reads are
+    /// free) without any special case.  Systolic pricing reproduces
+    /// [`DecodePlan::plan`] exactly.
+    pub fn plan_priced(
+        model: &ModelSpec,
+        prefill_seq: u64,
+        steps: u64,
+        batch: u64,
+        tiling: &Tiling,
+        sram_words: u64,
+        pricing: &PlanPricing,
+    ) -> DecodePlan {
+        let dims = DecodeDims::of(model);
+        DecodePlan::plan_sliced(
+            &dims,
+            dims.heads,
+            dims.ffn,
+            dims.vocab,
+            prefill_seq,
+            steps,
+            batch,
+            0,
+            tiling,
+            sram_words,
+            ResidencyPolicy::Paged,
+            pricing,
         )
     }
 
@@ -672,6 +730,7 @@ impl DecodePlan {
             tiling,
             sram_words,
             policy,
+            &PlanPricing::systolic(),
         )
     }
 
@@ -762,6 +821,7 @@ impl DecodePlan {
         tiling: &Tiling,
         sram_words: u64,
         policy: ResidencyPolicy,
+        pricing: &PlanPricing,
     ) -> DecodePlan {
         dims.validate();
         assert!(prefill_seq > 0 && steps > 0 && batch > 0);
@@ -776,7 +836,7 @@ impl DecodePlan {
         // peak is taken over the whole trajectory, not a single probe.
         // One memo carries the cover searches of the cache-length-
         // independent stages across both passes.
-        let mut memo = PlanMemo::new();
+        let mut memo = PlanMemo::priced(*pricing);
         let step_stages = |cache_len: u64| {
             decode_step_stages_spec(
                 dims,
@@ -817,11 +877,12 @@ impl DecodePlan {
         let max_rows = prefill_seq + (steps - 1) * step_tokens;
 
         let prefill_tokens = batch * prefill_seq;
-        let prefill = LayerPlan::plan(
+        let prefill = LayerPlan::plan_priced(
             prefill_stages_sliced(dims, prefill_tokens, heads_slice, ffn_slice, vocab_slice),
             prefill_tokens,
             tiling,
             sram_words,
+            pricing,
         );
 
         // Pass 2 under one allocation: a step that retains nothing reuses
@@ -1130,6 +1191,7 @@ impl ShardedDecodePlan {
                 tiling,
                 sram_words_per_device,
                 ResidencyPolicy::Paged,
+                &PlanPricing::systolic(),
             ));
         }
         let bh = batch * dims.hidden;

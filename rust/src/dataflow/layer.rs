@@ -38,6 +38,7 @@ use super::analytic;
 use super::plan::Plan;
 use super::residency::{Candidate, Residency, ResidencyAllocator, ResidencyPolicy};
 use super::Scheme;
+use crate::arch::backend::PlanPricing;
 use crate::gemm::{GemmShape, Tiling};
 
 /// One GEMM stage of a transformer block, with its chaining relations.
@@ -111,7 +112,13 @@ pub struct LayerPlan {
 /// leading `hot_in` rows and the output tensor's leading `hot_out` rows
 /// are SRAM-resident; segments between the cut points plan independently
 /// with full/none residency per stream.
-fn segment_plans(shape: &GemmShape, tiling: &Tiling, hot_in: u64, hot_out: u64) -> Vec<Plan> {
+fn segment_plans(
+    shape: &GemmShape,
+    tiling: &Tiling,
+    hot_in: u64,
+    hot_out: u64,
+    pricing: &PlanPricing,
+) -> Vec<Plan> {
     let m = shape.m;
     let hi = hot_in.min(m);
     let ho = hot_out.min(m);
@@ -126,16 +133,27 @@ fn segment_plans(shape: &GemmShape, tiling: &Tiling, hot_in: u64, hot_out: u64) 
         let seg = GemmShape::new(cut - start, shape.n, shape.k);
         let in_res = if cut <= hi { Residency::Full } else { Residency::None };
         let out_res = if cut <= ho { Residency::Full } else { Residency::None };
-        plans.push(Plan::tas_with_residency(&seg, tiling, in_res, out_res));
+        plans.push(Plan::tas_priced(&seg, tiling, in_res, Residency::None, out_res, pricing));
         start = cut;
     }
     plans
 }
 
-fn segments_cost(shape: &GemmShape, tiling: &Tiling, hot_in: u64, hot_out: u64) -> u64 {
-    segment_plans(shape, tiling, hot_in, hot_out)
+/// Words the backend actually moves for the hot/cold slicing — the
+/// quantity the residency allocator maximises savings against, so a
+/// backend that never streams an operand contributes nothing for parking
+/// it (the knapsack prices operands via backend costs, not special-case
+/// flags).
+fn segments_cost(
+    shape: &GemmShape,
+    tiling: &Tiling,
+    hot_in: u64,
+    hot_out: u64,
+    pricing: &PlanPricing,
+) -> u64 {
+    segment_plans(shape, tiling, hot_in, hot_out, pricing)
         .iter()
-        .map(|p| p.ema().total())
+        .map(|p| p.ema_words_charged(pricing.charge))
         .sum()
 }
 
@@ -217,20 +235,69 @@ impl LayerPlan {
         placement: Vec<usize>,
         policy: ResidencyPolicy,
     ) -> LayerPlan {
+        LayerPlan::plan_placed_policy_priced(
+            stages,
+            tokens,
+            tiling,
+            sram_words,
+            placement,
+            policy,
+            &PlanPricing::systolic(),
+        )
+    }
+
+    /// [`LayerPlan::plan`] priced by a backend: per-stage covers come from
+    /// [`Plan::tas_priced`] and the residency knapsack values each edge by
+    /// the words the backend actually streams
+    /// ([`Plan::ema_words_charged`]).  Under a backend whose weights are
+    /// pinned (crossbar), every cover degenerates to activation-stationary
+    /// and weight-side residency saves nothing — by pricing, not by
+    /// special case.  Systolic pricing reproduces [`LayerPlan::plan`]
+    /// exactly.
+    pub fn plan_priced(
+        stages: Vec<StageSpec>,
+        tokens: u64,
+        tiling: &Tiling,
+        sram_words: u64,
+        pricing: &PlanPricing,
+    ) -> LayerPlan {
+        let placement = vec![0; stages.len()];
+        LayerPlan::plan_placed_policy_priced(
+            stages,
+            tokens,
+            tiling,
+            sram_words,
+            placement,
+            ResidencyPolicy::Paged,
+            pricing,
+        )
+    }
+
+    pub fn plan_placed_policy_priced(
+        stages: Vec<StageSpec>,
+        tokens: u64,
+        tiling: &Tiling,
+        sram_words: u64,
+        placement: Vec<usize>,
+        policy: ResidencyPolicy,
+        pricing: &PlanPricing,
+    ) -> LayerPlan {
         assert_eq!(placement.len(), stages.len(), "one device per stage");
         // Reserve space for two double-buffered operand tile pairs.
         let margin = 4 * (tiling.tm * tiling.tn + tiling.tn * tiling.tk);
         let budget = sram_words.saturating_sub(margin);
+        let pricing = *pricing;
         match policy {
             ResidencyPolicy::Off => {
-                let mut p =
-                    LayerPlan::plan_all_or_nothing(stages, tokens, tiling, 0, &placement);
+                let mut p = LayerPlan::plan_all_or_nothing(
+                    stages, tokens, tiling, 0, &placement, &pricing,
+                );
                 p.policy = ResidencyPolicy::Off;
                 p
             }
-            ResidencyPolicy::AllOrNothing => {
-                LayerPlan::plan_all_or_nothing(stages, tokens, tiling, budget, &placement)
-            }
+            ResidencyPolicy::AllOrNothing => LayerPlan::plan_all_or_nothing(
+                stages, tokens, tiling, budget, &placement, &pricing,
+            ),
             ResidencyPolicy::Paged => {
                 // Price both; fractional planning must never lose to the
                 // whole-tensor walk, so keep whichever moves fewer words.
@@ -242,11 +309,12 @@ impl LayerPlan {
                 let (aon, paged) = std::thread::scope(|scope| {
                     let aon = scope.spawn(move || {
                         LayerPlan::plan_all_or_nothing(
-                            stages_aon, tokens, tiling, budget, placement_ref,
+                            stages_aon, tokens, tiling, budget, placement_ref, &pricing,
                         )
                     });
-                    let paged =
-                        LayerPlan::plan_paged(stages, tokens, tiling, budget, placement_ref);
+                    let paged = LayerPlan::plan_paged(
+                        stages, tokens, tiling, budget, placement_ref, &pricing,
+                    );
                     (aon.join().expect("all-or-nothing planner panicked"), paged)
                 });
                 if paged.total_ema() <= aon.total_ema() {
@@ -265,6 +333,7 @@ impl LayerPlan {
         tiling: &Tiling,
         budget: u64,
         placement: &[usize],
+        pricing: &PlanPricing,
     ) -> LayerPlan {
         let fits = |words: u64| words > 0 && words <= budget;
         let mut planned: Vec<StagePlan> = Vec::with_capacity(stages.len());
@@ -301,8 +370,9 @@ impl LayerPlan {
             peak = peak.max(held);
             let input = if input_resident { Residency::Full } else { Residency::None };
             let output = if output_resident { Residency::Full } else { Residency::None };
-            let plan = Plan::tas_with_residency(&spec.shape, tiling, input, output);
-            let ema_words = plan.ema().total();
+            let plan =
+                Plan::tas_priced(&spec.shape, tiling, input, Residency::None, output, pricing);
+            let ema_words = plan.ema_words_charged(pricing.charge);
             let per_gemm_tas_words =
                 analytic::ema(Scheme::Tas, &spec.shape, tiling).total();
             planned.push(StagePlan {
@@ -391,9 +461,11 @@ impl LayerPlan {
         tiling: &Tiling,
         budget: u64,
         placement: &[usize],
+        pricing: &PlanPricing,
     ) -> LayerPlan {
         use std::cell::RefCell;
         use std::collections::HashMap;
+        let pricing = *pricing;
         let n = stages.len();
         let edges = LayerPlan::residency_edges(&stages, placement);
         let page_rows = tiling.tm.max(1);
@@ -443,7 +515,7 @@ impl LayerPlan {
                 let handles: Vec<_> = probes
                     .iter()
                     .map(|&(shape, hi, ho)| {
-                        scope.spawn(move || segments_cost(&shape, tiling, hi, ho))
+                        scope.spawn(move || segments_cost(&shape, tiling, hi, ho, &pricing))
                     })
                     .collect();
                 handles
@@ -458,7 +530,7 @@ impl LayerPlan {
             if let Some(&c) = memo.borrow().get(&key) {
                 return c;
             }
-            let c = segments_cost(shape, tiling, hot_in, hot_out);
+            let c = segments_cost(shape, tiling, hot_in, hot_out, &pricing);
             memo.borrow_mut().insert(key, c);
             c
         };
@@ -595,8 +667,9 @@ impl LayerPlan {
         for (idx, spec) in stages.iter().enumerate() {
             let m = spec.shape.m;
             let (hi, ho) = (hot_in[idx], hot_out[idx]);
-            let slices = segment_plans(&spec.shape, tiling, hi, ho);
-            let ema_words: u64 = slices.iter().map(|p| p.ema().total()).sum();
+            let slices = segment_plans(&spec.shape, tiling, hi, ho, &pricing);
+            let ema_words: u64 =
+                slices.iter().map(|p| p.ema_words_charged(pricing.charge)).sum();
             let per_gemm_tas_words =
                 analytic::ema(Scheme::Tas, &spec.shape, tiling).total();
             planned.push(StagePlan {
@@ -887,7 +960,8 @@ mod tests {
     fn segment_plans_cover_and_price_residency() {
         let shape = GemmShape::new(384, 768, 768);
         let t = Tiling::square(16);
-        let segs = segment_plans(&shape, &t, 336, 64);
+        let pricing = PlanPricing::systolic();
+        let segs = segment_plans(&shape, &t, 336, 64, &pricing);
         let rows: u64 = segs.iter().map(|p| p.shape.m).sum();
         assert_eq!(rows, 384);
         assert_eq!(segs.len(), 3); // [0,64) both, [64,336) input, [336,384) none
@@ -896,6 +970,60 @@ mod tests {
         assert!(!segs[2].input_residency.is_free());
         // resident rows only remove words
         let sliced: u64 = segs.iter().map(|p| p.ema().total()).sum();
-        assert!(sliced < segments_cost(&shape, &t, 0, 0));
+        assert!(sliced < segments_cost(&shape, &t, 0, 0, &pricing));
+    }
+
+    #[test]
+    fn crossbar_pricing_voids_weight_residency_value() {
+        // Under crossbar pricing the planner still plans (activation
+        // residency keeps saving input/output traffic), and every chosen
+        // cover is activation-stationary because streamed weights cost
+        // nothing — the sign rule prices them out, no special case.
+        let pricing = PlanPricing::crossbar();
+        let t = Tiling::square(16);
+        let plan = LayerPlan::plan_priced(bert_block(512), 512, &t, 1 << 20, &pricing);
+        for stage in &plan.stages {
+            for p in &stage.slices {
+                let (is_tiles, ws_tiles, _) = p.tile_mix();
+                assert_eq!(ws_tiles, 0, "crossbar cover chose a WS tile");
+                assert!(is_tiles > 0);
+            }
+        }
+        // Layer planning must still beat or match per-stage planning on
+        // the words the backend actually moves.
+        let base: u64 = plan
+            .stages
+            .iter()
+            .map(|s| {
+                s.spec.count
+                    * Plan::tas_priced(
+                        &s.spec.shape,
+                        &t,
+                        Residency::None,
+                        Residency::None,
+                        Residency::None,
+                        &pricing,
+                    )
+                    .ema_words_charged(pricing.charge)
+            })
+            .sum();
+        assert!(plan.total_ema() <= base);
+    }
+
+    #[test]
+    fn systolic_priced_layer_plan_matches_unpriced() {
+        let t = Tiling::square(16);
+        for tokens in [96u64, 512, 2048] {
+            let a = LayerPlan::plan(bert_block(tokens), tokens, &t, 1 << 20);
+            let b = LayerPlan::plan_priced(
+                bert_block(tokens),
+                tokens,
+                &t,
+                1 << 20,
+                &PlanPricing::systolic(),
+            );
+            assert_eq!(a.total_ema(), b.total_ema(), "tokens={tokens}");
+            assert_eq!(a.resident_peak_words, b.resident_peak_words);
+        }
     }
 }

@@ -56,8 +56,8 @@ pub use search::{
     StageDecision, StagesOutcome,
 };
 pub use shard::{
-    natural_axis, place_stages, shard_gemm, shard_heads, DeviceCompute, LinkTraffic, ShardAxis,
-    ShardSpec, ShardedPlan,
+    natural_axis, place_stages, shard_gemm, shard_gemm_priced, shard_heads, DeviceCompute,
+    LinkTraffic, ShardAxis, ShardSpec, ShardedPlan,
 };
 
 /// A stationary scheme. `Tas` resolves to `IsOs` or `WsOs` per shape via

@@ -42,6 +42,7 @@ use super::analytic::{self, EmaBreakdown};
 use super::residency::Residency;
 use super::schedule::{self, Step};
 use super::Scheme;
+use crate::arch::backend::PlanPricing;
 use crate::gemm::{tile_extent, GemmShape, Tiling};
 use crate::util::ceil_div;
 
@@ -238,6 +239,84 @@ impl Plan {
             wi,
             ww,
             false,
+        )
+    }
+
+    /// [`Plan::tas_link_weighted`] over a backend's base prices: each link
+    /// premium multiplies what the backend pays per word of that stream,
+    /// with **no lower clamp** — a stream the backend never issues (a
+    /// crossbar's programmed weights) stays free under any premium, so
+    /// sharding can never re-introduce weight traffic the hardware does
+    /// not have.  Restricted to strip covers, like the link-weighted
+    /// chooser.  Systolic pricing with weights ≥ 1 reproduces
+    /// [`Plan::tas_link_weighted`] exactly.
+    pub fn tas_link_priced(
+        shape: &GemmShape,
+        tiling: &Tiling,
+        input_weight: f64,
+        weight_weight: f64,
+        pricing: &PlanPricing,
+    ) -> Plan {
+        let wi = (pricing.wi as f64 * input_weight).round() as u64;
+        let ww = (pricing.ww as f64 * weight_weight).round() as u64;
+        Plan::plan_cover(
+            shape,
+            tiling,
+            Residency::None,
+            Residency::None,
+            Residency::None,
+            wi,
+            ww,
+            false,
+        )
+    }
+
+    /// [`Plan::tas_strips`] under a backend's pricing (no fixed-scheme
+    /// fallback, so the cover always partitions into strip ranges).
+    pub fn tas_strips_priced(shape: &GemmShape, tiling: &Tiling, pricing: &PlanPricing) -> Plan {
+        Plan::plan_cover(
+            shape,
+            tiling,
+            Residency::None,
+            Residency::None,
+            Residency::None,
+            pricing.wi,
+            pricing.ww,
+            false,
+        )
+    }
+
+    /// Tile-granular TAS priced by a backend: the chooser's stream weights
+    /// come straight from [`PlanPricing`] with **no lower clamp**, so a
+    /// backend that never streams an operand (a crossbar's programmed
+    /// weights, `ww == 0`) flips every cover toward re-reading that
+    /// operand — activation-stationary scheduling by pricing, not by
+    /// special case.  The fixed-scheme fallback (which spills psums
+    /// through external memory) is only considered when the backend
+    /// streams all three operands ([`PlanPricing::allows_fixed`]).
+    ///
+    /// Systolic pricing reproduces [`Plan::tas_cached`] exactly.
+    pub fn tas_priced(
+        shape: &GemmShape,
+        tiling: &Tiling,
+        input: Residency,
+        weight: Residency,
+        output: Residency,
+        pricing: &PlanPricing,
+    ) -> Plan {
+        debug_assert!(
+            !input.is_partial() && !weight.is_partial() && !output.is_partial(),
+            "partial residency must be sliced before planning"
+        );
+        Plan::plan_cover(
+            shape,
+            tiling,
+            input,
+            weight,
+            output,
+            pricing.wi,
+            pricing.ww,
+            pricing.allows_fixed(),
         )
     }
 
@@ -466,6 +545,17 @@ impl Plan {
                 }
             }
         }
+    }
+
+    /// External words this plan actually moves on a backend with the
+    /// given charge triple: the residency-gated [`Plan::ema`] breakdown
+    /// with each stream multiplied by its per-operand charge.  This is
+    /// the quantity the residency knapsack should value — on a crossbar
+    /// (`charge[1] == 0`) parking a weight slice saves nothing, so the
+    /// allocator spends its buffer on activations automatically.
+    pub fn ema_words_charged(&self, charge: [u64; 3]) -> u64 {
+        let e = self.ema();
+        charge[0] * e.input + charge[1] * e.weight + charge[2] * e.output
     }
 
     /// Output tiles under each orientation: `(input_stationary,
@@ -827,6 +917,80 @@ mod tests {
             wi * e.input + ww * e.weight + e.output
         };
         assert!(cost(&weighted, 1, 4) <= cost(&base, 1, 4));
+    }
+
+    #[test]
+    fn price_scale_matches_backend_pricing_units() {
+        // PlanPricing's wi/ww are expressed in the chooser's fixed-point
+        // units; the two constants must stay equal or backend pricing
+        // would silently rescale against the output stream's weight.
+        assert_eq!(Plan::WEIGHT_SCALE, crate::arch::backend::PRICE_SCALE);
+    }
+
+    #[test]
+    fn systolic_pricing_reproduces_tas_cached_exactly() {
+        let pricing = PlanPricing::systolic();
+        let combos = [
+            (Residency::None, Residency::None, Residency::None),
+            (Residency::Full, Residency::None, Residency::None),
+            (Residency::None, Residency::Full, Residency::None),
+            (Residency::None, Residency::None, Residency::Full),
+        ];
+        property("tas_priced(systolic) == tas_cached", 80, |rng: &mut Rng| {
+            let shape = GemmShape::new(
+                rng.gen_in(1, 250),
+                rng.gen_in(1, 250),
+                rng.gen_in(1, 250),
+            );
+            let tiling = Tiling::square(*rng.choose(&[8u64, 16]));
+            let (i, w, o) = *rng.choose(&combos);
+            assert_eq!(
+                Plan::tas_priced(&shape, &tiling, i, w, o, &pricing),
+                Plan::tas_cached(&shape, &tiling, i, w, o),
+                "{shape:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn crossbar_pricing_degenerates_to_activation_stationary() {
+        // ww == 0: weights are free to re-read, so the chooser must keep
+        // the *input* (activation) stationary everywhere, reach the
+        // minimum possible input traffic, and never pick the spilling
+        // fixed fallback.  No crossbar-specific branch exists in the
+        // planner — this is the sign rule under a zero weight price.
+        let pricing = PlanPricing::crossbar();
+        property("crossbar pricing => all-IS", 80, |rng: &mut Rng| {
+            let shape = GemmShape::new(
+                rng.gen_in(1, 250),
+                rng.gen_in(1, 250),
+                rng.gen_in(1, 250),
+            );
+            let tiling = Tiling::square(*rng.choose(&[8u64, 16]));
+            let plan = Plan::tas_priced(
+                &shape,
+                &tiling,
+                Residency::None,
+                Residency::None,
+                Residency::None,
+                &pricing,
+            );
+            let (gm, _, gk) = tiling.grid(&shape);
+            let (is, ws, other) = plan.tile_mix();
+            assert_eq!((is, ws, other), (gm * gk, 0, 0), "{shape:?}");
+            // charged words ignore the weight stream entirely
+            let e = plan.ema();
+            assert_eq!(
+                plan.ema_words_charged(pricing.charge),
+                e.input + e.output,
+                "{shape:?}"
+            );
+            // input traffic is the windowed-minimum: one read per input
+            // word per contraction window pass
+            let wk = tiling.window_tiles_k(&shape);
+            let nwin_k = tiling.grid(&shape).2.div_ceil(wk);
+            assert_eq!(e.input, nwin_k * shape.input_words(), "{shape:?}");
+        });
     }
 
     #[test]

@@ -23,7 +23,7 @@
 //!
 //! Candidates are priced on `std::thread::scope` workers (the crate
 //! builds bare — no rayon).  The database persists across coordinator
-//! restarts as a versioned line format (`# tas-plandb v1`, see
+//! restarts as a versioned line format (`# tas-plandb v2`, see
 //! [`PlanDb::to_text`]) and is loaded at boot before
 //! `DispatchPlanner::warm_up`, so a warmed fleet replica replans
 //! congruent requests without searching at all.
@@ -35,7 +35,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::layer::StageSpec;
 use super::plan::Plan;
-use super::shard::{natural_axis, shard_gemm, ShardAxis, ShardSpec, ShardedPlan};
+use super::shard::{natural_axis, shard_gemm_priced, ShardAxis, ShardSpec, ShardedPlan};
+use crate::arch::backend::{BackendKind, PlanPricing};
 use crate::arch::Interconnect;
 use crate::config::AcceleratorConfig;
 use crate::gemm::{GemmShape, Tiling};
@@ -50,8 +51,10 @@ pub const DB_TOP_K: usize = 4;
 /// Default spec-key capacity of a [`PlanDb`] (LRU-evicted beyond this).
 pub const PLAN_DB_CAP: usize = 256;
 
-/// First line of the persisted database file.
-pub const PLAN_DB_MAGIC: &str = "# tas-plandb v1";
+/// First line of the persisted database file.  v2 added the backend name
+/// to every spec line; v1 files are rejected (a warmed database priced
+/// for one hardware model must never serve another's plans).
+pub const PLAN_DB_MAGIC: &str = "# tas-plandb v2";
 
 /// Weight ratio that forces `tas_link_weighted` into a single-scheme
 /// cover.  Large enough to dominate any real word-count imbalance, small
@@ -153,10 +156,25 @@ pub struct GemmSpec {
     pub mp: u64,
     pub sram_class: u32,
     pub devices: u64,
+    /// Hardware model the memoized choices were priced for: a plan priced
+    /// on one backend never answers a lookup for another.
+    pub backend: BackendKind,
 }
 
 impl GemmSpec {
+    /// Canonical key under the systolic backend (the historical default).
     pub fn canonical(shape: GemmShape, tiling: Tiling, sram_words: u64, devices: u64) -> GemmSpec {
+        GemmSpec::canonical_on(shape, tiling, sram_words, devices, BackendKind::Systolic)
+    }
+
+    /// Canonical key for an explicit backend.
+    pub fn canonical_on(
+        shape: GemmShape,
+        tiling: Tiling,
+        sram_words: u64,
+        devices: u64,
+        backend: BackendKind,
+    ) -> GemmSpec {
         let (gm, gn, gk) = tiling.grid(&shape);
         GemmSpec {
             gm,
@@ -169,6 +187,7 @@ impl GemmSpec {
             mp: tiling.mp.unwrap_or(0),
             sram_class: sram_class(sram_words),
             devices,
+            backend,
         }
     }
 }
@@ -333,7 +352,7 @@ impl PlanDb {
         out.push('\n');
         for (spec, (_, entries)) in &self.map {
             out.push_str(&format!(
-                "spec {} {} {} {} {} {} {} {} {} {}\n",
+                "spec {} {} {} {} {} {} {} {} {} {} {}\n",
                 spec.gm,
                 spec.gn,
                 spec.gk,
@@ -344,6 +363,7 @@ impl PlanDb {
                 spec.mp,
                 spec.sram_class,
                 spec.devices,
+                spec.backend.name(),
             ));
             for e in entries {
                 out.push_str(&format!(
@@ -384,13 +404,16 @@ impl PlanDb {
             };
             match f[0] {
                 "spec" => {
-                    if f.len() != 11 {
+                    if f.len() != 12 {
                         return Err(bad(format!(
-                            "plan-db line {}: spec wants 10 fields, got {}",
+                            "plan-db line {}: spec wants 11 fields, got {}",
                             ln + 2,
                             f.len() - 1
                         )));
                     }
+                    let backend = BackendKind::from_name(f[11]).map_err(|e| {
+                        bad(format!("plan-db line {}: {e}", ln + 2))
+                    })?;
                     cur = Some(GemmSpec {
                         gm: n(f[1])?,
                         gn: n(f[2])?,
@@ -402,6 +425,7 @@ impl PlanDb {
                         mp: n(f[8])?,
                         sram_class: n(f[9])? as u32,
                         devices: n(f[10])?,
+                        backend,
                     });
                 }
                 "entry" => {
@@ -452,6 +476,11 @@ impl PlanDb {
 }
 
 /// Everything a per-GEMM search needs besides the shape.
+///
+/// `backend` selects the hardware model: covers are searched under its
+/// pricing ([`BackendKind::pricing`]), spec keys carry it (so one
+/// database can hold both targets without cross-talk), and `cfg` must be
+/// that backend's derived [`AcceleratorConfig`].
 #[derive(Clone, Copy, Debug)]
 pub struct SearchCtx<'a> {
     pub tiling: Tiling,
@@ -459,6 +488,7 @@ pub struct SearchCtx<'a> {
     pub devices: u64,
     pub cfg: &'a AcceleratorConfig,
     pub icx: &'a Interconnect,
+    pub backend: BackendKind,
 }
 
 /// Result of one per-GEMM lookup/search.
@@ -499,33 +529,39 @@ pub fn candidate_choices(devices: u64) -> Vec<SearchChoice> {
     out
 }
 
-/// Materialize one candidate as a sharded plan.
+/// Materialize one candidate as a sharded plan under a backend's pricing.
+/// A pure-stationary family pushes the *other* stream's backend price up
+/// by [`PURE_WEIGHT`]; a stream the backend never issues stays free, so
+/// e.g. `PureWs` on a crossbar degenerates to the activation-stationary
+/// cover instead of forcing traffic the hardware does not have.
 pub fn candidate_plan(
     shape: GemmShape,
     tiling: Tiling,
     choice: SearchChoice,
     devices: u64,
     remote_word_weight: f64,
+    pricing: &PlanPricing,
 ) -> ShardedPlan {
     match choice.family {
-        CoverFamily::Tas => shard_gemm(
+        CoverFamily::Tas => shard_gemm_priced(
             &shape,
             &tiling,
             ShardSpec::new(devices, choice.axis),
             remote_word_weight,
+            pricing,
         ),
         CoverFamily::LinkAware => {
             let mut spec = ShardSpec::new(devices, choice.axis);
             spec.link_aware = true;
-            shard_gemm(&shape, &tiling, spec, remote_word_weight)
+            shard_gemm_priced(&shape, &tiling, spec, remote_word_weight, pricing)
         }
         CoverFamily::PureIs => ShardedPlan::new(
-            Plan::tas_link_weighted(&shape, &tiling, PURE_WEIGHT, 1.0),
+            Plan::tas_link_priced(&shape, &tiling, PURE_WEIGHT, 1.0, pricing),
             devices,
             choice.axis,
         ),
         CoverFamily::PureWs => ShardedPlan::new(
-            Plan::tas_link_weighted(&shape, &tiling, 1.0, PURE_WEIGHT),
+            Plan::tas_link_priced(&shape, &tiling, 1.0, PURE_WEIGHT, pricing),
             devices,
             choice.axis,
         ),
@@ -539,7 +575,7 @@ impl SearchCtx<'_> {
 
     /// Canonical database key for a shape under this context.
     pub fn spec(&self, shape: GemmShape) -> GemmSpec {
-        GemmSpec::canonical(shape, self.tiling, self.sram_words, self.devices)
+        GemmSpec::canonical_on(shape, self.tiling, self.sram_words, self.devices, self.backend)
     }
 
     /// The greedy stack's choice: TAS cover, `ShardAxis::Auto`'s
@@ -548,14 +584,25 @@ impl SearchCtx<'_> {
         let axis = if self.devices <= 1 {
             ShardAxis::Rows
         } else {
-            natural_axis(&Plan::tas_strips(&shape, &self.tiling))
+            natural_axis(&Plan::tas_strips_priced(
+                &shape,
+                &self.tiling,
+                &self.backend.pricing(),
+            ))
         };
         SearchChoice { family: CoverFamily::Tas, axis }
     }
 
     /// Overlapped latency of one candidate, closed-form.
     pub fn price(&self, shape: GemmShape, choice: SearchChoice) -> u64 {
-        let sp = candidate_plan(shape, self.tiling, choice, self.devices, self.remote_word_weight());
+        let sp = candidate_plan(
+            shape,
+            self.tiling,
+            choice,
+            self.devices,
+            self.remote_word_weight(),
+            &self.backend.pricing(),
+        );
         sharded_closed_latency(&sp, self.cfg, self.icx).overlapped_cycles
     }
 
@@ -638,6 +685,7 @@ impl SearchCtx<'_> {
                                 *c,
                                 ctx.devices,
                                 ctx.remote_word_weight(),
+                                &ctx.backend.pricing(),
                             );
                             let link: u64 =
                                 shard_link_rounds(&sp, ctx.icx).iter().sum();
@@ -822,6 +870,11 @@ pub struct LaneSplitOutcome {
     pub searched_cycles: u64,
     /// Greedy floor: the even split with both lanes planned greedily.
     pub greedy_cycles: u64,
+    /// Searched total at every grid point (`grid_cycles[f - 1]` is the
+    /// total at prefill share `f/8`), so callers can see the whole
+    /// cycle landscape — the dispatch planner restricts its full-plan
+    /// EMA refinement to the cycle-optimal splits.
+    pub grid_cycles: [u64; 7],
 }
 
 /// Scan prefill SRAM shares f/8 for f in 1..=7, searching both lane
@@ -836,6 +889,7 @@ pub fn search_lane_split(
 ) -> LaneSplitOutcome {
     let mut best: Option<LaneSplitOutcome> = None;
     let mut greedy_even = 0u64;
+    let mut grid = [0u64; 7];
     for f in 1..=7u64 {
         let pctx = SearchCtx { sram_words: ctx.sram_words * f / 8, ..ctx };
         let dctx = SearchCtx { sram_words: ctx.sram_words * (8 - f) / 8, ..ctx };
@@ -845,6 +899,7 @@ pub fn search_lane_split(
             greedy_even = p.greedy_cycles.saturating_add(d.greedy_cycles);
         }
         let total = p.searched_cycles.saturating_add(d.searched_cycles);
+        grid[(f - 1) as usize] = total;
         let better = match &best {
             None => true,
             Some(b) => total < b.searched_cycles,
@@ -856,11 +911,13 @@ pub fn search_lane_split(
                 decode: d,
                 searched_cycles: total,
                 greedy_cycles: 0,
+                grid_cycles: [0; 7],
             });
         }
     }
     let mut out = best.expect("eighths scan is non-empty");
     out.greedy_cycles = greedy_even;
+    out.grid_cycles = grid;
     out
 }
 
@@ -906,7 +963,33 @@ mod tests {
             devices,
             cfg,
             icx,
+            backend: BackendKind::Systolic,
         }
+    }
+
+    #[test]
+    fn backends_never_share_spec_keys_or_entries() {
+        let cfg = AcceleratorConfig::default();
+        let icx = Interconnect::default();
+        let sys = ctx(&cfg, &icx, 2);
+        let xbar = SearchCtx { backend: BackendKind::Crossbar, ..sys };
+        let shape = GemmShape::new(512, 768, 768);
+        assert_ne!(sys.spec(shape), xbar.spec(shape));
+
+        // A database warmed on one backend misses for the other.
+        let mut db = PlanDb::default();
+        let first = sys.search(shape, &mut db);
+        assert!(first.searched);
+        let other = xbar.search(shape, &mut db);
+        assert!(other.searched, "crossbar lookup must not reuse systolic plans");
+        assert_eq!(db.stats().searches, 2);
+
+        // The round-tripped text carries both backend tags.
+        let text = db.to_text();
+        assert!(text.contains(" systolic\n"));
+        assert!(text.contains(" crossbar\n"));
+        let reloaded = PlanDb::from_text(&text, PLAN_DB_CAP).unwrap();
+        assert_eq!(reloaded.to_text(), text);
     }
 
     #[test]

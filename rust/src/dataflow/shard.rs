@@ -30,6 +30,8 @@
 use super::analytic::EmaBreakdown;
 use super::layer::StageSpec;
 use super::plan::{Plan, PlanBody, Strip, StripKind};
+use super::residency::Residency;
+use crate::arch::backend::PlanPricing;
 use crate::gemm::{tile_extent, GemmShape, Tiling};
 
 /// Partition axis of a sharded GEMM.
@@ -519,8 +521,24 @@ pub fn shard_gemm(
     spec: ShardSpec,
     remote_word_weight: f64,
 ) -> ShardedPlan {
+    shard_gemm_priced(shape, tiling, spec, remote_word_weight, &PlanPricing::systolic())
+}
+
+/// [`shard_gemm`] under a backend's pricing: the link premium multiplies
+/// the backend's per-word stream prices ([`Plan::tas_link_priced`]), so a
+/// backend that never streams an operand keeps it free across any device
+/// count — sharding cannot re-introduce traffic the hardware does not
+/// issue.  Systolic pricing reproduces [`shard_gemm`] exactly.
+pub fn shard_gemm_priced(
+    shape: &GemmShape,
+    tiling: &Tiling,
+    spec: ShardSpec,
+    remote_word_weight: f64,
+    pricing: &PlanPricing,
+) -> ShardedPlan {
     let devices = spec.devices.max(1);
-    let base = Plan::tas_per_tile(shape, tiling);
+    let base =
+        Plan::tas_priced(shape, tiling, Residency::None, Residency::None, Residency::None, pricing);
     if devices == 1 {
         return ShardedPlan::new(base, 1, spec.axis);
     }
@@ -528,7 +546,7 @@ pub fn shard_gemm(
     // strips, so rebuild as the best pure strip cover.
     let base = match base.body {
         PlanBody::Strips(_) => base,
-        PlanBody::Fixed(_) => Plan::tas_strips(shape, tiling),
+        PlanBody::Fixed(_) => Plan::tas_strips_priced(shape, tiling, pricing),
     };
     let axis = resolve_axis(spec.axis, &base);
     let lambda = remote_word_weight.max(0.0);
@@ -542,10 +560,10 @@ pub fn shard_gemm(
         let frac = (devices - 1) as f64 / devices as f64;
         match axis {
             ShardAxis::Rows => {
-                Plan::tas_link_weighted(shape, tiling, 1.0 + lambda * frac, 1.0)
+                Plan::tas_link_priced(shape, tiling, 1.0 + lambda * frac, 1.0, pricing)
             }
             ShardAxis::Cols => {
-                Plan::tas_link_weighted(shape, tiling, 1.0, 1.0 + lambda * frac)
+                Plan::tas_link_priced(shape, tiling, 1.0, 1.0 + lambda * frac, pricing)
             }
             _ => base,
         }

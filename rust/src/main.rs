@@ -5,6 +5,7 @@
 //!   simulate  EMA / energy / cycle report for one GEMM or model
 //!   plan      layer-level plan: per-tile TAS + SRAM residency per block
 //!   search    joint plan search (cover × axis × residency) with a plan DB
+//!   compare   one Plan IR, every hardware backend: EMA/cycles/energy table
 //!   shard     partition a model across devices + interconnect costs
 //!   decode    KV-cache-aware decode trajectory (prefill + T steps)
 //!   sweep     sequence-length sweep (crossover analysis)
@@ -47,6 +48,7 @@ fn main() {
         Some("simulate") => cmd_simulate(args),
         Some("plan") => cmd_plan(args),
         Some("search") => cmd_search(args),
+        Some("compare") => cmd_compare(args),
         Some("shard") => cmd_shard(args),
         Some("decode") => cmd_decode(args),
         Some("sweep") => cmd_sweep(args),
@@ -77,13 +79,17 @@ USAGE: tas <subcommand> [options]
   simulate  --model NAME --seq N [--tile N] [--json] | --m M --n N --k K
   plan      --model NAME [--seq N] [--tile N] [--sram WORDS] [--json]
   search    --model NAME [--seq N] [--devices D] [--tile N] [--sram WORDS]
-            [--db FILE] [--json]
+            [--backend systolic|crossbar] [--db FILE] [--json]
+  compare   [--model NAME] [--seq N] [--tile N] [--config FILE]
+            [--backend systolic|crossbar] [--json]
+            (same Plan IR priced on every hardware backend, across the zoo)
   shard     --model NAME [--seq N] [--devices D] [--axis auto|rows|cols|
             contraction] [--tile N] [--sram WORDS] [--link-aware]
             [--link-bw WORDS] [--config FILE] [--trace-out FILE] [--json]
   decode    --model NAME [--prefill N] [--steps T] [--batch B] [--draft D]
             [--tile N] [--sram WORDS] [--devices D] [--config FILE] [--json]
-  sweep     --model NAME [--tile N] [--seqs a,b,c] [--sram WORDS] [--json]
+  sweep     --model NAME [--tile N] [--seqs a,b,c] [--sram WORDS]
+            [--backend systolic|crossbar] [--json]
   trace     --scheme NAME --m M --n N --k K [--tile N] [--limit N] [--json]
   explain   --model NAME [--seq N] [--tile N] [--sram WORDS] [--json]
   figs      [--m M] [--n N] [--k K] [--tile N]   (Fig. 1/2 tile maps)
@@ -312,11 +318,16 @@ fn cmd_plan(mut args: Args) -> Result<()> {
 }
 
 fn cmd_search(mut args: Args) -> Result<()> {
+    use tas::arch::backend::{BackendKind, CrossbarConfig};
     use tas::dataflow::search::{search_stages, PlanDb, SearchCtx, PLAN_DB_CAP};
 
     let name = args.opt_or("model", "bert-base");
     let tiling = tiling_from(&mut args)?;
-    let cfg = AcceleratorConfig::default();
+    let backend = BackendKind::from_name(&args.opt_or("backend", "systolic"))?;
+    let cfg = match backend {
+        BackendKind::Systolic => AcceleratorConfig::default(),
+        BackendKind::Crossbar => CrossbarConfig::default().accel(),
+    };
     let sram = args.opt_u64("sram", cfg.sram_words)?;
     let devices = args.opt_u64("devices", 4)?;
     let db_path = args.opt("db").map(std::path::PathBuf::from);
@@ -339,6 +350,7 @@ fn cmd_search(mut args: Args) -> Result<()> {
         devices,
         cfg: &cfg,
         icx: &icx,
+        backend,
     };
     let stages = model.block_stages(seq);
     let outcome = search_stages(&stages, ctx, &mut db);
@@ -419,6 +431,132 @@ fn cmd_search(mut args: Args) -> Result<()> {
         "plan db: {} searches, {} hits, {} entries, {} candidates pruned",
         stats.searches, stats.db_hits, stats.entries, stats.pruned
     );
+    Ok(())
+}
+
+/// One Plan IR, two hardware targets.  For every zoo model (or one, with
+/// `--model`) the same tiled GEMMs are planned under each backend's
+/// operand pricing and costed through that backend's cycle/energy stack —
+/// the table is the paper's "adaptive stationary follows the hardware"
+/// claim made mechanical: the crossbar backend prices weight reads at
+/// zero, so every cover degenerates to activation-stationary and the
+/// entire weight traffic collapses into the one-time NVM program stream.
+fn cmd_compare(mut args: Args) -> Result<()> {
+    use tas::arch::backend::{AnyBackend, Backend, BackendKind};
+    use tas::dataflow::Residency;
+    use tas::sim::plan_cost_on;
+
+    let tiling = tiling_from(&mut args)?;
+    let json = args.flag("json");
+    let model = args.opt("model");
+    let seq_override = match args.opt("seq") {
+        Some(s) => Some(s.parse::<u64>().map_err(|_| anyhow::anyhow!("bad seq '{s}'"))?),
+        None => None,
+    };
+    let config = match args.opt("config") {
+        Some(path) => tas::config::Config::load(std::path::Path::new(&path))?,
+        None => tas::config::Config::default(),
+    };
+    // --backend restricts the table to one target (the CI matrix runs
+    // one backend per job); the default is every backend side by side.
+    let kinds: Vec<BackendKind> = match args.opt("backend") {
+        Some(name) => vec![BackendKind::from_name(&name)?],
+        None => BackendKind::ALL.to_vec(),
+    };
+    args.finish()?;
+
+    let models = match model {
+        Some(name) => vec![zoo::by_name(&name)?],
+        None => zoo::all_models(),
+    };
+
+    let mut t = Table::new(
+        "same Plan IR, per-backend pricing: EMA / cycles / energy per forward pass",
+        &[
+            "model", "seq", "backend", "EMA words", "wt stream", "wt program",
+            "cycles", "energy mJ", "program mJ", "IS tiles",
+        ],
+    );
+    let mut rows = Vec::new();
+    for m in &models {
+        let seq = seq_override.unwrap_or(m.default_seq);
+        let gemms = m.linear_gemms(seq);
+        for &kind in &kinds {
+            let backend = AnyBackend::build(
+                kind,
+                config.accelerator,
+                config.energy,
+                config.crossbar,
+            );
+            let pricing = kind.pricing();
+            let (mut ema_words, mut stream_w, mut cycles) = (0u64, 0u64, 0u64);
+            let (mut program_words, mut program_pj, mut energy_pj) = (0u64, 0.0f64, 0.0f64);
+            let (mut is_tiles, mut all_tiles) = (0u64, 0u64);
+            for g in &gemms {
+                let plan = Plan::tas_priced(
+                    &g.shape,
+                    &tiling,
+                    Residency::None,
+                    Residency::None,
+                    Residency::None,
+                    &pricing,
+                );
+                let cost = plan_cost_on(&plan, &backend);
+                let (i, w, o) = cost.ema.table2();
+                ema_words += g.count * (i + w + o);
+                stream_w += g.count * w;
+                cycles += g.count * cost.cycles.total_cycles;
+                energy_pj += g.count as f64 * cost.energy.total_pj();
+                // Weights are per-instance distinct (count = layer copies),
+                // so the one-time program stream scales with count too.
+                program_words += g.count * backend.program_words(g.shape.weight_words());
+                program_pj += g.count as f64 * backend.program_pj(g.shape.weight_words());
+                let (is, ws, other) = plan.tile_mix();
+                is_tiles += g.count * is;
+                all_tiles += g.count * (is + ws + other);
+            }
+            let is_frac = is_tiles as f64 / all_tiles.max(1) as f64;
+            if json {
+                rows.push(jobj(vec![
+                    ("model", jstr(m.name)),
+                    ("seq", jnum(seq)),
+                    ("backend", jstr(kind.name())),
+                    ("ema_words", jnum(ema_words)),
+                    ("weight_stream_words", jnum(stream_w)),
+                    ("program_words", jnum(program_words)),
+                    ("cycles", jnum(cycles)),
+                    ("energy_mj", jf64(energy_pj * 1e-9)),
+                    ("program_mj", jf64(program_pj * 1e-9)),
+                    ("is_tile_fraction", jf64(is_frac)),
+                ]));
+            } else {
+                t.row(vec![
+                    m.name.to_string(),
+                    seq.to_string(),
+                    kind.name().to_string(),
+                    sci(ema_words as f64),
+                    sci(stream_w as f64),
+                    sci(program_words as f64),
+                    sci(cycles as f64),
+                    format!("{:.3}", energy_pj * 1e-9),
+                    format!("{:.3}", program_pj * 1e-9),
+                    pct(is_frac),
+                ]);
+            }
+        }
+    }
+    if json {
+        Report::new("compare")
+            .field("tile", jnum(tiling.tm))
+            .field("rows", jarr(rows))
+            .print();
+    } else {
+        println!("{}", t.to_text());
+        println!(
+            "wt stream = per-pass streamed weight words (crossbar: 0 — weights \
+             live in NVM); wt program = one-time program words at deploy."
+        );
+    }
     Ok(())
 }
 
@@ -981,9 +1119,21 @@ fn cmd_decode(mut args: Args) -> Result<()> {
 }
 
 fn cmd_sweep(mut args: Args) -> Result<()> {
+    use tas::arch::backend::{BackendKind, CrossbarConfig};
+
     let name = args.opt_or("model", "wav2vec2-large");
     let tiling = tiling_from(&mut args)?;
-    let sram = args.opt_u64("sram", AcceleratorConfig::default().sram_words)?;
+    // --backend prices the sweep for a hardware target: the scheme totals
+    // and the layer plan charge only the operand streams that target
+    // actually moves (the crossbar's pinned weights stream for free, so
+    // the crossover disappears and every pick is IS-OS).
+    let backend = BackendKind::from_name(&args.opt_or("backend", "systolic"))?;
+    let pricing = backend.pricing();
+    let accel = match backend {
+        BackendKind::Systolic => AcceleratorConfig::default(),
+        BackendKind::Crossbar => CrossbarConfig::default().accel(),
+    };
+    let sram = args.opt_u64("sram", accel.sram_words)?;
     let json = args.flag("json");
     let seqs: Vec<u64> = match args.opt("seqs") {
         Some(s) => s
@@ -995,7 +1145,10 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
     args.finish()?;
     let model = zoo::by_name(&name)?;
     let mut t = Table::new(
-        &format!("{name}: EMA (words) per forward pass vs sequence length"),
+        &format!(
+            "{name}: EMA (words) per forward pass vs sequence length [{} backend]",
+            backend.name()
+        ),
         &["seq", "is-os", "ws-os", "tas", "layer plan", "R", "tas picks", "reduction vs naive"],
     );
     let mut rows = Vec::new();
@@ -1006,21 +1159,30 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
         let handles: Vec<_> = seqs
             .iter()
             .map(|&seq| {
-                let (model, tiling) = (&model, &tiling);
+                let (model, tiling, pricing) = (&model, &tiling, &pricing);
                 scope.spawn(move || {
                     let gemms = model.linear_gemms(seq);
                     let total = |scheme: Scheme| -> u64 {
                         gemms
                             .iter()
-                            .map(|g| g.count * ema(scheme, &g.shape, tiling).total())
+                            .map(|g| {
+                                let e = ema(scheme, &g.shape, tiling);
+                                let [ci, cw, co] = pricing.charge;
+                                g.count * (ci * e.input + cw * e.weight + co * e.output)
+                            })
                             .sum()
                     };
                     // Layer-level plan at this length: its EMA and the
                     // resident-row count R (`tas decode --json` reports
                     // the decode-side R; this is the prefill-side twin
                     // the sweep used to omit).
-                    let plan =
-                        LayerPlan::plan(model.block_stages(seq), seq, tiling, sram);
+                    let plan = LayerPlan::plan_priced(
+                        model.block_stages(seq),
+                        seq,
+                        tiling,
+                        sram,
+                        pricing,
+                    );
                     (
                         seq,
                         total(Scheme::IsOs),
@@ -1040,7 +1202,13 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
     for (seq, is_os, ws_os, tas, naive, plan) in sweep {
         let resident_rows = plan.resident_rows();
         // which way did the rule go for the hidden-sized projections?
-        let pick = if seq < model.hidden { "IS-OS" } else { "WS-OS" };
+        // (free weight streams never justify pinning a weight, so the
+        // crossover only exists when weights are charged)
+        let pick = if pricing.ww == 0 || seq < model.hidden {
+            "IS-OS"
+        } else {
+            "WS-OS"
+        };
         if json {
             rows.push(jobj(vec![
                 ("seq", jnum(seq)),
@@ -1068,6 +1236,7 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
     if json {
         Report::new("sweep")
             .field("model", jstr(model.name))
+            .field("backend", jstr(backend.name()))
             .field("sram_words", jnum(sram))
             .field("rows", jarr(rows))
             .print();

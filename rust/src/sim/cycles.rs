@@ -84,15 +84,25 @@ pub fn cycles_from_replay(sim: &SimEma, shape: &GemmShape, cfg: &AcceleratorConf
 /// only its slice of the grid, so its MACs are a partial sum rather than
 /// `shape.macs()` ([`crate::sim::shard`]).
 pub fn cycles_from_parts(macs: u64, sim: &SimEma, cfg: &AcceleratorConfig) -> CycleEstimate {
-    let pe = cfg.pe_array();
+    cycles_from_parts_on(macs, sim, &crate::arch::backend::BackendParams::systolic(cfg))
+}
+
+/// The same formula over any backend's parameter block (fill latency, MAC
+/// throughput, bus bandwidth, turnaround) — the systolic block reproduces
+/// [`cycles_from_parts`] exactly.
+pub fn cycles_from_parts_on(
+    macs: u64,
+    sim: &SimEma,
+    params: &crate::arch::backend::BackendParams,
+) -> CycleEstimate {
     // Compute: each of the `steps` tile passes is a tile MAC burst; model
-    // the whole workload as total MACs at array throughput + per-pass fill.
-    let fill = pe.fill_latency * sim.steps;
-    let mac_cycles = macs.div_ceil(pe.macs_per_cycle());
+    // the whole workload as total MACs at fabric throughput + per-pass fill.
+    let fill = params.fill_latency * sim.steps;
+    let mac_cycles = macs.div_ceil(params.macs_per_cycle);
     let compute_cycles = mac_cycles + fill;
 
-    let dram_stream_cycles = sim.stats.total_words().div_ceil(cfg.dram_bandwidth);
-    let turnaround_cycles = sim.stats.direction_switches * cfg.dram_turnaround;
+    let dram_stream_cycles = sim.stats.total_words().div_ceil(params.bandwidth);
+    let turnaround_cycles = sim.stats.direction_switches * params.turnaround;
 
     CycleEstimate {
         compute_cycles,

@@ -54,38 +54,59 @@ pub(crate) fn charge_step(
     weight: Residency,
     output: Residency,
 ) {
+    charge_step_scaled(dram, s, mi, nr, kj, input, weight, output, [1, 1, 1])
+}
+
+/// [`charge_step`] with a backend charge triple `[input, weight, output]`
+/// multiplying each stream's words: an operand the backend never streams
+/// (a crossbar's programmed weights) charges zero words and therefore no
+/// direction switches ([`Dram`] ignores zero-word transfers).  Psum spill
+/// and re-fetch ride the output charge — they are output-direction
+/// traffic.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn charge_step_scaled(
+    dram: &mut Dram,
+    s: &Step,
+    mi: u64,
+    nr: u64,
+    kj: u64,
+    input: Residency,
+    weight: Residency,
+    output: Residency,
+    charge: [u64; 3],
+) {
     let input_resident = input.is_free();
     let weight_resident = weight.is_free();
     let output_resident = output.is_free();
     if s.scalar_traffic {
         // Naive: per-MAC operand fetches and psum writes (3·MNK).
         let macs = mi * nr * kj;
-        dram.transfer(Stream::Input, macs);
-        dram.transfer(Stream::Weight, macs);
+        dram.transfer(Stream::Input, charge[0] * macs);
+        dram.transfer(Stream::Weight, charge[1] * macs);
         if s.store_out {
             // Final contraction step: its per-MAC writes complete the
             // output; account the last tile-depth as Output stream.
-            dram.psum_write(macs.saturating_sub(mi * kj));
-            dram.transfer(Stream::Output, mi * kj);
+            dram.psum_write(charge[2] * macs.saturating_sub(mi * kj));
+            dram.transfer(Stream::Output, charge[2] * mi * kj);
         } else {
-            dram.psum_write(macs);
+            dram.psum_write(charge[2] * macs);
         }
         return;
     }
     if s.load_input && !input_resident {
-        dram.transfer(Stream::Input, mi * nr);
+        dram.transfer(Stream::Input, charge[0] * mi * nr);
     }
     if s.load_weight && !weight_resident {
-        dram.transfer(Stream::Weight, nr * kj);
+        dram.transfer(Stream::Weight, charge[1] * nr * kj);
     }
     if s.psum_fetch {
-        dram.psum_read(mi * kj);
+        dram.psum_read(charge[2] * mi * kj);
     }
     if s.psum_spill {
-        dram.psum_write(mi * kj);
+        dram.psum_write(charge[2] * mi * kj);
     }
     if s.store_out && !output_resident {
-        dram.transfer(Stream::Output, mi * kj);
+        dram.transfer(Stream::Output, charge[2] * mi * kj);
     }
 }
 

@@ -69,6 +69,7 @@ pub use shard::{
     sharded_fused_cost, sharded_replayed_cost, DeviceCost, ShardCost, ShardLatency,
 };
 pub use strip::{
-    attribute_strips, plan_cost, plan_ema_pipeline, plan_sim_ema, replayed_cost, StripCost,
-    StripShare, StripTiming,
+    attribute_strips, attribute_strips_on, plan_cost, plan_cost_on, plan_ema_pipeline,
+    plan_ema_pipeline_on, plan_sim_ema, plan_sim_ema_on, replayed_cost, replayed_cost_on,
+    StripCost, StripShare, StripTiming,
 };

@@ -29,6 +29,7 @@
 //! `total_cycles == fills·fill_latency + compute + stalls` is asserted at
 //! both aggregation sites (`sim::decode`, `sim::shard`).
 
+use crate::arch::backend::BackendParams;
 use crate::arch::dram::DramDir;
 use crate::arch::PeArray;
 use crate::config::AcceleratorConfig;
@@ -75,9 +76,7 @@ impl PipelineStats {
 /// Pipeline backend for the fused replay: two-stage (DMA ‖ PE) overlap
 /// with read↔write turnaround, resolved per step.
 pub struct PipelineSink {
-    pe: PeArray,
-    bw: u64,
-    turn: u64,
+    params: BackendParams,
     last_dir: Option<DramDir>,
     /// Compute time of the previous step, which the current step's
     /// transfer overlaps against (primed with the pipeline prologue).
@@ -87,12 +86,15 @@ pub struct PipelineSink {
 
 impl PipelineSink {
     pub fn new(cfg: &AcceleratorConfig) -> PipelineSink {
-        let pe = cfg.pe_array();
+        PipelineSink::with_params(BackendParams::systolic(cfg))
+    }
+
+    /// A pipeline sink for any backend's parameter block — the systolic
+    /// block reproduces [`PipelineSink::new`] exactly.
+    pub fn with_params(params: BackendParams) -> PipelineSink {
         PipelineSink {
-            prev_compute: pe.fill_latency,
-            pe,
-            bw: cfg.dram_bandwidth,
-            turn: cfg.dram_turnaround,
+            prev_compute: params.fill_latency,
+            params,
             last_dir: None,
             stats: PipelineStats::default(),
         }
@@ -101,7 +103,7 @@ impl PipelineSink {
     pub fn finish(self) -> PipelineStats {
         let mut stats = self.stats;
         stats.fills = 1;
-        stats.total_cycles = self.pe.fill_latency + stats.compute_cycles + stats.stall_cycles;
+        stats.total_cycles = self.params.fill_latency + stats.compute_cycles + stats.stall_cycles;
         stats
     }
 }
@@ -110,8 +112,12 @@ impl CostSink for PipelineSink {
     fn on_step(&mut self, ctx: &StepCtx) {
         let s = &ctx.step;
         let (mi, nr, kj) = (ctx.mi, ctx.nr, ctx.kj);
+        let charge = self.params.charge;
 
         // --- transfer phase for this step ---------------------------------
+        // Words are residency-gated × backend-charged; a zero-word stream
+        // touches neither the bus nor the direction chain, exactly like
+        // the closed-form walker and the DRAM model.
         let mut read_words = 0u64;
         let mut write_words = 0u64;
         let mut switches = 0u64;
@@ -124,29 +130,38 @@ impl CostSink for PipelineSink {
         };
         if s.scalar_traffic {
             let macs = mi * nr * kj;
-            read_words += 2 * macs;
-            dir(DramDir::Read, &mut switches);
-            write_words += macs;
-            dir(DramDir::Write, &mut switches);
+            let r = (charge[0] + charge[1]) * macs;
+            if r > 0 {
+                read_words += r;
+                dir(DramDir::Read, &mut switches);
+            }
+            let w = charge[2] * macs;
+            if w > 0 {
+                write_words += w;
+                dir(DramDir::Write, &mut switches);
+            }
         } else {
-            if s.load_input && !ctx.plan.input_residency.is_free() {
-                read_words += mi * nr;
+            if s.load_input && !ctx.plan.input_residency.is_free() && charge[0] > 0 {
+                read_words += charge[0] * mi * nr;
                 dir(DramDir::Read, &mut switches);
             }
-            if s.load_weight && !ctx.plan.weight_residency.is_free() {
-                read_words += nr * kj;
+            if s.load_weight && !ctx.plan.weight_residency.is_free() && charge[1] > 0 {
+                read_words += charge[1] * nr * kj;
                 dir(DramDir::Read, &mut switches);
             }
-            if s.psum_fetch {
-                read_words += mi * kj;
+            if s.psum_fetch && charge[2] > 0 {
+                read_words += charge[2] * mi * kj;
                 dir(DramDir::Read, &mut switches);
             }
-            if s.psum_spill || (s.store_out && !ctx.plan.output_residency.is_free()) {
-                write_words += mi * kj;
+            if (s.psum_spill || (s.store_out && !ctx.plan.output_residency.is_free()))
+                && charge[2] > 0
+            {
+                write_words += charge[2] * mi * kj;
                 dir(DramDir::Write, &mut switches);
             }
         }
-        let xfer = (read_words + write_words).div_ceil(self.bw) + switches * self.turn;
+        let xfer = (read_words + write_words).div_ceil(self.params.bandwidth)
+            + switches * self.params.turnaround;
 
         // --- overlap against the previous step's compute -------------------
         let stall = xfer.saturating_sub(self.prev_compute);
@@ -155,7 +170,7 @@ impl CostSink for PipelineSink {
             self.stats.stalled_steps += 1;
         }
 
-        let compute = self.pe.tile_cycles(mi * nr * kj) - self.pe.fill_latency;
+        let compute = self.params.tile_cycles(mi * nr * kj) - self.params.fill_latency;
         self.stats.compute_cycles += compute;
         self.stats.steps += 1;
         self.prev_compute = compute.max(1);

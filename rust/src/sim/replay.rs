@@ -28,7 +28,7 @@ use crate::energy::{EnergyCost, EnergyModel};
 use crate::gemm::tile_extent;
 use crate::sim::cycles::{cycles_from_replay, CycleEstimate};
 use crate::sim::dram_trace::charge_timing_step;
-use crate::sim::ema::{charge_step, SimEma};
+use crate::sim::ema::{charge_step_scaled, SimEma};
 use crate::sim::pipeline::{PipelineSink, PipelineStats};
 
 /// One schedule step with its resolved tile extents, as seen by sinks.
@@ -67,11 +67,18 @@ pub fn replay(plan: &Plan, sinks: &mut [&mut dyn CostSink]) {
 pub struct EmaSink {
     dram: Dram,
     steps: u64,
+    charge: [u64; 3],
 }
 
 impl EmaSink {
     pub fn new(dram: Dram) -> EmaSink {
-        EmaSink { dram, steps: 0 }
+        EmaSink::with_charge(dram, [1, 1, 1])
+    }
+
+    /// An EMA sink with a backend charge triple (see
+    /// [`crate::arch::backend::BackendParams::charge`]).
+    pub fn with_charge(dram: Dram, charge: [u64; 3]) -> EmaSink {
+        EmaSink { dram, steps: 0, charge }
     }
 
     pub fn finish(self) -> SimEma {
@@ -82,7 +89,7 @@ impl EmaSink {
 impl CostSink for EmaSink {
     fn on_step(&mut self, ctx: &StepCtx) {
         self.steps += 1;
-        charge_step(
+        charge_step_scaled(
             &mut self.dram,
             &ctx.step,
             ctx.mi,
@@ -91,6 +98,7 @@ impl CostSink for EmaSink {
             ctx.plan.input_residency,
             ctx.plan.weight_residency,
             ctx.plan.output_residency,
+            self.charge,
         );
     }
 }
@@ -99,12 +107,21 @@ impl CostSink for EmaSink {
 pub struct TimingSink {
     dram: DramTiming,
     layout: MatrixLayout,
+    charge: [u64; 3],
 }
 
 impl TimingSink {
     pub fn new(plan: &Plan, cfg: DramTimingConfig) -> TimingSink {
+        TimingSink::with_charge(plan, cfg, [1, 1, 1])
+    }
+
+    /// A timing sink with a backend charge triple.  The address-walking
+    /// machine has no notion of fractional words, so the charge acts as a
+    /// 0/1 gate: a zero-charged operand issues no transactions at all
+    /// (crossbar weights live in NVM, not behind this bus).
+    pub fn with_charge(plan: &Plan, cfg: DramTimingConfig, charge: [u64; 3]) -> TimingSink {
         let layout = MatrixLayout::for_gemm(&plan.shape, &cfg);
-        TimingSink { dram: DramTiming::new(cfg), layout }
+        TimingSink { dram: DramTiming::new(cfg), layout, charge }
     }
 
     pub fn finish(self) -> DramTimingStats {
@@ -114,6 +131,13 @@ impl TimingSink {
 
 impl CostSink for TimingSink {
     fn on_step(&mut self, ctx: &StepCtx) {
+        let gate = |c: u64, r: crate::dataflow::Residency| {
+            if c == 0 {
+                crate::dataflow::Residency::Full
+            } else {
+                r
+            }
+        };
         charge_timing_step(
             &mut self.dram,
             &self.layout,
@@ -122,9 +146,9 @@ impl CostSink for TimingSink {
             ctx.mi,
             ctx.nr,
             ctx.kj,
-            ctx.plan.input_residency,
-            ctx.plan.weight_residency,
-            ctx.plan.output_residency,
+            gate(self.charge[0], ctx.plan.input_residency),
+            gate(self.charge[1], ctx.plan.weight_residency),
+            gate(self.charge[2], ctx.plan.output_residency),
         );
     }
 }

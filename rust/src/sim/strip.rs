@@ -30,14 +30,14 @@
 //! closed half (words, transactions, direction switches — all exact) and
 //! leaves row-hit cycle counts to the replay-only reports.
 
-use crate::arch::dram::{DramDir, DramStats};
+use crate::arch::backend::{Backend, BackendParams};
+use crate::arch::dram::{Dram, DramDir, DramStats};
 use crate::arch::dram_timing::DramTimingConfig;
-use crate::arch::PeArray;
 use crate::config::AcceleratorConfig;
 use crate::dataflow::{Plan, PlanBody, Strip, StripKind};
 use crate::energy::{EnergyCost, EnergyModel};
 use crate::gemm::tile_extent;
-use crate::sim::cycles::{cycles_from_parts, cycles_from_replay, CycleEstimate};
+use crate::sim::cycles::{cycles_from_parts_on, CycleEstimate};
 use crate::sim::ema::SimEma;
 use crate::sim::pipeline::{PipelineSink, PipelineStats};
 use crate::sim::replay::{replay, CostSink, EmaSink, TimingSink};
@@ -162,21 +162,22 @@ pub(crate) struct StripSummary {
 ///
 /// [`fold_strip`]: StripWalker::fold_strip
 pub(crate) struct StripWalker {
-    pe: PeArray,
-    bw: u64,
-    turn: u64,
+    params: BackendParams,
     state: WalkState,
     totals: Totals,
 }
 
 impl StripWalker {
     pub(crate) fn new(cfg: &AcceleratorConfig) -> StripWalker {
-        let pe = cfg.pe_array();
+        StripWalker::with_params(BackendParams::systolic(cfg))
+    }
+
+    /// A walker for any backend's parameter block — the systolic block
+    /// reproduces [`StripWalker::new`] exactly.
+    pub(crate) fn with_params(params: BackendParams) -> StripWalker {
         StripWalker {
-            state: WalkState { last_dir: None, prev_compute: pe.fill_latency },
-            pe,
-            bw: cfg.dram_bandwidth,
-            turn: cfg.dram_turnaround,
+            state: WalkState { last_dir: None, prev_compute: params.fill_latency },
+            params,
             totals: Totals::default(),
         }
     }
@@ -199,9 +200,10 @@ impl StripWalker {
                 last = Some(d);
             }
         }
-        let xfer = (x.input + x.weight + x.write).div_ceil(self.bw) + switches * self.turn;
+        let xfer = (x.input + x.weight + x.write).div_ceil(self.params.bandwidth)
+            + switches * self.params.turnaround;
         let stall = xfer.saturating_sub(state.prev_compute);
-        let compute = self.pe.tile_cycles(x.macs) - self.pe.fill_latency;
+        let compute = self.params.tile_cycles(x.macs) - self.params.fill_latency;
         (
             switches,
             stall,
@@ -250,9 +252,12 @@ impl StripWalker {
     /// ragged extent.  `store` marks the final round (`r + 1 == gn`).
     fn fold_round(&mut self, plan: &Plan, strip: &Strip, nr: u64, store: bool) {
         let (shape, t) = (plan.shape, plan.tiling);
-        let gi = u64::from(!plan.input_residency.is_free());
-        let gw = u64::from(!plan.weight_residency.is_free());
-        let go = u64::from(!plan.output_residency.is_free());
+        // Residency gating × the backend's per-operand charge: a parked
+        // operand streams zero words, and so does an operand the backend
+        // never streams (crossbar weights).
+        let gi = self.params.charge[0] * u64::from(!plan.input_residency.is_free());
+        let gw = self.params.charge[1] * u64::from(!plan.weight_residency.is_free());
+        let go = self.params.charge[2] * u64::from(!plan.output_residency.is_free());
         let out = |mi: u64, kj: u64| if store { go * mi * kj } else { 0 };
         match strip.kind {
             StripKind::InputStationary => {
@@ -346,7 +351,7 @@ impl StripWalker {
             stall_cycles: self.totals.stall_cycles,
             stalled_steps: self.totals.stalled_steps,
             fills: 1,
-            total_cycles: self.pe.fill_latency
+            total_cycles: self.params.fill_latency
                 + self.totals.compute_cycles
                 + self.totals.stall_cycles,
         };
@@ -405,6 +410,11 @@ impl StripShare {
 /// Fixed-scheme bodies have no strip structure and return an empty vec;
 /// callers fall back to [`crate::dataflow::Plan::ema`] for those.
 pub fn attribute_strips(plan: &Plan, cfg: &AcceleratorConfig) -> Vec<StripShare> {
+    attribute_strips_on(plan, BackendParams::systolic(cfg))
+}
+
+/// [`attribute_strips`] for any backend's parameter block.
+pub fn attribute_strips_on(plan: &Plan, params: BackendParams) -> Vec<StripShare> {
     let strips = match &plan.body {
         PlanBody::Strips(s) => s,
         PlanBody::Fixed(_) => return Vec::new(),
@@ -413,7 +423,7 @@ pub fn attribute_strips(plan: &Plan, cfg: &AcceleratorConfig) -> Vec<StripShare>
     strips
         .iter()
         .map(|strip| {
-            let mut chosen = StripWalker::new(cfg);
+            let mut chosen = StripWalker::with_params(params);
             chosen.fold_strip(plan, strip, 0, gn);
             let (i, w, o) = chosen.finish().ema.table2();
 
@@ -424,7 +434,7 @@ pub fn attribute_strips(plan: &Plan, cfg: &AcceleratorConfig) -> Vec<StripShare>
                 StripKind::InputStationary => StripKind::WeightStationary,
                 StripKind::WeightStationary => StripKind::InputStationary,
             };
-            let mut flipped = StripWalker::new(cfg);
+            let mut flipped = StripWalker::with_params(params);
             for ti in strip.i0..strip.i1 {
                 for tj in strip.j0..strip.j1 {
                     let tile = Strip {
@@ -456,16 +466,22 @@ pub fn attribute_strips(plan: &Plan, cfg: &AcceleratorConfig) -> Vec<StripShare>
 /// bodies fall back to the replay sinks, so the pair is exact for every
 /// plan body.
 pub fn plan_ema_pipeline(plan: &Plan, cfg: &AcceleratorConfig) -> (SimEma, PipelineStats) {
+    plan_ema_pipeline_on(plan, BackendParams::systolic(cfg))
+}
+
+/// [`plan_ema_pipeline`] for any backend's parameter block.
+pub fn plan_ema_pipeline_on(plan: &Plan, params: BackendParams) -> (SimEma, PipelineStats) {
     match &plan.body {
         PlanBody::Strips(strips) => {
-            let mut walker = StripWalker::new(cfg);
+            let mut walker = StripWalker::with_params(params);
             walker.fold_plan(plan, strips);
             let s = walker.finish();
             (s.ema, s.pipeline)
         }
         PlanBody::Fixed(_) => {
-            let mut ema_sink = EmaSink::new(cfg.dram());
-            let mut pipeline_sink = PipelineSink::new(cfg);
+            let mut ema_sink =
+                EmaSink::with_charge(Dram::new(params.bandwidth, params.turnaround), params.charge);
+            let mut pipeline_sink = PipelineSink::with_params(params);
             {
                 let sinks: &mut [&mut dyn CostSink] = &mut [&mut ema_sink, &mut pipeline_sink];
                 replay(plan, sinks);
@@ -477,14 +493,20 @@ pub fn plan_ema_pipeline(plan: &Plan, cfg: &AcceleratorConfig) -> (SimEma, Pipel
 
 /// Closed-form [`SimEma`] for one plan (replay fallback on fixed bodies).
 pub fn plan_sim_ema(plan: &Plan, cfg: &AcceleratorConfig) -> SimEma {
+    plan_sim_ema_on(plan, BackendParams::systolic(cfg))
+}
+
+/// [`plan_sim_ema`] for any backend's parameter block.
+pub fn plan_sim_ema_on(plan: &Plan, params: BackendParams) -> SimEma {
     match &plan.body {
         PlanBody::Strips(strips) => {
-            let mut walker = StripWalker::new(cfg);
+            let mut walker = StripWalker::with_params(params);
             walker.fold_plan(plan, strips);
             walker.finish().ema
         }
         PlanBody::Fixed(_) => {
-            let mut ema_sink = EmaSink::new(cfg.dram());
+            let mut ema_sink =
+                EmaSink::with_charge(Dram::new(params.bandwidth, params.turnaround), params.charge);
             {
                 let sinks: &mut [&mut dyn CostSink] = &mut [&mut ema_sink];
                 replay(plan, sinks);
@@ -500,13 +522,28 @@ pub fn plan_sim_ema(plan: &Plan, cfg: &AcceleratorConfig) -> SimEma {
 /// fields (EMA, cycles, energy, pipeline; timing words/transactions/
 /// switches) — `rust/tests/strip_closed_form.rs` pins it.
 pub fn plan_cost(plan: &Plan, cfg: &AcceleratorConfig, energy: &EnergyModel) -> StripCost {
+    plan_cost_with(plan, BackendParams::systolic(cfg), energy, DramTimingConfig::default())
+}
+
+/// [`plan_cost`] on any backend: walker parameters, energy table and
+/// timing hook all come from the trait.
+pub fn plan_cost_on(plan: &Plan, backend: &dyn Backend) -> StripCost {
+    plan_cost_with(plan, backend.params(), &backend.energy(), backend.timing_config())
+}
+
+fn plan_cost_with(
+    plan: &Plan,
+    params: BackendParams,
+    energy: &EnergyModel,
+    timing_cfg: DramTimingConfig,
+) -> StripCost {
     match &plan.body {
         PlanBody::Strips(strips) => {
-            let mut walker = StripWalker::new(cfg);
+            let mut walker = StripWalker::with_params(params);
             walker.fold_plan(plan, strips);
             let s = walker.finish();
             debug_assert_eq!(s.macs, plan.shape.macs(), "strip cover must tile the grid");
-            let cycles = cycles_from_parts(plan.shape.macs(), &s.ema, cfg);
+            let cycles = cycles_from_parts_on(plan.shape.macs(), &s.ema, &params);
             let (i, w, o) = s.ema.table2();
             StripCost {
                 cycles,
@@ -520,7 +557,7 @@ pub fn plan_cost(plan: &Plan, cfg: &AcceleratorConfig, energy: &EnergyModel) -> 
                 ema: s.ema,
             }
         }
-        PlanBody::Fixed(_) => replayed_cost(plan, cfg, energy),
+        PlanBody::Fixed(_) => replayed_cost_with(plan, params, energy, timing_cfg),
     }
 }
 
@@ -528,9 +565,25 @@ pub fn plan_cost(plan: &Plan, cfg: &AcceleratorConfig, energy: &EnergyModel) -> 
 /// step by step.  Public so the property suites and the throughput bench
 /// compare against exactly this path.
 pub fn replayed_cost(plan: &Plan, cfg: &AcceleratorConfig, energy: &EnergyModel) -> StripCost {
-    let mut ema_sink = EmaSink::new(cfg.dram());
-    let mut timing_sink = TimingSink::new(plan, DramTimingConfig::default());
-    let mut pipeline_sink = PipelineSink::new(cfg);
+    replayed_cost_with(plan, BackendParams::systolic(cfg), energy, DramTimingConfig::default())
+}
+
+/// [`replayed_cost`] on any backend — the oracle [`plan_cost_on`] must
+/// match word-for-word on strip bodies.
+pub fn replayed_cost_on(plan: &Plan, backend: &dyn Backend) -> StripCost {
+    replayed_cost_with(plan, backend.params(), &backend.energy(), backend.timing_config())
+}
+
+fn replayed_cost_with(
+    plan: &Plan,
+    params: BackendParams,
+    energy: &EnergyModel,
+    timing_cfg: DramTimingConfig,
+) -> StripCost {
+    let mut ema_sink =
+        EmaSink::with_charge(Dram::new(params.bandwidth, params.turnaround), params.charge);
+    let mut timing_sink = TimingSink::with_charge(plan, timing_cfg, params.charge);
+    let mut pipeline_sink = PipelineSink::with_params(params);
     {
         let sinks: &mut [&mut dyn CostSink] =
             &mut [&mut ema_sink, &mut timing_sink, &mut pipeline_sink];
@@ -538,7 +591,7 @@ pub fn replayed_cost(plan: &Plan, cfg: &AcceleratorConfig, energy: &EnergyModel)
     }
     let ema = ema_sink.finish();
     let timing = timing_sink.finish();
-    let cycles = cycles_from_replay(&ema, &plan.shape, cfg);
+    let cycles = cycles_from_parts_on(plan.shape.macs(), &ema, &params);
     let (i, w, o) = ema.table2();
     StripCost {
         cycles,

@@ -1,0 +1,259 @@
+//! PR-10 acceptance suite: the hardware model behind the [`tas::arch::backend::Backend`]
+//! trait must be a pure refactor for the systolic target and a pure
+//! *pricing* change for the crossbar target.
+//!
+//! Four invariants:
+//!
+//!  1. **Golden pin** — [`SystolicBackend`] threaded through
+//!     [`plan_cost_on`] reproduces the pre-refactor direct path
+//!     ([`plan_cost`]) word-for-word (EMA, cycles, energy, DRAM timing,
+//!     pipeline stalls) across the model zoo at seq {64, 512, 4096}, and
+//!     `Plan::tas_priced` under the systolic pricing reproduces
+//!     `Plan::tas_cached` exactly.
+//!  2. **Program cost** — under the crossbar backend the streamed weight
+//!     EMA is zero and the one-time NVM program cost depends only on the
+//!     weight matrix, never on the tile schedule.
+//!  3. **Degeneration by pricing** — every cover the crossbar pricing
+//!     chooses is activation-stationary: zero weight-stationary tiles,
+//!     with no crossbar-specific branch anywhere in the planner.
+//!  4. **Oracle** — the closed-form strip coster equals the replay oracle
+//!     on crossbar-priced plans (charge vector `[1, 0, 1]`), the same
+//!     word-for-word bar the systolic path already clears in
+//!     `strip_closed_form.rs`.
+
+use std::collections::HashSet;
+
+use tas::arch::backend::{
+    AnyBackend, Backend, BackendKind, CrossbarBackend, CrossbarConfig, SystolicBackend,
+};
+use tas::config::{AcceleratorConfig, EnergyConfig};
+use tas::dataflow::{Plan, PlanBody, Residency, StripKind};
+use tas::energy::EnergyModel;
+use tas::gemm::{GemmShape, Tiling};
+use tas::models::zoo;
+use tas::sim::{plan_cost, plan_cost_on, replayed_cost_on, StripCost};
+
+/// Every sink, word for word (EMA equality forces identical word counts,
+/// so the float energy fields compare exactly too).
+fn assert_cost_eq(ctx: &str, via_trait: &StripCost, direct: &StripCost) {
+    assert_eq!(via_trait.ema, direct.ema, "{ctx}: EMA words/switches diverge");
+    assert_eq!(via_trait.cycles, direct.cycles, "{ctx}: cycle estimate diverges");
+    assert_eq!(
+        via_trait.timing, direct.timing,
+        "{ctx}: DRAM words/transactions/direction switches diverge"
+    );
+    assert_eq!(
+        via_trait.pipeline, direct.pipeline,
+        "{ctx}: pipeline stall attribution diverges"
+    );
+    assert_eq!(via_trait.energy, direct.energy, "{ctx}: energy diverges");
+}
+
+/// Tile steps a replay of `plan` walks — the grid product.  Fixed bodies
+/// are priced by replay even on the closed-form path, so the zoo grid
+/// caps them exactly like `strip_closed_form.rs` does.
+fn replay_steps(plan: &Plan) -> u64 {
+    let (s, t) = (&plan.shape, &plan.tiling);
+    s.m.div_ceil(t.tm) * s.n.div_ceil(t.tn) * s.k.div_ceil(t.tk)
+}
+
+fn streamed(shape: &GemmShape, tiling: &Tiling, pricing: &tas::arch::backend::PlanPricing) -> Plan {
+    Plan::tas_priced(
+        shape,
+        tiling,
+        Residency::None,
+        Residency::None,
+        Residency::None,
+        pricing,
+    )
+}
+
+/// Invariant 1: the systolic stack through the trait is byte-identical to
+/// the pre-refactor direct path, and the systolic pricing is the cached
+/// TAS rule.
+#[test]
+fn systolic_through_trait_reproduces_the_pre_refactor_costs() {
+    let cfg = AcceleratorConfig::default();
+    let ecfg = EnergyConfig::default();
+    let direct_energy = EnergyModel::new(ecfg);
+    let via_trait = SystolicBackend::new(cfg, ecfg);
+    let tiling = Tiling::square(16);
+    let pricing = BackendKind::Systolic.pricing();
+    let step_cap: u64 = 1_000_000;
+
+    let mut seen: HashSet<GemmShape> = HashSet::new();
+    let (mut compared, mut skipped) = (0u64, 0u64);
+    for model in zoo::all_models() {
+        for seq in [64u64, 512, 4096] {
+            for g in model.linear_gemms(seq) {
+                if !seen.insert(g.shape) {
+                    continue;
+                }
+                let cached = Plan::tas_cached(
+                    &g.shape,
+                    &tiling,
+                    Residency::None,
+                    Residency::None,
+                    Residency::None,
+                );
+                let priced = streamed(&g.shape, &tiling, &pricing);
+                assert_eq!(
+                    priced, cached,
+                    "{} seq {seq} {}: systolic pricing must reproduce the cached TAS plan",
+                    model.name, g.name
+                );
+                // Fixed bodies replay on both paths; keep tier-1 bounded.
+                if matches!(cached.body, PlanBody::Fixed(_)) && replay_steps(&cached) > step_cap
+                {
+                    skipped += 1;
+                    continue;
+                }
+                let ctx = format!("{} seq {seq} {} {:?}", model.name, g.name, g.shape);
+                assert_cost_eq(
+                    &ctx,
+                    &plan_cost_on(&cached, &via_trait),
+                    &plan_cost(&cached, &cfg, &direct_energy),
+                );
+                compared += 1;
+            }
+        }
+    }
+    assert!(
+        compared >= 30,
+        "golden pin must cover the zoo ({compared} compared, {skipped} capped)"
+    );
+}
+
+/// Invariant 2: the crossbar weight EMA is the one-time program stream —
+/// zero streamed words per pass, and a program cost that only the weight
+/// matrix (never the tile schedule) determines.
+#[test]
+fn crossbar_weight_ema_is_the_program_cost_regardless_of_tile_order() {
+    let xbar = CrossbarConfig::default();
+    let backend = CrossbarBackend::new(xbar, EnergyConfig::default());
+    let pricing = BackendKind::Crossbar.pricing();
+    let shapes = [
+        GemmShape::new(384, 768, 768),
+        GemmShape::new(115, 768, 3072),
+        GemmShape::new(4096, 1024, 1024),
+        GemmShape::new(33, 95, 257),
+    ];
+    let tilings = [
+        Tiling::square(8),
+        Tiling::square(16),
+        Tiling::square(32),
+        Tiling::new(16, 64, 8),
+        Tiling::new(64, 8, 32),
+    ];
+    for shape in &shapes {
+        let mut programs: HashSet<u64> = HashSet::new();
+        for tiling in &tilings {
+            let plan = streamed(shape, tiling, &pricing);
+            let cost = plan_cost_on(&plan, &backend);
+            let (_, w, _) = cost.ema.table2();
+            assert_eq!(
+                w, 0,
+                "{shape:?} tile {},{},{}: crossbar must stream zero weight words",
+                tiling.tm, tiling.tn, tiling.tk
+            );
+            programs.insert(backend.program_words(shape.weight_words()));
+        }
+        assert_eq!(
+            programs.len(),
+            1,
+            "{shape:?}: program cost must not depend on the tile schedule"
+        );
+        let program = *programs.iter().next().unwrap();
+        assert_eq!(
+            program,
+            shape.weight_words() * xbar.program_words_per_word,
+            "{shape:?}: program words are the weight matrix, once"
+        );
+        let pj = backend.program_pj(shape.weight_words());
+        assert_eq!(pj, program as f64 * xbar.program_pj_per_word);
+    }
+}
+
+/// Invariant 3: crossbar pricing flips every cover to activation-
+/// stationary — the sign rule reads the operand prices, so no plan ever
+/// pins a weight that is already resident in NVM.
+#[test]
+fn crossbar_pricing_degenerates_every_cover_to_activation_stationary() {
+    let pricing = BackendKind::Crossbar.pricing();
+    let tiling = Tiling::square(16);
+    let mut covers = 0u64;
+    for model in zoo::all_models() {
+        for seq in [64u64, 512, 4096] {
+            for g in model.linear_gemms(seq) {
+                let plan = streamed(&g.shape, &tiling, &pricing);
+                let strips = match &plan.body {
+                    PlanBody::Strips(s) => s,
+                    PlanBody::Fixed(s) => panic!(
+                        "{} seq {seq} {}: crossbar pricing must never collapse to a \
+                         fixed {s:?} cover (psums would spill through DRAM)",
+                        model.name, g.name
+                    ),
+                };
+                for strip in strips {
+                    assert_eq!(
+                        strip.kind,
+                        StripKind::InputStationary,
+                        "{} seq {seq} {}: weight-stationary strip under crossbar pricing",
+                        model.name,
+                        g.name
+                    );
+                }
+                let (is, ws, other) = plan.tile_mix();
+                assert_eq!((ws, other), (0, 0), "{} {}: non-IS tiles", model.name, g.name);
+                covers += is;
+            }
+        }
+    }
+    assert!(covers > 0);
+}
+
+/// Invariant 4: closed-form == replay oracle under both backends built
+/// through [`AnyBackend`] — the `[1, 0, 1]` charge vector flows through
+/// the strip walker and the replay sinks identically.
+#[test]
+fn closed_form_equals_the_replay_oracle_on_both_backends() {
+    let shapes = [
+        GemmShape::new(384, 768, 768),
+        GemmShape::new(115, 768, 3072),
+        GemmShape::new(257, 1024, 64),
+        GemmShape::new(64, 64, 640),
+        GemmShape::new(33, 95, 257),
+    ];
+    let tilings = [Tiling::square(16), Tiling::new(8, 32, 16)];
+    for kind in BackendKind::ALL {
+        let backend = AnyBackend::build(
+            kind,
+            AcceleratorConfig::default(),
+            EnergyConfig::default(),
+            CrossbarConfig::default(),
+        );
+        let pricing = kind.pricing();
+        for shape in &shapes {
+            for tiling in &tilings {
+                let plan = streamed(shape, tiling, &pricing);
+                if matches!(plan.body, PlanBody::Fixed(_)) {
+                    // Fixed bodies are priced by replay on both paths —
+                    // nothing to compare.
+                    continue;
+                }
+                let ctx = format!(
+                    "{} {shape:?} tile {},{},{}",
+                    kind.name(),
+                    tiling.tm,
+                    tiling.tn,
+                    tiling.tk
+                );
+                assert_cost_eq(
+                    &ctx,
+                    &plan_cost_on(&plan, &backend),
+                    &replayed_cost_on(&plan, &backend),
+                );
+            }
+        }
+    }
+}

@@ -31,6 +31,7 @@ fn ctx<'a>(
         devices,
         cfg,
         icx,
+        backend: tas::arch::backend::BackendKind::Systolic,
     }
 }
 
